@@ -1,0 +1,85 @@
+//! §Perf probe (not a shipped example; used to drive the optimization log)
+use std::time::Instant;
+use overlay_jit::prelude::*;
+use overlay_jit::bench_kernels::CHEBYSHEV;
+use overlay_jit::netlist::build_netlist;
+use overlay_jit::overlay::RoutingGraph;
+use overlay_jit::place::place;
+use overlay_jit::util::XorShiftRng;
+
+fn main() {
+    let spec = OverlaySpec::zynq_default();
+    let rrg = RoutingGraph::build(&spec);
+    let jit = JitCompiler::new(spec.clone());
+    let k = jit.compile(CHEBYSHEV).unwrap();
+    let nl = build_netlist(&k.fg);
+    // placer timing + move count
+    let mut times = vec![];
+    for seed in 1..=5 {
+        let t0 = Instant::now();
+        let p = place(&nl, &spec, &rrg, seed).unwrap();
+        times.push((t0.elapsed().as_secs_f64()*1e3, p.moves_evaluated, p.cost));
+    }
+    for (ms, moves, cost) in &times {
+        println!("place: {ms:.1} ms, {moves} moves, cost {cost:.1}  ({:.0} ns/move)", ms*1e6/ *moves as f64);
+    }
+    // inner_num sweep: time vs quality vs routability
+    use overlay_jit::place::{place_with, PlacerOptions};
+    use overlay_jit::route::{bind_nets, route, RouterOptions};
+    for inner in [1.0, 0.5, 0.25, 0.1] {
+        let mut costs = vec![]; let mut ms = vec![]; let mut iters = vec![];
+        for seed in 1..=5 {
+            let t0 = Instant::now();
+            let p = place_with(&nl, &spec, &rrg, seed, &PlacerOptions { inner_num: inner }).unwrap();
+            ms.push(t0.elapsed().as_secs_f64()*1e3);
+            costs.push(p.cost);
+            let bound = bind_nets(&k.fg, &nl, &p, &rrg).unwrap();
+            let r = route(&rrg, &bound.route_nets, &RouterOptions::default()).unwrap();
+            iters.push(r.iterations);
+        }
+        println!("inner {inner}: place {:.1} ms avg, cost avg {:.1}, route iters {:?}",
+            ms.iter().sum::<f64>()/5.0, costs.iter().sum::<f64>()/5.0, iters);
+    }
+    // PJRT: pallas artifact vs scan artifact
+    let rt = overlay_jit::runtime::PjrtRuntime::new("artifacts").unwrap();
+    let mut rng = XorShiftRng::new(1);
+    let streams: Vec<Vec<i32>> = (0..16).map(|_| (0..1024).map(|_| rng.gen_i64(-40,40) as i32).collect()).collect();
+    for stem in ["overlay_exec_i32", "overlay_scan_i32"] {
+        let exe = rt.load(stem).unwrap();
+        let _ = exe; // warm compile
+        // time through execute_overlay is fixed to overlay_exec; do a manual micro-timing of raw executes
+    }
+    // raw execute comparison
+    use xla::Literal;
+    let geom = rt.geometry;
+    let pad = |v: &[i32]| { let mut o = vec![0i32; geom.max_fus]; o[..v.len()].copy_from_slice(v); o };
+    let ops = Literal::vec1(&pad(&k.schedule.ops));
+    let sa = Literal::vec1(&pad(&k.schedule.src_a));
+    let sb = Literal::vec1(&pad(&k.schedule.src_b));
+    let sc = Literal::vec1(&pad(&k.schedule.src_c));
+    let slots = geom.num_slots();
+    let mut table = vec![0i32; geom.batch*slots];
+    for row in 0..geom.batch { for (p,s) in streams.iter().enumerate() { table[row*slots+p]=s[row]; } for &(c,v) in &k.schedule.imm_pool { table[row*slots+c]=v; } }
+    for stem in ["overlay_exec_i32", "overlay_scan_i32"] {
+        let exe = rt.load(stem).unwrap();
+        let tl = Literal::vec1(&table[..]).reshape(&[geom.batch as i64, slots as i64]).unwrap();
+        let _ = exe.execute::<Literal>(&[ops.clone(), sa.clone(), sb.clone(), sc.clone(), tl.clone()]).unwrap(); // warm
+        let mut ts = vec![];
+        for _ in 0..7 {
+            let t0 = Instant::now();
+            let r = exe.execute::<Literal>(&[ops.clone(), sa.clone(), sb.clone(), sc.clone(), tl.clone()]).unwrap();
+            let _l = r[0][0].to_literal_sync().unwrap();
+            ts.push(t0.elapsed().as_secs_f64()*1e3);
+        }
+        ts.sort_by(|a,b| a.partial_cmp(b).unwrap());
+        println!("{stem}: median {:.2} ms per 1024-row batch", ts[3]);
+    }
+    // host staging cost
+    let t0 = Instant::now();
+    for _ in 0..10 {
+        table.iter_mut().for_each(|v| *v = 0);
+        for row in 0..geom.batch { for (p,s) in streams.iter().enumerate() { table[row*slots+p]=s[row]; } for &(c,v) in &k.schedule.imm_pool { table[row*slots+c]=v; } }
+        let _tl = Literal::vec1(&table[..]).reshape(&[geom.batch as i64, slots as i64]).unwrap();
+    }
+    println!("host staging: {:.2} ms per batch", t0.elapsed().as_secs_f64()*1e3/10.0);
+}

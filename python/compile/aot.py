@@ -1,0 +1,98 @@
+"""AOT-lower the L2 models to HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits (per dtype in {i32, f32}):
+  overlay_exec_<dtype>.hlo.txt   — the Pallas-kernel emulator
+  overlay_scan_<dtype>.hlo.txt   — the pure-XLA scan baseline
+  chebyshev_<dtype>.hlo.txt      — direct example-kernel datapath
+plus geometry.json describing the static shapes the Rust side must
+feed (NUM_INPUTS, MAX_FUS, NUM_SLOTS, BATCH, opcode table).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import geometry as g
+
+DTYPES = {"i32": jnp.int32, "f32": jnp.float32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_overlay(fn, dtype):
+    cfg = jax.ShapeDtypeStruct((g.MAX_FUS,), jnp.int32)
+    tbl = jax.ShapeDtypeStruct((g.BATCH, g.NUM_SLOTS), dtype)
+    wrapped = lambda ops, sa, sb, sc, t: (fn(ops, sa, sb, sc, t),)
+    return jax.jit(wrapped).lower(cfg, cfg, cfg, cfg, tbl)
+
+
+def lower_chebyshev(dtype):
+    x = jax.ShapeDtypeStruct((g.BATCH,), dtype)
+    wrapped = lambda v: (model.chebyshev_model(v),)
+    return jax.jit(wrapped).lower(x)
+
+
+def emit(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-file target (Makefile stamp)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for name, dtype in DTYPES.items():
+        emit(os.path.join(args.out_dir, f"overlay_exec_{name}.hlo.txt"),
+             to_hlo_text(lower_overlay(model.overlay_model, dtype)))
+        emit(os.path.join(args.out_dir, f"overlay_scan_{name}.hlo.txt"),
+             to_hlo_text(lower_overlay(model.overlay_model_scan, dtype)))
+        emit(os.path.join(args.out_dir, f"chebyshev_{name}.hlo.txt"),
+             to_hlo_text(lower_chebyshev(dtype)))
+
+    geom = {
+        "num_inputs": g.NUM_INPUTS,
+        "max_fus": g.MAX_FUS,
+        "imm_base": g.IMM_BASE,
+        "out_base": g.OUT_BASE,
+        "num_slots": g.NUM_SLOTS,
+        "batch": g.BATCH,
+        "tile": g.TILE,
+        "opcodes": {v: k for k, v in g.OP_NAMES.items()},
+    }
+    gpath = os.path.join(args.out_dir, "geometry.json")
+    with open(gpath, "w") as f:
+        json.dump(geom, f, indent=2)
+    print(f"wrote geometry   {gpath}")
+
+    if args.out:  # Makefile freshness stamp
+        with open(args.out, "w") as f:
+            f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: vectorized overlay FU-array execution.
+
+One Pallas program instance processes a TILE-row block of the value
+table entirely in VMEM: it walks the FU slot schedule (a fori_loop —
+the levelized schedule the Rust PAR flow emits), gathers each slot's
+operands from the table block, evaluates the DSP-capability opcode,
+and writes the result into the slot's output column. The batch axis is
+the Pallas grid, so on real hardware each block is one HBM→VMEM round
+trip (see DESIGN.md §Hardware-Adaptation); here we run interpret=True.
+
+The opcode select compiles to a chain of `select` ops over the full
+tile — branch-free, exactly how the physical FU's opmode multiplexers
+behave.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import geometry as g
+from .ref import select_op
+
+
+def _overlay_exec_kernel(ops_ref, src_a_ref, src_b_ref, src_c_ref,
+                         table_ref, out_ref):
+    """Pallas body: execute MAX_FUS slots over one [TILE, NUM_SLOTS] block."""
+    tbl = table_ref[...]
+
+    def body(t, tbl):
+        a = jax.lax.dynamic_index_in_dim(tbl, src_a_ref[t], axis=1,
+                                         keepdims=False)
+        b = jax.lax.dynamic_index_in_dim(tbl, src_b_ref[t], axis=1,
+                                         keepdims=False)
+        c = jax.lax.dynamic_index_in_dim(tbl, src_c_ref[t], axis=1,
+                                         keepdims=False)
+        res = select_op(ops_ref[t], a, b, c)
+        return jax.lax.dynamic_update_slice(
+            tbl, res[:, None], (0, g.OUT_BASE + t))
+
+    tbl = jax.lax.fori_loop(0, g.MAX_FUS, body, tbl)
+    out_ref[...] = tbl[:, g.OUT_BASE:]
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def overlay_exec(ops, src_a, src_b, src_c, table, *, batch=g.BATCH):
+    """Execute the overlay FU array over a batch of work-items.
+
+    Args:
+      ops, src_a, src_b, src_c: int32[MAX_FUS] slot schedule.
+      table: [batch, NUM_SLOTS] initial value table.
+      batch: static batch size (multiple of TILE).
+    Returns:
+      [batch, MAX_FUS] FU outputs.
+    """
+    assert batch % g.TILE == 0, "batch must be a multiple of TILE"
+    grid = (batch // g.TILE,)
+    return pl.pallas_call(
+        _overlay_exec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((g.MAX_FUS,), lambda i: (0,)),
+            pl.BlockSpec((g.MAX_FUS,), lambda i: (0,)),
+            pl.BlockSpec((g.MAX_FUS,), lambda i: (0,)),
+            pl.BlockSpec((g.MAX_FUS,), lambda i: (0,)),
+            pl.BlockSpec((g.TILE, g.NUM_SLOTS), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((g.TILE, g.MAX_FUS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((batch, g.MAX_FUS), table.dtype),
+        interpret=True,
+    )(ops, src_a, src_b, src_c, table)
+
+
+def _chebyshev_kernel(x_ref, o_ref):
+    """Direct (HLS-style) Chebyshev T5 datapath — the fixed-function
+    baseline an Altera-OpenCL-like flow would synthesize."""
+    x = x_ref[...]
+    o_ref[...] = x * (x * (16 * x * x - 20) * x + 5)
+
+
+@functools.partial(jax.jit, static_argnames=("batch",))
+def chebyshev_direct(x, *, batch=g.BATCH):
+    """Direct Chebyshev evaluation (baseline execution path)."""
+    grid = (batch // g.TILE,)
+    return pl.pallas_call(
+        _chebyshev_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((g.TILE,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((g.TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), x.dtype),
+        interpret=True,
+    )(x)

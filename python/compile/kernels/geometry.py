@@ -1,0 +1,43 @@
+"""Static geometry of the AOT-compiled overlay emulator.
+
+The emulator models the value flow of a spatially-configured overlay
+(island-style FU array, II=1): a *value table* holds, per work-item,
+every 16/32-bit value that ever crosses an overlay channel — kernel
+inputs, per-FU immediates, and FU outputs. Each FU slot reads up to
+three operands from the table and writes one result. The Rust
+coordinator levelizes the placed & routed DFG into this slot schedule.
+
+Geometry is fixed at AOT time (one compiled executable per geometry);
+the *configuration* (opcodes, operand routing, immediates, table init)
+are runtime inputs. MAX_FUS=128 covers an 8x8 overlay with 2 DSP
+blocks per FU (2 op slots per FU); smaller overlays NOP-pad.
+"""
+
+NUM_INPUTS = 32          # kernel input ports (columns 0..31) — one per
+                         # possible perimeter input pad of an 8x8 overlay
+MAX_FUS = 128            # FU op slots (sequential schedule positions)
+IMM_BASE = NUM_INPUTS    # per-slot immediate columns [32, 160)
+OUT_BASE = NUM_INPUTS + MAX_FUS  # FU output columns [160, 288)
+NUM_SLOTS = NUM_INPUTS + 2 * MAX_FUS  # value-table width (288)
+
+BATCH = 1024             # work-items per dispatch
+TILE = 256               # Pallas batch tile (rows per VMEM block)
+
+# FU opcodes (DSP48-style capabilities; 4/5 are the fused mul-add /
+# mul-sub the FU-aware DFG transform targets).
+OP_NOP = 0     # pass-through: out = a
+OP_ADD = 1     # a + b
+OP_SUB = 2     # a - b
+OP_MUL = 3     # a * b
+OP_MULADD = 4  # a * b + c
+OP_MULSUB = 5  # a * b - c
+OP_RSUB = 6    # b - a
+OP_MAX = 7     # max(a, b)
+OP_MIN = 8     # min(a, b)
+NUM_OPS = 9
+
+OP_NAMES = {
+    OP_NOP: "nop", OP_ADD: "add", OP_SUB: "sub", OP_MUL: "mul",
+    OP_MULADD: "muladd", OP_MULSUB: "mulsub", OP_RSUB: "rsub",
+    OP_MAX: "max", OP_MIN: "min",
+}

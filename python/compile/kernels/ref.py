@@ -1,0 +1,77 @@
+"""Pure-jnp / pure-python correctness oracles for the overlay emulator.
+
+`overlay_exec_ref` is the semantic ground truth the Pallas kernel and
+the Rust cycle simulator are both tested against. It interprets an FU
+slot schedule with a plain python loop over jnp ops — no scan, no
+pallas, no dynamic-slice tricks — so it is trivially auditable.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import geometry as g
+
+
+def select_op(op, a, b, c):
+    """Evaluate one FU opcode over (a, b, c) operand arrays (jnp)."""
+    return jnp.where(
+        op == g.OP_ADD, a + b,
+        jnp.where(op == g.OP_SUB, a - b,
+        jnp.where(op == g.OP_MUL, a * b,
+        jnp.where(op == g.OP_MULADD, a * b + c,
+        jnp.where(op == g.OP_MULSUB, a * b - c,
+        jnp.where(op == g.OP_RSUB, b - a,
+        jnp.where(op == g.OP_MAX, jnp.maximum(a, b),
+        jnp.where(op == g.OP_MIN, jnp.minimum(a, b),
+                  a))))))))
+
+
+def select_op_py(op, a, b, c):
+    """Scalar python oracle for a single FU opcode (numpy ints/floats)."""
+    if op == g.OP_ADD:
+        return a + b
+    if op == g.OP_SUB:
+        return a - b
+    if op == g.OP_MUL:
+        return a * b
+    if op == g.OP_MULADD:
+        return a * b + c
+    if op == g.OP_MULSUB:
+        return a * b - c
+    if op == g.OP_RSUB:
+        return b - a
+    if op == g.OP_MAX:
+        return max(a, b)
+    if op == g.OP_MIN:
+        return min(a, b)
+    return a  # NOP = pass-through of a
+
+
+def overlay_exec_ref(ops, src_a, src_b, src_c, table):
+    """Reference overlay execution.
+
+    Args:
+      ops, src_a, src_b, src_c: int32[MAX_FUS] slot schedule.
+      table: [batch, NUM_SLOTS] initial value table (inputs + immediates
+        filled by the host; output columns arbitrary).
+    Returns:
+      [batch, MAX_FUS] FU outputs (the OUT_BASE block after execution).
+    """
+    ops = np.asarray(ops)
+    src_a = np.asarray(src_a)
+    src_b = np.asarray(src_b)
+    src_c = np.asarray(src_c)
+    tbl = jnp.asarray(table)
+    for t in range(g.MAX_FUS):
+        a = tbl[:, src_a[t]]
+        b = tbl[:, src_b[t]]
+        c = tbl[:, src_c[t]]
+        res = select_op(int(ops[t]), a, b, c)
+        tbl = tbl.at[:, g.OUT_BASE + t].set(res)
+    return tbl[:, g.OUT_BASE:]
+
+
+def chebyshev_ref(x):
+    """The paper's example kernel: B = x*(x*(16*x*x-20)*x+5)  (= T5(x))."""
+    x = jnp.asarray(x)
+    return x * (x * (16 * x * x - 20) * x + 5)

@@ -1,0 +1,56 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the Rust runtime.
+
+Three execution paths are exported:
+
+* `overlay_model`  — the overlay datapath emulator (calls the L1 Pallas
+  kernel `kernels.fu_alu.overlay_exec`). Configuration is a runtime
+  input, so ONE compiled executable serves every JIT-compiled kernel
+  and every replication factor — mirroring how the physical overlay
+  decouples (fast) configuration from (slow) fabric compilation.
+* `overlay_model_scan` — the same semantics as a plain `lax.scan` over
+  the slot schedule, no Pallas. Kept as the L2 fusion baseline for the
+  perf comparison in EXPERIMENTS.md §Perf.
+* `chebyshev_model` — direct fixed-function datapath for the paper's
+  example kernel (the "HLS-style" baseline execution path).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import geometry as g
+from .kernels import fu_alu
+from .kernels.ref import select_op
+
+
+def overlay_model(ops, src_a, src_b, src_c, table):
+    """Emulate the configured overlay over a batch of work-items.
+
+    Shapes: ops/src_* int32[MAX_FUS]; table [BATCH, NUM_SLOTS].
+    Returns [BATCH, MAX_FUS] FU outputs (the host slices the routed
+    output columns).
+    """
+    return fu_alu.overlay_exec(ops, src_a, src_b, src_c, table,
+                               batch=table.shape[0])
+
+
+def overlay_model_scan(ops, src_a, src_b, src_c, table):
+    """Pure-XLA scan formulation of the emulator (no Pallas)."""
+
+    def step(tbl, slot):
+        op, sa, sb, sc, t = slot
+        a = jax.lax.dynamic_index_in_dim(tbl, sa, axis=1, keepdims=False)
+        b = jax.lax.dynamic_index_in_dim(tbl, sb, axis=1, keepdims=False)
+        c = jax.lax.dynamic_index_in_dim(tbl, sc, axis=1, keepdims=False)
+        res = select_op(op, a, b, c)
+        tbl = jax.lax.dynamic_update_slice(tbl, res[:, None],
+                                           (0, g.OUT_BASE + t))
+        return tbl, ()
+
+    idx = jnp.arange(g.MAX_FUS, dtype=jnp.int32)
+    tbl, _ = jax.lax.scan(step, table, (ops, src_a, src_b, src_c, idx))
+    return tbl[:, g.OUT_BASE:]
+
+
+def chebyshev_model(x):
+    """Direct Chebyshev-T5 datapath over a work-item batch."""
+    return fu_alu.chebyshev_direct(x, batch=x.shape[0])

@@ -1,0 +1,87 @@
+"""Test helpers: a tiny python-side assembler for overlay configurations.
+
+Mirrors (independently) what the Rust `configgen` module emits, so the
+Pallas kernel and the Rust cycle simulator are tested against the same
+program encoding.
+"""
+
+import numpy as np
+
+from compile.kernels import geometry as g
+
+
+class ProgramBuilder:
+    """Assemble an FU slot schedule + value-table template."""
+
+    def __init__(self, dtype=np.int32):
+        self.dtype = dtype
+        self.ops = np.zeros(g.MAX_FUS, dtype=np.int32)
+        self.src_a = np.zeros(g.MAX_FUS, dtype=np.int32)
+        self.src_b = np.zeros(g.MAX_FUS, dtype=np.int32)
+        self.src_c = np.zeros(g.MAX_FUS, dtype=np.int32)
+        self.imms = np.zeros(g.MAX_FUS, dtype=dtype)
+        self.n = 0
+        self.n_const = 0
+
+    def const(self, value):
+        """Allocate a constant in the imm pool (from the top, so it never
+        collides with per-slot immediates); returns its column."""
+        idx = g.MAX_FUS - 1 - self.n_const
+        assert idx >= self.n, "imm pool exhausted"
+        self.n_const += 1
+        self.imms[idx] = value
+        return g.IMM_BASE + idx
+
+    def imm_col(self, slot):
+        return g.IMM_BASE + slot
+
+    def out_col(self, slot):
+        return g.OUT_BASE + slot
+
+    def in_col(self, i):
+        assert 0 <= i < g.NUM_INPUTS
+        return i
+
+    def slot(self, op, a, b=0, c=0, imm=0):
+        """Append one FU op slot; returns the slot's output column."""
+        t = self.n
+        assert t < g.MAX_FUS, "out of FU slots"
+        self.ops[t] = op
+        self.src_a[t] = a
+        self.src_b[t] = b
+        self.src_c[t] = c
+        self.imms[t] = imm
+        self.n += 1
+        return self.out_col(t)
+
+    def table(self, inputs):
+        """Build the initial value table for a batch of work-items.
+
+        inputs: [batch, k] array (k <= NUM_INPUTS) of kernel inputs.
+        """
+        inputs = np.asarray(inputs, dtype=self.dtype)
+        batch = inputs.shape[0]
+        tbl = np.zeros((batch, g.NUM_SLOTS), dtype=self.dtype)
+        tbl[:, : inputs.shape[1]] = inputs
+        tbl[:, g.IMM_BASE : g.IMM_BASE + g.MAX_FUS] = self.imms[None, :]
+        return tbl
+
+    def config(self):
+        return self.ops, self.src_a, self.src_b, self.src_c
+
+
+def chebyshev_program(dtype=np.int32):
+    """Hand-assembled paper example kernel: x*(x*(16*x*x-20)*x+5).
+
+    Matches the 5-FU-aware DFG of Fig 3(b): mul16 -> mulsub20 ->
+    mul -> muladd5 -> mul.
+    """
+    p = ProgramBuilder(dtype)
+    x = p.in_col(0)
+    c16, c20, c5 = p.const(16), p.const(20), p.const(5)
+    t4 = p.slot(g.OP_MUL, x, x)                    # x*x
+    t5 = p.slot(g.OP_MULSUB, t4, c16, c20)         # 16*x*x - 20
+    t3 = p.slot(g.OP_MUL, t5, x)                   # (...)*x
+    t6 = p.slot(g.OP_MULADD, t3, x, c5)            # (...)*x + 5
+    out = p.slot(g.OP_MUL, t6, x)                  # x*(...)
+    return p, out

@@ -1,0 +1,66 @@
+"""L2 model tests: scan formulation vs Pallas emulator vs oracle,
+plus AOT lowering smoke checks (HLO text round-trip shape)."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import model, aot
+from compile.kernels import geometry as g
+from .helpers import ProgramBuilder, chebyshev_program
+
+RNG = np.random.default_rng(11)
+
+
+def _cfg_and_table(p, inputs):
+    tbl = jnp.asarray(p.table(inputs))
+    ops, sa, sb, sc = (jnp.asarray(a) for a in p.config())
+    return ops, sa, sb, sc, tbl
+
+
+class TestScanModel:
+    def test_scan_matches_pallas_chebyshev(self):
+        p, _ = chebyshev_program()
+        x = RNG.integers(-6, 6, size=(g.BATCH, 1)).astype(np.int32)
+        args = _cfg_and_table(p, x)
+        np.testing.assert_array_equal(
+            np.asarray(model.overlay_model_scan(*args)),
+            np.asarray(model.overlay_model(*args)))
+
+    def test_scan_matches_pallas_random(self):
+        p = ProgramBuilder()
+        cols = [p.in_col(0), p.in_col(1)]
+        for t in range(40):
+            a = cols[RNG.integers(len(cols))]
+            b = cols[RNG.integers(len(cols))]
+            cols.append(p.slot(int(RNG.integers(0, g.NUM_OPS)), a, b,
+                               p.imm_col(t), imm=int(RNG.integers(-3, 3))))
+        x = RNG.integers(-2, 2, size=(g.BATCH, 2)).astype(np.int32)
+        args = _cfg_and_table(p, x)
+        np.testing.assert_array_equal(
+            np.asarray(model.overlay_model_scan(*args)),
+            np.asarray(model.overlay_model(*args)))
+
+
+class TestAotLowering:
+    """The artifacts the Rust runtime loads must be valid HLO text with
+    the expected parameter/result shapes."""
+
+    @pytest.mark.parametrize("fn", [model.overlay_model,
+                                    model.overlay_model_scan])
+    def test_overlay_hlo_text(self, fn):
+        text = aot.to_hlo_text(aot.lower_overlay(fn, jnp.int32))
+        assert "HloModule" in text
+        assert f"s32[{g.BATCH},{g.NUM_SLOTS}]" in text      # table param
+        assert f"s32[{g.BATCH},{g.MAX_FUS}]" in text        # output block
+
+    def test_chebyshev_hlo_text(self):
+        text = aot.to_hlo_text(aot.lower_chebyshev(jnp.float32))
+        assert "HloModule" in text
+        assert f"f32[{g.BATCH}]" in text
+
+    def test_geometry_constants_consistent(self):
+        assert g.NUM_SLOTS == g.NUM_INPUTS + 2 * g.MAX_FUS
+        assert g.OUT_BASE == g.IMM_BASE + g.MAX_FUS
+        assert g.BATCH % g.TILE == 0

@@ -1,0 +1,58 @@
+//! Bench: regenerate the **§IV configuration-time comparison** —
+//! overlay configuration (1061 B, 42.4 µs) vs full-fabric
+//! reconfiguration (4 MB, 31.6 ms), ≈750×.
+//!
+//! Also measures the real wall time of bitstream serialization +
+//! deserialization (the host-side cost of a context switch) across
+//! overlay sizes.
+//! Run: `cargo bench --bench config_time`
+
+use std::time::Instant;
+
+use overlay_jit::bench_kernels::CHEBYSHEV;
+use overlay_jit::metrics::TextTable;
+use overlay_jit::overlay::{ConfigSizeModel, OverlayBitstream};
+use overlay_jit::prelude::*;
+
+fn main() {
+    println!("# §IV — configuration size & time\n");
+    let mut t = TextTable::new(vec![
+        "overlay", "config bytes", "load time (model)", "serialize+parse (meas)",
+    ]);
+    for spec in OverlaySpec::size_sweep(FuType::Dsp2) {
+        let jit = JitCompiler::new(spec.clone());
+        let k = jit.compile(CHEBYSHEV).expect("compile");
+        let bytes = k.bitstream.byte_size();
+        let model_s = ConfigSizeModel::overlay_config_seconds(&spec, bytes);
+        // measured host serialization round-trip (median of 101)
+        let mut times = Vec::new();
+        for _ in 0..101 {
+            let t0 = Instant::now();
+            let b = k.bitstream.to_bytes();
+            let back = OverlayBitstream::from_bytes(&b).unwrap();
+            times.push(t0.elapsed().as_secs_f64());
+            assert_eq!(back.byte_size(), bytes);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        t.row(vec![
+            spec.name(),
+            bytes.to_string(),
+            format!("{:.1} us", model_s * 1e6),
+            format!("{:.1} us", times[50] * 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let spec = OverlaySpec::zynq_default();
+    let overlay_s = ConfigSizeModel::overlay_config_seconds(&spec, 1061);
+    let fpga_s = ConfigSizeModel::fpga_config_seconds();
+    println!(
+        "full-fabric reconfiguration: {} bytes @ {:.1} ms (PCAP)\n\
+         overlay reconfiguration:     1061 bytes @ {:.1} us\n\
+         ratio: {:.0}x   (paper: ~750x)",
+        ConfigSizeModel::FPGA_BITSTREAM_BYTES,
+        fpga_s * 1e3,
+        overlay_s * 1e6,
+        fpga_s / overlay_s
+    );
+}

@@ -1,0 +1,61 @@
+//! Bench: regenerate **Fig. 5** — resource-aware replication of the
+//! Chebyshev kernel on overlay sizes 2×2 … 8×8.
+//!
+//! Prints the replication factor, the binding resource and full JIT
+//! compile timing per overlay size, plus the same sweep for the other
+//! five benchmarks as an extension table.
+//! Run: `cargo bench --bench fig5_replication`
+
+use std::time::Instant;
+
+use overlay_jit::bench_kernels::{BENCHMARKS, CHEBYSHEV};
+use overlay_jit::metrics::TextTable;
+use overlay_jit::prelude::*;
+
+fn main() {
+    println!("# Fig. 5 — Chebyshev replication across overlay sizes\n");
+    let mut t = TextTable::new(vec![
+        "overlay", "copies", "limit", "FUs used", "pads used", "JIT ms (median of 5)",
+    ]);
+    for spec in OverlaySpec::size_sweep(FuType::Dsp2) {
+        let jit = JitCompiler::new(spec.clone());
+        let mut times = Vec::new();
+        let mut last = None;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            let k = jit.compile(CHEBYSHEV).expect("compile");
+            times.push(t0.elapsed().as_secs_f64() * 1e3);
+            last = Some(k);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let k = last.unwrap();
+        t.row(vec![
+            spec.name(),
+            k.copies().to_string(),
+            k.plan.limit.name().to_string(),
+            format!("{}/{}", k.fg.num_fus(), spec.fu_count()),
+            format!("{}/{}", k.dfg.num_io() * k.copies(), spec.io_pads()),
+            format!("{:.2}", times[2]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("paper Fig. 5: 1 copy on 2x2 ... 16 copies on 8x8 (I/O-limited).\n");
+
+    println!("# Extension — replication of all benchmarks per overlay size\n");
+    let mut t2 = TextTable::new(vec![
+        "benchmark", "2x2", "3x3", "4x4", "5x5", "6x6", "7x7", "8x8", "paper@8x8",
+    ]);
+    for b in &BENCHMARKS {
+        let mut row = vec![b.name.to_string()];
+        for spec in OverlaySpec::size_sweep(FuType::Dsp2) {
+            let jit = JitCompiler::new(spec.clone());
+            row.push(match jit.compile(b.source) {
+                Ok(k) => k.copies().to_string(),
+                Err(_) => "-".into(),
+            });
+        }
+        row.push(format!("{}", b.paper.replication));
+        t2.row(row);
+    }
+    println!("{}", t2.render());
+}

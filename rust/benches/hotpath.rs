@@ -1,0 +1,131 @@
+//! Bench: §Perf hot-path microbenchmarks.
+//!
+//! Times the individual JIT pipeline stages and the execution backends
+//! so the EXPERIMENTS.md §Perf before/after table can be regenerated:
+//!
+//! * full JIT compile per benchmark (median/min of N);
+//! * placement and routing isolated (the PAR hot loops);
+//! * cycle-sim and PJRT dispatch throughput (work-items/s).
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::time::Instant;
+
+use overlay_jit::bench_kernels::{reference_overlay, BENCHMARKS};
+use overlay_jit::metrics::TextTable;
+use overlay_jit::netlist::build_netlist;
+use overlay_jit::overlay::RoutingGraph;
+use overlay_jit::place::place;
+use overlay_jit::prelude::*;
+use overlay_jit::route::{bind_nets, route, RouterOptions};
+use overlay_jit::sim;
+use overlay_jit::util::XorShiftRng;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn main() {
+    let spec = reference_overlay();
+    let jit = JitCompiler::new(spec.clone());
+    let rrg = RoutingGraph::build(&spec);
+
+    println!("# §Perf — JIT pipeline stage times (ms, median of 7)\n");
+    let mut t = TextTable::new(vec![
+        "benchmark", "frontend", "place", "route", "latency+cfg", "total JIT",
+    ]);
+    for b in &BENCHMARKS {
+        let mut frontend = Vec::new();
+        let mut place_ms = Vec::new();
+        let mut route_ms = Vec::new();
+        let mut rest = Vec::new();
+        let mut total = Vec::new();
+        for seed in 0..7u64 {
+            let jit = JitCompiler::with_options(
+                spec.clone(),
+                CompileOptions { seed: seed + 1, ..Default::default() },
+            );
+            let k = jit.compile(b.source).expect("compile");
+            let ms = |n: &str| k.report.get(n).map(|d| d.as_secs_f64() * 1e3).unwrap_or(0.0);
+            frontend.push(k.report.frontend_time().as_secs_f64() * 1e3);
+            place_ms.push(ms("place"));
+            route_ms.push(ms("route"));
+            rest.push(ms("latency") + ms("configgen"));
+            total.push(k.report.total().as_secs_f64() * 1e3);
+        }
+        t.row(vec![
+            b.name.to_string(),
+            format!("{:.2}", median(frontend)),
+            format!("{:.2}", median(place_ms)),
+            format!("{:.2}", median(route_ms)),
+            format!("{:.3}", median(rest)),
+            format!("{:.2}", median(total)),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // isolated PAR on the largest mapped kernel (chebyshev x16)
+    let k = jit.compile(BENCHMARKS[0].source).unwrap();
+    let nl = build_netlist(&k.fg);
+    let mut p_times = Vec::new();
+    let mut r_times = Vec::new();
+    for seed in 1..=9u64 {
+        let t0 = Instant::now();
+        let pl = place(&nl, &spec, &rrg, seed).unwrap();
+        p_times.push(t0.elapsed().as_secs_f64() * 1e3);
+        let bound = bind_nets(&k.fg, &nl, &pl, &rrg).unwrap();
+        let t1 = Instant::now();
+        route(&rrg, &bound.route_nets, &RouterOptions::default()).unwrap();
+        r_times.push(t1.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "isolated PAR (chebyshev x16): place {:.2} ms, route {:.2} ms (median of 9)\n",
+        median(p_times),
+        median(r_times)
+    );
+
+    // execution backends
+    println!("# §Perf — execution backends (chebyshev x16)\n");
+    let items = 64 * 1024;
+    let streams: Vec<Vec<i32>> = {
+        let mut rng = XorShiftRng::new(5);
+        (0..k.schedule.num_inputs)
+            .map(|_| (0..items / 16).map(|_| rng.gen_i64(-40, 40) as i32).collect())
+            .collect()
+    };
+    let n = items / 16;
+    let mut sim_times = Vec::new();
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        sim::execute(&k.schedule, &streams, n).unwrap();
+        sim_times.push(t0.elapsed().as_secs_f64());
+    }
+    let sim_s = median(sim_times);
+    println!(
+        "cycle-sim : {:.1} ms per {} items = {:.2} Mitems/s",
+        sim_s * 1e3,
+        items,
+        items as f64 / sim_s / 1e6
+    );
+    match overlay_jit::runtime::PjrtRuntime::new("artifacts") {
+        Ok(rt) => {
+            // warm up (compile cached once)
+            rt.execute_overlay(&k.schedule, &streams, n).unwrap();
+            let mut times = Vec::new();
+            for _ in 0..5 {
+                let t0 = Instant::now();
+                rt.execute_overlay(&k.schedule, &streams, n).unwrap();
+                times.push(t0.elapsed().as_secs_f64());
+            }
+            let s = median(times);
+            println!(
+                "pjrt      : {:.1} ms per {} items = {:.2} Mitems/s",
+                s * 1e3,
+                items,
+                items as f64 / s / 1e6
+            );
+        }
+        Err(e) => println!("pjrt      : unavailable ({e})"),
+    }
+}

@@ -1,0 +1,90 @@
+//! Bench: regenerate **Table III** — overlay implementations vs direct
+//! FPGA implementations of the six replicated benchmarks.
+//!
+//! Columns mirror the paper: PAR time, Fmax and resources for both
+//! flows, then the resource penalty, Fmax improvement and PAR speedup.
+//! Our overlay row is measured (PAR) + published-constant (Fmax,
+//! slices); the direct row comes from the fine-grained stand-in flow.
+//! Paper values are printed underneath each measured row.
+//!
+//! Run: `cargo bench --bench table3_compare`
+
+use overlay_jit::bench_kernels::{reference_overlay, BENCHMARKS};
+use overlay_jit::fpga::{self, FpgaParOptions};
+use overlay_jit::metrics::{self, TextTable};
+use overlay_jit::prelude::*;
+use overlay_jit::replicate::replicate_dfg;
+
+fn main() {
+    let effort: f64 = std::env::args()
+        .skip(1)
+        .find(|a| a.parse::<f64>().is_ok())
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(0.1);
+    let spec = reference_overlay();
+    let jit = JitCompiler::new(spec.clone());
+    let ovl_slices = metrics::overlay_slices(&spec);
+
+    println!("# Table III — overlay vs direct FPGA (fine effort {effort})\n");
+    let mut t = TextTable::new(vec![
+        "benchmark", "src", "PARs", "Fmax", "DSP", "Slices",
+        "penDSP", "penSlice", "FmaxGain", "speedup",
+    ]);
+    let mut pen_dsp = Vec::new();
+    let mut pen_slice = Vec::new();
+    let mut gains = Vec::new();
+    let mut speedups = Vec::new();
+    for b in &BENCHMARKS {
+        let k = jit.compile(b.source).expect("compile");
+        let overlay_par = k.report.par_time().as_secs_f64();
+
+        let gates = fpga::techmap(&replicate_dfg(&k.dfg, b.paper.replication)).unwrap();
+        let fine = fpga::par(&gates, &FpgaParOptions { effort, ..Default::default() })
+            .unwrap();
+
+        let pd = spec.dsp_count() as f64 / fine.dsps.max(1) as f64;
+        let ps = ovl_slices as f64 / fine.slices.max(1) as f64;
+        let fg = spec.fmax_mhz() / fine.fmax_mhz;
+        let su = fine.par_time.as_secs_f64() / overlay_par;
+        pen_dsp.push(pd);
+        pen_slice.push(ps);
+        gains.push(fg);
+        speedups.push(su);
+
+        t.row(vec![
+            format!("{}({})", b.name, b.paper.replication),
+            "ours".into(),
+            format!("{overlay_par:.3}/{:.1}", fine.par_time.as_secs_f64()),
+            format!("{:.0}/{:.0}", spec.fmax_mhz(), fine.fmax_mhz),
+            format!("{}/{}", spec.dsp_count(), fine.dsps),
+            format!("{}/{}", ovl_slices, fine.slices),
+            format!("{pd:.1}x"),
+            format!("{ps:.0}x"),
+            format!("{fg:.1}x"),
+            format!("{su:.0}x"),
+        ]);
+        t.row(vec![
+            "".into(),
+            "paper".into(),
+            format!("{:.2}/{:.0}", b.paper.overlay_par_s, b.paper.vivado_par_s),
+            format!("300/{:.0}", b.paper.fpga_fmax_mhz),
+            format!("128/{}", b.paper.fpga_dsp),
+            format!("12617/{}", b.paper.fpga_slices),
+            format!("{:.1}x", 128.0 / b.paper.fpga_dsp as f64),
+            format!("{:.0}x", 12617.0 / b.paper.fpga_slices as f64),
+            format!("{:.1}x", 300.0 / b.paper.fpga_fmax_mhz),
+            format!("{:.0}x", b.paper.vivado_par_s / b.paper.overlay_par_s),
+        ]);
+    }
+    println!("{}", t.render());
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    println!(
+        "averages (ours): DSP penalty {:.1}x, slice penalty {:.0}x, Fmax gain\n\
+         {:.1}x, PAR speedup {:.0}x\n\
+         averages (paper): 3.4x DSP, 32x slices, 1.6x Fmax, 1250x PAR",
+        avg(&pen_dsp),
+        avg(&pen_slice),
+        avg(&gains),
+        avg(&speedups)
+    );
+}

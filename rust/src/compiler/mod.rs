@@ -1,0 +1,337 @@
+//! The JIT compilation pipeline driver (paper Fig. 2).
+//!
+//! `source → lex/parse/sema → naive IR → optimized IR → DFG →
+//! FU-aware DFG → resource-aware replication → FU netlist → placement
+//! → routing → latency balancing → configuration generation`.
+//!
+//! [`JitCompiler`] owns the overlay description (what the OpenCL
+//! runtime exposes) and a prebuilt routing-resource graph; each
+//! [`JitCompiler::compile`] run produces a [`CompiledKernel`] holding
+//! every intermediate artifact plus a per-stage timing
+//! [`CompileReport`] — the quantity Fig. 7 plots.
+
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::configgen::{bitstream, slot_schedule, EmuGeometry, SlotSchedule};
+use crate::dfg::{extract_dfg, Dfg};
+use crate::frontend::parse_kernel;
+use crate::fuaware::{cluster, fuse_muladd, FuGraph};
+use crate::ir::{lower_kernel, optimize, PassStats};
+use crate::latency::{balance, LatencyReport};
+use crate::netlist::{build_netlist, FuNetlist};
+use crate::overlay::{OverlayBitstream, OverlaySpec, RoutingGraph};
+use crate::place::{place_with, Placement, PlacerOptions};
+use crate::replicate::{plan, replicate_dfg, BackendLimits, ReplicationPlan};
+use crate::route::{bind_nets, route, RouteResult, RouterOptions};
+use crate::util::Stopwatch;
+
+/// How many kernel copies to map.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Replication {
+    /// Fill the overlay (the paper's resource-aware default).
+    Auto,
+    /// Exactly `n` copies (Fig. 5/6 sweeps).
+    Fixed(usize),
+}
+
+/// Compiler options.
+#[derive(Debug, Clone)]
+pub struct CompileOptions {
+    /// Seed for the stochastic passes (placement).
+    pub seed: u64,
+    /// Placer effort (§Perf: inner_num 0.5 halves PAR time for ~1%
+    /// wirelength on these netlists; routing still converges in one
+    /// PathFinder iteration).
+    pub placer: PlacerOptions,
+    pub replication: Replication,
+    /// Execution-backend limits (AOT emulator geometry), if the kernel
+    /// will run through the PJRT backend.
+    pub backend_limits: Option<BackendLimits>,
+    pub router: RouterOptions,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            seed: 1,
+            placer: PlacerOptions { inner_num: 0.5 },
+            replication: Replication::Auto,
+            backend_limits: Some(BackendLimits {
+                max_op_slots: EmuGeometry::DEFAULT.max_fus,
+                max_inputs: EmuGeometry::DEFAULT.num_inputs,
+            }),
+            router: RouterOptions::default(),
+        }
+    }
+}
+
+/// Wall-clock timing of each pipeline stage.
+#[derive(Debug, Clone, Default)]
+pub struct CompileReport {
+    pub stages: Vec<(String, Duration)>,
+    pub pass_stats: Option<PassStats>,
+    /// Routing iterations (PathFinder convergence metric).
+    pub route_iterations: usize,
+}
+
+impl CompileReport {
+    pub fn total(&self) -> Duration {
+        self.stages.iter().map(|(_, d)| *d).sum()
+    }
+
+    /// Front-end time: everything before placement (Clang-equivalent).
+    pub fn frontend_time(&self) -> Duration {
+        self.stages
+            .iter()
+            .filter(|(n, _)| !matches!(n.as_str(), "place" | "route" | "latency" | "configgen"))
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    /// PAR time: placement + routing (+ latency + config) — the Fig. 7
+    /// metric compared against Vivado.
+    pub fn par_time(&self) -> Duration {
+        self.stages
+            .iter()
+            .filter(|(n, _)| matches!(n.as_str(), "place" | "route" | "latency" | "configgen"))
+            .map(|(_, d)| *d)
+            .sum()
+    }
+
+    pub fn get(&self, stage: &str) -> Option<Duration> {
+        self.stages.iter().find(|(n, _)| n == stage).map(|(_, d)| *d)
+    }
+}
+
+/// Everything produced by one JIT compilation.
+#[derive(Debug, Clone)]
+pub struct CompiledKernel {
+    pub name: String,
+    /// Kernel parameter list (host argument binding).
+    pub params: Vec<crate::frontend::Param>,
+    /// Single-copy DFG (Table II(a) form).
+    pub dfg: Dfg,
+    /// Single-copy FU-aware graph.
+    pub single: FuGraph,
+    pub plan: ReplicationPlan,
+    /// Replicated + clustered graph actually mapped.
+    pub fg: FuGraph,
+    pub netlist: FuNetlist,
+    pub placement: Placement,
+    pub routes: RouteResult,
+    pub latency: LatencyReport,
+    pub bitstream: OverlayBitstream,
+    pub schedule: SlotSchedule,
+    pub report: CompileReport,
+}
+
+impl CompiledKernel {
+    /// Replicated copies mapped.
+    pub fn copies(&self) -> usize {
+        self.plan.factor
+    }
+
+    /// Arithmetic ops per copy (GOPS model input).
+    pub fn ops_per_copy(&self) -> usize {
+        self.dfg.num_ops()
+    }
+}
+
+/// The JIT compiler bound to one overlay instance.
+#[derive(Debug)]
+pub struct JitCompiler {
+    pub spec: OverlaySpec,
+    pub options: CompileOptions,
+    rrg: RoutingGraph,
+}
+
+impl JitCompiler {
+    pub fn new(spec: OverlaySpec) -> Self {
+        Self::with_options(spec, CompileOptions::default())
+    }
+
+    pub fn with_options(spec: OverlaySpec, options: CompileOptions) -> Self {
+        let rrg = RoutingGraph::build(&spec);
+        JitCompiler { spec, options, rrg }
+    }
+
+    pub fn rrg(&self) -> &RoutingGraph {
+        &self.rrg
+    }
+
+    /// JIT-compile an OpenCL kernel to an overlay configuration.
+    pub fn compile(&self, source: &str) -> Result<CompiledKernel> {
+        let mut sw = Stopwatch::new();
+        let mut report = CompileReport::default();
+        let lap = |sw: &mut Stopwatch, report: &mut CompileReport, name: &str| {
+            let d = sw.lap(name);
+            report.stages.push((name.to_string(), d));
+        };
+
+        // front end
+        let ast = parse_kernel(source).context("front end")?;
+        lap(&mut sw, &mut report, "parse");
+        let naive = lower_kernel(&ast)?;
+        lap(&mut sw, &mut report, "lower");
+        let (ir, stats) = optimize(&naive);
+        report.pass_stats = Some(stats);
+        lap(&mut sw, &mut report, "optimize");
+        let dfg = extract_dfg(&ir).context("DFG extraction")?;
+        lap(&mut sw, &mut report, "dfg");
+
+        // FU-aware transform
+        let dsps = self.spec.fu_type.dsps_per_fu();
+        let fused = fuse_muladd(&dfg)?;
+        let single = cluster(&fused, dsps)?;
+        lap(&mut sw, &mut report, "fuaware");
+
+        // resource-aware replication
+        let mut rep_plan = plan(&single, &self.spec, self.options.backend_limits)
+            .context("replication planning")?;
+        if let Replication::Fixed(n) = self.options.replication {
+            if n > rep_plan.factor {
+                anyhow::bail!(
+                    "requested {} copies but the {} overlay supports at most {} ({})",
+                    n,
+                    self.spec.name(),
+                    rep_plan.factor,
+                    rep_plan.limit.name()
+                );
+            }
+            rep_plan.factor = n;
+        }
+        let replicated = replicate_dfg(&fused, rep_plan.factor);
+        let fg = cluster(&replicated, dsps)?;
+        lap(&mut sw, &mut report, "replicate");
+
+        // netlist
+        let netlist = build_netlist(&fg);
+        lap(&mut sw, &mut report, "netlist");
+
+        // PAR
+        let placement = place_with(
+            &netlist,
+            &self.spec,
+            &self.rrg,
+            self.options.seed,
+            &self.options.placer,
+        )
+        .context("placement")?;
+        lap(&mut sw, &mut report, "place");
+        let bound = bind_nets(&fg, &netlist, &placement, &self.rrg)?;
+        let routes = route(&self.rrg, &bound.route_nets, &self.options.router)
+            .context("routing")?;
+        report.route_iterations = routes.iterations;
+        lap(&mut sw, &mut report, "route");
+
+        // latency balancing
+        let latency = balance(&fg, &self.spec, &self.rrg, &bound, &routes)
+            .context("latency balancing")?;
+        lap(&mut sw, &mut report, "latency");
+
+        // configuration generation
+        let bs = bitstream(&fg, &self.spec, &self.rrg, &placement, &routes, &latency);
+        let schedule = slot_schedule(&fg.dfg, EmuGeometry::DEFAULT)?;
+        lap(&mut sw, &mut report, "configgen");
+
+        Ok(CompiledKernel {
+            params: ast.params.clone(),
+            name: ast.name,
+            dfg,
+            single,
+            plan: rep_plan,
+            fg,
+            netlist,
+            placement,
+            routes,
+            latency,
+            bitstream: bs,
+            schedule,
+            report,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overlay::FuType;
+
+    const CHEB: &str = "__kernel void chebyshev(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    #[test]
+    fn end_to_end_compile_on_8x8_dsp2() {
+        let jit = JitCompiler::new(OverlaySpec::zynq_default());
+        let k = jit.compile(CHEB).unwrap();
+        assert_eq!(k.name, "chebyshev");
+        assert_eq!(k.copies(), 16);
+        assert_eq!(k.fg.num_fus(), 48);
+        assert_eq!(k.schedule.n_slots(), 80);
+        assert_eq!(k.bitstream.byte_size(), 1061);
+        assert!(k.report.total() > Duration::ZERO);
+        assert!(k.report.get("route").is_some());
+    }
+
+    #[test]
+    fn fixed_replication_respected() {
+        let jit = JitCompiler::with_options(
+            OverlaySpec::zynq_default(),
+            CompileOptions { replication: Replication::Fixed(4), ..Default::default() },
+        );
+        let k = jit.compile(CHEB).unwrap();
+        assert_eq!(k.copies(), 4);
+        assert_eq!(k.netlist.num_inputs, 4);
+    }
+
+    #[test]
+    fn oversubscribed_fixed_replication_errors() {
+        let jit = JitCompiler::with_options(
+            OverlaySpec::zynq_default(),
+            CompileOptions { replication: Replication::Fixed(17), ..Default::default() },
+        );
+        assert!(jit.compile(CHEB).is_err());
+    }
+
+    #[test]
+    fn compiles_on_every_fig5_size() {
+        for spec in OverlaySpec::size_sweep(FuType::Dsp2) {
+            let jit = JitCompiler::new(spec.clone());
+            let k = jit
+                .compile(CHEB)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", spec.name()));
+            assert!(k.copies() >= 1);
+            // every FU placed within bounds and latency balanced
+            assert!(k.latency.pipeline_depth > 0);
+        }
+    }
+
+    #[test]
+    fn dsp1_overlay_compiles_12_copies() {
+        let jit = JitCompiler::new(OverlaySpec::new(8, 8, FuType::Dsp1));
+        let k = jit.compile(CHEB).unwrap();
+        assert_eq!(k.copies(), 12);
+        assert_eq!(k.fg.num_fus(), 60);
+    }
+
+    #[test]
+    fn report_partitions_frontend_and_par() {
+        let jit = JitCompiler::new(OverlaySpec::zynq_default());
+        let k = jit.compile(CHEB).unwrap();
+        let total = k.report.total();
+        let split = k.report.frontend_time() + k.report.par_time();
+        assert!((total.as_nanos() as i128 - split.as_nanos() as i128).abs() < 1000);
+    }
+
+    #[test]
+    fn compile_errors_carry_stage_context() {
+        let jit = JitCompiler::new(OverlaySpec::zynq_default());
+        let err = jit.compile("__kernel void bad(__global int *B) { B[0] = x; }");
+        assert!(format!("{:#}", err.unwrap_err()).contains("front end"));
+    }
+}

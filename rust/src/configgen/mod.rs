@@ -1,0 +1,379 @@
+//! Configuration generation (paper §III-E tail: "generate the
+//! configuration data … loaded onto the overlay at runtime using the
+//! OpenCL API").
+//!
+//! Two artifacts come out of a compiled kernel:
+//!
+//! 1. [`OverlayBitstream`] — the physical per-tile configuration
+//!    (opcodes, immediates, delay chains, switch-box words) whose byte
+//!    size and load time reproduce §IV's 1061 B / 42.4 µs.
+//! 2. [`SlotSchedule`] — the *execution* encoding consumed by both the
+//!    Rust cycle simulator and the AOT XLA/PJRT emulator: a levelized
+//!    sequence of FU op slots with value-table column routing, exactly
+//!    the instruction layout `python/compile/kernels/geometry.py`
+//!    freezes at AOT time.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::dfg::{Dfg, NodeKind};
+use crate::fuaware::FuGraph;
+use crate::latency::LatencyReport;
+use crate::overlay::{OverlayBitstream, OverlaySpec, RoutingGraph};
+use crate::place::Placement;
+use crate::route::RouteResult;
+
+/// Static geometry of the AOT-compiled emulator. Must match
+/// `python/compile/kernels/geometry.py` (checked against
+/// `artifacts/geometry.json` at runtime start-up).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EmuGeometry {
+    pub num_inputs: usize,
+    pub max_fus: usize,
+    pub batch: usize,
+}
+
+impl EmuGeometry {
+    pub const DEFAULT: EmuGeometry =
+        EmuGeometry { num_inputs: 32, max_fus: 128, batch: 1024 };
+
+    pub fn imm_base(&self) -> usize {
+        self.num_inputs
+    }
+
+    pub fn out_base(&self) -> usize {
+        self.num_inputs + self.max_fus
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.num_inputs + 2 * self.max_fus
+    }
+}
+
+/// The levelized op-slot program of a (replicated) kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlotSchedule {
+    /// Opcode per used slot (emulator encoding, see `DfgOp::opcode`).
+    pub ops: Vec<i32>,
+    pub src_a: Vec<i32>,
+    pub src_b: Vec<i32>,
+    pub src_c: Vec<i32>,
+    /// Constant-pool columns: (column index, bit value).
+    pub imm_pool: Vec<(usize, i32)>,
+    /// Input stream port → value-table column (identity layout).
+    pub num_inputs: usize,
+    /// Output stream port → value-table column.
+    pub out_col: Vec<usize>,
+    pub geometry: EmuGeometry,
+}
+
+impl SlotSchedule {
+    pub fn n_slots(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+/// Levelize a (replicated) DFG into the emulator slot program.
+pub fn slot_schedule(dfg: &Dfg, geom: EmuGeometry) -> Result<SlotSchedule> {
+    let ops_order: Vec<_> = dfg
+        .topo_order()?
+        .into_iter()
+        .filter(|&id| matches!(dfg.nodes[id].kind, NodeKind::Op { .. }))
+        .collect();
+    if ops_order.len() > geom.max_fus {
+        bail!(
+            "kernel needs {} op slots but the AOT emulator has {}",
+            ops_order.len(),
+            geom.max_fus
+        );
+    }
+    if dfg.num_inputs() > geom.num_inputs {
+        bail!(
+            "kernel needs {} input columns but the AOT emulator has {}",
+            dfg.num_inputs(),
+            geom.num_inputs
+        );
+    }
+
+    let mut slot_of: HashMap<usize, usize> = HashMap::new();
+    for (t, &id) in ops_order.iter().enumerate() {
+        slot_of.insert(id, t);
+    }
+
+    // constant pool, allocated from the top of the imm block, deduped
+    let mut pool: HashMap<i32, usize> = HashMap::new();
+    let mut imm_pool: Vec<(usize, i32)> = Vec::new();
+    let n_slots_used = ops_order.len();
+    let alloc_imm = |bits: i32,
+                         pool: &mut HashMap<i32, usize>,
+                         imm_pool: &mut Vec<(usize, i32)>|
+     -> Result<usize> {
+        if let Some(&col) = pool.get(&bits) {
+            return Ok(col);
+        }
+        let k = pool.len();
+        let idx = geom.max_fus.checked_sub(1 + k).ok_or_else(|| {
+            anyhow::anyhow!("immediate pool exhausted")
+        })?;
+        if idx < n_slots_used {
+            bail!(
+                "op slots ({}) and immediate pool ({}) overflow the {}-slot \
+                 emulator",
+                n_slots_used,
+                k + 1,
+                geom.max_fus
+            );
+        }
+        let col = geom.imm_base() + idx;
+        pool.insert(bits, col);
+        imm_pool.push((col, bits));
+        Ok(col)
+    };
+
+    let mut ops = vec![0i32; n_slots_used];
+    let mut src = [
+        vec![0i32; n_slots_used],
+        vec![0i32; n_slots_used],
+        vec![0i32; n_slots_used],
+    ];
+
+    for (t, &id) in ops_order.iter().enumerate() {
+        let NodeKind::Op { op, imm } = &dfg.nodes[id].kind else { unreachable!() };
+        ops[t] = op.opcode();
+        // default sources: column 0 (harmless for unused ports)
+        let mut cols = [0usize; 3];
+        let mut driven = [false; 3];
+        for e in dfg.preds(id) {
+            let col = match &dfg.nodes[e.src].kind {
+                NodeKind::InVar { port } => *port,
+                NodeKind::Op { .. } => geom.out_base() + slot_of[&e.src],
+                NodeKind::OutVar { .. } => unreachable!(),
+            };
+            cols[e.dst_port as usize] = col;
+            driven[e.dst_port as usize] = true;
+        }
+        for (p, v) in imm.iter().enumerate() {
+            if let Some(value) = v {
+                cols[p] = alloc_imm(value.to_bits_i32(), &mut pool, &mut imm_pool)?;
+                driven[p] = true;
+            }
+        }
+        for p in 0..op.arity() {
+            if !driven[p] {
+                bail!("op N{id} port {p} undriven at schedule time");
+            }
+        }
+        src[0][t] = cols[0] as i32;
+        src[1][t] = cols[1] as i32;
+        src[2][t] = cols[2] as i32;
+    }
+
+    // output port -> column of its driving slot (or the input column
+    // when optimization reduced the output to a passthrough)
+    let mut out_col = vec![0usize; dfg.num_outputs()];
+    for node in &dfg.nodes {
+        if let NodeKind::OutVar { port } = node.kind {
+            let driver = dfg.preds(node.id)[0].src;
+            out_col[port] = match &dfg.nodes[driver].kind {
+                NodeKind::InVar { port: p } => *p,
+                _ => geom.out_base() + slot_of[&driver],
+            };
+        }
+    }
+
+    Ok(SlotSchedule {
+        ops,
+        src_a: src[0].clone(),
+        src_b: src[1].clone(),
+        src_c: src[2].clone(),
+        imm_pool,
+        num_inputs: dfg.num_inputs(),
+        out_col,
+        geometry: geom,
+    })
+}
+
+/// Assemble the physical overlay bitstream of a placed & routed kernel.
+pub fn bitstream(
+    fg: &FuGraph,
+    spec: &OverlaySpec,
+    g: &RoutingGraph,
+    pl: &Placement,
+    routes: &RouteResult,
+    lat: &LatencyReport,
+) -> OverlayBitstream {
+    let mut bs = OverlayBitstream::empty(spec);
+
+    for fu in &fg.fus {
+        let (x, y) = pl.fu_tile[fu.id];
+        let tile = &mut bs.tiles[y * spec.cols + x];
+        tile.fu_mode = fu.ops.len() as u8;
+        for (i, &op) in fu.ops.iter().enumerate().take(2) {
+            if let NodeKind::Op { op, imm } = &fg.dfg.nodes[op].kind {
+                tile.opcodes[i] = op.opcode() as u8;
+                if tile.imm == 0 {
+                    if let Some(v) = imm.iter().flatten().next() {
+                        tile.imm = v.to_bits_i32();
+                    }
+                }
+            }
+        }
+        // pack per-pin delay settings (2 pins per byte, 4 bits each)
+        let mut pin_delays = [0u8; 4];
+        for (k, entry) in fg.input_pins(fu.id).iter().enumerate().take(4) {
+            // stored at half resolution (4 bits/pin keeps the 16-byte
+            // tile word; authoritative values live in LatencyReport)
+            let d = lat
+                .delays
+                .get(&(entry.op, entry.port))
+                .copied()
+                .unwrap_or(0);
+            pin_delays[k] = ((d / 2).min(15)) as u8;
+        }
+        tile.delays = [
+            (pin_delays[0] << 4) | pin_delays[1],
+            (pin_delays[2] << 4) | pin_delays[3],
+        ];
+    }
+
+    // switch-box words: count of used wires per tile side (a compact
+    // stand-in for per-mux select bits; sizes are what §IV compares)
+    for rn in &routes.nets {
+        for node in rn.tree_nodes() {
+            if let crate::overlay::RrgNode::Wire { x, y, side, track } = g.nodes[node] {
+                let tile = &mut bs.tiles[y * spec.cols + x];
+                tile.sb[side.index()] |= 1 << (track % 8);
+            }
+        }
+    }
+
+    // pad words: direction bit + stream id
+    for (p, &slot) in pl.in_slot.iter().enumerate() {
+        bs.pads[slot] = 0x80 | (p as u8 & 0x3F);
+    }
+    for (o, &slot) in pl.out_slot.iter().enumerate() {
+        bs.pads[slot] = 0x40 | (o as u8 & 0x3F);
+    }
+    bs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::fuaware::to_fu_graph;
+    use crate::ir::{lower_kernel, optimize};
+    use crate::netlist::build_netlist;
+    use crate::overlay::FuType;
+    use crate::place::place;
+    use crate::route::{bind_nets, route, RouterOptions};
+
+    const CHEB: &str = "__kernel void chebyshev(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    fn cheb_dfg() -> Dfg {
+        let f = lower_kernel(&parse_kernel(CHEB).unwrap()).unwrap();
+        crate::dfg::extract_dfg(&optimize(&f).0).unwrap()
+    }
+
+    #[test]
+    fn schedule_has_topological_sources() {
+        let dfg = crate::fuaware::fuse_muladd(&cheb_dfg()).unwrap();
+        let s = slot_schedule(&dfg, EmuGeometry::DEFAULT).unwrap();
+        assert_eq!(s.n_slots(), 5);
+        let out_base = s.geometry.out_base();
+        for t in 0..s.n_slots() {
+            for col in [s.src_a[t], s.src_b[t], s.src_c[t]] {
+                let col = col as usize;
+                if col >= out_base {
+                    assert!(col - out_base < t, "slot {t} reads a later slot");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn immediates_are_pooled_and_deduped() {
+        // chebyshev constants 16, 20, 5 -> three pool entries at the top
+        let dfg = crate::fuaware::fuse_muladd(&cheb_dfg()).unwrap();
+        let s = slot_schedule(&dfg, EmuGeometry::DEFAULT).unwrap();
+        assert_eq!(s.imm_pool.len(), 3);
+        let vals: Vec<i32> = s.imm_pool.iter().map(|&(_, v)| v).collect();
+        assert!(vals.contains(&16) && vals.contains(&20) && vals.contains(&5));
+        for &(col, _) in &s.imm_pool {
+            assert!(col >= s.geometry.imm_base() + s.geometry.max_fus - 3);
+        }
+        // replicating 16x must still dedupe to 3 constants
+        let rep = crate::replicate::replicate_dfg(&dfg, 16);
+        let s16 = slot_schedule(&rep, EmuGeometry::DEFAULT).unwrap();
+        assert_eq!(s16.imm_pool.len(), 3);
+        assert_eq!(s16.n_slots(), 80);
+    }
+
+    #[test]
+    fn out_cols_point_at_driver_slots() {
+        let dfg = crate::fuaware::fuse_muladd(&cheb_dfg()).unwrap();
+        let s = slot_schedule(&dfg, EmuGeometry::DEFAULT).unwrap();
+        assert_eq!(s.out_col.len(), 1);
+        let col = s.out_col[0];
+        assert!(col >= s.geometry.out_base());
+        assert!(col < s.geometry.out_base() + s.n_slots());
+    }
+
+    #[test]
+    fn overflowing_slots_is_reported() {
+        let dfg = crate::fuaware::fuse_muladd(&cheb_dfg()).unwrap();
+        let rep = crate::replicate::replicate_dfg(&dfg, 26); // 130 ops > 128
+        assert!(slot_schedule(&rep, EmuGeometry::DEFAULT).is_err());
+    }
+
+    #[test]
+    fn bitstream_of_routed_kernel_has_configured_tiles() {
+        let dfg = cheb_dfg();
+        let fg = to_fu_graph(&dfg, 2).unwrap();
+        let nl = build_netlist(&fg);
+        let spec = OverlaySpec::new(5, 5, FuType::Dsp2);
+        let g = RoutingGraph::build(&spec);
+        let pl = place(&nl, &spec, &g, 3).unwrap();
+        let bound = bind_nets(&fg, &nl, &pl, &g).unwrap();
+        let routes = route(&g, &bound.route_nets, &RouterOptions::default()).unwrap();
+        let lat = crate::latency::balance(&fg, &spec, &g, &bound, &routes).unwrap();
+        let bs = bitstream(&fg, &spec, &g, &pl, &routes, &lat);
+
+        let configured = bs.tiles.iter().filter(|t| t.fu_mode > 0).count();
+        assert_eq!(configured, 3);
+        // at least one tile must carry a routed-wire SB word
+        assert!(bs.tiles.iter().any(|t| t.sb.iter().any(|&b| b != 0)));
+        // pads: 1 input + 1 output marked
+        let ins = bs.pads.iter().filter(|&&p| p & 0x80 != 0).count();
+        let outs = bs.pads.iter().filter(|&&p| p & 0x40 != 0).count();
+        assert_eq!((ins, outs), (1, 1));
+        // serialization round-trips
+        let bytes = bs.to_bytes();
+        assert_eq!(OverlayBitstream::from_bytes(&bytes).unwrap(), bs);
+    }
+
+    #[test]
+    fn nop_only_kernel_schedules() {
+        let f = lower_kernel(
+            &parse_kernel(
+                "__kernel void c(__global int *B) {
+                    int i = get_global_id(0);
+                    B[i] = 7;
+                 }",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let dfg = crate::dfg::extract_dfg(&optimize(&f).0).unwrap();
+        let s = slot_schedule(&dfg, EmuGeometry::DEFAULT).unwrap();
+        assert_eq!(s.n_slots(), 1);
+        assert_eq!(s.ops[0], 0); // NOP
+        assert_eq!(s.imm_pool.len(), 1);
+        assert_eq!(s.imm_pool[0].1, 7);
+    }
+}

@@ -1,0 +1,435 @@
+//! Optimized IR → DFG extraction (the paper's "IR parser", §III-A.2).
+//!
+//! Recognized access patterns:
+//! * `buf[gid]`        — elementwise stream (input port per buffer);
+//! * `buf[gid ± c]`    — stencil tap: each distinct offset becomes its
+//!   own input stream (the host runtime aligns the tap when packing
+//!   the value table, exactly how streaming overlays realise stencils);
+//! * scalar params     — broadcast input streams;
+//! * constants         — FU immediates bound to operand ports.
+//!
+//! Extraction is demand-driven from the `StoreGlobal` roots: address
+//! arithmetic (`gid + 1` feeding a GEP) never becomes a dataflow node,
+//! matching the paper's DFGs where indexing is absorbed into the
+//! stream abstraction.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::ir::{Function, IrBinOp, Op, ValueId};
+
+use super::graph::{Dfg, DfgOp, ImmValue, NodeId, NodeKind};
+
+/// Key identifying one input stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+enum StreamKey {
+    /// (buffer param index, element offset from gid)
+    Buffer(usize, i64),
+    /// scalar param index
+    Scalar(usize),
+}
+
+struct Extractor<'f> {
+    f: &'f Function,
+    g: Dfg,
+    streams: HashMap<StreamKey, NodeId>,
+    memo: HashMap<ValueId, NodeId>,
+}
+
+/// Extract the DFG of an optimized kernel.
+pub fn extract_dfg(f: &Function) -> Result<Dfg> {
+    let mut ex = Extractor {
+        f,
+        g: Dfg::new(f.name.clone()),
+        streams: HashMap::new(),
+        memo: HashMap::new(),
+    };
+    let mut out_ports: HashMap<(usize, i64), NodeId> = HashMap::new();
+
+    for (i, instr) in f.instrs.iter().enumerate() {
+        let Op::StoreGlobal { val, addr } = &instr.op else { continue };
+        let (param, off) = ex
+            .addr_of(*addr)
+            .with_context(|| format!("store %{i} in kernel '{}'", f.name))?;
+        let driver = ex
+            .node_for(*val)
+            .with_context(|| format!("store %{i} in kernel '{}'", f.name))?;
+        match out_ports.get(&(param, off)) {
+            Some(&existing) => {
+                // straight-line overwrite: last store wins
+                ex.g.edges.retain(|e| e.dst != existing);
+                ex.g.add_edge(driver, existing, 0);
+            }
+            None => {
+                let port = ex.g.output_names.len();
+                let pname = &f.params[param].name;
+                ex.g.output_names.push(if off == 0 {
+                    pname.clone()
+                } else {
+                    format!("{pname}[{off:+}]")
+                });
+                ex.g.output_meta.push(crate::dfg::StreamMeta::buffer(param, off));
+                let out = ex.g.add_node(NodeKind::OutVar { port });
+                ex.g.add_edge(driver, out, 0);
+                out_ports.insert((param, off), out);
+            }
+        }
+    }
+
+    if out_ports.is_empty() {
+        bail!("kernel '{}' has no global store", f.name);
+    }
+    let g = ex.g.pruned();
+    g.validate()?;
+    Ok(g)
+}
+
+impl<'f> Extractor<'f> {
+    /// Decode a GEP address into (buffer param, gid offset).
+    fn addr_of(&self, v: ValueId) -> Result<(usize, i64)> {
+        let f = self.f;
+        let Op::Gep { base, idx } = f.op(v) else {
+            bail!("global access through a non-GEP address");
+        };
+        let Op::ParamPtr { index } = f.op(*base) else {
+            bail!("GEP base is not a kernel buffer parameter");
+        };
+        let off = match f.op(*idx) {
+            Op::GlobalId => 0i64,
+            Op::Bin { op: IrBinOp::Add, lhs, rhs } => match (f.op(*lhs), f.op(*rhs)) {
+                (Op::GlobalId, Op::ConstInt(c)) => *c,
+                (Op::ConstInt(c), Op::GlobalId) => *c,
+                _ => bail!(
+                    "unsupported index expression: only gid ± const stencil \
+                     taps map to overlay streams"
+                ),
+            },
+            Op::Bin { op: IrBinOp::Sub, lhs, rhs } => match (f.op(*lhs), f.op(*rhs)) {
+                (Op::GlobalId, Op::ConstInt(c)) => -*c,
+                _ => bail!("unsupported index expression"),
+            },
+            _ => bail!(
+                "unsupported index expression: only gid ± const stencil taps \
+                 map to overlay streams (data-dependent addressing cannot \
+                 stream through the overlay)"
+            ),
+        };
+        Ok((*index, off))
+    }
+
+    fn stream(&mut self, key: StreamKey, name: String) -> NodeId {
+        if let Some(&n) = self.streams.get(&key) {
+            return n;
+        }
+        let port = self.g.input_names.len();
+        self.g.input_names.push(name);
+        self.g.input_meta.push(match key {
+            StreamKey::Buffer(param, offset) => {
+                super::graph::StreamMeta::buffer(param, offset)
+            }
+            StreamKey::Scalar(param) => super::graph::StreamMeta::scalar(param),
+        });
+        let n = self.g.add_node(NodeKind::InVar { port });
+        self.streams.insert(key, n);
+        n
+    }
+
+    fn imm_of(&self, v: ValueId) -> Option<ImmValue> {
+        match self.f.op(v) {
+            Op::ConstInt(c) => Some(ImmValue::Int(*c)),
+            Op::ConstFloat(c) => Some(ImmValue::Float(*c)),
+            _ => None,
+        }
+    }
+
+    /// DFG node carrying IR value `v` (built on demand, memoized).
+    fn node_for(&mut self, v: ValueId) -> Result<NodeId> {
+        if let Some(&n) = self.memo.get(&v) {
+            return Ok(n);
+        }
+        let node = match self.f.op(v).clone() {
+            Op::LoadGlobal { addr } => {
+                let (param, off) = self.addr_of(addr)?;
+                let pname = self.f.params[param].name.clone();
+                let name = if off == 0 { pname } else { format!("{pname}[{off:+}]") };
+                self.stream(StreamKey::Buffer(param, off), name)
+            }
+            Op::ParamVal { index } => {
+                let name = self.f.params[index].name.clone();
+                self.stream(StreamKey::Scalar(index), name)
+            }
+            Op::Bin { op, lhs, rhs } => self.build_bin(op, lhs, rhs)?,
+            // a bare constant used as data (e.g. `B[i] = 5`)
+            Op::ConstInt(c) => self.g.add_node(NodeKind::Op {
+                op: DfgOp::Nop,
+                imm: [Some(ImmValue::Int(c)), None, None],
+            }),
+            Op::ConstFloat(c) => self.g.add_node(NodeKind::Op {
+                op: DfgOp::Nop,
+                imm: [Some(ImmValue::Float(c)), None, None],
+            }),
+            Op::GlobalId => bail!(
+                "get_global_id used as a data value — the overlay streams \
+                 data, not indices; pass an index buffer instead"
+            ),
+            other => bail!("value {other:?} has no DFG representation"),
+        };
+        self.memo.insert(v, node);
+        Ok(node)
+    }
+
+    fn build_bin(&mut self, op: IrBinOp, lhs: ValueId, rhs: ValueId) -> Result<NodeId> {
+        let (dfg_op, l, r) = match op {
+            IrBinOp::Add => (DfgOp::Add, lhs, rhs),
+            IrBinOp::Mul => (DfgOp::Mul, lhs, rhs),
+            IrBinOp::Min => (DfgOp::Min, lhs, rhs),
+            IrBinOp::Max => (DfgOp::Max, lhs, rhs),
+            IrBinOp::Sub => {
+                // Sub(const, x) -> RSUB(a=x, b=const): keeps the streamed
+                // operand on a routable port, constant as immediate.
+                if self.imm_of(lhs).is_some() && self.imm_of(rhs).is_none() {
+                    (DfgOp::Rsub, rhs, lhs)
+                } else {
+                    (DfgOp::Sub, lhs, rhs)
+                }
+            }
+            IrBinOp::Shl => bail!("unlowered shift-left reached DFG extraction"),
+            IrBinOp::Shr => bail!(
+                "right shift is not supported: the DSP-block FU has no barrel \
+                 shifter (pre-scale on the host)"
+            ),
+        };
+
+        // Resolve operands *before* allocating the node so the memo sees
+        // producers first (keeps node ids topologically friendly).
+        let mut imm = [None, None, None];
+        let mut edges: Vec<(NodeId, u8)> = Vec::new();
+        for (port, v) in [(0u8, l), (1u8, r)] {
+            if let Some(c) = self.imm_of(v) {
+                imm[port as usize] = Some(c);
+            } else {
+                edges.push((self.node_for(v)?, port));
+            }
+        }
+        let node = self.g.add_node(NodeKind::Op { op: dfg_op, imm });
+        for (src, port) in edges {
+            self.g.add_edge(src, node, port);
+        }
+        Ok(node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::ir::{lower_kernel, optimize};
+
+    fn dfg_of(src: &str) -> Dfg {
+        let f = lower_kernel(&parse_kernel(src).unwrap()).unwrap();
+        let (opt, _) = optimize(&f);
+        extract_dfg(&opt).unwrap()
+    }
+
+    const PAPER: &str = "__kernel void example_kernel(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    #[test]
+    fn paper_example_has_7_op_nodes() {
+        // Table II(a) / Fig 3(a): 5 mul + 1 sub + 1 add, 1 invar, 1 outvar
+        let g = dfg_of(PAPER);
+        assert_eq!(g.num_ops(), 7);
+        assert_eq!(g.num_inputs(), 1);
+        assert_eq!(g.num_outputs(), 1);
+        let muls = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Op { op: DfgOp::Mul, .. }))
+            .count();
+        assert_eq!(muls, 5);
+    }
+
+    #[test]
+    fn imm_lands_on_mul_node() {
+        let g = dfg_of(PAPER);
+        // exactly one mul carries Imm_16 (canonicalized to port 1)
+        let imm16 = g
+            .nodes
+            .iter()
+            .filter(|n| match &n.kind {
+                NodeKind::Op { op: DfgOp::Mul, imm } => {
+                    imm.iter().flatten().any(|v| matches!(v, ImmValue::Int(16)))
+                }
+                _ => false,
+            })
+            .count();
+        assert_eq!(imm16, 1);
+    }
+
+    #[test]
+    fn stencil_taps_become_distinct_streams() {
+        let g = dfg_of(
+            "__kernel void stencil(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] + A[i+1] + A[i+2];
+             }",
+        );
+        assert_eq!(g.num_inputs(), 3);
+        let mut names = g.input_names.clone();
+        names.sort();
+        assert_eq!(names, vec!["A", "A[+1]", "A[+2]"]);
+    }
+
+    #[test]
+    fn same_tap_is_shared() {
+        let g = dfg_of(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] * A[i];
+             }",
+        );
+        assert_eq!(g.num_inputs(), 1);
+    }
+
+    #[test]
+    fn scalar_param_becomes_broadcast_stream() {
+        let g = dfg_of(
+            "__kernel void k(__global int *A, const int n, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] * n;
+             }",
+        );
+        assert_eq!(g.num_inputs(), 2);
+        assert!(g.input_names.contains(&"n".to_string()));
+    }
+
+    #[test]
+    fn const_minus_x_uses_rsub() {
+        let g = dfg_of(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = 100 - A[i];
+             }",
+        );
+        let rsubs = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Op { op: DfgOp::Rsub, .. }))
+            .count();
+        assert_eq!(rsubs, 1);
+    }
+
+    #[test]
+    fn constant_store_materializes_nop() {
+        let g = dfg_of(
+            "__kernel void k(__global int *B) {
+                int i = get_global_id(0);
+                B[i] = 42;
+             }",
+        );
+        assert_eq!(g.num_ops(), 1);
+        assert!(matches!(
+            g.nodes[g.op_nodes()[0]].kind,
+            NodeKind::Op { op: DfgOp::Nop, .. }
+        ));
+    }
+
+    #[test]
+    fn two_output_buffers_two_ports() {
+        let g = dfg_of(
+            "__kernel void k(__global int *A, __global int *B, __global int *C) {
+                int i = get_global_id(0);
+                B[i] = A[i] + 1;
+                C[i] = A[i] * 2;
+             }",
+        );
+        assert_eq!(g.num_outputs(), 2);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn overwriting_store_keeps_last() {
+        let g = dfg_of(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] + 1;
+                B[i] = A[i] * 3;
+             }",
+        );
+        assert_eq!(g.num_outputs(), 1);
+        g.validate().unwrap();
+        // the overwritten add chain is pruned; only the mul survives
+        assert_eq!(g.num_ops(), 1);
+    }
+
+    #[test]
+    fn shared_subexpression_is_one_node() {
+        let g = dfg_of(
+            "__kernel void k(__global int *A, __global int *B, __global int *C) {
+                int i = get_global_id(0);
+                int t = A[i] * A[i];
+                B[i] = t + 1;
+                C[i] = t - 1;
+             }",
+        );
+        let muls = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Op { op: DfgOp::Mul, .. }))
+            .count();
+        assert_eq!(muls, 1);
+    }
+
+    #[test]
+    fn rejects_right_shift() {
+        let f = lower_kernel(
+            &parse_kernel(
+                "__kernel void k(__global int *A, __global int *B) {
+                    int i = get_global_id(0);
+                    B[i] = A[i] >> 2;
+                 }",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let (opt, _) = optimize(&f);
+        assert!(extract_dfg(&opt).is_err());
+    }
+
+    #[test]
+    fn rejects_data_dependent_index() {
+        let f = lower_kernel(
+            &parse_kernel(
+                "__kernel void k(__global int *A, __global int *B) {
+                    int i = get_global_id(0);
+                    B[i] = A[A[i]];
+                 }",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let (opt, _) = optimize(&f);
+        assert!(extract_dfg(&opt).is_err());
+    }
+
+    #[test]
+    fn rejects_gid_as_data() {
+        let f = lower_kernel(
+            &parse_kernel(
+                "__kernel void k(__global int *B) {
+                    int i = get_global_id(0);
+                    B[i] = i;
+                 }",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let (opt, _) = optimize(&f);
+        let err = extract_dfg(&opt).unwrap_err().to_string();
+        assert!(err.contains("store"), "{err}");
+    }
+}

@@ -1,0 +1,523 @@
+//! DFG data structures and invariants.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+/// Node index within a [`Dfg`].
+pub type NodeId = usize;
+
+/// An immediate (compile-time constant) bound to an FU operand port.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ImmValue {
+    Int(i64),
+    Float(f64),
+}
+
+impl ImmValue {
+    /// Bit pattern as stored in the value-table immediate column.
+    pub fn to_bits_i32(self) -> i32 {
+        match self {
+            ImmValue::Int(v) => v as i32,
+            ImmValue::Float(v) => (v as f32).to_bits() as i32,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            ImmValue::Int(v) => format!("{v}"),
+            ImmValue::Float(v) => format!("{v}"),
+        }
+    }
+}
+
+/// Operation kinds, 1:1 with the AOT emulator's opcode table
+/// (`python/compile/kernels/geometry.py`) and the DSP-block FU modes.
+/// `MulAdd`/`MulSub` only appear after the FU-aware transform.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DfgOp {
+    Nop,
+    Add,
+    Sub,
+    Mul,
+    MulAdd,
+    MulSub,
+    /// `b - a` (subtract with the streamed operand on the right).
+    Rsub,
+    Max,
+    Min,
+}
+
+impl DfgOp {
+    /// Opcode in the emulator's instruction encoding.
+    pub fn opcode(self) -> i32 {
+        match self {
+            DfgOp::Nop => 0,
+            DfgOp::Add => 1,
+            DfgOp::Sub => 2,
+            DfgOp::Mul => 3,
+            DfgOp::MulAdd => 4,
+            DfgOp::MulSub => 5,
+            DfgOp::Rsub => 6,
+            DfgOp::Max => 7,
+            DfgOp::Min => 8,
+        }
+    }
+
+    /// Number of operand ports.
+    pub fn arity(self) -> usize {
+        match self {
+            DfgOp::Nop => 1,
+            DfgOp::MulAdd | DfgOp::MulSub => 3,
+            _ => 2,
+        }
+    }
+
+    /// DSP blocks consumed by this op on the physical overlay.
+    pub fn dsp_cost(self) -> usize {
+        match self {
+            // multiply-accumulate fits one DSP48 (the fusion target)
+            DfgOp::Mul | DfgOp::MulAdd | DfgOp::MulSub => 1,
+            // ALU-mode DSP (add/sub/min/max/pass)
+            _ => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DfgOp::Nop => "nop",
+            DfgOp::Add => "add",
+            DfgOp::Sub => "sub",
+            DfgOp::Mul => "mul",
+            DfgOp::MulAdd => "mul_add",
+            DfgOp::MulSub => "mul_sub",
+            DfgOp::Rsub => "rsub",
+            DfgOp::Max => "max",
+            DfgOp::Min => "min",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DfgOp> {
+        Some(match s {
+            "nop" => DfgOp::Nop,
+            "add" => DfgOp::Add,
+            "sub" => DfgOp::Sub,
+            "mul" => DfgOp::Mul,
+            "mul_add" => DfgOp::MulAdd,
+            "mul_sub" => DfgOp::MulSub,
+            "rsub" => DfgOp::Rsub,
+            "max" => DfgOp::Max,
+            "min" => DfgOp::Min,
+            _ => return None,
+        })
+    }
+}
+
+/// Node kinds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NodeKind {
+    /// Kernel input stream (`I<port>` in Table II labels).
+    InVar { port: usize },
+    /// Kernel output stream (`O<port>`).
+    OutVar { port: usize },
+    /// FU operation with up to 3 operand ports; a port is fed either by
+    /// an edge or by an immediate, never both.
+    Op { op: DfgOp, imm: [Option<ImmValue>; 3] },
+}
+
+/// A DFG node.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: NodeKind,
+}
+
+/// A directed edge `src → dst` into operand port `dst_port` of `dst`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub dst_port: u8,
+}
+
+/// Where a stream's data lives in the host's argument list: which
+/// kernel parameter it reads/writes and at what element offset from
+/// the work-item id (stencil tap). Scalars broadcast one value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamMeta {
+    pub param: usize,
+    pub offset: i64,
+    pub is_scalar: bool,
+}
+
+impl StreamMeta {
+    pub fn buffer(param: usize, offset: i64) -> Self {
+        StreamMeta { param, offset, is_scalar: false }
+    }
+
+    pub fn scalar(param: usize) -> Self {
+        StreamMeta { param, offset: 0, is_scalar: true }
+    }
+}
+
+/// The dataflow graph of one kernel (pre-replication).
+#[derive(Debug, Clone, Default)]
+pub struct Dfg {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    pub edges: Vec<Edge>,
+    /// Human names of input streams, indexed by `InVar::port`.
+    pub input_names: Vec<String>,
+    /// Human names of output streams, indexed by `OutVar::port`.
+    pub output_names: Vec<String>,
+    /// Host binding of each input stream (parallel to `input_names`;
+    /// empty for DFGs without host bindings, e.g. parsed from DOT).
+    pub input_meta: Vec<StreamMeta>,
+    /// Host binding of each output stream.
+    pub output_meta: Vec<StreamMeta>,
+}
+
+impl Dfg {
+    pub fn new(name: impl Into<String>) -> Self {
+        Dfg { name: name.into(), ..Default::default() }
+    }
+
+    pub fn add_node(&mut self, kind: NodeKind) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, kind });
+        id
+    }
+
+    pub fn add_edge(&mut self, src: NodeId, dst: NodeId, dst_port: u8) {
+        self.edges.push(Edge { src, dst, dst_port });
+    }
+
+    /// Incoming edges of `id`, sorted by destination port.
+    pub fn preds(&self, id: NodeId) -> Vec<Edge> {
+        let mut v: Vec<Edge> = self.edges.iter().filter(|e| e.dst == id).copied().collect();
+        v.sort_by_key(|e| e.dst_port);
+        v
+    }
+
+    /// Outgoing edges of `id`.
+    pub fn succs(&self, id: NodeId) -> Vec<Edge> {
+        self.edges.iter().filter(|e| e.src == id).copied().collect()
+    }
+
+    /// Ids of operation nodes.
+    pub fn op_nodes(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Op { .. }))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    pub fn num_ops(&self) -> usize {
+        self.op_nodes().len()
+    }
+
+    pub fn num_inputs(&self) -> usize {
+        self.input_names.len()
+    }
+
+    pub fn num_outputs(&self) -> usize {
+        self.output_names.len()
+    }
+
+    /// Total I/O streams (the replication limiter next to FU count).
+    pub fn num_io(&self) -> usize {
+        self.num_inputs() + self.num_outputs()
+    }
+
+    /// Table II style label for a node, e.g. `mul_Imm_16_N4`, `I0_N1`.
+    pub fn label(&self, id: NodeId) -> String {
+        let n = &self.nodes[id];
+        match &n.kind {
+            NodeKind::InVar { port } => format!("I{port}_N{id}"),
+            NodeKind::OutVar { port } => format!("O{port}_N{id}"),
+            NodeKind::Op { op, imm } => {
+                let imms: Vec<String> = imm
+                    .iter()
+                    .flatten()
+                    .map(|v| format!("Imm_{}", v.label()))
+                    .collect();
+                if imms.is_empty() {
+                    format!("{}_N{id}", op.name())
+                } else {
+                    format!("{}_{}_N{id}", op.name(), imms.join("_"))
+                }
+            }
+        }
+    }
+
+    /// Topological order over all nodes; fails on cycles.
+    pub fn topo_order(&self) -> Result<Vec<NodeId>> {
+        let n = self.nodes.len();
+        let mut indeg = vec![0usize; n];
+        let mut adj: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for e in &self.edges {
+            indeg[e.dst] += 1;
+            adj[e.src].push(e.dst);
+        }
+        let mut queue: Vec<NodeId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        queue.sort();
+        let mut order = Vec::with_capacity(n);
+        let mut head = 0;
+        while head < queue.len() {
+            let u = queue[head];
+            head += 1;
+            order.push(u);
+            for &v in &adj[u] {
+                indeg[v] -= 1;
+                if indeg[v] == 0 {
+                    queue.push(v);
+                }
+            }
+        }
+        if order.len() != n {
+            bail!("DFG '{}' contains a cycle", self.name);
+        }
+        Ok(order)
+    }
+
+    /// Longest op-path depth (pipeline latency proxy).
+    pub fn depth(&self) -> usize {
+        let order = self.topo_order().expect("depth of cyclic DFG");
+        let mut d: HashMap<NodeId, usize> = HashMap::new();
+        let mut max = 0;
+        for id in order {
+            let is_op = matches!(self.nodes[id].kind, NodeKind::Op { .. });
+            let base = self
+                .preds(id)
+                .iter()
+                .map(|e| d.get(&e.src).copied().unwrap_or(0))
+                .max()
+                .unwrap_or(0);
+            let here = base + usize::from(is_op);
+            d.insert(id, here);
+            max = max.max(here);
+        }
+        max
+    }
+
+    /// Rebuild the graph keeping only nodes with a path to an output
+    /// stream (dead op nodes appear when a later store overwrites an
+    /// earlier one, or when stencil taps are partially consumed).
+    /// Input ports are renumbered densely.
+    pub fn pruned(&self) -> Dfg {
+        let n = self.nodes.len();
+        let mut live = vec![false; n];
+        for node in &self.nodes {
+            if matches!(node.kind, NodeKind::OutVar { .. }) {
+                live[node.id] = true;
+            }
+        }
+        // reverse reachability (iterate: edges are unordered)
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for e in &self.edges {
+                if live[e.dst] && !live[e.src] {
+                    live[e.src] = true;
+                    changed = true;
+                }
+            }
+        }
+
+        let mut g = Dfg::new(self.name.clone());
+        let mut remap: Vec<Option<NodeId>> = vec![None; n];
+        for node in &self.nodes {
+            if !live[node.id] {
+                continue;
+            }
+            let kind = match &node.kind {
+                NodeKind::InVar { port } => {
+                    let new_port = g.input_names.len();
+                    g.input_names.push(self.input_names[*port].clone());
+                    if let Some(m) = self.input_meta.get(*port) {
+                        g.input_meta.push(*m);
+                    }
+                    NodeKind::InVar { port: new_port }
+                }
+                NodeKind::OutVar { port } => {
+                    let new_port = g.output_names.len();
+                    g.output_names.push(self.output_names[*port].clone());
+                    if let Some(m) = self.output_meta.get(*port) {
+                        g.output_meta.push(*m);
+                    }
+                    NodeKind::OutVar { port: new_port }
+                }
+                op => op.clone(),
+            };
+            remap[node.id] = Some(g.add_node(kind));
+        }
+        for e in &self.edges {
+            if let (Some(s), Some(d)) = (remap[e.src], remap[e.dst]) {
+                g.add_edge(s, d, e.dst_port);
+            }
+        }
+        g
+    }
+
+    /// Structural validation: port/arity discipline, no dangling edges,
+    /// in/out degree rules, acyclicity.
+    pub fn validate(&self) -> Result<()> {
+        for e in &self.edges {
+            if e.src >= self.nodes.len() || e.dst >= self.nodes.len() {
+                bail!("dangling edge {:?}", e);
+            }
+            if matches!(self.nodes[e.dst].kind, NodeKind::InVar { .. }) {
+                bail!("edge into invar node N{}", e.dst);
+            }
+            if matches!(self.nodes[e.src].kind, NodeKind::OutVar { .. }) {
+                bail!("edge out of outvar node N{}", e.src);
+            }
+        }
+        for node in &self.nodes {
+            match &node.kind {
+                NodeKind::InVar { .. } => {}
+                NodeKind::OutVar { .. } => {
+                    let p = self.preds(node.id);
+                    if p.len() != 1 {
+                        bail!(
+                            "outvar N{} must have exactly one driver (has {})",
+                            node.id,
+                            p.len()
+                        );
+                    }
+                }
+                NodeKind::Op { op, imm } => {
+                    let arity = op.arity();
+                    let mut covered = vec![false; arity];
+                    for e in self.preds(node.id) {
+                        let p = e.dst_port as usize;
+                        if p >= arity {
+                            bail!("N{}: port {} out of range for {}", node.id, p, op.name());
+                        }
+                        if covered[p] {
+                            bail!("N{}: port {} driven twice", node.id, p);
+                        }
+                        if imm[p].is_some() {
+                            bail!("N{}: port {} has both edge and immediate", node.id, p);
+                        }
+                        covered[p] = true;
+                    }
+                    for (p, c) in covered.iter().enumerate() {
+                        if !c && imm[p].is_none() {
+                            bail!("N{}: port {} of {} undriven", node.id, p, op.name());
+                        }
+                    }
+                    for (p, v) in imm.iter().enumerate() {
+                        if p >= arity && v.is_some() {
+                            bail!("N{}: immediate on out-of-range port {}", node.id, p);
+                        }
+                    }
+                }
+            }
+        }
+        self.topo_order()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build the paper's Fig. 3(a)-equivalent fused DFG (Fig. 3(b)).
+    pub(crate) fn paper_fuaware_dfg() -> Dfg {
+        let mut g = Dfg::new("example_kernel");
+        g.input_names.push("A".into());
+        g.output_names.push("B".into());
+        let x = g.add_node(NodeKind::InVar { port: 0 });
+        let n4 = g.add_node(NodeKind::Op {
+            op: DfgOp::Mul,
+            imm: [None, Some(ImmValue::Int(16)), None],
+        });
+        let n5 = g.add_node(NodeKind::Op {
+            op: DfgOp::MulSub,
+            imm: [None, None, Some(ImmValue::Int(20))],
+        });
+        let n3 = g.add_node(NodeKind::Op { op: DfgOp::Mul, imm: [None, None, None] });
+        let n6 = g.add_node(NodeKind::Op {
+            op: DfgOp::MulAdd,
+            imm: [None, None, Some(ImmValue::Int(5))],
+        });
+        let n2 = g.add_node(NodeKind::Op { op: DfgOp::Mul, imm: [None, None, None] });
+        let out = g.add_node(NodeKind::OutVar { port: 0 });
+        g.add_edge(x, n4, 0); // 16*x
+        g.add_edge(n4, n5, 0); // (16x)*x - 20
+        g.add_edge(x, n5, 1);
+        g.add_edge(n5, n3, 0); // (...)*x
+        g.add_edge(x, n3, 1);
+        g.add_edge(n3, n6, 0); // (...)*x + 5
+        g.add_edge(x, n6, 1);
+        g.add_edge(n6, n2, 0); // x*(...)
+        g.add_edge(x, n2, 1);
+        g.add_edge(n2, out, 0);
+        g
+    }
+
+    #[test]
+    fn paper_dfg_validates() {
+        let g = paper_fuaware_dfg();
+        g.validate().unwrap();
+        assert_eq!(g.num_ops(), 5);
+        assert_eq!(g.num_io(), 2);
+        assert_eq!(g.depth(), 5);
+    }
+
+    #[test]
+    fn labels_match_table2_style() {
+        let g = paper_fuaware_dfg();
+        assert_eq!(g.label(0), "I0_N0");
+        assert_eq!(g.label(1), "mul_Imm_16_N1");
+        assert_eq!(g.label(2), "mul_sub_Imm_20_N2");
+        assert_eq!(g.label(6), "O0_N6");
+    }
+
+    #[test]
+    fn cycle_is_detected() {
+        let mut g = Dfg::new("cyclic");
+        let a = g.add_node(NodeKind::Op { op: DfgOp::Add, imm: [None, None, None] });
+        let b = g.add_node(NodeKind::Op { op: DfgOp::Add, imm: [None, None, None] });
+        g.add_edge(a, b, 0);
+        g.add_edge(b, a, 0);
+        assert!(g.topo_order().is_err());
+    }
+
+    #[test]
+    fn undriven_port_is_rejected() {
+        let mut g = Dfg::new("bad");
+        let x = g.add_node(NodeKind::InVar { port: 0 });
+        let n = g.add_node(NodeKind::Op { op: DfgOp::Add, imm: [None, None, None] });
+        g.add_edge(x, n, 0);
+        // port 1 undriven
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn double_driven_port_is_rejected() {
+        let mut g = Dfg::new("bad2");
+        let x = g.add_node(NodeKind::InVar { port: 0 });
+        let n = g.add_node(NodeKind::Op {
+            op: DfgOp::Add,
+            imm: [None, Some(ImmValue::Int(1)), None],
+        });
+        g.add_edge(x, n, 0);
+        g.add_edge(x, n, 1); // collides with immediate
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn topo_order_respects_edges() {
+        let g = paper_fuaware_dfg();
+        let order = g.topo_order().unwrap();
+        let pos: std::collections::HashMap<_, _> =
+            order.iter().enumerate().map(|(i, &n)| (n, i)).collect();
+        for e in &g.edges {
+            assert!(pos[&e.src] < pos[&e.dst]);
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Dataflow-graph extraction — Table II / Fig. 3(a) of the paper.
+//!
+//! The DFG is the compiler's central structure: nodes are kernel input
+//! streams (`invar`), output streams (`outvar`) and FU operations;
+//! edges carry one 32-bit value per kernel iteration (the paper's
+//! overlay uses 16-bit channels; we model the 32-bit variant the DSP48
+//! natively supports — see DESIGN.md). Constants become FU *immediates*
+//! (`mul_Imm_16`), not nodes, exactly as in Table II(a).
+//!
+//! [`extract_dfg`] consumes optimized IR; [`to_dot`]/[`parse_dot`]
+//! round-trip the Table II DOT interchange format.
+
+mod dot;
+mod from_ir;
+mod graph;
+
+pub use dot::{parse_dot, to_dot};
+pub use from_ir::extract_dfg;
+pub use graph::{Dfg, DfgOp, Edge, ImmValue, Node, NodeId, NodeKind, StreamMeta};

@@ -1,0 +1,584 @@
+//! Fine-grained (direct FPGA) implementation baseline — the Vivado
+//! stand-in for Fig. 7 and Table III.
+//!
+//! The paper compares its overlay JIT against Vivado 2014.2 placing
+//! and routing the same kernels directly onto the Zynq XC7Z020 fabric.
+//! Vivado is not available (nor is the board), so this module runs the
+//! *same algorithm family at fine granularity*:
+//!
+//! 1. [`techmap`] expands the (replicated, unfused) DFG into a
+//!    gate-level netlist — 16-bit carry-chain adders in slices,
+//!    generic multipliers in DSP48s, power-of-two constant multiplies
+//!    as free wiring — with bit-lane nets (each 16-bit edge becomes
+//!    16 routed nets);
+//! 2. a simulated-annealing placement over a XC7Z020-sized slice grid
+//!    (13,300 slices, two DSP columns);
+//! 3. a PathFinder-style negotiated-congestion router over the slice
+//!    grid's channel graph;
+//! 4. a timing model calibrated to Table III's published Fmax range.
+//!
+//! Because granularity is the *only* variable changed, the measured
+//! overlay-PAR vs fine-PAR runtime ratio isolates exactly the effect
+//! the paper attributes to coarse-grained overlays. EXPERIMENTS.md
+//! reports our measured ratio next to the paper's Vivado wall times.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::dfg::{Dfg, DfgOp, ImmValue, NodeKind};
+use crate::util::XorShiftRng;
+
+/// One technology-mapped cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellKind {
+    /// One slice of LUT/carry logic (4 LUT6 + CARRY4).
+    Slice,
+    /// A DSP48 multiplier site.
+    Dsp,
+    /// An I/O register pair.
+    Iob,
+}
+
+/// Technology-mapped netlist.
+#[derive(Debug, Clone)]
+pub struct GateNetlist {
+    pub name: String,
+    pub cells: Vec<CellKind>,
+    /// Nets as (driver cell, sink cells). Nibble-lane granularity.
+    pub nets: Vec<(usize, Vec<usize>)>,
+    /// Combinational delay class per cell (ns through the cell).
+    pub cell_delay_ns: Vec<f64>,
+    /// Longest combinational op chain (pipeline stages in the HLS
+    /// sense) — drives the Fmax model.
+    pub depth: usize,
+}
+
+impl GateNetlist {
+    /// LUT cells in the netlist.
+    pub fn num_luts(&self) -> usize {
+        self.cells.iter().filter(|c| matches!(c, CellKind::Slice)).count()
+    }
+
+    /// Occupied slices (4 LUT6 per Zynq slice).
+    pub fn num_slices(&self) -> usize {
+        self.num_luts().div_ceil(4)
+    }
+
+    pub fn num_dsps(&self) -> usize {
+        self.cells.iter().filter(|c| matches!(c, CellKind::Dsp)).count()
+    }
+}
+
+/// Per-op LUT/DSP/delay costs of the 16-bit datapath (one cell per
+/// LUT — the granularity Vivado's placer works at).
+fn op_cost(op: DfgOp, imm: &[Option<ImmValue>; 3]) -> (usize, usize, f64) {
+    // (luts, dsps, delay_ns)
+    let const_mul_pow2 = matches!(
+        (op, imm[1]),
+        (DfgOp::Mul, Some(ImmValue::Int(v))) if v > 0 && (v & (v - 1)) == 0
+    );
+    match op {
+        DfgOp::Mul if const_mul_pow2 => (0, 0, 0.0), // wiring only
+        DfgOp::Mul => (0, 1, 2.8),
+        DfgOp::MulAdd | DfgOp::MulSub => (0, 1, 3.1),
+        // 16-bit ripple add/sub: one LUT+carry per bit
+        DfgOp::Add | DfgOp::Sub | DfgOp::Rsub => (16, 0, 1.3),
+        // compare (16 LUTs) + 16-bit mux (16 LUTs)
+        DfgOp::Max | DfgOp::Min => (32, 0, 1.9),
+        DfgOp::Nop => (0, 0, 0.0),
+    }
+}
+
+/// Expand a DFG into the gate-level netlist Vivado would place & route.
+pub fn techmap(dfg: &Dfg) -> Result<GateNetlist> {
+    let mut cells: Vec<CellKind> = Vec::new();
+    let mut delays: Vec<f64> = Vec::new();
+    // DFG node -> representative driver cell (for nets)
+    let mut driver: HashMap<usize, usize> = HashMap::new();
+    let mut nets: Vec<(usize, Vec<usize>)> = Vec::new();
+
+    let push_cell = |cells: &mut Vec<CellKind>, delays: &mut Vec<f64>, k: CellKind, d: f64| {
+        cells.push(k);
+        delays.push(d);
+        cells.len() - 1
+    };
+
+    let order = dfg.topo_order()?;
+    for &id in &order {
+        match &dfg.nodes[id].kind {
+            NodeKind::InVar { .. } => {
+                let c = push_cell(&mut cells, &mut delays, CellKind::Iob, 0.4);
+                driver.insert(id, c);
+            }
+            NodeKind::OutVar { .. } => {
+                let c = push_cell(&mut cells, &mut delays, CellKind::Iob, 0.4);
+                driver.insert(id, c);
+            }
+            NodeKind::Op { op, imm } => {
+                let (slices, dsps, delay) = op_cost(*op, imm);
+                let mut first: Option<usize> = None;
+                for _ in 0..slices {
+                    let c = push_cell(&mut cells, &mut delays, CellKind::Slice, delay);
+                    first.get_or_insert(c);
+                }
+                for _ in 0..dsps {
+                    let c = push_cell(&mut cells, &mut delays, CellKind::Dsp, delay);
+                    first.get_or_insert(c);
+                }
+                // free ops (pow2 mul, nop) borrow their input's driver
+                let rep = match first {
+                    Some(c) => c,
+                    None => {
+                        let src = dfg
+                            .preds(id)
+                            .first()
+                            .map(|e| driver[&e.src])
+                            .unwrap_or_else(|| {
+                                push_cell(&mut cells, &mut delays, CellKind::Slice, 0.2)
+                            });
+                        src
+                    }
+                };
+                driver.insert(id, rep);
+            }
+        }
+    }
+
+    // nets: one per DFG edge per bit lane (16-bit channels)
+    for e in &dfg.edges {
+        let s = driver[&e.src];
+        let d = driver[&e.dst];
+        if s == d {
+            continue;
+        }
+        for _lane in 0..16 {
+            nets.push((s, vec![d]));
+        }
+    }
+
+    Ok(GateNetlist {
+        name: dfg.name.clone(),
+        cells,
+        nets,
+        cell_delay_ns: delays,
+        depth: dfg.depth(),
+    })
+}
+
+/// Total-ordered f64 for the router's heap.
+#[derive(PartialEq, PartialOrd)]
+struct OrdF(f64);
+
+impl Eq for OrdF {}
+
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for OrdF {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// XC7Z020-like fabric dimensions.
+pub const FABRIC_COLS: usize = 100;
+pub const FABRIC_ROWS: usize = 133;
+/// DSP sites live in two columns.
+pub const DSP_COLS: [usize; 2] = [30, 70];
+/// Routing capacity per grid cell (tracks crossing each channel).
+pub const CHANNEL_CAP: u16 = 12;
+
+/// Fine-grained PAR effort knobs.
+#[derive(Debug, Clone)]
+pub struct FpgaParOptions {
+    pub seed: u64,
+    /// Scales SA moves (1.0 = full Vivado-like effort).
+    pub effort: f64,
+    pub max_route_iters: usize,
+}
+
+impl Default for FpgaParOptions {
+    fn default() -> Self {
+        FpgaParOptions { seed: 1, effort: 1.0, max_route_iters: 12 }
+    }
+}
+
+/// Result of the fine-grained PAR run.
+#[derive(Debug, Clone)]
+pub struct FpgaParResult {
+    pub par_time: Duration,
+    pub place_time: Duration,
+    pub route_time: Duration,
+    pub fmax_mhz: f64,
+    pub slices: usize,
+    pub dsps: usize,
+    pub route_iterations: usize,
+    pub total_wirelength: u64,
+}
+
+/// Place and route `nl` on the fabric; measure wall time (the Fig. 7
+/// "Vivado" bar is this, run at `effort = 1.0`).
+pub fn par(nl: &GateNetlist, opts: &FpgaParOptions) -> Result<FpgaParResult> {
+    let t0 = Instant::now();
+    let mut rng = XorShiftRng::new(opts.seed ^ 0x4650_4741); // "FPGA"
+
+    // ---- placement ----
+    let n = nl.cells.len();
+    if n == 0 {
+        bail!("empty netlist");
+    }
+    // site lists
+    let mut slice_sites: Vec<(usize, usize)> = Vec::new();
+    let mut dsp_sites: Vec<(usize, usize)> = Vec::new();
+    for y in 0..FABRIC_ROWS {
+        for x in 0..FABRIC_COLS {
+            if DSP_COLS.contains(&x) {
+                dsp_sites.push((x, y));
+            } else {
+                slice_sites.push((x, y));
+            }
+        }
+    }
+    let needed_dsp = nl.num_dsps();
+    if needed_dsp > dsp_sites.len() {
+        bail!("design needs {} DSPs, fabric has {}", needed_dsp, dsp_sites.len());
+    }
+
+    rng.shuffle(&mut slice_sites);
+    rng.shuffle(&mut dsp_sites);
+    let mut pos: Vec<(usize, usize)> = Vec::with_capacity(n);
+    let (mut si, mut di) = (0usize, 0usize);
+    for &c in &nl.cells {
+        match c {
+            CellKind::Dsp => {
+                pos.push(dsp_sites[di]);
+                di += 1;
+            }
+            _ => {
+                pos.push(slice_sites[si]);
+                si += 1;
+            }
+        }
+    }
+
+    // incremental HPWL annealing
+    let mut nets_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (ni, (s, sinks)) in nl.nets.iter().enumerate() {
+        nets_of[*s].push(ni);
+        for &d in sinks {
+            if !nets_of[d].contains(&ni) {
+                nets_of[d].push(ni);
+            }
+        }
+    }
+    let net_cost = |pos: &[(usize, usize)], ni: usize| -> f64 {
+        let (s, sinks) = &nl.nets[ni];
+        let (mut x0, mut y0) = pos[*s];
+        let (mut x1, mut y1) = (x0, y0);
+        for &d in sinks {
+            let (x, y) = pos[d];
+            x0 = x0.min(x);
+            y0 = y0.min(y);
+            x1 = x1.max(x);
+            y1 = y1.max(y);
+        }
+        ((x1 - x0) + (y1 - y0)) as f64
+    };
+    let mut costs: Vec<f64> = (0..nl.nets.len()).map(|ni| net_cost(&pos, ni)).collect();
+    let total: f64 = costs.iter().sum();
+
+    // swap-based SA over same-kind cells
+    let movable: Vec<usize> = (0..n).collect();
+    let moves_per_t =
+        (((10.0 * (n as f64).powf(4.0 / 3.0)) * opts.effort) as usize).max(100);
+    // `total` is only used to seed the temperature; per-move deltas
+    // keep `costs` authoritative.
+    let mut temp = (total / nl.nets.len().max(1) as f64).max(2.0) * 4.0;
+    let exit_t = 0.002 * (total / nl.nets.len().max(1) as f64).max(0.5);
+
+    // free-site pools for non-swap moves
+    let free_slices: Vec<(usize, usize)> = slice_sites[si..].to_vec();
+
+    while temp > exit_t {
+        let mut accepted = 0usize;
+        for _ in 0..moves_per_t {
+            let a = *rng.choose(&movable);
+            // target: another cell of the same kind (swap) or free site
+            let (b_cell, b_site) = if matches!(nl.cells[a], CellKind::Dsp) {
+                // swap with another dsp
+                let b = loop {
+                    let b = *rng.choose(&movable);
+                    if matches!(nl.cells[b], CellKind::Dsp) {
+                        break b;
+                    }
+                };
+                (Some(b), pos[b])
+            } else if !free_slices.is_empty() && rng.gen_f64() < 0.3 {
+                (None, *rng.choose(&free_slices))
+            } else {
+                let b = loop {
+                    let b = *rng.choose(&movable);
+                    if !matches!(nl.cells[b], CellKind::Dsp) {
+                        break b;
+                    }
+                };
+                (Some(b), pos[b])
+            };
+            if b_cell == Some(a) {
+                continue;
+            }
+            let a_site = pos[a];
+            // apply
+            pos[a] = b_site;
+            if let Some(b) = b_cell {
+                pos[b] = a_site;
+            }
+            // delta over touched nets
+            let mut touched: Vec<usize> = nets_of[a].clone();
+            if let Some(b) = b_cell {
+                for &ni in &nets_of[b] {
+                    if !touched.contains(&ni) {
+                        touched.push(ni);
+                    }
+                }
+            }
+            let mut delta = 0.0;
+            let old: Vec<(usize, f64)> =
+                touched.iter().map(|&ni| (ni, costs[ni])).collect();
+            for &ni in &touched {
+                let c = net_cost(&pos, ni);
+                delta += c - costs[ni];
+                costs[ni] = c;
+            }
+            if delta <= 0.0 || rng.gen_f64() < (-delta / temp).exp() {
+                accepted += 1;
+            } else {
+                pos[a] = a_site;
+                if let Some(b) = b_cell {
+                    pos[b] = b_site;
+                }
+                for (ni, c) in old {
+                    costs[ni] = c;
+                }
+            }
+        }
+        let rate = accepted as f64 / moves_per_t as f64;
+        temp *= match rate {
+            r if r > 0.96 => 0.5,
+            r if r > 0.8 => 0.9,
+            r if r > 0.15 => 0.95,
+            _ => 0.8,
+        };
+    }
+    let place_time = t0.elapsed();
+
+    // ---- routing: PathFinder with an A* maze expansion per net ----
+    // (the same negotiated-congestion scheme as the overlay router,
+    // run over the slice grid's channel graph at bit-lane granularity)
+    let t1 = Instant::now();
+    let n_cells = FABRIC_COLS * FABRIC_ROWS;
+    let mut occ = vec![0u16; n_cells];
+    let mut hist = vec![0.0f64; n_cells];
+    let idx = |x: usize, y: usize| y * FABRIC_COLS + x;
+
+    let mut dist = vec![f64::INFINITY; n_cells];
+    let mut prev = vec![u32::MAX; n_cells];
+    let mut stamp = vec![0u32; n_cells];
+    let mut cur_stamp = 0u32;
+    let mut routes: Vec<Vec<usize>> = vec![Vec::new(); nl.nets.len()];
+
+    let mut iterations = 0usize;
+    let mut pres_fac = 0.5f64;
+    let mut wirelength = 0u64;
+    for iter in 1..=opts.max_route_iters {
+        iterations = iter;
+        for (ni, (s, sinks)) in nl.nets.iter().enumerate() {
+            // rip up
+            for &c in &routes[ni] {
+                occ[c] = occ[c].saturating_sub(1);
+            }
+            let a = pos[*s];
+            let b = pos[sinks[0]];
+            // A* from a to b over the 4-neighbor grid
+            cur_stamp += 1;
+            let st = cur_stamp;
+            let start = idx(a.0, a.1);
+            let goal = idx(b.0, b.1);
+            let h = |c: usize| -> f64 {
+                let (cx, cy) = (c % FABRIC_COLS, c / FABRIC_COLS);
+                (cx.abs_diff(b.0) + cy.abs_diff(b.1)) as f64
+            };
+            dist[start] = 0.0;
+            prev[start] = u32::MAX;
+            stamp[start] = st;
+            let mut heap = std::collections::BinaryHeap::new();
+            heap.push((std::cmp::Reverse(OrdF(h(start))), start as u32));
+            while let Some((_, node)) = heap.pop() {
+                let u = node as usize;
+                if u == goal {
+                    break;
+                }
+                let du = dist[u];
+                let (ux, uy) = (u % FABRIC_COLS, u / FABRIC_COLS);
+                let push = |v: usize, dist: &mut [f64], prev: &mut [u32],
+                                stamp: &mut [u32],
+                                heap: &mut std::collections::BinaryHeap<(std::cmp::Reverse<OrdF>, u32)>| {
+                    let over = (occ[v] + 1).saturating_sub(CHANNEL_CAP) as f64;
+                    let nd = du + 1.0 + hist[v] + pres_fac * over;
+                    if stamp[v] != st || nd < dist[v] {
+                        stamp[v] = st;
+                        dist[v] = nd;
+                        prev[v] = u as u32;
+                        heap.push((std::cmp::Reverse(OrdF(nd + h(v))), v as u32));
+                    }
+                };
+                if ux > 0 { push(u - 1, &mut dist, &mut prev, &mut stamp, &mut heap); }
+                if ux + 1 < FABRIC_COLS { push(u + 1, &mut dist, &mut prev, &mut stamp, &mut heap); }
+                if uy > 0 { push(u - FABRIC_COLS, &mut dist, &mut prev, &mut stamp, &mut heap); }
+                if uy + 1 < FABRIC_ROWS { push(u + FABRIC_COLS, &mut dist, &mut prev, &mut stamp, &mut heap); }
+            }
+            // backtrack (goal always reachable on a grid)
+            let mut path = vec![goal];
+            let mut cur = goal;
+            while prev[cur] != u32::MAX && cur != start {
+                cur = prev[cur] as usize;
+                path.push(cur);
+            }
+            for &c in &path {
+                occ[c] += 1;
+            }
+            routes[ni] = path;
+        }
+
+        wirelength = routes.iter().map(|r| r.len() as u64).sum();
+        let mut overused = 0usize;
+        for c in 0..n_cells {
+            if occ[c] > CHANNEL_CAP {
+                overused += 1;
+                hist[c] += (occ[c] - CHANNEL_CAP) as f64;
+            }
+        }
+        if overused == 0 {
+            break;
+        }
+        pres_fac *= 1.7;
+    }
+    let route_time = t1.elapsed();
+
+    // ---- timing model ----
+    // stage delay = slowest cell + routing term from achieved wirelength
+    let max_cell_delay = nl
+        .cell_delay_ns
+        .iter()
+        .cloned()
+        .fold(0.0f64, f64::max);
+    let avg_net_len = wirelength as f64 / nl.nets.len().max(1) as f64;
+    // 0.045 ns per routed channel cell, plus congestion-pressure term
+    let crit_ns = max_cell_delay + 0.6 + 0.045 * avg_net_len
+        + 0.05 * (iterations as f64 - 1.0);
+    let fmax_mhz = 1000.0 / crit_ns;
+
+    Ok(FpgaParResult {
+        par_time: t0.elapsed(),
+        place_time,
+        route_time,
+        fmax_mhz,
+        slices: nl.num_slices(),
+        dsps: nl.num_dsps(),
+        route_iterations: iterations,
+        total_wirelength: wirelength,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::ir::{lower_kernel, optimize};
+    use crate::replicate::replicate_dfg;
+
+    fn dfg_of(src: &str) -> Dfg {
+        let f = lower_kernel(&parse_kernel(src).unwrap()).unwrap();
+        crate::dfg::extract_dfg(&optimize(&f).0).unwrap()
+    }
+
+    #[test]
+    fn chebyshev_techmap_matches_table3_resources() {
+        // Table III direct FPGA: chebyshev(16) = 48 DSP, 251 slices.
+        // Vivado reaches 3 DSP/copy by re-associating x^4 = (x^2)^2;
+        // our structural mapping keeps the source's 4 generic muls
+        // (16*x stays a free shift). Same order, documented in
+        // DESIGN.md; the Table III bench reports both values.
+        let dfg = dfg_of(crate::bench_kernels::CHEBYSHEV);
+        let one = techmap(&dfg).unwrap();
+        assert_eq!(one.num_dsps(), 4);
+        let sixteen = techmap(&replicate_dfg(&dfg, 16)).unwrap();
+        assert_eq!(sixteen.num_dsps(), 64);
+        // slice count lands in Table III's ballpark (251)
+        let s = sixteen.num_slices();
+        assert!((120..400).contains(&s), "slices {s}");
+    }
+
+    #[test]
+    fn pow2_const_mul_is_free() {
+        let d1 = dfg_of(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] * 16;
+             }",
+        );
+        assert_eq!(techmap(&d1).unwrap().num_dsps(), 0);
+        let d2 = dfg_of(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] * 17;
+             }",
+        );
+        assert_eq!(techmap(&d2).unwrap().num_dsps(), 1);
+    }
+
+    #[test]
+    fn fine_par_completes_and_times_single_copy() {
+        let dfg = dfg_of(crate::bench_kernels::CHEBYSHEV);
+        let nl = techmap(&dfg).unwrap();
+        let r = par(&nl, &FpgaParOptions { effort: 0.05, ..Default::default() }).unwrap();
+        assert!(r.par_time > Duration::ZERO);
+        assert!(r.fmax_mhz > 100.0 && r.fmax_mhz < 400.0, "{}", r.fmax_mhz);
+        assert!(r.route_iterations >= 1);
+        assert!(r.total_wirelength > 0);
+    }
+
+    #[test]
+    fn fine_par_is_deterministic() {
+        let dfg = dfg_of(crate::bench_kernels::CHEBYSHEV);
+        let nl = techmap(&dfg).unwrap();
+        let o = FpgaParOptions { effort: 0.02, ..Default::default() };
+        let a = par(&nl, &o).unwrap();
+        let b = par(&nl, &o).unwrap();
+        assert_eq!(a.total_wirelength, b.total_wirelength);
+        assert_eq!(a.fmax_mhz, b.fmax_mhz);
+    }
+
+    #[test]
+    fn replication_scales_problem_size() {
+        let dfg = dfg_of(crate::bench_kernels::CHEBYSHEV);
+        let one = techmap(&dfg).unwrap();
+        let eight = techmap(&replicate_dfg(&dfg, 8)).unwrap();
+        assert_eq!(eight.cells.len(), 8 * one.cells.len());
+        assert_eq!(eight.nets.len(), 8 * one.nets.len());
+    }
+
+    #[test]
+    fn fmax_model_lands_in_published_band() {
+        // Table III reports 165–230 MHz for the direct implementations
+        // (4 copies keep the test fast; the bench runs the full 16)
+        let dfg = dfg_of(crate::bench_kernels::CHEBYSHEV);
+        let nl = techmap(&replicate_dfg(&dfg, 4)).unwrap();
+        let r = par(&nl, &FpgaParOptions { effort: 0.1, ..Default::default() }).unwrap();
+        assert!(
+            (140.0..280.0).contains(&r.fmax_mhz),
+            "fmax {} outside plausible band",
+            r.fmax_mhz
+        );
+    }
+}

@@ -1,0 +1,98 @@
+//! Abstract syntax tree for the OpenCL-C subset.
+
+/// Scalar element types supported by the 16/32-bit overlay datapath.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Type {
+    Int,
+    Float,
+    Short,
+}
+
+impl Type {
+    pub fn is_float(self) -> bool {
+        matches!(self, Type::Float)
+    }
+}
+
+/// How a kernel parameter is passed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamKind {
+    /// `__global T *name` — a buffer in global memory.
+    GlobalPtr,
+    /// `const T name` — a scalar broadcast to all work-items.
+    Scalar,
+}
+
+/// One kernel parameter.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+    pub kind: ParamKind,
+    /// `const`-qualified (read-only buffer).
+    pub is_const: bool,
+}
+
+/// Binary operators representable on the overlay FU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Shl,
+    Shr,
+}
+
+impl BinOp {
+    pub fn symbol(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Shl => "<<",
+            BinOp::Shr => ">>",
+        }
+    }
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f64),
+    Var(String),
+    /// `buf[index]`
+    Index(String, Box<Expr>),
+    Binary(BinOp, Box<Expr>, Box<Expr>),
+    /// Unary minus.
+    Neg(Box<Expr>),
+    /// Builtin call: `get_global_id(0)`, `min(a,b)`, `max(a,b)`,
+    /// `mad(a,b,c)`.
+    Call(String, Vec<Expr>),
+}
+
+/// Statements (straight-line only).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stmt {
+    /// `int x = expr;`
+    Decl { ty: Type, name: String, init: Expr },
+    /// `x = expr;`
+    AssignVar { name: String, expr: Expr },
+    /// `B[idx] = expr;`
+    AssignIndex { array: String, index: Expr, expr: Expr },
+}
+
+/// A parsed `__kernel` function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+}
+
+impl Kernel {
+    /// Parameter lookup by name.
+    pub fn param(&self, name: &str) -> Option<&Param> {
+        self.params.iter().find(|p| p.name == name)
+    }
+}

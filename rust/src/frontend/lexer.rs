@@ -1,0 +1,169 @@
+//! Hand-written lexer for the OpenCL-C subset.
+
+use anyhow::{bail, Result};
+
+use super::token::{Token, TokenKind};
+
+/// Tokenize `source`. `//` and `/* */` comments are skipped.
+pub fn lex(source: &str) -> Result<Vec<Token>> {
+    let b: Vec<char> = source.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    macro_rules! push {
+        ($kind:expr) => {
+            toks.push(Token { kind: $kind, line })
+        };
+    }
+
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            ' ' | '\t' | '\r' => i += 1,
+            '/' if i + 1 < b.len() && b[i + 1] == '/' => {
+                while i < b.len() && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < b.len() && b[i + 1] == '*' => {
+                i += 2;
+                while i + 1 < b.len() && !(b[i] == '*' && b[i + 1] == '/') {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                if i + 1 >= b.len() {
+                    bail!("line {line}: unterminated block comment");
+                }
+                i += 2;
+            }
+            '(' => { push!(TokenKind::LParen); i += 1; }
+            ')' => { push!(TokenKind::RParen); i += 1; }
+            '{' => { push!(TokenKind::LBrace); i += 1; }
+            '}' => { push!(TokenKind::RBrace); i += 1; }
+            '[' => { push!(TokenKind::LBracket); i += 1; }
+            ']' => { push!(TokenKind::RBracket); i += 1; }
+            ',' => { push!(TokenKind::Comma); i += 1; }
+            ';' => { push!(TokenKind::Semi); i += 1; }
+            '*' => { push!(TokenKind::Star); i += 1; }
+            '+' => { push!(TokenKind::Plus); i += 1; }
+            '-' => { push!(TokenKind::Minus); i += 1; }
+            '/' => { push!(TokenKind::Slash); i += 1; }
+            '%' => { push!(TokenKind::Percent); i += 1; }
+            '=' => { push!(TokenKind::Assign); i += 1; }
+            '<' if i + 1 < b.len() && b[i + 1] == '<' => {
+                push!(TokenKind::Shl);
+                i += 2;
+            }
+            '>' if i + 1 < b.len() && b[i + 1] == '>' => {
+                push!(TokenKind::Shr);
+                i += 2;
+            }
+            '0'..='9' => {
+                let start = i;
+                let mut is_float = false;
+                while i < b.len() && (b[i].is_ascii_digit() || b[i] == '.') {
+                    if b[i] == '.' {
+                        is_float = true;
+                    }
+                    i += 1;
+                }
+                // trailing float suffix 'f'
+                if i < b.len() && (b[i] == 'f' || b[i] == 'F') && is_float {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                let text = text.trim_end_matches(['f', 'F']);
+                if is_float {
+                    push!(TokenKind::FloatLit(text.parse::<f64>().map_err(
+                        |e| anyhow::anyhow!("line {line}: bad float '{text}': {e}")
+                    )?));
+                } else {
+                    push!(TokenKind::IntLit(text.parse::<i64>().map_err(
+                        |e| anyhow::anyhow!("line {line}: bad int '{text}': {e}")
+                    )?));
+                }
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let word: String = b[start..i].iter().collect();
+                let kind = match word.as_str() {
+                    "__kernel" | "kernel" => TokenKind::KwKernel,
+                    "__global" | "global" => TokenKind::KwGlobal,
+                    "const" => TokenKind::KwConst,
+                    "void" => TokenKind::KwVoid,
+                    "int" => TokenKind::KwInt,
+                    "float" => TokenKind::KwFloat,
+                    "short" => TokenKind::KwShort,
+                    _ => TokenKind::Ident(word),
+                };
+                push!(kind);
+            }
+            other => bail!("line {line}: unexpected character '{other}'"),
+        }
+    }
+    toks.push(Token { kind: TokenKind::Eof, line });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use TokenKind::*;
+
+    fn kinds(src: &str) -> Vec<TokenKind> {
+        lex(src).unwrap().into_iter().map(|t| t.kind).collect()
+    }
+
+    #[test]
+    fn lexes_paper_example_header() {
+        let k = kinds("__kernel void example_kernel(__global int *A)");
+        assert_eq!(
+            k,
+            vec![
+                KwKernel, KwVoid, Ident("example_kernel".into()), LParen,
+                KwGlobal, KwInt, Star, Ident("A".into()), RParen, Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_numbers_and_ops() {
+        let k = kinds("x = 16*x - 20 + 2.5f;");
+        assert!(matches!(k[2], IntLit(16)));
+        assert!(matches!(k[8], FloatLit(v) if (v - 2.5).abs() < 1e-9));
+        assert!(k.contains(&Star) && k.contains(&Minus) && k.contains(&Plus));
+    }
+
+    #[test]
+    fn skips_comments_and_counts_lines() {
+        let toks = lex("// c1\n/* multi\nline */ int x").unwrap();
+        assert_eq!(toks[0].kind, KwInt);
+        assert_eq!(toks[0].line, 3);
+    }
+
+    #[test]
+    fn lexes_shifts() {
+        assert_eq!(kinds("a << 2 >> 1")[1], Shl);
+        assert_eq!(kinds("a << 2 >> 1")[3], Shr);
+    }
+
+    #[test]
+    fn rejects_bad_char() {
+        assert!(lex("int x = @;").is_err());
+    }
+
+    #[test]
+    fn rejects_unterminated_comment() {
+        assert!(lex("/* never ends").is_err());
+    }
+}

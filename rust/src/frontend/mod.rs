@@ -1,0 +1,35 @@
+//! OpenCL-C subset front-end — the Clang stand-in.
+//!
+//! The paper feeds OpenCL kernels through Clang to LLVM IR (Table I).
+//! This module implements the subset those kernels use: straight-line
+//! `__kernel` functions over `__global` buffers with integer/float
+//! arithmetic, `get_global_id`, and the `min`/`max`/`mad` builtins.
+//! Control flow (branches/loops) is out of scope for a spatially
+//! configured II=1 overlay and is rejected at parse time with a
+//! diagnostic, as are operations the DSP-block FU cannot implement
+//! (division, modulo).
+//!
+//! Pipeline: [`lex`] → [`parse`] → [`check`] (semantic analysis) → an
+//! [`ast::Kernel`] consumed by [`crate::ir::lower_kernel`].
+
+mod ast;
+mod lexer;
+mod parser;
+mod sema;
+mod token;
+
+pub use ast::{BinOp, Expr, Kernel, Param, ParamKind, Stmt, Type};
+pub use lexer::lex;
+pub use parser::parse;
+pub use sema::check;
+pub use token::{Token, TokenKind};
+
+use anyhow::Result;
+
+/// Convenience: lex + parse + semantic-check a kernel source.
+pub fn parse_kernel(source: &str) -> Result<Kernel> {
+    let tokens = lex(source)?;
+    let kernel = parse(&tokens)?;
+    check(&kernel)?;
+    Ok(kernel)
+}

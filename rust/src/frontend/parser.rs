@@ -1,0 +1,369 @@
+//! Recursive-descent parser for the OpenCL-C subset.
+//!
+//! Grammar (straight-line kernels only):
+//! ```text
+//! kernel   := '__kernel' 'void' IDENT '(' params ')' '{' stmt* '}'
+//! params   := param (',' param)*
+//! param    := '__global'? 'const'? type '*'? IDENT
+//! stmt     := type IDENT '=' expr ';'
+//!           | IDENT '=' expr ';'
+//!           | IDENT '[' expr ']' '=' expr ';'
+//! expr     := term (('+'|'-') term)*
+//! term     := shift (('*'|'/'|'%') shift)*     -- '/', '%' rejected later
+//! shift    := unary (('<<'|'>>') unary)*
+//! unary    := '-' unary | primary
+//! primary  := INT | FLOAT | IDENT | IDENT '(' args ')'
+//!           | IDENT '[' expr ']' | '(' expr ')'
+//! ```
+//! Precedence note: in C, shifts bind *looser* than '+'; the kernels in
+//! scope never mix them without parentheses, and `sema` warns if the
+//! looser binding could matter. We bind shifts tightest to keep the
+//! parser simple; parenthesised sources are unaffected.
+
+use anyhow::{bail, Result};
+
+use super::ast::*;
+use super::token::{Token, TokenKind};
+
+struct Parser<'a> {
+    toks: &'a [Token],
+    pos: usize,
+}
+
+/// Parse a token stream into a [`Kernel`].
+pub fn parse(toks: &[Token]) -> Result<Kernel> {
+    let mut p = Parser { toks, pos: 0 };
+    let k = p.kernel()?;
+    p.expect(&TokenKind::Eof)?;
+    Ok(k)
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> &TokenKind {
+        &self.toks[self.pos].kind
+    }
+
+    fn line(&self) -> u32 {
+        self.toks[self.pos].line
+    }
+
+    fn bump(&mut self) -> TokenKind {
+        let k = self.toks[self.pos].kind.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        k
+    }
+
+    fn eat(&mut self, kind: &TokenKind) -> bool {
+        if self.peek() == kind {
+            self.bump();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, kind: &TokenKind) -> Result<()> {
+        if self.peek() == kind {
+            self.bump();
+            Ok(())
+        } else {
+            bail!("line {}: expected '{}', found '{}'", self.line(), kind, self.peek())
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.bump() {
+            TokenKind::Ident(s) => Ok(s),
+            other => bail!("line {}: expected identifier, found '{}'", self.line(), other),
+        }
+    }
+
+    fn ty(&mut self) -> Result<Type> {
+        match self.bump() {
+            TokenKind::KwInt => Ok(Type::Int),
+            TokenKind::KwFloat => Ok(Type::Float),
+            TokenKind::KwShort => Ok(Type::Short),
+            other => bail!("line {}: expected type, found '{}'", self.line(), other),
+        }
+    }
+
+    fn kernel(&mut self) -> Result<Kernel> {
+        self.expect(&TokenKind::KwKernel)?;
+        self.expect(&TokenKind::KwVoid)?;
+        let name = self.ident()?;
+        self.expect(&TokenKind::LParen)?;
+        let mut params = Vec::new();
+        if self.peek() != &TokenKind::RParen {
+            loop {
+                params.push(self.param()?);
+                if !self.eat(&TokenKind::Comma) {
+                    break;
+                }
+            }
+        }
+        self.expect(&TokenKind::RParen)?;
+        self.expect(&TokenKind::LBrace)?;
+        let mut body = Vec::new();
+        while self.peek() != &TokenKind::RBrace {
+            body.push(self.stmt()?);
+        }
+        self.expect(&TokenKind::RBrace)?;
+        Ok(Kernel { name, params, body })
+    }
+
+    fn param(&mut self) -> Result<Param> {
+        let is_global = self.eat(&TokenKind::KwGlobal);
+        let mut is_const = self.eat(&TokenKind::KwConst);
+        let ty = self.ty()?;
+        // `__global const` may also appear as `const __global`; accept a
+        // trailing const before the star as well.
+        is_const |= self.eat(&TokenKind::KwConst);
+        let is_ptr = self.eat(&TokenKind::Star);
+        let name = self.ident()?;
+        if is_global && !is_ptr {
+            bail!("line {}: __global parameter '{}' must be a pointer", self.line(), name);
+        }
+        if is_ptr && !is_global {
+            bail!(
+                "line {}: pointer parameter '{}' must be __global (local/private \
+                 memory is not supported by the overlay)",
+                self.line(),
+                name
+            );
+        }
+        Ok(Param {
+            name,
+            ty,
+            kind: if is_ptr { ParamKind::GlobalPtr } else { ParamKind::Scalar },
+            is_const,
+        })
+    }
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        match self.peek().clone() {
+            TokenKind::KwInt | TokenKind::KwFloat | TokenKind::KwShort => {
+                let ty = self.ty()?;
+                let name = self.ident()?;
+                self.expect(&TokenKind::Assign)?;
+                let init = self.expr()?;
+                self.expect(&TokenKind::Semi)?;
+                Ok(Stmt::Decl { ty, name, init })
+            }
+            TokenKind::Ident(name) => {
+                self.bump();
+                if self.eat(&TokenKind::LBracket) {
+                    let index = self.expr()?;
+                    self.expect(&TokenKind::RBracket)?;
+                    self.expect(&TokenKind::Assign)?;
+                    let expr = self.expr()?;
+                    self.expect(&TokenKind::Semi)?;
+                    Ok(Stmt::AssignIndex { array: name, index, expr })
+                } else {
+                    self.expect(&TokenKind::Assign)?;
+                    let expr = self.expr()?;
+                    self.expect(&TokenKind::Semi)?;
+                    Ok(Stmt::AssignVar { name, expr })
+                }
+            }
+            other => bail!("line {}: expected statement, found '{}'", self.line(), other),
+        }
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.term()?;
+        loop {
+            let op = match self.peek() {
+                TokenKind::Plus => BinOp::Add,
+                TokenKind::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.term()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn term(&mut self) -> Result<Expr> {
+        let mut lhs = self.shift()?;
+        loop {
+            match self.peek() {
+                TokenKind::Star => {
+                    self.bump();
+                    let rhs = self.shift()?;
+                    lhs = Expr::Binary(BinOp::Mul, Box::new(lhs), Box::new(rhs));
+                }
+                TokenKind::Slash | TokenKind::Percent => {
+                    bail!(
+                        "line {}: '/' and '%' are not supported: the DSP-block FU \
+                         has no divider (pre-scale on the host or use shifts)",
+                        self.line()
+                    );
+                }
+                _ => break,
+            }
+        }
+        Ok(lhs)
+    }
+
+    fn shift(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary()?;
+        loop {
+            let op = match self.peek() {
+                TokenKind::Shl => BinOp::Shl,
+                TokenKind::Shr => BinOp::Shr,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.unary()?;
+            lhs = Expr::Binary(op, Box::new(lhs), Box::new(rhs));
+        }
+        Ok(lhs)
+    }
+
+    fn unary(&mut self) -> Result<Expr> {
+        if self.eat(&TokenKind::Minus) {
+            Ok(Expr::Neg(Box::new(self.unary()?)))
+        } else {
+            self.primary()
+        }
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        let line = self.line();
+        match self.bump() {
+            TokenKind::IntLit(v) => Ok(Expr::IntLit(v)),
+            TokenKind::FloatLit(v) => Ok(Expr::FloatLit(v)),
+            TokenKind::LParen => {
+                let e = self.expr()?;
+                self.expect(&TokenKind::RParen)?;
+                Ok(e)
+            }
+            TokenKind::Ident(name) => {
+                if self.eat(&TokenKind::LParen) {
+                    let mut args = Vec::new();
+                    if self.peek() != &TokenKind::RParen {
+                        loop {
+                            args.push(self.expr()?);
+                            if !self.eat(&TokenKind::Comma) {
+                                break;
+                            }
+                        }
+                    }
+                    self.expect(&TokenKind::RParen)?;
+                    Ok(Expr::Call(name, args))
+                } else if self.eat(&TokenKind::LBracket) {
+                    let idx = self.expr()?;
+                    self.expect(&TokenKind::RBracket)?;
+                    Ok(Expr::Index(name, Box::new(idx)))
+                } else {
+                    Ok(Expr::Var(name))
+                }
+            }
+            other => bail!("line {line}: expected expression, found '{other}'"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::lexer::lex;
+
+    const PAPER_KERNEL: &str = r#"
+        __kernel void example_kernel(__global int *A, __global int *B)
+        {
+            int idx = get_global_id(0);
+            int x = A[idx];
+            B[idx] = (x*(x*(16*x*x-20)*x+5));
+        }
+    "#;
+
+    fn parse_src(src: &str) -> Result<Kernel> {
+        parse(&lex(src)?)
+    }
+
+    #[test]
+    fn parses_paper_example() {
+        let k = parse_src(PAPER_KERNEL).unwrap();
+        assert_eq!(k.name, "example_kernel");
+        assert_eq!(k.params.len(), 2);
+        assert_eq!(k.params[0].kind, ParamKind::GlobalPtr);
+        assert_eq!(k.body.len(), 3);
+        match &k.body[2] {
+            Stmt::AssignIndex { array, .. } => assert_eq!(array, "B"),
+            other => panic!("expected store, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn mul_binds_tighter_than_add() {
+        let k = parse_src(
+            "__kernel void f(__global int *A) { A[get_global_id(0)] = 1 + 2 * 3; }",
+        )
+        .unwrap();
+        match &k.body[0] {
+            Stmt::AssignIndex { expr, .. } => match expr {
+                Expr::Binary(BinOp::Add, l, r) => {
+                    assert!(matches!(**l, Expr::IntLit(1)));
+                    assert!(matches!(**r, Expr::Binary(BinOp::Mul, _, _)));
+                }
+                other => panic!("bad tree: {other:?}"),
+            },
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn rejects_division() {
+        let err = parse_src("__kernel void f(__global int *A) { A[0] = 4 / 2; }")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("divider"), "{err}");
+    }
+
+    #[test]
+    fn parses_scalar_and_const_params() {
+        let k = parse_src(
+            "__kernel void f(__global const int *A, const int n, __global int *B) \
+             { B[0] = A[0] + n; }",
+        )
+        .unwrap();
+        assert!(k.params[0].is_const);
+        assert_eq!(k.params[1].kind, ParamKind::Scalar);
+    }
+
+    #[test]
+    fn rejects_private_pointer() {
+        assert!(parse_src("__kernel void f(int *A) { A[0] = 1; }").is_err());
+    }
+
+    #[test]
+    fn parses_unary_minus_and_shift() {
+        let k = parse_src(
+            "__kernel void f(__global int *A) { A[0] = -A[1] + (A[2] << 2); }",
+        )
+        .unwrap();
+        assert_eq!(k.body.len(), 1);
+    }
+
+    #[test]
+    fn parses_builtin_min_max_mad() {
+        let k = parse_src(
+            "__kernel void f(__global int *A, __global int *B) \
+             { B[0] = min(A[0], max(A[1], mad(A[2], A[3], A[4]))); }",
+        )
+        .unwrap();
+        assert_eq!(k.body.len(), 1);
+    }
+
+    #[test]
+    fn error_mentions_line_number() {
+        let err = parse_src("__kernel void f(__global int *A)\n{\n  A[0] = ;\n}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 3"), "{err}");
+    }
+}

@@ -1,0 +1,298 @@
+//! Semantic analysis for parsed kernels.
+//!
+//! Checks (each with a targeted diagnostic):
+//! * every variable is declared before use, no redeclaration;
+//! * buffers are indexed, scalars are not; no writes to `const` or
+//!   scalar parameters;
+//! * builtin calls have the right arity (`get_global_id(0)` only —
+//!   the overlay maps one replicated datapath per work-item, so only
+//!   dimension 0 is meaningful);
+//! * at least one global store (a kernel with no observable effect
+//!   cannot be mapped to a dataflow overlay);
+//! * type consistency: float and int values may not mix without an
+//!   explicit host-side decision (the overlay datapath is monomorphic).
+
+use std::collections::{HashMap, HashSet};
+
+use anyhow::{bail, Result};
+
+use super::ast::*;
+
+/// Validate `kernel`; returns `Ok(())` or the first diagnostic.
+pub fn check(kernel: &Kernel) -> Result<()> {
+    let mut seen = HashSet::new();
+    for p in &kernel.params {
+        if !seen.insert(p.name.clone()) {
+            bail!("kernel {}: duplicate parameter '{}'", kernel.name, p.name);
+        }
+    }
+
+    let mut env: HashMap<String, Type> = HashMap::new();
+    let mut stores = 0usize;
+
+    for (i, stmt) in kernel.body.iter().enumerate() {
+        match stmt {
+            Stmt::Decl { ty, name, init } => {
+                if env.contains_key(name) || kernel.param(name).is_some() {
+                    bail!("kernel {}: redeclaration of '{}'", kernel.name, name);
+                }
+                let ety = expr_type(kernel, &env, init)?;
+                check_assignable(kernel, *ty, ety, name)?;
+                env.insert(name.clone(), *ty);
+            }
+            Stmt::AssignVar { name, expr } => {
+                let Some(&ty) = env.get(name) else {
+                    bail!(
+                        "kernel {}: assignment to undeclared variable '{}' (statement {})",
+                        kernel.name, name, i + 1
+                    );
+                };
+                let ety = expr_type(kernel, &env, expr)?;
+                check_assignable(kernel, ty, ety, name)?;
+            }
+            Stmt::AssignIndex { array, index, expr } => {
+                let Some(p) = kernel.param(array) else {
+                    bail!("kernel {}: store to unknown buffer '{}'", kernel.name, array);
+                };
+                if p.kind != ParamKind::GlobalPtr {
+                    bail!("kernel {}: '{}' is not a buffer", kernel.name, array);
+                }
+                if p.is_const {
+                    bail!("kernel {}: store to const buffer '{}'", kernel.name, array);
+                }
+                let ity = expr_type(kernel, &env, index)?;
+                if ity.is_float() {
+                    bail!("kernel {}: buffer index must be an integer", kernel.name);
+                }
+                let ety = expr_type(kernel, &env, expr)?;
+                check_assignable(kernel, p.ty, ety, array)?;
+                stores += 1;
+            }
+        }
+    }
+
+    if stores == 0 {
+        bail!(
+            "kernel {}: no global store — a kernel with no observable output \
+             cannot be mapped to the overlay",
+            kernel.name
+        );
+    }
+    Ok(())
+}
+
+fn check_assignable(kernel: &Kernel, dst: Type, src: Type, what: &str) -> Result<()> {
+    // short/int interconvert freely on the 32-bit emulated datapath;
+    // float may not mix with integer.
+    if dst.is_float() != src.is_float() {
+        bail!(
+            "kernel {}: type mismatch assigning {:?} value to {:?} '{}'",
+            kernel.name, src, dst, what
+        );
+    }
+    Ok(())
+}
+
+fn expr_type(kernel: &Kernel, env: &HashMap<String, Type>, e: &Expr) -> Result<Type> {
+    match e {
+        Expr::IntLit(_) => Ok(Type::Int),
+        Expr::FloatLit(_) => Ok(Type::Float),
+        Expr::Var(name) => {
+            if let Some(&t) = env.get(name) {
+                Ok(t)
+            } else if let Some(p) = kernel.param(name) {
+                if p.kind == ParamKind::GlobalPtr {
+                    bail!(
+                        "kernel {}: buffer '{}' used without an index",
+                        kernel.name, name
+                    );
+                }
+                Ok(p.ty)
+            } else {
+                bail!("kernel {}: use of undeclared variable '{}'", kernel.name, name)
+            }
+        }
+        Expr::Index(name, idx) => {
+            let Some(p) = kernel.param(name) else {
+                bail!("kernel {}: load from unknown buffer '{}'", kernel.name, name);
+            };
+            if p.kind != ParamKind::GlobalPtr {
+                bail!("kernel {}: '{}' is not a buffer", kernel.name, name);
+            }
+            let ity = expr_type(kernel, env, idx)?;
+            if ity.is_float() {
+                bail!("kernel {}: buffer index must be an integer", kernel.name);
+            }
+            Ok(p.ty)
+        }
+        Expr::Neg(inner) => expr_type(kernel, env, inner),
+        Expr::Binary(op, l, r) => {
+            let lt = expr_type(kernel, env, l)?;
+            let rt = expr_type(kernel, env, r)?;
+            if matches!(op, BinOp::Shl | BinOp::Shr) && lt.is_float() {
+                bail!("kernel {}: shift of a float value", kernel.name);
+            }
+            if lt.is_float() != rt.is_float() {
+                bail!(
+                    "kernel {}: mixed float/int operands to '{}'",
+                    kernel.name,
+                    op.symbol()
+                );
+            }
+            Ok(lt)
+        }
+        Expr::Call(name, args) => match name.as_str() {
+            "get_global_id" => {
+                if args.len() != 1 {
+                    bail!("kernel {}: get_global_id takes 1 argument", kernel.name);
+                }
+                match &args[0] {
+                    Expr::IntLit(0) => Ok(Type::Int),
+                    Expr::IntLit(d) => bail!(
+                        "kernel {}: get_global_id({d}) — only dimension 0 is \
+                         supported (one replicated datapath per work-item)",
+                        kernel.name
+                    ),
+                    _ => bail!(
+                        "kernel {}: get_global_id argument must be a literal",
+                        kernel.name
+                    ),
+                }
+            }
+            "min" | "max" => {
+                if args.len() != 2 {
+                    bail!("kernel {}: {name} takes 2 arguments", kernel.name);
+                }
+                let lt = expr_type(kernel, env, &args[0])?;
+                let rt = expr_type(kernel, env, &args[1])?;
+                if lt.is_float() != rt.is_float() {
+                    bail!("kernel {}: mixed operand types in {name}", kernel.name);
+                }
+                Ok(lt)
+            }
+            "mad" => {
+                if args.len() != 3 {
+                    bail!("kernel {}: mad takes 3 arguments", kernel.name);
+                }
+                let t0 = expr_type(kernel, env, &args[0])?;
+                for a in &args[1..] {
+                    let t = expr_type(kernel, env, a)?;
+                    if t.is_float() != t0.is_float() {
+                        bail!("kernel {}: mixed operand types in mad", kernel.name);
+                    }
+                }
+                Ok(t0)
+            }
+            other => bail!(
+                "kernel {}: unknown builtin '{}' (supported: get_global_id, \
+                 min, max, mad)",
+                kernel.name, other
+            ),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::{lex, parse};
+
+    fn check_src(src: &str) -> Result<()> {
+        check(&parse(&lex(src)?)?)
+    }
+
+    #[test]
+    fn accepts_paper_example() {
+        check_src(
+            "__kernel void k(__global int *A, __global int *B) {
+                int idx = get_global_id(0);
+                int x = A[idx];
+                B[idx] = (x*(x*(16*x*x-20)*x+5));
+             }",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn rejects_undeclared_variable() {
+        let e = check_src("__kernel void k(__global int *B) { B[0] = y; }")
+            .unwrap_err().to_string();
+        assert!(e.contains("undeclared"), "{e}");
+    }
+
+    #[test]
+    fn rejects_store_to_const_buffer() {
+        let e = check_src(
+            "__kernel void k(__global const int *A) { A[0] = 1; }",
+        )
+        .unwrap_err().to_string();
+        assert!(e.contains("const"), "{e}");
+    }
+
+    #[test]
+    fn rejects_kernel_without_store() {
+        let e = check_src(
+            "__kernel void k(__global int *A) { int x = A[0]; }",
+        )
+        .unwrap_err().to_string();
+        assert!(e.contains("no global store"), "{e}");
+    }
+
+    #[test]
+    fn rejects_gid_dim1() {
+        let e = check_src(
+            "__kernel void k(__global int *B) { B[get_global_id(1)] = 1; }",
+        )
+        .unwrap_err().to_string();
+        assert!(e.contains("dimension 0"), "{e}");
+    }
+
+    #[test]
+    fn rejects_mixed_types() {
+        let e = check_src(
+            "__kernel void k(__global int *A, __global float *F, __global int *B) {
+                B[0] = A[0] + F[0];
+             }",
+        )
+        .unwrap_err().to_string();
+        assert!(e.contains("mixed"), "{e}");
+    }
+
+    #[test]
+    fn rejects_buffer_without_index() {
+        let e = check_src("__kernel void k(__global int *A, __global int *B) { B[0] = A; }")
+            .unwrap_err().to_string();
+        assert!(e.contains("without an index"), "{e}");
+    }
+
+    #[test]
+    fn rejects_redeclaration() {
+        let e = check_src(
+            "__kernel void k(__global int *B) { int x = 1; int x = 2; B[0] = x; }",
+        )
+        .unwrap_err().to_string();
+        assert!(e.contains("redeclaration"), "{e}");
+    }
+
+    #[test]
+    fn accepts_min_max_mad_and_scalar_params() {
+        check_src(
+            "__kernel void k(__global int *A, const int n, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = min(max(A[i], n), mad(A[i], n, 3));
+             }",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn rejects_float_shift() {
+        let e = check_src(
+            "__kernel void k(__global float *A, __global float *B) {
+                B[0] = A[0] << 2;
+             }",
+        )
+        .unwrap_err().to_string();
+        assert!(e.contains("shift of a float"), "{e}");
+    }
+}

@@ -1,0 +1,79 @@
+//! Token definitions for the OpenCL-C subset.
+
+/// A lexical token with its source line (1-based) for diagnostics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokenKind,
+    pub line: u32,
+}
+
+/// Token kinds. Keywords the subset recognises are split out of `Ident`
+/// by the lexer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokenKind {
+    // keywords / qualifiers
+    KwKernel,   // __kernel or kernel
+    KwGlobal,   // __global or global
+    KwConst,    // const
+    KwVoid,
+    KwInt,
+    KwFloat,
+    KwShort,
+    // literals & identifiers
+    Ident(String),
+    IntLit(i64),
+    FloatLit(f64),
+    // punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Semi,
+    Star,
+    Plus,
+    Minus,
+    Slash,
+    Percent,
+    Shl,
+    Shr,
+    Assign,
+    Eof,
+}
+
+impl std::fmt::Display for TokenKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        use TokenKind::*;
+        match self {
+            KwKernel => write!(f, "__kernel"),
+            KwGlobal => write!(f, "__global"),
+            KwConst => write!(f, "const"),
+            KwVoid => write!(f, "void"),
+            KwInt => write!(f, "int"),
+            KwFloat => write!(f, "float"),
+            KwShort => write!(f, "short"),
+            Ident(s) => write!(f, "{s}"),
+            IntLit(v) => write!(f, "{v}"),
+            FloatLit(v) => write!(f, "{v}"),
+            LParen => write!(f, "("),
+            RParen => write!(f, ")"),
+            LBrace => write!(f, "{{"),
+            RBrace => write!(f, "}}"),
+            LBracket => write!(f, "["),
+            RBracket => write!(f, "]"),
+            Comma => write!(f, ","),
+            Semi => write!(f, ";"),
+            Star => write!(f, "*"),
+            Plus => write!(f, "+"),
+            Minus => write!(f, "-"),
+            Slash => write!(f, "/"),
+            Percent => write!(f, "%"),
+            Shl => write!(f, "<<"),
+            Shr => write!(f, ">>"),
+            Assign => write!(f, "="),
+            Eof => write!(f, "<eof>"),
+        }
+    }
+}

@@ -1,0 +1,455 @@
+//! DFG → FU-aware DFG transform (paper §III-B, Fig. 3).
+//!
+//! Two stages, both driven by the DSP-block capabilities of the target
+//! overlay's functional units:
+//!
+//! 1. **Fusion** ([`fuse_muladd`]): a multiply whose single consumer is
+//!    an add/sub collapses into one `mul_add` / `mul_sub` node — the
+//!    DSP48's ALU cascade evaluates `a*b ± c` in a single block. This
+//!    turns the 7-node Fig. 3(a) into the 5-node Fig. 3(b).
+//! 2. **Clustering** ([`cluster`]): with two DSP blocks per FU, a
+//!    producer feeding its sole consumer can share the consumer's FU
+//!    (Fig. 3(d): {N4,N5} and {N3,N6}). The cluster graph is what
+//!    placement and routing operate on.
+//!
+//! The result is a [`FuGraph`]: the fused DFG plus the op→FU
+//! assignment. `FuGraph::nets()` derives the inter-FU nets for the
+//! VPR-style netlist.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::dfg::{Dfg, DfgOp, NodeId, NodeKind};
+
+/// One functional unit: 1 or 2 DFG op nodes executed on its DSP block(s),
+/// in dataflow order (ops[0] feeds ops[1] when len == 2).
+#[derive(Debug, Clone)]
+pub struct Fu {
+    pub id: usize,
+    pub ops: Vec<NodeId>,
+}
+
+impl Fu {
+    /// DSP blocks this FU consumes.
+    pub fn dsp_count(&self) -> usize {
+        self.ops.len()
+    }
+}
+
+/// The clustered, FU-aware graph handed to placement.
+#[derive(Debug, Clone)]
+pub struct FuGraph {
+    /// The fused DFG (post-[`fuse_muladd`]).
+    pub dfg: Dfg,
+    pub fus: Vec<Fu>,
+    /// op node → FU index.
+    pub fu_of: HashMap<NodeId, usize>,
+}
+
+/// A point-to-point net between placeable endpoints.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuNet {
+    pub src: NetEndpoint,
+    /// (sink endpoint, FU input pin) pairs.
+    pub sinks: Vec<(NetEndpoint, u8)>,
+}
+
+/// Net endpoints: FUs or I/O pads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum NetEndpoint {
+    Fu(usize),
+    InPad(usize),
+    OutPad(usize),
+}
+
+/// Stage 1: fuse mul→add / mul→sub pairs into DSP `mul_add`/`mul_sub`
+/// capabilities. Returns the rewritten DFG (Fig. 3(a) → Fig. 3(b)).
+pub fn fuse_muladd(g: &Dfg) -> Result<Dfg> {
+    let order = g.topo_order()?;
+    // mul -> consumer it fuses into; consumer -> mul it hosts
+    let mut fused_into: HashMap<NodeId, NodeId> = HashMap::new();
+    let mut host_of: HashMap<NodeId, NodeId> = HashMap::new();
+
+    for &id in &order {
+        let NodeKind::Op { op, .. } = &g.nodes[id].kind else { continue };
+        if !matches!(op, DfgOp::Add | DfgOp::Sub) {
+            continue;
+        }
+        for e in &g.preds(id) {
+            // subtraction only folds when the product is the minuend:
+            // DSP gives a*b - c, not c - a*b.
+            if *op == DfgOp::Sub && e.dst_port != 0 {
+                continue;
+            }
+            let src = e.src;
+            if fused_into.contains_key(&src) || host_of.contains_key(&id) {
+                continue;
+            }
+            let NodeKind::Op { op: DfgOp::Mul, .. } = &g.nodes[src].kind else {
+                continue;
+            };
+            if g.succs(src).len() != 1 {
+                continue; // product used elsewhere: must stay a full node
+            }
+            fused_into.insert(src, id);
+            host_of.insert(id, src);
+            break;
+        }
+    }
+
+    // rebuild
+    let mut out = Dfg::new(g.name.clone());
+    out.input_names = g.input_names.clone();
+    out.output_names = g.output_names.clone();
+    let mut remap: HashMap<NodeId, NodeId> = HashMap::new();
+
+    for &id in &order {
+        match &g.nodes[id].kind {
+            NodeKind::InVar { port } => {
+                remap.insert(id, out.add_node(NodeKind::InVar { port: *port }));
+            }
+            NodeKind::OutVar { port } => {
+                let nid = out.add_node(NodeKind::OutVar { port: *port });
+                for e in g.preds(id) {
+                    out.add_edge(remap[&e.src], nid, e.dst_port);
+                }
+                remap.insert(id, nid);
+            }
+            NodeKind::Op { op, imm } => {
+                if fused_into.contains_key(&id) {
+                    continue; // absorbed into its consumer
+                }
+                if let Some(&mul) = host_of.get(&id) {
+                    // fused node: ports 0,1 from the mul; port 2 = the
+                    // add/sub operand that wasn't the product.
+                    let NodeKind::Op { imm: mul_imm, .. } = &g.nodes[mul].kind else {
+                        unreachable!()
+                    };
+                    let fused_op =
+                        if *op == DfgOp::Add { DfgOp::MulAdd } else { DfgOp::MulSub };
+                    let mut new_imm = [mul_imm[0], mul_imm[1], None];
+                    let mul_port = g
+                        .preds(id)
+                        .iter()
+                        .find(|e| e.src == mul)
+                        .map(|e| e.dst_port)
+                        .unwrap();
+                    new_imm[2] = imm[1 - mul_port as usize];
+                    let nid = out.add_node(NodeKind::Op { op: fused_op, imm: new_imm });
+                    for e in g.preds(mul) {
+                        out.add_edge(remap[&e.src], nid, e.dst_port);
+                    }
+                    for e in g.preds(id) {
+                        if e.src != mul {
+                            out.add_edge(remap[&e.src], nid, 2);
+                        }
+                    }
+                    remap.insert(id, nid);
+                } else {
+                    let nid = out.add_node(NodeKind::Op { op: *op, imm: *imm });
+                    for e in g.preds(id) {
+                        out.add_edge(remap[&e.src], nid, e.dst_port);
+                    }
+                    remap.insert(id, nid);
+                }
+            }
+        }
+    }
+    out.validate()?;
+    Ok(out)
+}
+
+/// Maximum external data inputs of one FU (2-DSP FUs expose four
+/// operand ports through the tile's connection boxes [14]).
+pub const MAX_FU_INPUTS: usize = 4;
+
+/// Stage 2: cluster the fused DFG onto FUs with `dsps_per_fu` DSP
+/// blocks (Fig. 3(b) → Fig. 3(d) when `dsps_per_fu == 2`).
+pub fn cluster(dfg: &Dfg, dsps_per_fu: usize) -> Result<FuGraph> {
+    if !(1..=2).contains(&dsps_per_fu) {
+        bail!("dsps_per_fu must be 1 or 2 (got {dsps_per_fu})");
+    }
+    let order = dfg.topo_order()?;
+    let mut fus: Vec<Fu> = Vec::new();
+    let mut fu_of: HashMap<NodeId, usize> = HashMap::new();
+
+    for &id in &order {
+        if !matches!(dfg.nodes[id].kind, NodeKind::Op { .. }) {
+            continue;
+        }
+        if fu_of.contains_key(&id) {
+            continue;
+        }
+        let mut ops = vec![id];
+        if dsps_per_fu == 2 {
+            // chain this op with its sole consumer if legal
+            let succs = dfg.succs(id);
+            if succs.len() == 1 {
+                let next = succs[0].dst;
+                if matches!(dfg.nodes[next].kind, NodeKind::Op { .. })
+                    && !fu_of.contains_key(&next)
+                    && external_inputs(dfg, &[id, next]) <= MAX_FU_INPUTS
+                {
+                    ops.push(next);
+                }
+            }
+        }
+        let fu_id = fus.len();
+        for &op in &ops {
+            fu_of.insert(op, fu_id);
+        }
+        fus.push(Fu { id: fu_id, ops });
+    }
+
+    Ok(FuGraph { dfg: dfg.clone(), fus, fu_of })
+}
+
+/// Count external data edges into a prospective cluster — each needs
+/// its own physical FU input pin through the connection box.
+fn external_inputs(dfg: &Dfg, ops: &[NodeId]) -> usize {
+    let mut n = 0;
+    for &op in ops {
+        for e in dfg.preds(op) {
+            if !ops.contains(&e.src) {
+                n += 1;
+            }
+        }
+    }
+    n
+}
+
+impl FuGraph {
+    pub fn num_fus(&self) -> usize {
+        self.fus.len()
+    }
+
+    /// Total DSP blocks consumed.
+    pub fn dsp_count(&self) -> usize {
+        self.fus.iter().map(Fu::dsp_count).sum()
+    }
+
+    /// Derive the inter-FU / IO nets. Edges internal to one FU vanish
+    /// (they ride the intra-FU DSP cascade).
+    pub fn nets(&self) -> Vec<FuNet> {
+        let mut by_src: HashMap<NetEndpoint, Vec<(NetEndpoint, u8)>> = HashMap::new();
+        for e in &self.dfg.edges {
+            let src_ep = match &self.dfg.nodes[e.src].kind {
+                NodeKind::InVar { port } => NetEndpoint::InPad(*port),
+                NodeKind::Op { .. } => NetEndpoint::Fu(self.fu_of[&e.src]),
+                NodeKind::OutVar { .. } => unreachable!("edge out of outvar"),
+            };
+            let dst_ep = match &self.dfg.nodes[e.dst].kind {
+                NodeKind::OutVar { port } => NetEndpoint::OutPad(*port),
+                NodeKind::Op { .. } => NetEndpoint::Fu(self.fu_of[&e.dst]),
+                NodeKind::InVar { .. } => unreachable!("edge into invar"),
+            };
+            if src_ep == dst_ep {
+                continue; // intra-FU cascade
+            }
+            by_src.entry(src_ep).or_default().push((dst_ep, e.dst_port));
+        }
+        let mut nets: Vec<FuNet> = by_src
+            .into_iter()
+            .map(|(src, sinks)| FuNet { src, sinks })
+            .collect();
+        nets.sort_by_key(|n| match n.src {
+            NetEndpoint::InPad(p) => (0, p),
+            NetEndpoint::Fu(f) => (1, f),
+            NetEndpoint::OutPad(p) => (2, p),
+        });
+        nets
+    }
+}
+
+/// An external input edge of an FU: where it comes from and which op
+/// port it feeds. Order within one FU defines the physical pin index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FuInputEdge {
+    pub src: NetEndpoint,
+    pub op: NodeId,
+    pub port: u8,
+}
+
+impl FuGraph {
+    /// Deterministic external-input pin assignment for `fu`:
+    /// `result[pin] = (source endpoint, op node, op port)`.
+    pub fn input_pins(&self, fu: usize) -> Vec<FuInputEdge> {
+        let mut pins = Vec::new();
+        for &op in &self.fus[fu].ops {
+            for e in self.dfg.preds(op) {
+                if self.fus[fu].ops.contains(&e.src) {
+                    continue; // internal cascade
+                }
+                let src = match &self.dfg.nodes[e.src].kind {
+                    NodeKind::InVar { port } => NetEndpoint::InPad(*port),
+                    NodeKind::Op { .. } => NetEndpoint::Fu(self.fu_of[&e.src]),
+                    NodeKind::OutVar { .. } => unreachable!(),
+                };
+                pins.push(FuInputEdge { src, op, port: e.dst_port });
+            }
+        }
+        pins
+    }
+}
+
+/// Convenience: full FU-aware pipeline (fuse then cluster).
+pub fn to_fu_graph(dfg: &Dfg, dsps_per_fu: usize) -> Result<FuGraph> {
+    let fused = fuse_muladd(dfg)?;
+    cluster(&fused, dsps_per_fu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::ir::{lower_kernel, optimize};
+
+    const PAPER: &str = "__kernel void example_kernel(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    fn paper_dfg() -> Dfg {
+        let f = lower_kernel(&parse_kernel(PAPER).unwrap()).unwrap();
+        crate::dfg::extract_dfg(&optimize(&f).0).unwrap()
+    }
+
+    #[test]
+    fn fusion_reaches_fig3b_five_nodes() {
+        // Fig 3(a) has 7 op nodes; Fig 3(b) has 5 (two mul±imm pairs fused)
+        let fused = fuse_muladd(&paper_dfg()).unwrap();
+        assert_eq!(fused.num_ops(), 5);
+        let fma = fused
+            .nodes
+            .iter()
+            .filter(|n| {
+                matches!(
+                    n.kind,
+                    NodeKind::Op { op: DfgOp::MulAdd, .. }
+                        | NodeKind::Op { op: DfgOp::MulSub, .. }
+                )
+            })
+            .count();
+        assert_eq!(fma, 2);
+        fused.validate().unwrap();
+    }
+
+    #[test]
+    fn fused_nodes_carry_immediates_fig3b_labels() {
+        let fused = fuse_muladd(&paper_dfg()).unwrap();
+        let labels: Vec<String> =
+            fused.nodes.iter().map(|n| fused.label(n.id)).collect();
+        let has = |frag: &str| labels.iter().any(|l| l.contains(frag));
+        // Table II(b): mul_Imm_16, mul_sub_Imm_20, mul_add_Imm_5
+        assert!(has("mul_Imm_16"), "{labels:?}");
+        assert!(has("mul_sub_Imm_20"), "{labels:?}");
+        assert!(has("mul_add_Imm_5"), "{labels:?}");
+    }
+
+    #[test]
+    fn one_dsp_clustering_gives_5_fus() {
+        let g = to_fu_graph(&paper_dfg(), 1).unwrap();
+        assert_eq!(g.num_fus(), 5);
+        assert_eq!(g.dsp_count(), 5);
+    }
+
+    #[test]
+    fn two_dsp_clustering_gives_3_fus_fig3d() {
+        // Fig 3(d): {N4,N5}, {N3,N6}, {N2} — 3 FUs, 5 DSPs
+        let g = to_fu_graph(&paper_dfg(), 2).unwrap();
+        assert_eq!(g.num_fus(), 3);
+        assert_eq!(g.dsp_count(), 5);
+        let sizes: Vec<usize> = g.fus.iter().map(|f| f.ops.len()).collect();
+        assert_eq!(sizes.iter().filter(|&&s| s == 2).count(), 2);
+        assert_eq!(sizes.iter().filter(|&&s| s == 1).count(), 1);
+    }
+
+    #[test]
+    fn shared_product_is_not_fused() {
+        // t = a*b used by two adds: the mul must stay a separate node
+        let src = "__kernel void k(__global int *A, __global int *B, __global int *C) {
+            int i = get_global_id(0);
+            int t = A[i] * A[i];
+            B[i] = t + 1;
+            C[i] = t + 2;
+        }";
+        let f = lower_kernel(&parse_kernel(src).unwrap()).unwrap();
+        let dfg = crate::dfg::extract_dfg(&optimize(&f).0).unwrap();
+        let fused = fuse_muladd(&dfg).unwrap();
+        let muls = fused
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Op { op: DfgOp::Mul, .. }))
+            .count();
+        assert_eq!(muls, 1);
+        let adds = fused
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Op { op: DfgOp::Add, .. }))
+            .count();
+        assert_eq!(adds, 2);
+    }
+
+    #[test]
+    fn sub_with_product_as_subtrahend_not_fused() {
+        // c - a*b cannot fold into the DSP (no rsub-mul mode)
+        let src = "__kernel void k(__global int *A, __global int *B) {
+            int i = get_global_id(0);
+            B[i] = A[i+1] - A[i] * 3;
+        }";
+        let f = lower_kernel(&parse_kernel(src).unwrap()).unwrap();
+        let dfg = crate::dfg::extract_dfg(&optimize(&f).0).unwrap();
+        let fused = fuse_muladd(&dfg).unwrap();
+        let subs = fused
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, NodeKind::Op { op: DfgOp::Sub, .. }))
+            .count();
+        assert_eq!(subs, 1, "sub must survive unfused");
+    }
+
+    #[test]
+    fn nets_exclude_intra_fu_edges() {
+        let g = to_fu_graph(&paper_dfg(), 2).unwrap();
+        let nets = g.nets();
+        for n in &nets {
+            for (sink, _) in &n.sinks {
+                assert_ne!(n.src, *sink);
+            }
+        }
+        let in_net = nets
+            .iter()
+            .find(|n| matches!(n.src, NetEndpoint::InPad(0)))
+            .unwrap();
+        assert!(!in_net.sinks.is_empty());
+        let out_sinks: usize = nets
+            .iter()
+            .flat_map(|n| &n.sinks)
+            .filter(|(s, _)| matches!(s, NetEndpoint::OutPad(_)))
+            .count();
+        assert_eq!(out_sinks, 1);
+    }
+
+    #[test]
+    fn cluster_respects_input_port_cap() {
+        let src = "__kernel void k(__global int *A, __global int *B, __global int *C,
+                                   __global int *D, __global int *E) {
+            int i = get_global_id(0);
+            E[i] = (A[i] + B[i]) + (C[i] + D[i]);
+        }";
+        let f = lower_kernel(&parse_kernel(src).unwrap()).unwrap();
+        let dfg = crate::dfg::extract_dfg(&optimize(&f).0).unwrap();
+        let g = cluster(&dfg, 2).unwrap();
+        for fu in &g.fus {
+            assert!(external_inputs(&g.dfg, &fu.ops) <= MAX_FU_INPUTS);
+        }
+    }
+
+    #[test]
+    fn clustering_with_one_dsp_never_pairs() {
+        let g = to_fu_graph(&paper_dfg(), 1).unwrap();
+        assert!(g.fus.iter().all(|f| f.ops.len() == 1));
+    }
+}

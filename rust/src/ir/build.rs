@@ -1,0 +1,223 @@
+//! AST → naive memory-form IR (the Clang `-O0` stand-in).
+//!
+//! Reproduces the shape of Table I(b): an `alloca` per parameter and
+//! local, stores of the incoming parameter values, and a load before
+//! every use. `mad(a,b,c)` lowers to `mul`+`add` (re-fused later by the
+//! FU-aware transform); `-x` lowers to `0 - x`; `min`/`max` lower to
+//! dedicated binops (the DSP-block FU exposes a compare-select mode).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::frontend::{BinOp, Expr, Kernel, ParamKind, Stmt};
+
+use super::instr::{Function, Instr, IrBinOp, IrType, Op, ValueId};
+
+struct Builder<'k> {
+    kernel: &'k Kernel,
+    instrs: Vec<Instr>,
+    /// variable name → its alloca slot
+    slots: HashMap<String, (ValueId, IrType)>,
+}
+
+/// Lower a semantically-checked kernel to naive IR.
+pub fn lower_kernel(kernel: &Kernel) -> Result<Function> {
+    let mut b = Builder { kernel, instrs: Vec::new(), slots: HashMap::new() };
+
+    // Parameter allocas + stores, mirroring Clang -O0 prologue.
+    for (i, p) in kernel.params.iter().enumerate() {
+        match p.kind {
+            ParamKind::GlobalPtr => {
+                let slot = b.push(Op::Alloca { name: p.name.clone() }, IrType::StackPtr);
+                let val = b.push(Op::ParamPtr { index: i }, IrType::Ptr);
+                b.push(Op::Store { val, slot }, IrType::Void);
+                b.slots.insert(p.name.clone(), (slot, IrType::Ptr));
+            }
+            ParamKind::Scalar => {
+                let ty: IrType = p.ty.into();
+                let slot = b.push(Op::Alloca { name: p.name.clone() }, IrType::StackPtr);
+                let val = b.push(Op::ParamVal { index: i }, ty);
+                b.push(Op::Store { val, slot }, IrType::Void);
+                b.slots.insert(p.name.clone(), (slot, ty));
+            }
+        }
+    }
+
+    for stmt in &kernel.body {
+        b.stmt(stmt)?;
+    }
+
+    Ok(Function {
+        name: kernel.name.clone(),
+        params: kernel.params.clone(),
+        instrs: b.instrs,
+    })
+}
+
+impl<'k> Builder<'k> {
+    fn push(&mut self, op: Op, ty: IrType) -> ValueId {
+        self.instrs.push(Instr { op, ty });
+        ValueId((self.instrs.len() - 1) as u32)
+    }
+
+    fn stmt(&mut self, stmt: &Stmt) -> Result<()> {
+        match stmt {
+            Stmt::Decl { ty, name, init } => {
+                let slot = self.push(Op::Alloca { name: name.clone() }, IrType::StackPtr);
+                let v = self.expr(init)?;
+                self.push(Op::Store { val: v, slot }, IrType::Void);
+                self.slots.insert(name.clone(), (slot, (*ty).into()));
+                Ok(())
+            }
+            Stmt::AssignVar { name, expr } => {
+                let v = self.expr(expr)?;
+                let (slot, _) = self.slots[name.as_str()];
+                self.push(Op::Store { val: v, slot }, IrType::Void);
+                Ok(())
+            }
+            Stmt::AssignIndex { array, index, expr } => {
+                let v = self.expr(expr)?;
+                let idx = self.expr(index)?;
+                let base = self.load_var(array)?;
+                let addr = self.push(Op::Gep { base, idx }, IrType::Ptr);
+                self.push(Op::StoreGlobal { val: v, addr }, IrType::Void);
+                Ok(())
+            }
+        }
+    }
+
+    fn load_var(&mut self, name: &str) -> Result<ValueId> {
+        let Some(&(slot, ty)) = self.slots.get(name) else {
+            bail!("internal: unknown variable '{name}' survived sema");
+        };
+        Ok(self.push(Op::Load { slot }, ty))
+    }
+
+    fn expr(&mut self, e: &Expr) -> Result<ValueId> {
+        match e {
+            Expr::IntLit(v) => Ok(self.push(Op::ConstInt(*v), IrType::Int)),
+            Expr::FloatLit(v) => Ok(self.push(Op::ConstFloat(*v), IrType::Float)),
+            Expr::Var(name) => self.load_var(name),
+            Expr::Index(array, idx) => {
+                let idx = self.expr(idx)?;
+                let base = self.load_var(array)?;
+                let addr = self.push(Op::Gep { base, idx }, IrType::Ptr);
+                let ty: IrType = self
+                    .kernel
+                    .param(array)
+                    .map(|p| p.ty.into())
+                    .unwrap_or(IrType::Int);
+                Ok(self.push(Op::LoadGlobal { addr }, ty))
+            }
+            Expr::Neg(inner) => {
+                let v = self.expr(inner)?;
+                let ty = self.instrs[v.0 as usize].ty;
+                let zero = match ty {
+                    IrType::Float => self.push(Op::ConstFloat(0.0), ty),
+                    _ => self.push(Op::ConstInt(0), ty),
+                };
+                Ok(self.push(Op::Bin { op: IrBinOp::Sub, lhs: zero, rhs: v }, ty))
+            }
+            Expr::Binary(op, l, r) => {
+                let lv = self.expr(l)?;
+                let rv = self.expr(r)?;
+                let ty = self.instrs[lv.0 as usize].ty;
+                let ir_op = match op {
+                    BinOp::Add => IrBinOp::Add,
+                    BinOp::Sub => IrBinOp::Sub,
+                    BinOp::Mul => IrBinOp::Mul,
+                    BinOp::Shl => IrBinOp::Shl,
+                    BinOp::Shr => IrBinOp::Shr,
+                };
+                Ok(self.push(Op::Bin { op: ir_op, lhs: lv, rhs: rv }, ty))
+            }
+            Expr::Call(name, args) => match name.as_str() {
+                "get_global_id" => Ok(self.push(Op::GlobalId, IrType::Int)),
+                "min" | "max" => {
+                    let lv = self.expr(&args[0])?;
+                    let rv = self.expr(&args[1])?;
+                    let ty = self.instrs[lv.0 as usize].ty;
+                    let op = if name == "min" { IrBinOp::Min } else { IrBinOp::Max };
+                    Ok(self.push(Op::Bin { op, lhs: lv, rhs: rv }, ty))
+                }
+                "mad" => {
+                    let a = self.expr(&args[0])?;
+                    let bv = self.expr(&args[1])?;
+                    let c = self.expr(&args[2])?;
+                    let ty = self.instrs[a.0 as usize].ty;
+                    let m = self.push(Op::Bin { op: IrBinOp::Mul, lhs: a, rhs: bv }, ty);
+                    Ok(self.push(Op::Bin { op: IrBinOp::Add, lhs: m, rhs: c }, ty))
+                }
+                other => bail!("internal: unknown builtin '{other}' survived sema"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+
+    const PAPER: &str = "__kernel void example_kernel(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    #[test]
+    fn naive_ir_has_table1b_shape() {
+        let f = lower_kernel(&parse_kernel(PAPER).unwrap()).unwrap();
+        // Table I(b): allocas for 2 params + 2 locals, loads around uses.
+        assert_eq!(f.count(|o| matches!(o, Op::Alloca { .. })), 4);
+        assert!(f.count(|o| matches!(o, Op::Load { .. })) >= 7);
+        assert_eq!(f.count(|o| matches!(o, Op::StoreGlobal { .. })), 1);
+        assert_eq!(f.count(|o| matches!(o, Op::GlobalId)), 1);
+        // 5 multiplies, 1 sub, 1 add as written
+        assert_eq!(
+            f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Mul, .. })),
+            5
+        );
+        assert_eq!(
+            f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Sub, .. })),
+            1
+        );
+        assert_eq!(
+            f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Add, .. })),
+            1
+        );
+    }
+
+    #[test]
+    fn mad_lowers_to_mul_add() {
+        let f = lower_kernel(
+            &parse_kernel(
+                "__kernel void k(__global int *A, __global int *B) {
+                    int i = get_global_id(0);
+                    B[i] = mad(A[i], 3, 4);
+                }",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Mul, .. })), 1);
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Add, .. })), 1);
+    }
+
+    #[test]
+    fn neg_lowers_to_zero_sub() {
+        let f = lower_kernel(
+            &parse_kernel(
+                "__kernel void k(__global int *A, __global int *B) {
+                    int i = get_global_id(0);
+                    B[i] = -A[i];
+                }",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Sub, .. })), 1);
+        assert!(f.count(|o| matches!(o, Op::ConstInt(0))) >= 1);
+    }
+}

@@ -1,0 +1,169 @@
+//! IR data structures.
+
+use crate::frontend::{Param, Type};
+
+/// A value in the function: the result of the instruction with the same
+/// index in [`Function::instrs`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub u32);
+
+impl std::fmt::Display for ValueId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "%{}", self.0)
+    }
+}
+
+/// Scalar IR types. `Short` is widened to `Int` semantics on the
+/// emulated 32-bit datapath but retained for resource modelling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IrType {
+    Int,
+    Float,
+    /// Pointer to global memory (buffer parameters, GEP results).
+    Ptr,
+    /// Alloca result (stack slot address).
+    StackPtr,
+    Void,
+}
+
+impl From<Type> for IrType {
+    fn from(t: Type) -> Self {
+        match t {
+            Type::Int | Type::Short => IrType::Int,
+            Type::Float => IrType::Float,
+        }
+    }
+}
+
+/// Binary operations. `Min`/`Max` come from the OpenCL builtins; the
+/// rest from operators. Division never reaches the IR (rejected at
+/// parse time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IrBinOp {
+    Add,
+    Sub,
+    Mul,
+    Shl,
+    Shr,
+    Min,
+    Max,
+}
+
+impl IrBinOp {
+    pub fn name(self) -> &'static str {
+        match self {
+            IrBinOp::Add => "add",
+            IrBinOp::Sub => "sub",
+            IrBinOp::Mul => "mul",
+            IrBinOp::Shl => "shl",
+            IrBinOp::Shr => "ashr",
+            IrBinOp::Min => "min",
+            IrBinOp::Max => "max",
+        }
+    }
+
+    pub fn is_commutative(self) -> bool {
+        matches!(self, IrBinOp::Add | IrBinOp::Mul | IrBinOp::Min | IrBinOp::Max)
+    }
+}
+
+/// Instruction opcodes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// Stack slot for a local variable or by-value parameter (pre-mem2reg).
+    Alloca { name: String },
+    /// Store to an alloca.
+    Store { val: ValueId, slot: ValueId },
+    /// Load from an alloca.
+    Load { slot: ValueId },
+    /// Address of a kernel buffer parameter (by parameter index).
+    ParamPtr { index: usize },
+    /// Value of a scalar kernel parameter.
+    ParamVal { index: usize },
+    /// `getelementptr inbounds base, idx`.
+    Gep { base: ValueId, idx: ValueId },
+    /// Load through a global pointer.
+    LoadGlobal { addr: ValueId },
+    /// Store through a global pointer. The IR's only side effect.
+    StoreGlobal { val: ValueId, addr: ValueId },
+    /// `call get_global_id(0)`.
+    GlobalId,
+    ConstInt(i64),
+    ConstFloat(f64),
+    Bin { op: IrBinOp, lhs: ValueId, rhs: ValueId },
+}
+
+impl Op {
+    /// Does this op have an observable side effect (a DCE root)?
+    pub fn is_root(&self) -> bool {
+        matches!(self, Op::StoreGlobal { .. })
+    }
+
+    /// Operands read by this op.
+    pub fn operands(&self) -> Vec<ValueId> {
+        match self {
+            Op::Store { val, slot } => vec![*val, *slot],
+            Op::Load { slot } => vec![*slot],
+            Op::Gep { base, idx } => vec![*base, *idx],
+            Op::LoadGlobal { addr } => vec![*addr],
+            Op::StoreGlobal { val, addr } => vec![*val, *addr],
+            Op::Bin { lhs, rhs, .. } => vec![*lhs, *rhs],
+            _ => vec![],
+        }
+    }
+
+    /// Rewrite operands through `f` (used by passes when renaming).
+    pub fn map_operands(&mut self, f: impl Fn(ValueId) -> ValueId) {
+        match self {
+            Op::Store { val, slot } => {
+                *val = f(*val);
+                *slot = f(*slot);
+            }
+            Op::Load { slot } => *slot = f(*slot),
+            Op::Gep { base, idx } => {
+                *base = f(*base);
+                *idx = f(*idx);
+            }
+            Op::LoadGlobal { addr } => *addr = f(*addr),
+            Op::StoreGlobal { val, addr } => {
+                *val = f(*val);
+                *addr = f(*addr);
+            }
+            Op::Bin { lhs, rhs, .. } => {
+                *lhs = f(*lhs);
+                *rhs = f(*rhs);
+            }
+            _ => {}
+        }
+    }
+}
+
+/// One instruction: an opcode plus its result type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instr {
+    pub op: Op,
+    pub ty: IrType,
+}
+
+/// A lowered kernel: straight-line SSA over one basic block.
+#[derive(Debug, Clone)]
+pub struct Function {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub instrs: Vec<Instr>,
+}
+
+impl Function {
+    pub fn value_ty(&self, v: ValueId) -> IrType {
+        self.instrs[v.0 as usize].ty
+    }
+
+    pub fn op(&self, v: ValueId) -> &Op {
+        &self.instrs[v.0 as usize].op
+    }
+
+    /// Count of instructions with a given predicate (test/report helper).
+    pub fn count(&self, pred: impl Fn(&Op) -> bool) -> usize {
+        self.instrs.iter().filter(|i| pred(&i.op)).count()
+    }
+}

@@ -1,0 +1,22 @@
+//! SSA intermediate representation — the LLVM stand-in.
+//!
+//! [`lower_kernel`] produces the *naive* memory-form IR of Table I(b):
+//! an `alloca` per local variable and per parameter, with every use
+//! going through a load/store pair, exactly as Clang emits at `-O0`.
+//! The pass pipeline ([`optimize`]) then reproduces Table I(c):
+//! `mem2reg` promotes the allocas, constant folding / algebraic
+//! simplification / CSE / DCE clean the rest, leaving the pure dataflow
+//! the DFG extractor consumes.
+//!
+//! Everything is a single basic block: the frontend rejects control
+//! flow (an II=1 spatial overlay executes straight-line dataflow).
+
+mod build;
+mod instr;
+pub mod passes;
+mod printer;
+
+pub use build::lower_kernel;
+pub use instr::{Function, Instr, IrBinOp, IrType, Op, ValueId};
+pub use passes::{optimize, PassStats};
+pub use printer::print_function;

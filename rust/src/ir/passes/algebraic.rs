@@ -1,0 +1,141 @@
+//! Algebraic simplification and strength rewrites.
+//!
+//! Integer identities: `x+0`, `0+x`, `x-0`, `x*1`, `1*x` → `x`;
+//! `x*0`, `0*x`, `x-x` → `0`; `x<<c` → `x * 2^c` (the overlay FU has a
+//! multiplier but no barrel shifter, so shifts become DSP multiplies —
+//! the same choice Vivado HLS makes when a shifter is unavailable).
+//!
+//! Float identities are applied only where IEEE-safe for the f32
+//! emulated datapath: `x*1.0` → x. (`x+0.0` is kept: it is not an
+//! identity for −0.0.)
+
+use crate::ir::instr::{Function, Instr, IrBinOp, IrType, Op, ValueId};
+
+use super::{const_of, Rewriter};
+
+/// Returns the rewritten function and the number of rewrites applied.
+pub fn algebraic(f: &Function) -> (Function, usize) {
+    let mut rw = Rewriter::new(f.instrs.len());
+    let mut n = 0usize;
+
+    for (i, instr) in f.instrs.iter().enumerate() {
+        let old = ValueId(i as u32);
+        let Op::Bin { op, lhs, rhs } = &instr.op else {
+            rw.copy(old, instr);
+            continue;
+        };
+        let is_int = instr.ty == IrType::Int;
+        let lc = const_of(f, *lhs);
+        let rc = const_of(f, *rhs);
+
+        // x - x -> 0 (int only; float NaN semantics)
+        if is_int && *op == IrBinOp::Sub && lhs == rhs {
+            rw.emit(old, Instr { op: Op::ConstInt(0), ty: instr.ty });
+            n += 1;
+            continue;
+        }
+        // identities returning an operand
+        let forwarded = match (op, lc, rc) {
+            (IrBinOp::Add, _, Some(Op::ConstInt(0))) if is_int => Some(*lhs),
+            (IrBinOp::Add, Some(Op::ConstInt(0)), _) if is_int => Some(*rhs),
+            (IrBinOp::Sub, _, Some(Op::ConstInt(0))) if is_int => Some(*lhs),
+            (IrBinOp::Mul, _, Some(Op::ConstInt(1))) if is_int => Some(*lhs),
+            (IrBinOp::Mul, Some(Op::ConstInt(1)), _) if is_int => Some(*rhs),
+            (IrBinOp::Mul, _, Some(Op::ConstFloat(c))) if *c == 1.0 => Some(*lhs),
+            (IrBinOp::Mul, Some(Op::ConstFloat(c)), _) if *c == 1.0 => Some(*rhs),
+            (IrBinOp::Shl, _, Some(Op::ConstInt(0))) if is_int => Some(*lhs),
+            (IrBinOp::Shr, _, Some(Op::ConstInt(0))) if is_int => Some(*lhs),
+            _ => None,
+        };
+        if let Some(v) = forwarded {
+            let new = rw.lookup(v);
+            rw.forward(old, new);
+            n += 1;
+            continue;
+        }
+        // x * 0 -> 0
+        if is_int
+            && *op == IrBinOp::Mul
+            && (matches!(lc, Some(Op::ConstInt(0))) || matches!(rc, Some(Op::ConstInt(0))))
+        {
+            rw.emit(old, Instr { op: Op::ConstInt(0), ty: instr.ty });
+            n += 1;
+            continue;
+        }
+        // x << c -> x * 2^c
+        if is_int && *op == IrBinOp::Shl {
+            if let Some(Op::ConstInt(c)) = rc {
+                if (0..31).contains(c) {
+                    let pow = rw.emit_fresh(Instr {
+                        op: Op::ConstInt(1i64 << c),
+                        ty: IrType::Int,
+                    });
+                    let l = rw.lookup(*lhs);
+                    rw.emit(
+                        old,
+                        Instr { op: Op::Bin { op: IrBinOp::Mul, lhs: l, rhs: pow }, ty: instr.ty },
+                    );
+                    n += 1;
+                    continue;
+                }
+            }
+        }
+        rw.copy(old, instr);
+    }
+    (rw.finish(f), n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::ir::{lower_kernel, passes::mem2reg};
+
+    fn prep(src: &str) -> Function {
+        mem2reg(&lower_kernel(&parse_kernel(src).unwrap()).unwrap()).0
+    }
+
+    #[test]
+    fn float_add_zero_is_preserved() {
+        let f = prep(
+            "__kernel void k(__global float *A, __global float *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] + 0.0f;
+             }",
+        );
+        let (g, n) = algebraic(&f);
+        assert_eq!(n, 0);
+        assert_eq!(g.count(|o| matches!(o, Op::Bin { op: IrBinOp::Add, .. })), 1);
+    }
+
+    #[test]
+    fn float_mul_one_is_removed() {
+        let f = prep(
+            "__kernel void k(__global float *A, __global float *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] * 1.0f;
+             }",
+        );
+        let (g, n) = algebraic(&f);
+        assert_eq!(n, 1);
+        assert_eq!(g.count(|o| matches!(o, Op::Bin { .. })), 0);
+    }
+
+    #[test]
+    fn shl_rewrite_preserves_operand_order() {
+        let f = prep(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] << 3;
+             }",
+        );
+        let (g, _) = algebraic(&f);
+        let found = g.instrs.iter().any(|ins| match &ins.op {
+            Op::Bin { op: IrBinOp::Mul, rhs, .. } => {
+                matches!(g.op(*rhs), Op::ConstInt(8))
+            }
+            _ => false,
+        });
+        assert!(found);
+    }
+}

@@ -1,0 +1,101 @@
+//! Constant folding + canonicalization.
+//!
+//! * `Bin(const, const)` → const (int wrapping, matching the 32-bit
+//!   datapath; float in f32 to match the emulated overlay numerics).
+//! * Commutative ops with a constant on the left get their operands
+//!   swapped so immediates always sit on the right — this is the form
+//!   the DFG labels (`mul_Imm_16`) and the FU immediate ports expect.
+
+use crate::ir::instr::{Function, Instr, IrBinOp, Op, ValueId};
+
+use super::{const_of, Rewriter};
+
+/// Returns the rewritten function and the number of rewrites applied.
+pub fn constfold(f: &Function) -> (Function, usize) {
+    let mut rw = Rewriter::new(f.instrs.len());
+    let mut n = 0usize;
+
+    for (i, instr) in f.instrs.iter().enumerate() {
+        let old = ValueId(i as u32);
+        let Op::Bin { op, lhs, rhs } = &instr.op else {
+            rw.copy(old, instr);
+            continue;
+        };
+        match (const_of(f, *lhs), const_of(f, *rhs)) {
+            (Some(Op::ConstInt(a)), Some(Op::ConstInt(b))) => {
+                let v = eval_int(*op, *a, *b);
+                rw.emit(old, Instr { op: Op::ConstInt(v), ty: instr.ty });
+                n += 1;
+            }
+            (Some(Op::ConstFloat(a)), Some(Op::ConstFloat(b))) => {
+                if let Some(v) = eval_float(*op, *a, *b) {
+                    rw.emit(old, Instr { op: Op::ConstFloat(v), ty: instr.ty });
+                    n += 1;
+                } else {
+                    rw.copy(old, instr);
+                }
+            }
+            (Some(_), None) if op.is_commutative() => {
+                // canonicalize: constant to the right
+                let l = rw.lookup(*lhs);
+                let r = rw.lookup(*rhs);
+                rw.emit(old, Instr { op: Op::Bin { op: *op, lhs: r, rhs: l }, ty: instr.ty });
+                n += 1;
+            }
+            _ => {
+                rw.copy(old, instr);
+            }
+        }
+    }
+    (rw.finish(f), n)
+}
+
+/// Integer evaluation with the 32-bit wrap-around semantics of the
+/// emulated datapath (matches the Pallas kernel and the cycle sim).
+fn eval_int(op: IrBinOp, a: i64, b: i64) -> i64 {
+    let (a, b) = (a as i32, b as i32);
+    let v = match op {
+        IrBinOp::Add => a.wrapping_add(b),
+        IrBinOp::Sub => a.wrapping_sub(b),
+        IrBinOp::Mul => a.wrapping_mul(b),
+        IrBinOp::Shl => a.wrapping_shl(b as u32 & 31),
+        IrBinOp::Shr => a.wrapping_shr(b as u32 & 31),
+        IrBinOp::Min => a.min(b),
+        IrBinOp::Max => a.max(b),
+    };
+    v as i64
+}
+
+/// f32 evaluation (None for ops floats don't support).
+fn eval_float(op: IrBinOp, a: f64, b: f64) -> Option<f64> {
+    let (a, b) = (a as f32, b as f32);
+    let v = match op {
+        IrBinOp::Add => a + b,
+        IrBinOp::Sub => a - b,
+        IrBinOp::Mul => a * b,
+        IrBinOp::Min => a.min(b),
+        IrBinOp::Max => a.max(b),
+        IrBinOp::Shl | IrBinOp::Shr => return None,
+    };
+    Some(v as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_folding_wraps_at_32_bits() {
+        assert_eq!(eval_int(IrBinOp::Mul, i32::MAX as i64, 2), -2);
+        assert_eq!(eval_int(IrBinOp::Add, 1, 2), 3);
+        assert_eq!(eval_int(IrBinOp::Shl, 1, 4), 16);
+        assert_eq!(eval_int(IrBinOp::Min, -5, 3), -5);
+    }
+
+    #[test]
+    fn float_folding_uses_f32() {
+        let v = eval_float(IrBinOp::Add, 0.1, 0.2).unwrap();
+        assert_eq!(v, (0.1f32 + 0.2f32) as f64);
+        assert!(eval_float(IrBinOp::Shl, 1.0, 1.0).is_none());
+    }
+}

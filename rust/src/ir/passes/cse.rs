@@ -1,0 +1,130 @@
+//! Common-subexpression elimination by hash-consing.
+//!
+//! Two instructions are congruent if they have the same opcode and
+//! (order-normalized for commutative binops) operands. Loads from
+//! global memory are congruent when their addresses are: the kernels
+//! are straight-line with no intervening stores to the same buffer
+//! from the same work-item — the OpenCL execution model makes cross-
+//! work-item interference undefined anyway. `GlobalId` is pure, so
+//! duplicate calls collapse (Table I(c) has exactly one).
+
+use std::collections::HashMap;
+
+use crate::ir::instr::{Function, Op, ValueId};
+
+use super::Rewriter;
+
+/// Hashable congruence key for pure instructions.
+#[derive(Hash, PartialEq, Eq)]
+enum Key {
+    ParamPtr(usize),
+    ParamVal(usize),
+    Gep(ValueId, ValueId),
+    LoadGlobal(ValueId),
+    GlobalId,
+    ConstInt(i64),
+    ConstFloat(u64), // bit pattern
+    Bin(u8, ValueId, ValueId),
+}
+
+fn key_of(op: &Op) -> Option<Key> {
+    Some(match op {
+        Op::ParamPtr { index } => Key::ParamPtr(*index),
+        Op::ParamVal { index } => Key::ParamVal(*index),
+        Op::Gep { base, idx } => Key::Gep(*base, *idx),
+        Op::LoadGlobal { addr } => Key::LoadGlobal(*addr),
+        Op::GlobalId => Key::GlobalId,
+        Op::ConstInt(v) => Key::ConstInt(*v),
+        Op::ConstFloat(v) => Key::ConstFloat(v.to_bits()),
+        Op::Bin { op, lhs, rhs } => {
+            let (a, b) = if op.is_commutative() && rhs < lhs {
+                (*rhs, *lhs)
+            } else {
+                (*lhs, *rhs)
+            };
+            Key::Bin(*op as u8, a, b)
+        }
+        _ => return None,
+    })
+}
+
+/// Returns the rewritten function and the number of duplicates removed.
+pub fn cse(f: &Function) -> (Function, usize) {
+    let mut rw = Rewriter::new(f.instrs.len());
+    let mut seen: HashMap<Key, ValueId> = HashMap::new();
+    let mut n = 0usize;
+
+    for (i, instr) in f.instrs.iter().enumerate() {
+        let old = ValueId(i as u32);
+        // Build the key in *new* id space so transitively-identical
+        // chains collapse in one pass.
+        let mut renamed = instr.op.clone();
+        renamed.map_operands(|v| rw.lookup(v));
+        match key_of(&renamed) {
+            Some(key) => {
+                if let Some(&existing) = seen.get(&key) {
+                    rw.forward(old, existing);
+                    n += 1;
+                } else {
+                    let new = rw.emit(old, crate::ir::Instr { op: renamed, ty: instr.ty });
+                    seen.insert(key, new);
+                }
+            }
+            None => {
+                rw.emit(old, crate::ir::Instr { op: renamed, ty: instr.ty });
+            }
+        }
+    }
+    (rw.finish(f), n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::ir::{lower_kernel, passes::mem2reg, IrBinOp};
+
+    fn prep(src: &str) -> Function {
+        mem2reg(&lower_kernel(&parse_kernel(src).unwrap()).unwrap()).0
+    }
+
+    #[test]
+    fn commutative_duplicates_collapse() {
+        let f = prep(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                int x = A[i];
+                B[i] = (x + 3) * (3 + x);
+             }",
+        );
+        let (g, n) = cse(&f);
+        assert!(n >= 1, "expected x+3 / 3+x to collapse");
+        assert_eq!(g.count(|o| matches!(o, Op::Bin { op: IrBinOp::Add, .. })), 1);
+    }
+
+    #[test]
+    fn repeated_gid_calls_collapse() {
+        let f = prep(
+            "__kernel void k(__global int *A, __global int *B) {
+                B[get_global_id(0)] = A[get_global_id(0)];
+             }",
+        );
+        let (g, _) = cse(&f);
+        assert_eq!(g.count(|o| matches!(o, Op::GlobalId)), 1);
+        // the two geps (A and B bases differ) must NOT collapse
+        assert_eq!(g.count(|o| matches!(o, Op::Gep { .. })), 2);
+    }
+
+    #[test]
+    fn transitive_chains_collapse_in_one_pass() {
+        let f = prep(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = (A[i] * 2 + 1) - (A[i] * 2 + 1);
+             }",
+        );
+        let (g, _) = cse(&f);
+        assert_eq!(g.count(|o| matches!(o, Op::Bin { op: IrBinOp::Mul, .. })), 1);
+        assert_eq!(g.count(|o| matches!(o, Op::Bin { op: IrBinOp::Add, .. })), 1);
+    }
+}

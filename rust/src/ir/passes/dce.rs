@@ -1,0 +1,106 @@
+//! Dead-code elimination: mark live from `StoreGlobal` roots, sweep
+//! everything else. Allocas/stores/loads left by earlier passes (there
+//! should be none after mem2reg) are conservatively kept if referenced.
+
+use crate::ir::instr::{Function, ValueId};
+
+use super::Rewriter;
+
+/// Returns the rewritten function and the number of instructions removed.
+pub fn dce(f: &Function) -> (Function, usize) {
+    let n = f.instrs.len();
+    let mut live = vec![false; n];
+
+    // mark
+    for (i, instr) in f.instrs.iter().enumerate().rev() {
+        if instr.op.is_root() {
+            live[i] = true;
+        }
+        if live[i] {
+            for v in instr.op.operands() {
+                live[v.0 as usize] = true;
+            }
+        }
+    }
+    // a reverse scan handles straight-line defs-before-uses in one pass,
+    // but operands of late-marked instrs may precede them; iterate to fix.
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for (i, instr) in f.instrs.iter().enumerate().rev() {
+            if live[i] {
+                for v in instr.op.operands() {
+                    if !live[v.0 as usize] {
+                        live[v.0 as usize] = true;
+                        changed = true;
+                    }
+                }
+            }
+        }
+    }
+
+    // sweep
+    let mut rw = Rewriter::new(n);
+    let mut removed = 0usize;
+    for (i, instr) in f.instrs.iter().enumerate() {
+        if live[i] {
+            rw.copy(ValueId(i as u32), instr);
+        } else {
+            removed += 1;
+        }
+    }
+    (rw.finish(f), removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::ir::{lower_kernel, passes::mem2reg, Op};
+
+    #[test]
+    fn unreferenced_chain_is_swept() {
+        let f = mem2reg(
+            &lower_kernel(
+                &parse_kernel(
+                    "__kernel void k(__global int *A, __global int *B) {
+                        int i = get_global_id(0);
+                        int dead = A[i] * 1234;
+                        int dead2 = dead + 1;
+                        B[i] = 7;
+                     }",
+                )
+                .unwrap(),
+            )
+            .unwrap(),
+        )
+        .0;
+        let (g, removed) = dce(&f);
+        assert!(removed >= 3);
+        assert_eq!(g.count(|o| matches!(o, Op::ConstInt(1234))), 0);
+        assert_eq!(g.count(|o| matches!(o, Op::StoreGlobal { .. })), 1);
+        // the B-gep chain must survive
+        assert!(g.count(|o| matches!(o, Op::Gep { .. })) >= 1);
+    }
+
+    #[test]
+    fn everything_live_means_no_removal() {
+        let f = mem2reg(
+            &lower_kernel(
+                &parse_kernel(
+                    "__kernel void k(__global int *A, __global int *B) {
+                        int i = get_global_id(0);
+                        B[i] = A[i] + 1;
+                     }",
+                )
+                .unwrap(),
+            )
+            .unwrap(),
+        )
+        .0;
+        let before = f.instrs.len();
+        let (g, removed) = dce(&f);
+        assert_eq!(removed, 0);
+        assert_eq!(g.instrs.len(), before);
+    }
+}

@@ -1,0 +1,261 @@
+//! The optimization pipeline — LLVM `opt` stand-in.
+//!
+//! [`optimize`] takes the naive memory-form IR of Table I(b) to the
+//! clean dataflow of Table I(c):
+//!
+//! 1. [`mem2reg`] — promote allocas to SSA values (single block, so a
+//!    simple forward store/load forwarding suffices);
+//! 2. [`constfold`] — fold constant expressions, canonicalize constants
+//!    to the right operand of commutative ops;
+//! 3. [`algebraic`] — identities (`x*1`, `x+0`, `x-x`, `x*0`) and
+//!    strength rewrites (`x << c` → `x * 2^c`: the DSP FU multiplies in
+//!    one slot; there is no barrel shifter in the overlay);
+//! 4. [`cse`] — hash-based common-subexpression elimination;
+//! 5. [`dce`] — mark/sweep from `StoreGlobal` roots.
+//!
+//! 2–5 iterate to a fixpoint (bounded), matching `opt -O2`'s effect on
+//! these straight-line kernels.
+
+mod algebraic;
+mod constfold;
+mod cse;
+mod dce;
+mod mem2reg;
+
+pub use algebraic::algebraic;
+pub use constfold::constfold;
+pub use cse::cse;
+pub use dce::dce;
+pub use mem2reg::mem2reg;
+
+use super::instr::{Function, Instr, Op, ValueId};
+
+/// Counters reported by [`optimize`] (used by `CompileReport`).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct PassStats {
+    pub allocas_promoted: usize,
+    pub consts_folded: usize,
+    pub algebraic_rewrites: usize,
+    pub cse_removed: usize,
+    pub dce_removed: usize,
+    pub iterations: usize,
+}
+
+/// Run the full pipeline to a fixpoint.
+pub fn optimize(f: &Function) -> (Function, PassStats) {
+    let mut stats = PassStats::default();
+    let (mut cur, promoted) = mem2reg(f);
+    stats.allocas_promoted = promoted;
+
+    for _ in 0..8 {
+        stats.iterations += 1;
+        let mut changed = false;
+
+        let (next, n) = constfold(&cur);
+        stats.consts_folded += n;
+        changed |= n > 0;
+        cur = next;
+
+        let (next, n) = algebraic(&cur);
+        stats.algebraic_rewrites += n;
+        changed |= n > 0;
+        cur = next;
+
+        let (next, n) = cse(&cur);
+        stats.cse_removed += n;
+        changed |= n > 0;
+        cur = next;
+
+        let (next, n) = dce(&cur);
+        stats.dce_removed += n;
+        changed |= n > 0;
+        cur = next;
+
+        if !changed {
+            break;
+        }
+    }
+    (cur, stats)
+}
+
+/// Shared rebuild helper: passes emit instructions into a fresh
+/// function while maintaining an old→new value map. Dropping an
+/// instruction means mapping its result to an existing new value.
+pub(crate) struct Rewriter {
+    pub instrs: Vec<Instr>,
+    remap: Vec<Option<ValueId>>,
+}
+
+impl Rewriter {
+    pub fn new(old_len: usize) -> Self {
+        Self { instrs: Vec::with_capacity(old_len), remap: vec![None; old_len] }
+    }
+
+    /// New id for an old operand (must already be mapped).
+    pub fn lookup(&self, old: ValueId) -> ValueId {
+        self.remap[old.0 as usize].expect("operand used before definition")
+    }
+
+    /// Emit `instr` (with operands already in new-id space) as the
+    /// translation of old value `old`.
+    pub fn emit(&mut self, old: ValueId, instr: Instr) -> ValueId {
+        self.instrs.push(instr);
+        let new = ValueId((self.instrs.len() - 1) as u32);
+        self.remap[old.0 as usize] = Some(new);
+        new
+    }
+
+    /// Emit an instruction with no old counterpart.
+    pub fn emit_fresh(&mut self, instr: Instr) -> ValueId {
+        self.instrs.push(instr);
+        ValueId((self.instrs.len() - 1) as u32)
+    }
+
+    /// Map old value `old` to existing new value `new` (drop + forward).
+    pub fn forward(&mut self, old: ValueId, new: ValueId) {
+        self.remap[old.0 as usize] = Some(new);
+    }
+
+    /// Copy an instruction verbatim, renaming operands.
+    pub fn copy(&mut self, old: ValueId, instr: &Instr) -> ValueId {
+        let mut op = instr.op.clone();
+        op.map_operands(|v| self.lookup(v));
+        self.emit(old, Instr { op, ty: instr.ty })
+    }
+
+    pub fn finish(self, f: &Function) -> Function {
+        Function { name: f.name.clone(), params: f.params.clone(), instrs: self.instrs }
+    }
+}
+
+/// Is this op a compile-time constant, and which?
+pub(crate) fn const_of(f: &Function, v: ValueId) -> Option<&Op> {
+    match f.op(v) {
+        c @ (Op::ConstInt(_) | Op::ConstFloat(_)) => Some(c),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::ir::{lower_kernel, IrBinOp};
+
+    const PAPER: &str = "__kernel void example_kernel(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    fn optimized(src: &str) -> Function {
+        let f = lower_kernel(&parse_kernel(src).unwrap()).unwrap();
+        optimize(&f).0
+    }
+
+    #[test]
+    fn paper_example_reaches_table1c_form() {
+        let f = optimized(PAPER);
+        // Table I(c): no allocas / stack traffic survive
+        assert_eq!(f.count(|o| matches!(o, Op::Alloca { .. })), 0);
+        assert_eq!(f.count(|o| matches!(o, Op::Load { .. })), 0);
+        assert_eq!(f.count(|o| matches!(o, Op::Store { .. })), 0);
+        // dataflow: 1 gid call, 2 geps, 1 load, 1 store, 5 mul, 1 sub, 1 add
+        assert_eq!(f.count(|o| matches!(o, Op::GlobalId)), 1);
+        assert_eq!(f.count(|o| matches!(o, Op::Gep { .. })), 2);
+        assert_eq!(f.count(|o| matches!(o, Op::LoadGlobal { .. })), 1);
+        assert_eq!(f.count(|o| matches!(o, Op::StoreGlobal { .. })), 1);
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Mul, .. })), 5);
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Sub, .. })), 1);
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Add, .. })), 1);
+    }
+
+    #[test]
+    fn duplicate_loads_are_cse_d() {
+        let f = optimized(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] * A[i] + A[i];
+             }",
+        );
+        // one load feeds all three uses
+        assert_eq!(f.count(|o| matches!(o, Op::LoadGlobal { .. })), 1);
+    }
+
+    #[test]
+    fn constant_expression_folds_completely() {
+        let f = optimized(
+            "__kernel void k(__global int *B) {
+                int i = get_global_id(0);
+                B[i] = (3 + 4) * (10 - 2);
+             }",
+        );
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { .. })), 0);
+        assert_eq!(f.count(|o| matches!(o, Op::ConstInt(56))), 1);
+    }
+
+    #[test]
+    fn mul_by_one_and_add_zero_vanish() {
+        let f = optimized(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] * 1 + 0;
+             }",
+        );
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { .. })), 0);
+    }
+
+    #[test]
+    fn shift_becomes_multiply() {
+        let f = optimized(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = A[i] << 4;
+             }",
+        );
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Shl, .. })), 0);
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Mul, .. })), 1);
+        assert_eq!(f.count(|o| matches!(o, Op::ConstInt(16))), 1);
+    }
+
+    #[test]
+    fn dead_local_is_removed() {
+        let f = optimized(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                int unused = A[i] * 99;
+                B[i] = A[i] + 1;
+             }",
+        );
+        assert_eq!(f.count(|o| matches!(o, Op::ConstInt(99))), 0);
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Mul, .. })), 0);
+    }
+
+    #[test]
+    fn x_minus_x_folds_to_zero() {
+        let f = optimized(
+            "__kernel void k(__global int *A, __global int *B) {
+                int i = get_global_id(0);
+                B[i] = (A[i] - A[i]) + 7;
+             }",
+        );
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { .. })), 0);
+        assert_eq!(f.count(|o| matches!(o, Op::ConstInt(7))), 1);
+    }
+
+    #[test]
+    fn float_kernel_optimizes_too() {
+        let f = optimized(
+            "__kernel void k(__global float *A, __global float *B) {
+                int i = get_global_id(0);
+                float x = A[i];
+                B[i] = x * 2.0f + 0.0f;
+             }",
+        );
+        assert_eq!(f.count(|o| matches!(o, Op::Alloca { .. })), 0);
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Mul, .. })), 1);
+        // + 0.0f is NOT removed for floats (−0.0/NaN semantics)… unless
+        // we allowed it; we keep float identities conservative.
+        assert_eq!(f.count(|o| matches!(o, Op::Bin { op: IrBinOp::Add, .. })), 1);
+    }
+}

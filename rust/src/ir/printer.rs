@@ -1,0 +1,93 @@
+//! LLVM-flavoured textual IR printer (diagnostics, docs, golden tests).
+//! The output shape mirrors Table I(b)/(c) of the paper.
+
+use super::instr::{Function, IrType, Op};
+
+fn ty_str(ty: IrType) -> &'static str {
+    match ty {
+        IrType::Int => "i32",
+        IrType::Float => "f32",
+        IrType::Ptr => "i32*",
+        IrType::StackPtr => "i32**",
+        IrType::Void => "void",
+    }
+}
+
+/// Render `f` as LLVM-ish text.
+pub fn print_function(f: &Function) -> String {
+    let mut out = String::new();
+    let params: Vec<String> = f
+        .params
+        .iter()
+        .map(|p| {
+            let star = if matches!(p.kind, crate::frontend::ParamKind::GlobalPtr) {
+                "*"
+            } else {
+                ""
+            };
+            format!("{:?}{} %{}", p.ty, star, p.name).to_lowercase()
+        })
+        .collect();
+    out.push_str(&format!("define void @{}({}) {{\n", f.name, params.join(", ")));
+    for (i, instr) in f.instrs.iter().enumerate() {
+        let line = match &instr.op {
+            Op::Alloca { name } => format!("%{i} = alloca i32, align 4 ; {name}"),
+            Op::Store { val, slot } => format!("store {} {}, {}", ty_str(f.value_ty(*val)), val, slot),
+            Op::Load { slot } => format!("%{i} = load {}", slot),
+            Op::ParamPtr { index } => {
+                format!("%{i} = param.ptr {} ; %{}", index, f.params[*index].name)
+            }
+            Op::ParamVal { index } => {
+                format!("%{i} = param.val {} ; %{}", index, f.params[*index].name)
+            }
+            Op::Gep { base, idx } =>
+
+                format!("%{i} = getelementptr inbounds i32* {base}, i32 {idx}"),
+            Op::LoadGlobal { addr } => format!("%{i} = load i32* {addr}"),
+            Op::StoreGlobal { val, addr } => format!("store i32 {val}, i32* {addr}"),
+            Op::GlobalId => format!("%{i} = call i32 @get_global_id(i32 0)"),
+            Op::ConstInt(v) => format!("%{i} = i32 {v}"),
+            Op::ConstFloat(v) => format!("%{i} = f32 {v}"),
+            Op::Bin { op, lhs, rhs } => {
+                let nsw = if instr.ty == IrType::Int { " nsw" } else { "" };
+                format!("%{i} = {}{nsw} {} {}, {}", op.name(), ty_str(instr.ty), lhs, rhs)
+            }
+        };
+        out.push_str("  ");
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out.push_str("}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::ir::{lower_kernel, optimize};
+
+    #[test]
+    fn prints_optimized_paper_kernel() {
+        let f = lower_kernel(
+            &parse_kernel(
+                "__kernel void example_kernel(__global int *A, __global int *B) {
+                    int idx = get_global_id(0);
+                    int x = A[idx];
+                    B[idx] = (x*(x*(16*x*x-20)*x+5));
+                 }",
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let (g, _) = optimize(&f);
+        let text = print_function(&g);
+        assert!(text.contains("@example_kernel"));
+        assert!(text.contains("get_global_id"));
+        assert!(text.contains("getelementptr inbounds"));
+        assert!(text.contains("mul nsw"));
+        // Table I(c) ends with the global store
+        assert!(text.trim_end().ends_with("}"));
+        assert!(text.contains("store i32"));
+    }
+}

@@ -1,0 +1,260 @@
+//! `overlay-jit` CLI — the leader entry point.
+//!
+//! ```text
+//! overlay-jit info
+//! overlay-jit compile <benchmark|file.cl> [--overlay RxC-dspN] [--copies N]
+//!                     [--dump-ir] [--dump-dfg] [--emit-netlist] [--seed S]
+//! overlay-jit run <benchmark|file.cl> [--overlay ...] [--backend sim|pjrt]
+//!                 [--items N] [--artifacts DIR]
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline build environment only
+//! vendors the `xla` crate's dependency closure — no clap.)
+
+use std::process::ExitCode;
+
+use anyhow::{bail, Context as AnyhowContext, Result};
+
+use overlay_jit::bench_kernels;
+use overlay_jit::compiler::{CompileOptions, JitCompiler, Replication};
+use overlay_jit::dfg::to_dot;
+use overlay_jit::ir::print_function;
+use overlay_jit::metrics;
+use overlay_jit::netlist::emit_netlist;
+use overlay_jit::overlay::{FuType, OverlaySpec};
+use overlay_jit::prelude::*;
+use overlay_jit::util::XorShiftRng;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    match args.first().map(String::as_str) {
+        Some("info") => cmd_info(),
+        Some("compile") => cmd_compile(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("help") | None => {
+            print_usage();
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}' (try 'overlay-jit help')"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "overlay-jit — resource-aware JIT OpenCL compiler for coarse-grained \
+         FPGA overlays\n\n\
+         USAGE:\n  overlay-jit info\n  overlay-jit compile <benchmark|file.cl> \
+         [--overlay 8x8-dsp2] [--copies N] [--dump-ir] [--dump-dfg] \
+         [--emit-netlist] [--seed S]\n  overlay-jit run <benchmark|file.cl> \
+         [--overlay 8x8-dsp2] [--backend sim|pjrt] [--items N] [--artifacts DIR]"
+    );
+}
+
+/// Parse `8x8-dsp2` style overlay names.
+fn parse_overlay(name: &str) -> Result<OverlaySpec> {
+    let (grid, fu) = name
+        .rsplit_once('-')
+        .ok_or_else(|| anyhow::anyhow!("overlay must look like 8x8-dsp2"))?;
+    let (r, c) = grid
+        .split_once('x')
+        .ok_or_else(|| anyhow::anyhow!("bad grid '{grid}'"))?;
+    let fu_type = match fu {
+        "dsp1" => FuType::Dsp1,
+        "dsp2" => FuType::Dsp2,
+        other => bail!("unknown FU type '{other}' (dsp1|dsp2)"),
+    };
+    Ok(OverlaySpec::new(r.parse()?, c.parse()?, fu_type))
+}
+
+fn load_source(what: &str) -> Result<String> {
+    if let Some(b) = bench_kernels::by_name(what) {
+        return Ok(b.source.to_string());
+    }
+    if what.ends_with(".cl") {
+        return std::fs::read_to_string(what)
+            .with_context(|| format!("reading {what}"));
+    }
+    bail!(
+        "'{what}' is neither a benchmark ({}) nor a .cl file",
+        bench_kernels::BENCHMARKS
+            .iter()
+            .map(|b| b.name)
+            .collect::<Vec<_>>()
+            .join(", ")
+    )
+}
+
+fn flag_value<'a>(args: &'a [String], name: &str) -> Option<&'a str> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .map(String::as_str)
+}
+
+fn has_flag(args: &[String], name: &str) -> bool {
+    args.iter().any(|a| a == name)
+}
+
+fn cmd_info() -> Result<()> {
+    println!("benchmarks (replication on 8x8-dsp2, paper Fig. 7):");
+    for b in &bench_kernels::BENCHMARKS {
+        println!(
+            "  {:<10} x{:<3} Vivado {:>5.0} s  overlay {:>5.2} s",
+            b.name, b.paper.replication, b.paper.vivado_par_s, b.paper.overlay_par_s
+        );
+    }
+    println!("\noverlay presets: NxM-dsp1 | NxM-dsp2  (2 <= N,M <= 8)");
+    let spec = OverlaySpec::zynq_default();
+    println!(
+        "default: {} — {} FUs, {} DSPs, {} I/O pads, {:.0} MHz, peak {:.1} GOPS, \
+         {} slices",
+        spec.name(),
+        spec.fu_count(),
+        spec.dsp_count(),
+        spec.io_pads(),
+        spec.fmax_mhz(),
+        spec.peak_gops(),
+        metrics::overlay_slices(&spec),
+    );
+    Ok(())
+}
+
+fn cmd_compile(args: &[String]) -> Result<()> {
+    let what = args.first().ok_or_else(|| anyhow::anyhow!("missing kernel"))?;
+    let source = load_source(what)?;
+    let spec = parse_overlay(flag_value(args, "--overlay").unwrap_or("8x8-dsp2"))?;
+    let mut options = CompileOptions::default();
+    if let Some(n) = flag_value(args, "--copies") {
+        options.replication = Replication::Fixed(n.parse()?);
+    }
+    if let Some(s) = flag_value(args, "--seed") {
+        options.seed = s.parse()?;
+    }
+
+    if has_flag(args, "--dump-ir") {
+        let ast = overlay_jit::frontend::parse_kernel(&source)?;
+        let naive = overlay_jit::ir::lower_kernel(&ast)?;
+        println!("; ---- naive IR (Table I(b)) ----\n{}", print_function(&naive));
+        let (opt, _) = overlay_jit::ir::optimize(&naive);
+        println!("; ---- optimized IR (Table I(c)) ----\n{}", print_function(&opt));
+    }
+
+    let jit = JitCompiler::with_options(spec.clone(), options);
+    let k = jit.compile(&source)?;
+
+    if has_flag(args, "--dump-dfg") {
+        println!("// ---- DFG (Table II(a)) ----\n{}", to_dot(&k.dfg));
+        println!("// ---- replicated FU-aware DFG ----\n{}", to_dot(&k.fg.dfg));
+    }
+    if has_flag(args, "--emit-netlist") {
+        println!("{}", emit_netlist(&k.netlist));
+    }
+
+    println!("kernel        : {}", k.name);
+    println!("overlay       : {}", spec.name());
+    println!(
+        "replication   : x{} ({}; {} FUs/copy, {} I/O/copy)",
+        k.copies(),
+        k.plan.limit.name(),
+        k.plan.fus_per_copy,
+        k.plan.io_per_copy
+    );
+    println!(
+        "mapped        : {} FUs, {} op slots, {} routed wires, {} route iters",
+        k.fg.num_fus(),
+        k.schedule.n_slots(),
+        k.routes.wire_count,
+        k.report.route_iterations
+    );
+    println!(
+        "latency       : {} cycles fill, max delay-chain {} (cap {})",
+        k.latency.pipeline_depth, k.latency.max_delay_used, spec.delay_chain_max
+    );
+    println!(
+        "bitstream     : {} bytes -> {:.1} us config",
+        k.bitstream.byte_size(),
+        overlay_jit::overlay::ConfigSizeModel::overlay_config_seconds(
+            &spec,
+            k.bitstream.byte_size()
+        ) * 1e6
+    );
+    let t = metrics::throughput(&spec, &k);
+    println!(
+        "throughput    : {:.2} GOPS ({:.0}% of {:.1} GOPS peak)",
+        t.gops,
+        100.0 * t.utilization,
+        t.peak_gops
+    );
+    println!("-- compile stages --");
+    for (name, d) in &k.report.stages {
+        println!("  {:<10} {:>10.3} ms", name, d.as_secs_f64() * 1e3);
+    }
+    println!(
+        "  total      {:>10.3} ms (PAR {:.3} ms)",
+        k.report.total().as_secs_f64() * 1e3,
+        k.report.par_time().as_secs_f64() * 1e3
+    );
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let what = args.first().ok_or_else(|| anyhow::anyhow!("missing kernel"))?;
+    let source = load_source(what)?;
+    let spec = parse_overlay(flag_value(args, "--overlay").unwrap_or("8x8-dsp2"))?;
+    let items: usize = flag_value(args, "--items").unwrap_or("65536").parse()?;
+    let backend = flag_value(args, "--backend").unwrap_or("sim");
+    let artifacts = flag_value(args, "--artifacts").unwrap_or("artifacts");
+
+    let platform = match backend {
+        "sim" => Platform::with_device(spec.clone(), Backend::CycleSim),
+        "pjrt" => Platform::with_pjrt(artifacts, spec.clone())?,
+        other => bail!("unknown backend '{other}' (sim|pjrt)"),
+    };
+    let ctx = Context::new(&platform.devices()[0]);
+    let mut program = Program::from_source(&ctx, &source);
+    program.build()?;
+    let report = program.build_report.clone().unwrap();
+    let name = overlay_jit::frontend::parse_kernel(&source)?.name;
+    let kernel = program.create_kernel(&name)?;
+
+    let nparams = kernel.compiled.params.len();
+    let mut rng = XorShiftRng::new(7);
+    let mut buffers = Vec::new();
+    for p in 0..nparams {
+        let buf = ctx.create_buffer(items + 16);
+        let data: Vec<i32> = (0..items + 16).map(|_| rng.gen_i64(-40, 40) as i32).collect();
+        buf.write(&data);
+        kernel.set_arg(p, &buf)?;
+        buffers.push(buf);
+    }
+    let queue = CommandQueue::new(&ctx);
+    let ev = queue.enqueue_nd_range(&kernel, items)?;
+
+    println!("kernel    : {name} on {} [{backend}]", spec.name());
+    println!("items     : {items}");
+    println!("build     : {:.3} ms (PAR {:.3} ms)",
+        report.total().as_secs_f64() * 1e3,
+        report.par_time().as_secs_f64() * 1e3);
+    println!("config    : {:.1} us", ev.config_seconds * 1e6);
+    println!(
+        "exec      : {:.3} ms wall; modeled {} cycles @ {:.0} MHz = {:.3} ms, {:.2} GOPS",
+        ev.wall.as_secs_f64() * 1e3,
+        ev.modeled.total_cycles,
+        spec.fmax_mhz(),
+        ev.modeled.seconds * 1e3,
+        ev.modeled.gops
+    );
+    let sample = buffers.last().unwrap().read();
+    println!("out[..8]  : {:?}", &sample[..8.min(sample.len())]);
+    Ok(())
+}

@@ -1,0 +1,342 @@
+//! VPR-style FU netlist interchange (paper §III-C: "VPR compatible FU
+//! netlist generation").
+//!
+//! A textual block/net format in the spirit of the classic VPR `.net`
+//! dialect, with FU blocks instead of CLBs:
+//!
+//! ```text
+//! # netlist example_kernel
+//! .input I0
+//! pinlist: n_I0
+//!
+//! .fu FU0 ops=mul,mul_sub
+//! pinlist: n_I0 n_I0 open open n_FU0
+//!
+//! .output O0
+//! pinlist: n_FU2
+//! ```
+//!
+//! Each `.fu` pinlist carries `MAX_FU_INPUTS` input nets (or `open`)
+//! followed by the output net. [`emit_netlist`] / [`parse_netlist`]
+//! round-trip; the placer consumes the in-memory [`FuNetlist`].
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::dfg::{DfgOp, NodeKind};
+use crate::fuaware::{FuGraph, NetEndpoint, MAX_FU_INPUTS};
+
+/// A placeable block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Block {
+    pub name: String,
+    pub kind: BlockKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum BlockKind {
+    /// FU with its op names (1 or 2).
+    Fu { ops: Vec<String> },
+    InPad,
+    OutPad,
+}
+
+/// One net: a driving block and its sink pins.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetDecl {
+    pub name: String,
+    pub src: NetEndpoint,
+    pub sinks: Vec<(NetEndpoint, u8)>,
+}
+
+/// The netlist handed to placement/routing, plus its interchange form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FuNetlist {
+    pub name: String,
+    pub blocks: Vec<Block>,
+    pub nets: Vec<NetDecl>,
+    pub num_fus: usize,
+    pub num_inputs: usize,
+    pub num_outputs: usize,
+}
+
+/// Build the netlist of a (possibly replicated) FU graph.
+pub fn build_netlist(fg: &FuGraph) -> FuNetlist {
+    let mut blocks = Vec::new();
+    for (i, _) in fg.dfg.input_names.iter().enumerate() {
+        blocks.push(Block { name: format!("I{i}"), kind: BlockKind::InPad });
+    }
+    for fu in &fg.fus {
+        let ops = fu
+            .ops
+            .iter()
+            .map(|&op| match &fg.dfg.nodes[op].kind {
+                NodeKind::Op { op, .. } => op.name().to_string(),
+                _ => unreachable!("FU contains a non-op node"),
+            })
+            .collect();
+        blocks.push(Block { name: format!("FU{}", fu.id), kind: BlockKind::Fu { ops } });
+    }
+    for (o, _) in fg.dfg.output_names.iter().enumerate() {
+        blocks.push(Block { name: format!("O{o}"), kind: BlockKind::OutPad });
+    }
+
+    let nets = fg
+        .nets()
+        .into_iter()
+        .map(|n| {
+            let name = match n.src {
+                NetEndpoint::InPad(p) => format!("n_I{p}"),
+                NetEndpoint::Fu(f) => format!("n_FU{f}"),
+                NetEndpoint::OutPad(_) => unreachable!("net driven by output pad"),
+            };
+            NetDecl { name, src: n.src, sinks: n.sinks }
+        })
+        .collect();
+
+    FuNetlist {
+        name: fg.dfg.name.clone(),
+        blocks,
+        nets,
+        num_fus: fg.num_fus(),
+        num_inputs: fg.dfg.num_inputs(),
+        num_outputs: fg.dfg.num_outputs(),
+    }
+}
+
+impl FuNetlist {
+    /// Net index driven by each endpoint (placer helper).
+    pub fn nets_by_src(&self) -> HashMap<NetEndpoint, usize> {
+        self.nets.iter().enumerate().map(|(i, n)| (n.src, i)).collect()
+    }
+}
+
+/// Render the interchange text.
+pub fn emit_netlist(nl: &FuNetlist) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("# netlist {}\n", nl.name));
+
+    // input-pin nets of every FU, precomputed: fu -> [net name per pin]
+    let mut fu_pins: Vec<Vec<String>> = vec![vec!["open".into(); MAX_FU_INPUTS]; nl.num_fus];
+    let mut out_net: Vec<String> = vec!["open".into(); nl.num_outputs];
+    for net in &nl.nets {
+        for (sink, _port) in &net.sinks {
+            match sink {
+                NetEndpoint::Fu(f) => {
+                    if let Some(slot) = fu_pins[*f].iter_mut().find(|p| *p == "open") {
+                        *slot = net.name.clone();
+                    }
+                }
+                NetEndpoint::OutPad(o) => out_net[*o] = net.name.clone(),
+                NetEndpoint::InPad(_) => {}
+            }
+        }
+    }
+
+    for b in &nl.blocks {
+        match &b.kind {
+            BlockKind::InPad => {
+                out.push_str(&format!("\n.input {}\npinlist: n_{}\n", b.name, b.name));
+            }
+            BlockKind::Fu { ops } => {
+                let id: usize = b.name[2..].parse().unwrap();
+                out.push_str(&format!(
+                    "\n.fu {} ops={}\npinlist: {} n_{}\n",
+                    b.name,
+                    ops.join(","),
+                    fu_pins[id].join(" "),
+                    b.name
+                ));
+            }
+            BlockKind::OutPad => {
+                let id: usize = b.name[1..].parse().unwrap();
+                out.push_str(&format!("\n.output {}\npinlist: {}\n", b.name, out_net[id]));
+            }
+        }
+    }
+    out
+}
+
+/// Parse text produced by [`emit_netlist`]. Reconstructs blocks and
+/// nets (sink pin order follows pinlist position).
+pub fn parse_netlist(text: &str) -> Result<FuNetlist> {
+    let mut name = String::from("netlist");
+    let mut blocks = Vec::new();
+    // net name -> (src endpoint, sinks)
+    let mut nets: HashMap<String, (Option<NetEndpoint>, Vec<(NetEndpoint, u8)>)> =
+        HashMap::new();
+    let mut num_fus = 0;
+    let mut num_inputs = 0;
+    let mut num_outputs = 0;
+
+    let mut lines = text.lines().peekable();
+    while let Some(line) = lines.next() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# netlist ") {
+            name = rest.trim().to_string();
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(".input ") {
+            let bname = rest.trim().to_string();
+            let pl = pinlist(lines.next())?;
+            if pl.len() != 1 {
+                bail!("input {bname}: expected 1 pin");
+            }
+            let port: usize = bname
+                .strip_prefix('I')
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow!("bad input name {bname}"))?;
+            nets.entry(pl[0].clone()).or_default().0 = Some(NetEndpoint::InPad(port));
+            blocks.push(Block { name: bname, kind: BlockKind::InPad });
+            num_inputs += 1;
+        } else if let Some(rest) = line.strip_prefix(".output ") {
+            let bname = rest.trim().to_string();
+            let pl = pinlist(lines.next())?;
+            let port: usize = bname
+                .strip_prefix('O')
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow!("bad output name {bname}"))?;
+            nets.entry(pl[0].clone())
+                .or_default()
+                .1
+                .push((NetEndpoint::OutPad(port), 0));
+            blocks.push(Block { name: bname, kind: BlockKind::OutPad });
+            num_outputs += 1;
+        } else if let Some(rest) = line.strip_prefix(".fu ") {
+            let mut parts = rest.split_whitespace();
+            let bname = parts.next().ok_or_else(|| anyhow!("missing fu name"))?.to_string();
+            let ops: Vec<String> = parts
+                .next()
+                .and_then(|s| s.strip_prefix("ops="))
+                .map(|s| s.split(',').map(String::from).collect())
+                .unwrap_or_default();
+            let id: usize = bname
+                .strip_prefix("FU")
+                .and_then(|s| s.parse().ok())
+                .ok_or_else(|| anyhow!("bad fu name {bname}"))?;
+            let pl = pinlist(lines.next())?;
+            if pl.len() != MAX_FU_INPUTS + 1 {
+                bail!("fu {bname}: expected {} pins", MAX_FU_INPUTS + 1);
+            }
+            for (pin, netname) in pl[..MAX_FU_INPUTS].iter().enumerate() {
+                if netname != "open" {
+                    nets.entry(netname.clone())
+                        .or_default()
+                        .1
+                        .push((NetEndpoint::Fu(id), pin as u8));
+                }
+            }
+            nets.entry(pl[MAX_FU_INPUTS].clone()).or_default().0 = Some(NetEndpoint::Fu(id));
+            blocks.push(Block { name: bname, kind: BlockKind::Fu { ops } });
+            num_fus += 1;
+        } else {
+            bail!("unparseable netlist line: '{line}'");
+        }
+    }
+
+    let mut net_list: Vec<NetDecl> = Vec::new();
+    for (nname, (src, sinks)) in nets {
+        let src = src.ok_or_else(|| anyhow!("net {nname} has no driver"))?;
+        if sinks.is_empty() {
+            continue; // an FU output net with no consumer (trailing op)
+        }
+        net_list.push(NetDecl { name: nname, src, sinks });
+    }
+    net_list.sort_by(|a, b| a.name.cmp(&b.name));
+
+    Ok(FuNetlist { name, blocks, nets: net_list, num_fus, num_inputs, num_outputs })
+}
+
+fn pinlist(line: Option<&str>) -> Result<Vec<String>> {
+    let line = line.ok_or_else(|| anyhow!("missing pinlist"))?.trim();
+    let rest = line
+        .strip_prefix("pinlist:")
+        .ok_or_else(|| anyhow!("expected 'pinlist:', got '{line}'"))?;
+    Ok(rest.split_whitespace().map(String::from).collect())
+}
+
+/// Human-readable op name table (paper Table II node labels → ops).
+pub fn op_display(op: DfgOp) -> &'static str {
+    op.name()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::fuaware::to_fu_graph;
+    use crate::ir::{lower_kernel, optimize};
+
+    const PAPER: &str = "__kernel void example_kernel(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    fn paper_netlist(dsps: usize) -> FuNetlist {
+        let f = lower_kernel(&parse_kernel(PAPER).unwrap()).unwrap();
+        let dfg = crate::dfg::extract_dfg(&optimize(&f).0).unwrap();
+        build_netlist(&to_fu_graph(&dfg, dsps).unwrap())
+    }
+
+    #[test]
+    fn paper_netlist_block_counts() {
+        let nl = paper_netlist(2);
+        assert_eq!(nl.num_fus, 3);
+        assert_eq!(nl.num_inputs, 1);
+        assert_eq!(nl.num_outputs, 1);
+        assert_eq!(nl.blocks.len(), 5);
+    }
+
+    #[test]
+    fn netlist_nets_have_drivers_and_sinks() {
+        let nl = paper_netlist(1);
+        assert!(!nl.nets.is_empty());
+        for n in &nl.nets {
+            assert!(!n.sinks.is_empty(), "net {} has no sinks", n.name);
+        }
+        let in_net = nl
+            .nets
+            .iter()
+            .find(|n| matches!(n.src, NetEndpoint::InPad(0)))
+            .unwrap();
+        assert!(in_net.sinks.len() >= 4);
+    }
+
+    #[test]
+    fn emit_contains_vpr_sections() {
+        let text = emit_netlist(&paper_netlist(2));
+        assert!(text.contains(".input I0"));
+        assert!(text.contains(".output O0"));
+        assert!(text.contains(".fu FU0"));
+        assert!(text.contains("pinlist:"));
+        assert!(text.contains("ops="));
+    }
+
+    #[test]
+    fn netlist_round_trips_block_and_net_counts() {
+        let nl = paper_netlist(2);
+        let parsed = parse_netlist(&emit_netlist(&nl)).unwrap();
+        assert_eq!(parsed.num_fus, nl.num_fus);
+        assert_eq!(parsed.num_inputs, nl.num_inputs);
+        assert_eq!(parsed.num_outputs, nl.num_outputs);
+        assert_eq!(parsed.nets.len(), nl.nets.len());
+        let pins = |n: &FuNetlist| n.nets.iter().map(|x| x.sinks.len()).sum::<usize>();
+        assert_eq!(pins(&parsed), pins(&nl));
+    }
+
+    #[test]
+    fn parse_rejects_driverless_net() {
+        let text = ".output O0\npinlist: n_phantom\n";
+        assert!(parse_netlist(text).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_netlist("hello world").is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Overlay configuration words and bitstream sizing (§IV).
+//!
+//! The paper reports the 8×8 overlay needs **1061 bytes**, loaded in
+//! **42.4 µs** over the OpenCL API, vs a 4 MB full-fabric bitstream in
+//! 31.6 ms — a ≈750× configuration-time advantage. We reproduce the
+//! format arithmetic exactly:
+//!
+//! ```text
+//! header:   5 B  (magic u16, rows u8, cols u8, fu_type u8)
+//! per tile: 16 B (fu mode 1, opcodes 2, delays 2, imm 4, SB 4, CB 2, crc 1)
+//! per pad:  1 B  (direction + enable + stream id)
+//! 8×8: 5 + 64·16 + 32·1 = 1061 bytes ✓
+//! ```
+
+use super::spec::OverlaySpec;
+
+/// Configuration of one overlay tile.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TileConfig {
+    /// FU mode byte (0 = unused, 1 = single-op, 2 = cascade).
+    pub fu_mode: u8,
+    /// Opcode per DSP slot (up to 2).
+    pub opcodes: [u8; 2],
+    /// Input delay-chain settings (balancing registers), one per pin
+    /// pair (packed 2×4 bits per byte → pins 0..3 in two bytes).
+    pub delays: [u8; 2],
+    /// One 32-bit immediate per tile (const operand register).
+    pub imm: i32,
+    /// Switch-box configuration (4 sides × width nibbles, packed).
+    pub sb: [u8; 4],
+    /// Connection-box configuration (input pin sources).
+    pub cb: [u8; 2],
+}
+
+impl TileConfig {
+    /// Serialized size — 16 bytes (see module docs).
+    pub const BYTES: usize = 16;
+
+    pub fn to_bytes(&self) -> [u8; Self::BYTES] {
+        let mut b = [0u8; Self::BYTES];
+        b[0] = self.fu_mode;
+        b[1] = self.opcodes[0];
+        b[2] = self.opcodes[1];
+        b[3] = self.delays[0];
+        b[4] = self.delays[1];
+        b[5..9].copy_from_slice(&self.imm.to_le_bytes());
+        b[9..13].copy_from_slice(&self.sb);
+        b[13..15].copy_from_slice(&self.cb);
+        // trivial checksum byte
+        b[15] = b[..15].iter().fold(0u8, |a, &x| a.wrapping_add(x));
+        b
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Option<TileConfig> {
+        if b.len() < Self::BYTES {
+            return None;
+        }
+        let crc = b[..15].iter().fold(0u8, |a, &x| a.wrapping_add(x));
+        if crc != b[15] {
+            return None;
+        }
+        Some(TileConfig {
+            fu_mode: b[0],
+            opcodes: [b[1], b[2]],
+            delays: [b[3], b[4]],
+            imm: i32::from_le_bytes([b[5], b[6], b[7], b[8]]),
+            sb: [b[9], b[10], b[11], b[12]],
+            cb: [b[13], b[14]],
+        })
+    }
+}
+
+/// A fully serialized overlay configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverlayBitstream {
+    pub rows: usize,
+    pub cols: usize,
+    pub fu_type_code: u8,
+    pub tiles: Vec<TileConfig>,
+    /// Pad config byte per perimeter slot.
+    pub pads: Vec<u8>,
+}
+
+impl OverlayBitstream {
+    pub const MAGIC: u16 = 0x4F4C; // "OL"
+
+    pub fn empty(spec: &OverlaySpec) -> Self {
+        OverlayBitstream {
+            rows: spec.rows,
+            cols: spec.cols,
+            fu_type_code: spec.fu_type.dsps_per_fu() as u8,
+            tiles: vec![TileConfig::default(); spec.fu_count()],
+            pads: vec![0; spec.io_pads()],
+        }
+    }
+
+    /// Serialize to the on-wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.byte_size());
+        out.extend_from_slice(&Self::MAGIC.to_le_bytes());
+        out.push(self.rows as u8);
+        out.push(self.cols as u8);
+        out.push(self.fu_type_code);
+        for t in &self.tiles {
+            out.extend_from_slice(&t.to_bytes());
+        }
+        out.extend_from_slice(&self.pads);
+        out
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Option<OverlayBitstream> {
+        if b.len() < 5 || u16::from_le_bytes([b[0], b[1]]) != Self::MAGIC {
+            return None;
+        }
+        let rows = b[2] as usize;
+        let cols = b[3] as usize;
+        let fu_type_code = b[4];
+        let n_tiles = rows * cols;
+        let n_pads = 2 * (rows + cols);
+        if b.len() != 5 + n_tiles * TileConfig::BYTES + n_pads {
+            return None;
+        }
+        let mut tiles = Vec::with_capacity(n_tiles);
+        for i in 0..n_tiles {
+            let off = 5 + i * TileConfig::BYTES;
+            tiles.push(TileConfig::from_bytes(&b[off..off + TileConfig::BYTES])?);
+        }
+        let pads = b[5 + n_tiles * TileConfig::BYTES..].to_vec();
+        Some(OverlayBitstream { rows, cols, fu_type_code, tiles, pads })
+    }
+
+    /// Total serialized size in bytes.
+    pub fn byte_size(&self) -> usize {
+        5 + self.tiles.len() * TileConfig::BYTES + self.pads.len()
+    }
+}
+
+/// Configuration-time model (overlay vs full-fabric reconfiguration).
+#[derive(Debug, Clone)]
+pub struct ConfigSizeModel;
+
+impl ConfigSizeModel {
+    /// Zynq-7020 full bitstream: 4,045,564 bytes.
+    pub const FPGA_BITSTREAM_BYTES: usize = 4_045_564;
+    /// PCAP throughput ≈ 128 MB/s → 31.6 ms full reconfiguration.
+    pub const PCAP_BW_BYTES_PER_S: f64 = 128.0e6;
+
+    /// Seconds to load an overlay configuration of `bytes`.
+    pub fn overlay_config_seconds(spec: &OverlaySpec, bytes: usize) -> f64 {
+        bytes as f64 / spec.config_bw_bytes_per_s
+    }
+
+    /// Seconds to reconfigure the whole FPGA fabric.
+    pub fn fpga_config_seconds() -> f64 {
+        Self::FPGA_BITSTREAM_BYTES as f64 / Self::PCAP_BW_BYTES_PER_S
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overlay::FuType;
+
+    #[test]
+    fn paper_8x8_is_1061_bytes() {
+        let spec = OverlaySpec::zynq_default();
+        let bs = OverlayBitstream::empty(&spec);
+        assert_eq!(bs.byte_size(), 1061);
+        assert_eq!(bs.to_bytes().len(), 1061);
+    }
+
+    #[test]
+    fn paper_config_time_is_42_us() {
+        let spec = OverlaySpec::zynq_default();
+        let t = ConfigSizeModel::overlay_config_seconds(&spec, 1061);
+        assert!((t * 1e6 - 42.4).abs() < 0.1, "{}", t * 1e6);
+    }
+
+    #[test]
+    fn fpga_config_time_is_31_6_ms() {
+        let t = ConfigSizeModel::fpga_config_seconds();
+        assert!((t * 1e3 - 31.6).abs() < 0.1, "{}", t * 1e3);
+    }
+
+    #[test]
+    fn config_speedup_is_about_750x() {
+        let spec = OverlaySpec::zynq_default();
+        let ratio = ConfigSizeModel::fpga_config_seconds()
+            / ConfigSizeModel::overlay_config_seconds(&spec, 1061);
+        assert!((700.0..800.0).contains(&ratio), "{ratio}");
+    }
+
+    #[test]
+    fn bitstream_round_trips() {
+        let spec = OverlaySpec::new(3, 5, FuType::Dsp1);
+        let mut bs = OverlayBitstream::empty(&spec);
+        bs.tiles[7] = TileConfig {
+            fu_mode: 1,
+            opcodes: [3, 4],
+            delays: [0x21, 0x03],
+            imm: -12345,
+            sb: [1, 2, 3, 4],
+            cb: [9, 8],
+        };
+        bs.pads[2] = 0x81;
+        let round = OverlayBitstream::from_bytes(&bs.to_bytes()).unwrap();
+        assert_eq!(round, bs);
+    }
+
+    #[test]
+    fn corrupted_bitstream_is_rejected() {
+        let spec = OverlaySpec::new(2, 2, FuType::Dsp1);
+        let mut bytes = OverlayBitstream::empty(&spec).to_bytes();
+        bytes[6] ^= 0xFF; // flip inside tile 0 payload
+        assert!(OverlayBitstream::from_bytes(&bytes).is_none());
+        // wrong magic
+        let mut bytes2 = OverlayBitstream::empty(&spec).to_bytes();
+        bytes2[0] = 0;
+        assert!(OverlayBitstream::from_bytes(&bytes2).is_none());
+        // truncated
+        let bytes3 = &OverlayBitstream::empty(&spec).to_bytes()[..10];
+        assert!(OverlayBitstream::from_bytes(bytes3).is_none());
+    }
+}

@@ -1,0 +1,22 @@
+//! The coarse-grained overlay architecture model (paper §III, Fig. 1).
+//!
+//! An island-style virtual FPGA: a `rows × cols` array of tiles, each
+//! holding one DSP-block functional unit, a switch box and connection
+//! boxes; 32-bit data channels with `channel_width` tracks per
+//! direction; I/O pads around the perimeter. Fully registered — every
+//! switch-box hop is one pipeline stage, giving II = 1 at a kernel-
+//! independent Fmax.
+//!
+//! * [`spec`] — the architecture description the OpenCL runtime exposes
+//!   to the JIT compiler (size, FU type, Fmax, peak GOPS).
+//! * [`rrg`] — the routing-resource graph PathFinder routes on.
+//! * [`config`] — the configuration word format and bitstream sizing
+//!   (1061 bytes / 42.4 µs for the 8×8 overlay, §IV).
+
+mod config;
+mod rrg;
+mod spec;
+
+pub use config::{ConfigSizeModel, OverlayBitstream, TileConfig};
+pub use rrg::{NodeId as RrgNodeId, RrgNode, RoutingGraph, Side};
+pub use spec::{FuType, OverlaySpec};

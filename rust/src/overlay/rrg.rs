@@ -1,0 +1,444 @@
+//! Routing-resource graph (RRG) of the island-style overlay.
+//!
+//! Node kinds (capacity 1 each, like VPR's rr-graph):
+//! * `FuOut(x,y)`           — the FU's registered output port;
+//! * `FuIn(x,y,pin)`        — one of 4 FU operand pins;
+//! * `Wire(x,y,side,track)` — a registered track segment leaving the
+//!   switch box of tile `(x,y)` toward `side`, landing at the
+//!   neighbouring switch box;
+//! * `PadOut(slot)` / `PadIn(slot)` — perimeter I/O (a slot can serve
+//!   as kernel input or output, not both).
+//!
+//! Connectivity: full output connection boxes (an FU or input pad can
+//! drive any track of its tile), a *disjoint* switch box (track t
+//! connects to track t of the 3 non-returning directions), full input
+//! connection boxes (any arriving track can feed any FU pin / output
+//! pad of the destination tile). Same-tile FU↔pad shortcuts model the
+//! local CB feed-through.
+
+use super::spec::OverlaySpec;
+
+/// Index into [`RoutingGraph::nodes`].
+pub type NodeId = usize;
+
+/// Cardinal sides, also used to number pad slots clockwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Side {
+    North,
+    East,
+    South,
+    West,
+}
+
+impl Side {
+    pub const ALL: [Side; 4] = [Side::North, Side::East, Side::South, Side::West];
+
+    pub fn index(self) -> usize {
+        match self {
+            Side::North => 0,
+            Side::East => 1,
+            Side::South => 2,
+            Side::West => 3,
+        }
+    }
+
+    pub fn opposite(self) -> Side {
+        match self {
+            Side::North => Side::South,
+            Side::East => Side::West,
+            Side::South => Side::North,
+            Side::West => Side::East,
+        }
+    }
+
+    /// (dx, dy) moving toward this side (y grows southward).
+    pub fn delta(self) -> (isize, isize) {
+        match self {
+            Side::North => (0, -1),
+            Side::East => (1, 0),
+            Side::South => (0, 1),
+            Side::West => (-1, 0),
+        }
+    }
+}
+
+/// A routing-resource node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RrgNode {
+    FuOut { x: usize, y: usize },
+    FuIn { x: usize, y: usize, pin: u8 },
+    Wire { x: usize, y: usize, side: Side, track: u8 },
+    PadOut { slot: usize },
+    PadIn { slot: usize },
+}
+
+/// FU input pins per tile (matches `fuaware::MAX_FU_INPUTS`).
+pub const FU_PINS: usize = 4;
+
+/// The overlay routing-resource graph.
+#[derive(Debug, Clone)]
+pub struct RoutingGraph {
+    pub spec: OverlaySpec,
+    pub nodes: Vec<RrgNode>,
+    /// Forward adjacency.
+    pub edges: Vec<Vec<NodeId>>,
+    rows: usize,
+    cols: usize,
+    width: usize,
+    base_fu_in: usize,
+    base_wire: usize,
+    base_pad_out: usize,
+    base_pad_in: usize,
+}
+
+impl RoutingGraph {
+    /// Build the RRG for `spec`.
+    pub fn build(spec: &OverlaySpec) -> Self {
+        let (rows, cols, w) = (spec.rows, spec.cols, spec.channel_width);
+        let tiles = rows * cols;
+        let pads = spec.io_pads();
+
+        let base_fu_out = 0;
+        let base_fu_in = base_fu_out + tiles;
+        let base_wire = base_fu_in + tiles * FU_PINS;
+        let base_pad_out = base_wire + tiles * 4 * w;
+        let base_pad_in = base_pad_out + pads;
+        let total = base_pad_in + pads;
+
+        // materialize nodes in index order (must mirror the id formulas)
+        let mut nodes = Vec::with_capacity(total);
+        for i in 0..tiles {
+            nodes.push(RrgNode::FuOut { x: i % cols, y: i / cols });
+        }
+        for i in 0..tiles {
+            for pin in 0..FU_PINS {
+                nodes.push(RrgNode::FuIn { x: i % cols, y: i / cols, pin: pin as u8 });
+            }
+        }
+        for i in 0..tiles {
+            for side in Side::ALL {
+                for t in 0..w {
+                    nodes.push(RrgNode::Wire { x: i % cols, y: i / cols, side, track: t as u8 });
+                }
+            }
+        }
+        for slot in 0..pads {
+            nodes.push(RrgNode::PadOut { slot });
+        }
+        for slot in 0..pads {
+            nodes.push(RrgNode::PadIn { slot });
+        }
+        debug_assert_eq!(nodes.len(), total);
+
+        let mut g = RoutingGraph {
+            spec: spec.clone(),
+            nodes,
+            edges: vec![Vec::new(); total],
+            rows,
+            cols,
+            width: w,
+            base_fu_in,
+            base_wire,
+            base_pad_out,
+            base_pad_in,
+        };
+        g.wire_up();
+        g
+    }
+
+    // ---- node id computation ----
+
+    pub fn fu_out(&self, x: usize, y: usize) -> NodeId {
+        y * self.cols + x
+    }
+
+    pub fn fu_in(&self, x: usize, y: usize, pin: usize) -> NodeId {
+        self.base_fu_in + (y * self.cols + x) * FU_PINS + pin
+    }
+
+    pub fn wire(&self, x: usize, y: usize, side: Side, track: usize) -> NodeId {
+        self.base_wire + ((y * self.cols + x) * 4 + side.index()) * self.width + track
+    }
+
+    pub fn pad_out(&self, slot: usize) -> NodeId {
+        self.base_pad_out + slot
+    }
+
+    pub fn pad_in(&self, slot: usize) -> NodeId {
+        self.base_pad_in + slot
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn num_pads(&self) -> usize {
+        self.spec.io_pads()
+    }
+
+    /// Tile adjacent to perimeter pad slot `slot` (slots run clockwise:
+    /// north row left→right, east column top→bottom, south row
+    /// right→left, west column bottom→top).
+    pub fn pad_tile(&self, slot: usize) -> (usize, usize) {
+        let (r, c) = (self.rows, self.cols);
+        if slot < c {
+            (slot, 0)
+        } else if slot < c + r {
+            (c - 1, slot - c)
+        } else if slot < 2 * c + r {
+            (c - 1 - (slot - c - r), r - 1)
+        } else {
+            (0, r - 1 - (slot - 2 * c - r))
+        }
+    }
+
+    /// Manhattan distance between tiles (router A* heuristic).
+    pub fn tile_dist(a: (usize, usize), b: (usize, usize)) -> usize {
+        a.0.abs_diff(b.0) + a.1.abs_diff(b.1)
+    }
+
+    /// Tile coordinates of a node (for heuristics / latency).
+    pub fn tile_of(&self, n: NodeId) -> (usize, usize) {
+        match self.nodes[n] {
+            RrgNode::FuOut { x, y }
+            | RrgNode::FuIn { x, y, .. }
+            | RrgNode::Wire { x, y, .. } => (x, y),
+            RrgNode::PadOut { slot } | RrgNode::PadIn { slot } => self.pad_tile(slot),
+        }
+    }
+
+    /// Does traversing this node cost one pipeline register?
+    /// (Wires are registered at each switch-box hop; ports are not.)
+    pub fn is_registered(&self, n: NodeId) -> bool {
+        matches!(self.nodes[n], RrgNode::Wire { .. })
+    }
+
+    // ---- construction ----
+
+    fn neighbor(&self, x: usize, y: usize, side: Side) -> Option<(usize, usize)> {
+        let (dx, dy) = side.delta();
+        let nx = x as isize + dx;
+        let ny = y as isize + dy;
+        if nx < 0 || ny < 0 || nx >= self.cols as isize || ny >= self.rows as isize {
+            None
+        } else {
+            Some((nx as usize, ny as usize))
+        }
+    }
+
+    fn wire_up(&mut self) {
+        let (rows, cols, w) = (self.rows, self.cols, self.width);
+
+        // FU outputs and input pads drive every track of their tile's SB
+        for y in 0..rows {
+            for x in 0..cols {
+                let from = self.fu_out(x, y);
+                for side in Side::ALL {
+                    if self.neighbor(x, y, side).is_none() {
+                        continue; // wires must land on a real SB
+                    }
+                    for t in 0..w {
+                        let to = self.wire(x, y, side, t);
+                        self.edges[from].push(to);
+                    }
+                }
+            }
+        }
+        for slot in 0..self.num_pads() {
+            let (x, y) = self.pad_tile(slot);
+            let from = self.pad_out(slot);
+            for side in Side::ALL {
+                if self.neighbor(x, y, side).is_none() {
+                    continue;
+                }
+                for t in 0..w {
+                    let to = self.wire(x, y, side, t);
+                    self.edges[from].push(to);
+                }
+            }
+            // local feed-through: pad directly into its tile's FU pins
+            for pin in 0..FU_PINS {
+                let to = self.fu_in(x, y, pin);
+                self.edges[from].push(to);
+            }
+        }
+
+        // wire -> (switch box at destination) -> wires out / FU pins / pads
+        for y in 0..rows {
+            for x in 0..cols {
+                for side in Side::ALL {
+                    let Some((nx, ny)) = self.neighbor(x, y, side) else { continue };
+                    for t in 0..w {
+                        let from = self.wire(x, y, side, t);
+                        // disjoint SB: same track, non-returning directions
+                        for out_side in Side::ALL {
+                            if out_side == side.opposite() {
+                                continue;
+                            }
+                            if self.neighbor(nx, ny, out_side).is_none() {
+                                continue;
+                            }
+                            let to = self.wire(nx, ny, out_side, t);
+                            self.edges[from].push(to);
+                        }
+                        // input connection box: any track -> any FU pin
+                        for pin in 0..FU_PINS {
+                            let to = self.fu_in(nx, ny, pin);
+                            self.edges[from].push(to);
+                        }
+                        // pads attached to the destination tile
+                        for slot in 0..self.num_pads() {
+                            if self.pad_tile(slot) == (nx, ny) {
+                                let to = self.pad_in(slot);
+                                self.edges[from].push(to);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // local FU -> same-tile pad shortcut (output CB feed-through)
+        for slot in 0..self.num_pads() {
+            let (x, y) = self.pad_tile(slot);
+            let from = self.fu_out(x, y);
+            let to = self.pad_in(slot);
+            self.edges[from].push(to);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::overlay::FuType;
+
+    fn rrg(n: usize) -> RoutingGraph {
+        RoutingGraph::build(&OverlaySpec::new(n, n, FuType::Dsp2))
+    }
+
+    #[test]
+    fn node_counts_add_up() {
+        let g = rrg(8);
+        let w = g.spec.channel_width;
+        let expect = 64 + 64 * FU_PINS + 64 * 4 * w + 2 * 32;
+        assert_eq!(g.num_nodes(), expect);
+    }
+
+    #[test]
+    fn node_id_round_trip() {
+        let g = rrg(4);
+        assert_eq!(g.nodes[g.fu_out(2, 3)], RrgNode::FuOut { x: 2, y: 3 });
+        assert_eq!(g.nodes[g.fu_in(1, 2, 3)], RrgNode::FuIn { x: 1, y: 2, pin: 3 });
+        assert_eq!(
+            g.nodes[g.wire(3, 0, Side::West, 1)],
+            RrgNode::Wire { x: 3, y: 0, side: Side::West, track: 1 }
+        );
+        assert_eq!(g.nodes[g.pad_out(5)], RrgNode::PadOut { slot: 5 });
+        assert_eq!(g.nodes[g.pad_in(9)], RrgNode::PadIn { slot: 9 });
+    }
+
+    #[test]
+    fn pad_slots_cover_perimeter_once() {
+        let g = rrg(8);
+        let mut seen = std::collections::HashSet::new();
+        for slot in 0..g.num_pads() {
+            let (x, y) = g.pad_tile(slot);
+            assert!(x == 0 || y == 0 || x == 7 || y == 7, "pad not on perimeter");
+            seen.insert((slot, x, y));
+        }
+        assert_eq!(seen.len(), 32);
+        // corners get two slots (one per touching side)
+        let corner_slots = (0..g.num_pads())
+            .filter(|&s| g.pad_tile(s) == (7, 0))
+            .count();
+        assert_eq!(corner_slots, 2);
+    }
+
+    #[test]
+    fn boundary_wires_do_not_leave_grid() {
+        let g = rrg(4);
+        // no edge should target a wire whose destination is outside:
+        // construction never creates them, so just check edge targets
+        // land on valid nodes (vec bounds prove it) and that a corner
+        // FU can still reach somewhere.
+        assert!(!g.edges[g.fu_out(0, 0)].is_empty());
+        // wire heading North from row 0 must not exist as an edge target
+        for (i, outs) in g.edges.iter().enumerate() {
+            for &o in outs {
+                if let RrgNode::Wire { x, y, side, .. } = g.nodes[o] {
+                    assert!(
+                        g.nodes.len() > i && {
+                            let (dx, dy) = side.delta();
+                            let nx = x as isize + dx;
+                            let ny = y as isize + dy;
+                            nx >= 0 && ny >= 0 && nx < 4 && ny < 4
+                        },
+                        "edge into a wire that leaves the fabric"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_switchbox_preserves_track() {
+        let g = rrg(4);
+        let from = g.wire(1, 1, Side::East, 0); // lands at (2,1)
+        for &to in &g.edges[from] {
+            if let RrgNode::Wire { track, side, x, y } = g.nodes[to] {
+                assert_eq!(track, 0, "disjoint SB must keep the track index");
+                assert_eq!((x, y), (2, 1));
+                assert_ne!(side, Side::West, "no U-turn");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_reaches_all_fu_pins_of_destination() {
+        let g = rrg(4);
+        let from = g.wire(0, 0, Side::East, 1); // lands at (1,0)
+        let pins: Vec<_> = g.edges[from]
+            .iter()
+            .filter(|&&to| matches!(g.nodes[to], RrgNode::FuIn { x: 1, y: 0, .. }))
+            .collect();
+        assert_eq!(pins.len(), FU_PINS);
+    }
+
+    #[test]
+    fn every_fu_can_reach_every_pad(/* connectivity smoke via BFS */) {
+        let g = rrg(4);
+        // BFS from FU (0,0) output must reach all pad_in nodes
+        let mut seen = vec![false; g.num_nodes()];
+        let mut q = std::collections::VecDeque::new();
+        let s = g.fu_out(0, 0);
+        seen[s] = true;
+        q.push_back(s);
+        while let Some(u) = q.pop_front() {
+            for &v in &g.edges[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    q.push_back(v);
+                }
+            }
+        }
+        for slot in 0..g.num_pads() {
+            assert!(seen[g.pad_in(slot)], "pad {slot} unreachable");
+        }
+        for y in 0..4 {
+            for x in 0..4 {
+                for pin in 0..FU_PINS {
+                    assert!(seen[g.fu_in(x, y, pin)], "fu_in {x},{y},{pin} unreachable");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pads_feed_fus_and_wires() {
+        let g = rrg(4);
+        let outs = &g.edges[g.pad_out(0)]; // north-west corner area
+        assert!(outs.iter().any(|&o| matches!(g.nodes[o], RrgNode::Wire { .. })));
+        assert!(outs.iter().any(|&o| matches!(g.nodes[o], RrgNode::FuIn { .. })));
+    }
+}

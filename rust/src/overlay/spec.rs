@@ -1,0 +1,172 @@
+//! Overlay architecture description.
+//!
+//! This is the structure the paper's OpenCL runtime exposes to the
+//! compiler ("the overlay size and FU type are exposed by the OpenCL
+//! runtime", §IV) so it can replicate kernels resource-awarely.
+
+/// Functional-unit flavour: how many DSP blocks each FU contains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FuType {
+    /// One DSP48 per FU — the FCCM'15 overlay (338 MHz on Zynq).
+    Dsp1,
+    /// Two cascaded DSP48s per FU — the DATE'16 overlay (300 MHz).
+    Dsp2,
+}
+
+impl FuType {
+    pub fn dsps_per_fu(self) -> usize {
+        match self {
+            FuType::Dsp1 => 1,
+            FuType::Dsp2 => 2,
+        }
+    }
+
+    /// Published Fmax on the Zynq XC7Z020 fabric [13,14]. Kernel
+    /// independent: the overlay datapath is fully registered.
+    pub fn fmax_mhz(self) -> f64 {
+        match self {
+            FuType::Dsp1 => 338.0,
+            FuType::Dsp2 => 300.0,
+        }
+    }
+
+    /// Peak arithmetic ops per DSP block per cycle (mul + post-add +
+    /// pre-add in the DSP48E1 cascade).
+    pub fn ops_per_dsp(self) -> usize {
+        3
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FuType::Dsp1 => "dsp1",
+            FuType::Dsp2 => "dsp2",
+        }
+    }
+}
+
+/// Full overlay architecture description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OverlaySpec {
+    /// Tile grid size.
+    pub rows: usize,
+    pub cols: usize,
+    pub fu_type: FuType,
+    /// Routing tracks per channel per direction.
+    pub channel_width: usize,
+    /// Maximum FU input delay-chain depth. One SRLC32E per FU input
+    /// pin gives 32 balancing registers [13,14] — enough to absorb the
+    /// full-pipeline skew of a direct input-to-final-op edge (e.g. the
+    /// Chebyshev kernel's outer multiply).
+    pub delay_chain_max: u32,
+    /// Pipeline stages of one DSP op inside the FU.
+    pub fu_op_latency: u32,
+    /// Registers per switch-box hop.
+    pub hop_latency: u32,
+    /// Configuration port bandwidth, bytes/s (AXI-lite config bus).
+    pub config_bw_bytes_per_s: f64,
+}
+
+impl OverlaySpec {
+    /// The paper's main target: 8×8, two DSPs per FU, on the Zynq.
+    pub fn zynq_default() -> Self {
+        Self::new(8, 8, FuType::Dsp2)
+    }
+
+    pub fn new(rows: usize, cols: usize, fu_type: FuType) -> Self {
+        OverlaySpec {
+            rows,
+            cols,
+            fu_type,
+            channel_width: 4,
+            delay_chain_max: 32,
+            fu_op_latency: 3,
+            hop_latency: 1,
+            // 1061 bytes in 42.4 us (§IV) -> 25.02 MB/s
+            config_bw_bytes_per_s: 25.02e6,
+        }
+    }
+
+    /// `"8x8-dsp2"` style identifier (artifact names, reports).
+    pub fn name(&self) -> String {
+        format!("{}x{}-{}", self.rows, self.cols, self.fu_type.name())
+    }
+
+    pub fn fu_count(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// DSP blocks consumed on the host fabric.
+    pub fn dsp_count(&self) -> usize {
+        self.fu_count() * self.fu_type.dsps_per_fu()
+    }
+
+    /// Perimeter I/O pads (one stream each, input or output).
+    pub fn io_pads(&self) -> usize {
+        2 * (self.rows + self.cols)
+    }
+
+    pub fn fmax_mhz(&self) -> f64 {
+        self.fu_type.fmax_mhz()
+    }
+
+    /// Peak throughput in GOPS (Fig. 6's 100% line):
+    /// `FUs × DSPs/FU × 3 ops × Fmax`.
+    pub fn peak_gops(&self) -> f64 {
+        (self.dsp_count() * self.fu_type.ops_per_dsp()) as f64 * self.fmax_mhz() / 1000.0
+    }
+
+    /// Op *slots* available to the slot-schedule backends: one DSP
+    /// executes one DFG op per cycle.
+    pub fn op_slots(&self) -> usize {
+        self.dsp_count()
+    }
+
+    /// The overlay sweep of Fig. 5/6: 2×2 … 8×8.
+    pub fn size_sweep(fu_type: FuType) -> Vec<OverlaySpec> {
+        (2..=8).map(|n| OverlaySpec::new(n, n, fu_type)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zynq_8x8_dsp2_matches_paper_peak() {
+        // §III: "an overlay with two DSPs per FU can provide a peak
+        // throughput of 115 GOPS" on the XC7Z020.
+        let s = OverlaySpec::zynq_default();
+        assert_eq!(s.fu_count(), 64);
+        assert_eq!(s.dsp_count(), 128);
+        assert_eq!(s.io_pads(), 32);
+        assert!((s.peak_gops() - 115.2).abs() < 0.5, "{}", s.peak_gops());
+    }
+
+    #[test]
+    fn dsp1_8x8_matches_65_gops() {
+        // Fig. 6: "43% of the peak overlay throughput of 65 GOPS"
+        let s = OverlaySpec::new(8, 8, FuType::Dsp1);
+        assert!((s.peak_gops() - 64.9).abs() < 0.5, "{}", s.peak_gops());
+    }
+
+    #[test]
+    fn sweep_is_2x2_to_8x8() {
+        let sweep = OverlaySpec::size_sweep(FuType::Dsp2);
+        assert_eq!(sweep.len(), 7);
+        assert_eq!(sweep[0].fu_count(), 4);
+        assert_eq!(sweep[6].fu_count(), 64);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(OverlaySpec::zynq_default().name(), "8x8-dsp2");
+        assert_eq!(OverlaySpec::new(2, 2, FuType::Dsp1).name(), "2x2-dsp1");
+    }
+
+    #[test]
+    fn peak_scales_with_area() {
+        let small = OverlaySpec::new(2, 2, FuType::Dsp2);
+        let big = OverlaySpec::new(8, 8, FuType::Dsp2);
+        assert!((big.peak_gops() / small.peak_gops() - 16.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,536 @@
+//! Simulated-annealing placement — the VPR placer stand-in (§III-D).
+//!
+//! Places FU blocks onto overlay tiles and I/O streams onto perimeter
+//! pad slots, minimizing total half-perimeter wirelength (HPWL) with
+//! the classic VPR adaptive schedule:
+//!
+//! * `moves_per_T = 10 · movables^{4/3}`;
+//! * initial temperature from the standard deviation of random-move
+//!   deltas;
+//! * cooling factor adapted to the acceptance rate (0.5/0.9/0.95/0.8
+//!   bands), range-limit window shrinking as acceptance drops;
+//! * exit when `T < 0.005 · cost / nets`.
+//!
+//! All randomness flows through a seeded [`XorShiftRng`]; a given
+//! `(netlist, spec, seed)` reproduces the same placement bit-for-bit.
+
+use anyhow::{bail, Result};
+
+use crate::fuaware::NetEndpoint;
+use crate::netlist::FuNetlist;
+use crate::overlay::{OverlaySpec, RoutingGraph};
+use crate::util::XorShiftRng;
+
+/// A placement of every block in a [`FuNetlist`].
+#[derive(Debug, Clone)]
+pub struct Placement {
+    /// FU id → tile (x, y).
+    pub fu_tile: Vec<(usize, usize)>,
+    /// Input port → perimeter pad slot.
+    pub in_slot: Vec<usize>,
+    /// Output port → perimeter pad slot.
+    pub out_slot: Vec<usize>,
+    /// Final HPWL cost.
+    pub cost: f64,
+    /// SA moves evaluated (report metric).
+    pub moves_evaluated: usize,
+}
+
+impl Placement {
+    /// Tile position of a net endpoint (pads map to their adjacent tile).
+    pub fn position(&self, g: &RoutingGraph, ep: NetEndpoint) -> (usize, usize) {
+        match ep {
+            NetEndpoint::Fu(f) => self.fu_tile[f],
+            NetEndpoint::InPad(p) => g.pad_tile(self.in_slot[p]),
+            NetEndpoint::OutPad(p) => g.pad_tile(self.out_slot[p]),
+        }
+    }
+}
+
+/// Movable object: an FU or a pad of either direction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Movable {
+    Fu(usize),
+    InPad(usize),
+    OutPad(usize),
+}
+
+struct State<'a> {
+    nl: &'a FuNetlist,
+    rrg: &'a RoutingGraph,
+    cols: usize,
+    rows: usize,
+    fu_tile: Vec<usize>,       // fu -> tile index (y*cols+x)
+    tile_occ: Vec<Option<usize>>, // tile -> fu
+    in_slot: Vec<usize>,
+    out_slot: Vec<usize>,
+    slot_occ: Vec<Option<Movable>>, // pad slot -> pad
+    net_cost: Vec<f64>,
+    nets_of: Vec<Vec<usize>>, // movable index -> net ids touching it
+    movables: Vec<Movable>,
+    // §Perf: per-move scratch (net-id dedup) — no allocation in the
+    // annealing inner loop
+    net_scratch: Vec<usize>,
+    net_seen: Vec<u32>,
+    seen_stamp: u32,
+}
+
+impl<'a> State<'a> {
+    fn movable_index(&self, m: Movable) -> usize {
+        match m {
+            Movable::Fu(f) => f,
+            Movable::InPad(p) => self.nl.num_fus + p,
+            Movable::OutPad(p) => self.nl.num_fus + self.nl.num_inputs + p,
+        }
+    }
+
+    fn pos_of(&self, ep: NetEndpoint) -> (usize, usize) {
+        match ep {
+            NetEndpoint::Fu(f) => {
+                let t = self.fu_tile[f];
+                (t % self.cols, t / self.cols)
+            }
+            NetEndpoint::InPad(p) => self.rrg.pad_tile(self.in_slot[p]),
+            NetEndpoint::OutPad(p) => self.rrg.pad_tile(self.out_slot[p]),
+        }
+    }
+
+    /// HPWL of one net, with VPR's fanout correction q(n).
+    fn compute_net_cost(&self, net: usize) -> f64 {
+        let n = &self.nl.nets[net];
+        let (mut x0, mut y0) = self.pos_of(n.src);
+        let (mut x1, mut y1) = (x0, y0);
+        for (s, _) in &n.sinks {
+            let (x, y) = self.pos_of(*s);
+            x0 = x0.min(x);
+            y0 = y0.min(y);
+            x1 = x1.max(x);
+            y1 = y1.max(y);
+        }
+        let q = 1.0 + 0.05 * (n.sinks.len().saturating_sub(3)) as f64;
+        q * ((x1 - x0) + (y1 - y0)) as f64
+    }
+
+    fn total_cost(&self) -> f64 {
+        self.net_cost.iter().sum()
+    }
+
+    /// Apply a move; returns (delta cost, the inverse move).
+    fn apply(&mut self, mv: &Move) -> (f64, Move) {
+        // collect affected movables before mutating
+        let (affected, undo): ([Option<Movable>; 2], Move) = match *mv {
+            Move::FuSwap { a, tile_b } => {
+                let tile_a = self.fu_tile[a];
+                let other = self.tile_occ[tile_b];
+                self.tile_occ[tile_a] = other;
+                self.tile_occ[tile_b] = Some(a);
+                self.fu_tile[a] = tile_b;
+                if let Some(b) = other {
+                    self.fu_tile[b] = tile_a;
+                }
+                let aff = [Some(Movable::Fu(a)), other.map(Movable::Fu)];
+                (aff, Move::FuSwap { a, tile_b: tile_a })
+            }
+            Move::PadSwap { a, slot_b } => {
+                let slot_a = match a {
+                    Movable::InPad(p) => self.in_slot[p],
+                    Movable::OutPad(p) => self.out_slot[p],
+                    Movable::Fu(_) => unreachable!(),
+                };
+                let other = self.slot_occ[slot_b];
+                self.slot_occ[slot_a] = other;
+                self.slot_occ[slot_b] = Some(a);
+                match a {
+                    Movable::InPad(p) => self.in_slot[p] = slot_b,
+                    Movable::OutPad(p) => self.out_slot[p] = slot_b,
+                    Movable::Fu(_) => unreachable!(),
+                }
+                match other {
+                    Some(Movable::InPad(p)) => self.in_slot[p] = slot_a,
+                    Some(Movable::OutPad(p)) => self.out_slot[p] = slot_a,
+                    _ => {}
+                }
+                let aff = [Some(a), other];
+                (aff, Move::PadSwap { a, slot_b: slot_a })
+            }
+        };
+
+        // recompute nets touching the affected movables (stamped
+        // dedup, zero allocation)
+        self.seen_stamp += 1;
+        let st = self.seen_stamp;
+        self.net_scratch.clear();
+        for m in affected.into_iter().flatten() {
+            for &n in &self.nets_of[self.movable_index(m)] {
+                if self.net_seen[n] != st {
+                    self.net_seen[n] = st;
+                    self.net_scratch.push(n);
+                }
+            }
+        }
+        let mut delta = 0.0;
+        for i in 0..self.net_scratch.len() {
+            let net = self.net_scratch[i];
+            let new = self.compute_net_cost(net);
+            delta += new - self.net_cost[net];
+            self.net_cost[net] = new;
+        }
+        (delta, undo)
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Move {
+    /// Move FU `a` to `tile_b` (swapping with any occupant).
+    FuSwap { a: usize, tile_b: usize },
+    /// Move pad `a` to `slot_b` (swapping with any occupant).
+    PadSwap { a: Movable, slot_b: usize },
+}
+
+/// Placer effort knobs (VPR's `inner_num`: scales moves per
+/// temperature; 1.0 = the classic 10·n^{4/3}).
+#[derive(Debug, Clone, Copy)]
+pub struct PlacerOptions {
+    pub inner_num: f64,
+}
+
+impl Default for PlacerOptions {
+    fn default() -> Self {
+        PlacerOptions { inner_num: 1.0 }
+    }
+}
+
+/// Place `nl` onto `spec`'s overlay. Deterministic for a given seed.
+pub fn place(
+    nl: &FuNetlist,
+    spec: &OverlaySpec,
+    rrg: &RoutingGraph,
+    seed: u64,
+) -> Result<Placement> {
+    place_with(nl, spec, rrg, seed, &PlacerOptions::default())
+}
+
+/// [`place`] with explicit effort options.
+pub fn place_with(
+    nl: &FuNetlist,
+    spec: &OverlaySpec,
+    rrg: &RoutingGraph,
+    seed: u64,
+    opts: &PlacerOptions,
+) -> Result<Placement> {
+    let tiles = spec.fu_count();
+    let pads = spec.io_pads();
+    if nl.num_fus > tiles {
+        bail!(
+            "kernel needs {} FUs but the {} overlay has {}",
+            nl.num_fus,
+            spec.name(),
+            tiles
+        );
+    }
+    if nl.num_inputs + nl.num_outputs > pads {
+        bail!(
+            "kernel needs {} I/O streams but the {} overlay has {} pads",
+            nl.num_inputs + nl.num_outputs,
+            spec.name(),
+            pads
+        );
+    }
+
+    let mut rng = XorShiftRng::new(seed ^ 0x504C_4143); // "PLAC"
+
+    // ---- initial random placement ----
+    let mut tile_perm: Vec<usize> = (0..tiles).collect();
+    rng.shuffle(&mut tile_perm);
+    let fu_tile: Vec<usize> = tile_perm[..nl.num_fus].to_vec();
+    let mut tile_occ = vec![None; tiles];
+    for (f, &t) in fu_tile.iter().enumerate() {
+        tile_occ[t] = Some(f);
+    }
+    let mut slot_perm: Vec<usize> = (0..pads).collect();
+    rng.shuffle(&mut slot_perm);
+    let in_slot: Vec<usize> = slot_perm[..nl.num_inputs].to_vec();
+    let out_slot: Vec<usize> =
+        slot_perm[nl.num_inputs..nl.num_inputs + nl.num_outputs].to_vec();
+    let mut slot_occ: Vec<Option<Movable>> = vec![None; pads];
+    for (p, &s) in in_slot.iter().enumerate() {
+        slot_occ[s] = Some(Movable::InPad(p));
+    }
+    for (p, &s) in out_slot.iter().enumerate() {
+        slot_occ[s] = Some(Movable::OutPad(p));
+    }
+
+    let mut movables: Vec<Movable> = (0..nl.num_fus).map(Movable::Fu).collect();
+    movables.extend((0..nl.num_inputs).map(Movable::InPad));
+    movables.extend((0..nl.num_outputs).map(Movable::OutPad));
+
+    // nets touching each movable
+    let n_movables = movables.len();
+    let mut nets_of: Vec<Vec<usize>> = vec![Vec::new(); n_movables];
+    for (ni, net) in nl.nets.iter().enumerate() {
+        let mut eps = vec![net.src];
+        eps.extend(net.sinks.iter().map(|(s, _)| *s));
+        for ep in eps {
+            let idx = match ep {
+                NetEndpoint::Fu(f) => f,
+                NetEndpoint::InPad(p) => nl.num_fus + p,
+                NetEndpoint::OutPad(p) => nl.num_fus + nl.num_inputs + p,
+            };
+            if !nets_of[idx].contains(&ni) {
+                nets_of[idx].push(ni);
+            }
+        }
+    }
+
+    let mut st = State {
+        nl,
+        rrg,
+        cols: spec.cols,
+        rows: spec.rows,
+        fu_tile,
+        tile_occ,
+        in_slot,
+        out_slot,
+        slot_occ,
+        net_cost: vec![0.0; nl.nets.len()],
+        nets_of,
+        movables,
+        net_scratch: Vec::with_capacity(16),
+        net_seen: vec![0; nl.nets.len()],
+        seen_stamp: 0,
+    };
+    for ni in 0..nl.nets.len() {
+        st.net_cost[ni] = st.compute_net_cost(ni);
+    }
+    let mut cost = st.total_cost();
+    let mut moves_evaluated = 0usize;
+
+    if nl.nets.is_empty() || st.movables.is_empty() {
+        return Ok(finish(st, cost, moves_evaluated));
+    }
+
+    // ---- initial temperature: std-dev of random move deltas ----
+    let probe = (20 * st.movables.len()).max(50);
+    let mut deltas = Vec::with_capacity(probe);
+    for _ in 0..probe {
+        let mv = random_move(&st, &mut rng, usize::MAX);
+        let (d, _undo) = st.apply(&mv);
+        deltas.push(d);
+        cost += d;
+        moves_evaluated += 1;
+    }
+    let mean = deltas.iter().sum::<f64>() / deltas.len() as f64;
+    let var =
+        deltas.iter().map(|d| (d - mean) * (d - mean)).sum::<f64>() / deltas.len() as f64;
+    let mut temp = 20.0 * var.sqrt().max(1.0);
+
+    // ---- annealing ----
+    let moves_per_t = ((opts.inner_num * 10.0
+        * (st.movables.len() as f64).powf(4.0 / 3.0)) as usize)
+        .max(60);
+    let mut window = st.cols.max(st.rows); // range limit
+    let exit_t = |cost: f64, nets: usize| 0.005 * cost / nets.max(1) as f64;
+
+    while temp > exit_t(cost, nl.nets.len()) && cost > 0.0 {
+        let mut accepted = 0usize;
+        for _ in 0..moves_per_t {
+            let mv = random_move(&st, &mut rng, window);
+            let (d, undo) = st.apply(&mv);
+            moves_evaluated += 1;
+            if d <= 0.0 || rng.gen_f64() < (-d / temp).exp() {
+                accepted += 1;
+                cost += d;
+            } else {
+                let (back, _) = st.apply(&undo);
+                debug_assert!((back + d).abs() < 1e-6);
+            }
+        }
+        let rate = accepted as f64 / moves_per_t as f64;
+        temp *= match rate {
+            r if r > 0.96 => 0.5,
+            r if r > 0.8 => 0.9,
+            r if r > 0.15 => 0.95,
+            _ => 0.8,
+        };
+        // shrink the range window as acceptance falls (VPR rule of 0.44)
+        if rate < 0.44 && window > 1 {
+            window -= 1;
+        }
+    }
+
+    Ok(finish(st, cost, moves_evaluated))
+}
+
+fn finish(st: State<'_>, cost: f64, moves_evaluated: usize) -> Placement {
+    Placement {
+        fu_tile: st
+            .fu_tile
+            .iter()
+            .map(|&t| (t % st.cols, t / st.cols))
+            .collect(),
+        in_slot: st.in_slot.clone(),
+        out_slot: st.out_slot.clone(),
+        cost,
+        moves_evaluated,
+    }
+}
+
+fn random_move(st: &State<'_>, rng: &mut XorShiftRng, window: usize) -> Move {
+    let m = *rng.choose(&st.movables);
+    match m {
+        Movable::Fu(f) => {
+            let cur = st.fu_tile[f];
+            let (cx, cy) = (cur % st.cols, cur / st.cols);
+            // pick a target tile within the range window
+            for _ in 0..8 {
+                let tx = clamp_window(cx, window, st.cols, rng);
+                let ty = clamp_window(cy, window, st.rows, rng);
+                let t = ty * st.cols + tx;
+                if t != cur {
+                    return Move::FuSwap { a: f, tile_b: t };
+                }
+            }
+            Move::FuSwap { a: f, tile_b: rng.gen_range(st.cols * st.rows) }
+        }
+        pad => {
+            let slots = st.slot_occ.len();
+            let cur = match pad {
+                Movable::InPad(p) => st.in_slot[p],
+                Movable::OutPad(p) => st.out_slot[p],
+                Movable::Fu(_) => unreachable!(),
+            };
+            let mut s = rng.gen_range(slots);
+            if s == cur {
+                s = (s + 1) % slots;
+            }
+            Move::PadSwap { a: pad, slot_b: s }
+        }
+    }
+}
+
+fn clamp_window(c: usize, window: usize, dim: usize, rng: &mut XorShiftRng) -> usize {
+    if window >= dim {
+        return rng.gen_range(dim);
+    }
+    let lo = c.saturating_sub(window);
+    let hi = (c + window).min(dim - 1);
+    lo + rng.gen_range(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::fuaware::to_fu_graph;
+    use crate::ir::{lower_kernel, optimize};
+    use crate::netlist::build_netlist;
+    use crate::overlay::FuType;
+
+    const PAPER: &str = "__kernel void example_kernel(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    fn paper_netlist(dsps: usize) -> FuNetlist {
+        let f = lower_kernel(&parse_kernel(PAPER).unwrap()).unwrap();
+        let dfg = crate::dfg::extract_dfg(&optimize(&f).0).unwrap();
+        build_netlist(&to_fu_graph(&dfg, dsps).unwrap())
+    }
+
+    fn assert_legal(p: &Placement, spec: &OverlaySpec) {
+        // no two FUs on one tile
+        let mut seen = std::collections::HashSet::new();
+        for &(x, y) in &p.fu_tile {
+            assert!(x < spec.cols && y < spec.rows);
+            assert!(seen.insert((x, y)), "tile ({x},{y}) double-occupied");
+        }
+        // no two pads on one slot
+        let mut slots = std::collections::HashSet::new();
+        for &s in p.in_slot.iter().chain(p.out_slot.iter()) {
+            assert!(s < spec.io_pads());
+            assert!(slots.insert(s), "pad slot {s} double-occupied");
+        }
+    }
+
+    #[test]
+    fn places_paper_kernel_on_5x5() {
+        // Fig. 3(c): the example kernel placed on a 5×5 overlay
+        let spec = OverlaySpec::new(5, 5, FuType::Dsp2);
+        let rrg = RoutingGraph::build(&spec);
+        let nl = paper_netlist(2);
+        let p = place(&nl, &spec, &rrg, 1).unwrap();
+        assert_legal(&p, &spec);
+        assert_eq!(p.fu_tile.len(), 3);
+    }
+
+    #[test]
+    fn placement_is_deterministic_per_seed() {
+        let spec = OverlaySpec::new(5, 5, FuType::Dsp1);
+        let rrg = RoutingGraph::build(&spec);
+        let nl = paper_netlist(1);
+        let a = place(&nl, &spec, &rrg, 42).unwrap();
+        let b = place(&nl, &spec, &rrg, 42).unwrap();
+        assert_eq!(a.fu_tile, b.fu_tile);
+        assert_eq!(a.in_slot, b.in_slot);
+        assert_eq!(a.cost, b.cost);
+    }
+
+    #[test]
+    fn different_seeds_explore_differently() {
+        let spec = OverlaySpec::new(8, 8, FuType::Dsp1);
+        let rrg = RoutingGraph::build(&spec);
+        let nl = paper_netlist(1);
+        let a = place(&nl, &spec, &rrg, 1).unwrap();
+        let b = place(&nl, &spec, &rrg, 2).unwrap();
+        // costs land close but layouts almost surely differ
+        assert!(a.fu_tile != b.fu_tile || a.in_slot != b.in_slot);
+    }
+
+    #[test]
+    fn annealing_beats_random_start() {
+        // place on a big grid where the random start is certainly bad
+        let spec = OverlaySpec::new(8, 8, FuType::Dsp1);
+        let rrg = RoutingGraph::build(&spec);
+        let nl = paper_netlist(1);
+        let p = place(&nl, &spec, &rrg, 3).unwrap();
+        // 5 FUs + 2 pads, all nets should pull into a tight cluster:
+        // final HPWL must be small (each net spans <= ~3 tiles)
+        assert!(p.cost <= 20.0, "cost {} too high", p.cost);
+        assert!(p.moves_evaluated > 100);
+    }
+
+    #[test]
+    fn rejects_kernel_too_big_for_overlay() {
+        let spec = OverlaySpec::new(2, 2, FuType::Dsp1); // 4 FUs
+        let rrg = RoutingGraph::build(&spec);
+        let nl = paper_netlist(1); // needs 5
+        assert!(place(&nl, &spec, &rrg, 1).is_err());
+    }
+
+    #[test]
+    fn cost_bookkeeping_is_consistent() {
+        // incremental cost must match a from-scratch recomputation
+        let spec = OverlaySpec::new(6, 6, FuType::Dsp2);
+        let rrg = RoutingGraph::build(&spec);
+        let nl = paper_netlist(2);
+        let p = place(&nl, &spec, &rrg, 9).unwrap();
+        // rebuild cost from final positions
+        let pos = |ep: NetEndpoint| p.position(&rrg, ep);
+        let mut total = 0.0;
+        for n in &nl.nets {
+            let (mut x0, mut y0) = pos(n.src);
+            let (mut x1, mut y1) = (x0, y0);
+            for (s, _) in &n.sinks {
+                let (x, y) = pos(*s);
+                x0 = x0.min(x);
+                y0 = y0.min(y);
+                x1 = x1.max(x);
+                y1 = y1.max(y);
+            }
+            let q = 1.0 + 0.05 * (n.sinks.len().saturating_sub(3)) as f64;
+            total += q * ((x1 - x0) + (y1 - y0)) as f64;
+        }
+        assert!((total - p.cost).abs() < 1e-9, "{} vs {}", total, p.cost);
+    }
+}

@@ -1,0 +1,272 @@
+//! Resource-aware kernel replication (paper §III-C / §IV).
+//!
+//! The OpenCL runtime exposes the overlay's size and FU type; the
+//! compiler replicates the kernel's FU-aware DFG as many times as the
+//! *binding* resource allows. On the 8×8 two-DSP overlay the paper
+//! reports exactly the limits this module computes: Chebyshev is
+//! I/O-limited at 16 copies (32 pads / 2 streams), while with one-DSP
+//! FUs it is FU-limited at 12 copies (64 / 5).
+
+use anyhow::{bail, Result};
+
+use crate::dfg::{Dfg, NodeKind};
+use crate::fuaware::FuGraph;
+use crate::overlay::OverlaySpec;
+
+/// Which resource capped the replication factor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LimitReason {
+    /// Overlay FU count.
+    Fu,
+    /// Perimeter I/O pads.
+    Io,
+    /// AOT emulator op-slot budget (execution backend).
+    EmuSlots,
+    /// AOT emulator input-column budget (execution backend).
+    EmuInputs,
+}
+
+impl LimitReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            LimitReason::Fu => "FU-limited",
+            LimitReason::Io => "I/O-limited",
+            LimitReason::EmuSlots => "emulator-slot-limited",
+            LimitReason::EmuInputs => "emulator-input-limited",
+        }
+    }
+}
+
+/// Resource arithmetic of a replication decision.
+#[derive(Debug, Clone)]
+pub struct ReplicationPlan {
+    pub factor: usize,
+    pub limit: LimitReason,
+    pub fus_per_copy: usize,
+    pub io_per_copy: usize,
+    pub ops_per_copy: usize,
+    pub fu_capacity: usize,
+    pub io_capacity: usize,
+}
+
+/// Optional execution-backend limits (op slots, input columns) from
+/// the AOT emulator geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendLimits {
+    pub max_op_slots: usize,
+    pub max_inputs: usize,
+}
+
+/// Decide the replication factor for one kernel copy described by `fg`.
+pub fn plan(
+    fg: &FuGraph,
+    spec: &OverlaySpec,
+    backend: Option<BackendLimits>,
+) -> Result<ReplicationPlan> {
+    let fus_per_copy = fg.num_fus();
+    let io_per_copy = fg.dfg.num_io();
+    let ops_per_copy = fg.dfg.num_ops();
+    if fus_per_copy == 0 {
+        bail!("kernel has no FUs");
+    }
+
+    let fu_capacity = spec.fu_count();
+    let io_capacity = spec.io_pads();
+    let mut factor = fu_capacity / fus_per_copy;
+    let mut limit = LimitReason::Fu;
+
+    let by_io = io_capacity / io_per_copy.max(1);
+    if by_io < factor {
+        factor = by_io;
+        limit = LimitReason::Io;
+    }
+    if let Some(b) = backend {
+        let by_slots = b.max_op_slots / ops_per_copy.max(1);
+        if by_slots < factor {
+            factor = by_slots;
+            limit = LimitReason::EmuSlots;
+        }
+        let by_inputs = b.max_inputs / fg.dfg.num_inputs().max(1);
+        if by_inputs < factor {
+            factor = by_inputs;
+            limit = LimitReason::EmuInputs;
+        }
+    }
+
+    if factor == 0 {
+        bail!(
+            "kernel does not fit the {} overlay: needs {} FUs / {} I/O \
+             (capacity {} / {})",
+            spec.name(),
+            fus_per_copy,
+            io_per_copy,
+            fu_capacity,
+            io_capacity
+        );
+    }
+    Ok(ReplicationPlan {
+        factor,
+        limit,
+        fus_per_copy,
+        io_per_copy,
+        ops_per_copy,
+        fu_capacity,
+        io_capacity,
+    })
+}
+
+/// Build a DFG with `factor` disjoint copies of `dfg`. Stream ports are
+/// renumbered copy-major: copy `r`'s input `i` becomes port
+/// `r * inputs_per_copy + i` (and likewise for outputs), which is also
+/// the layout the host runtime packs value-table columns in.
+pub fn replicate_dfg(dfg: &Dfg, factor: usize) -> Dfg {
+    let mut out = Dfg::new(dfg.name.clone());
+    let n_in = dfg.num_inputs();
+    let n_out = dfg.num_outputs();
+    for r in 0..factor {
+        for name in &dfg.input_names {
+            out.input_names.push(if factor == 1 {
+                name.clone()
+            } else {
+                format!("{name}#{r}")
+            });
+        }
+        for name in &dfg.output_names {
+            out.output_names.push(if factor == 1 {
+                name.clone()
+            } else {
+                format!("{name}#{r}")
+            });
+        }
+        out.input_meta.extend(dfg.input_meta.iter().copied());
+        out.output_meta.extend(dfg.output_meta.iter().copied());
+    }
+    for r in 0..factor {
+        let base = out.nodes.len();
+        for node in &dfg.nodes {
+            let kind = match &node.kind {
+                NodeKind::InVar { port } => NodeKind::InVar { port: r * n_in + port },
+                NodeKind::OutVar { port } => NodeKind::OutVar { port: r * n_out + port },
+                op => op.clone(),
+            };
+            out.add_node(kind);
+        }
+        for e in &dfg.edges {
+            out.add_edge(base + e.src, base + e.dst, e.dst_port);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::fuaware::to_fu_graph;
+    use crate::ir::{lower_kernel, optimize};
+    use crate::overlay::FuType;
+
+    const CHEB: &str = "__kernel void chebyshev(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    fn cheb_fg(dsps: usize) -> FuGraph {
+        let f = lower_kernel(&parse_kernel(CHEB).unwrap()).unwrap();
+        let dfg = crate::dfg::extract_dfg(&optimize(&f).0).unwrap();
+        to_fu_graph(&dfg, dsps).unwrap()
+    }
+
+    #[test]
+    fn chebyshev_16_copies_io_limited_on_8x8_dsp2() {
+        // §IV: "16 copies of the Chebyshev benchmark … limited only by
+        // the available I/O"
+        let fg = cheb_fg(2);
+        let spec = OverlaySpec::new(8, 8, FuType::Dsp2);
+        let p = plan(&fg, &spec, None).unwrap();
+        assert_eq!(p.factor, 16);
+        assert_eq!(p.limit, LimitReason::Io);
+        assert_eq!(p.fus_per_copy, 3);
+        assert_eq!(p.io_per_copy, 2);
+    }
+
+    #[test]
+    fn chebyshev_12_copies_fu_limited_on_8x8_dsp1() {
+        // Fig. 6 (red curve): 12 instances on the 1-DSP/FU overlay
+        let fg = cheb_fg(1);
+        let spec = OverlaySpec::new(8, 8, FuType::Dsp1);
+        let p = plan(&fg, &spec, None).unwrap();
+        assert_eq!(p.factor, 12);
+        assert_eq!(p.limit, LimitReason::Fu);
+        assert_eq!(p.fus_per_copy, 5);
+    }
+
+    #[test]
+    fn single_copy_on_2x2_fig5a() {
+        // Fig. 5(a): 2×2 overlay fits exactly one Chebyshev copy
+        let fg = cheb_fg(2);
+        let spec = OverlaySpec::new(2, 2, FuType::Dsp2);
+        let p = plan(&fg, &spec, None).unwrap();
+        assert_eq!(p.factor, 1);
+    }
+
+    #[test]
+    fn size_sweep_matches_fig5_replication_counts() {
+        // Fig. 5(a)-(g): copies on 2x2..8x8 with 2-DSP FUs.
+        // FU-capacity 4,9,16,25,36,49,64 / 3 FUs per copy, capped by
+        // I/O pads (8,12,16,20,24,28,32) / 2 per copy.
+        let fg = cheb_fg(2);
+        let expect = [1, 3, 5, 8, 12, 14, 16];
+        for (spec, want) in OverlaySpec::size_sweep(FuType::Dsp2).iter().zip(expect) {
+            let p = plan(&fg, spec, None).unwrap();
+            assert_eq!(p.factor, want, "overlay {}", spec.name());
+        }
+    }
+
+    #[test]
+    fn backend_limits_can_bind() {
+        let fg = cheb_fg(2);
+        let spec = OverlaySpec::new(8, 8, FuType::Dsp2);
+        let p = plan(&fg, &spec, Some(BackendLimits { max_op_slots: 20, max_inputs: 32 }))
+            .unwrap();
+        // 20 slots / 5 ops per copy = 4 copies
+        assert_eq!(p.factor, 4);
+        assert_eq!(p.limit, LimitReason::EmuSlots);
+    }
+
+    #[test]
+    fn too_large_kernel_errors() {
+        let fg = cheb_fg(1); // 5 FUs
+        let spec = OverlaySpec::new(2, 2, FuType::Dsp1); // 4 FUs
+        assert!(plan(&fg, &spec, None).is_err());
+    }
+
+    #[test]
+    fn replicated_dfg_is_disjoint_and_valid() {
+        let fg = cheb_fg(2);
+        let rep = replicate_dfg(&fg.dfg, 16);
+        rep.validate().unwrap();
+        assert_eq!(rep.num_ops(), 16 * fg.dfg.num_ops());
+        assert_eq!(rep.num_inputs(), 16);
+        assert_eq!(rep.num_outputs(), 16);
+        // port numbering dense and unique
+        let mut in_ports: Vec<usize> = rep
+            .nodes
+            .iter()
+            .filter_map(|n| match n.kind {
+                NodeKind::InVar { port } => Some(port),
+                _ => None,
+            })
+            .collect();
+        in_ports.sort();
+        assert_eq!(in_ports, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn factor_one_keeps_names() {
+        let fg = cheb_fg(2);
+        let rep = replicate_dfg(&fg.dfg, 1);
+        assert_eq!(rep.input_names, fg.dfg.input_names);
+    }
+}

@@ -1,0 +1,194 @@
+//! Bind logical nets to physical RRG endpoints for a given placement.
+//!
+//! Converts each [`crate::netlist::NetDecl`] into a [`RouteNet`] whose
+//! source/sink node ids reflect the placement, and records which DFG
+//! (op, port) every sink pin corresponds to — the correspondence the
+//! latency-balancing pass needs to annotate delay chains.
+//!
+//! FU input *pins* are assigned deterministically from
+//! [`crate::fuaware::FuGraph::input_pins`]: the k-th external edge of an
+//! FU occupies physical pin k.
+
+use anyhow::{bail, Result};
+
+use crate::fuaware::{FuGraph, NetEndpoint};
+use crate::netlist::FuNetlist;
+use crate::overlay::{RoutingGraph, RrgNodeId};
+use crate::place::Placement;
+
+use super::RouteNet;
+
+/// What a routed sink terminal corresponds to in the kernel.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SinkKey {
+    /// FU input pin feeding operand `port` of DFG op `op`.
+    FuPin { fu: usize, pin: u8, op: crate::dfg::NodeId, port: u8 },
+    /// Kernel output stream.
+    OutPad(usize),
+}
+
+/// One net's binding metadata (parallel to its [`RouteNet`] sinks).
+#[derive(Debug, Clone)]
+pub struct NetBinding {
+    /// Index into `FuNetlist::nets`.
+    pub decl_index: usize,
+    pub src: NetEndpoint,
+    pub sink_keys: Vec<SinkKey>,
+}
+
+/// The physical routing problem plus its kernel-level annotations.
+#[derive(Debug, Clone)]
+pub struct BoundNets {
+    pub route_nets: Vec<RouteNet>,
+    pub bindings: Vec<NetBinding>,
+}
+
+/// Build the physical nets for `nl` under placement `pl`.
+pub fn bind_nets(
+    fg: &FuGraph,
+    nl: &FuNetlist,
+    pl: &Placement,
+    g: &RoutingGraph,
+) -> Result<BoundNets> {
+    // per-FU pin tables (pin index = position in input_pins)
+    let pin_tables: Vec<_> = (0..fg.num_fus()).map(|f| fg.input_pins(f)).collect();
+    for (f, pins) in pin_tables.iter().enumerate() {
+        if pins.len() > crate::fuaware::MAX_FU_INPUTS {
+            bail!("FU{} needs {} input pins (max {})", f, pins.len(),
+                  crate::fuaware::MAX_FU_INPUTS);
+        }
+    }
+    // how many pins of (fu) with src==S have been consumed per net build
+    let mut route_nets = Vec::with_capacity(nl.nets.len());
+    let mut bindings = Vec::with_capacity(nl.nets.len());
+
+    for (di, decl) in nl.nets.iter().enumerate() {
+        let source: RrgNodeId = match decl.src {
+            NetEndpoint::Fu(f) => {
+                let (x, y) = pl.fu_tile[f];
+                g.fu_out(x, y)
+            }
+            NetEndpoint::InPad(p) => g.pad_out(pl.in_slot[p]),
+            NetEndpoint::OutPad(_) => bail!("net driven by an output pad"),
+        };
+
+        let mut sinks = Vec::with_capacity(decl.sinks.len());
+        let mut keys = Vec::with_capacity(decl.sinks.len());
+        // per-FU cursor over matching pin entries for THIS net
+        let mut cursors: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::new();
+        for (ep, _port) in &decl.sinks {
+            match ep {
+                NetEndpoint::Fu(f) => {
+                    let pins = &pin_tables[*f];
+                    let cur = cursors.entry(*f).or_insert(0);
+                    // next pin of f whose source is this net's driver
+                    let mut found = None;
+                    for (pin, entry) in pins.iter().enumerate().skip(*cur) {
+                        if entry.src == decl.src {
+                            found = Some((pin, entry));
+                            *cur = pin + 1;
+                            break;
+                        }
+                    }
+                    let Some((pin, entry)) = found else {
+                        bail!("no free pin on FU{} for net {}", f, decl.name);
+                    };
+                    let (x, y) = pl.fu_tile[*f];
+                    sinks.push(g.fu_in(x, y, pin));
+                    keys.push(SinkKey::FuPin {
+                        fu: *f,
+                        pin: pin as u8,
+                        op: entry.op,
+                        port: entry.port,
+                    });
+                }
+                NetEndpoint::OutPad(o) => {
+                    sinks.push(g.pad_in(pl.out_slot[*o]));
+                    keys.push(SinkKey::OutPad(*o));
+                }
+                NetEndpoint::InPad(_) => bail!("net sinks at an input pad"),
+            }
+        }
+        route_nets.push(RouteNet { source, sinks });
+        bindings.push(NetBinding { decl_index: di, src: decl.src, sink_keys: keys });
+    }
+    Ok(BoundNets { route_nets, bindings })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_kernel;
+    use crate::fuaware::to_fu_graph;
+    use crate::ir::{lower_kernel, optimize};
+    use crate::netlist::build_netlist;
+    use crate::overlay::{FuType, OverlaySpec};
+    use crate::place::place;
+
+    const PAPER: &str = "__kernel void example_kernel(__global int *A, __global int *B) {
+        int idx = get_global_id(0);
+        int x = A[idx];
+        B[idx] = (x*(x*(16*x*x-20)*x+5));
+    }";
+
+    fn setup(dsps: usize) -> (FuGraph, FuNetlist, OverlaySpec, RoutingGraph, Placement) {
+        let f = lower_kernel(&parse_kernel(PAPER).unwrap()).unwrap();
+        let dfg = crate::dfg::extract_dfg(&optimize(&f).0).unwrap();
+        let fg = to_fu_graph(&dfg, dsps).unwrap();
+        let nl = build_netlist(&fg);
+        let spec = OverlaySpec::new(5, 5, if dsps == 2 { FuType::Dsp2 } else { FuType::Dsp1 });
+        let g = RoutingGraph::build(&spec);
+        let pl = place(&nl, &spec, &g, 7).unwrap();
+        (fg, nl, spec, g, pl)
+    }
+
+    #[test]
+    fn every_sink_is_bound_to_a_distinct_terminal() {
+        let (fg, nl, _spec, g, pl) = setup(2);
+        let bound = bind_nets(&fg, &nl, &pl, &g).unwrap();
+        let mut all_sinks = Vec::new();
+        for rn in &bound.route_nets {
+            all_sinks.extend(rn.sinks.iter().copied());
+        }
+        let n = all_sinks.len();
+        all_sinks.sort_unstable();
+        all_sinks.dedup();
+        assert_eq!(all_sinks.len(), n, "two nets share a physical terminal");
+    }
+
+    #[test]
+    fn bindings_parallel_route_nets() {
+        let (fg, nl, _spec, g, pl) = setup(1);
+        let bound = bind_nets(&fg, &nl, &pl, &g).unwrap();
+        assert_eq!(bound.route_nets.len(), bound.bindings.len());
+        for (rn, b) in bound.route_nets.iter().zip(&bound.bindings) {
+            assert_eq!(rn.sinks.len(), b.sink_keys.len());
+        }
+        // exactly one OutPad sink overall (single-output kernel)
+        let outs = bound
+            .bindings
+            .iter()
+            .flat_map(|b| &b.sink_keys)
+            .filter(|k| matches!(k, SinkKey::OutPad(_)))
+            .count();
+        assert_eq!(outs, 1);
+    }
+
+    #[test]
+    fn pins_respect_input_pin_tables() {
+        let (fg, nl, _spec, g, pl) = setup(2);
+        let bound = bind_nets(&fg, &nl, &pl, &g).unwrap();
+        for b in &bound.bindings {
+            for k in &b.sink_keys {
+                if let SinkKey::FuPin { fu, pin, op, port } = k {
+                    let table = fg.input_pins(*fu);
+                    let entry = table[*pin as usize];
+                    assert_eq!(entry.op, *op);
+                    assert_eq!(entry.port, *port);
+                    assert_eq!(entry.src, b.src);
+                }
+            }
+        }
+    }
+}

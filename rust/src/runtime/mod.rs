@@ -1,0 +1,229 @@
+//! XLA/PJRT execution backend.
+//!
+//! Loads the AOT-compiled overlay-datapath emulator
+//! (`artifacts/overlay_exec_i32.hlo.txt`, produced once by
+//! `make artifacts` from the JAX/Pallas build path) and executes
+//! JIT-compiled kernels on it. The emulator's *configuration* —
+//! opcodes, operand routing, immediates — is a runtime input tensor,
+//! so a single compiled PJRT executable serves every kernel and every
+//! replication factor, exactly how the physical overlay decouples
+//! 42 µs configuration from offline fabric compilation.
+//!
+//! HLO **text** is the interchange format (not serialized protos):
+//! jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids. See DESIGN.md.
+//!
+//! Python never runs here: this module is pure Rust + the PJRT C API.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::configgen::{EmuGeometry, SlotSchedule};
+use crate::util::JsonValue;
+
+/// The PJRT-backed overlay emulator.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    pub geometry: EmuGeometry,
+    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Reusable host staging buffer for the value table.
+    table_scratch: Mutex<Vec<i32>>,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("artifacts_dir", &self.artifacts_dir)
+            .field("geometry", &self.geometry)
+            .finish()
+    }
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and validate `artifacts/geometry.json`
+    /// against the compiled-in [`EmuGeometry`].
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Arc<Self>> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let geometry = read_geometry(&artifacts_dir.join("geometry.json"))
+            .context("reading artifacts/geometry.json (run `make artifacts`)")?;
+        if geometry != EmuGeometry::DEFAULT {
+            bail!(
+                "AOT geometry {:?} does not match the compiled-in {:?} — \
+                 regenerate artifacts or rebuild",
+                geometry,
+                EmuGeometry::DEFAULT
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(PjrtRuntime {
+            client,
+            artifacts_dir,
+            geometry,
+            executables: Mutex::new(HashMap::new()),
+            table_scratch: Mutex::new(Vec::new()),
+        }))
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (once, cached) an artifact by stem, e.g.
+    /// `overlay_exec_i32`.
+    pub fn load(&self, stem: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.executables.lock().unwrap();
+        if let Some(e) = cache.get(stem) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{stem}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT-compiling {stem}"))?;
+        let exe = Arc::new(exe);
+        cache.insert(stem.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a JIT-compiled kernel configuration over input streams.
+    ///
+    /// `inputs[p]` is the stream for emulator input column `p`; all
+    /// must share a length. Work-items are processed in BATCH-row
+    /// chunks (the emulator's static geometry); the tail chunk is
+    /// zero-padded and trimmed.
+    pub fn execute_overlay(
+        &self,
+        schedule: &SlotSchedule,
+        inputs: &[Vec<i32>],
+        n_items: usize,
+    ) -> Result<Vec<Vec<i32>>> {
+        let geom = self.geometry;
+        if inputs.len() != schedule.num_inputs {
+            bail!(
+                "kernel has {} input streams, got {}",
+                schedule.num_inputs,
+                inputs.len()
+            );
+        }
+        for (p, v) in inputs.iter().enumerate() {
+            if v.len() != n_items {
+                bail!("input stream {p} length {} != {}", v.len(), n_items);
+            }
+        }
+
+        let exe = self.load("overlay_exec_i32")?;
+
+        // static config literals (shared across chunks)
+        let pad = |v: &[i32]| -> Vec<i32> {
+            let mut out = vec![0i32; geom.max_fus];
+            out[..v.len()].copy_from_slice(v);
+            out
+        };
+        let ops_l = xla::Literal::vec1(&pad(&schedule.ops));
+        let sa_l = xla::Literal::vec1(&pad(&schedule.src_a));
+        let sb_l = xla::Literal::vec1(&pad(&schedule.src_b));
+        let sc_l = xla::Literal::vec1(&pad(&schedule.src_c));
+
+        let n_out = schedule.out_col.len();
+        let mut outs: Vec<Vec<i32>> = vec![Vec::with_capacity(n_items); n_out];
+        let slots = geom.num_slots();
+
+        let mut table = self.table_scratch.lock().unwrap();
+        table.clear();
+        table.resize(geom.batch * slots, 0);
+
+        let mut done = 0usize;
+        while done < n_items {
+            let chunk = (n_items - done).min(geom.batch);
+            // build the value table: inputs + immediate pool
+            table.iter_mut().for_each(|v| *v = 0);
+            for row in 0..chunk {
+                let base = row * slots;
+                for (p, stream) in inputs.iter().enumerate() {
+                    table[base + p] = stream[done + row];
+                }
+                for &(col, v) in &schedule.imm_pool {
+                    table[base + col] = v;
+                }
+            }
+            // pad rows still need immediates (harmless but keeps the
+            // emulator's semantics identical across rows)
+            for row in chunk..geom.batch {
+                let base = row * slots;
+                for &(col, v) in &schedule.imm_pool {
+                    table[base + col] = v;
+                }
+            }
+            let table_l = xla::Literal::vec1(&table[..])
+                .reshape(&[geom.batch as i64, slots as i64])?;
+
+            let result = exe
+                .execute::<xla::Literal>(&[
+                    ops_l.clone(),
+                    sa_l.clone(),
+                    sb_l.clone(),
+                    sc_l.clone(),
+                    table_l,
+                ])
+                .context("PJRT execute")?[0][0]
+                .to_literal_sync()?;
+            let out = result.to_tuple1()?;
+            let flat = out.to_vec::<i32>()?; // [batch, max_fus] row-major
+
+            for row in 0..chunk {
+                let base = row * geom.max_fus;
+                for (o, &col) in schedule.out_col.iter().enumerate() {
+                    outs[o].push(flat[base + (col - geom.out_base())]);
+                }
+            }
+            done += chunk;
+        }
+        Ok(outs)
+    }
+}
+
+fn read_geometry(path: &Path) -> Result<EmuGeometry> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let v = JsonValue::parse(&text)?;
+    let get = |k: &str| -> Result<usize> {
+        v.get(k)
+            .and_then(JsonValue::as_i64)
+            .map(|x| x as usize)
+            .ok_or_else(|| anyhow::anyhow!("geometry.json missing '{k}'"))
+    };
+    Ok(EmuGeometry {
+        num_inputs: get("num_inputs")?,
+        max_fus: get("max_fus")?,
+        batch: get("batch")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry_json_parses_and_matches() {
+        let g = read_geometry(Path::new("artifacts/geometry.json")).unwrap();
+        assert_eq!(g, EmuGeometry::DEFAULT);
+    }
+
+    #[test]
+    fn missing_geometry_is_a_clear_error() {
+        let err = read_geometry(Path::new("/nonexistent/geometry.json"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("reading"), "{err}");
+    }
+}

@@ -1,0 +1,471 @@
+//! OpenCL-flavoured host runtime (paper §IV, Fig. 4).
+//!
+//! The paper runs pocl on the Zynq's ARM cores with the overlay as the
+//! accelerator. This module provides the same programming model —
+//! platform → device → context → program → kernel → command queue —
+//! with the overlay JIT compiler behind `Program::build` and two
+//! execution backends behind `CommandQueue::enqueue`:
+//!
+//! * [`Backend::CycleSim`]  — the Rust cycle-level simulator;
+//! * [`Backend::Pjrt`]      — the AOT XLA emulator via the PJRT C API
+//!   (`artifacts/*.hlo.txt`; Python is never on this path).
+//!
+//! The device exposes the overlay's size and FU type to the compiler
+//! (the paper's key "resource-aware" hook), and events carry both the
+//! measured wall time and the modeled overlay timing (fill latency +
+//! II=1 streaming + the 42 µs-class configuration load).
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context as AnyhowContext, Result};
+
+use crate::compiler::{CompileOptions, CompiledKernel, JitCompiler};
+use crate::frontend::ParamKind;
+use crate::overlay::{ConfigSizeModel, OverlaySpec};
+use crate::runtime::PjrtRuntime;
+use crate::sim;
+
+/// Execution backend of a device.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Pure-Rust cycle-level simulation.
+    CycleSim,
+    /// AOT-compiled XLA overlay emulator through PJRT.
+    Pjrt(Arc<PjrtRuntime>),
+}
+
+/// An overlay accelerator "device".
+#[derive(Debug, Clone)]
+pub struct Device {
+    pub spec: OverlaySpec,
+    pub backend: Backend,
+    pub name: String,
+}
+
+impl Device {
+    /// What the OpenCL runtime exposes to the JIT compiler (§IV).
+    pub fn overlay_spec(&self) -> &OverlaySpec {
+        &self.spec
+    }
+}
+
+/// Entry point mirroring `clGetPlatformIDs`.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    devices: Vec<Device>,
+}
+
+impl Platform {
+    /// A platform with one cycle-simulated default overlay (8×8, 2-DSP).
+    pub fn default_sim() -> Platform {
+        Platform::with_device(OverlaySpec::zynq_default(), Backend::CycleSim)
+    }
+
+    /// A platform backed by the AOT PJRT emulator.
+    pub fn with_pjrt(artifacts_dir: &str, spec: OverlaySpec) -> Result<Platform> {
+        let rt = PjrtRuntime::new(artifacts_dir)?;
+        Ok(Platform::with_device(spec, Backend::Pjrt(rt)))
+    }
+
+    pub fn with_device(spec: OverlaySpec, backend: Backend) -> Platform {
+        let name = format!("overlay-{}", spec.name());
+        Platform { devices: vec![Device { spec, backend, name }] }
+    }
+
+    pub fn devices(&self) -> &[Device] {
+        &self.devices
+    }
+}
+
+/// `clCreateContext`.
+#[derive(Debug, Clone)]
+pub struct Context {
+    pub device: Device,
+}
+
+impl Context {
+    pub fn new(device: &Device) -> Context {
+        Context { device: device.clone() }
+    }
+
+    /// `clCreateBuffer` (int32 element type — the overlay datapath).
+    pub fn create_buffer(&self, len: usize) -> Buffer {
+        Buffer { data: Arc::new(Mutex::new(vec![0i32; len])) }
+    }
+}
+
+/// A global-memory buffer.
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    data: Arc<Mutex<Vec<i32>>>,
+}
+
+impl Buffer {
+    pub fn write(&self, src: &[i32]) {
+        let mut d = self.data.lock().unwrap();
+        let n = src.len().min(d.len());
+        d[..n].copy_from_slice(&src[..n]);
+    }
+
+    pub fn read(&self) -> Vec<i32> {
+        self.data.lock().unwrap().clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// `clCreateProgramWithSource` + `clBuildProgram`.
+#[derive(Debug)]
+pub struct Program {
+    context: Context,
+    source: String,
+    built: Option<Arc<CompiledKernel>>,
+    pub build_report: Option<crate::compiler::CompileReport>,
+}
+
+impl Program {
+    pub fn from_source(context: &Context, source: &str) -> Program {
+        Program {
+            context: context.clone(),
+            source: source.to_string(),
+            built: None,
+            build_report: None,
+        }
+    }
+
+    /// JIT-compile for this context's overlay (the paper's 0.2 s-class
+    /// step; timing recorded in `build_report`).
+    pub fn build(&mut self) -> Result<()> {
+        self.build_with(CompileOptions::default())
+    }
+
+    pub fn build_with(&mut self, options: CompileOptions) -> Result<()> {
+        let jit = JitCompiler::with_options(self.context.device.spec.clone(), options);
+        let k = jit.compile(&self.source).context("clBuildProgram")?;
+        self.build_report = Some(k.report.clone());
+        self.built = Some(Arc::new(k));
+        Ok(())
+    }
+
+    /// `clCreateKernel`.
+    pub fn create_kernel(&self, name: &str) -> Result<Kernel> {
+        let Some(k) = &self.built else {
+            bail!("program not built (call Program::build first)");
+        };
+        if k.name != name {
+            bail!("kernel '{name}' not found (program defines '{}')", k.name);
+        }
+        Ok(Kernel {
+            compiled: k.clone(),
+            args: Mutex::new(vec![None; k.params.len()]),
+        })
+    }
+}
+
+/// A kernel argument.
+#[derive(Debug, Clone)]
+enum KernelArg {
+    Buffer(Buffer),
+    Scalar(i32),
+}
+
+/// `clCreateKernel` result with `clSetKernelArg` state.
+#[derive(Debug)]
+pub struct Kernel {
+    pub compiled: Arc<CompiledKernel>,
+    args: Mutex<Vec<Option<KernelArg>>>,
+}
+
+impl Kernel {
+    pub fn set_arg(&self, index: usize, buffer: &Buffer) -> Result<()> {
+        let mut args = self.args.lock().unwrap();
+        if index >= args.len() {
+            bail!("argument index {index} out of range");
+        }
+        if self.compiled.params[index].kind != ParamKind::GlobalPtr {
+            bail!("argument {index} is a scalar; use set_arg_scalar");
+        }
+        args[index] = Some(KernelArg::Buffer(buffer.clone()));
+        Ok(())
+    }
+
+    pub fn set_arg_scalar(&self, index: usize, value: i32) -> Result<()> {
+        let mut args = self.args.lock().unwrap();
+        if index >= args.len() {
+            bail!("argument index {index} out of range");
+        }
+        if self.compiled.params[index].kind != ParamKind::Scalar {
+            bail!("argument {index} is a buffer; use set_arg");
+        }
+        args[index] = Some(KernelArg::Scalar(value));
+        Ok(())
+    }
+}
+
+/// Profiling info of a completed dispatch (`clGetEventProfilingInfo`).
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Measured host wall time of the dispatch.
+    pub wall: Duration,
+    /// Modeled overlay configuration load time (1061 B / 42.4 µs class).
+    pub config_seconds: f64,
+    /// Modeled overlay execution timing (fill + II=1 streaming).
+    pub modeled: sim::Timing,
+    /// Work-items processed.
+    pub global_size: usize,
+}
+
+/// `clCreateCommandQueue`.
+#[derive(Debug, Clone)]
+pub struct CommandQueue {
+    pub device: Device,
+}
+
+impl CommandQueue {
+    pub fn new(context: &Context) -> CommandQueue {
+        CommandQueue { device: context.device.clone() }
+    }
+
+    /// `clEnqueueNDRangeKernel` over `global_size` work-items,
+    /// blocking until completion (in-order queue semantics).
+    pub fn enqueue_nd_range(&self, kernel: &Kernel, global_size: usize) -> Result<Event> {
+        let t0 = Instant::now();
+        let k = &kernel.compiled;
+        let args = kernel.args.lock().unwrap().clone();
+        for (i, a) in args.iter().enumerate() {
+            if a.is_none() {
+                bail!("argument {i} ('{}') not set", k.params[i].name);
+            }
+        }
+
+        // --- pack input streams -------------------------------------
+        // copies r = 0..R each process a blocked item range; stream
+        // port p of copy r is emulator column r*n_in + p.
+        let r = k.plan.factor;
+        let n_in = k.dfg.num_inputs();
+        let chunk = global_size.div_ceil(r.max(1));
+        let fetch = |param: usize, idx: i64| -> i32 {
+            match &args[param] {
+                Some(KernelArg::Buffer(b)) => {
+                    let d = b.data.lock().unwrap();
+                    if idx >= 0 && (idx as usize) < d.len() {
+                        d[idx as usize]
+                    } else {
+                        0
+                    }
+                }
+                Some(KernelArg::Scalar(v)) => *v,
+                None => 0,
+            }
+        };
+
+        let mut streams: Vec<Vec<i32>> = Vec::with_capacity(r * n_in);
+        for copy in 0..r {
+            let start = copy * chunk;
+            for p in 0..n_in {
+                let meta = k.dfg.input_meta[p];
+                let mut s = Vec::with_capacity(chunk);
+                for i in 0..chunk {
+                    let gid = start + i;
+                    let v = if gid < global_size {
+                        if meta.is_scalar {
+                            match &args[meta.param] {
+                                Some(KernelArg::Scalar(v)) => *v,
+                                _ => 0,
+                            }
+                        } else {
+                            fetch(meta.param, gid as i64 + meta.offset)
+                        }
+                    } else {
+                        0 // tail padding
+                    };
+                    s.push(v);
+                }
+                streams.push(s);
+            }
+        }
+
+        // --- execute -------------------------------------------------
+        let outs = match &self.device.backend {
+            Backend::CycleSim => sim::execute(&k.schedule, &streams, chunk)?,
+            Backend::Pjrt(rt) => rt.execute_overlay(&k.schedule, &streams, chunk)?,
+        };
+
+        // --- scatter outputs back -----------------------------------
+        let n_out = k.dfg.num_outputs();
+        for copy in 0..r {
+            let start = copy * chunk;
+            for o in 0..n_out {
+                let meta = k.dfg.output_meta[o];
+                let stream = &outs[copy * n_out + o];
+                if let Some(KernelArg::Buffer(b)) = &args[meta.param] {
+                    let mut d = b.data.lock().unwrap();
+                    for (i, &v) in stream.iter().enumerate() {
+                        let gid = start + i;
+                        if gid >= global_size {
+                            break;
+                        }
+                        let idx = gid as i64 + meta.offset;
+                        if idx >= 0 && (idx as usize) < d.len() {
+                            d[idx as usize] = v;
+                        }
+                    }
+                }
+            }
+        }
+
+        let config_seconds = ConfigSizeModel::overlay_config_seconds(
+            &self.device.spec,
+            k.bitstream.byte_size(),
+        );
+        let modeled = sim::timing(
+            &self.device.spec,
+            &k.latency,
+            r,
+            k.ops_per_copy(),
+            global_size as u64,
+        );
+        Ok(Event {
+            wall: t0.elapsed(),
+            config_seconds,
+            modeled,
+            global_size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cheb_host(platform: Platform, n: usize) -> (Vec<i32>, Event) {
+        let device = &platform.devices()[0];
+        let ctx = Context::new(device);
+        let mut program = Program::from_source(&ctx, crate::bench_kernels::CHEBYSHEV);
+        program.build().unwrap();
+        let kernel = program.create_kernel("chebyshev").unwrap();
+        let a = ctx.create_buffer(n);
+        let b = ctx.create_buffer(n);
+        let xs: Vec<i32> = (0..n).map(|i| (i as i32 % 13) - 6).collect();
+        a.write(&xs);
+        kernel.set_arg(0, &a).unwrap();
+        kernel.set_arg(1, &b).unwrap();
+        let q = CommandQueue::new(&ctx);
+        let ev = q.enqueue_nd_range(&kernel, n).unwrap();
+        (b.read(), ev)
+    }
+
+    fn cheb(x: i32) -> i32 {
+        x.wrapping_mul(
+            x.wrapping_mul(16i32.wrapping_mul(x).wrapping_mul(x).wrapping_sub(20))
+                .wrapping_mul(x)
+                .wrapping_add(5),
+        )
+    }
+
+    #[test]
+    fn full_opencl_flow_on_cycle_sim() {
+        let n = 1000;
+        let (out, ev) = cheb_host(Platform::default_sim(), n);
+        for (i, &y) in out.iter().enumerate() {
+            let x = (i as i32 % 13) - 6;
+            assert_eq!(y, cheb(x), "item {i}");
+        }
+        assert_eq!(ev.global_size, n);
+        assert!(ev.config_seconds > 30e-6 && ev.config_seconds < 60e-6);
+        assert!(ev.modeled.total_cycles > 0);
+    }
+
+    #[test]
+    fn unset_argument_is_reported() {
+        let platform = Platform::default_sim();
+        let ctx = Context::new(&platform.devices()[0]);
+        let mut program = Program::from_source(&ctx, crate::bench_kernels::CHEBYSHEV);
+        program.build().unwrap();
+        let kernel = program.create_kernel("chebyshev").unwrap();
+        let q = CommandQueue::new(&ctx);
+        let err = q.enqueue_nd_range(&kernel, 16).unwrap_err().to_string();
+        assert!(err.contains("not set"), "{err}");
+    }
+
+    #[test]
+    fn wrong_kernel_name_is_reported() {
+        let platform = Platform::default_sim();
+        let ctx = Context::new(&platform.devices()[0]);
+        let mut program = Program::from_source(&ctx, crate::bench_kernels::CHEBYSHEV);
+        program.build().unwrap();
+        assert!(program.create_kernel("nope").is_err());
+    }
+
+    #[test]
+    fn scalar_arguments_broadcast() {
+        let src = "__kernel void scale(__global int *A, const int n, __global int *B) {
+            int i = get_global_id(0);
+            B[i] = A[i] * n + 1;
+        }";
+        let platform = Platform::default_sim();
+        let ctx = Context::new(&platform.devices()[0]);
+        let mut program = Program::from_source(&ctx, src);
+        program.build().unwrap();
+        let kernel = program.create_kernel("scale").unwrap();
+        let a = ctx.create_buffer(64);
+        let b = ctx.create_buffer(64);
+        a.write(&(0..64).collect::<Vec<i32>>());
+        kernel.set_arg(0, &a).unwrap();
+        kernel.set_arg_scalar(1, 7).unwrap();
+        kernel.set_arg(2, &b).unwrap();
+        // mismatched setter is rejected
+        assert!(kernel.set_arg_scalar(0, 1).is_err());
+        assert!(kernel.set_arg(1, &a).is_err());
+        let q = CommandQueue::new(&ctx);
+        q.enqueue_nd_range(&kernel, 64).unwrap();
+        let out = b.read();
+        for i in 0..64 {
+            assert_eq!(out[i], (i as i32) * 7 + 1);
+        }
+    }
+
+    #[test]
+    fn stencil_kernel_reads_taps() {
+        let src = "__kernel void blur(__global int *A, __global int *B) {
+            int i = get_global_id(0);
+            B[i] = A[i] + A[i+1] + A[i+2];
+        }";
+        let platform = Platform::default_sim();
+        let ctx = Context::new(&platform.devices()[0]);
+        let mut program = Program::from_source(&ctx, src);
+        program.build().unwrap();
+        let kernel = program.create_kernel("blur").unwrap();
+        let n = 100;
+        let a = ctx.create_buffer(n + 2);
+        let b = ctx.create_buffer(n);
+        let xs: Vec<i32> = (0..n as i32 + 2).collect();
+        a.write(&xs);
+        kernel.set_arg(0, &a).unwrap();
+        kernel.set_arg(1, &b).unwrap();
+        let q = CommandQueue::new(&ctx);
+        q.enqueue_nd_range(&kernel, n).unwrap();
+        let out = b.read();
+        for i in 0..n {
+            assert_eq!(out[i] as usize, 3 * i + 3);
+        }
+    }
+
+    #[test]
+    fn non_multiple_global_size_is_handled() {
+        // 1000 items over 16 copies = 63-item chunks with a ragged tail
+        let (out, _) = cheb_host(Platform::default_sim(), 997);
+        assert_eq!(out.len(), 997);
+        for (i, &y) in out.iter().enumerate() {
+            let x = (i as i32 % 13) - 6;
+            assert_eq!(y, cheb(x));
+        }
+    }
+}

@@ -1,0 +1,221 @@
+//! Cycle-level overlay simulator.
+//!
+//! Two halves:
+//! * [`execute`] — functional simulation of a [`SlotSchedule`] over a
+//!   batch of work-items with the 32-bit wrap-around semantics of the
+//!   DSP datapath. This is the Rust twin of the Pallas emulator kernel
+//!   (`python/compile/kernels/fu_alu.py`); integration tests assert
+//!   both backends agree bit-for-bit.
+//! * [`Timing`] — the pipeline timing model: a spatially configured
+//!   II=1 overlay streams one work-item per cycle per kernel copy
+//!   after a fill latency of `pipeline_depth` cycles.
+
+use anyhow::{bail, Result};
+
+use crate::configgen::SlotSchedule;
+use crate::latency::LatencyReport;
+use crate::overlay::OverlaySpec;
+
+/// Opcode semantics (must match `DfgOp::opcode` and geometry.py).
+fn alu(op: i32, a: i32, b: i32, c: i32) -> i32 {
+    match op {
+        0 => a,
+        1 => a.wrapping_add(b),
+        2 => a.wrapping_sub(b),
+        3 => a.wrapping_mul(b),
+        4 => a.wrapping_mul(b).wrapping_add(c),
+        5 => a.wrapping_mul(b).wrapping_sub(c),
+        6 => b.wrapping_sub(a),
+        7 => a.max(b),
+        8 => a.min(b),
+        _ => a,
+    }
+}
+
+/// Functionally execute `schedule` for `n_items` work-items.
+///
+/// `inputs[p]` is the stream for input port `p` (each `n_items` long;
+/// a fully-constant kernel legitimately has zero streams).
+/// Returns one vector per kernel output port.
+pub fn execute(
+    schedule: &SlotSchedule,
+    inputs: &[Vec<i32>],
+    n_items: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let geom = schedule.geometry;
+    if inputs.len() != schedule.num_inputs {
+        bail!(
+            "kernel has {} input streams, got {}",
+            schedule.num_inputs,
+            inputs.len()
+        );
+    }
+    for (p, v) in inputs.iter().enumerate() {
+        if v.len() != n_items {
+            bail!("input stream {p} length {} != {}", v.len(), n_items);
+        }
+    }
+
+    let mut table = vec![0i32; geom.num_slots()];
+    for &(col, v) in &schedule.imm_pool {
+        table[col] = v;
+    }
+
+    let mut outs = vec![Vec::with_capacity(n_items); schedule.out_col.len()];
+    for item in 0..n_items {
+        for (p, v) in inputs.iter().enumerate() {
+            table[p] = v[item];
+        }
+        for t in 0..schedule.n_slots() {
+            let a = table[schedule.src_a[t] as usize];
+            let b = table[schedule.src_b[t] as usize];
+            let c = table[schedule.src_c[t] as usize];
+            table[geom.out_base() + t] = alu(schedule.ops[t], a, b, c);
+        }
+        for (o, &col) in schedule.out_col.iter().enumerate() {
+            outs[o].push(table[col]);
+        }
+    }
+    Ok(outs)
+}
+
+/// Pipeline timing of a streamed dispatch.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    /// Cycles to fill the pipeline (latency of the first result).
+    pub fill_cycles: u64,
+    /// Total cycles for `items_per_copy` work-items per kernel copy.
+    pub total_cycles: u64,
+    /// Wall seconds at the overlay's Fmax.
+    pub seconds: f64,
+    /// Achieved arithmetic throughput in GOPS.
+    pub gops: f64,
+}
+
+/// Model a dispatch of `total_items` work-items over `copies`
+/// replicas of a kernel with `ops_per_copy` operations.
+pub fn timing(
+    spec: &OverlaySpec,
+    lat: &LatencyReport,
+    copies: usize,
+    ops_per_copy: usize,
+    total_items: u64,
+) -> Timing {
+    let per_copy = total_items.div_ceil(copies.max(1) as u64);
+    let fill = lat.pipeline_depth as u64;
+    // II = 1: one item per cycle per copy after fill
+    let total_cycles = fill + per_copy.saturating_sub(1) + 1;
+    let seconds = total_cycles as f64 / (spec.fmax_mhz() * 1e6);
+    let ops = total_items as f64 * ops_per_copy as f64;
+    Timing {
+        fill_cycles: fill,
+        total_cycles,
+        seconds,
+        gops: ops / seconds / 1e9,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::JitCompiler;
+    use crate::overlay::{FuType, OverlaySpec};
+
+    fn compile_cheb(copies: usize) -> crate::compiler::CompiledKernel {
+        let jit = JitCompiler::with_options(
+            OverlaySpec::zynq_default(),
+            crate::compiler::CompileOptions {
+                replication: crate::compiler::Replication::Fixed(copies),
+                ..Default::default()
+            },
+        );
+        jit.compile(crate::bench_kernels::CHEBYSHEV).unwrap()
+    }
+
+    fn cheb_ref(x: i64) -> i32 {
+        let x = x as i32;
+        x.wrapping_mul(
+            x.wrapping_mul(16i32.wrapping_mul(x).wrapping_mul(x).wrapping_sub(20))
+                .wrapping_mul(x)
+                .wrapping_add(5),
+        )
+    }
+
+    #[test]
+    fn chebyshev_functional_matches_formula() {
+        let k = compile_cheb(1);
+        let xs: Vec<i32> = (-8..8).collect();
+        let outs = execute(&k.schedule, &[xs.clone()], xs.len()).unwrap();
+        assert_eq!(outs.len(), 1);
+        for (x, y) in xs.iter().zip(&outs[0]) {
+            assert_eq!(*y, cheb_ref(*x as i64), "x={x}");
+        }
+    }
+
+    #[test]
+    fn replicated_copies_compute_identically() {
+        let k = compile_cheb(16);
+        let n = 32;
+        let streams: Vec<Vec<i32>> =
+            (0..16).map(|r| (0..n).map(|i| (i as i32) - 7 + r).collect()).collect();
+        let outs = execute(&k.schedule, &streams, streams[0].len()).unwrap();
+        assert_eq!(outs.len(), 16);
+        for (r, (inp, out)) in streams.iter().zip(&outs).enumerate() {
+            for (x, y) in inp.iter().zip(out) {
+                assert_eq!(*y, cheb_ref(*x as i64), "copy {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn int32_wraparound_matches_hardware() {
+        let k = compile_cheb(1);
+        let xs = vec![100_000, -70_000];
+        let outs = execute(&k.schedule, &[xs.clone()], xs.len()).unwrap();
+        for (x, y) in xs.iter().zip(&outs[0]) {
+            assert_eq!(*y, cheb_ref(*x as i64));
+        }
+    }
+
+    #[test]
+    fn wrong_stream_count_is_rejected() {
+        let k = compile_cheb(2);
+        assert!(execute(&k.schedule, &[vec![1, 2, 3]], 3).is_err());
+        assert!(execute(&k.schedule, &[vec![1], vec![1, 2]], 1).is_err());
+    }
+
+    #[test]
+    fn timing_is_ii_1() {
+        let k = compile_cheb(16);
+        let spec = OverlaySpec::zynq_default();
+        let t1 = timing(&spec, &k.latency, 16, 7, 16_000);
+        let t2 = timing(&spec, &k.latency, 16, 7, 32_000);
+        // doubling the items adds exactly items/copies cycles
+        assert_eq!(t2.total_cycles - t1.total_cycles, 1000);
+        assert!(t1.fill_cycles > 0);
+    }
+
+    #[test]
+    fn throughput_approaches_gops_model_for_large_batches() {
+        let k = compile_cheb(16);
+        let spec = OverlaySpec::zynq_default();
+        let t = timing(&spec, &k.latency, 16, 7, 100_000_000);
+        let model = crate::metrics::achieved_gops(16, 7, spec.fmax_mhz());
+        assert!((t.gops - model).abs() / model < 0.01, "{} vs {model}", t.gops);
+    }
+
+    #[test]
+    fn all_benchmarks_execute_functionally() {
+        let jit = JitCompiler::new(OverlaySpec::new(8, 8, FuType::Dsp2));
+        for b in &crate::bench_kernels::BENCHMARKS {
+            let k = jit.compile(b.source).unwrap();
+            let n_in = k.schedule.num_inputs;
+            let streams: Vec<Vec<i32>> =
+                (0..n_in).map(|p| (0..16).map(|i| (i + p) as i32 % 7 - 3).collect()).collect();
+            let outs = execute(&k.schedule, &streams, 16)
+                .unwrap_or_else(|e| panic!("{}: {e:#}", b.name));
+            assert_eq!(outs.len(), k.schedule.out_col.len());
+            assert!(outs.iter().all(|o| o.len() == 16));
+        }
+    }
+}

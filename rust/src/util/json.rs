@@ -1,0 +1,246 @@
+//! Minimal recursive-descent JSON reader — just enough to consume
+//! `artifacts/geometry.json` (objects, arrays, strings, numbers,
+//! booleans, null). No serde available offline.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    Null,
+    Bool(bool),
+    Number(f64),
+    String(String),
+    Array(Vec<JsonValue>),
+    Object(BTreeMap<String, JsonValue>),
+}
+
+impl JsonValue {
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<JsonValue> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing characters at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    /// Object field access.
+    pub fn get(&self, key: &str) -> Option<&JsonValue> {
+        match self {
+            JsonValue::Object(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Numeric value as i64 (truncating), if this is a number.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            JsonValue::Number(n) => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            JsonValue::Number(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            JsonValue::String(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, ch: u8) -> Result<()> {
+    if *pos >= b.len() || b[*pos] != ch {
+        bail!("expected '{}' at byte {}", ch as char, pos);
+    }
+    *pos += 1;
+    Ok(())
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => parse_object(b, pos),
+        b'[' => parse_array(b, pos),
+        b'"' => Ok(JsonValue::String(parse_string(b, pos)?)),
+        b't' => parse_lit(b, pos, "true", JsonValue::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", JsonValue::Bool(false)),
+        b'n' => parse_lit(b, pos, "null", JsonValue::Null),
+        _ => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: JsonValue) -> Result<JsonValue> {
+    if b.len() - *pos >= lit.len() && &b[*pos..*pos + lit.len()] == lit.as_bytes() {
+        *pos += lit.len();
+        Ok(v)
+    } else {
+        bail!("invalid literal at byte {pos}");
+    }
+}
+
+fn parse_object(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    expect(b, pos, b'{')?;
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(JsonValue::Object(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        let key = parse_string(b, pos)?;
+        skip_ws(b, pos);
+        expect(b, pos, b':')?;
+        let val = parse_value(b, pos)?;
+        map.insert(key, val);
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == b',' {
+            *pos += 1;
+        } else {
+            break;
+        }
+    }
+    skip_ws(b, pos);
+    expect(b, pos, b'}')?;
+    Ok(JsonValue::Object(map))
+}
+
+fn parse_array(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    expect(b, pos, b'[')?;
+    let mut items = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(JsonValue::Array(items));
+    }
+    loop {
+        items.push(parse_value(b, pos)?);
+        skip_ws(b, pos);
+        if *pos < b.len() && b[*pos] == b',' {
+            *pos += 1;
+        } else {
+            break;
+        }
+    }
+    skip_ws(b, pos);
+    expect(b, pos, b']')?;
+    Ok(JsonValue::Array(items))
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    expect(b, pos, b'"')?;
+    let mut s = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(s);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    break;
+                }
+                match b[*pos] {
+                    b'n' => s.push('\n'),
+                    b't' => s.push('\t'),
+                    b'r' => s.push('\r'),
+                    b'"' => s.push('"'),
+                    b'\\' => s.push('\\'),
+                    b'/' => s.push('/'),
+                    c => bail!("unsupported escape '\\{}'", c as char),
+                }
+                *pos += 1;
+            }
+            c => {
+                s.push(c as char);
+                *pos += 1;
+            }
+        }
+    }
+    bail!("unterminated string");
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
+    let start = *pos;
+    while *pos < b.len()
+        && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+    {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(JsonValue::Number(s.parse::<f64>()?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_geometry_like_document() {
+        let doc = r#"{ "num_inputs": 32, "max_fus": 128,
+                      "opcodes": {"mul": 3, "add": 1},
+                      "names": ["a", "b"], "flag": true, "none": null }"#;
+        let v = JsonValue::parse(doc).unwrap();
+        assert_eq!(v.get("num_inputs").unwrap().as_i64(), Some(32));
+        assert_eq!(v.get("opcodes").unwrap().get("mul").unwrap().as_i64(), Some(3));
+        match v.get("names").unwrap() {
+            JsonValue::Array(a) => assert_eq!(a[1].as_str(), Some("b")),
+            _ => panic!("expected array"),
+        }
+        assert_eq!(v.get("flag"), Some(&JsonValue::Bool(true)));
+        assert_eq!(v.get("none"), Some(&JsonValue::Null));
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        assert!(JsonValue::parse("{} x").is_err());
+    }
+
+    #[test]
+    fn parses_negative_and_float_numbers() {
+        let v = JsonValue::parse("[-3, 2.5, 1e3]").unwrap();
+        match v {
+            JsonValue::Array(a) => {
+                assert_eq!(a[0].as_i64(), Some(-3));
+                assert_eq!(a[1].as_f64(), Some(2.5));
+                assert_eq!(a[2].as_f64(), Some(1000.0));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_escapes() {
+        let v = JsonValue::parse(r#""a\nb\"c""#).unwrap();
+        assert_eq!(v.as_str(), Some("a\nb\"c"));
+    }
+
+    #[test]
+    fn rejects_unterminated() {
+        assert!(JsonValue::parse(r#"{"a": 1"#).is_err());
+        assert!(JsonValue::parse(r#""abc"#).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Small self-contained utilities: a seeded PRNG for the stochastic
+//! passes, a stopwatch, and a minimal JSON reader for
+//! `artifacts/geometry.json`.
+//!
+//! (The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so `rand`, `serde` and friends are
+//! hand-rolled here — see DESIGN.md §Key design decisions.)
+
+mod json;
+mod rng;
+mod timer;
+
+pub use json::JsonValue;
+pub use rng::XorShiftRng;
+pub use timer::Stopwatch;

@@ -1,0 +1,66 @@
+//! Wall-clock stopwatch used by the compile pipeline to report
+//! per-stage timings (the paper's Fig. 7 metric is PAR wall time).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch accumulating named laps.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+    last: Instant,
+    laps: Vec<(String, Duration)>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        let now = Instant::now();
+        Self { start: now, last: now, laps: Vec::new() }
+    }
+
+    /// Record the time since the previous lap under `name`.
+    pub fn lap(&mut self, name: &str) -> Duration {
+        let now = Instant::now();
+        let d = now - self.last;
+        self.last = now;
+        self.laps.push((name.to_string(), d));
+        d
+    }
+
+    /// Total elapsed time since construction.
+    pub fn total(&self) -> Duration {
+        Instant::now() - self.start
+    }
+
+    /// All recorded laps.
+    pub fn laps(&self) -> &[(String, Duration)] {
+        &self.laps
+    }
+
+    /// Duration of the lap named `name`, if recorded.
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        self.laps.iter().find(|(n, _)| n == name).map(|(_, d)| *d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn laps_accumulate_in_order() {
+        let mut sw = Stopwatch::new();
+        sw.lap("a");
+        sw.lap("b");
+        assert_eq!(sw.laps().len(), 2);
+        assert_eq!(sw.laps()[0].0, "a");
+        assert!(sw.get("b").is_some());
+        assert!(sw.get("missing").is_none());
+        assert!(sw.total() >= sw.laps()[0].1);
+    }
+}
