@@ -1,0 +1,35 @@
+# overlay-jit build + CI entry points.
+#
+#   make check      — fmt --check, clippy -D warnings, cargo test -q
+#   make build      — release build (tier-1 first half)
+#   make test       — cargo test -q (tier-1 second half)
+#   make bench      — the paper-figure + serving bench harnesses
+#   make artifacts  — AOT-lower the Pallas overlay emulator to HLO text
+#                     (needs the Python jax/pallas toolchain; only
+#                     required for the `pjrt` feature paths)
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: check fmt clippy build test bench artifacts
+
+check: fmt clippy test
+
+fmt:
+	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench --bench serve_throughput
+	$(CARGO) bench --bench hotpath
+
+artifacts:
+	cd python/compile && $(PYTHON) aot.py --out-dir ../../artifacts

@@ -1,23 +1,37 @@
 //! End-to-end driver: the full three-layer system on a real workload.
 //!
-//! JIT-compiles all six paper benchmarks against the 8×8 overlay and
-//! *serves batched requests through the AOT XLA/PJRT emulator* — the
-//! execution path a deployment would use (Rust coordinator → PJRT C
-//! API → the Pallas-built overlay-datapath executable; Python is not
-//! involved at run time). Each kernel handles a stream of dispatches;
-//! the driver reports per-dispatch latency percentiles, sustained
-//! work-item throughput, backend-vs-simulator agreement checks, and
-//! the modeled on-silicon overlay timing next to the paper's GOPS
-//! model. Results are recorded in EXPERIMENTS.md §E7.
+//! # Serving modes
 //!
-//! Run: `make artifacts && cargo run --release --example e2e_serve`
+//! **Coordinator mode (default)** — `cargo run --release --example
+//! e2e_serve [-- coordinator [PARTITIONS]]` — the deployment shape
+//! this repo is growing toward: the [`overlay_jit::coordinator`]
+//! subsystem serves a *mixed* request stream of all six paper
+//! benchmarks across a fleet of overlay partitions (default 2). Each
+//! request goes through the compile cache (first sight of a kernel
+//! pays the paper's seconds-class JIT once; repeats are O(lookup)),
+//! the slot-aware scheduler (dispatches land on partitions already
+//! configured with the kernel's bitstream; victims pay the modeled
+//! 42 µs-class load), and the async per-partition dispatch queues.
+//! Every dispatch is re-executed on the cycle simulator and must agree
+//! bit-for-bit. The run fails (non-zero exit) if any dispatch fails
+//! verification or the compile cache never hits.
+//!
+//! **PJRT mode** — `make artifacts && cargo run --release --features
+//! pjrt --example e2e_serve -- pjrt` — the original single-device
+//! path: JIT-compiles the six benchmarks and serves batched requests
+//! through the AOT XLA/PJRT emulator, reporting per-dispatch latency
+//! percentiles, sustained throughput and backend-vs-simulator
+//! agreement. Requires the `pjrt` cargo feature and `make artifacts`.
+//!
+//! Results are recorded in EXPERIMENTS.md (§E7 PJRT, §E8 coordinator).
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use overlay_jit::bench_kernels::{reference_overlay, BENCHMARKS};
-use overlay_jit::metrics::{self, TextTable};
+use overlay_jit::coordinator::{wait_all, Coordinator, CoordinatorConfig, SubmitArg};
+use overlay_jit::metrics::{self, percentile, TextTable};
 use overlay_jit::prelude::*;
 use overlay_jit::sim;
 use overlay_jit::util::XorShiftRng;
@@ -25,12 +39,150 @@ use overlay_jit::util::XorShiftRng;
 const DISPATCHES: usize = 24;
 const ITEMS_PER_DISPATCH: usize = 16_384;
 
-fn percentile(sorted: &[f64], p: f64) -> f64 {
-    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-    sorted[idx]
-}
+/// Coordinator rounds: each round submits all six benchmarks once.
+const ROUNDS: usize = 8;
+const COORD_ITEMS: usize = 4096;
 
 fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("pjrt") => serve_pjrt(),
+        Some("coordinator") | None => {
+            let partitions = args
+                .get(1)
+                .and_then(|s| s.parse::<usize>().ok())
+                .unwrap_or(2);
+            serve_coordinator(partitions)
+        }
+        Some(other) => bail!("unknown mode '{other}' (coordinator [N] | pjrt)"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// coordinator mode: mixed stream across a fleet of partitions
+// ---------------------------------------------------------------------
+
+fn serve_coordinator(partitions: usize) -> Result<()> {
+    if partitions < 2 {
+        bail!("coordinator mode serves a fleet: need >= 2 partitions, got {partitions}");
+    }
+    let spec = reference_overlay();
+    let coord = Coordinator::new(CoordinatorConfig::sim_fleet(spec.clone(), partitions))?;
+    println!(
+        "serving a mixed stream of {} benchmarks x {ROUNDS} rounds x {COORD_ITEMS} items \
+         across {partitions} {} partitions\n",
+        BENCHMARKS.len(),
+        spec.name()
+    );
+
+    // a host context for buffer allocation (any device works; buffers
+    // are backend-independent)
+    let host = Device {
+        spec: spec.clone(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    let ctx = Context::new(&host);
+    let mut rng = XorShiftRng::new(0xE2E);
+
+    // param counts are per-benchmark constants; don't re-parse inside
+    // the timed serving loop
+    let mut nparams_by_bench = Vec::with_capacity(BENCHMARKS.len());
+    for b in &BENCHMARKS {
+        nparams_by_bench.push(overlay_jit::frontend::parse_kernel(b.source)?.params.len());
+    }
+
+    let t_serve = Instant::now();
+    let mut handles = Vec::new();
+    let mut tags = Vec::new();
+    for _ in 0..ROUNDS {
+        for (b, &nparams) in BENCHMARKS.iter().zip(&nparams_by_bench) {
+            let args: Vec<SubmitArg> = (0..nparams)
+                .map(|_| {
+                    let buf = ctx.create_buffer(COORD_ITEMS + 16);
+                    let data: Vec<i32> = (0..COORD_ITEMS + 16)
+                        .map(|_| rng.gen_i64(-40, 40) as i32)
+                        .collect();
+                    buf.write(&data);
+                    SubmitArg::Buffer(buf)
+                })
+                .collect();
+            handles.push(coord.submit(b.source, &args, COORD_ITEMS)?);
+            tags.push(b.name);
+        }
+    }
+    let results = wait_all(handles)?;
+    let serve_s = t_serve.elapsed().as_secs_f64();
+
+    // per-benchmark accounting
+    let mut table = TextTable::new(vec![
+        "kernel",
+        "dispatches",
+        "cache hits",
+        "reconfigs",
+        "p50 ms",
+        "p99 ms",
+        "verified",
+    ]);
+    let mut all_verified = true;
+    for b in &BENCHMARKS {
+        let rs: Vec<_> = results
+            .iter()
+            .zip(&tags)
+            .filter(|(_, t)| **t == b.name)
+            .map(|(r, _)| r)
+            .collect();
+        let mut lat: Vec<f64> = rs
+            .iter()
+            .map(|r| (r.queue_wait + r.event.wall).as_secs_f64() * 1e3)
+            .collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let hits = rs.iter().filter(|r| r.cache_hit).count();
+        let reconfigs = rs.iter().filter(|r| r.event.config_seconds > 0.0).count();
+        let verified = rs.iter().all(|r| r.verified == Some(true));
+        all_verified &= verified;
+        table.row(vec![
+            b.name.to_string(),
+            rs.len().to_string(),
+            hits.to_string(),
+            reconfigs.to_string(),
+            format!("{:.3}", percentile(&lat, 0.50)),
+            format!("{:.3}", percentile(&lat, 0.99)),
+            if verified { "ok".to_string() } else { "FAIL".to_string() },
+        ]);
+    }
+    println!("{}", table.render());
+
+    let stats = coord.stats();
+    println!("{}", stats.render());
+    println!(
+        "throughput : {:.2} Mitems/s end-to-end ({} dispatches in {:.2} s)\n",
+        stats.total_items as f64 / serve_s / 1e6,
+        stats.total_dispatches,
+        serve_s
+    );
+
+    // acceptance: hit rate > 0, every dispatch simulator-verified
+    if !all_verified || stats.verify_failures > 0 {
+        bail!("verification failure: a dispatch diverged from the cycle simulator");
+    }
+    if stats.cache.hit_rate() <= 0.0 {
+        bail!("compile cache never hit — serving layer is not caching");
+    }
+    println!(
+        "OK: hit rate {:.0}%, {} reconfigs across {} partitions, all dispatches verified",
+        100.0 * stats.cache.hit_rate(),
+        stats.reconfig_count,
+        partitions
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// PJRT mode: the original single-device batched-serving measurement
+// ---------------------------------------------------------------------
+
+fn serve_pjrt() -> Result<()> {
     let spec = reference_overlay();
     let platform = Platform::with_pjrt("artifacts", spec.clone())?;
     let device = &platform.devices()[0];
@@ -67,8 +219,9 @@ fn main() -> Result<()> {
         let mut buffers = Vec::new();
         for p in 0..nparams {
             let buf = ctx.create_buffer(ITEMS_PER_DISPATCH + 16);
-            let data: Vec<i32> =
-                (0..ITEMS_PER_DISPATCH + 16).map(|_| rng.gen_i64(-40, 40) as i32).collect();
+            let data: Vec<i32> = (0..ITEMS_PER_DISPATCH + 16)
+                .map(|_| rng.gen_i64(-40, 40) as i32)
+                .collect();
             buf.write(&data);
             kernel.set_arg(p, &buf)?;
             buffers.push(buf);
@@ -90,27 +243,7 @@ fn main() -> Result<()> {
         // verify the PJRT path against the cycle simulator on the last
         // dispatch's data
         let k = &kernel.compiled;
-        let chunk = ITEMS_PER_DISPATCH.div_ceil(k.plan.factor);
-        let mut streams = Vec::new();
-        for copy in 0..k.plan.factor {
-            for p in 0..k.dfg.num_inputs() {
-                let m = k.dfg.input_meta[p];
-                let data = buffers[m.param].read();
-                let s: Vec<i32> = (0..chunk)
-                    .map(|i| {
-                        let gid = copy * chunk + i;
-                        let idx = gid as i64 + m.offset;
-                        if gid < ITEMS_PER_DISPATCH && idx >= 0 && (idx as usize) < data.len()
-                        {
-                            data[idx as usize]
-                        } else {
-                            0
-                        }
-                    })
-                    .collect();
-                streams.push(s);
-            }
-        }
+        let (streams, chunk) = kernel.pack_streams(ITEMS_PER_DISPATCH)?;
         // note: output buffers were overwritten by the dispatch, but
         // input params of these kernels are read-only, so the repacked
         // streams match what the dispatch consumed.

@@ -67,6 +67,46 @@ impl Default for CompileOptions {
     }
 }
 
+impl CompileOptions {
+    /// Stable fingerprint over every option that can change the
+    /// compiled artifact — one third of the coordinator's compile-cache
+    /// key (source hash, overlay fingerprint, options fingerprint).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::StableHasher::new();
+        h.write_u64(self.seed);
+        h.write_f64(self.placer.inner_num);
+        match self.replication {
+            Replication::Auto => h.write_u64(0),
+            Replication::Fixed(n) => {
+                h.write_u64(1);
+                h.write_usize(n);
+            }
+        }
+        match &self.backend_limits {
+            None => h.write_u64(0),
+            Some(b) => {
+                h.write_u64(1);
+                h.write_usize(b.max_op_slots);
+                h.write_usize(b.max_inputs);
+            }
+        }
+        h.write_usize(self.router.max_iterations);
+        h.write_f64(self.router.first_pres_fac);
+        h.write_f64(self.router.pres_fac_mult);
+        h.write_f64(self.router.hist_fac);
+        h.write_f64(self.router.astar_fac);
+        h.finish()
+    }
+}
+
+/// Stable (FNV-1a) hash of a kernel source string. Unlike
+/// `DefaultHasher`, the value is identical across processes and Rust
+/// versions, so cache keys built from it can be logged and compared
+/// across runs.
+pub fn stable_source_hash(source: &str) -> u64 {
+    crate::util::fnv1a_64(source.as_bytes())
+}
+
 /// Wall-clock timing of each pipeline stage.
 #[derive(Debug, Clone, Default)]
 pub struct CompileReport {
@@ -127,6 +167,31 @@ pub struct CompiledKernel {
     pub report: CompileReport,
 }
 
+/// Compact cost summary of a compiled kernel — what the serving
+/// coordinator needs for scheduling and reporting without dragging the
+/// full artifact around.
+#[derive(Debug, Clone)]
+pub struct KernelCost {
+    pub name: String,
+    /// Replicated copies mapped.
+    pub copies: usize,
+    /// Arithmetic ops per copy (GOPS model input).
+    pub ops_per_copy: usize,
+    /// Functional units consumed on the overlay.
+    pub fus: usize,
+    /// Emulator op slots in the levelized schedule.
+    pub op_slots: usize,
+    /// Serialized configuration size — drives the modeled
+    /// reconfiguration cost when a partition must swap kernels.
+    pub bitstream_bytes: usize,
+    /// Fill latency of the mapped pipeline, cycles.
+    pub pipeline_depth: u32,
+    /// Measured wall time of the whole JIT compile.
+    pub compile_seconds: f64,
+    /// Measured wall time of the PAR portion (the Fig. 7 metric).
+    pub par_seconds: f64,
+}
+
 impl CompiledKernel {
     /// Replicated copies mapped.
     pub fn copies(&self) -> usize {
@@ -136,6 +201,21 @@ impl CompiledKernel {
     /// Arithmetic ops per copy (GOPS model input).
     pub fn ops_per_copy(&self) -> usize {
         self.dfg.num_ops()
+    }
+
+    /// The coordinator-facing cost summary.
+    pub fn cost_summary(&self) -> KernelCost {
+        KernelCost {
+            name: self.name.clone(),
+            copies: self.copies(),
+            ops_per_copy: self.ops_per_copy(),
+            fus: self.fg.num_fus(),
+            op_slots: self.schedule.n_slots(),
+            bitstream_bytes: self.bitstream.byte_size(),
+            pipeline_depth: self.latency.pipeline_depth,
+            compile_seconds: self.report.total().as_secs_f64(),
+            par_seconds: self.report.par_time().as_secs_f64(),
+        }
     }
 }
 
@@ -326,6 +406,37 @@ mod tests {
         let total = k.report.total();
         let split = k.report.frontend_time() + k.report.par_time();
         assert!((total.as_nanos() as i128 - split.as_nanos() as i128).abs() < 1000);
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_sensitive() {
+        let a = CompileOptions::default();
+        let b = CompileOptions::default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let c = CompileOptions { seed: 2, ..Default::default() };
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        let d = CompileOptions {
+            replication: Replication::Fixed(4),
+            ..Default::default()
+        };
+        assert_ne!(a.fingerprint(), d.fingerprint());
+        // source hash is content-addressed and whitespace-sensitive
+        assert_eq!(stable_source_hash(CHEB), stable_source_hash(CHEB));
+        assert_ne!(stable_source_hash(CHEB), stable_source_hash("__kernel void x() {}"));
+    }
+
+    #[test]
+    fn cost_summary_matches_artifacts() {
+        let jit = JitCompiler::new(OverlaySpec::zynq_default());
+        let k = jit.compile(CHEB).unwrap();
+        let c = k.cost_summary();
+        assert_eq!(c.name, "chebyshev");
+        assert_eq!(c.copies, k.copies());
+        assert_eq!(c.ops_per_copy, k.ops_per_copy());
+        assert_eq!(c.bitstream_bytes, k.bitstream.byte_size());
+        assert_eq!(c.pipeline_depth, k.latency.pipeline_depth);
+        assert!(c.compile_seconds > 0.0);
+        assert!(c.par_seconds <= c.compile_seconds);
     }
 
     #[test]

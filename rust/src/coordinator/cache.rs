@@ -1,0 +1,240 @@
+//! The compile cache: content-addressed reuse of JIT artifacts.
+//!
+//! The paper's JIT compile is seconds-class (Fig. 7); a serving
+//! deployment cannot afford to pay it per request. Compiled kernels
+//! are therefore cached under a **stable key** — (kernel source hash,
+//! overlay fingerprint, compile-options fingerprint) — so a repeat
+//! build is O(hash lookup) and only genuinely new (source, overlay,
+//! options) combinations hit the compiler. Eviction is LRU over a
+//! bounded capacity with deterministic tie-breaking (a monotonic
+//! logical clock stamps every touch), which the tests rely on.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::compiler::{stable_source_hash, CompileOptions, CompiledKernel};
+use crate::metrics::CacheStats;
+use crate::overlay::OverlaySpec;
+
+/// Stable compile-cache key. Every component survives process
+/// restarts (FNV-1a, not `DefaultHasher`), so keys can be logged and
+/// compared across runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    /// FNV-1a of the kernel source text.
+    pub source: u64,
+    /// [`OverlaySpec::fingerprint`] of the target overlay.
+    pub spec: u64,
+    /// [`CompileOptions::fingerprint`] of the build options.
+    pub options: u64,
+}
+
+impl CacheKey {
+    pub fn new(source: &str, spec: &OverlaySpec, options: &CompileOptions) -> CacheKey {
+        CacheKey {
+            source: stable_source_hash(source),
+            spec: spec.fingerprint(),
+            options: options.fingerprint(),
+        }
+    }
+}
+
+struct Entry {
+    kernel: Arc<CompiledKernel>,
+    /// Logical time of the last hit or insert (unique — ties are
+    /// impossible, so eviction order is deterministic).
+    last_used: u64,
+}
+
+/// Bounded LRU cache of compiled kernels.
+pub struct CompileCache {
+    map: HashMap<CacheKey, Entry>,
+    capacity: usize,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl std::fmt::Debug for CompileCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompileCache")
+            .field("entries", &self.map.len())
+            .field("capacity", &self.capacity)
+            .field("hits", &self.hits)
+            .field("misses", &self.misses)
+            .field("evictions", &self.evictions)
+            .finish()
+    }
+}
+
+impl CompileCache {
+    /// A cache holding at most `capacity` compiled kernels
+    /// (`capacity` is clamped to ≥ 1).
+    pub fn new(capacity: usize) -> CompileCache {
+        CompileCache {
+            map: HashMap::new(),
+            capacity: capacity.max(1),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look a key up, counting a hit or miss and refreshing LRU order
+    /// on hit.
+    pub fn get(&mut self, key: &CacheKey) -> Option<Arc<CompiledKernel>> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = self.tick;
+                self.hits += 1;
+                Some(e.kernel.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Check residency without touching counters or LRU order.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert a compiled kernel, evicting the least-recently-used
+    /// entry if the cache is full. Returns the evicted key, if any.
+    pub fn insert(&mut self, key: CacheKey, kernel: Arc<CompiledKernel>) -> Option<CacheKey> {
+        self.tick += 1;
+        if let Some(e) = self.map.get_mut(&key) {
+            // refresh (racing compilers may insert the same key twice)
+            e.kernel = kernel;
+            e.last_used = self.tick;
+            return None;
+        }
+        let mut evicted = None;
+        if self.map.len() >= self.capacity {
+            if let Some(victim) = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+            {
+                self.map.remove(&victim);
+                self.evictions += 1;
+                evicted = Some(victim);
+            }
+        }
+        self.map.insert(key, Entry { kernel, last_used: self.tick });
+        evicted
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.map.len(),
+            capacity: self.capacity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::JitCompiler;
+    use crate::overlay::FuType;
+
+    fn compiled() -> Arc<CompiledKernel> {
+        let jit = JitCompiler::new(OverlaySpec::new(4, 4, FuType::Dsp2));
+        Arc::new(jit.compile(crate::bench_kernels::CHEBYSHEV).unwrap())
+    }
+
+    fn key(tag: u64) -> CacheKey {
+        CacheKey { source: tag, spec: 0, options: 0 }
+    }
+
+    #[test]
+    fn cache_key_components_are_independent() {
+        let spec = OverlaySpec::zynq_default();
+        let opts = CompileOptions::default();
+        let a = CacheKey::new("src-a", &spec, &opts);
+        let b = CacheKey::new("src-b", &spec, &opts);
+        assert_ne!(a, b);
+        assert_eq!(a.spec, b.spec);
+        assert_eq!(a.options, b.options);
+        let c = CacheKey::new("src-a", &OverlaySpec::new(4, 4, FuType::Dsp1), &opts);
+        assert_eq!(a.source, c.source);
+        assert_ne!(a.spec, c.spec);
+        // stable across constructions
+        assert_eq!(a, CacheKey::new("src-a", &spec, &opts));
+    }
+
+    #[test]
+    fn hit_miss_counters() {
+        let mut cache = CompileCache::new(4);
+        let k = compiled();
+        assert!(cache.get(&key(1)).is_none());
+        cache.insert(key(1), k.clone());
+        assert!(cache.get(&key(1)).is_some());
+        assert!(cache.get(&key(2)).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 2, 1));
+        assert!((s.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_eviction_is_deterministic() {
+        let mut cache = CompileCache::new(2);
+        let k = compiled();
+        cache.insert(key(1), k.clone());
+        cache.insert(key(2), k.clone());
+        // touch 1 so 2 becomes the LRU victim
+        assert!(cache.get(&key(1)).is_some());
+        let evicted = cache.insert(key(3), k.clone());
+        assert_eq!(evicted, Some(key(2)));
+        assert!(cache.contains(&key(1)));
+        assert!(cache.contains(&key(3)));
+        assert!(!cache.contains(&key(2)));
+        assert_eq!(cache.stats().evictions, 1);
+        // repeat the same sequence → same eviction decision
+        let mut c2 = CompileCache::new(2);
+        c2.insert(key(1), k.clone());
+        c2.insert(key(2), k.clone());
+        assert!(c2.get(&key(1)).is_some());
+        assert_eq!(c2.insert(key(3), k), Some(key(2)));
+    }
+
+    #[test]
+    fn reinserting_resident_key_does_not_evict() {
+        let mut cache = CompileCache::new(2);
+        let k = compiled();
+        cache.insert(key(1), k.clone());
+        cache.insert(key(2), k.clone());
+        assert_eq!(cache.insert(key(2), k), None);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 0);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let cache = CompileCache::new(0);
+        assert_eq!(cache.capacity(), 1);
+        assert!(cache.is_empty());
+    }
+}

@@ -1,0 +1,303 @@
+//! Asynchronous dispatch: one worker thread per overlay partition.
+//!
+//! Each partition owns an in-order work queue (an OpenCL command
+//! queue, in the paper's terms). `submit` is non-blocking: it routes
+//! the request through the slot-aware scheduler, enqueues a job on the
+//! chosen partition's channel and returns a [`DispatchHandle`] the
+//! caller can later `wait()` on. Workers drain their channel in
+//! batches — consecutive enqueues against an already-configured
+//! partition amortize the (already µs-class) configuration cost to
+//! zero, mirroring how the paper's runtime reuses a loaded overlay
+//! configuration across `clEnqueueNDRangeKernel` calls.
+//!
+//! Completion carries the same timing breakdown as a synchronous
+//! [`crate::runtime_ocl::Event`] (wall time, modeled configuration
+//! load, modeled II=1 overlay timing) plus serving metadata: queue
+//! wait, compile-cache hit flag, batch size, and the optional
+//! cycle-simulator verification verdict.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::runtime_ocl::{Backend, Buffer, Device, Event, Kernel};
+use crate::sim;
+
+use super::scheduler::SlotScheduler;
+
+/// An argument to [`crate::coordinator::Coordinator::submit`].
+#[derive(Debug, Clone)]
+pub enum SubmitArg {
+    /// A global-memory buffer (read and/or written by the kernel).
+    Buffer(Buffer),
+    /// A broadcast scalar.
+    Scalar(i32),
+}
+
+/// Completed-dispatch report: the event an OpenCL profiling query
+/// would return, plus the coordinator's serving metadata.
+#[derive(Debug, Clone)]
+pub struct DispatchResult {
+    /// Timing breakdown identical to the synchronous runtime path.
+    pub event: Event,
+    /// Partition (fleet index) that executed the dispatch.
+    pub partition: usize,
+    /// Whether the compiled kernel came from the compile cache.
+    pub cache_hit: bool,
+    /// Time spent queued before the worker picked the job up.
+    pub queue_wait: Duration,
+    /// Jobs drained in the same worker batch (≥ 1).
+    pub batch_size: usize,
+    /// `Some(true)` when the dispatch verified against the cycle
+    /// simulator: the scattered output buffers hold the simulator's
+    /// values bit-for-bit (and, on PJRT partitions, the backend's raw
+    /// streams agreed with a simulator re-execution). `None` when
+    /// verification is disabled.
+    pub verified: Option<bool>,
+}
+
+pub(crate) struct HandleInner {
+    slot: Mutex<Option<Result<DispatchResult>>>,
+    cv: Condvar,
+}
+
+impl HandleInner {
+    pub(crate) fn new() -> Arc<HandleInner> {
+        Arc::new(HandleInner { slot: Mutex::new(None), cv: Condvar::new() })
+    }
+
+    pub(crate) fn fulfill(&self, result: Result<DispatchResult>) {
+        *self.slot.lock().unwrap() = Some(result);
+        self.cv.notify_all();
+    }
+}
+
+/// Completion handle for an asynchronously dispatched kernel.
+pub struct DispatchHandle {
+    pub(crate) inner: Arc<HandleInner>,
+}
+
+impl DispatchHandle {
+    /// Block until the dispatch completes and return its result.
+    pub fn wait(self) -> Result<DispatchResult> {
+        let mut slot = self.inner.slot.lock().unwrap();
+        loop {
+            if let Some(r) = slot.take() {
+                return r;
+            }
+            slot = self.inner.cv.wait(slot).unwrap();
+        }
+    }
+
+    /// Non-blocking poll: `Some(result)` once the dispatch completed.
+    pub fn try_wait(&self) -> Option<Result<DispatchResult>> {
+        self.inner.slot.lock().unwrap().take()
+    }
+}
+
+/// One queued dispatch.
+pub(crate) struct Job {
+    pub kernel: Kernel,
+    pub global_size: usize,
+    pub partition: usize,
+    /// Modeled bitstream-load seconds charged by the scheduler
+    /// (0.0 when the partition already held the configuration).
+    pub config_seconds: f64,
+    pub cache_hit: bool,
+    pub enqueued: Instant,
+    pub handle: Arc<HandleInner>,
+}
+
+pub(crate) enum Msg {
+    Job(Box<Job>),
+    Shutdown,
+}
+
+/// Latency samples kept before the buffer halves its resolution —
+/// bounds coordinator memory on long-running fleets.
+pub(crate) const MAX_LATENCY_SAMPLES: usize = 65_536;
+
+/// Shared serving counters the workers append to.
+#[derive(Debug)]
+pub(crate) struct ServeLog {
+    pub latencies_ms: Vec<f64>,
+    /// Every `lat_stride`-th dispatch is sampled; doubles each time
+    /// the buffer fills (decimation keeps percentiles representative).
+    lat_stride: u64,
+    lat_seen: u64,
+    pub total_items: u64,
+    pub total_dispatches: u64,
+    pub verify_failures: u64,
+    pub errors: u64,
+    /// Wall seconds of JIT compilation on cache misses (recorded by
+    /// the coordinator, not the workers).
+    pub compile_seconds: f64,
+}
+
+impl Default for ServeLog {
+    fn default() -> Self {
+        ServeLog {
+            latencies_ms: Vec::new(),
+            lat_stride: 1,
+            lat_seen: 0,
+            total_items: 0,
+            total_dispatches: 0,
+            verify_failures: 0,
+            errors: 0,
+            compile_seconds: 0.0,
+        }
+    }
+}
+
+impl ServeLog {
+    /// Record one end-to-end dispatch latency, downsampling once the
+    /// buffer reaches [`MAX_LATENCY_SAMPLES`].
+    pub(crate) fn record_latency(&mut self, ms: f64) {
+        self.lat_seen += 1;
+        if self.lat_seen % self.lat_stride != 0 {
+            return;
+        }
+        if self.latencies_ms.len() >= MAX_LATENCY_SAMPLES {
+            let mut i = 0usize;
+            self.latencies_ms.retain(|_| {
+                i += 1;
+                i % 2 == 1
+            });
+            self.lat_stride *= 2;
+        }
+        self.latencies_ms.push(ms);
+    }
+}
+
+pub(crate) struct Worker {
+    pub sender: Sender<Msg>,
+    pub join: Option<thread::JoinHandle<()>>,
+}
+
+pub(crate) fn spawn_worker(
+    partition: usize,
+    device: Device,
+    scheduler: Arc<Mutex<SlotScheduler>>,
+    log: Arc<Mutex<ServeLog>>,
+    verify: bool,
+) -> Worker {
+    let (sender, receiver) = mpsc::channel::<Msg>();
+    let join = thread::Builder::new()
+        .name(format!("overlay-part{partition}"))
+        .spawn(move || worker_loop(partition, device, receiver, scheduler, log, verify))
+        .expect("spawning coordinator worker thread");
+    Worker { sender, join: Some(join) }
+}
+
+fn worker_loop(
+    partition: usize,
+    device: Device,
+    receiver: Receiver<Msg>,
+    scheduler: Arc<Mutex<SlotScheduler>>,
+    log: Arc<Mutex<ServeLog>>,
+    verify: bool,
+) {
+    loop {
+        // block for work, then drain whatever else queued up — the
+        // per-partition batch
+        let first = match receiver.recv() {
+            Ok(m) => m,
+            Err(_) => return, // coordinator dropped
+        };
+        let mut batch = vec![first];
+        while let Ok(m) = receiver.try_recv() {
+            batch.push(m);
+        }
+        let batch_size = batch.iter().filter(|m| matches!(m, Msg::Job(_))).count();
+        let mut shutdown = false;
+        for msg in batch {
+            match msg {
+                Msg::Shutdown => shutdown = true,
+                Msg::Job(job) => {
+                    let result = run_job(&device, &job, batch_size, verify);
+                    let busy = match &result {
+                        Ok(r) => r.event.modeled.seconds + r.event.config_seconds,
+                        Err(_) => 0.0,
+                    };
+                    scheduler.lock().unwrap().complete(partition, busy);
+                    {
+                        let mut lg = log.lock().unwrap();
+                        lg.total_dispatches += 1;
+                        match &result {
+                            Ok(r) => {
+                                let e2e = r.queue_wait + r.event.wall;
+                                lg.record_latency(e2e.as_secs_f64() * 1e3);
+                                lg.total_items += r.event.global_size as u64;
+                                if r.verified == Some(false) {
+                                    lg.verify_failures += 1;
+                                }
+                            }
+                            Err(_) => lg.errors += 1,
+                        }
+                    }
+                    job.handle.fulfill(result);
+                }
+            }
+        }
+        if shutdown {
+            return;
+        }
+    }
+}
+
+/// Execute one dispatch on this worker's device and assemble the
+/// completion report.
+fn run_job(device: &Device, job: &Job, batch_size: usize, verify: bool) -> Result<DispatchResult> {
+    let queue_wait = job.enqueued.elapsed();
+    let t0 = Instant::now();
+    let k = &job.kernel.compiled;
+
+    let (streams, chunk) = job.kernel.pack_streams(job.global_size)?;
+    let outs = match &device.backend {
+        Backend::CycleSim => sim::execute(&k.schedule, &streams, chunk)?,
+        Backend::Pjrt(rt) => rt.execute_overlay(&k.schedule, &streams, chunk)?,
+    };
+    job.kernel.scatter_outputs(&outs, job.global_size);
+
+    // verification: for PJRT partitions, re-execute on the cycle
+    // simulator and require bit-exact agreement (the serving-path
+    // analogue of the backend agreement suite); on cycle-sim
+    // partitions `outs` *is* the simulator's output, so the cross
+    // check is free. Either way, read the scattered buffers back and
+    // require them to hold the simulator-verified values exactly —
+    // this catches pack/scatter indexing bugs, which a re-execution
+    // alone cannot.
+    let verified = if verify {
+        let cross = match &device.backend {
+            Backend::CycleSim => true,
+            Backend::Pjrt(_) => sim::execute(&k.schedule, &streams, chunk)? == outs,
+        };
+        Some(cross && job.kernel.outputs_match(&outs, job.global_size))
+    } else {
+        None
+    };
+
+    let modeled = sim::timing(
+        &device.spec,
+        &k.latency,
+        k.plan.factor,
+        k.ops_per_copy(),
+        job.global_size as u64,
+    );
+    Ok(DispatchResult {
+        event: Event {
+            wall: t0.elapsed(),
+            config_seconds: job.config_seconds,
+            modeled,
+            global_size: job.global_size,
+        },
+        partition: job.partition,
+        cache_hit: job.cache_hit,
+        queue_wait,
+        batch_size,
+        verified,
+    })
+}

@@ -1,1 +1,431 @@
-// paper's L3 coordination contribution
+//! The overlay serving coordinator (the paper's L3 coordination
+//! contribution, grown into a subsystem).
+//!
+//! The paper's claim is that seconds-class JIT compilation plus
+//! µs-class overlay reconfiguration make *run-time* kernel management
+//! practical. This module is that management layer: a serving front
+//! end that owns a fleet of overlay partitions and turns the two paper
+//! numbers into steady-state throughput:
+//!
+//! * [`CompileCache`] — a **compile cache** keyed by (source hash,
+//!   overlay fingerprint, options fingerprint): repeat builds are
+//!   O(lookup) instead of the Fig. 7 seconds;
+//! * [`SlotScheduler`] — a **slot-aware scheduler** that treats
+//!   configured partitions as a cache: dispatches land on a partition
+//!   already holding the kernel's bitstream when possible, otherwise
+//!   an idle LRU victim pays the modeled
+//!   [`ConfigSizeModel`] load cost (42.4 µs for the 8×8 overlay);
+//! * [`DispatchHandle`] — an **async dispatch queue**: one worker
+//!   thread per partition, per-partition batching, completion handles
+//!   carrying the same timing breakdown as synchronous
+//!   [`crate::runtime_ocl`] events plus an optional cycle-simulator
+//!   verification verdict.
+//!
+//! ```text
+//! submit(source, args, n) ──┐
+//!                           ▼
+//!                  compile cache ── miss ──▶ JitCompiler (seconds)
+//!                       │ hit                      │
+//!                       ▼                          ▼
+//!                 slot-aware scheduler  ◀── CompiledKernel
+//!                  │ resident? │ victim (LRU, + config µs)
+//!                  ▼           ▼
+//!         partition 0 queue   partition 1 queue   …   (worker threads)
+//!                  ▼           ▼
+//!             DispatchHandle.wait() → DispatchResult
+//! ```
+//!
+//! The fleet must currently be homogeneous (identical
+//! [`OverlaySpec`]s): a compiled kernel's placement, routing and
+//! bitstream are spec-bound, so heterogeneous partition sizes need
+//! per-spec compilation — an explicit ROADMAP follow-on.
+
+mod cache;
+mod dispatch;
+mod scheduler;
+
+pub use cache::{CacheKey, CompileCache};
+pub use dispatch::{DispatchHandle, DispatchResult, SubmitArg};
+pub use scheduler::{Decision, PartitionState, SlotScheduler};
+
+/// Re-exported for convenience: the compile-cache counters live in
+/// [`crate::metrics`] with the rest of the serving statistics.
+pub use crate::metrics::CacheStats;
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::compiler::{CompileOptions, JitCompiler};
+use crate::metrics::{LatencyStats, PartitionServingStats, ServingStats};
+use crate::overlay::{ConfigSizeModel, OverlaySpec};
+use crate::runtime_ocl::{Device, Kernel, Platform};
+
+use dispatch::{HandleInner, Job, Msg, ServeLog, Worker};
+
+/// Configuration of a serving fleet.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// The overlay partitions (devices) to serve across. All must
+    /// share one [`OverlaySpec`] for now (see module docs).
+    pub devices: Vec<Device>,
+    /// Maximum compiled kernels held by the compile cache.
+    pub cache_capacity: usize,
+    /// JIT options used for every compile (part of the cache key).
+    pub compile_options: CompileOptions,
+    /// Verify every dispatch against the cycle simulator: the
+    /// scattered output buffers must hold the simulator's values
+    /// bit-for-bit (PJRT partitions additionally re-execute on the
+    /// simulator and require raw-stream agreement). Recorded in
+    /// [`DispatchResult::verified`].
+    pub verify: bool,
+}
+
+impl CoordinatorConfig {
+    /// A homogeneous cycle-simulated fleet of `partitions` overlays.
+    pub fn sim_fleet(spec: OverlaySpec, partitions: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            devices: Platform::multi_sim(spec, partitions).devices().to_vec(),
+            cache_capacity: 32,
+            compile_options: CompileOptions::default(),
+            verify: true,
+        }
+    }
+
+    /// Serve across an existing platform's devices.
+    pub fn for_platform(platform: &Platform) -> CoordinatorConfig {
+        CoordinatorConfig {
+            devices: platform.devices().to_vec(),
+            cache_capacity: 32,
+            compile_options: CompileOptions::default(),
+            verify: true,
+        }
+    }
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2)
+    }
+}
+
+/// The multi-overlay serving coordinator. See module docs.
+pub struct Coordinator {
+    jit: JitCompiler,
+    spec: OverlaySpec,
+    cache: Mutex<CompileCache>,
+    scheduler: Arc<Mutex<SlotScheduler>>,
+    log: Arc<Mutex<ServeLog>>,
+    workers: Vec<Worker>,
+    partition_names: Vec<String>,
+    start: Instant,
+}
+
+impl std::fmt::Debug for Coordinator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Coordinator")
+            .field("overlay", &self.spec.name())
+            .field("partitions", &self.partition_names)
+            .finish()
+    }
+}
+
+impl Coordinator {
+    /// Bring a fleet up: one JIT compiler (and routing-resource graph)
+    /// for the shared spec, one worker thread per partition.
+    pub fn new(config: CoordinatorConfig) -> Result<Coordinator> {
+        let CoordinatorConfig { devices, cache_capacity, compile_options, verify } = config;
+        if devices.is_empty() {
+            bail!("coordinator needs at least one overlay partition");
+        }
+        let spec = devices[0].spec.clone();
+        for d in &devices[1..] {
+            if d.spec.fingerprint() != spec.fingerprint() {
+                bail!(
+                    "heterogeneous fleet: partition '{}' is {} but the fleet is {} — \
+                     per-spec compilation is not implemented yet (see ROADMAP)",
+                    d.name,
+                    d.spec.name(),
+                    spec.name()
+                );
+            }
+        }
+        let jit = JitCompiler::with_options(spec.clone(), compile_options);
+        let scheduler = Arc::new(Mutex::new(SlotScheduler::new(devices.len())));
+        let log = Arc::new(Mutex::new(ServeLog::default()));
+        let partition_names: Vec<String> = devices.iter().map(|d| d.name.clone()).collect();
+        let workers: Vec<Worker> = devices
+            .into_iter()
+            .enumerate()
+            .map(|(i, d)| dispatch::spawn_worker(i, d, scheduler.clone(), log.clone(), verify))
+            .collect();
+        Ok(Coordinator {
+            jit,
+            spec,
+            cache: Mutex::new(CompileCache::new(cache_capacity)),
+            scheduler,
+            log,
+            workers,
+            partition_names,
+            start: Instant::now(),
+        })
+    }
+
+    /// The fleet's shared overlay description.
+    pub fn spec(&self) -> &OverlaySpec {
+        &self.spec
+    }
+
+    /// Number of partitions served.
+    pub fn partitions(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Asynchronously serve one kernel dispatch: cache-or-compile,
+    /// schedule onto a partition, enqueue, return a completion handle.
+    pub fn submit(
+        &self,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+    ) -> Result<DispatchHandle> {
+        let key = CacheKey::new(source, &self.spec, &self.jit.options);
+
+        let cached = self.cache.lock().unwrap().get(&key);
+        let (compiled, cache_hit) = match cached {
+            Some(k) => (k, true),
+            None => {
+                // the seconds-class step — paid once per distinct
+                // (source, overlay, options)
+                let t0 = Instant::now();
+                let k = Arc::new(self.jit.compile(source)?);
+                self.log.lock().unwrap().compile_seconds += t0.elapsed().as_secs_f64();
+                self.cache.lock().unwrap().insert(key, k.clone());
+                (k, false)
+            }
+        };
+
+        if args.len() != compiled.params.len() {
+            bail!(
+                "kernel '{}' takes {} arguments, got {}",
+                compiled.name,
+                compiled.params.len(),
+                args.len()
+            );
+        }
+        let kernel = Kernel::from_compiled(compiled.clone());
+        for (i, a) in args.iter().enumerate() {
+            match a {
+                SubmitArg::Buffer(b) => kernel.set_arg(i, b)?,
+                SubmitArg::Scalar(v) => kernel.set_arg_scalar(i, *v)?,
+            }
+        }
+
+        let config_cost =
+            ConfigSizeModel::overlay_config_seconds(&self.spec, compiled.bitstream.byte_size());
+        let decision = self.scheduler.lock().unwrap().pick(key, config_cost);
+
+        let handle = HandleInner::new();
+        let job = Job {
+            kernel,
+            global_size,
+            partition: decision.partition,
+            config_seconds: decision.config_seconds,
+            cache_hit,
+            enqueued: Instant::now(),
+            handle: handle.clone(),
+        };
+        if self.workers[decision.partition]
+            .sender
+            .send(Msg::Job(Box::new(job)))
+            .is_err()
+        {
+            // dead worker: the dispatch never ran, undo its accounting
+            self.scheduler.lock().unwrap().cancel(&decision);
+            bail!("partition {} worker is gone", decision.partition);
+        }
+        Ok(DispatchHandle { inner: handle })
+    }
+
+    /// Snapshot of the serving statistics.
+    pub fn stats(&self) -> ServingStats {
+        let cache = self.cache.lock().unwrap().stats();
+        let sched = self.scheduler.lock().unwrap();
+        let log = self.log.lock().unwrap();
+        let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
+        let partitions = sched
+            .partitions()
+            .iter()
+            .enumerate()
+            .map(|(i, p)| PartitionServingStats {
+                partition: i,
+                overlay: self.partition_names[i].clone(),
+                dispatches: p.dispatches,
+                reconfigs: p.reconfigs,
+                busy_seconds: p.busy_seconds,
+                utilization: (p.busy_seconds / elapsed).min(1.0),
+            })
+            .collect();
+        ServingStats {
+            cache,
+            reconfig_count: sched.reconfig_count(),
+            reconfig_seconds: sched.reconfig_seconds,
+            latency: LatencyStats::from_samples_ms(log.latencies_ms.clone()),
+            partitions,
+            total_dispatches: log.total_dispatches,
+            total_items: log.total_items,
+            verify_failures: log.verify_failures,
+            dispatch_errors: log.errors,
+            compile_seconds: log.compile_seconds,
+        }
+    }
+
+    /// Graceful shutdown: finish queued work, stop workers. (Also
+    /// runs on drop.)
+    pub fn shutdown(self) {}
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.sender.send(Msg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(j) = w.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+/// Wait on a batch of handles, preserving submission order.
+pub fn wait_all(handles: Vec<DispatchHandle>) -> Result<Vec<DispatchResult>> {
+    handles.into_iter().map(DispatchHandle::wait).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_kernels::{CHEBYSHEV, POLY1};
+    use crate::runtime_ocl::{Backend, Context};
+
+    fn cheb_ref(x: i32) -> i32 {
+        x.wrapping_mul(
+            x.wrapping_mul(16i32.wrapping_mul(x).wrapping_mul(x).wrapping_sub(20))
+                .wrapping_mul(x)
+                .wrapping_add(5),
+        )
+    }
+
+    fn host_ctx() -> Context {
+        let dev = Device {
+            spec: OverlaySpec::zynq_default(),
+            backend: Backend::CycleSim,
+            name: "host".into(),
+        };
+        Context::new(&dev)
+    }
+
+    #[test]
+    fn serves_correct_results_with_cache_hits() {
+        let coord =
+            Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2))
+                .unwrap();
+        let ctx = host_ctx();
+
+        let n = 256;
+        let mut handles = Vec::new();
+        let mut outputs = Vec::new();
+        for round in 0..3 {
+            let a = ctx.create_buffer(n);
+            let b = ctx.create_buffer(n);
+            let xs: Vec<i32> = (0..n as i32).map(|i| (i % 11) - 5 + round).collect();
+            a.write(&xs);
+            let h = coord
+                .submit(CHEBYSHEV, &[SubmitArg::Buffer(a), SubmitArg::Buffer(b.clone())], n)
+                .unwrap();
+            handles.push(h);
+            outputs.push((xs, b));
+        }
+        let results = wait_all(handles).unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(!results[0].cache_hit, "first dispatch must compile");
+        assert!(results[1].cache_hit && results[2].cache_hit);
+        assert!(results.iter().all(|r| r.verified == Some(true)));
+        for (xs, b) in outputs {
+            let out = b.read();
+            for (x, y) in xs.iter().zip(&out) {
+                assert_eq!(*y, cheb_ref(*x));
+            }
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.cache.misses, 1);
+        assert_eq!(stats.cache.hits, 2);
+        assert_eq!(stats.total_dispatches, 3);
+        assert_eq!(stats.verify_failures, 0);
+        assert!(stats.cache.hit_rate() > 0.6);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn distinct_kernels_spread_across_partitions() {
+        let coord =
+            Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2))
+                .unwrap();
+        let ctx = host_ctx();
+        let n = 64;
+        let submit = |src: &str, params: usize| {
+            let args: Vec<SubmitArg> = (0..params)
+                .map(|_| {
+                    let b = ctx.create_buffer(n + 8);
+                    b.write(&vec![1; n + 8]);
+                    SubmitArg::Buffer(b)
+                })
+                .collect();
+            coord.submit(src, &args, n).unwrap()
+        };
+        let r1 = submit(CHEBYSHEV, 2).wait().unwrap();
+        let r2 = submit(POLY1, 2).wait().unwrap();
+        assert_ne!(r1.partition, r2.partition, "cold fleet spreads kernels");
+        // both resident now: repeats hit their partitions with zero
+        // config cost
+        let r1b = submit(CHEBYSHEV, 2).wait().unwrap();
+        let r2b = submit(POLY1, 2).wait().unwrap();
+        assert_eq!(r1b.partition, r1.partition);
+        assert_eq!(r2b.partition, r2.partition);
+        assert_eq!(r1b.event.config_seconds, 0.0);
+        assert_eq!(r2b.event.config_seconds, 0.0);
+        assert!(r1.event.config_seconds > 0.0);
+        let stats = coord.stats();
+        assert_eq!(stats.reconfig_count, 2);
+    }
+
+    #[test]
+    fn argument_mismatch_is_reported() {
+        let coord =
+            Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1))
+                .unwrap();
+        let err = coord.submit(CHEBYSHEV, &[], 16).unwrap_err().to_string();
+        assert!(err.contains("takes 2 arguments"), "{err}");
+    }
+
+    #[test]
+    fn heterogeneous_fleet_is_rejected() {
+        let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2);
+        cfg.devices[1].spec = OverlaySpec::new(4, 4, crate::overlay::FuType::Dsp2);
+        let err = Coordinator::new(cfg).unwrap_err().to_string();
+        assert!(err.contains("heterogeneous"), "{err}");
+    }
+
+    #[test]
+    fn empty_fleet_is_rejected() {
+        let cfg = CoordinatorConfig {
+            devices: Vec::new(),
+            cache_capacity: 4,
+            compile_options: CompileOptions::default(),
+            verify: false,
+        };
+        assert!(Coordinator::new(cfg).is_err());
+    }
+}

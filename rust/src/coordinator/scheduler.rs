@@ -1,0 +1,253 @@
+//! The slot-aware scheduler: configured overlays as a cache.
+//!
+//! A partition that already holds a kernel's bitstream executes it
+//! with **zero** configuration cost; any other partition must first
+//! pay the modeled reconfiguration time (µs-class, from
+//! [`crate::overlay::ConfigSizeModel`] — the paper's 42.4 µs for the
+//! 8×8 overlay). The scheduler therefore treats the fleet's configured
+//! state exactly like a cache:
+//!
+//! 1. **Affinity** — prefer a partition whose resident bitstream
+//!    matches the request (least queue depth among them);
+//! 2. **Cold fill** — otherwise prefer a never-configured partition;
+//! 3. **Victim** — otherwise evict by (queue depth, last-use) — an
+//!    idle, least-recently-used partition gives up its configuration.
+//!
+//! All decisions are deterministic: logical-clock timestamps are
+//! unique and ties fall back to the lowest partition index.
+
+use super::cache::CacheKey;
+
+/// Mutable serving state of one overlay partition.
+#[derive(Debug, Clone)]
+pub struct PartitionState {
+    /// Cache key of the kernel whose bitstream is currently loaded.
+    pub loaded: Option<CacheKey>,
+    /// Logical time of the last dispatch routed here.
+    pub last_used: u64,
+    /// Dispatches enqueued but not yet completed.
+    pub queue_depth: usize,
+    pub dispatches: u64,
+    pub reconfigs: u64,
+    /// Modeled overlay-busy seconds (execution + reconfiguration).
+    pub busy_seconds: f64,
+}
+
+impl PartitionState {
+    fn new() -> PartitionState {
+        PartitionState {
+            loaded: None,
+            last_used: 0,
+            queue_depth: 0,
+            dispatches: 0,
+            reconfigs: 0,
+            busy_seconds: 0.0,
+        }
+    }
+}
+
+/// Outcome of a scheduling decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    pub partition: usize,
+    /// Whether the partition must load a new bitstream first.
+    pub reconfigure: bool,
+    /// Modeled configuration-load seconds charged to this dispatch
+    /// (0.0 on an affinity hit).
+    pub config_seconds: f64,
+}
+
+/// Slot-aware scheduler over a fleet of identical overlay partitions.
+#[derive(Debug)]
+pub struct SlotScheduler {
+    parts: Vec<PartitionState>,
+    clock: u64,
+    /// Total modeled seconds spent loading bitstreams.
+    pub reconfig_seconds: f64,
+}
+
+impl SlotScheduler {
+    pub fn new(partitions: usize) -> SlotScheduler {
+        SlotScheduler {
+            parts: vec![PartitionState::new(); partitions.max(1)],
+            clock: 0,
+            reconfig_seconds: 0.0,
+        }
+    }
+
+    pub fn partitions(&self) -> &[PartitionState] {
+        &self.parts
+    }
+
+    /// Total reconfiguration loads across the fleet.
+    pub fn reconfig_count(&self) -> u64 {
+        self.parts.iter().map(|p| p.reconfigs).sum()
+    }
+
+    /// Route one dispatch of the kernel identified by `key`.
+    /// `config_seconds_if_load` is the modeled cost of loading its
+    /// bitstream (paid only when no partition already holds it).
+    pub fn pick(&mut self, key: CacheKey, config_seconds_if_load: f64) -> Decision {
+        self.clock += 1;
+
+        // 1) affinity: a partition already configured with this kernel
+        let resident = (0..self.parts.len())
+            .filter(|&i| self.parts[i].loaded == Some(key))
+            .min_by_key(|&i| (self.parts[i].queue_depth, self.parts[i].last_used, i));
+
+        let (idx, reconfigure) = if let Some(i) = resident {
+            (i, false)
+        } else if let Some(i) = (0..self.parts.len())
+            .filter(|&i| self.parts[i].loaded.is_none())
+            .min_by_key(|&i| (self.parts[i].queue_depth, i))
+        {
+            // 2) cold fill: a never-configured partition
+            (i, true)
+        } else {
+            // 3) victim: idle-most, then least recently used
+            let i = (0..self.parts.len())
+                .min_by_key(|&i| (self.parts[i].queue_depth, self.parts[i].last_used, i))
+                .expect("scheduler has at least one partition");
+            (i, true)
+        };
+
+        let p = &mut self.parts[idx];
+        p.last_used = self.clock;
+        p.queue_depth += 1;
+        p.dispatches += 1;
+        let config_seconds = if reconfigure {
+            p.loaded = Some(key);
+            p.reconfigs += 1;
+            self.reconfig_seconds += config_seconds_if_load;
+            config_seconds_if_load
+        } else {
+            0.0
+        };
+        Decision { partition: idx, reconfigure, config_seconds }
+    }
+
+    /// Record completion of a dispatch on `partition`, crediting the
+    /// modeled busy time.
+    pub fn complete(&mut self, partition: usize, busy_seconds: f64) {
+        let p = &mut self.parts[partition];
+        p.queue_depth = p.queue_depth.saturating_sub(1);
+        p.busy_seconds += busy_seconds;
+    }
+
+    /// Roll a [`SlotScheduler::pick`] back after a failed enqueue
+    /// (dead worker): the dispatch never ran, so its queue/dispatch/
+    /// reconfiguration accounting must not stick. The `loaded` mark is
+    /// left as-is — the partition is unreachable either way.
+    pub fn cancel(&mut self, d: &Decision) {
+        let p = &mut self.parts[d.partition];
+        p.queue_depth = p.queue_depth.saturating_sub(1);
+        p.dispatches = p.dispatches.saturating_sub(1);
+        if d.reconfigure {
+            p.reconfigs = p.reconfigs.saturating_sub(1);
+            self.reconfig_seconds -= d.config_seconds;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(tag: u64) -> CacheKey {
+        CacheKey { source: tag, spec: 7, options: 7 }
+    }
+
+    #[test]
+    fn affinity_beats_reconfiguration() {
+        let mut s = SlotScheduler::new(2);
+        let a = s.pick(key(1), 42e-6);
+        assert!(a.reconfigure);
+        assert_eq!(a.config_seconds, 42e-6);
+        s.complete(a.partition, 1e-3);
+        // same kernel again → same partition, no reconfig
+        let b = s.pick(key(1), 42e-6);
+        assert_eq!(b.partition, a.partition);
+        assert!(!b.reconfigure);
+        assert_eq!(b.config_seconds, 0.0);
+    }
+
+    #[test]
+    fn cold_partitions_fill_before_eviction() {
+        let mut s = SlotScheduler::new(2);
+        let a = s.pick(key(1), 1e-6);
+        let b = s.pick(key(2), 1e-6);
+        assert_ne!(a.partition, b.partition);
+        assert!(a.reconfigure && b.reconfigure);
+        assert_eq!(s.reconfig_count(), 2);
+    }
+
+    #[test]
+    fn victim_is_idle_lru_partition() {
+        let mut s = SlotScheduler::new(2);
+        let a = s.pick(key(1), 1e-6); // p0 ← k1
+        let b = s.pick(key(2), 1e-6); // p1 ← k2
+        s.complete(a.partition, 0.0);
+        s.complete(b.partition, 0.0);
+        // touch k1 so its partition is most recently used
+        let c = s.pick(key(1), 1e-6);
+        s.complete(c.partition, 0.0);
+        // a third kernel must evict k2's partition (LRU)
+        let d = s.pick(key(3), 1e-6);
+        assert_eq!(d.partition, b.partition);
+        assert!(d.reconfigure);
+        // k2 was evicted: dispatching it again reconfigures somewhere
+        s.complete(d.partition, 0.0);
+        let e = s.pick(key(2), 1e-6);
+        assert!(e.reconfigure);
+    }
+
+    #[test]
+    fn contention_prefers_shallow_queues() {
+        let mut s = SlotScheduler::new(3);
+        // two partitions resident with k1, one busy
+        let a = s.pick(key(1), 1e-6); // p0 ← k1, depth 1
+        let b = s.pick(key(2), 1e-6); // p1 ← k2, depth 1
+        let _ = b;
+        s.complete(a.partition, 0.0); // p0 idle again
+        // k1 resident on p0 only; p0 idle → affinity hit on p0
+        let c = s.pick(key(1), 1e-6);
+        assert_eq!(c.partition, a.partition);
+        assert!(!c.reconfigure);
+        // now p0 busy (depth 1). another k1 dispatch: p0 still the only
+        // resident partition; affinity keeps it there (queue depth 2)
+        let d = s.pick(key(1), 1e-6);
+        assert_eq!(d.partition, a.partition);
+        assert!(!d.reconfigure);
+        // a brand-new kernel goes to the cold p2, not the busy ones
+        let e = s.pick(key(3), 1e-6);
+        assert_eq!(e.partition, 2);
+        assert!(e.reconfigure);
+    }
+
+    #[test]
+    fn cancel_reverses_pick_accounting() {
+        let mut s = SlotScheduler::new(1);
+        let d = s.pick(key(1), 3e-6);
+        assert_eq!(s.partitions()[0].queue_depth, 1);
+        assert_eq!(s.reconfig_count(), 1);
+        s.cancel(&d);
+        let p = &s.partitions()[0];
+        assert_eq!(p.queue_depth, 0);
+        assert_eq!(p.dispatches, 0);
+        assert_eq!(s.reconfig_count(), 0);
+        assert!(s.reconfig_seconds.abs() < 1e-15);
+    }
+
+    #[test]
+    fn busy_time_and_queue_depths_account() {
+        let mut s = SlotScheduler::new(1);
+        let a = s.pick(key(1), 2e-6);
+        assert_eq!(s.partitions()[0].queue_depth, 1);
+        s.complete(a.partition, 5e-3);
+        let p = &s.partitions()[0];
+        assert_eq!(p.queue_depth, 0);
+        assert!((p.busy_seconds - 5e-3).abs() < 1e-12);
+        assert!((s.reconfig_seconds - 2e-6).abs() < 1e-15);
+        assert_eq!(p.dispatches, 1);
+    }
+}

@@ -38,11 +38,19 @@
 //! * [`runtime`] — the XLA/PJRT execution backend that loads the
 //!   AOT-compiled overlay-emulator artifacts (`artifacts/*.hlo.txt`).
 //! * [`runtime_ocl`] — an OpenCL-flavoured host API (platform, device,
-//!   context, queue, buffer, program, kernel, events).
+//!   context, queue, buffer, program, kernel, events), including the
+//!   multi-partition platform the coordinator serves across.
+//! * [`coordinator`] — the overlay serving layer: a compile cache keyed
+//!   by (source hash, overlay fingerprint, options fingerprint), a
+//!   slot-aware scheduler that treats configured partitions as a cache
+//!   (affinity dispatch, LRU victims paying the modeled 42 µs-class
+//!   reconfiguration cost), and an async per-partition dispatch queue
+//!   with completion handles and serving statistics.
 //! * [`bench_kernels`] — the paper's six benchmark kernels as OpenCL-C
 //!   sources with their Table III metadata.
 //! * [`metrics`] — the GOPS / resource / configuration-time models behind
-//!   Figs. 6–7 and Table III.
+//!   Figs. 6–7 and Table III, plus the coordinator's serving stats
+//!   (cache hit rate, reconfigurations, utilization, p50/p99 latency).
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! AOT-lowers the overlay-datapath emulator to HLO text which the
@@ -52,6 +60,7 @@
 pub mod bench_kernels;
 pub mod compiler;
 pub mod configgen;
+pub mod coordinator;
 pub mod dfg;
 pub mod fpga;
 pub mod frontend;
@@ -72,7 +81,11 @@ pub mod util;
 /// Convenient re-exports for the common compile-and-run flow.
 pub mod prelude {
     pub use crate::compiler::{
-        CompileOptions, CompileReport, CompiledKernel, JitCompiler, Replication,
+        CompileOptions, CompileReport, CompiledKernel, JitCompiler, KernelCost,
+        Replication,
+    };
+    pub use crate::coordinator::{
+        Coordinator, CoordinatorConfig, DispatchHandle, DispatchResult, SubmitArg,
     };
     pub use crate::overlay::{FuType, OverlaySpec};
     pub use crate::replicate::ReplicationPlan;

@@ -60,6 +60,146 @@ pub fn throughput(spec: &OverlaySpec, k: &CompiledKernel) -> ThroughputPoint {
     }
 }
 
+/// Percentile of a **sorted** sample slice (nearest-rank with
+/// round-half-up, matching the bench harnesses). Returns 0.0 for an
+/// empty slice.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Latency distribution summary (milliseconds).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub max_ms: f64,
+    pub mean_ms: f64,
+}
+
+impl LatencyStats {
+    /// Summarize a sample set (takes ownership to sort in place).
+    pub fn from_samples_ms(mut samples: Vec<f64>) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let count = samples.len();
+        let mean = samples.iter().sum::<f64>() / count as f64;
+        LatencyStats {
+            count,
+            p50_ms: percentile(&samples, 0.50),
+            p99_ms: percentile(&samples, 0.99),
+            max_ms: *samples.last().unwrap(),
+            mean_ms: mean,
+        }
+    }
+}
+
+/// Compile-cache counters (produced by
+/// [`crate::coordinator::CompileCache::stats`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub capacity: usize,
+}
+
+impl CacheStats {
+    /// Hit rate in `[0, 1]` (0 when nothing was looked up).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Per-partition serving counters (one overlay instance in the
+/// coordinator's fleet).
+#[derive(Debug, Clone)]
+pub struct PartitionServingStats {
+    pub partition: usize,
+    pub overlay: String,
+    /// Dispatches routed to this partition.
+    pub dispatches: u64,
+    /// Times the partition had to load a different kernel bitstream.
+    pub reconfigs: u64,
+    /// Modeled overlay-busy seconds (execution + reconfiguration).
+    pub busy_seconds: f64,
+    /// `busy_seconds` / coordinator wall uptime.
+    pub utilization: f64,
+}
+
+/// Aggregate serving statistics reported by the coordinator: the
+/// quantities that decide whether run-time kernel management is
+/// actually paying off (paper's premise — seconds-class JIT + µs-class
+/// reconfiguration make the overlay fleet a schedulable cache).
+#[derive(Debug, Clone)]
+pub struct ServingStats {
+    /// Compile-cache counters (hits, misses, evictions, residency).
+    pub cache: CacheStats,
+    /// Times any partition had to load a different kernel bitstream.
+    pub reconfig_count: u64,
+    /// Modeled seconds spent loading bitstreams.
+    pub reconfig_seconds: f64,
+    /// End-to-end dispatch latency (enqueue → completion).
+    pub latency: LatencyStats,
+    pub partitions: Vec<PartitionServingStats>,
+    pub total_dispatches: u64,
+    pub total_items: u64,
+    /// Failed simulator cross-checks (0 when verification is on and
+    /// every dispatch agreed with the cycle simulator).
+    pub verify_failures: u64,
+    /// Dispatches that errored before producing a result.
+    pub dispatch_errors: u64,
+    /// Wall seconds of JIT compilation spent on cache misses.
+    pub compile_seconds: f64,
+}
+
+impl ServingStats {
+    /// A compact multi-line report for examples and benches.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "cache      : {} hits / {} misses ({:.0}% hit rate), {} evictions, {} resident\n\
+             reconfig   : {} loads, {:.1} us modeled\n\
+             compile    : {:.1} ms total on misses\n\
+             latency    : p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms over {} dispatches\n",
+            self.cache.hits,
+            self.cache.misses,
+            100.0 * self.cache.hit_rate(),
+            self.cache.evictions,
+            self.cache.entries,
+            self.reconfig_count,
+            self.reconfig_seconds * 1e6,
+            self.compile_seconds * 1e3,
+            self.latency.p50_ms,
+            self.latency.p99_ms,
+            self.latency.max_ms,
+            self.latency.count,
+        );
+        for p in &self.partitions {
+            out.push_str(&format!(
+                "partition {}: {} ({} dispatches, {} reconfigs, {:.1}% utilized)\n",
+                p.partition,
+                p.overlay,
+                p.dispatches,
+                p.reconfigs,
+                100.0 * p.utilization,
+            ));
+        }
+        out
+    }
+}
+
 /// Simple fixed-width table formatter used by the bench harnesses to
 /// print the paper's tables.
 pub struct TextTable {
@@ -143,6 +283,48 @@ mod tests {
         let t = throughput(&jit.spec, &k);
         assert!((t.gops - 2.1).abs() < 0.05);
         assert!((t.utilization - 0.29).abs() < 0.03);
+    }
+
+    #[test]
+    fn latency_stats_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = LatencyStats::from_samples_ms(samples);
+        assert_eq!(s.count, 100);
+        assert!((s.p50_ms - 51.0).abs() < 1.5, "{}", s.p50_ms);
+        assert!(s.p99_ms >= 98.0 && s.p99_ms <= 100.0, "{}", s.p99_ms);
+        assert_eq!(s.max_ms, 100.0);
+        assert!((s.mean_ms - 50.5).abs() < 1e-9);
+        let empty = LatencyStats::from_samples_ms(Vec::new());
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.p99_ms, 0.0);
+    }
+
+    #[test]
+    fn serving_stats_hit_rate_and_render() {
+        let s = ServingStats {
+            cache: CacheStats { hits: 3, misses: 1, evictions: 0, entries: 1, capacity: 32 },
+            reconfig_count: 2,
+            reconfig_seconds: 84.8e-6,
+            latency: LatencyStats::from_samples_ms(vec![1.0, 2.0, 3.0]),
+            partitions: vec![PartitionServingStats {
+                partition: 0,
+                overlay: "8x8-dsp2".into(),
+                dispatches: 4,
+                reconfigs: 2,
+                busy_seconds: 0.5,
+                utilization: 0.5,
+            }],
+            total_dispatches: 4,
+            total_items: 1000,
+            verify_failures: 0,
+            dispatch_errors: 0,
+            compile_seconds: 0.2,
+        };
+        assert!((s.cache.hit_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(CacheStats::default().hit_rate(), 0.0);
+        let r = s.render();
+        assert!(r.contains("75% hit rate"), "{r}");
+        assert!(r.contains("partition 0"), "{r}");
     }
 
     #[test]

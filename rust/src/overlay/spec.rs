@@ -125,6 +125,23 @@ impl OverlaySpec {
     pub fn size_sweep(fu_type: FuType) -> Vec<OverlaySpec> {
         (2..=8).map(|n| OverlaySpec::new(n, n, fu_type)).collect()
     }
+
+    /// Stable fingerprint of every architecture parameter — one third
+    /// of the coordinator's compile-cache key (a kernel compiled for
+    /// one overlay description is only reusable on a partition with an
+    /// identical description).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::StableHasher::new();
+        h.write_usize(self.rows);
+        h.write_usize(self.cols);
+        h.write_usize(self.fu_type.dsps_per_fu());
+        h.write_usize(self.channel_width);
+        h.write_u32(self.delay_chain_max);
+        h.write_u32(self.fu_op_latency);
+        h.write_u32(self.hop_latency);
+        h.write_f64(self.config_bw_bytes_per_s);
+        h.finish()
+    }
 }
 
 #[cfg(test)]
@@ -161,6 +178,18 @@ mod tests {
     fn names_are_stable() {
         assert_eq!(OverlaySpec::zynq_default().name(), "8x8-dsp2");
         assert_eq!(OverlaySpec::new(2, 2, FuType::Dsp1).name(), "2x2-dsp1");
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_architectures() {
+        let a = OverlaySpec::zynq_default();
+        let b = OverlaySpec::zynq_default();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), OverlaySpec::new(8, 8, FuType::Dsp1).fingerprint());
+        assert_ne!(a.fingerprint(), OverlaySpec::new(8, 7, FuType::Dsp2).fingerprint());
+        let mut c = OverlaySpec::zynq_default();
+        c.channel_width += 1;
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

@@ -73,6 +73,26 @@ impl Platform {
         Platform { devices: vec![Device { spec, backend, name }] }
     }
 
+    /// A platform exposing `n` identical cycle-simulated overlay
+    /// partitions — the fleet the [`crate::coordinator`] serves across.
+    /// Mirrors a multi-FPGA (or partially-reconfigured multi-region)
+    /// deployment where each region holds one overlay instance.
+    pub fn multi_sim(spec: OverlaySpec, n: usize) -> Platform {
+        let devices = (0..n.max(1))
+            .map(|i| Device {
+                name: format!("overlay-{}.p{i}", spec.name()),
+                spec: spec.clone(),
+                backend: Backend::CycleSim,
+            })
+            .collect();
+        Platform { devices }
+    }
+
+    /// A platform over an explicit device list (heterogeneous fleets).
+    pub fn with_devices(devices: Vec<Device>) -> Platform {
+        Platform { devices }
+    }
+
     pub fn devices(&self) -> &[Device] {
         &self.devices
     }
@@ -184,6 +204,140 @@ pub struct Kernel {
 }
 
 impl Kernel {
+    /// Wrap an already-compiled kernel without going through
+    /// [`Program::build`] — the coordinator's compile-cache hit path
+    /// (`clCreateKernel` on a program object retrieved from a binary
+    /// cache, in OpenCL terms).
+    pub fn from_compiled(compiled: Arc<CompiledKernel>) -> Kernel {
+        let n = compiled.params.len();
+        Kernel { compiled, args: Mutex::new(vec![None; n]) }
+    }
+
+    /// Pack the bound arguments into per-copy input streams for a
+    /// dispatch over `global_size` work-items. Returns the streams
+    /// (copy-major: stream `r*n_in + p` feeds port `p` of copy `r`)
+    /// and the per-copy chunk length. Fails if any argument is unset.
+    pub fn pack_streams(&self, global_size: usize) -> Result<(Vec<Vec<i32>>, usize)> {
+        let k = &self.compiled;
+        let args = self.args.lock().unwrap().clone();
+        for (i, a) in args.iter().enumerate() {
+            if a.is_none() {
+                bail!("argument {i} ('{}') not set", k.params[i].name);
+            }
+        }
+
+        // copies r = 0..R each process a blocked item range; stream
+        // port p of copy r is emulator column r*n_in + p.
+        let r = k.plan.factor;
+        let n_in = k.dfg.num_inputs();
+        let chunk = global_size.div_ceil(r.max(1));
+        let fetch = |param: usize, idx: i64| -> i32 {
+            match &args[param] {
+                Some(KernelArg::Buffer(b)) => {
+                    let d = b.data.lock().unwrap();
+                    if idx >= 0 && (idx as usize) < d.len() {
+                        d[idx as usize]
+                    } else {
+                        0
+                    }
+                }
+                Some(KernelArg::Scalar(v)) => *v,
+                None => 0,
+            }
+        };
+
+        let mut streams: Vec<Vec<i32>> = Vec::with_capacity(r * n_in);
+        for copy in 0..r {
+            let start = copy * chunk;
+            for p in 0..n_in {
+                let meta = k.dfg.input_meta[p];
+                let mut s = Vec::with_capacity(chunk);
+                for i in 0..chunk {
+                    let gid = start + i;
+                    let v = if gid < global_size {
+                        if meta.is_scalar {
+                            match &args[meta.param] {
+                                Some(KernelArg::Scalar(v)) => *v,
+                                _ => 0,
+                            }
+                        } else {
+                            fetch(meta.param, gid as i64 + meta.offset)
+                        }
+                    } else {
+                        0 // tail padding
+                    };
+                    s.push(v);
+                }
+                streams.push(s);
+            }
+        }
+        Ok((streams, chunk))
+    }
+
+    /// Check that the bound output buffers hold exactly the values in
+    /// `outs` — the read-back inverse of [`Kernel::scatter_outputs`],
+    /// used by the coordinator's verification pass to prove the
+    /// pack → execute → scatter pipeline deposited the simulator's
+    /// results bit-for-bit.
+    pub fn outputs_match(&self, outs: &[Vec<i32>], global_size: usize) -> bool {
+        let k = &self.compiled;
+        let args = self.args.lock().unwrap().clone();
+        let r = k.plan.factor;
+        let chunk = global_size.div_ceil(r.max(1));
+        let n_out = k.dfg.num_outputs();
+        for copy in 0..r {
+            let start = copy * chunk;
+            for o in 0..n_out {
+                let meta = k.dfg.output_meta[o];
+                let stream = &outs[copy * n_out + o];
+                if let Some(KernelArg::Buffer(b)) = &args[meta.param] {
+                    let d = b.data.lock().unwrap();
+                    for (i, &v) in stream.iter().enumerate() {
+                        let gid = start + i;
+                        if gid >= global_size {
+                            break;
+                        }
+                        let idx = gid as i64 + meta.offset;
+                        if idx >= 0 && (idx as usize) < d.len() && d[idx as usize] != v {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Scatter backend output streams back into the bound output
+    /// buffers (the inverse of [`Kernel::pack_streams`]).
+    pub fn scatter_outputs(&self, outs: &[Vec<i32>], global_size: usize) {
+        let k = &self.compiled;
+        let args = self.args.lock().unwrap().clone();
+        let r = k.plan.factor;
+        let chunk = global_size.div_ceil(r.max(1));
+        let n_out = k.dfg.num_outputs();
+        for copy in 0..r {
+            let start = copy * chunk;
+            for o in 0..n_out {
+                let meta = k.dfg.output_meta[o];
+                let stream = &outs[copy * n_out + o];
+                if let Some(KernelArg::Buffer(b)) = &args[meta.param] {
+                    let mut d = b.data.lock().unwrap();
+                    for (i, &v) in stream.iter().enumerate() {
+                        let gid = start + i;
+                        if gid >= global_size {
+                            break;
+                        }
+                        let idx = gid as i64 + meta.offset;
+                        if idx >= 0 && (idx as usize) < d.len() {
+                            d[idx as usize] = v;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
     pub fn set_arg(&self, index: usize, buffer: &Buffer) -> Result<()> {
         let mut args = self.args.lock().unwrap();
         if index >= args.len() {
@@ -238,89 +392,15 @@ impl CommandQueue {
     pub fn enqueue_nd_range(&self, kernel: &Kernel, global_size: usize) -> Result<Event> {
         let t0 = Instant::now();
         let k = &kernel.compiled;
-        let args = kernel.args.lock().unwrap().clone();
-        for (i, a) in args.iter().enumerate() {
-            if a.is_none() {
-                bail!("argument {i} ('{}') not set", k.params[i].name);
-            }
-        }
 
-        // --- pack input streams -------------------------------------
-        // copies r = 0..R each process a blocked item range; stream
-        // port p of copy r is emulator column r*n_in + p.
-        let r = k.plan.factor;
-        let n_in = k.dfg.num_inputs();
-        let chunk = global_size.div_ceil(r.max(1));
-        let fetch = |param: usize, idx: i64| -> i32 {
-            match &args[param] {
-                Some(KernelArg::Buffer(b)) => {
-                    let d = b.data.lock().unwrap();
-                    if idx >= 0 && (idx as usize) < d.len() {
-                        d[idx as usize]
-                    } else {
-                        0
-                    }
-                }
-                Some(KernelArg::Scalar(v)) => *v,
-                None => 0,
-            }
-        };
-
-        let mut streams: Vec<Vec<i32>> = Vec::with_capacity(r * n_in);
-        for copy in 0..r {
-            let start = copy * chunk;
-            for p in 0..n_in {
-                let meta = k.dfg.input_meta[p];
-                let mut s = Vec::with_capacity(chunk);
-                for i in 0..chunk {
-                    let gid = start + i;
-                    let v = if gid < global_size {
-                        if meta.is_scalar {
-                            match &args[meta.param] {
-                                Some(KernelArg::Scalar(v)) => *v,
-                                _ => 0,
-                            }
-                        } else {
-                            fetch(meta.param, gid as i64 + meta.offset)
-                        }
-                    } else {
-                        0 // tail padding
-                    };
-                    s.push(v);
-                }
-                streams.push(s);
-            }
-        }
-
-        // --- execute -------------------------------------------------
+        let (streams, chunk) = kernel.pack_streams(global_size)?;
         let outs = match &self.device.backend {
             Backend::CycleSim => sim::execute(&k.schedule, &streams, chunk)?,
             Backend::Pjrt(rt) => rt.execute_overlay(&k.schedule, &streams, chunk)?,
         };
+        kernel.scatter_outputs(&outs, global_size);
 
-        // --- scatter outputs back -----------------------------------
-        let n_out = k.dfg.num_outputs();
-        for copy in 0..r {
-            let start = copy * chunk;
-            for o in 0..n_out {
-                let meta = k.dfg.output_meta[o];
-                let stream = &outs[copy * n_out + o];
-                if let Some(KernelArg::Buffer(b)) = &args[meta.param] {
-                    let mut d = b.data.lock().unwrap();
-                    for (i, &v) in stream.iter().enumerate() {
-                        let gid = start + i;
-                        if gid >= global_size {
-                            break;
-                        }
-                        let idx = gid as i64 + meta.offset;
-                        if idx >= 0 && (idx as usize) < d.len() {
-                            d[idx as usize] = v;
-                        }
-                    }
-                }
-            }
-        }
-
+        let r = k.plan.factor;
         let config_seconds = ConfigSizeModel::overlay_config_seconds(
             &self.device.spec,
             k.bitstream.byte_size(),
@@ -455,6 +535,45 @@ mod tests {
         let out = b.read();
         for i in 0..n {
             assert_eq!(out[i] as usize, 3 * i + 3);
+        }
+    }
+
+    #[test]
+    fn multi_sim_platform_exposes_identical_partitions() {
+        let spec = crate::overlay::OverlaySpec::zynq_default();
+        let platform = Platform::multi_sim(spec.clone(), 3);
+        assert_eq!(platform.devices().len(), 3);
+        let names: Vec<&str> =
+            platform.devices().iter().map(|d| d.name.as_str()).collect();
+        assert_eq!(names, vec!["overlay-8x8-dsp2.p0", "overlay-8x8-dsp2.p1", "overlay-8x8-dsp2.p2"]);
+        for d in platform.devices() {
+            assert_eq!(d.spec.fingerprint(), spec.fingerprint());
+        }
+        // zero partitions is clamped to one
+        assert_eq!(Platform::multi_sim(spec, 0).devices().len(), 1);
+    }
+
+    #[test]
+    fn kernel_from_compiled_matches_program_path() {
+        let platform = Platform::default_sim();
+        let ctx = Context::new(&platform.devices()[0]);
+        let mut program = Program::from_source(&ctx, crate::bench_kernels::CHEBYSHEV);
+        program.build().unwrap();
+        let via_program = program.create_kernel("chebyshev").unwrap();
+        let via_cache = Kernel::from_compiled(via_program.compiled.clone());
+        let n = 128;
+        let a = ctx.create_buffer(n);
+        let b = ctx.create_buffer(n);
+        a.write(&(0..n as i32).map(|i| i % 9 - 4).collect::<Vec<_>>());
+        via_cache.set_arg(0, &a).unwrap();
+        via_cache.set_arg(1, &b).unwrap();
+        let q = CommandQueue::new(&ctx);
+        let ev = q.enqueue_nd_range(&via_cache, n).unwrap();
+        assert_eq!(ev.global_size, n);
+        let out = b.read();
+        for (i, &y) in out.iter().enumerate() {
+            let x = (i as i32) % 9 - 4;
+            assert_eq!(y, cheb(x), "item {i}");
         }
     }
 

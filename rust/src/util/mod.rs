@@ -1,15 +1,18 @@
 //! Small self-contained utilities: a seeded PRNG for the stochastic
-//! passes, a stopwatch, and a minimal JSON reader for
+//! passes, a stopwatch, a stable FNV-1a hasher for the coordinator's
+//! compile-cache keys, and a minimal JSON reader for
 //! `artifacts/geometry.json`.
 //!
 //! (The build environment is fully offline with only the `xla` crate's
 //! dependency closure vendored, so `rand`, `serde` and friends are
 //! hand-rolled here — see DESIGN.md §Key design decisions.)
 
+mod hash;
 mod json;
 mod rng;
 mod timer;
 
+pub use hash::{fnv1a_64, StableHasher};
 pub use json::JsonValue;
 pub use rng::XorShiftRng;
 pub use timer::Stopwatch;

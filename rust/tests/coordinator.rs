@@ -1,0 +1,200 @@
+//! Serving-layer integration tests: the coordinator across a fleet of
+//! cycle-simulated overlay partitions.
+//!
+//! Covers the three properties the subsystem promises:
+//! * compile-cache behaviour (hit/miss accounting, bounded capacity,
+//!   deterministic LRU eviction) observed through the serving API;
+//! * slot-aware scheduling under contention (affinity to configured
+//!   partitions, reconfiguration only when the working set exceeds the
+//!   fleet);
+//! * a mixed-kernel soak in which **every** dispatch is verified
+//!   against the cycle simulator — the scattered output buffers must
+//!   hold the simulator's values bit-for-bit.
+
+use overlay_jit::bench_kernels::BENCHMARKS;
+use overlay_jit::coordinator::{wait_all, Coordinator, CoordinatorConfig, SubmitArg};
+use overlay_jit::overlay::OverlaySpec;
+use overlay_jit::runtime_ocl::{Backend, Buffer, Context, Device};
+use overlay_jit::util::XorShiftRng;
+
+fn host_ctx() -> Context {
+    let dev = Device {
+        spec: OverlaySpec::zynq_default(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    Context::new(&dev)
+}
+
+/// Random input buffers (with stencil slack) for a benchmark's params.
+fn random_args(ctx: &Context, nparams: usize, n: usize, rng: &mut XorShiftRng) -> Vec<SubmitArg> {
+    (0..nparams)
+        .map(|_| {
+            let buf = ctx.create_buffer(n + 16);
+            let data: Vec<i32> = (0..n + 16).map(|_| rng.gen_i64(-30, 30) as i32).collect();
+            buf.write(&data);
+            SubmitArg::Buffer(buf)
+        })
+        .collect()
+}
+
+fn param_count(source: &str) -> usize {
+    overlay_jit::frontend::parse_kernel(source).unwrap().params.len()
+}
+
+#[test]
+fn mixed_kernel_soak_verifies_every_dispatch() {
+    let spec = OverlaySpec::zynq_default();
+    let coord = Coordinator::new(CoordinatorConfig::sim_fleet(spec, 2)).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x50AC);
+
+    const ROUNDS: usize = 5;
+    const ITEMS: usize = 192;
+    let mut handles = Vec::new();
+    // a mixed stream: all six benchmarks interleaved, ROUNDS times
+    for _ in 0..ROUNDS {
+        for b in &BENCHMARKS {
+            let args = random_args(&ctx, param_count(b.source), ITEMS, &mut rng);
+            handles.push(coord.submit(b.source, &args, ITEMS).unwrap());
+        }
+    }
+    let results = wait_all(handles).unwrap();
+    let total = ROUNDS * BENCHMARKS.len();
+    assert_eq!(results.len(), total);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(
+            r.verified,
+            Some(true),
+            "dispatch {i} diverged from the cycle simulator"
+        );
+        assert!(r.partition < 2);
+        assert_eq!(r.event.global_size, ITEMS);
+        assert!(r.batch_size >= 1);
+    }
+
+    let stats = coord.stats();
+    assert_eq!(stats.total_dispatches, total as u64);
+    assert_eq!(stats.total_items, (total * ITEMS) as u64);
+    assert_eq!(stats.verify_failures, 0);
+    assert_eq!(stats.dispatch_errors, 0);
+    // six compiles, everything else served from the cache
+    assert_eq!(stats.cache.misses, 6);
+    assert_eq!(stats.cache.hits, (total - 6) as u64);
+    assert!(stats.cache.hit_rate() > 0.7, "{}", stats.cache.hit_rate());
+    // 6 kernels over 2 partitions: reconfiguration churn is inevitable
+    // but bounded by the dispatch count
+    assert!(stats.reconfig_count >= 6);
+    assert!(stats.reconfig_count <= stats.total_dispatches);
+    assert!(stats.reconfig_seconds > 0.0);
+    assert_eq!(stats.partitions.len(), 2);
+    let dispatched: u64 = stats.partitions.iter().map(|p| p.dispatches).sum();
+    assert_eq!(dispatched, stats.total_dispatches);
+    // both partitions actually served work
+    assert!(stats.partitions.iter().all(|p| p.dispatches > 0));
+    assert!(stats.latency.count == total && stats.latency.p99_ms >= stats.latency.p50_ms);
+}
+
+#[test]
+fn working_set_fitting_the_fleet_stops_reconfiguring() {
+    // two kernels on two partitions: after the cold start, zero churn
+    let coord =
+        Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2)).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(1);
+    let kernels = [&BENCHMARKS[0], &BENCHMARKS[4]]; // chebyshev, poly1
+    for _ in 0..6 {
+        for b in kernels {
+            let args = random_args(&ctx, param_count(b.source), 64, &mut rng);
+            let r = coord.submit(b.source, &args, 64).unwrap().wait().unwrap();
+            assert_eq!(r.verified, Some(true));
+        }
+    }
+    let stats = coord.stats();
+    // exactly one configuration load per kernel, ever
+    assert_eq!(stats.reconfig_count, 2, "{:?}", stats.partitions);
+    assert_eq!(stats.cache.misses, 2);
+    assert_eq!(stats.cache.hits, 10);
+}
+
+#[test]
+fn bounded_cache_evicts_deterministically_and_recompiles() {
+    // cache of 2 serving 3 kernels round-robin: every round evicts
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2);
+    cfg.cache_capacity = 2;
+    let coord = Coordinator::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(2);
+    let kernels = [&BENCHMARKS[0], &BENCHMARKS[4], &BENCHMARKS[5]];
+    for _ in 0..3 {
+        for b in kernels {
+            let args = random_args(&ctx, param_count(b.source), 48, &mut rng);
+            let r = coord.submit(b.source, &args, 48).unwrap().wait().unwrap();
+            assert_eq!(r.verified, Some(true));
+        }
+    }
+    let stats = coord.stats();
+    // round-robin over 3 keys with capacity 2 defeats LRU: every
+    // lookup misses, every insert evicts the next key in sequence
+    assert_eq!(stats.cache.misses, 9, "hits={} ", stats.cache.hits);
+    assert_eq!(stats.cache.hits, 0);
+    assert_eq!(stats.cache.evictions, 7);
+    assert_eq!(stats.cache.entries, 2);
+    assert_eq!(stats.verify_failures, 0);
+}
+
+#[test]
+fn single_partition_alternation_is_worst_case_churn() {
+    // one partition, two alternating kernels: every dispatch after the
+    // first two reconfigures — the scheduler's documented worst case
+    let coord =
+        Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1)).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(3);
+    let kernels = [&BENCHMARKS[0], &BENCHMARKS[4]];
+    let mut n_dispatch = 0u64;
+    for _ in 0..4 {
+        for b in kernels {
+            let args = random_args(&ctx, param_count(b.source), 32, &mut rng);
+            let r = coord.submit(b.source, &args, 32).unwrap().wait().unwrap();
+            assert_eq!(r.partition, 0);
+            assert!(r.event.config_seconds > 0.0, "every alternation must reconfigure");
+            n_dispatch += 1;
+        }
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.reconfig_count, n_dispatch);
+}
+
+#[test]
+fn scalar_arguments_flow_through_the_coordinator() {
+    let src = "__kernel void scale(__global int *A, const int n, __global int *B) {
+        int i = get_global_id(0);
+        B[i] = A[i] * n + 1;
+    }";
+    let coord =
+        Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2)).unwrap();
+    let ctx = host_ctx();
+    let n = 64;
+    let a = ctx.create_buffer(n);
+    let b: Buffer = ctx.create_buffer(n);
+    a.write(&(0..n as i32).collect::<Vec<i32>>());
+    let r = coord
+        .submit(
+            src,
+            &[
+                SubmitArg::Buffer(a),
+                SubmitArg::Scalar(7),
+                SubmitArg::Buffer(b.clone()),
+            ],
+            n,
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(r.verified, Some(true));
+    let out = b.read();
+    for (i, &y) in out.iter().enumerate() {
+        assert_eq!(y, (i as i32) * 7 + 1);
+    }
+}
