@@ -1,6 +1,7 @@
 # overlay-jit build + CI entry points.
 #
-#   make check      — fmt --check, clippy -D warnings, cargo test -q
+#   make check      — fmt --check, clippy -D warnings, cargo test -q,
+#                     cargo bench --no-run (bench code must keep compiling)
 #   make build      — release build (tier-1 first half)
 #   make test       — cargo test -q (tier-1 second half)
 #   make bench      — the paper-figure + serving bench harnesses
@@ -11,9 +12,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy build test bench artifacts
+.PHONY: check fmt clippy build test bench bench-build artifacts
 
-check: fmt clippy test
+check: fmt clippy test bench-build
 
 fmt:
 	$(CARGO) fmt --check
@@ -29,7 +30,13 @@ test:
 
 bench:
 	$(CARGO) bench --bench serve_throughput
+	$(CARGO) bench --bench fleet_routing
 	$(CARGO) bench --bench hotpath
+
+# compile every bench harness without running it — keeps bench code
+# (fleet_routing included) from silently rotting in CI
+bench-build:
+	$(CARGO) bench --no-run
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out-dir ../../artifacts

@@ -3,18 +3,22 @@
 //! # Serving modes
 //!
 //! **Coordinator mode (default)** — `cargo run --release --example
-//! e2e_serve [-- coordinator [PARTITIONS]]` — the deployment shape
-//! this repo is growing toward: the [`overlay_jit::coordinator`]
-//! subsystem serves a *mixed* request stream of all six paper
-//! benchmarks across a fleet of overlay partitions (default 2). Each
-//! request goes through the compile cache (first sight of a kernel
-//! pays the paper's seconds-class JIT once; repeats are O(lookup)),
-//! the slot-aware scheduler (dispatches land on partitions already
-//! configured with the kernel's bitstream; victims pay the modeled
-//! 42 µs-class load), and the async per-partition dispatch queues.
-//! Every dispatch is re-executed on the cycle simulator and must agree
-//! bit-for-bit. The run fails (non-zero exit) if any dispatch fails
-//! verification or the compile cache never hits.
+//! e2e_serve [-- coordinator [PARTITIONS_PER_SPEC]]` — the deployment
+//! shape this repo is growing toward: a **heterogeneous fleet** of
+//! 8×8-dsp2 and 4×4-dsp2 overlay partitions (default 2 of each)
+//! serves a *bimodal* request stream of all six paper benchmarks —
+//! every round submits each kernel once **wide** (16384 items, batch
+//! lane) and once **small** (512 items, interactive lane). Each
+//! request goes through the resource-aware router (small dispatches
+//! best-fit the 4×4 tier, wide data-parallel dispatches go where
+//! copies × throughput peaks), the per-spec kernel-cache shard (first
+//! sight of a (kernel, spec) pair pays the paper's seconds-class JIT
+//! once), the slot-aware scheduler (42 µs-class bitstream loads on
+//! reconfiguration) and the two-lane dispatch queues with same-kernel
+//! batch fusion. Every dispatch is re-executed on the cycle simulator
+//! and must agree bit-for-bit. The run fails (non-zero exit) if any
+//! dispatch fails verification, the caches never hit, a spec serves
+//! no kernel, or any cross-spec cache hit occurs.
 //!
 //! **PJRT mode** — `make artifacts && cargo run --release --features
 //! pjrt --example e2e_serve -- pjrt` — the original single-device
@@ -23,7 +27,8 @@
 //! percentiles, sustained throughput and backend-vs-simulator
 //! agreement. Requires the `pjrt` cargo feature and `make artifacts`.
 //!
-//! Results are recorded in EXPERIMENTS.md (§E7 PJRT, §E8 coordinator).
+//! Results are recorded in EXPERIMENTS.md (§E7 PJRT, §E8 coordinator,
+//! §E9 heterogeneous fleet).
 
 use std::time::Instant;
 
@@ -39,46 +44,57 @@ use overlay_jit::util::XorShiftRng;
 const DISPATCHES: usize = 24;
 const ITEMS_PER_DISPATCH: usize = 16_384;
 
-/// Coordinator rounds: each round submits all six benchmarks once.
-const ROUNDS: usize = 8;
-const COORD_ITEMS: usize = 4096;
+/// Coordinator rounds: each round submits every benchmark wide + small.
+const ROUNDS: usize = 6;
+/// Wide (batch-lane) dispatch size: demands more copies than any 4×4
+/// factor supplies, so these route to the 8×8 tier.
+const WIDE_ITEMS: usize = 16_384;
+/// Small (interactive-lane) dispatch size: one copy suffices, so these
+/// best-fit the 4×4 tier whenever it is idle.
+const SMALL_ITEMS: usize = 512;
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("pjrt") => serve_pjrt(),
         Some("coordinator") | None => {
-            let partitions = args
+            let per_spec = args
                 .get(1)
                 .and_then(|s| s.parse::<usize>().ok())
                 .unwrap_or(2);
-            serve_coordinator(partitions)
+            serve_coordinator(per_spec)
         }
         Some(other) => bail!("unknown mode '{other}' (coordinator [N] | pjrt)"),
     }
 }
 
 // ---------------------------------------------------------------------
-// coordinator mode: mixed stream across a fleet of partitions
+// coordinator mode: bimodal stream across a heterogeneous fleet
 // ---------------------------------------------------------------------
 
-fn serve_coordinator(partitions: usize) -> Result<()> {
-    if partitions < 2 {
-        bail!("coordinator mode serves a fleet: need >= 2 partitions, got {partitions}");
+fn serve_coordinator(per_spec: usize) -> Result<()> {
+    if per_spec < 1 {
+        bail!("need >= 1 partition per spec, got {per_spec}");
     }
-    let spec = reference_overlay();
-    let coord = Coordinator::new(CoordinatorConfig::sim_fleet(spec.clone(), partitions))?;
+    let big = reference_overlay();
+    let small = OverlaySpec::new(4, 4, FuType::Dsp2);
+    let coord = Coordinator::new(CoordinatorConfig::sim_fleet_mixed(vec![
+        (big.clone(), per_spec),
+        (small.clone(), per_spec),
+    ]))?;
     println!(
-        "serving a mixed stream of {} benchmarks x {ROUNDS} rounds x {COORD_ITEMS} items \
-         across {partitions} {} partitions\n",
+        "serving a bimodal stream of {} benchmarks x {ROUNDS} rounds \
+         (wide {WIDE_ITEMS} + small {SMALL_ITEMS} items) across {per_spec} {} + \
+         {per_spec} {} partitions\n",
         BENCHMARKS.len(),
-        spec.name()
+        big.name(),
+        small.name()
     );
 
     // a host context for buffer allocation (any device works; buffers
     // are backend-independent)
     let host = Device {
-        spec: spec.clone(),
+        spec: big.clone(),
         backend: Backend::CycleSim,
         name: "host".into(),
     };
@@ -92,22 +108,29 @@ fn serve_coordinator(partitions: usize) -> Result<()> {
         nparams_by_bench.push(overlay_jit::frontend::parse_kernel(b.source)?.params.len());
     }
 
+    let make_args = |nparams: usize, items: usize, rng: &mut XorShiftRng| {
+        (0..nparams)
+            .map(|_| {
+                let buf = ctx.create_buffer(items + 16);
+                let data: Vec<i32> = (0..items + 16)
+                    .map(|_| rng.gen_i64(-40, 40) as i32)
+                    .collect();
+                buf.write(&data);
+                SubmitArg::Buffer(buf)
+            })
+            .collect::<Vec<SubmitArg>>()
+    };
+
     let t_serve = Instant::now();
     let mut handles = Vec::new();
     let mut tags = Vec::new();
     for _ in 0..ROUNDS {
         for (b, &nparams) in BENCHMARKS.iter().zip(&nparams_by_bench) {
-            let args: Vec<SubmitArg> = (0..nparams)
-                .map(|_| {
-                    let buf = ctx.create_buffer(COORD_ITEMS + 16);
-                    let data: Vec<i32> = (0..COORD_ITEMS + 16)
-                        .map(|_| rng.gen_i64(-40, 40) as i32)
-                        .collect();
-                    buf.write(&data);
-                    SubmitArg::Buffer(buf)
-                })
-                .collect();
-            handles.push(coord.submit(b.source, &args, COORD_ITEMS)?);
+            let wide = make_args(nparams, WIDE_ITEMS, &mut rng);
+            handles.push(coord.submit(b.source, &wide, WIDE_ITEMS, Priority::Batch)?);
+            tags.push(b.name);
+            let narrow = make_args(nparams, SMALL_ITEMS, &mut rng);
+            handles.push(coord.submit(b.source, &narrow, SMALL_ITEMS, Priority::Interactive)?);
             tags.push(b.name);
         }
     }
@@ -120,6 +143,7 @@ fn serve_coordinator(partitions: usize) -> Result<()> {
         "dispatches",
         "cache hits",
         "reconfigs",
+        "8x8 / 4x4",
         "p50 ms",
         "p99 ms",
         "verified",
@@ -139,6 +163,8 @@ fn serve_coordinator(partitions: usize) -> Result<()> {
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let hits = rs.iter().filter(|r| r.cache_hit).count();
         let reconfigs = rs.iter().filter(|r| r.event.config_seconds > 0.0).count();
+        let on_big = rs.iter().filter(|r| r.spec == big.name()).count();
+        let on_small = rs.iter().filter(|r| r.spec == small.name()).count();
         let verified = rs.iter().all(|r| r.verified == Some(true));
         all_verified &= verified;
         table.row(vec![
@@ -146,6 +172,7 @@ fn serve_coordinator(partitions: usize) -> Result<()> {
             rs.len().to_string(),
             hits.to_string(),
             reconfigs.to_string(),
+            format!("{on_big} / {on_small}"),
             format!("{:.3}", percentile(&lat, 0.50)),
             format!("{:.3}", percentile(&lat, 0.99)),
             if verified { "ok".to_string() } else { "FAIL".to_string() },
@@ -162,18 +189,33 @@ fn serve_coordinator(partitions: usize) -> Result<()> {
         serve_s
     );
 
-    // acceptance: hit rate > 0, every dispatch simulator-verified
+    // acceptance: all verified, caches hit, both specs served work,
+    // shard isolation held
     if !all_verified || stats.verify_failures > 0 {
         bail!("verification failure: a dispatch diverged from the cycle simulator");
     }
     if stats.cache.hit_rate() <= 0.0 {
-        bail!("compile cache never hit — serving layer is not caching");
+        bail!("kernel caches never hit — serving layer is not caching");
+    }
+    for s in &stats.per_spec {
+        if s.routed == 0 {
+            bail!("spec {} served no dispatches — routing is not heterogeneous", s.spec);
+        }
+        if s.cross_spec_hits > 0 {
+            bail!("spec {} saw {} cross-spec cache hits", s.spec, s.cross_spec_hits);
+        }
     }
     println!(
-        "OK: hit rate {:.0}%, {} reconfigs across {} partitions, all dispatches verified",
+        "OK: hit rate {:.0}%, {} reconfigs, {} fused batches; routed per spec: {}",
         100.0 * stats.cache.hit_rate(),
         stats.reconfig_count,
-        partitions
+        stats.fused_batches,
+        stats
+            .per_spec
+            .iter()
+            .map(|s| format!("{}={}", s.spec, s.routed))
+            .collect::<Vec<_>>()
+            .join(", "),
     );
     Ok(())
 }
@@ -251,10 +293,10 @@ fn serve_pjrt() -> Result<()> {
         // the dispatch scattered PJRT results into the output buffers;
         // they must match the simulator exactly, item for item
         let mut verified = true;
-        let n_out = k.dfg.num_outputs();
-        for copy in 0..k.plan.factor {
+        let n_out = k.n_outputs;
+        for copy in 0..k.factor {
             for o in 0..n_out {
-                let m = k.dfg.output_meta[o];
+                let m = k.output_meta[o];
                 let data = buffers[m.param].read();
                 for (i, &v) in sim_out[copy * n_out + o].iter().enumerate() {
                     let gid = copy * chunk + i;
@@ -269,10 +311,10 @@ fn serve_pjrt() -> Result<()> {
             }
         }
 
-        let model = metrics::achieved_gops(k.plan.factor, k.ops_per_copy(), spec.fmax_mhz());
+        let model = metrics::achieved_gops(k.factor, k.ops_per_copy, spec.fmax_mhz());
         table.row(vec![
-            format!("{}(x{})", b.name, k.plan.factor),
-            k.plan.factor.to_string(),
+            format!("{}(x{})", b.name, k.factor),
+            k.factor.to_string(),
             format!("{build_ms:.1}"),
             format!("{:.2}", percentile(&lat_ms, 0.50)),
             format!("{:.2}", percentile(&lat_ms, 0.99)),

@@ -18,7 +18,7 @@
 use std::time::Instant;
 
 use overlay_jit::bench_kernels::{reference_overlay, BENCHMARKS};
-use overlay_jit::coordinator::{wait_all, Coordinator, CoordinatorConfig, SubmitArg};
+use overlay_jit::coordinator::{wait_all, Coordinator, CoordinatorConfig, Priority, SubmitArg};
 use overlay_jit::metrics::TextTable;
 use overlay_jit::prelude::*;
 use overlay_jit::util::XorShiftRng;
@@ -101,14 +101,14 @@ fn main() {
         // warm the cache + the partition configuration
         let args = buffers_for(&ctx, 2, &mut rng);
         coord
-            .submit(cheb.source, &args, ITEMS)
+            .submit(cheb.source, &args, ITEMS, Priority::Interactive)
             .expect("warm submit")
             .wait()
             .expect("warm dispatch");
         let t0 = Instant::now();
         let mut handles = Vec::with_capacity(DISPATCHES);
         for _ in 0..DISPATCHES {
-            handles.push(coord.submit(cheb.source, &args, ITEMS).expect("submit"));
+            handles.push(coord.submit(cheb.source, &args, ITEMS, Priority::Interactive).expect("submit"));
         }
         let results = wait_all(handles).expect("serve");
         let s = t0.elapsed().as_secs_f64();
@@ -139,7 +139,7 @@ fn main() {
             } else {
                 (poly1, &poly_args)
             };
-            handles.push(coord.submit(b.source, args, ITEMS).expect("submit"));
+            handles.push(coord.submit(b.source, args, ITEMS, Priority::Interactive).expect("submit"));
         }
         wait_all(handles).expect("serve");
         let s = t0.elapsed().as_secs_f64();

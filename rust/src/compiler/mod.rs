@@ -192,6 +192,44 @@ pub struct KernelCost {
     pub par_seconds: f64,
 }
 
+/// The executable slice of a [`CompiledKernel`] — exactly what the
+/// serving layer needs to bind arguments, dispatch, verify and model a
+/// kernel, without dragging the PAR artifacts (netlist, placement,
+/// routes) around. This is also the unit the coordinator's kernel
+/// cache persists to disk: schedule + bitstream + host-binding
+/// metadata round-trip through the snapshot format, so a restarted
+/// fleet warm-starts without re-paying the seconds-class JIT.
+#[derive(Debug, Clone)]
+pub struct ServableKernel {
+    pub name: String,
+    /// Kernel parameter list (host argument binding).
+    pub params: Vec<crate::frontend::Param>,
+    /// Replicated copies mapped.
+    pub factor: usize,
+    /// Which resource capped the replication factor.
+    pub limit: crate::replicate::LimitReason,
+    /// Arithmetic ops per copy (GOPS model input).
+    pub ops_per_copy: usize,
+    /// Functional units consumed on the overlay (all copies).
+    pub fus: usize,
+    /// Input streams per copy.
+    pub n_inputs: usize,
+    /// Output streams per copy.
+    pub n_outputs: usize,
+    /// Host binding of each per-copy input stream.
+    pub input_meta: Vec<crate::dfg::StreamMeta>,
+    /// Host binding of each per-copy output stream.
+    pub output_meta: Vec<crate::dfg::StreamMeta>,
+    /// Latency-balancing report (timing model input; snapshot restores
+    /// keep only the stream latencies and pipeline depth).
+    pub latency: LatencyReport,
+    pub bitstream: OverlayBitstream,
+    pub schedule: SlotSchedule,
+    /// Wall seconds of the JIT compile that produced this kernel
+    /// (0.0 when restored from a snapshot — nothing was compiled).
+    pub compile_seconds: f64,
+}
+
 impl CompiledKernel {
     /// Replicated copies mapped.
     pub fn copies(&self) -> usize {
@@ -201,6 +239,26 @@ impl CompiledKernel {
     /// Arithmetic ops per copy (GOPS model input).
     pub fn ops_per_copy(&self) -> usize {
         self.dfg.num_ops()
+    }
+
+    /// Extract the executable slice served by the coordinator.
+    pub fn servable(&self) -> ServableKernel {
+        ServableKernel {
+            name: self.name.clone(),
+            params: self.params.clone(),
+            factor: self.plan.factor,
+            limit: self.plan.limit,
+            ops_per_copy: self.dfg.num_ops(),
+            fus: self.fg.num_fus(),
+            n_inputs: self.dfg.num_inputs(),
+            n_outputs: self.dfg.num_outputs(),
+            input_meta: self.dfg.input_meta.clone(),
+            output_meta: self.dfg.output_meta.clone(),
+            latency: self.latency.clone(),
+            bitstream: self.bitstream.clone(),
+            schedule: self.schedule.clone(),
+            compile_seconds: self.report.total().as_secs_f64(),
+        }
     }
 
     /// The coordinator-facing cost summary.
@@ -217,6 +275,33 @@ impl CompiledKernel {
             par_seconds: self.report.par_time().as_secs_f64(),
         }
     }
+}
+
+/// Result of the compile-free front-half analysis
+/// ([`JitCompiler::plan_kernel`]): the replication decision the fleet
+/// router scores specs with, at a tiny fraction of a full JIT run.
+#[derive(Debug, Clone)]
+pub struct KernelPlan {
+    pub name: String,
+    /// Arithmetic ops per copy (GOPS model input).
+    pub ops_per_copy: usize,
+    pub plan: ReplicationPlan,
+}
+
+/// Intermediate artifacts of the pipeline's front half, shared by
+/// [`JitCompiler::compile`] and [`JitCompiler::plan_kernel`].
+struct FrontHalf {
+    ast: crate::frontend::Kernel,
+    /// Single-copy DFG.
+    dfg: Dfg,
+    /// Single-copy DFG after multiply–add fusion.
+    fused: Dfg,
+    /// Single-copy FU-aware graph.
+    single: FuGraph,
+    plan: ReplicationPlan,
+    pass_stats: PassStats,
+    /// Per-stage wall times, spliced into the [`CompileReport`].
+    stages: Vec<(String, Duration)>,
 }
 
 /// The JIT compiler bound to one overlay instance.
@@ -241,33 +326,32 @@ impl JitCompiler {
         &self.rrg
     }
 
-    /// JIT-compile an OpenCL kernel to an overlay configuration.
-    pub fn compile(&self, source: &str) -> Result<CompiledKernel> {
+    /// The shared front half of [`JitCompiler::compile`] and
+    /// [`JitCompiler::plan_kernel`]: parse → IR → DFG → FU-aware
+    /// transform → resource-aware replication decision. One code
+    /// path, so the router's plans are *structurally* identical to
+    /// what a full compile produces — any future pass added here
+    /// changes both automatically.
+    fn front_half(&self, source: &str) -> Result<FrontHalf> {
         let mut sw = Stopwatch::new();
-        let mut report = CompileReport::default();
-        let lap = |sw: &mut Stopwatch, report: &mut CompileReport, name: &str| {
-            let d = sw.lap(name);
-            report.stages.push((name.to_string(), d));
-        };
+        let mut stages: Vec<(String, std::time::Duration)> = Vec::new();
 
         // front end
         let ast = parse_kernel(source).context("front end")?;
-        lap(&mut sw, &mut report, "parse");
+        stages.push(("parse".to_string(), sw.lap("parse")));
         let naive = lower_kernel(&ast)?;
-        lap(&mut sw, &mut report, "lower");
-        let (ir, stats) = optimize(&naive);
-        report.pass_stats = Some(stats);
-        lap(&mut sw, &mut report, "optimize");
+        stages.push(("lower".to_string(), sw.lap("lower")));
+        let (ir, pass_stats) = optimize(&naive);
+        stages.push(("optimize".to_string(), sw.lap("optimize")));
         let dfg = extract_dfg(&ir).context("DFG extraction")?;
-        lap(&mut sw, &mut report, "dfg");
+        stages.push(("dfg".to_string(), sw.lap("dfg")));
 
         // FU-aware transform
-        let dsps = self.spec.fu_type.dsps_per_fu();
         let fused = fuse_muladd(&dfg)?;
-        let single = cluster(&fused, dsps)?;
-        lap(&mut sw, &mut report, "fuaware");
+        let single = cluster(&fused, self.spec.fu_type.dsps_per_fu())?;
+        stages.push(("fuaware".to_string(), sw.lap("fuaware")));
 
-        // resource-aware replication
+        // resource-aware replication decision
         let mut rep_plan = plan(&single, &self.spec, self.options.backend_limits)
             .context("replication planning")?;
         if let Replication::Fixed(n) = self.options.replication {
@@ -282,6 +366,40 @@ impl JitCompiler {
             }
             rep_plan.factor = n;
         }
+        Ok(FrontHalf { ast, dfg, fused, single, plan: rep_plan, pass_stats, stages })
+    }
+
+    /// Run only the front half of the pipeline — parse → IR → DFG →
+    /// FU-aware transform → resource-aware replication — and return
+    /// the replication decision, **without** placement, routing or
+    /// configuration generation. This is the µs-class analysis the
+    /// fleet router uses to score overlay specs for an incoming
+    /// kernel before committing to the seconds-class JIT; the factor
+    /// and limit it reports are identical to what
+    /// [`JitCompiler::compile`] would produce — both run the same
+    /// [`JitCompiler::front_half`].
+    pub fn plan_kernel(&self, source: &str) -> Result<KernelPlan> {
+        let front = self.front_half(source)?;
+        Ok(KernelPlan {
+            name: front.ast.name,
+            ops_per_copy: front.dfg.num_ops(),
+            plan: front.plan,
+        })
+    }
+
+    /// JIT-compile an OpenCL kernel to an overlay configuration.
+    pub fn compile(&self, source: &str) -> Result<CompiledKernel> {
+        let FrontHalf { ast, dfg, fused, single, plan: rep_plan, pass_stats, stages } =
+            self.front_half(source)?;
+        let mut report = CompileReport { stages, pass_stats: Some(pass_stats), ..Default::default() };
+        let mut sw = Stopwatch::new();
+        let lap = |sw: &mut Stopwatch, report: &mut CompileReport, name: &str| {
+            let d = sw.lap(name);
+            report.stages.push((name.to_string(), d));
+        };
+
+        // replication: materialize the planned copies
+        let dsps = self.spec.fu_type.dsps_per_fu();
         let replicated = replicate_dfg(&fused, rep_plan.factor);
         let fg = cluster(&replicated, dsps)?;
         lap(&mut sw, &mut report, "replicate");
@@ -444,5 +562,44 @@ mod tests {
         let jit = JitCompiler::new(OverlaySpec::zynq_default());
         let err = jit.compile("__kernel void bad(__global int *B) { B[0] = x; }");
         assert!(format!("{:#}", err.unwrap_err()).contains("front end"));
+    }
+
+    #[test]
+    fn plan_kernel_matches_full_compile() {
+        for spec in [OverlaySpec::zynq_default(), OverlaySpec::new(4, 4, FuType::Dsp2)] {
+            let jit = JitCompiler::new(spec);
+            let p = jit.plan_kernel(CHEB).unwrap();
+            let k = jit.compile(CHEB).unwrap();
+            assert_eq!(p.name, k.name);
+            assert_eq!(p.plan.factor, k.plan.factor);
+            assert_eq!(p.plan.limit, k.plan.limit);
+            assert_eq!(p.ops_per_copy, k.ops_per_copy());
+        }
+    }
+
+    #[test]
+    fn plan_kernel_rejects_oversubscribed_fixed_replication() {
+        let jit = JitCompiler::with_options(
+            OverlaySpec::zynq_default(),
+            CompileOptions { replication: Replication::Fixed(17), ..Default::default() },
+        );
+        assert!(jit.plan_kernel(CHEB).is_err());
+    }
+
+    #[test]
+    fn servable_slice_matches_compiled_kernel() {
+        let jit = JitCompiler::new(OverlaySpec::zynq_default());
+        let k = jit.compile(CHEB).unwrap();
+        let s = k.servable();
+        assert_eq!(s.name, k.name);
+        assert_eq!(s.factor, k.copies());
+        assert_eq!(s.ops_per_copy, k.ops_per_copy());
+        assert_eq!(s.n_inputs, k.dfg.num_inputs());
+        assert_eq!(s.n_outputs, k.dfg.num_outputs());
+        assert_eq!(s.input_meta, k.dfg.input_meta);
+        assert_eq!(s.schedule, k.schedule);
+        assert_eq!(s.bitstream.byte_size(), k.bitstream.byte_size());
+        assert_eq!(s.latency.pipeline_depth, k.latency.pipeline_depth);
+        assert!(s.compile_seconds > 0.0);
     }
 }

@@ -1,4 +1,4 @@
-//! The compile cache: content-addressed reuse of JIT artifacts.
+//! The kernel cache: content-addressed reuse of JIT artifacts.
 //!
 //! The paper's JIT compile is seconds-class (Fig. 7); a serving
 //! deployment cannot afford to pay it per request. Compiled kernels
@@ -8,17 +8,36 @@
 //! options) combinations hit the compiler. Eviction is LRU over a
 //! bounded capacity with deterministic tie-breaking (a monotonic
 //! logical clock stamps every touch), which the tests rely on.
+//!
+//! In a heterogeneous fleet each [`crate::fleet::CompileShard`] owns
+//! one `KernelCache`, so entries for different overlay specs never
+//! share a shard — the per-spec isolation the fleet tests assert.
+//!
+//! Because cache keys are stable across processes, the cache can be
+//! **snapshotted**: [`KernelCache::save_snapshot`] spills every
+//! entry's executable slice — slot schedule, bitstream words, host
+//! binding metadata — through [`crate::util::JsonValue`], and
+//! [`KernelCache::load_snapshot`] warm-starts a restarted fleet
+//! without re-paying the seconds-class JIT.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::Arc;
 
-use crate::compiler::{stable_source_hash, CompileOptions, CompiledKernel};
-use crate::metrics::CacheStats;
-use crate::overlay::OverlaySpec;
+use anyhow::{anyhow, bail, Context as _, Result};
 
-/// Stable compile-cache key. Every component survives process
-/// restarts (FNV-1a, not `DefaultHasher`), so keys can be logged and
-/// compared across runs.
+use crate::compiler::{stable_source_hash, CompileOptions, ServableKernel};
+use crate::configgen::{EmuGeometry, SlotSchedule};
+use crate::frontend::{Param, ParamKind, Type};
+use crate::latency::LatencyReport;
+use crate::metrics::CacheStats;
+use crate::overlay::{OverlayBitstream, OverlaySpec};
+use crate::replicate::LimitReason;
+use crate::util::JsonValue;
+
+/// Stable kernel-cache key. Every component survives process
+/// restarts (FNV-1a, not `DefaultHasher`), so keys can be logged,
+/// persisted and compared across runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CacheKey {
     /// FNV-1a of the kernel source text.
@@ -40,14 +59,14 @@ impl CacheKey {
 }
 
 struct Entry {
-    kernel: Arc<CompiledKernel>,
+    kernel: Arc<ServableKernel>,
     /// Logical time of the last hit or insert (unique — ties are
     /// impossible, so eviction order is deterministic).
     last_used: u64,
 }
 
-/// Bounded LRU cache of compiled kernels.
-pub struct CompileCache {
+/// Bounded LRU cache of compiled (servable) kernels.
+pub struct KernelCache {
     map: HashMap<CacheKey, Entry>,
     capacity: usize,
     tick: u64,
@@ -56,9 +75,12 @@ pub struct CompileCache {
     evictions: u64,
 }
 
-impl std::fmt::Debug for CompileCache {
+/// Former name of [`KernelCache`], kept for older call sites.
+pub type CompileCache = KernelCache;
+
+impl std::fmt::Debug for KernelCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("CompileCache")
+        f.debug_struct("KernelCache")
             .field("entries", &self.map.len())
             .field("capacity", &self.capacity)
             .field("hits", &self.hits)
@@ -68,11 +90,11 @@ impl std::fmt::Debug for CompileCache {
     }
 }
 
-impl CompileCache {
+impl KernelCache {
     /// A cache holding at most `capacity` compiled kernels
     /// (`capacity` is clamped to ≥ 1).
-    pub fn new(capacity: usize) -> CompileCache {
-        CompileCache {
+    pub fn new(capacity: usize) -> KernelCache {
+        KernelCache {
             map: HashMap::new(),
             capacity: capacity.max(1),
             tick: 0,
@@ -84,7 +106,7 @@ impl CompileCache {
 
     /// Look a key up, counting a hit or miss and refreshing LRU order
     /// on hit.
-    pub fn get(&mut self, key: &CacheKey) -> Option<Arc<CompiledKernel>> {
+    pub fn get(&mut self, key: &CacheKey) -> Option<Arc<ServableKernel>> {
         self.tick += 1;
         match self.map.get_mut(key) {
             Some(e) => {
@@ -106,7 +128,7 @@ impl CompileCache {
 
     /// Insert a compiled kernel, evicting the least-recently-used
     /// entry if the cache is full. Returns the evicted key, if any.
-    pub fn insert(&mut self, key: CacheKey, kernel: Arc<CompiledKernel>) -> Option<CacheKey> {
+    pub fn insert(&mut self, key: CacheKey, kernel: Arc<ServableKernel>) -> Option<CacheKey> {
         self.tick += 1;
         if let Some(e) = self.map.get_mut(&key) {
             // refresh (racing compilers may insert the same key twice)
@@ -152,6 +174,473 @@ impl CompileCache {
             capacity: self.capacity,
         }
     }
+
+    /// Persist every resident entry (key + executable kernel slice) to
+    /// `path` as JSON. Entries are written in deterministic key order,
+    /// so identical cache contents produce identical snapshot bytes.
+    /// Returns the number of entries actually serialized.
+    pub fn save_snapshot(&self, path: &Path) -> Result<usize> {
+        let mut pairs: Vec<(&CacheKey, &Entry)> = self.map.iter().collect();
+        pairs.sort_by_key(|(k, _)| (k.source, k.spec, k.options));
+        let written = pairs.len();
+        let entries: Vec<JsonValue> = pairs
+            .into_iter()
+            .map(|(key, e)| {
+                let mut obj = std::collections::BTreeMap::new();
+                obj.insert("source".to_string(), hex64(key.source));
+                obj.insert("spec".to_string(), hex64(key.spec));
+                obj.insert("options".to_string(), hex64(key.options));
+                obj.insert("kernel".to_string(), servable_to_json(&e.kernel));
+                JsonValue::Object(obj)
+            })
+            .collect();
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("version".to_string(), JsonValue::Number(1.0));
+        root.insert("entries".to_string(), JsonValue::Array(entries));
+        std::fs::write(path, JsonValue::Object(root).render())
+            .with_context(|| format!("writing cache snapshot {}", path.display()))?;
+        Ok(written)
+    }
+
+    /// Restore entries from a snapshot written by
+    /// [`KernelCache::save_snapshot`]. Only entries whose key matches
+    /// `spec` and `options` fingerprints are loaded (a shard never
+    /// admits another spec's kernels — the isolation invariant), and
+    /// loading stops at capacity — a snapshot written by a larger
+    /// cache neither evicts what was loaded first nor inflates the
+    /// eviction counter. Returns how many entries are actually
+    /// resident afterwards. Restored entries count neither hits nor
+    /// misses.
+    pub fn load_snapshot(&mut self, path: &Path, spec: u64, options: u64) -> Result<usize> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading cache snapshot {}", path.display()))?;
+        let doc = JsonValue::parse(&text)
+            .with_context(|| format!("parsing cache snapshot {}", path.display()))?;
+        let version = doc
+            .get("version")
+            .and_then(JsonValue::as_i64)
+            .ok_or_else(|| anyhow!("snapshot missing version"))?;
+        if version != 1 {
+            bail!("unsupported snapshot version {version}");
+        }
+        let entries = doc
+            .get("entries")
+            .and_then(JsonValue::as_array)
+            .ok_or_else(|| anyhow!("snapshot missing entries array"))?;
+        let mut loaded = 0usize;
+        for ent in entries {
+            let key = CacheKey {
+                source: get_hex64(ent, "source")?,
+                spec: get_hex64(ent, "spec")?,
+                options: get_hex64(ent, "options")?,
+            };
+            if key.spec != spec || key.options != options {
+                continue;
+            }
+            if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
+                continue; // smaller cache than the snapshot's writer
+            }
+            let kernel = ent
+                .get("kernel")
+                .ok_or_else(|| anyhow!("snapshot entry missing kernel"))?;
+            self.insert(key, Arc::new(servable_from_json(kernel)?));
+            loaded += 1;
+        }
+        Ok(loaded)
+    }
+}
+
+// ---------------------------------------------------------------------
+// snapshot codec
+// ---------------------------------------------------------------------
+
+fn hex64(v: u64) -> JsonValue {
+    JsonValue::String(format!("{v:016x}"))
+}
+
+fn get_hex64(v: &JsonValue, key: &str) -> Result<u64> {
+    let s = v
+        .get(key)
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| anyhow!("snapshot field '{key}' missing or not a string"))?;
+    u64::from_str_radix(s, 16).with_context(|| format!("snapshot field '{key}'"))
+}
+
+fn num(v: usize) -> JsonValue {
+    JsonValue::Number(v as f64)
+}
+
+fn arr_i32(v: &[i32]) -> JsonValue {
+    JsonValue::Array(v.iter().map(|&x| JsonValue::Number(x as f64)).collect())
+}
+
+fn arr_usize(v: &[usize]) -> JsonValue {
+    JsonValue::Array(v.iter().map(|&x| num(x)).collect())
+}
+
+fn arr_u32(v: &[u32]) -> JsonValue {
+    JsonValue::Array(v.iter().map(|&x| JsonValue::Number(x as f64)).collect())
+}
+
+fn get_i64(v: &JsonValue, key: &str) -> Result<i64> {
+    v.get(key)
+        .and_then(JsonValue::as_i64)
+        .ok_or_else(|| anyhow!("snapshot field '{key}' missing or not a number"))
+}
+
+fn get_usize(v: &JsonValue, key: &str) -> Result<usize> {
+    let n = get_i64(v, key)?;
+    if n < 0 {
+        bail!("snapshot field '{key}' is negative");
+    }
+    Ok(n as usize)
+}
+
+fn get_f64(v: &JsonValue, key: &str) -> Result<f64> {
+    v.get(key)
+        .and_then(JsonValue::as_f64)
+        .ok_or_else(|| anyhow!("snapshot field '{key}' missing or not a number"))
+}
+
+fn get_str<'a>(v: &'a JsonValue, key: &str) -> Result<&'a str> {
+    v.get(key)
+        .and_then(JsonValue::as_str)
+        .ok_or_else(|| anyhow!("snapshot field '{key}' missing or not a string"))
+}
+
+fn get_arr<'a>(v: &'a JsonValue, key: &str) -> Result<&'a [JsonValue]> {
+    v.get(key)
+        .and_then(JsonValue::as_array)
+        .ok_or_else(|| anyhow!("snapshot field '{key}' missing or not an array"))
+}
+
+fn read_i32s(v: &JsonValue, key: &str) -> Result<Vec<i32>> {
+    get_arr(v, key)?
+        .iter()
+        .map(|x| {
+            x.as_i64()
+                .map(|n| n as i32)
+                .ok_or_else(|| anyhow!("snapshot field '{key}' holds a non-number"))
+        })
+        .collect()
+}
+
+fn read_usizes(v: &JsonValue, key: &str) -> Result<Vec<usize>> {
+    get_arr(v, key)?
+        .iter()
+        .map(|x| {
+            x.as_i64()
+                .filter(|&n| n >= 0)
+                .map(|n| n as usize)
+                .ok_or_else(|| anyhow!("snapshot field '{key}' holds a bad number"))
+        })
+        .collect()
+}
+
+fn read_u32s(v: &JsonValue, key: &str) -> Result<Vec<u32>> {
+    get_arr(v, key)?
+        .iter()
+        .map(|x| {
+            x.as_i64()
+                .filter(|&n| n >= 0)
+                .map(|n| n as u32)
+                .ok_or_else(|| anyhow!("snapshot field '{key}' holds a bad number"))
+        })
+        .collect()
+}
+
+fn to_hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+fn from_hex(s: &str) -> Result<Vec<u8>> {
+    if s.len() % 2 != 0 || !s.is_ascii() {
+        bail!("malformed hex string");
+    }
+    (0..s.len() / 2)
+        .map(|i| {
+            u8::from_str_radix(&s[2 * i..2 * i + 2], 16).map_err(|_| anyhow!("bad hex byte"))
+        })
+        .collect()
+}
+
+fn meta_to_json(m: &crate::dfg::StreamMeta) -> JsonValue {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("param".to_string(), num(m.param));
+    obj.insert("offset".to_string(), JsonValue::Number(m.offset as f64));
+    obj.insert("is_scalar".to_string(), JsonValue::Bool(m.is_scalar));
+    JsonValue::Object(obj)
+}
+
+fn meta_from_json(v: &JsonValue) -> Result<crate::dfg::StreamMeta> {
+    Ok(crate::dfg::StreamMeta {
+        param: get_usize(v, "param")?,
+        offset: get_i64(v, "offset")?,
+        is_scalar: v
+            .get("is_scalar")
+            .and_then(JsonValue::as_bool)
+            .ok_or_else(|| anyhow!("stream meta missing is_scalar"))?,
+    })
+}
+
+fn metas_from_json(v: &JsonValue, key: &str) -> Result<Vec<crate::dfg::StreamMeta>> {
+    get_arr(v, key)?.iter().map(meta_from_json).collect()
+}
+
+fn servable_to_json(k: &ServableKernel) -> JsonValue {
+    let params: Vec<JsonValue> = k
+        .params
+        .iter()
+        .map(|p| {
+            let mut obj = std::collections::BTreeMap::new();
+            obj.insert("name".to_string(), JsonValue::String(p.name.clone()));
+            obj.insert(
+                "ty".to_string(),
+                JsonValue::String(
+                    match p.ty {
+                        Type::Int => "int",
+                        Type::Float => "float",
+                        Type::Short => "short",
+                    }
+                    .to_string(),
+                ),
+            );
+            obj.insert(
+                "kind".to_string(),
+                JsonValue::String(
+                    match p.kind {
+                        ParamKind::GlobalPtr => "global",
+                        ParamKind::Scalar => "scalar",
+                    }
+                    .to_string(),
+                ),
+            );
+            obj.insert("is_const".to_string(), JsonValue::Bool(p.is_const));
+            JsonValue::Object(obj)
+        })
+        .collect();
+
+    let mut sched = std::collections::BTreeMap::new();
+    sched.insert("ops".to_string(), arr_i32(&k.schedule.ops));
+    sched.insert("src_a".to_string(), arr_i32(&k.schedule.src_a));
+    sched.insert("src_b".to_string(), arr_i32(&k.schedule.src_b));
+    sched.insert("src_c".to_string(), arr_i32(&k.schedule.src_c));
+    sched.insert(
+        "imm_pool".to_string(),
+        JsonValue::Array(
+            k.schedule
+                .imm_pool
+                .iter()
+                .map(|&(col, bits)| {
+                    JsonValue::Array(vec![num(col), JsonValue::Number(bits as f64)])
+                })
+                .collect(),
+        ),
+    );
+    sched.insert("num_inputs".to_string(), num(k.schedule.num_inputs));
+    sched.insert("out_col".to_string(), arr_usize(&k.schedule.out_col));
+    let mut geom = std::collections::BTreeMap::new();
+    geom.insert("num_inputs".to_string(), num(k.schedule.geometry.num_inputs));
+    geom.insert("max_fus".to_string(), num(k.schedule.geometry.max_fus));
+    geom.insert("batch".to_string(), num(k.schedule.geometry.batch));
+    sched.insert("geometry".to_string(), JsonValue::Object(geom));
+
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("name".to_string(), JsonValue::String(k.name.clone()));
+    obj.insert("params".to_string(), JsonValue::Array(params));
+    obj.insert("factor".to_string(), num(k.factor));
+    obj.insert(
+        "limit".to_string(),
+        JsonValue::String(k.limit.short_name().to_string()),
+    );
+    obj.insert("ops_per_copy".to_string(), num(k.ops_per_copy));
+    obj.insert("fus".to_string(), num(k.fus));
+    obj.insert("n_inputs".to_string(), num(k.n_inputs));
+    obj.insert("n_outputs".to_string(), num(k.n_outputs));
+    obj.insert(
+        "input_meta".to_string(),
+        JsonValue::Array(k.input_meta.iter().map(meta_to_json).collect()),
+    );
+    obj.insert(
+        "output_meta".to_string(),
+        JsonValue::Array(k.output_meta.iter().map(meta_to_json).collect()),
+    );
+    obj.insert("out_latency".to_string(), arr_u32(&k.latency.out_latency));
+    obj.insert(
+        "pipeline_depth".to_string(),
+        JsonValue::Number(k.latency.pipeline_depth as f64),
+    );
+    obj.insert(
+        "max_delay_used".to_string(),
+        JsonValue::Number(k.latency.max_delay_used as f64),
+    );
+    obj.insert(
+        "bitstream".to_string(),
+        JsonValue::String(to_hex(&k.bitstream.to_bytes())),
+    );
+    obj.insert("schedule".to_string(), JsonValue::Object(sched));
+    JsonValue::Object(obj)
+}
+
+fn servable_from_json(v: &JsonValue) -> Result<ServableKernel> {
+    let params: Vec<Param> = get_arr(v, "params")?
+        .iter()
+        .map(|p| {
+            Ok(Param {
+                name: get_str(p, "name")?.to_string(),
+                ty: match get_str(p, "ty")? {
+                    "int" => Type::Int,
+                    "float" => Type::Float,
+                    "short" => Type::Short,
+                    other => bail!("unknown param type '{other}'"),
+                },
+                kind: match get_str(p, "kind")? {
+                    "global" => ParamKind::GlobalPtr,
+                    "scalar" => ParamKind::Scalar,
+                    other => bail!("unknown param kind '{other}'"),
+                },
+                is_const: p
+                    .get("is_const")
+                    .and_then(JsonValue::as_bool)
+                    .ok_or_else(|| anyhow!("param missing is_const"))?,
+            })
+        })
+        .collect::<Result<_>>()?;
+
+    let sched = v
+        .get("schedule")
+        .ok_or_else(|| anyhow!("snapshot kernel missing schedule"))?;
+    let geom_v = sched
+        .get("geometry")
+        .ok_or_else(|| anyhow!("schedule missing geometry"))?;
+    let geometry = EmuGeometry {
+        num_inputs: get_usize(geom_v, "num_inputs")?,
+        max_fus: get_usize(geom_v, "max_fus")?,
+        batch: get_usize(geom_v, "batch")?,
+    };
+    let imm_pool = get_arr(sched, "imm_pool")?
+        .iter()
+        .map(|pair| {
+            let items = pair
+                .as_array()
+                .filter(|a| a.len() == 2)
+                .ok_or_else(|| anyhow!("imm_pool entry is not a [col, bits] pair"))?;
+            let col = items[0]
+                .as_i64()
+                .filter(|&n| n >= 0)
+                .ok_or_else(|| anyhow!("imm_pool column is not a number"))?;
+            let bits = items[1]
+                .as_i64()
+                .ok_or_else(|| anyhow!("imm_pool bits is not a number"))?;
+            Ok((col as usize, bits as i32))
+        })
+        .collect::<Result<Vec<(usize, i32)>>>()?;
+    let schedule = SlotSchedule {
+        ops: read_i32s(sched, "ops")?,
+        src_a: read_i32s(sched, "src_a")?,
+        src_b: read_i32s(sched, "src_b")?,
+        src_c: read_i32s(sched, "src_c")?,
+        imm_pool,
+        num_inputs: get_usize(sched, "num_inputs")?,
+        out_col: read_usizes(sched, "out_col")?,
+        geometry,
+    };
+
+    let bitstream_bytes = from_hex(get_str(v, "bitstream")?)?;
+    let bitstream = OverlayBitstream::from_bytes(&bitstream_bytes)
+        .ok_or_else(|| anyhow!("snapshot bitstream is malformed"))?;
+
+    let limit_s = get_str(v, "limit")?;
+    let limit = LimitReason::from_short_name(limit_s)
+        .ok_or_else(|| anyhow!("unknown limit reason '{limit_s}'"))?;
+
+    let latency = LatencyReport {
+        delays: HashMap::new(),
+        op_output_time: HashMap::new(),
+        out_latency: read_u32s(v, "out_latency")?,
+        pipeline_depth: get_usize(v, "pipeline_depth")? as u32,
+        max_delay_used: get_usize(v, "max_delay_used")? as u32,
+    };
+
+    let k = ServableKernel {
+        name: get_str(v, "name")?.to_string(),
+        params,
+        factor: get_usize(v, "factor")?,
+        limit,
+        ops_per_copy: get_usize(v, "ops_per_copy")?,
+        fus: get_usize(v, "fus")?,
+        n_inputs: get_usize(v, "n_inputs")?,
+        n_outputs: get_usize(v, "n_outputs")?,
+        input_meta: metas_from_json(v, "input_meta")?,
+        output_meta: metas_from_json(v, "output_meta")?,
+        latency,
+        bitstream,
+        schedule,
+        compile_seconds: get_f64(v, "compile_seconds").unwrap_or(0.0),
+    };
+    validate_servable(&k)?;
+    Ok(k)
+}
+
+/// Cross-field invariants a well-typed but corrupted snapshot could
+/// violate. Serving such an entry would panic a partition worker
+/// (out-of-bounds argument or value-table indices) long after the
+/// load "succeeded" — fail the load instead.
+fn validate_servable(k: &ServableKernel) -> Result<()> {
+    if k.input_meta.len() != k.n_inputs || k.output_meta.len() != k.n_outputs {
+        bail!("kernel '{}': stream metadata count mismatch", k.name);
+    }
+    for m in k.input_meta.iter().chain(&k.output_meta) {
+        if m.param >= k.params.len() {
+            bail!(
+                "kernel '{}': stream meta references parameter {} of {}",
+                k.name,
+                m.param,
+                k.params.len()
+            );
+        }
+    }
+    let s = &k.schedule;
+    let n = s.ops.len();
+    if s.src_a.len() != n || s.src_b.len() != n || s.src_c.len() != n {
+        bail!("kernel '{}': ragged slot schedule", k.name);
+    }
+    if n > s.geometry.max_fus {
+        bail!("kernel '{}': {} op slots exceed the {}-slot geometry", k.name, n, s.geometry.max_fus);
+    }
+    let n_slots = s.geometry.num_slots();
+    let src_ok = |v: &[i32]| v.iter().all(|&x| x >= 0 && (x as usize) < n_slots);
+    if !src_ok(&s.src_a) || !src_ok(&s.src_b) || !src_ok(&s.src_c) {
+        bail!("kernel '{}': slot operand column out of range", k.name);
+    }
+    if !s.out_col.iter().all(|&c| c < n_slots)
+        || !s.imm_pool.iter().all(|&(c, _)| c < n_slots)
+    {
+        bail!("kernel '{}': output/immediate column out of range", k.name);
+    }
+    if k.factor == 0 || s.num_inputs != k.factor * k.n_inputs {
+        bail!(
+            "kernel '{}': schedule expects {} input streams, factor {} x {} inputs",
+            k.name,
+            s.num_inputs,
+            k.factor,
+            k.n_inputs
+        );
+    }
+    if s.out_col.len() != k.factor * k.n_outputs {
+        bail!(
+            "kernel '{}': schedule has {} output streams, factor {} x {} outputs",
+            k.name,
+            s.out_col.len(),
+            k.factor,
+            k.n_outputs
+        );
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -160,9 +649,9 @@ mod tests {
     use crate::compiler::JitCompiler;
     use crate::overlay::FuType;
 
-    fn compiled() -> Arc<CompiledKernel> {
+    fn compiled() -> Arc<ServableKernel> {
         let jit = JitCompiler::new(OverlaySpec::new(4, 4, FuType::Dsp2));
-        Arc::new(jit.compile(crate::bench_kernels::CHEBYSHEV).unwrap())
+        Arc::new(jit.compile(crate::bench_kernels::CHEBYSHEV).unwrap().servable())
     }
 
     fn key(tag: u64) -> CacheKey {
@@ -187,7 +676,7 @@ mod tests {
 
     #[test]
     fn hit_miss_counters() {
-        let mut cache = CompileCache::new(4);
+        let mut cache = KernelCache::new(4);
         let k = compiled();
         assert!(cache.get(&key(1)).is_none());
         cache.insert(key(1), k.clone());
@@ -200,7 +689,7 @@ mod tests {
 
     #[test]
     fn lru_eviction_is_deterministic() {
-        let mut cache = CompileCache::new(2);
+        let mut cache = KernelCache::new(2);
         let k = compiled();
         cache.insert(key(1), k.clone());
         cache.insert(key(2), k.clone());
@@ -213,7 +702,7 @@ mod tests {
         assert!(!cache.contains(&key(2)));
         assert_eq!(cache.stats().evictions, 1);
         // repeat the same sequence → same eviction decision
-        let mut c2 = CompileCache::new(2);
+        let mut c2 = KernelCache::new(2);
         c2.insert(key(1), k.clone());
         c2.insert(key(2), k.clone());
         assert!(c2.get(&key(1)).is_some());
@@ -222,7 +711,7 @@ mod tests {
 
     #[test]
     fn reinserting_resident_key_does_not_evict() {
-        let mut cache = CompileCache::new(2);
+        let mut cache = KernelCache::new(2);
         let k = compiled();
         cache.insert(key(1), k.clone());
         cache.insert(key(2), k.clone());
@@ -233,8 +722,104 @@ mod tests {
 
     #[test]
     fn zero_capacity_is_clamped() {
-        let cache = CompileCache::new(0);
+        let cache = KernelCache::new(0);
         assert_eq!(cache.capacity(), 1);
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn snapshot_round_trips_executable_kernels() {
+        let spec = OverlaySpec::new(4, 4, FuType::Dsp2);
+        let opts = CompileOptions::default();
+        let jit = JitCompiler::new(spec.clone());
+        let original = Arc::new(jit.compile(crate::bench_kernels::CHEBYSHEV).unwrap().servable());
+        let k = CacheKey::new(crate::bench_kernels::CHEBYSHEV, &spec, &opts);
+
+        let mut cache = KernelCache::new(8);
+        cache.insert(k, original.clone());
+        let path = std::env::temp_dir().join(format!(
+            "overlay-jit-snapshot-test-{}.json",
+            std::process::id()
+        ));
+        cache.save_snapshot(&path).unwrap();
+
+        let mut restored = KernelCache::new(8);
+        let n = restored
+            .load_snapshot(&path, spec.fingerprint(), opts.fingerprint())
+            .unwrap();
+        assert_eq!(n, 1);
+        let got = restored.get(&k).expect("restored entry resident");
+        assert_eq!(got.name, original.name);
+        assert_eq!(got.factor, original.factor);
+        assert_eq!(got.limit, original.limit);
+        assert_eq!(got.params, original.params);
+        assert_eq!(got.input_meta, original.input_meta);
+        assert_eq!(got.output_meta, original.output_meta);
+        assert_eq!(got.schedule, original.schedule);
+        assert_eq!(got.bitstream.to_bytes(), original.bitstream.to_bytes());
+        assert_eq!(got.latency.pipeline_depth, original.latency.pipeline_depth);
+        // restored entries are free: no JIT was paid
+        assert_eq!(got.compile_seconds, 0.0);
+
+        // a shard with a different spec fingerprint loads nothing
+        let mut other = KernelCache::new(8);
+        assert_eq!(other.load_snapshot(&path, 0xdead, opts.fingerprint()).unwrap(), 0);
+        assert!(other.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupted_snapshot_fails_the_load_not_the_worker() {
+        let spec = OverlaySpec::new(4, 4, FuType::Dsp2);
+        let opts = CompileOptions::default();
+        let mut cache = KernelCache::new(4);
+        cache.insert(CacheKey::new("src", &spec, &opts), compiled());
+        let path = std::env::temp_dir().join(format!(
+            "overlay-jit-snapshot-corrupt-test-{}.json",
+            std::process::id()
+        ));
+        cache.save_snapshot(&path).unwrap();
+        // well-typed but inconsistent: stream-metadata count no longer
+        // matches the declared input count
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"n_inputs\":1"), "fixture drifted: {text:.120}");
+        std::fs::write(&path, text.replace("\"n_inputs\":1", "\"n_inputs\":3")).unwrap();
+        let mut restored = KernelCache::new(4);
+        let err = restored
+            .load_snapshot(&path, spec.fingerprint(), opts.fingerprint())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+        assert!(restored.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn load_snapshot_respects_capacity() {
+        let spec = OverlaySpec::new(4, 4, FuType::Dsp2);
+        let opts = CompileOptions::default();
+        let k = compiled();
+        let mut big = KernelCache::new(8);
+        for tag in 0..4u64 {
+            big.insert(
+                CacheKey { source: tag, spec: spec.fingerprint(), options: opts.fingerprint() },
+                k.clone(),
+            );
+        }
+        let path = std::env::temp_dir().join(format!(
+            "overlay-jit-snapshot-cap-test-{}.json",
+            std::process::id()
+        ));
+        assert_eq!(big.save_snapshot(&path).unwrap(), 4);
+
+        // a smaller restarted cache keeps only what fits — no silent
+        // evictions, an honest loaded count
+        let mut small = KernelCache::new(2);
+        let n = small
+            .load_snapshot(&path, spec.fingerprint(), opts.fingerprint())
+            .unwrap();
+        assert_eq!(n, 2);
+        assert_eq!(small.len(), 2);
+        assert_eq!(small.stats().evictions, 0);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,31 +1,45 @@
 //! Asynchronous dispatch: one worker thread per overlay partition.
 //!
-//! Each partition owns an in-order work queue (an OpenCL command
-//! queue, in the paper's terms). `submit` is non-blocking: it routes
-//! the request through the slot-aware scheduler, enqueues a job on the
-//! chosen partition's channel and returns a [`DispatchHandle`] the
-//! caller can later `wait()` on. Workers drain their channel in
-//! batches — consecutive enqueues against an already-configured
-//! partition amortize the (already µs-class) configuration cost to
-//! zero, mirroring how the paper's runtime reuses a loaded overlay
-//! configuration across `clEnqueueNDRangeKernel` calls.
+//! Each partition owns an in-order, **two-lane** work queue (an OpenCL
+//! command queue with a QoS split, in the paper's terms): the
+//! interactive lane drains completely before any batch-lane job runs,
+//! so latency-sensitive dispatches never queue behind throughput work
+//! ([`crate::fleet::Priority`]). `submit` is non-blocking: it routes
+//! the request through the fleet router and the slot-aware scheduler,
+//! enqueues a job on the chosen partition's lane and returns a
+//! [`DispatchHandle`] the caller can later `wait()` on.
+//!
+//! Workers drain their queue in batches, and **fuse** consecutive
+//! drained jobs that share a kernel fingerprint into one wider
+//! simulator invocation: the per-copy input streams are concatenated
+//! along the item axis and executed in a single backend call, which
+//! amortizes dispatch overhead exactly the way the paper's runtime
+//! reuses a loaded overlay configuration across
+//! `clEnqueueNDRangeKernel` calls ([`ServeLog::fused_batches`] counts
+//! these). Outputs are split back per job, scattered into each job's
+//! own buffers and verified per job.
 //!
 //! Completion carries the same timing breakdown as a synchronous
 //! [`crate::runtime_ocl::Event`] (wall time, modeled configuration
 //! load, modeled II=1 overlay timing) plus serving metadata: queue
-//! wait, compile-cache hit flag, batch size, and the optional
-//! cycle-simulator verification verdict.
+//! wait, compile-cache hit flag, serving spec, priority class, batch
+//! and fusion sizes, and the optional cycle-simulator verification
+//! verdict. For a fused run the measured wall time spans from the
+//! run's pack start to each job's own scatter/verify completion; the
+//! modeled timing is always per job.
 
-use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
+use crate::fleet::Priority;
 use crate::runtime_ocl::{Backend, Buffer, Device, Event, Kernel};
 use crate::sim;
 
+use super::cache::CacheKey;
 use super::scheduler::SlotScheduler;
 
 /// An argument to [`crate::coordinator::Coordinator::submit`].
@@ -42,15 +56,25 @@ pub enum SubmitArg {
 #[derive(Debug, Clone)]
 pub struct DispatchResult {
     /// Timing breakdown identical to the synchronous runtime path.
+    /// For a fused run, `event.wall` spans from the run's pack start
+    /// to this job's scatter/verify completion (the fused backend
+    /// invocation is shared; scatter and verification are per job).
     pub event: Event,
     /// Partition (fleet index) that executed the dispatch.
     pub partition: usize,
-    /// Whether the compiled kernel came from the compile cache.
+    /// Overlay spec name (e.g. `"8x8-dsp2"`) that served the dispatch.
+    pub spec: String,
+    /// QoS lane the dispatch rode in.
+    pub priority: Priority,
+    /// Whether the compiled kernel came from the kernel cache.
     pub cache_hit: bool,
     /// Time spent queued before the worker picked the job up.
     pub queue_wait: Duration,
     /// Jobs drained in the same worker batch (≥ 1).
     pub batch_size: usize,
+    /// Same-kernel jobs co-executed in one backend invocation with
+    /// this one (≥ 1; > 1 means the dispatch was batch-fused).
+    pub fused: usize,
     /// `Some(true)` when the dispatch verified against the cycle
     /// simulator: the scattered output buffers hold the simulator's
     /// values bit-for-bit (and, on PJRT partitions, the backend's raw
@@ -62,14 +86,29 @@ pub struct DispatchResult {
 pub(crate) struct HandleInner {
     slot: Mutex<Option<Result<DispatchResult>>>,
     cv: Condvar,
+    /// Set by the first `fulfill`; later calls (the panic guards'
+    /// blanket error sweeps) are no-ops, so a delivered result is
+    /// never overwritten.
+    delivered: std::sync::atomic::AtomicBool,
 }
 
 impl HandleInner {
     pub(crate) fn new() -> Arc<HandleInner> {
-        Arc::new(HandleInner { slot: Mutex::new(None), cv: Condvar::new() })
+        Arc::new(HandleInner {
+            slot: Mutex::new(None),
+            cv: Condvar::new(),
+            delivered: std::sync::atomic::AtomicBool::new(false),
+        })
     }
 
+    /// Deliver the result exactly once; first caller wins.
     pub(crate) fn fulfill(&self, result: Result<DispatchResult>) {
+        if self
+            .delivered
+            .swap(true, std::sync::atomic::Ordering::SeqCst)
+        {
+            return;
+        }
         *self.slot.lock().unwrap() = Some(result);
         self.cv.notify_all();
     }
@@ -103,6 +142,11 @@ pub(crate) struct Job {
     pub kernel: Kernel,
     pub global_size: usize,
     pub partition: usize,
+    /// Kernel-cache key — jobs sharing it are fusion candidates.
+    pub key: CacheKey,
+    /// Serving spec name, echoed into the result.
+    pub spec: String,
+    pub priority: Priority,
     /// Modeled bitstream-load seconds charged by the scheduler
     /// (0.0 when the partition already held the configuration).
     pub config_seconds: f64,
@@ -111,9 +155,90 @@ pub(crate) struct Job {
     pub handle: Arc<HandleInner>,
 }
 
-pub(crate) enum Msg {
-    Job(Box<Job>),
-    Shutdown,
+/// A two-lane (interactive / batch) MPSC queue with blocking drain.
+/// Interactive jobs always drain ahead of batch jobs; `close` lets
+/// queued work finish, then wakes the worker to exit.
+pub(crate) struct LaneQueue<T> {
+    inner: Mutex<Lanes<T>>,
+    cv: Condvar,
+}
+
+struct Lanes<T> {
+    interactive: VecDeque<T>,
+    batch: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> LaneQueue<T> {
+    pub(crate) fn new() -> Arc<LaneQueue<T>> {
+        Arc::new(LaneQueue {
+            inner: Mutex::new(Lanes {
+                interactive: VecDeque::new(),
+                batch: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Enqueue; `Err(item)` back if the queue is closed (dead worker).
+    pub(crate) fn push(&self, item: T, priority: Priority) -> std::result::Result<(), T> {
+        let mut l = self.inner.lock().unwrap();
+        if l.closed {
+            return Err(item);
+        }
+        match priority {
+            Priority::Interactive => l.interactive.push_back(item),
+            Priority::Batch => l.batch.push_back(item),
+        }
+        drop(l);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Stop accepting work; the worker drains what's queued, then its
+    /// next `drain` returns `None`.
+    pub(crate) fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until work is available (interactive first, then batch)
+    /// or the queue is closed and empty (`None`).
+    pub(crate) fn drain(&self) -> Option<Vec<T>> {
+        let mut l = self.inner.lock().unwrap();
+        loop {
+            if !l.interactive.is_empty() || !l.batch.is_empty() {
+                let mut out: Vec<T> = l.interactive.drain(..).collect();
+                out.extend(l.batch.drain(..));
+                return Some(out);
+            }
+            if l.closed {
+                return None;
+            }
+            l = self.cv.wait(l).unwrap();
+        }
+    }
+
+    /// Non-blocking: drain only the interactive lane. Workers call
+    /// this before starting each batch-class fusion run so
+    /// interactive work that arrived after the batch was drained
+    /// still jumps the line.
+    pub(crate) fn take_interactive(&self) -> Vec<T> {
+        self.inner.lock().unwrap().interactive.drain(..).collect()
+    }
+
+    /// Close and return whatever was still queued (worker teardown:
+    /// the jobs never ran and must be failed, not dropped).
+    pub(crate) fn close_and_drain(&self) -> Vec<T> {
+        let mut l = self.inner.lock().unwrap();
+        l.closed = true;
+        let mut out: Vec<T> = l.interactive.drain(..).collect();
+        out.extend(l.batch.drain(..));
+        drop(l);
+        self.cv.notify_all();
+        out
+    }
 }
 
 /// Latency samples kept before the buffer halves its resolution —
@@ -132,9 +257,9 @@ pub(crate) struct ServeLog {
     pub total_dispatches: u64,
     pub verify_failures: u64,
     pub errors: u64,
-    /// Wall seconds of JIT compilation on cache misses (recorded by
-    /// the coordinator, not the workers).
-    pub compile_seconds: f64,
+    /// Worker batches in which ≥ 2 same-kernel jobs were fused into
+    /// one backend invocation.
+    pub fused_batches: u64,
 }
 
 impl Default for ServeLog {
@@ -147,7 +272,7 @@ impl Default for ServeLog {
             total_dispatches: 0,
             verify_failures: 0,
             errors: 0,
-            compile_seconds: 0.0,
+            fused_batches: 0,
         }
     }
 }
@@ -173,8 +298,51 @@ impl ServeLog {
 }
 
 pub(crate) struct Worker {
-    pub sender: Sender<Msg>,
+    pub queue: Arc<LaneQueue<Box<Job>>>,
     pub join: Option<thread::JoinHandle<()>>,
+}
+
+/// Fails whatever is still queued when the worker thread exits (panic
+/// included) so `wait()`ing callers see an error instead of hanging.
+/// Jobs already drained out of the queue are covered by
+/// [`BatchGuard`]; `fulfill` is first-wins, so the sweeps never
+/// clobber a delivered result.
+struct WorkerTeardown {
+    queue: Arc<LaneQueue<Box<Job>>>,
+    partition: usize,
+}
+
+impl Drop for WorkerTeardown {
+    fn drop(&mut self) {
+        for job in self.queue.close_and_drain() {
+            job.handle.fulfill(Err(anyhow!(
+                "partition {} worker terminated before running this dispatch",
+                self.partition
+            )));
+        }
+    }
+}
+
+/// Covers the jobs a worker has drained but not yet fulfilled: if the
+/// worker panics mid-batch (e.g. a poisoned mutex), every in-flight
+/// handle gets an error instead of leaving `wait()` blocked forever.
+struct BatchGuard {
+    partition: usize,
+    handles: Vec<Arc<HandleInner>>,
+}
+
+impl Drop for BatchGuard {
+    fn drop(&mut self) {
+        if !thread::panicking() {
+            return;
+        }
+        for h in &self.handles {
+            h.fulfill(Err(anyhow!(
+                "partition {} worker panicked before completing this dispatch",
+                self.partition
+            )));
+        }
+    }
 }
 
 pub(crate) fn spawn_worker(
@@ -184,120 +352,300 @@ pub(crate) fn spawn_worker(
     log: Arc<Mutex<ServeLog>>,
     verify: bool,
 ) -> Worker {
-    let (sender, receiver) = mpsc::channel::<Msg>();
+    let queue = LaneQueue::new();
+    let worker_queue = queue.clone();
     let join = thread::Builder::new()
         .name(format!("overlay-part{partition}"))
-        .spawn(move || worker_loop(partition, device, receiver, scheduler, log, verify))
+        .spawn(move || {
+            let _teardown = WorkerTeardown { queue: worker_queue.clone(), partition };
+            worker_loop(partition, device, worker_queue, scheduler, log, verify)
+        })
         .expect("spawning coordinator worker thread");
-    Worker { sender, join: Some(join) }
+    Worker { queue, join: Some(join) }
 }
 
 fn worker_loop(
     partition: usize,
     device: Device,
-    receiver: Receiver<Msg>,
+    queue: Arc<LaneQueue<Box<Job>>>,
     scheduler: Arc<Mutex<SlotScheduler>>,
     log: Arc<Mutex<ServeLog>>,
     verify: bool,
 ) {
-    loop {
-        // block for work, then drain whatever else queued up — the
-        // per-partition batch
-        let first = match receiver.recv() {
-            Ok(m) => m,
-            Err(_) => return, // coordinator dropped
+    while let Some(batch) = queue.drain() {
+        let batch_size = batch.len();
+        let mut guard = BatchGuard {
+            partition,
+            handles: batch.iter().map(|j| j.handle.clone()).collect(),
         };
-        let mut batch = vec![first];
-        while let Ok(m) = receiver.try_recv() {
-            batch.push(m);
-        }
-        let batch_size = batch.iter().filter(|m| matches!(m, Msg::Job(_))).count();
-        let mut shutdown = false;
-        for msg in batch {
-            match msg {
-                Msg::Shutdown => shutdown = true,
-                Msg::Job(job) => {
-                    let result = run_job(&device, &job, batch_size, verify);
-                    let busy = match &result {
-                        Ok(r) => r.event.modeled.seconds + r.event.config_seconds,
-                        Err(_) => 0.0,
-                    };
-                    scheduler.lock().unwrap().complete(partition, busy);
-                    {
-                        let mut lg = log.lock().unwrap();
-                        lg.total_dispatches += 1;
-                        match &result {
-                            Ok(r) => {
-                                let e2e = r.queue_wait + r.event.wall;
-                                lg.record_latency(e2e.as_secs_f64() * 1e3);
-                                lg.total_items += r.event.global_size as u64;
-                                if r.verified == Some(false) {
-                                    lg.verify_failures += 1;
-                                }
-                            }
-                            Err(_) => lg.errors += 1,
-                        }
+        let mut pending: VecDeque<(Vec<Box<Job>>, usize)> = group_runs(batch)
+            .into_iter()
+            .map(|r| (r, batch_size))
+            .collect();
+        while let Some((run, run_batch_size)) = pending.pop_front() {
+            // interactive work that arrived after this batch was
+            // drained jumps ahead of any batch-class run — the QoS
+            // guarantee holds across drains, not just within one
+            if run[0].priority == Priority::Batch {
+                let arrivals = queue.take_interactive();
+                if !arrivals.is_empty() {
+                    let n = arrivals.len();
+                    guard
+                        .handles
+                        .extend(arrivals.iter().map(|j| j.handle.clone()));
+                    pending.push_front((run, run_batch_size));
+                    for r in group_runs(arrivals).into_iter().rev() {
+                        pending.push_front((r, n));
                     }
-                    job.handle.fulfill(result);
+                    continue;
                 }
             }
-        }
-        if shutdown {
-            return;
+            let results = serve_run(&device, &run, run_batch_size, verify);
+            let live = results.iter().filter(|r| r.is_ok()).count();
+            if live >= 2 {
+                log.lock().unwrap().fused_batches += 1;
+            }
+            for (job, result) in run.into_iter().zip(results) {
+                let busy = match &result {
+                    Ok(r) => r.event.modeled.seconds + r.event.config_seconds,
+                    Err(_) => 0.0,
+                };
+                scheduler.lock().unwrap().complete(partition, busy);
+                {
+                    let mut lg = log.lock().unwrap();
+                    lg.total_dispatches += 1;
+                    match &result {
+                        Ok(r) => {
+                            let e2e = r.queue_wait + r.event.wall;
+                            lg.record_latency(e2e.as_secs_f64() * 1e3);
+                            lg.total_items += r.event.global_size as u64;
+                            if r.verified == Some(false) {
+                                lg.verify_failures += 1;
+                            }
+                        }
+                        Err(_) => lg.errors += 1,
+                    }
+                }
+                job.handle.fulfill(result);
+            }
         }
     }
 }
 
-/// Execute one dispatch on this worker's device and assemble the
-/// completion report.
-fn run_job(device: &Device, job: &Job, batch_size: usize, verify: bool) -> Result<DispatchResult> {
-    let queue_wait = job.enqueued.elapsed();
+/// Group a drained batch into fusion runs: maximal sequences of
+/// consecutive jobs sharing a kernel-cache key **and** priority
+/// class. Priority matters: fusing an interactive dispatch into a
+/// batch payload would make its completion wait on (and its wall
+/// time include) throughput work, voiding the QoS lanes.
+fn group_runs(batch: Vec<Box<Job>>) -> Vec<Vec<Box<Job>>> {
+    let mut runs: Vec<Vec<Box<Job>>> = Vec::new();
+    for job in batch {
+        let fuses = runs
+            .last()
+            .is_some_and(|run| run[0].key == job.key && run[0].priority == job.priority);
+        if fuses {
+            runs.last_mut().expect("non-empty runs").push(job);
+        } else {
+            runs.push(vec![job]);
+        }
+    }
+    runs
+}
+
+/// Execute one fusion run (1..N same-kernel jobs) on this worker's
+/// device in a single backend invocation and assemble the per-job
+/// completion reports (index-aligned with `run`).
+fn serve_run(
+    device: &Device,
+    run: &[Box<Job>],
+    batch_size: usize,
+    verify: bool,
+) -> Vec<Result<DispatchResult>> {
+    let queue_waits: Vec<Duration> = run.iter().map(|j| j.enqueued.elapsed()).collect();
+    // wall clock covers the whole serve — pack, execute, cross-check,
+    // and (per job) scatter + verification — matching the synchronous
+    // runtime path's event semantics
     let t0 = Instant::now();
-    let k = &job.kernel.compiled;
+    // pack each job's argument buffers into per-copy input streams
+    let packed: Vec<Result<(Vec<Vec<i32>>, usize)>> = run
+        .iter()
+        .map(|j| j.kernel.pack_streams(j.global_size))
+        .collect();
+    let live: Vec<usize> = (0..run.len()).filter(|&i| packed[i].is_ok()).collect();
 
-    let (streams, chunk) = job.kernel.pack_streams(job.global_size)?;
-    let outs = match &device.backend {
-        Backend::CycleSim => sim::execute(&k.schedule, &streams, chunk)?,
-        Backend::Pjrt(rt) => rt.execute_overlay(&k.schedule, &streams, chunk)?,
-    };
-    job.kernel.scatter_outputs(&outs, job.global_size);
-
-    // verification: for PJRT partitions, re-execute on the cycle
-    // simulator and require bit-exact agreement (the serving-path
-    // analogue of the backend agreement suite); on cycle-sim
-    // partitions `outs` *is* the simulator's output, so the cross
-    // check is free. Either way, read the scattered buffers back and
-    // require them to hold the simulator-verified values exactly —
-    // this catches pack/scatter indexing bugs, which a re-execution
-    // alone cannot.
-    let verified = if verify {
-        let cross = match &device.backend {
-            Backend::CycleSim => true,
-            Backend::Pjrt(_) => sim::execute(&k.schedule, &streams, chunk)? == outs,
-        };
-        Some(cross && job.kernel.outputs_match(&outs, job.global_size))
+    // one backend invocation over the concatenated streams
+    let exec: Result<(Vec<Vec<i32>>, bool)> = if live.is_empty() {
+        Err(anyhow!("no dispatch in this run packed successfully"))
     } else {
-        None
+        let k = &run[live[0]].kernel.compiled;
+        let n_streams = packed[live[0]].as_ref().unwrap().0.len();
+        let total: usize = live.iter().map(|&i| packed[i].as_ref().unwrap().1).sum();
+        let mut fused: Vec<Vec<i32>> = Vec::with_capacity(n_streams);
+        for s in 0..n_streams {
+            let mut col = Vec::with_capacity(total);
+            for &i in &live {
+                col.extend_from_slice(&packed[i].as_ref().unwrap().0[s]);
+            }
+            fused.push(col);
+        }
+        let executed = match &device.backend {
+            Backend::CycleSim => sim::execute(&k.schedule, &fused, total),
+            Backend::Pjrt(rt) => rt.execute_overlay(&k.schedule, &fused, total),
+        };
+        match executed {
+            Err(e) => Err(e),
+            Ok(outs) => {
+                // cross-check: PJRT partitions re-execute on the cycle
+                // simulator and must agree stream-for-stream; on
+                // cycle-sim partitions `outs` *is* the simulator's
+                // output, so the cross check is free.
+                let cross = if verify {
+                    match &device.backend {
+                        Backend::CycleSim => Ok(true),
+                        Backend::Pjrt(_) => {
+                            sim::execute(&k.schedule, &fused, total).map(|s| s == outs)
+                        }
+                    }
+                } else {
+                    Ok(true)
+                };
+                match cross {
+                    Ok(c) => Ok((outs, c)),
+                    Err(e) => Err(e),
+                }
+            }
+        }
     };
 
-    let modeled = sim::timing(
-        &device.spec,
-        &k.latency,
-        k.plan.factor,
-        k.ops_per_copy(),
-        job.global_size as u64,
-    );
-    Ok(DispatchResult {
-        event: Event {
-            wall: t0.elapsed(),
-            config_seconds: job.config_seconds,
-            modeled,
-            global_size: job.global_size,
-        },
-        partition: job.partition,
-        cache_hit: job.cache_hit,
-        queue_wait,
-        batch_size,
-        verified,
-    })
+    // split outputs per job, scatter, verify, report
+    let mut results: Vec<Result<DispatchResult>> = Vec::with_capacity(run.len());
+    match exec {
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for p in packed {
+                results.push(match p {
+                    Err(pack_err) => Err(pack_err),
+                    Ok(_) => Err(anyhow!("{msg}")),
+                });
+            }
+        }
+        Ok((outs, cross)) => {
+            let fused_count = live.len();
+            let mut off = 0usize;
+            for (i, p) in packed.into_iter().enumerate() {
+                match p {
+                    Err(pack_err) => results.push(Err(pack_err)),
+                    Ok((_, chunk)) => {
+                        let job = &run[i];
+                        let outs_j: Vec<Vec<i32>> =
+                            outs.iter().map(|s| s[off..off + chunk].to_vec()).collect();
+                        off += chunk;
+                        job.kernel.scatter_outputs(&outs_j, job.global_size);
+                        // read the scattered buffers back and require
+                        // the simulator-verified values exactly — this
+                        // catches pack/scatter/fusion indexing bugs a
+                        // re-execution alone cannot.
+                        let verified = if verify {
+                            Some(cross && job.kernel.outputs_match(&outs_j, job.global_size))
+                        } else {
+                            None
+                        };
+                        let k = &job.kernel.compiled;
+                        let modeled = sim::timing(
+                            &device.spec,
+                            &k.latency,
+                            k.factor,
+                            k.ops_per_copy,
+                            job.global_size as u64,
+                        );
+                        results.push(Ok(DispatchResult {
+                            event: Event {
+                                wall: t0.elapsed(),
+                                config_seconds: job.config_seconds,
+                                modeled,
+                                global_size: job.global_size,
+                            },
+                            partition: job.partition,
+                            spec: job.spec.clone(),
+                            priority: job.priority,
+                            cache_hit: job.cache_hit,
+                            queue_wait: queue_waits[i],
+                            batch_size,
+                            fused: fused_count,
+                            verified,
+                        }));
+                    }
+                }
+            }
+        }
+    }
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_queue_drains_interactive_before_batch() {
+        let q: Arc<LaneQueue<i32>> = LaneQueue::new();
+        q.push(1, Priority::Batch).unwrap();
+        q.push(2, Priority::Interactive).unwrap();
+        q.push(3, Priority::Batch).unwrap();
+        q.push(4, Priority::Interactive).unwrap();
+        let drained = q.drain().unwrap();
+        // interactive lane first (FIFO within a lane), then batch
+        assert_eq!(drained, vec![2, 4, 1, 3]);
+    }
+
+    #[test]
+    fn closed_queue_rejects_pushes_and_drains_remainder() {
+        let q: Arc<LaneQueue<i32>> = LaneQueue::new();
+        q.push(1, Priority::Interactive).unwrap();
+        q.close();
+        assert_eq!(q.push(2, Priority::Interactive), Err(2));
+        // queued work still drains, then the worker sees shutdown
+        assert_eq!(q.drain(), Some(vec![1]));
+        assert_eq!(q.drain(), None);
+    }
+
+    #[test]
+    fn take_interactive_skips_the_batch_lane() {
+        let q: Arc<LaneQueue<i32>> = LaneQueue::new();
+        q.push(1, Priority::Batch).unwrap();
+        q.push(2, Priority::Interactive).unwrap();
+        assert_eq!(q.take_interactive(), vec![2]);
+        assert_eq!(q.take_interactive(), Vec::<i32>::new());
+        // the batch job is still queued
+        assert_eq!(q.drain(), Some(vec![1]));
+    }
+
+    #[test]
+    fn close_and_drain_returns_leftovers() {
+        let q: Arc<LaneQueue<i32>> = LaneQueue::new();
+        q.push(1, Priority::Batch).unwrap();
+        q.push(2, Priority::Interactive).unwrap();
+        assert_eq!(q.close_and_drain(), vec![2, 1]);
+        assert_eq!(q.drain(), None);
+    }
+
+    #[test]
+    fn drain_blocks_until_work_arrives() {
+        let q: Arc<LaneQueue<i32>> = LaneQueue::new();
+        let q2 = q.clone();
+        let t = thread::spawn(move || q2.drain());
+        thread::sleep(Duration::from_millis(10));
+        q.push(7, Priority::Batch).unwrap();
+        assert_eq!(t.join().unwrap(), Some(vec![7]));
+    }
+
+    #[test]
+    fn latency_log_decimates_at_capacity() {
+        let mut log = ServeLog::default();
+        for i in 0..(MAX_LATENCY_SAMPLES + 10) {
+            log.record_latency(i as f64);
+        }
+        assert!(log.latencies_ms.len() <= MAX_LATENCY_SAMPLES);
+        assert!(log.latencies_ms.len() > MAX_LATENCY_SAMPLES / 4);
+    }
 }

@@ -4,73 +4,83 @@
 //! The paper's claim is that seconds-class JIT compilation plus
 //! µs-class overlay reconfiguration make *run-time* kernel management
 //! practical. This module is that management layer: a serving front
-//! end that owns a fleet of overlay partitions and turns the two paper
-//! numbers into steady-state throughput:
+//! end that owns a — possibly **heterogeneous** — fleet of overlay
+//! partitions and turns the two paper numbers into steady-state
+//! throughput:
 //!
-//! * [`CompileCache`] — a **compile cache** keyed by (source hash,
-//!   overlay fingerprint, options fingerprint): repeat builds are
-//!   O(lookup) instead of the Fig. 7 seconds;
+//! * [`crate::fleet::Fleet`] — one **compilation shard** per distinct
+//!   [`OverlaySpec`] ([`KernelCache`] + `JitCompiler`, keyed by spec
+//!   fingerprint) plus a **resource-aware router** that places small
+//!   kernels on small overlays and wide data-parallel kernels where
+//!   `copies × throughput` peaks;
 //! * [`SlotScheduler`] — a **slot-aware scheduler** that treats
-//!   configured partitions as a cache: dispatches land on a partition
-//!   already holding the kernel's bitstream when possible, otherwise
-//!   an idle LRU victim pays the modeled
-//!   [`ConfigSizeModel`] load cost (42.4 µs for the 8×8 overlay);
+//!   configured partitions as a cache: dispatches land on a
+//!   same-spec partition already holding the kernel's bitstream when
+//!   possible, otherwise an idle victim (batch-class residents first)
+//!   pays the modeled [`ConfigSizeModel`] load cost;
 //! * [`DispatchHandle`] — an **async dispatch queue**: one worker
-//!   thread per partition, per-partition batching, completion handles
-//!   carrying the same timing breakdown as synchronous
-//!   [`crate::runtime_ocl`] events plus an optional cycle-simulator
-//!   verification verdict.
+//!   thread per partition with two QoS lanes (interactive drains
+//!   first), same-kernel batch fusion, completion handles carrying
+//!   the same timing breakdown as synchronous [`crate::runtime_ocl`]
+//!   events plus an optional cycle-simulator verification verdict.
 //!
 //! ```text
-//! submit(source, args, n) ──┐
-//!                           ▼
-//!                  compile cache ── miss ──▶ JitCompiler (seconds)
-//!                       │ hit                      │
-//!                       ▼                          ▼
-//!                 slot-aware scheduler  ◀── CompiledKernel
-//!                  │ resident? │ victim (LRU, + config µs)
-//!                  ▼           ▼
-//!         partition 0 queue   partition 1 queue   …   (worker threads)
-//!                  ▼           ▼
-//!             DispatchHandle.wait() → DispatchResult
+//! submit(source, args, n, priority) ──┐
+//!                                     ▼
+//!                        fleet router (per-spec replication plans,
+//!                         queue depths, reconfiguration cost)
+//!                    8x8 shard │              │ 4x4 shard
+//!                              ▼              ▼
+//!                    kernel cache ── miss ──▶ JitCompiler (seconds)
+//!                        │ hit                     │
+//!                        ▼                         ▼
+//!                  slot-aware scheduler  ◀── ServableKernel
+//!                   │ resident? │ victim (batch-first, + config µs)
+//!                   ▼           ▼
+//!        partition queues (interactive lane ▶ batch lane) per spec
+//!                   ▼
+//!              DispatchHandle.wait() → DispatchResult (spec, fused…)
 //! ```
-//!
-//! The fleet must currently be homogeneous (identical
-//! [`OverlaySpec`]s): a compiled kernel's placement, routing and
-//! bitstream are spec-bound, so heterogeneous partition sizes need
-//! per-spec compilation — an explicit ROADMAP follow-on.
 
 mod cache;
 mod dispatch;
 mod scheduler;
 
-pub use cache::{CacheKey, CompileCache};
+pub use cache::{CacheKey, CompileCache, KernelCache};
 pub use dispatch::{DispatchHandle, DispatchResult, SubmitArg};
 pub use scheduler::{Decision, PartitionState, SlotScheduler};
 
-/// Re-exported for convenience: the compile-cache counters live in
-/// [`crate::metrics`] with the rest of the serving statistics.
+/// Re-exported from [`crate::fleet`]: the QoS class of a dispatch and
+/// the routing knobs.
+pub use crate::fleet::{Priority, RoutingPolicy};
+
+/// Re-exported for convenience: the serving statistics live in
+/// [`crate::metrics`].
 pub use crate::metrics::CacheStats;
 
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::compiler::{CompileOptions, JitCompiler};
-use crate::metrics::{LatencyStats, PartitionServingStats, ServingStats};
+use crate::compiler::CompileOptions;
+use crate::fleet::{Fleet, RouteRecord, Router, SpecObservation};
+use crate::metrics::{
+    LatencyStats, PartitionServingStats, ServingStats, SpecServingStats,
+};
 use crate::overlay::{ConfigSizeModel, OverlaySpec};
 use crate::runtime_ocl::{Device, Kernel, Platform};
 
-use dispatch::{HandleInner, Job, Msg, ServeLog, Worker};
+use dispatch::{HandleInner, Job, ServeLog, Worker};
 
 /// Configuration of a serving fleet.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
-    /// The overlay partitions (devices) to serve across. All must
-    /// share one [`OverlaySpec`] for now (see module docs).
+    /// The overlay partitions (devices) to serve across. Specs may be
+    /// mixed freely: partitions are grouped into per-spec shards.
     pub devices: Vec<Device>,
-    /// Maximum compiled kernels held by the compile cache.
+    /// Maximum compiled kernels held by **each** spec's kernel cache.
     pub cache_capacity: usize,
     /// JIT options used for every compile (part of the cache key).
     pub compile_options: CompileOptions,
@@ -80,6 +90,13 @@ pub struct CoordinatorConfig {
     /// simulator and require raw-stream agreement). Recorded in
     /// [`DispatchResult::verified`].
     pub verify: bool,
+    /// Resource-aware routing knobs (see [`RoutingPolicy`]).
+    pub routing: RoutingPolicy,
+    /// When set, warm-start every shard's kernel cache from the
+    /// snapshot files under this directory at construction (missing
+    /// files are fine). Write snapshots with
+    /// [`Coordinator::save_snapshot`].
+    pub snapshot_dir: Option<PathBuf>,
 }
 
 impl CoordinatorConfig {
@@ -90,6 +107,22 @@ impl CoordinatorConfig {
             cache_capacity: 32,
             compile_options: CompileOptions::default(),
             verify: true,
+            routing: RoutingPolicy::default(),
+            snapshot_dir: None,
+        }
+    }
+
+    /// A heterogeneous cycle-simulated fleet: `n` partitions per
+    /// overlay spec, e.g. `[(8×8, 2), (4×4, 2)]` — the mixed fleet
+    /// the resource-aware router places kernels across.
+    pub fn sim_fleet_mixed(groups: Vec<(OverlaySpec, usize)>) -> CoordinatorConfig {
+        CoordinatorConfig {
+            devices: Platform::sim_mixed(&groups).devices().to_vec(),
+            cache_capacity: 32,
+            compile_options: CompileOptions::default(),
+            verify: true,
+            routing: RoutingPolicy::default(),
+            snapshot_dir: None,
         }
     }
 
@@ -100,6 +133,8 @@ impl CoordinatorConfig {
             cache_capacity: 32,
             compile_options: CompileOptions::default(),
             verify: true,
+            routing: RoutingPolicy::default(),
+            snapshot_dir: None,
         }
     }
 }
@@ -112,9 +147,8 @@ impl Default for CoordinatorConfig {
 
 /// The multi-overlay serving coordinator. See module docs.
 pub struct Coordinator {
-    jit: JitCompiler,
-    spec: OverlaySpec,
-    cache: Mutex<CompileCache>,
+    fleet: Fleet,
+    router: Mutex<Router>,
     scheduler: Arc<Mutex<SlotScheduler>>,
     log: Arc<Mutex<ServeLog>>,
     workers: Vec<Worker>,
@@ -124,35 +158,50 @@ pub struct Coordinator {
 
 impl std::fmt::Debug for Coordinator {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let specs: Vec<String> =
+            self.fleet.shards().iter().map(|s| s.spec().name()).collect();
         f.debug_struct("Coordinator")
-            .field("overlay", &self.spec.name())
+            .field("specs", &specs)
             .field("partitions", &self.partition_names)
             .finish()
     }
 }
 
 impl Coordinator {
-    /// Bring a fleet up: one JIT compiler (and routing-resource graph)
-    /// for the shared spec, one worker thread per partition.
+    /// Bring a fleet up: one compilation shard (JIT compiler, routing
+    /// resource graph, kernel cache) per distinct spec, one worker
+    /// thread per partition.
     pub fn new(config: CoordinatorConfig) -> Result<Coordinator> {
-        let CoordinatorConfig { devices, cache_capacity, compile_options, verify } = config;
+        let CoordinatorConfig {
+            devices,
+            cache_capacity,
+            compile_options,
+            verify,
+            routing,
+            snapshot_dir,
+        } = config;
         if devices.is_empty() {
             bail!("coordinator needs at least one overlay partition");
         }
-        let spec = devices[0].spec.clone();
-        for d in &devices[1..] {
-            if d.spec.fingerprint() != spec.fingerprint() {
-                bail!(
-                    "heterogeneous fleet: partition '{}' is {} but the fleet is {} — \
-                     per-spec compilation is not implemented yet (see ROADMAP)",
-                    d.name,
-                    d.spec.name(),
-                    spec.name()
-                );
+        // group partitions by spec fingerprint, first-seen order
+        let mut groups: Vec<(OverlaySpec, Vec<usize>)> = Vec::new();
+        for (i, d) in devices.iter().enumerate() {
+            match groups
+                .iter_mut()
+                .find(|(s, _)| s.fingerprint() == d.spec.fingerprint())
+            {
+                Some((_, parts)) => parts.push(i),
+                None => groups.push((d.spec.clone(), vec![i])),
             }
         }
-        let jit = JitCompiler::with_options(spec.clone(), compile_options);
-        let scheduler = Arc::new(Mutex::new(SlotScheduler::new(devices.len())));
+        let fleet = Fleet::new(groups, &compile_options, cache_capacity)?;
+        if let Some(dir) = &snapshot_dir {
+            fleet.load_snapshot(dir)?;
+        }
+        let scheduler = Arc::new(Mutex::new(SlotScheduler::with_specs(
+            devices.iter().map(|d| d.spec.fingerprint()).collect(),
+        )));
+        let router = Mutex::new(Router::new(routing));
         let log = Arc::new(Mutex::new(ServeLog::default()));
         let partition_names: Vec<String> = devices.iter().map(|d| d.name.clone()).collect();
         let workers: Vec<Worker> = devices
@@ -161,9 +210,8 @@ impl Coordinator {
             .map(|(i, d)| dispatch::spawn_worker(i, d, scheduler.clone(), log.clone(), verify))
             .collect();
         Ok(Coordinator {
-            jit,
-            spec,
-            cache: Mutex::new(CompileCache::new(cache_capacity)),
+            fleet,
+            router,
             scheduler,
             log,
             workers,
@@ -172,9 +220,14 @@ impl Coordinator {
         })
     }
 
-    /// The fleet's shared overlay description.
+    /// The fleet's primary (first-configured) overlay description.
     pub fn spec(&self) -> &OverlaySpec {
-        &self.spec
+        self.fleet.shards()[0].spec()
+    }
+
+    /// Every distinct overlay spec served, in shard order.
+    pub fn specs(&self) -> Vec<OverlaySpec> {
+        self.fleet.shards().iter().map(|s| s.spec().clone()).collect()
     }
 
     /// Number of partitions served.
@@ -182,39 +235,92 @@ impl Coordinator {
         self.workers.len()
     }
 
-    /// Asynchronously serve one kernel dispatch: cache-or-compile,
-    /// schedule onto a partition, enqueue, return a completion handle.
+    /// Asynchronously serve one kernel dispatch: route to a spec
+    /// (resource-aware), cache-or-compile on that spec's shard,
+    /// schedule onto a same-spec partition, enqueue on its priority
+    /// lane, return a completion handle.
     pub fn submit(
         &self,
         source: &str,
         args: &[SubmitArg],
         global_size: usize,
+        priority: Priority,
     ) -> Result<DispatchHandle> {
-        let key = CacheKey::new(source, &self.spec, &self.jit.options);
+        let profile = self.fleet.profile(source)?;
 
-        let cached = self.cache.lock().unwrap().get(&key);
-        let (compiled, cache_hit) = match cached {
-            Some(k) => (k, true),
-            None => {
-                // the seconds-class step — paid once per distinct
-                // (source, overlay, options)
-                let t0 = Instant::now();
-                let k = Arc::new(self.jit.compile(source)?);
-                self.log.lock().unwrap().compile_seconds += t0.elapsed().as_secs_f64();
-                self.cache.lock().unwrap().insert(key, k.clone());
-                (k, false)
-            }
+        // per-spec observations (queue depth, residency) under one
+        // scheduler lock, merged with the profile's plans
+        let mut observations: Vec<SpecObservation> = {
+            let sched = self.scheduler.lock().unwrap();
+            self.fleet
+                .shards()
+                .iter()
+                .enumerate()
+                .map(|(i, shard)| {
+                    let key = shard.cache_key_for_hash(profile.source_hash);
+                    let (min_queue_depth, resident) =
+                        sched.observe(shard.fingerprint(), &key);
+                    let fit = profile.fits[i];
+                    SpecObservation {
+                        fingerprint: shard.fingerprint(),
+                        spec: shard.spec().name(),
+                        fits: fit.is_some(),
+                        adequate: false,
+                        factor: fit.map(|f| f.factor).unwrap_or(0),
+                        limit: fit.map(|f| f.limit),
+                        gops: fit.map(|f| f.gops).unwrap_or(0.0),
+                        peak_gops: shard.spec().peak_gops(),
+                        min_queue_depth,
+                        resident,
+                        config_seconds: shard.config_seconds_estimate(),
+                    }
+                })
+                .collect()
         };
 
-        if args.len() != compiled.params.len() {
+        let (ranked, reason, copies_wanted) =
+            self.router
+                .lock()
+                .unwrap()
+                .rank(&profile, &mut observations, global_size)?;
+
+        // cache-or-compile on the ranked shards; a compile failure
+        // poisons that (kernel, spec) pair and falls through
+        let mut chosen = None;
+        let mut fallback = false;
+        let mut last_err: Option<anyhow::Error> = None;
+        for &si in &ranked {
+            match self.fleet.shards()[si].get_or_compile(source) {
+                Ok(hit) => {
+                    chosen = Some((si, hit));
+                    break;
+                }
+                Err(e) => {
+                    self.fleet.mark_unfit(profile.source_hash, si);
+                    fallback = true;
+                    last_err = Some(e);
+                }
+            }
+        }
+        let Some((shard_index, (servable, cache_hit, key))) = chosen else {
+            return Err(last_err
+                .unwrap_or_else(|| anyhow!("no routable overlay spec"))
+                .context(format!(
+                    "kernel '{}' failed to compile on every candidate spec",
+                    profile.name
+                )));
+        };
+        let shard = &self.fleet.shards()[shard_index];
+
+        if args.len() != servable.params.len() {
             bail!(
                 "kernel '{}' takes {} arguments, got {}",
-                compiled.name,
-                compiled.params.len(),
+                servable.name,
+                servable.params.len(),
                 args.len()
             );
         }
-        let kernel = Kernel::from_compiled(compiled.clone());
+        let kernel = Kernel::from_servable(servable.clone());
         for (i, a) in args.iter().enumerate() {
             match a {
                 SubmitArg::Buffer(b) => kernel.set_arg(i, b)?,
@@ -222,38 +328,96 @@ impl Coordinator {
             }
         }
 
-        let config_cost =
-            ConfigSizeModel::overlay_config_seconds(&self.spec, compiled.bitstream.byte_size());
-        let decision = self.scheduler.lock().unwrap().pick(key, config_cost);
+        let config_cost = ConfigSizeModel::overlay_config_seconds(
+            shard.spec(),
+            servable.bitstream.byte_size(),
+        );
+        let decision =
+            self.scheduler
+                .lock()
+                .unwrap()
+                .pick(shard.fingerprint(), key, config_cost, priority);
 
         let handle = HandleInner::new();
         let job = Job {
             kernel,
             global_size,
             partition: decision.partition,
+            key,
+            spec: shard.spec().name(),
+            priority,
             config_seconds: decision.config_seconds,
             cache_hit,
             enqueued: Instant::now(),
             handle: handle.clone(),
         };
         if self.workers[decision.partition]
-            .sender
-            .send(Msg::Job(Box::new(job)))
+            .queue
+            .push(Box::new(job), priority)
             .is_err()
         {
             // dead worker: the dispatch never ran, undo its accounting
+            // (the route record is only committed below, on success)
             self.scheduler.lock().unwrap().cancel(&decision);
             bail!("partition {} worker is gone", decision.partition);
         }
+
+        self.router.lock().unwrap().commit(
+            RouteRecord {
+                kernel: profile.name.clone(),
+                source_hash: profile.source_hash,
+                global_size,
+                copies_wanted,
+                chosen: shard.fingerprint(),
+                chosen_spec: shard.spec().name(),
+                reason,
+                fallback,
+                priority,
+                specs: observations,
+            },
+            servable.factor,
+        );
         Ok(DispatchHandle { inner: handle })
     }
 
     /// Snapshot of the serving statistics.
     pub fn stats(&self) -> ServingStats {
-        let cache = self.cache.lock().unwrap().stats();
         let sched = self.scheduler.lock().unwrap();
         let log = self.log.lock().unwrap();
+        let router = self.router.lock().unwrap();
         let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
+
+        let mut cache = CacheStats::default();
+        let mut compile_seconds = 0.0;
+        let mut per_spec = Vec::with_capacity(self.fleet.shards().len());
+        for shard in self.fleet.shards() {
+            let c = shard.cache_stats();
+            cache.hits += c.hits;
+            cache.misses += c.misses;
+            cache.evictions += c.evictions;
+            cache.entries += c.entries;
+            cache.capacity += c.capacity;
+            let cs = shard.compile_seconds();
+            compile_seconds += cs;
+            let r = router.spec_stats(shard.fingerprint());
+            per_spec.push(SpecServingStats {
+                spec: shard.spec().name(),
+                fingerprint: shard.fingerprint(),
+                partitions: shard.partitions().len(),
+                cache: c,
+                compile_seconds: cs,
+                routed: r.map_or(0, |r| r.routed),
+                best_fit: r.map_or(0, |r| r.best_fit),
+                widest: r.map_or(0, |r| r.widest),
+                only_fit: r.map_or(0, |r| r.only_fit),
+                fallbacks: r.map_or(0, |r| r.fallbacks),
+                cross_spec_hits: shard.cross_spec_hits(),
+                replication_histogram: r.map_or_else(Vec::new, |r| {
+                    r.histogram.iter().map(|(&f, &n)| (f, n)).collect()
+                }),
+            });
+        }
+
         let partitions = sched
             .partitions()
             .iter()
@@ -267,18 +431,37 @@ impl Coordinator {
                 utilization: (p.busy_seconds / elapsed).min(1.0),
             })
             .collect();
+
         ServingStats {
             cache,
             reconfig_count: sched.reconfig_count(),
             reconfig_seconds: sched.reconfig_seconds,
             latency: LatencyStats::from_samples_ms(log.latencies_ms.clone()),
             partitions,
+            per_spec,
             total_dispatches: log.total_dispatches,
             total_items: log.total_items,
             verify_failures: log.verify_failures,
             dispatch_errors: log.errors,
-            compile_seconds: log.compile_seconds,
+            fused_batches: log.fused_batches,
+            compile_seconds,
         }
+    }
+
+    /// The retained routing decisions (oldest first, bounded by
+    /// [`RoutingPolicy::max_records`]) with the per-spec observations
+    /// each was made from — the audit trail the fleet tests assert
+    /// placement properties on.
+    pub fn routing_log(&self) -> Vec<RouteRecord> {
+        self.router.lock().unwrap().records().to_vec()
+    }
+
+    /// Persist every shard's kernel cache under `dir` (one JSON file
+    /// per spec). A fleet constructed with
+    /// [`CoordinatorConfig::snapshot_dir`] pointing here warm-starts
+    /// with these kernels resident. Returns entries written.
+    pub fn save_snapshot(&self, dir: &Path) -> Result<usize> {
+        self.fleet.save_snapshot(dir)
     }
 
     /// Graceful shutdown: finish queued work, stop workers. (Also
@@ -289,7 +472,7 @@ impl Coordinator {
 impl Drop for Coordinator {
     fn drop(&mut self) {
         for w in &self.workers {
-            let _ = w.sender.send(Msg::Shutdown);
+            w.queue.close();
         }
         for w in &mut self.workers {
             if let Some(j) = w.join.take() {
@@ -308,6 +491,7 @@ pub fn wait_all(handles: Vec<DispatchHandle>) -> Result<Vec<DispatchResult>> {
 mod tests {
     use super::*;
     use crate::bench_kernels::{CHEBYSHEV, POLY1};
+    use crate::overlay::FuType;
     use crate::runtime_ocl::{Backend, Context};
 
     fn cheb_ref(x: i32) -> i32 {
@@ -343,7 +527,12 @@ mod tests {
             let xs: Vec<i32> = (0..n as i32).map(|i| (i % 11) - 5 + round).collect();
             a.write(&xs);
             let h = coord
-                .submit(CHEBYSHEV, &[SubmitArg::Buffer(a), SubmitArg::Buffer(b.clone())], n)
+                .submit(
+                    CHEBYSHEV,
+                    &[SubmitArg::Buffer(a), SubmitArg::Buffer(b.clone())],
+                    n,
+                    Priority::Interactive,
+                )
                 .unwrap();
             handles.push(h);
             outputs.push((xs, b));
@@ -353,6 +542,7 @@ mod tests {
         assert!(!results[0].cache_hit, "first dispatch must compile");
         assert!(results[1].cache_hit && results[2].cache_hit);
         assert!(results.iter().all(|r| r.verified == Some(true)));
+        assert!(results.iter().all(|r| r.spec == "8x8-dsp2"));
         for (xs, b) in outputs {
             let out = b.read();
             for (x, y) in xs.iter().zip(&out) {
@@ -365,6 +555,9 @@ mod tests {
         assert_eq!(stats.total_dispatches, 3);
         assert_eq!(stats.verify_failures, 0);
         assert!(stats.cache.hit_rate() > 0.6);
+        assert_eq!(stats.per_spec.len(), 1);
+        assert_eq!(stats.per_spec[0].routed, 3);
+        assert_eq!(stats.per_spec[0].cross_spec_hits, 0);
         coord.shutdown();
     }
 
@@ -383,7 +576,7 @@ mod tests {
                     SubmitArg::Buffer(b)
                 })
                 .collect();
-            coord.submit(src, &args, n).unwrap()
+            coord.submit(src, &args, n, Priority::Interactive).unwrap()
         };
         let r1 = submit(CHEBYSHEV, 2).wait().unwrap();
         let r2 = submit(POLY1, 2).wait().unwrap();
@@ -406,16 +599,46 @@ mod tests {
         let coord =
             Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1))
                 .unwrap();
-        let err = coord.submit(CHEBYSHEV, &[], 16).unwrap_err().to_string();
+        let err = coord
+            .submit(CHEBYSHEV, &[], 16, Priority::Interactive)
+            .unwrap_err()
+            .to_string();
         assert!(err.contains("takes 2 arguments"), "{err}");
     }
 
     #[test]
-    fn heterogeneous_fleet_is_rejected() {
+    fn heterogeneous_fleet_is_served_by_per_spec_shards() {
+        // a mixed 8×8 + 4×4 fleet comes up and serves both specs —
+        // the capability the homogeneous coordinator used to reject
         let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2);
-        cfg.devices[1].spec = OverlaySpec::new(4, 4, crate::overlay::FuType::Dsp2);
-        let err = Coordinator::new(cfg).unwrap_err().to_string();
-        assert!(err.contains("heterogeneous"), "{err}");
+        cfg.devices[1].spec = OverlaySpec::new(4, 4, FuType::Dsp2);
+        let coord = Coordinator::new(cfg).unwrap();
+        assert_eq!(coord.specs().len(), 2);
+        let ctx = host_ctx();
+        let n = 64;
+        let a = ctx.create_buffer(n + 8);
+        let b = ctx.create_buffer(n + 8);
+        a.write(&(0..(n as i32) + 8).map(|i| i % 7 - 3).collect::<Vec<_>>());
+        // a small dispatch best-fits the 4×4 tier
+        let r = coord
+            .submit(
+                CHEBYSHEV,
+                &[SubmitArg::Buffer(a), SubmitArg::Buffer(b.clone())],
+                n,
+                Priority::Interactive,
+            )
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.spec, "4x4-dsp2");
+        assert_eq!(r.verified, Some(true));
+        let out = b.read();
+        for i in 0..n as i32 {
+            assert_eq!(out[i as usize], cheb_ref(i % 7 - 3));
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.per_spec.len(), 2);
+        assert!(stats.per_spec.iter().all(|s| s.cross_spec_hits == 0));
     }
 
     #[test]
@@ -425,7 +648,58 @@ mod tests {
             cache_capacity: 4,
             compile_options: CompileOptions::default(),
             verify: false,
+            routing: RoutingPolicy::default(),
+            snapshot_dir: None,
         };
         assert!(Coordinator::new(cfg).is_err());
+    }
+
+    #[test]
+    fn snapshot_warm_starts_a_restarted_coordinator() {
+        let dir = std::env::temp_dir().join(format!(
+            "overlay-jit-coord-snapshot-{}",
+            std::process::id()
+        ));
+        let ctx = host_ctx();
+        let n = 128;
+        let submit_cheb = |coord: &Coordinator| {
+            let a = ctx.create_buffer(n);
+            let b = ctx.create_buffer(n);
+            a.write(&(0..n as i32).map(|i| i % 9 - 4).collect::<Vec<_>>());
+            coord
+                .submit(
+                    CHEBYSHEV,
+                    &[SubmitArg::Buffer(a), SubmitArg::Buffer(b.clone())],
+                    n,
+                    Priority::Interactive,
+                )
+                .unwrap()
+                .wait()
+                .unwrap();
+            b
+        };
+        {
+            let coord = Coordinator::new(CoordinatorConfig::sim_fleet(
+                OverlaySpec::zynq_default(),
+                1,
+            ))
+            .unwrap();
+            submit_cheb(&coord);
+            assert_eq!(coord.save_snapshot(&dir).unwrap(), 1);
+        }
+        // restart: the warm fleet serves the kernel without compiling
+        let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+        cfg.snapshot_dir = Some(dir.clone());
+        let warm = Coordinator::new(cfg).unwrap();
+        let b = submit_cheb(&warm);
+        let out = b.read();
+        for i in 0..n as i32 {
+            assert_eq!(out[i as usize], cheb_ref(i % 9 - 4));
+        }
+        let stats = warm.stats();
+        assert_eq!(stats.cache.misses, 0, "warm start must not compile");
+        assert_eq!(stats.cache.hits, 1);
+        assert_eq!(stats.compile_seconds, 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -10,19 +10,34 @@
 //! 1. **Affinity** — prefer a partition whose resident bitstream
 //!    matches the request (least queue depth among them);
 //! 2. **Cold fill** — otherwise prefer a never-configured partition;
-//! 3. **Victim** — otherwise evict by (queue depth, last-use) — an
-//!    idle, least-recently-used partition gives up its configuration.
+//! 3. **Victim** — otherwise evict by (queue depth, priority class,
+//!    last-use): an idle partition holding only **batch**-class work
+//!    gives up its configuration before one serving interactive
+//!    kernels, then least-recently-used wins.
+//!
+//! In a heterogeneous fleet every partition carries the
+//! [`crate::overlay::OverlaySpec::fingerprint`] it was built from and
+//! a dispatch only ever lands on a partition matching its compiled
+//! spec — a bitstream for one geometry cannot configure another.
 //!
 //! All decisions are deterministic: logical-clock timestamps are
 //! unique and ties fall back to the lowest partition index.
+
+use crate::fleet::Priority;
 
 use super::cache::CacheKey;
 
 /// Mutable serving state of one overlay partition.
 #[derive(Debug, Clone)]
 pub struct PartitionState {
+    /// Spec fingerprint this partition was built from; only kernels
+    /// compiled for the same fingerprint may run here.
+    pub spec_fingerprint: u64,
     /// Cache key of the kernel whose bitstream is currently loaded.
     pub loaded: Option<CacheKey>,
+    /// Priority class of the most recent dispatch of the loaded
+    /// kernel — batch-only partitions are preferred eviction victims.
+    pub loaded_class: Priority,
     /// Logical time of the last dispatch routed here.
     pub last_used: u64,
     /// Dispatches enqueued but not yet completed.
@@ -34,9 +49,11 @@ pub struct PartitionState {
 }
 
 impl PartitionState {
-    fn new() -> PartitionState {
+    fn new(spec_fingerprint: u64) -> PartitionState {
         PartitionState {
+            spec_fingerprint,
             loaded: None,
+            loaded_class: Priority::Batch,
             last_used: 0,
             queue_depth: 0,
             dispatches: 0,
@@ -57,7 +74,8 @@ pub struct Decision {
     pub config_seconds: f64,
 }
 
-/// Slot-aware scheduler over a fleet of identical overlay partitions.
+/// Slot-aware scheduler over a fleet of overlay partitions (possibly
+/// spanning several specs).
 #[derive(Debug)]
 pub struct SlotScheduler {
     parts: Vec<PartitionState>,
@@ -67,9 +85,21 @@ pub struct SlotScheduler {
 }
 
 impl SlotScheduler {
+    /// A homogeneous scheduler (every partition fingerprint 0); pass
+    /// spec fingerprint 0 to [`SlotScheduler::pick`].
     pub fn new(partitions: usize) -> SlotScheduler {
+        SlotScheduler::with_specs(vec![0; partitions.max(1)])
+    }
+
+    /// One partition per entry, carrying its overlay-spec fingerprint.
+    pub fn with_specs(spec_fingerprints: Vec<u64>) -> SlotScheduler {
+        let fps = if spec_fingerprints.is_empty() {
+            vec![0]
+        } else {
+            spec_fingerprints
+        };
         SlotScheduler {
-            parts: vec![PartitionState::new(); partitions.max(1)],
+            parts: fps.into_iter().map(PartitionState::new).collect(),
             clock: 0,
             reconfig_seconds: 0.0,
         }
@@ -84,30 +114,76 @@ impl SlotScheduler {
         self.parts.iter().map(|p| p.reconfigs).sum()
     }
 
-    /// Route one dispatch of the kernel identified by `key`.
-    /// `config_seconds_if_load` is the modeled cost of loading its
-    /// bitstream (paid only when no partition already holds it).
-    pub fn pick(&mut self, key: CacheKey, config_seconds_if_load: f64) -> Decision {
+    /// What the router sees of one spec's partitions: the shallowest
+    /// queue and whether some partition already holds `key`'s
+    /// bitstream.
+    pub fn observe(&self, spec: u64, key: &CacheKey) -> (usize, bool) {
+        let mut min_queue = usize::MAX;
+        let mut resident = false;
+        for p in self.parts.iter().filter(|p| p.spec_fingerprint == spec) {
+            min_queue = min_queue.min(p.queue_depth);
+            if p.loaded == Some(*key) {
+                resident = true;
+            }
+        }
+        (if min_queue == usize::MAX { 0 } else { min_queue }, resident)
+    }
+
+    /// Route one dispatch of the kernel identified by `key` onto a
+    /// partition of the matching `spec`. `config_seconds_if_load` is
+    /// the modeled cost of loading its bitstream (paid only when no
+    /// matching partition already holds it).
+    ///
+    /// # Panics
+    /// If no partition carries `spec` — the coordinator only ever
+    /// routes to specs its fleet was built with.
+    pub fn pick(
+        &mut self,
+        spec: u64,
+        key: CacheKey,
+        config_seconds_if_load: f64,
+        priority: Priority,
+    ) -> Decision {
         self.clock += 1;
+        let cand: Vec<usize> = (0..self.parts.len())
+            .filter(|&i| self.parts[i].spec_fingerprint == spec)
+            .collect();
+        assert!(
+            !cand.is_empty(),
+            "no partition matches spec fingerprint {spec:#018x}"
+        );
 
         // 1) affinity: a partition already configured with this kernel
-        let resident = (0..self.parts.len())
+        let resident = cand
+            .iter()
+            .copied()
             .filter(|&i| self.parts[i].loaded == Some(key))
             .min_by_key(|&i| (self.parts[i].queue_depth, self.parts[i].last_used, i));
 
         let (idx, reconfigure) = if let Some(i) = resident {
             (i, false)
-        } else if let Some(i) = (0..self.parts.len())
+        } else if let Some(i) = cand
+            .iter()
+            .copied()
             .filter(|&i| self.parts[i].loaded.is_none())
             .min_by_key(|&i| (self.parts[i].queue_depth, i))
         {
             // 2) cold fill: a never-configured partition
             (i, true)
         } else {
-            // 3) victim: idle-most, then least recently used
-            let i = (0..self.parts.len())
-                .min_by_key(|&i| (self.parts[i].queue_depth, self.parts[i].last_used, i))
-                .expect("scheduler has at least one partition");
+            // 3) victim: idle-most, batch-class first, then LRU
+            let i = cand
+                .iter()
+                .copied()
+                .min_by_key(|&i| {
+                    (
+                        self.parts[i].queue_depth,
+                        self.parts[i].loaded_class == Priority::Interactive,
+                        self.parts[i].last_used,
+                        i,
+                    )
+                })
+                .expect("scheduler has at least one matching partition");
             (i, true)
         };
 
@@ -115,6 +191,7 @@ impl SlotScheduler {
         p.last_used = self.clock;
         p.queue_depth += 1;
         p.dispatches += 1;
+        p.loaded_class = priority;
         let config_seconds = if reconfigure {
             p.loaded = Some(key);
             p.reconfigs += 1;
@@ -157,15 +234,19 @@ mod tests {
         CacheKey { source: tag, spec: 7, options: 7 }
     }
 
+    fn pick(s: &mut SlotScheduler, tag: u64, cost: f64) -> Decision {
+        s.pick(0, key(tag), cost, Priority::Interactive)
+    }
+
     #[test]
     fn affinity_beats_reconfiguration() {
         let mut s = SlotScheduler::new(2);
-        let a = s.pick(key(1), 42e-6);
+        let a = pick(&mut s, 1, 42e-6);
         assert!(a.reconfigure);
         assert_eq!(a.config_seconds, 42e-6);
         s.complete(a.partition, 1e-3);
         // same kernel again → same partition, no reconfig
-        let b = s.pick(key(1), 42e-6);
+        let b = pick(&mut s, 1, 42e-6);
         assert_eq!(b.partition, a.partition);
         assert!(!b.reconfigure);
         assert_eq!(b.config_seconds, 0.0);
@@ -174,8 +255,8 @@ mod tests {
     #[test]
     fn cold_partitions_fill_before_eviction() {
         let mut s = SlotScheduler::new(2);
-        let a = s.pick(key(1), 1e-6);
-        let b = s.pick(key(2), 1e-6);
+        let a = pick(&mut s, 1, 1e-6);
+        let b = pick(&mut s, 2, 1e-6);
         assert_ne!(a.partition, b.partition);
         assert!(a.reconfigure && b.reconfigure);
         assert_eq!(s.reconfig_count(), 2);
@@ -184,20 +265,20 @@ mod tests {
     #[test]
     fn victim_is_idle_lru_partition() {
         let mut s = SlotScheduler::new(2);
-        let a = s.pick(key(1), 1e-6); // p0 ← k1
-        let b = s.pick(key(2), 1e-6); // p1 ← k2
+        let a = pick(&mut s, 1, 1e-6); // p0 ← k1
+        let b = pick(&mut s, 2, 1e-6); // p1 ← k2
         s.complete(a.partition, 0.0);
         s.complete(b.partition, 0.0);
         // touch k1 so its partition is most recently used
-        let c = s.pick(key(1), 1e-6);
+        let c = pick(&mut s, 1, 1e-6);
         s.complete(c.partition, 0.0);
         // a third kernel must evict k2's partition (LRU)
-        let d = s.pick(key(3), 1e-6);
+        let d = pick(&mut s, 3, 1e-6);
         assert_eq!(d.partition, b.partition);
         assert!(d.reconfigure);
         // k2 was evicted: dispatching it again reconfigures somewhere
         s.complete(d.partition, 0.0);
-        let e = s.pick(key(2), 1e-6);
+        let e = pick(&mut s, 2, 1e-6);
         assert!(e.reconfigure);
     }
 
@@ -205,21 +286,21 @@ mod tests {
     fn contention_prefers_shallow_queues() {
         let mut s = SlotScheduler::new(3);
         // two partitions resident with k1, one busy
-        let a = s.pick(key(1), 1e-6); // p0 ← k1, depth 1
-        let b = s.pick(key(2), 1e-6); // p1 ← k2, depth 1
+        let a = pick(&mut s, 1, 1e-6); // p0 ← k1, depth 1
+        let b = pick(&mut s, 2, 1e-6); // p1 ← k2, depth 1
         let _ = b;
         s.complete(a.partition, 0.0); // p0 idle again
         // k1 resident on p0 only; p0 idle → affinity hit on p0
-        let c = s.pick(key(1), 1e-6);
+        let c = pick(&mut s, 1, 1e-6);
         assert_eq!(c.partition, a.partition);
         assert!(!c.reconfigure);
         // now p0 busy (depth 1). another k1 dispatch: p0 still the only
         // resident partition; affinity keeps it there (queue depth 2)
-        let d = s.pick(key(1), 1e-6);
+        let d = pick(&mut s, 1, 1e-6);
         assert_eq!(d.partition, a.partition);
         assert!(!d.reconfigure);
         // a brand-new kernel goes to the cold p2, not the busy ones
-        let e = s.pick(key(3), 1e-6);
+        let e = pick(&mut s, 3, 1e-6);
         assert_eq!(e.partition, 2);
         assert!(e.reconfigure);
     }
@@ -227,7 +308,7 @@ mod tests {
     #[test]
     fn cancel_reverses_pick_accounting() {
         let mut s = SlotScheduler::new(1);
-        let d = s.pick(key(1), 3e-6);
+        let d = pick(&mut s, 1, 3e-6);
         assert_eq!(s.partitions()[0].queue_depth, 1);
         assert_eq!(s.reconfig_count(), 1);
         s.cancel(&d);
@@ -241,7 +322,7 @@ mod tests {
     #[test]
     fn busy_time_and_queue_depths_account() {
         let mut s = SlotScheduler::new(1);
-        let a = s.pick(key(1), 2e-6);
+        let a = pick(&mut s, 1, 2e-6);
         assert_eq!(s.partitions()[0].queue_depth, 1);
         s.complete(a.partition, 5e-3);
         let p = &s.partitions()[0];
@@ -249,5 +330,56 @@ mod tests {
         assert!((p.busy_seconds - 5e-3).abs() < 1e-12);
         assert!((s.reconfig_seconds - 2e-6).abs() < 1e-15);
         assert_eq!(p.dispatches, 1);
+    }
+
+    #[test]
+    fn dispatches_only_land_on_matching_spec_partitions() {
+        // partitions 0,1 are spec A; partition 2 is spec B
+        let mut s = SlotScheduler::with_specs(vec![0xA, 0xA, 0xB]);
+        for tag in 0..6 {
+            let d = s.pick(0xA, key(tag), 1e-6, Priority::Interactive);
+            assert!(d.partition < 2, "spec A dispatch on partition {}", d.partition);
+            s.complete(d.partition, 0.0);
+        }
+        let d = s.pick(0xB, key(9), 1e-6, Priority::Interactive);
+        assert_eq!(d.partition, 2);
+        // observe() is per spec
+        let (q_a, _) = s.observe(0xA, &key(0));
+        let (q_b, _) = s.observe(0xB, &key(9));
+        assert_eq!(q_a, 0);
+        assert_eq!(q_b, 1);
+    }
+
+    #[test]
+    fn observe_reports_residency_and_min_queue() {
+        let mut s = SlotScheduler::new(2);
+        let (q, resident) = s.observe(0, &key(1));
+        assert_eq!((q, resident), (0, false));
+        let d = s.pick(0, key(1), 1e-6, Priority::Interactive);
+        let (q, resident) = s.observe(0, &key(1));
+        // one partition busy, the other idle → min queue 0, resident
+        assert_eq!((q, resident), (0, true));
+        s.complete(d.partition, 0.0);
+        // an unknown spec fingerprint observes an empty fleet
+        assert_eq!(s.observe(0xFFF, &key(1)), (0, false));
+    }
+
+    #[test]
+    fn batch_only_partitions_are_preferred_victims() {
+        let mut s = SlotScheduler::new(2);
+        // p0 holds a batch-class kernel, p1 an interactive one; make
+        // p0 the *most* recently used so plain LRU would spare it
+        let a = s.pick(0, key(1), 1e-6, Priority::Interactive); // p0 ← k1 (interactive)
+        let b = s.pick(0, key(2), 1e-6, Priority::Batch); // p1 ← k2 (batch)
+        s.complete(a.partition, 0.0);
+        s.complete(b.partition, 0.0);
+        let c = s.pick(0, key(2), 1e-6, Priority::Batch); // touch batch partition (MRU)
+        s.complete(c.partition, 0.0);
+        assert_eq!(c.partition, b.partition);
+        // new kernel: the batch-class partition is evicted despite
+        // being most recently used
+        let d = s.pick(0, key(3), 1e-6, Priority::Interactive);
+        assert_eq!(d.partition, b.partition);
+        assert!(d.reconfigure);
     }
 }

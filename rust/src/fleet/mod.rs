@@ -1,0 +1,316 @@
+//! Heterogeneous overlay fleet: per-spec compilation shards plus a
+//! resource-aware router.
+//!
+//! The paper's resource-aware replication (§III-C) sizes a kernel to
+//! *one* overlay; this module scales the idea to a **fleet of
+//! different overlays**. A [`Fleet`] owns one [`CompileShard`] per
+//! distinct [`OverlaySpec`] — its own [`crate::compiler::JitCompiler`]
+//! (routing-resource graph included) and
+//! [`crate::coordinator::KernelCache`], keyed by
+//! [`OverlaySpec::fingerprint`] — and a per-kernel [`KernelProfile`]
+//! cache holding the replication plan the kernel gets on every spec
+//! (factor, [`crate::replicate::LimitReason`], FU/IO demand, modeled
+//! GOPS), computed once by the compile-free front-half analysis
+//! ([`crate::compiler::JitCompiler::plan_kernel`]).
+//!
+//! The [`Router`] turns those profiles plus live queue/residency
+//! observations into placements: small kernels onto the smallest
+//! adequate overlay, wide data-parallel kernels onto the spec where
+//! `copies × throughput` peaks, queue depth and modeled
+//! reconfiguration cost as tie-breakers. The
+//! [`crate::coordinator::Coordinator`] drives the whole thing; this
+//! module deliberately knows nothing about worker threads or dispatch
+//! queues, which keeps every routing decision unit-testable.
+
+mod policy;
+mod router;
+mod shard;
+
+pub use policy::{Priority, RoutingPolicy};
+pub use router::{
+    KernelProfile, PlanSummary, RouteReason, RouteRecord, Router, SpecObservation,
+    SpecRouteStats,
+};
+pub use shard::CompileShard;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context as _, Result};
+
+use crate::compiler::{stable_source_hash, CompileOptions};
+use crate::metrics::achieved_gops;
+use crate::overlay::OverlaySpec;
+
+/// Kernel profiles retained at once. Profiles are µs-class to
+/// recompute, so past this bound new kernels are simply analyzed per
+/// submit instead of cached — the serving layer's memory stays flat
+/// however many distinct sources a long-running fleet sees.
+const MAX_PROFILES: usize = 4096;
+
+/// A heterogeneous set of per-spec compilation shards.
+pub struct Fleet {
+    shards: Vec<CompileShard>,
+    /// Kernel source hash → per-spec plans (aligned with `shards`),
+    /// bounded by [`MAX_PROFILES`].
+    profiles: Mutex<HashMap<u64, KernelProfile>>,
+}
+
+impl std::fmt::Debug for Fleet {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let specs: Vec<String> = self.shards.iter().map(|s| s.spec().name()).collect();
+        f.debug_struct("Fleet").field("specs", &specs).finish()
+    }
+}
+
+impl Fleet {
+    /// Build one shard per group. Groups must carry distinct spec
+    /// fingerprints (the coordinator merges duplicates before calling
+    /// this) and at least one partition each.
+    pub fn new(
+        groups: Vec<(OverlaySpec, Vec<usize>)>,
+        options: &CompileOptions,
+        cache_capacity: usize,
+    ) -> Result<Fleet> {
+        if groups.is_empty() {
+            bail!("fleet needs at least one overlay spec");
+        }
+        let mut shards: Vec<CompileShard> = Vec::with_capacity(groups.len());
+        for (spec, partitions) in groups {
+            if partitions.is_empty() {
+                bail!("spec {} has no partitions", spec.name());
+            }
+            if shards
+                .iter()
+                .any(|s| s.fingerprint() == spec.fingerprint())
+            {
+                bail!("duplicate spec {} in fleet groups", spec.name());
+            }
+            shards.push(CompileShard::new(
+                spec,
+                options.clone(),
+                cache_capacity,
+                partitions,
+            ));
+        }
+        Ok(Fleet { shards, profiles: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn shards(&self) -> &[CompileShard] {
+        &self.shards
+    }
+
+    /// Shard index for a spec fingerprint.
+    pub fn shard_index(&self, fingerprint: u64) -> Option<usize> {
+        self.shards.iter().position(|s| s.fingerprint() == fingerprint)
+    }
+
+    /// The kernel's per-spec replication profile, computed on first
+    /// sight (µs-class — no placement or routing) and cached under
+    /// the stable source hash. Errors only when the kernel fits no
+    /// spec in the fleet.
+    pub fn profile(&self, source: &str) -> Result<KernelProfile> {
+        let hash = stable_source_hash(source);
+        if let Some(p) = self.profiles.lock().unwrap().get(&hash) {
+            return Ok(p.clone());
+        }
+        let mut fits: Vec<Option<PlanSummary>> = Vec::with_capacity(self.shards.len());
+        let mut name = None;
+        let mut ops_per_copy = 0;
+        let mut first_err = None;
+        for shard in &self.shards {
+            match shard.jit.plan_kernel(source) {
+                Ok(kp) => {
+                    let gops =
+                        achieved_gops(kp.plan.factor, kp.ops_per_copy, shard.spec().fmax_mhz());
+                    if name.is_none() {
+                        name = Some(kp.name.clone());
+                        ops_per_copy = kp.ops_per_copy;
+                    }
+                    fits.push(Some(PlanSummary {
+                        factor: kp.plan.factor,
+                        limit: kp.plan.limit,
+                        fus_per_copy: kp.plan.fus_per_copy,
+                        io_per_copy: kp.plan.io_per_copy,
+                        gops,
+                    }));
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                    fits.push(None);
+                }
+            }
+        }
+        let Some(name) = name else {
+            return Err(first_err
+                .expect("at least one shard was analyzed")
+                .context("kernel fits no overlay spec in the fleet"));
+        };
+        let p = KernelProfile { name, source_hash: hash, ops_per_copy, fits };
+        let mut map = self.profiles.lock().unwrap();
+        if map.len() < MAX_PROFILES || map.contains_key(&hash) {
+            map.insert(hash, p.clone());
+        }
+        Ok(p)
+    }
+
+    /// Mark a (kernel, shard) pair unfit after a compile failure so
+    /// the router stops offering that spec for this kernel. The
+    /// compiler is a pure function of (source, spec, options), so one
+    /// failure predicts all retries; a no-op when the profile was not
+    /// retained (the bounded cache was full), in which case the
+    /// router's compile-fallback ranking still serves the kernel.
+    pub fn mark_unfit(&self, source_hash: u64, shard_index: usize) {
+        if let Some(p) = self.profiles.lock().unwrap().get_mut(&source_hash) {
+            if shard_index < p.fits.len() {
+                p.fits[shard_index] = None;
+            }
+        }
+    }
+
+    fn snapshot_path(&self, dir: &Path, shard: &CompileShard) -> PathBuf {
+        dir.join(format!("shard-{:016x}.json", shard.fingerprint()))
+    }
+
+    /// Persist every shard's kernel cache under `dir` (one JSON file
+    /// per spec fingerprint). Returns total entries written (counted
+    /// by the serializer itself, so the number matches the files even
+    /// under concurrent inserts).
+    pub fn save_snapshot(&self, dir: &Path) -> Result<usize> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating snapshot dir {}", dir.display()))?;
+        let mut total = 0;
+        for shard in &self.shards {
+            total += shard.save_snapshot(&self.snapshot_path(dir, shard))?;
+        }
+        Ok(total)
+    }
+
+    /// Warm-start every shard whose snapshot file exists under `dir`.
+    /// Missing files are fine (new spec in an existing deployment);
+    /// malformed files are errors. Returns total entries loaded.
+    pub fn load_snapshot(&self, dir: &Path) -> Result<usize> {
+        let mut total = 0;
+        for shard in &self.shards {
+            let path = self.snapshot_path(dir, shard);
+            if path.exists() {
+                total += shard.load_snapshot(&path)?;
+            }
+        }
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_kernels::{CHEBYSHEV, QSPLINE};
+    use crate::overlay::FuType;
+    use crate::replicate::LimitReason;
+
+    fn mixed_fleet() -> Fleet {
+        Fleet::new(
+            vec![
+                (OverlaySpec::zynq_default(), vec![0, 1]),
+                (OverlaySpec::new(4, 4, FuType::Dsp2), vec![2, 3]),
+            ],
+            &CompileOptions::default(),
+            16,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn profiles_report_per_spec_replication() {
+        let fleet = mixed_fleet();
+        let p = fleet.profile(CHEBYSHEV).unwrap();
+        assert_eq!(p.name, "chebyshev");
+        assert_eq!(p.fits.len(), 2);
+        let big = p.fits[0].unwrap();
+        let small = p.fits[1].unwrap();
+        // §IV: 16 copies I/O-limited on 8×8; 16 FUs / 3 per copy = 5
+        // FU-limited on 4×4
+        assert_eq!(big.factor, 16);
+        assert_eq!(big.limit, LimitReason::Io);
+        assert_eq!(small.factor, 5);
+        assert_eq!(small.limit, LimitReason::Fu);
+        assert!(big.gops > small.gops);
+        // cached: second call returns the same profile
+        let q = fleet.profile(CHEBYSHEV).unwrap();
+        assert_eq!(q.source_hash, p.source_hash);
+    }
+
+    #[test]
+    fn kernels_may_fit_only_a_subset_of_specs() {
+        let fleet = Fleet::new(
+            vec![
+                (OverlaySpec::zynq_default(), vec![0]),
+                (OverlaySpec::new(2, 2, FuType::Dsp2), vec![1]),
+            ],
+            &CompileOptions::default(),
+            16,
+        )
+        .unwrap();
+        // qspline is the largest benchmark: it cannot fit a 2×2
+        let p = fleet.profile(QSPLINE).unwrap();
+        assert!(p.fits[0].is_some());
+        assert!(p.fits[1].is_none());
+    }
+
+    #[test]
+    fn mark_unfit_removes_a_spec_from_the_profile() {
+        let fleet = mixed_fleet();
+        let p = fleet.profile(CHEBYSHEV).unwrap();
+        fleet.mark_unfit(p.source_hash, 1);
+        let q = fleet.profile(CHEBYSHEV).unwrap();
+        assert!(q.fits[0].is_some());
+        assert!(q.fits[1].is_none());
+    }
+
+    #[test]
+    fn duplicate_or_empty_groups_are_rejected() {
+        let dup = Fleet::new(
+            vec![
+                (OverlaySpec::zynq_default(), vec![0]),
+                (OverlaySpec::zynq_default(), vec![1]),
+            ],
+            &CompileOptions::default(),
+            4,
+        );
+        assert!(dup.is_err());
+        assert!(Fleet::new(vec![], &CompileOptions::default(), 4).is_err());
+        let no_parts = Fleet::new(
+            vec![(OverlaySpec::zynq_default(), vec![])],
+            &CompileOptions::default(),
+            4,
+        );
+        assert!(no_parts.is_err());
+    }
+
+    #[test]
+    fn snapshot_round_trips_across_fleets() {
+        let dir = std::env::temp_dir().join(format!(
+            "overlay-jit-fleet-snapshot-{}",
+            std::process::id()
+        ));
+        let fleet = mixed_fleet();
+        // populate both shards with chebyshev
+        fleet.shards()[0].get_or_compile(CHEBYSHEV).unwrap();
+        fleet.shards()[1].get_or_compile(CHEBYSHEV).unwrap();
+        let written = fleet.save_snapshot(&dir).unwrap();
+        assert_eq!(written, 2);
+
+        let warm = mixed_fleet();
+        let loaded = warm.load_snapshot(&dir).unwrap();
+        assert_eq!(loaded, 2);
+        // both shards now serve from cache without compiling
+        let (_, hit_big, _) = warm.shards()[0].get_or_compile(CHEBYSHEV).unwrap();
+        let (_, hit_small, _) = warm.shards()[1].get_or_compile(CHEBYSHEV).unwrap();
+        assert!(hit_big && hit_small);
+        assert_eq!(warm.shards()[0].compile_seconds(), 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

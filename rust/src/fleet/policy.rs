@@ -1,0 +1,72 @@
+//! Routing policy: the knobs that decide where a dispatch lands.
+//!
+//! The router's job is matching a kernel's *parallelism demand* to an
+//! overlay's *parallelism supply*. Supply is the resource-aware
+//! replication factor (§III-C): how many copies of the kernel the
+//! spec's FU count, perimeter I/O pads and backend limits admit.
+//! Demand is derived from the dispatch size: a request for
+//! `global_size` work-items "wants" roughly `global_size /
+//! target_chunk` kernel copies — fewer copies than that and the
+//! per-copy stream grows past the target; more and the extra copies
+//! idle on short streams. A spec whose factor meets the demand is
+//! *adequate*; among adequate specs the router prefers the least
+//! loaded, then the **smallest** (lowest peak GOPS) — small kernels
+//! must not squat on the big overlays the wide data-parallel kernels
+//! need.
+
+/// Scheduling class of a dispatch (the QoS lane it queues in).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive: drains before any batch work on the same
+    /// partition.
+    Interactive,
+    /// Throughput work: drains when the interactive lane is empty, and
+    /// partitions holding only batch-class kernels are preferred
+    /// reconfiguration victims.
+    Batch,
+}
+
+impl Priority {
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+}
+
+/// Tunable routing parameters.
+#[derive(Debug, Clone)]
+pub struct RoutingPolicy {
+    /// Work-items one kernel copy comfortably streams per dispatch.
+    /// A dispatch of `global_size` items wants
+    /// `ceil(global_size / target_chunk)` copies; specs whose
+    /// replication factor meets that demand are *adequate* and the
+    /// smallest adequate spec wins. Larger values bias toward small
+    /// overlays, smaller values toward wide replication.
+    pub target_chunk: usize,
+    /// Routing decisions retained verbatim for inspection
+    /// ([`crate::coordinator::Coordinator::routing_log`]); aggregate
+    /// counters keep counting after the buffer fills.
+    pub max_records: usize,
+}
+
+impl Default for RoutingPolicy {
+    fn default() -> Self {
+        RoutingPolicy { target_chunk: 1024, max_records: 4096 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let p = RoutingPolicy::default();
+        assert!(p.target_chunk >= 1);
+        assert!(p.max_records >= 1);
+        assert_eq!(Priority::Interactive.name(), "interactive");
+        assert_eq!(Priority::Batch.name(), "batch");
+    }
+}

@@ -1,0 +1,498 @@
+//! The resource-aware router: which overlay spec serves a dispatch.
+//!
+//! For an incoming kernel the router consults its [`KernelProfile`] —
+//! the per-spec replication plans ([`crate::replicate::plan`]: factor,
+//! [`LimitReason`], FU and I/O demand) computed once by the compile-
+//! free front-half analysis — and a live [`SpecObservation`] per spec
+//! (queue depth, bitstream residency, modeled reconfiguration cost).
+//! The decision rule:
+//!
+//! 1. **Demand**: a dispatch of `global_size` items wants
+//!    `ceil(global_size / target_chunk)` kernel copies.
+//! 2. **Adequate specs** (replication factor ≥ demand) compete on
+//!    `(min queue depth, peak GOPS, reconfiguration cost,
+//!    fingerprint)` — the *smallest idle* adequate overlay wins, so a
+//!    small kernel never occupies an 8×8 partition while a 4×4 sits
+//!    idle.
+//! 3. With **no adequate spec** the dispatch is wide data-parallel:
+//!    specs compete on `(achieved GOPS desc, queue, reconfiguration
+//!    cost, fingerprint)` — it lands where `copies × ops × Fmax` is
+//!    highest.
+//!
+//! Every decision is recorded (bounded) with the observations it was
+//! made from, so tests and operators can audit placements after the
+//! fact.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{bail, Result};
+
+use crate::replicate::LimitReason;
+
+use super::policy::{Priority, RoutingPolicy};
+
+/// Per-spec outcome of the compile-free replication analysis.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanSummary {
+    pub factor: usize,
+    pub limit: LimitReason,
+    pub fus_per_copy: usize,
+    pub io_per_copy: usize,
+    /// `factor × ops_per_copy × Fmax` — the Fig. 6 quantity.
+    pub gops: f64,
+}
+
+/// What the fleet knows about one kernel: its name and, per shard
+/// (fleet order), whether it fits and with what replication plan.
+/// `None` marks a spec the kernel does not fit (or whose compile
+/// failed — see [`crate::fleet::Fleet::mark_unfit`]).
+#[derive(Debug, Clone)]
+pub struct KernelProfile {
+    pub name: String,
+    pub source_hash: u64,
+    pub ops_per_copy: usize,
+    pub fits: Vec<Option<PlanSummary>>,
+}
+
+/// Live per-spec state sampled at routing time, combined with the
+/// profile's plan for that spec. One per shard, in fleet order.
+#[derive(Debug, Clone)]
+pub struct SpecObservation {
+    pub fingerprint: u64,
+    pub spec: String,
+    /// Whether the kernel fits this spec at all.
+    pub fits: bool,
+    /// Whether this spec's replication factor meets the dispatch's
+    /// copy demand (filled in by the router).
+    pub adequate: bool,
+    pub factor: usize,
+    pub limit: Option<LimitReason>,
+    pub gops: f64,
+    pub peak_gops: f64,
+    /// Shallowest dispatch queue among this spec's partitions.
+    pub min_queue_depth: usize,
+    /// Whether some partition of this spec already holds the kernel's
+    /// bitstream (an affinity dispatch pays zero reconfiguration).
+    pub resident: bool,
+    /// Modeled bitstream-load seconds if a partition must reconfigure.
+    pub config_seconds: f64,
+}
+
+impl SpecObservation {
+    /// Reconfiguration cost this dispatch would actually pay.
+    fn effective_config_seconds(&self) -> f64 {
+        if self.resident {
+            0.0
+        } else {
+            self.config_seconds
+        }
+    }
+}
+
+/// Why a spec was chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteReason {
+    /// Several specs fit; the smallest adequate one (by queue, then
+    /// peak) was picked — the "small kernel → small overlay" path.
+    BestFit,
+    /// No spec met the copy demand; the highest-throughput spec was
+    /// picked — the "wide data-parallel → widest overlay" path.
+    Widest,
+    /// Exactly one spec fits this kernel.
+    OnlyFit,
+}
+
+impl RouteReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            RouteReason::BestFit => "best-fit",
+            RouteReason::Widest => "widest",
+            RouteReason::OnlyFit => "only-fit",
+        }
+    }
+}
+
+/// One audited routing decision.
+#[derive(Debug, Clone)]
+pub struct RouteRecord {
+    pub kernel: String,
+    pub source_hash: u64,
+    pub global_size: usize,
+    pub copies_wanted: usize,
+    /// Fingerprint of the spec that actually served the dispatch.
+    pub chosen: u64,
+    pub chosen_spec: String,
+    pub reason: RouteReason,
+    /// True when the first-ranked spec failed to compile and a
+    /// lower-ranked candidate took the dispatch.
+    pub fallback: bool,
+    pub priority: Priority,
+    /// The per-spec observations the decision was made from.
+    pub specs: Vec<SpecObservation>,
+}
+
+/// Aggregate routing counters for one spec.
+#[derive(Debug, Clone)]
+pub struct SpecRouteStats {
+    pub spec: String,
+    pub fingerprint: u64,
+    pub routed: u64,
+    pub best_fit: u64,
+    pub widest: u64,
+    pub only_fit: u64,
+    pub fallbacks: u64,
+    /// Replication factor → dispatches served at that factor.
+    pub histogram: BTreeMap<usize, u64>,
+}
+
+impl SpecRouteStats {
+    fn new(spec: String, fingerprint: u64) -> SpecRouteStats {
+        SpecRouteStats {
+            spec,
+            fingerprint,
+            routed: 0,
+            best_fit: 0,
+            widest: 0,
+            only_fit: 0,
+            fallbacks: 0,
+            histogram: BTreeMap::new(),
+        }
+    }
+}
+
+/// The routing engine: pure ranking plus bounded decision history.
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutingPolicy,
+    records: Vec<RouteRecord>,
+    dropped_records: u64,
+    per_spec: HashMap<u64, SpecRouteStats>,
+}
+
+fn f64_cmp(a: f64, b: f64) -> Ordering {
+    a.partial_cmp(&b).unwrap_or(Ordering::Equal)
+}
+
+impl Router {
+    pub fn new(policy: RoutingPolicy) -> Router {
+        Router {
+            policy,
+            records: Vec::new(),
+            dropped_records: 0,
+            per_spec: HashMap::new(),
+        }
+    }
+
+    pub fn policy(&self) -> &RoutingPolicy {
+        &self.policy
+    }
+
+    /// Copies a dispatch of `global_size` items wants.
+    pub fn copies_wanted(&self, global_size: usize) -> usize {
+        global_size.div_ceil(self.policy.target_chunk.max(1)).max(1)
+    }
+
+    /// Rank the specs for one dispatch. `obs` must be in fleet shard
+    /// order with the profile-derived fields (`fits`, `factor`,
+    /// `limit`, `gops`) already filled; the router fills `adequate`
+    /// and returns shard indices in preference order (the tail
+    /// entries are compile-failure fallbacks), the reason for the
+    /// first choice, and the copy demand.
+    pub fn rank(
+        &self,
+        profile: &KernelProfile,
+        obs: &mut [SpecObservation],
+        global_size: usize,
+    ) -> Result<(Vec<usize>, RouteReason, usize)> {
+        let wanted = self.copies_wanted(global_size);
+        for o in obs.iter_mut() {
+            o.adequate = o.fits && o.factor >= wanted;
+        }
+        let fitting: Vec<usize> = (0..obs.len()).filter(|&i| obs[i].fits).collect();
+        if fitting.is_empty() {
+            bail!(
+                "kernel '{}' fits none of the fleet's overlay specs",
+                profile.name
+            );
+        }
+        if fitting.len() == 1 {
+            return Ok((fitting, RouteReason::OnlyFit, wanted));
+        }
+        let adequate: Vec<usize> = fitting
+            .iter()
+            .copied()
+            .filter(|&i| obs[i].adequate)
+            .collect();
+        if !adequate.is_empty() {
+            // small-kernel path: least loaded, then smallest overlay,
+            // then cheapest reconfiguration, then stable order
+            let mut ranked = adequate.clone();
+            ranked.sort_by(|&a, &b| {
+                let (oa, ob) = (&obs[a], &obs[b]);
+                oa.min_queue_depth
+                    .cmp(&ob.min_queue_depth)
+                    .then(f64_cmp(oa.peak_gops, ob.peak_gops))
+                    .then(f64_cmp(
+                        oa.effective_config_seconds(),
+                        ob.effective_config_seconds(),
+                    ))
+                    .then(oa.fingerprint.cmp(&ob.fingerprint))
+            });
+            // compile-failure fallbacks: the remaining fitting specs,
+            // widest first
+            let mut rest: Vec<usize> = fitting
+                .iter()
+                .copied()
+                .filter(|i| !adequate.contains(i))
+                .collect();
+            rest.sort_by(|&a, &b| f64_cmp(obs[b].gops, obs[a].gops));
+            ranked.extend(rest);
+            return Ok((ranked, RouteReason::BestFit, wanted));
+        }
+        // wide data-parallel path: highest copies × throughput wins
+        let mut ranked = fitting;
+        ranked.sort_by(|&a, &b| {
+            let (oa, ob) = (&obs[a], &obs[b]);
+            f64_cmp(ob.gops, oa.gops)
+                .then(oa.min_queue_depth.cmp(&ob.min_queue_depth))
+                .then(f64_cmp(
+                    oa.effective_config_seconds(),
+                    ob.effective_config_seconds(),
+                ))
+                .then(oa.fingerprint.cmp(&ob.fingerprint))
+        });
+        Ok((ranked, RouteReason::Widest, wanted))
+    }
+
+    /// Record a served dispatch: bump the chosen spec's counters and
+    /// (bounded) append the decision record.
+    pub fn commit(&mut self, record: RouteRecord, factor: usize) {
+        let s = self
+            .per_spec
+            .entry(record.chosen)
+            .or_insert_with(|| SpecRouteStats::new(record.chosen_spec.clone(), record.chosen));
+        s.routed += 1;
+        match record.reason {
+            RouteReason::BestFit => s.best_fit += 1,
+            RouteReason::Widest => s.widest += 1,
+            RouteReason::OnlyFit => s.only_fit += 1,
+        }
+        if record.fallback {
+            s.fallbacks += 1;
+        }
+        *s.histogram.entry(factor).or_insert(0) += 1;
+        if self.records.len() < self.policy.max_records {
+            self.records.push(record);
+        } else {
+            self.dropped_records += 1;
+        }
+    }
+
+    /// The retained decision records (oldest first). Aggregates keep
+    /// counting after the buffer fills; `dropped_records` says how
+    /// many decisions are missing here.
+    pub fn records(&self) -> &[RouteRecord] {
+        &self.records
+    }
+
+    pub fn dropped_records(&self) -> u64 {
+        self.dropped_records
+    }
+
+    pub fn spec_stats(&self, fingerprint: u64) -> Option<&SpecRouteStats> {
+        self.per_spec.get(&fingerprint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile(fits: Vec<Option<PlanSummary>>) -> KernelProfile {
+        KernelProfile {
+            name: "k".into(),
+            source_hash: 1,
+            ops_per_copy: 7,
+            fits,
+        }
+    }
+
+    fn ps(factor: usize, gops: f64) -> PlanSummary {
+        PlanSummary {
+            factor,
+            limit: LimitReason::Fu,
+            fus_per_copy: 3,
+            io_per_copy: 2,
+            gops,
+        }
+    }
+
+    /// An 8×8-class and a 4×4-class observation, both idle and cold.
+    fn two_specs() -> Vec<SpecObservation> {
+        vec![
+            SpecObservation {
+                fingerprint: 100,
+                spec: "8x8".into(),
+                fits: true,
+                adequate: false,
+                factor: 16,
+                limit: Some(LimitReason::Io),
+                gops: 33.6,
+                peak_gops: 115.2,
+                min_queue_depth: 0,
+                resident: false,
+                config_seconds: 42e-6,
+            },
+            SpecObservation {
+                fingerprint: 200,
+                spec: "4x4".into(),
+                fits: true,
+                adequate: false,
+                factor: 5,
+                limit: Some(LimitReason::Fu),
+                gops: 10.5,
+                peak_gops: 28.8,
+                min_queue_depth: 0,
+                resident: false,
+                config_seconds: 12e-6,
+            },
+        ]
+    }
+
+    fn router() -> Router {
+        Router::new(RoutingPolicy::default())
+    }
+
+    #[test]
+    fn small_dispatch_best_fits_the_small_spec() {
+        let p = profile(vec![Some(ps(16, 33.6)), Some(ps(5, 10.5))]);
+        let mut obs = two_specs();
+        // 256 items want 1 copy: both adequate, small peak wins
+        let (ranked, reason, wanted) = router().rank(&p, &mut obs, 256).unwrap();
+        assert_eq!(wanted, 1);
+        assert_eq!(reason, RouteReason::BestFit);
+        assert_eq!(ranked[0], 1, "small spec first");
+        assert!(obs[0].adequate && obs[1].adequate);
+    }
+
+    #[test]
+    fn wide_dispatch_goes_to_the_widest_spec() {
+        let p = profile(vec![Some(ps(16, 33.6)), Some(ps(5, 10.5))]);
+        let mut obs = two_specs();
+        // 32768 items want 32 copies: nobody adequate → highest gops
+        let (ranked, reason, wanted) = router().rank(&p, &mut obs, 32768).unwrap();
+        assert_eq!(wanted, 32);
+        assert_eq!(reason, RouteReason::Widest);
+        assert_eq!(ranked[0], 0, "widest spec first");
+    }
+
+    #[test]
+    fn medium_dispatch_picks_the_smallest_adequate_spec() {
+        let p = profile(vec![Some(ps(16, 33.6)), Some(ps(5, 10.5))]);
+        let mut obs = two_specs();
+        // 8192 items want 8 copies: only the 8×8 is adequate
+        let (ranked, reason, _) = router().rank(&p, &mut obs, 8192).unwrap();
+        assert_eq!(reason, RouteReason::BestFit);
+        assert_eq!(ranked[0], 0);
+        assert!(!obs[1].adequate);
+    }
+
+    #[test]
+    fn busy_small_spec_spills_to_an_idle_bigger_one() {
+        let p = profile(vec![Some(ps(16, 33.6)), Some(ps(5, 10.5))]);
+        let mut obs = two_specs();
+        obs[1].min_queue_depth = 3; // every small partition busy
+        let (ranked, reason, _) = router().rank(&p, &mut obs, 64).unwrap();
+        assert_eq!(reason, RouteReason::BestFit);
+        assert_eq!(ranked[0], 0, "spill to the idle big spec");
+    }
+
+    #[test]
+    fn small_spec_wins_even_when_the_big_one_is_resident() {
+        // residency is a tie-breaker *below* overlay size: a small
+        // kernel must not park on the 8×8 just because its bitstream
+        // is still loaded there
+        let p = profile(vec![Some(ps(16, 33.6)), Some(ps(5, 10.5))]);
+        let mut obs = two_specs();
+        obs[0].resident = true;
+        let (ranked, _, _) = router().rank(&p, &mut obs, 64).unwrap();
+        assert_eq!(ranked[0], 1);
+    }
+
+    #[test]
+    fn unfit_spec_is_only_fit_for_the_other() {
+        let p = profile(vec![Some(ps(3, 6.3)), None]);
+        let mut obs = two_specs();
+        obs[1].fits = false;
+        let (ranked, reason, _) = router().rank(&p, &mut obs, 64).unwrap();
+        assert_eq!(reason, RouteReason::OnlyFit);
+        assert_eq!(ranked, vec![0]);
+    }
+
+    #[test]
+    fn no_fitting_spec_errors() {
+        let p = profile(vec![None, None]);
+        let mut obs = two_specs();
+        obs[0].fits = false;
+        obs[1].fits = false;
+        assert!(router().rank(&p, &mut obs, 64).is_err());
+    }
+
+    #[test]
+    fn commit_accumulates_stats_and_histogram() {
+        let mut r = router();
+        let p = profile(vec![Some(ps(16, 33.6)), Some(ps(5, 10.5))]);
+        let mut obs = two_specs();
+        let (ranked, reason, wanted) = r.rank(&p, &mut obs, 256).unwrap();
+        let chosen = obs[ranked[0]].fingerprint;
+        r.commit(
+            RouteRecord {
+                kernel: "k".into(),
+                source_hash: 1,
+                global_size: 256,
+                copies_wanted: wanted,
+                chosen,
+                chosen_spec: obs[ranked[0]].spec.clone(),
+                reason,
+                fallback: false,
+                priority: Priority::Interactive,
+                specs: obs.clone(),
+            },
+            5,
+        );
+        let s = r.spec_stats(chosen).unwrap();
+        assert_eq!(s.routed, 1);
+        assert_eq!(s.best_fit, 1);
+        assert_eq!(s.histogram.get(&5), Some(&1));
+        assert_eq!(r.records().len(), 1);
+        assert_eq!(r.dropped_records(), 0);
+    }
+
+    #[test]
+    fn record_buffer_is_bounded() {
+        let mut r = Router::new(RoutingPolicy { max_records: 2, ..Default::default() });
+        let p = profile(vec![Some(ps(16, 33.6)), Some(ps(5, 10.5))]);
+        for i in 0..5u64 {
+            let mut obs = two_specs();
+            let (ranked, reason, wanted) = r.rank(&p, &mut obs, 64).unwrap();
+            r.commit(
+                RouteRecord {
+                    kernel: format!("k{i}"),
+                    source_hash: i,
+                    global_size: 64,
+                    copies_wanted: wanted,
+                    chosen: obs[ranked[0]].fingerprint,
+                    chosen_spec: obs[ranked[0]].spec.clone(),
+                    reason,
+                    fallback: false,
+                    priority: Priority::Batch,
+                    specs: obs.clone(),
+                },
+                5,
+            );
+        }
+        assert_eq!(r.records().len(), 2);
+        assert_eq!(r.dropped_records(), 3);
+    }
+}

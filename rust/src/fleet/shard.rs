@@ -1,0 +1,219 @@
+//! Per-spec compilation shards.
+//!
+//! A compiled kernel's placement, routing and bitstream are bound to
+//! one [`OverlaySpec`]; a heterogeneous fleet therefore needs one
+//! complete compilation stack per distinct spec. A [`CompileShard`]
+//! owns exactly that: a [`JitCompiler`] (with its prebuilt
+//! routing-resource graph), a [`KernelCache`] keyed by (source, spec,
+//! options) fingerprints, and the global indices of the partitions
+//! built from this spec. Shards never exchange cache entries — a
+//! 4×4 bitstream can't configure an 8×8 region — and the
+//! `cross_spec_hits` counter proves the isolation invariant at run
+//! time (it must stay 0).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::compiler::{CompileOptions, JitCompiler, ServableKernel};
+use crate::coordinator::{CacheKey, KernelCache};
+use crate::metrics::CacheStats;
+use crate::overlay::{ConfigSizeModel, OverlayBitstream, OverlaySpec};
+
+/// One overlay spec's compiler + kernel cache + partitions.
+pub struct CompileShard {
+    spec: OverlaySpec,
+    fingerprint: u64,
+    options_fingerprint: u64,
+    pub(crate) jit: JitCompiler,
+    cache: Mutex<KernelCache>,
+    /// Global partition (device) indices served from this shard.
+    partitions: Vec<usize>,
+    /// Modeled seconds to load one bitstream on this spec — the
+    /// serialized configuration size is spec-constant, so this is
+    /// computed once instead of per dispatch on the hot path.
+    config_seconds_estimate: f64,
+    compile_seconds: Mutex<f64>,
+    /// Cache hits whose **artifact** didn't match this shard's overlay
+    /// geometry — a bitstream for another grid landing under our key.
+    /// Structurally impossible today (keys embed the spec fingerprint
+    /// and snapshot loads filter on it), so this is the tripwire that
+    /// turns a future isolation regression (shared cache, snapshot
+    /// pollution, fingerprint collision) into a visible non-zero
+    /// counter instead of a wrong-geometry dispatch.
+    cross_spec_hits: AtomicU64,
+}
+
+impl std::fmt::Debug for CompileShard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompileShard")
+            .field("spec", &self.spec.name())
+            .field("partitions", &self.partitions)
+            .finish()
+    }
+}
+
+impl CompileShard {
+    pub fn new(
+        spec: OverlaySpec,
+        options: CompileOptions,
+        cache_capacity: usize,
+        partitions: Vec<usize>,
+    ) -> CompileShard {
+        let fingerprint = spec.fingerprint();
+        let options_fingerprint = options.fingerprint();
+        let config_seconds_estimate = ConfigSizeModel::overlay_config_seconds(
+            &spec,
+            OverlayBitstream::empty(&spec).byte_size(),
+        );
+        let jit = JitCompiler::with_options(spec.clone(), options);
+        CompileShard {
+            spec,
+            fingerprint,
+            options_fingerprint,
+            jit,
+            cache: Mutex::new(KernelCache::new(cache_capacity)),
+            partitions,
+            config_seconds_estimate,
+            compile_seconds: Mutex::new(0.0),
+            cross_spec_hits: AtomicU64::new(0),
+        }
+    }
+
+    /// Modeled bitstream-load seconds on this spec (configuration
+    /// size is spec-constant — see §IV's 1061 B / 42.4 µs).
+    pub fn config_seconds_estimate(&self) -> f64 {
+        self.config_seconds_estimate
+    }
+
+    pub fn spec(&self) -> &OverlaySpec {
+        &self.spec
+    }
+
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    pub fn options_fingerprint(&self) -> u64 {
+        self.options_fingerprint
+    }
+
+    pub fn partitions(&self) -> &[usize] {
+        &self.partitions
+    }
+
+    /// The cache key this shard files `source` under.
+    pub fn cache_key_for_hash(&self, source_hash: u64) -> CacheKey {
+        CacheKey {
+            source: source_hash,
+            spec: self.fingerprint,
+            options: self.options_fingerprint,
+        }
+    }
+
+    /// Cache-or-compile: the shard's hot path. Returns the executable
+    /// kernel, whether it came from the cache, and its key.
+    pub fn get_or_compile(&self, source: &str) -> Result<(Arc<ServableKernel>, bool, CacheKey)> {
+        let key = CacheKey::new(source, &self.spec, &self.jit.options);
+        if let Some(k) = self.cache.lock().unwrap().get(&key) {
+            if k.bitstream.rows == self.spec.rows && k.bitstream.cols == self.spec.cols {
+                return Ok((k, true, key));
+            }
+            // an artifact for another overlay geometry under our key:
+            // count the isolation violation and recompile rather than
+            // dispatch a bitstream that cannot configure this grid
+            self.cross_spec_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        // the seconds-class step — paid once per distinct
+        // (source, overlay, options)
+        let t0 = Instant::now();
+        let compiled = self.jit.compile(source)?;
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        let servable = Arc::new(compiled.servable());
+        self.cache.lock().unwrap().insert(key, servable.clone());
+        Ok((servable, false, key))
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.lock().unwrap().stats()
+    }
+
+    /// Wall seconds of JIT compilation this shard has paid.
+    pub fn compile_seconds(&self) -> f64 {
+        *self.compile_seconds.lock().unwrap()
+    }
+
+    pub fn cross_spec_hits(&self) -> u64 {
+        self.cross_spec_hits.load(Ordering::Relaxed)
+    }
+
+    /// Persist this shard's cache (see [`KernelCache::save_snapshot`]).
+    /// Returns the number of entries written.
+    pub fn save_snapshot(&self, path: &Path) -> Result<usize> {
+        self.cache.lock().unwrap().save_snapshot(path)
+    }
+
+    /// Warm-start this shard's cache from a snapshot; entries for
+    /// other specs or options are skipped. Returns entries loaded.
+    pub fn load_snapshot(&self, path: &Path) -> Result<usize> {
+        self.cache
+            .lock()
+            .unwrap()
+            .load_snapshot(path, self.fingerprint, self.options_fingerprint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_kernels::CHEBYSHEV;
+    use crate::overlay::FuType;
+
+    #[test]
+    fn shard_caches_per_spec() {
+        let shard = CompileShard::new(
+            OverlaySpec::new(4, 4, FuType::Dsp2),
+            CompileOptions::default(),
+            8,
+            vec![0, 1],
+        );
+        let (a, hit_a, key) = shard.get_or_compile(CHEBYSHEV).unwrap();
+        assert!(!hit_a);
+        assert_eq!(key.spec, shard.fingerprint());
+        let (b, hit_b, _) = shard.get_or_compile(CHEBYSHEV).unwrap();
+        assert!(hit_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        let stats = shard.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        assert!(shard.compile_seconds() > 0.0);
+        assert_eq!(shard.cross_spec_hits(), 0);
+        assert_eq!(shard.partitions(), &[0, 1]);
+    }
+
+    #[test]
+    fn distinct_specs_produce_distinct_keys_and_factors() {
+        let big = CompileShard::new(
+            OverlaySpec::zynq_default(),
+            CompileOptions::default(),
+            8,
+            vec![0],
+        );
+        let small = CompileShard::new(
+            OverlaySpec::new(4, 4, FuType::Dsp2),
+            CompileOptions::default(),
+            8,
+            vec![1],
+        );
+        let (kb, _, key_b) = big.get_or_compile(CHEBYSHEV).unwrap();
+        let (ks, _, key_s) = small.get_or_compile(CHEBYSHEV).unwrap();
+        assert_eq!(key_b.source, key_s.source);
+        assert_ne!(key_b.spec, key_s.spec);
+        // the paper's resource arithmetic: 16 copies on 8×8 (I/O), 5
+        // on 4×4 (FU: 16 FUs / 3 per copy)
+        assert_eq!(kb.factor, 16);
+        assert_eq!(ks.factor, 5);
+    }
+}

@@ -40,12 +40,20 @@
 //! * [`runtime_ocl`] — an OpenCL-flavoured host API (platform, device,
 //!   context, queue, buffer, program, kernel, events), including the
 //!   multi-partition platform the coordinator serves across.
-//! * [`coordinator`] — the overlay serving layer: a compile cache keyed
-//!   by (source hash, overlay fingerprint, options fingerprint), a
-//!   slot-aware scheduler that treats configured partitions as a cache
-//!   (affinity dispatch, LRU victims paying the modeled 42 µs-class
-//!   reconfiguration cost), and an async per-partition dispatch queue
-//!   with completion handles and serving statistics.
+//! * [`fleet`] — the heterogeneous-fleet layer: one compilation shard
+//!   (JIT compiler + kernel cache) per distinct overlay spec, keyed by
+//!   spec fingerprint, plus a resource-aware router that scores specs
+//!   with the kernel's replication plan (FU/IO demand, limit reason)
+//!   — small kernels onto small overlays, wide data-parallel kernels
+//!   where copies × throughput peaks.
+//! * [`coordinator`] — the overlay serving layer: per-spec kernel
+//!   caches keyed by (source hash, overlay fingerprint, options
+//!   fingerprint) with disk snapshots for warm restarts, a slot-aware
+//!   scheduler that treats configured partitions as a cache (affinity
+//!   dispatch, batch-class-first victims paying the modeled 42
+//!   µs-class reconfiguration cost), and async per-partition dispatch
+//!   queues with two QoS lanes, same-kernel batch fusion, completion
+//!   handles and serving statistics.
 //! * [`bench_kernels`] — the paper's six benchmark kernels as OpenCL-C
 //!   sources with their Table III metadata.
 //! * [`metrics`] — the GOPS / resource / configuration-time models behind
@@ -62,6 +70,7 @@ pub mod compiler;
 pub mod configgen;
 pub mod coordinator;
 pub mod dfg;
+pub mod fleet;
 pub mod fpga;
 pub mod frontend;
 pub mod fuaware;
@@ -85,8 +94,10 @@ pub mod prelude {
         Replication,
     };
     pub use crate::coordinator::{
-        Coordinator, CoordinatorConfig, DispatchHandle, DispatchResult, SubmitArg,
+        Coordinator, CoordinatorConfig, DispatchHandle, DispatchResult, Priority,
+        RoutingPolicy, SubmitArg,
     };
+    pub use crate::fleet::RouteReason;
     pub use crate::overlay::{FuType, OverlaySpec};
     pub use crate::replicate::ReplicationPlan;
     pub use crate::runtime_ocl::{

@@ -100,8 +100,8 @@ impl LatencyStats {
     }
 }
 
-/// Compile-cache counters (produced by
-/// [`crate::coordinator::CompileCache::stats`]).
+/// Kernel-cache counters (produced by
+/// [`crate::coordinator::KernelCache::stats`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct CacheStats {
     pub hits: u64,
@@ -139,13 +139,48 @@ pub struct PartitionServingStats {
     pub utilization: f64,
 }
 
+/// Per-spec serving counters: one compilation shard of a
+/// (possibly heterogeneous) fleet — its kernel cache, its share of
+/// the routing decisions, and the replication factors it served at.
+#[derive(Debug, Clone)]
+pub struct SpecServingStats {
+    /// Overlay name, e.g. `"8x8-dsp2"`.
+    pub spec: String,
+    /// [`OverlaySpec::fingerprint`] keying the shard.
+    pub fingerprint: u64,
+    /// Partitions built from this spec.
+    pub partitions: usize,
+    /// This shard's kernel-cache counters (per-spec hit rates).
+    pub cache: CacheStats,
+    /// Wall seconds of JIT compilation this shard paid.
+    pub compile_seconds: f64,
+    /// Dispatches the router placed on this spec.
+    pub routed: u64,
+    /// …of which via the small-kernel best-fit path.
+    pub best_fit: u64,
+    /// …of which via the wide-data-parallel path.
+    pub widest: u64,
+    /// …of which because no other spec fit the kernel.
+    pub only_fit: u64,
+    /// Dispatches that landed here after a compile failure on a
+    /// higher-ranked spec.
+    pub fallbacks: u64,
+    /// Cache hits whose artifact geometry didn't match this shard's
+    /// overlay grid — the shard-isolation invariant; must be 0 (such
+    /// an entry is never dispatched: it is recompiled instead).
+    pub cross_spec_hits: u64,
+    /// Replication factor → dispatches served at that factor.
+    pub replication_histogram: Vec<(usize, u64)>,
+}
+
 /// Aggregate serving statistics reported by the coordinator: the
 /// quantities that decide whether run-time kernel management is
 /// actually paying off (paper's premise — seconds-class JIT + µs-class
 /// reconfiguration make the overlay fleet a schedulable cache).
 #[derive(Debug, Clone)]
 pub struct ServingStats {
-    /// Compile-cache counters (hits, misses, evictions, residency).
+    /// Kernel-cache counters summed across every spec shard
+    /// (`capacity` and `entries` sum too).
     pub cache: CacheStats,
     /// Times any partition had to load a different kernel bitstream.
     pub reconfig_count: u64,
@@ -154,6 +189,9 @@ pub struct ServingStats {
     /// End-to-end dispatch latency (enqueue → completion).
     pub latency: LatencyStats,
     pub partitions: Vec<PartitionServingStats>,
+    /// Per-spec shard breakdown (cache isolation, routing decisions,
+    /// replication-factor histograms).
+    pub per_spec: Vec<SpecServingStats>,
     pub total_dispatches: u64,
     pub total_items: u64,
     /// Failed simulator cross-checks (0 when verification is on and
@@ -161,6 +199,9 @@ pub struct ServingStats {
     pub verify_failures: u64,
     /// Dispatches that errored before producing a result.
     pub dispatch_errors: u64,
+    /// Worker batches in which ≥ 2 same-kernel dispatches were fused
+    /// into one backend invocation.
+    pub fused_batches: u64,
     /// Wall seconds of JIT compilation spent on cache misses.
     pub compile_seconds: f64,
 }
@@ -172,6 +213,7 @@ impl ServingStats {
             "cache      : {} hits / {} misses ({:.0}% hit rate), {} evictions, {} resident\n\
              reconfig   : {} loads, {:.1} us modeled\n\
              compile    : {:.1} ms total on misses\n\
+             fusion     : {} fused batches\n\
              latency    : p50 {:.3} ms, p99 {:.3} ms, max {:.3} ms over {} dispatches\n",
             self.cache.hits,
             self.cache.misses,
@@ -181,11 +223,32 @@ impl ServingStats {
             self.reconfig_count,
             self.reconfig_seconds * 1e6,
             self.compile_seconds * 1e3,
+            self.fused_batches,
             self.latency.p50_ms,
             self.latency.p99_ms,
             self.latency.max_ms,
             self.latency.count,
         );
+        for s in &self.per_spec {
+            let histogram: Vec<String> = s
+                .replication_histogram
+                .iter()
+                .map(|(f, n)| format!("x{f}:{n}"))
+                .collect();
+            out.push_str(&format!(
+                "spec {}: {} partitions, {} routed ({} best-fit / {} widest / {} only-fit), \
+                 {:.0}% cache hit rate, {} cross-spec hits, factors [{}]\n",
+                s.spec,
+                s.partitions,
+                s.routed,
+                s.best_fit,
+                s.widest,
+                s.only_fit,
+                100.0 * s.cache.hit_rate(),
+                s.cross_spec_hits,
+                histogram.join(" "),
+            ));
+        }
         for p in &self.partitions {
             out.push_str(&format!(
                 "partition {}: {} ({} dispatches, {} reconfigs, {:.1}% utilized)\n",
@@ -314,10 +377,25 @@ mod tests {
                 busy_seconds: 0.5,
                 utilization: 0.5,
             }],
+            per_spec: vec![SpecServingStats {
+                spec: "8x8-dsp2".into(),
+                fingerprint: 0xABCD,
+                partitions: 1,
+                cache: CacheStats { hits: 3, misses: 1, evictions: 0, entries: 1, capacity: 32 },
+                compile_seconds: 0.2,
+                routed: 4,
+                best_fit: 3,
+                widest: 1,
+                only_fit: 0,
+                fallbacks: 0,
+                cross_spec_hits: 0,
+                replication_histogram: vec![(16, 4)],
+            }],
             total_dispatches: 4,
             total_items: 1000,
             verify_failures: 0,
             dispatch_errors: 0,
+            fused_batches: 1,
             compile_seconds: 0.2,
         };
         assert!((s.cache.hit_rate() - 0.75).abs() < 1e-12);
@@ -325,6 +403,9 @@ mod tests {
         let r = s.render();
         assert!(r.contains("75% hit rate"), "{r}");
         assert!(r.contains("partition 0"), "{r}");
+        assert!(r.contains("spec 8x8-dsp2"), "{r}");
+        assert!(r.contains("x16:4"), "{r}");
+        assert!(r.contains("1 fused batches"), "{r}");
     }
 
     #[test]

@@ -35,6 +35,28 @@ impl LimitReason {
             LimitReason::EmuInputs => "emulator-input-limited",
         }
     }
+
+    /// Compact stable identifier used by the kernel-cache snapshot
+    /// format and routing reports.
+    pub fn short_name(self) -> &'static str {
+        match self {
+            LimitReason::Fu => "fu",
+            LimitReason::Io => "io",
+            LimitReason::EmuSlots => "emu-slots",
+            LimitReason::EmuInputs => "emu-inputs",
+        }
+    }
+
+    /// Inverse of [`LimitReason::short_name`].
+    pub fn from_short_name(s: &str) -> Option<LimitReason> {
+        match s {
+            "fu" => Some(LimitReason::Fu),
+            "io" => Some(LimitReason::Io),
+            "emu-slots" => Some(LimitReason::EmuSlots),
+            "emu-inputs" => Some(LimitReason::EmuInputs),
+            _ => None,
+        }
+    }
 }
 
 /// Resource arithmetic of a replication decision.
@@ -268,5 +290,18 @@ mod tests {
         let fg = cheb_fg(2);
         let rep = replicate_dfg(&fg.dfg, 1);
         assert_eq!(rep.input_names, fg.dfg.input_names);
+    }
+
+    #[test]
+    fn limit_reason_short_names_round_trip() {
+        for r in [
+            LimitReason::Fu,
+            LimitReason::Io,
+            LimitReason::EmuSlots,
+            LimitReason::EmuInputs,
+        ] {
+            assert_eq!(LimitReason::from_short_name(r.short_name()), Some(r));
+        }
+        assert_eq!(LimitReason::from_short_name("nope"), None);
     }
 }

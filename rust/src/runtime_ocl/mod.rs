@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context as AnyhowContext, Result};
 
-use crate::compiler::{CompileOptions, CompiledKernel, JitCompiler};
+use crate::compiler::{CompileOptions, CompiledKernel, JitCompiler, ServableKernel};
 use crate::frontend::ParamKind;
 use crate::overlay::{ConfigSizeModel, OverlaySpec};
 use crate::runtime::PjrtRuntime;
@@ -90,6 +90,24 @@ impl Platform {
 
     /// A platform over an explicit device list (heterogeneous fleets).
     pub fn with_devices(devices: Vec<Device>) -> Platform {
+        Platform { devices }
+    }
+
+    /// A heterogeneous cycle-simulated platform: `n` partitions per
+    /// overlay spec, in group order — the mixed fleet the
+    /// [`crate::fleet`] router places kernels across (e.g. 8×8 for
+    /// wide data-parallel kernels next to 4×4 for small ones).
+    pub fn sim_mixed(groups: &[(OverlaySpec, usize)]) -> Platform {
+        let mut devices = Vec::new();
+        for (spec, n) in groups {
+            for i in 0..(*n).max(1) {
+                devices.push(Device {
+                    name: format!("overlay-{}.p{i}", spec.name()),
+                    spec: spec.clone(),
+                    backend: Backend::CycleSim,
+                });
+            }
+        }
         Platform { devices }
     }
 
@@ -182,10 +200,7 @@ impl Program {
         if k.name != name {
             bail!("kernel '{name}' not found (program defines '{}')", k.name);
         }
-        Ok(Kernel {
-            compiled: k.clone(),
-            args: Mutex::new(vec![None; k.params.len()]),
-        })
+        Ok(Kernel::from_servable(Arc::new(k.servable())))
     }
 }
 
@@ -196,10 +211,13 @@ enum KernelArg {
     Scalar(i32),
 }
 
-/// `clCreateKernel` result with `clSetKernelArg` state.
+/// `clCreateKernel` result with `clSetKernelArg` state. Holds the
+/// [`ServableKernel`] slice of the compile — enough to bind, pack,
+/// execute and verify; the heavyweight PAR artifacts stay with the
+/// [`CompiledKernel`] that produced it.
 #[derive(Debug)]
 pub struct Kernel {
-    pub compiled: Arc<CompiledKernel>,
+    pub compiled: Arc<ServableKernel>,
     args: Mutex<Vec<Option<KernelArg>>>,
 }
 
@@ -208,7 +226,13 @@ impl Kernel {
     /// [`Program::build`] — the coordinator's compile-cache hit path
     /// (`clCreateKernel` on a program object retrieved from a binary
     /// cache, in OpenCL terms).
-    pub fn from_compiled(compiled: Arc<CompiledKernel>) -> Kernel {
+    pub fn from_compiled(compiled: &CompiledKernel) -> Kernel {
+        Kernel::from_servable(Arc::new(compiled.servable()))
+    }
+
+    /// Wrap the executable slice directly (compile-cache and snapshot
+    /// restore paths, where no full [`CompiledKernel`] exists).
+    pub fn from_servable(compiled: Arc<ServableKernel>) -> Kernel {
         let n = compiled.params.len();
         Kernel { compiled, args: Mutex::new(vec![None; n]) }
     }
@@ -228,8 +252,8 @@ impl Kernel {
 
         // copies r = 0..R each process a blocked item range; stream
         // port p of copy r is emulator column r*n_in + p.
-        let r = k.plan.factor;
-        let n_in = k.dfg.num_inputs();
+        let r = k.factor;
+        let n_in = k.n_inputs;
         let chunk = global_size.div_ceil(r.max(1));
         let fetch = |param: usize, idx: i64| -> i32 {
             match &args[param] {
@@ -250,7 +274,7 @@ impl Kernel {
         for copy in 0..r {
             let start = copy * chunk;
             for p in 0..n_in {
-                let meta = k.dfg.input_meta[p];
+                let meta = k.input_meta[p];
                 let mut s = Vec::with_capacity(chunk);
                 for i in 0..chunk {
                     let gid = start + i;
@@ -282,13 +306,13 @@ impl Kernel {
     pub fn outputs_match(&self, outs: &[Vec<i32>], global_size: usize) -> bool {
         let k = &self.compiled;
         let args = self.args.lock().unwrap().clone();
-        let r = k.plan.factor;
+        let r = k.factor;
         let chunk = global_size.div_ceil(r.max(1));
-        let n_out = k.dfg.num_outputs();
+        let n_out = k.n_outputs;
         for copy in 0..r {
             let start = copy * chunk;
             for o in 0..n_out {
-                let meta = k.dfg.output_meta[o];
+                let meta = k.output_meta[o];
                 let stream = &outs[copy * n_out + o];
                 if let Some(KernelArg::Buffer(b)) = &args[meta.param] {
                     let d = b.data.lock().unwrap();
@@ -313,13 +337,13 @@ impl Kernel {
     pub fn scatter_outputs(&self, outs: &[Vec<i32>], global_size: usize) {
         let k = &self.compiled;
         let args = self.args.lock().unwrap().clone();
-        let r = k.plan.factor;
+        let r = k.factor;
         let chunk = global_size.div_ceil(r.max(1));
-        let n_out = k.dfg.num_outputs();
+        let n_out = k.n_outputs;
         for copy in 0..r {
             let start = copy * chunk;
             for o in 0..n_out {
-                let meta = k.dfg.output_meta[o];
+                let meta = k.output_meta[o];
                 let stream = &outs[copy * n_out + o];
                 if let Some(KernelArg::Buffer(b)) = &args[meta.param] {
                     let mut d = b.data.lock().unwrap();
@@ -400,7 +424,7 @@ impl CommandQueue {
         };
         kernel.scatter_outputs(&outs, global_size);
 
-        let r = k.plan.factor;
+        let r = k.factor;
         let config_seconds = ConfigSizeModel::overlay_config_seconds(
             &self.device.spec,
             k.bitstream.byte_size(),
@@ -409,7 +433,7 @@ impl CommandQueue {
             &self.device.spec,
             &k.latency,
             r,
-            k.ops_per_copy(),
+            k.ops_per_copy,
             global_size as u64,
         );
         Ok(Event {
@@ -539,6 +563,17 @@ mod tests {
     }
 
     #[test]
+    fn sim_mixed_platform_exposes_heterogeneous_partitions() {
+        let big = crate::overlay::OverlaySpec::zynq_default();
+        let small = crate::overlay::OverlaySpec::new(4, 4, crate::overlay::FuType::Dsp2);
+        let platform = Platform::sim_mixed(&[(big.clone(), 2), (small.clone(), 1)]);
+        assert_eq!(platform.devices().len(), 3);
+        assert_eq!(platform.devices()[0].spec.fingerprint(), big.fingerprint());
+        assert_eq!(platform.devices()[2].spec.fingerprint(), small.fingerprint());
+        assert_eq!(platform.devices()[2].name, "overlay-4x4-dsp2.p0");
+    }
+
+    #[test]
     fn multi_sim_platform_exposes_identical_partitions() {
         let spec = crate::overlay::OverlaySpec::zynq_default();
         let platform = Platform::multi_sim(spec.clone(), 3);
@@ -560,7 +595,7 @@ mod tests {
         let mut program = Program::from_source(&ctx, crate::bench_kernels::CHEBYSHEV);
         program.build().unwrap();
         let via_program = program.create_kernel("chebyshev").unwrap();
-        let via_cache = Kernel::from_compiled(via_program.compiled.clone());
+        let via_cache = Kernel::from_servable(via_program.compiled.clone());
         let n = 128;
         let a = ctx.create_buffer(n);
         let b = ctx.create_buffer(n);

@@ -1,5 +1,6 @@
-//! Minimal recursive-descent JSON reader — just enough to consume
-//! `artifacts/geometry.json` (objects, arrays, strings, numbers,
+//! Minimal recursive-descent JSON reader/writer — enough to consume
+//! `artifacts/geometry.json` and to round-trip the coordinator's
+//! kernel-cache snapshots (objects, arrays, strings, numbers,
 //! booleans, null). No serde available offline.
 
 use std::collections::BTreeMap;
@@ -59,6 +60,82 @@ impl JsonValue {
             _ => None,
         }
     }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            JsonValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[JsonValue]> {
+        match self {
+            JsonValue::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Serialize back to JSON text. Integral numbers within the exact
+    /// f64 range render without a fractional part, so values written
+    /// by [`JsonValue::render`] re-parse to bit-identical numbers.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(true) => out.push_str("true"),
+            JsonValue::Bool(false) => out.push_str("false"),
+            JsonValue::Number(n) => {
+                if n.fract() == 0.0 && n.abs() <= 9.0e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            JsonValue::String(s) => write_escaped(s, out),
+            JsonValue::Array(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Object(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 fn skip_ws(b: &[u8], pos: &mut usize) {
@@ -242,5 +319,33 @@ mod tests {
     fn rejects_unterminated() {
         assert!(JsonValue::parse(r#"{"a": 1"#).is_err());
         assert!(JsonValue::parse(r#""abc"#).is_err());
+    }
+
+    #[test]
+    fn render_round_trips() {
+        let doc = r#"{ "ints": [0, -3, 9007199254740992],
+                      "floats": [2.5, -0.125],
+                      "s": "a\nb\"c\\d",
+                      "flag": false, "none": null, "obj": {"k": 1} }"#;
+        let v = JsonValue::parse(doc).unwrap();
+        let text = v.render();
+        assert_eq!(JsonValue::parse(&text).unwrap(), v);
+        // integral numbers render without a fractional part
+        assert!(text.contains("-3"));
+        assert!(!text.contains("-3.0"));
+    }
+
+    #[test]
+    fn render_escapes_strings() {
+        let v = JsonValue::String("a\"b\\c\nd".into());
+        assert_eq!(JsonValue::parse(&v.render()).unwrap(), v);
+    }
+
+    #[test]
+    fn accessor_helpers() {
+        let v = JsonValue::parse(r#"{"b": true, "a": [1, 2]}"#).unwrap();
+        assert_eq!(v.get("b").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("a").unwrap().as_array().unwrap().len(), 2);
+        assert!(v.get("b").unwrap().as_array().is_none());
     }
 }

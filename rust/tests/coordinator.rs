@@ -12,7 +12,7 @@
 //!   hold the simulator's values bit-for-bit.
 
 use overlay_jit::bench_kernels::BENCHMARKS;
-use overlay_jit::coordinator::{wait_all, Coordinator, CoordinatorConfig, SubmitArg};
+use overlay_jit::coordinator::{wait_all, Coordinator, CoordinatorConfig, Priority, SubmitArg};
 use overlay_jit::overlay::OverlaySpec;
 use overlay_jit::runtime_ocl::{Backend, Buffer, Context, Device};
 use overlay_jit::util::XorShiftRng;
@@ -56,7 +56,7 @@ fn mixed_kernel_soak_verifies_every_dispatch() {
     for _ in 0..ROUNDS {
         for b in &BENCHMARKS {
             let args = random_args(&ctx, param_count(b.source), ITEMS, &mut rng);
-            handles.push(coord.submit(b.source, &args, ITEMS).unwrap());
+            handles.push(coord.submit(b.source, &args, ITEMS, Priority::Interactive).unwrap());
         }
     }
     let results = wait_all(handles).unwrap();
@@ -106,7 +106,7 @@ fn working_set_fitting_the_fleet_stops_reconfiguring() {
     for _ in 0..6 {
         for b in kernels {
             let args = random_args(&ctx, param_count(b.source), 64, &mut rng);
-            let r = coord.submit(b.source, &args, 64).unwrap().wait().unwrap();
+            let r = coord.submit(b.source, &args, 64, Priority::Interactive).unwrap().wait().unwrap();
             assert_eq!(r.verified, Some(true));
         }
     }
@@ -129,7 +129,7 @@ fn bounded_cache_evicts_deterministically_and_recompiles() {
     for _ in 0..3 {
         for b in kernels {
             let args = random_args(&ctx, param_count(b.source), 48, &mut rng);
-            let r = coord.submit(b.source, &args, 48).unwrap().wait().unwrap();
+            let r = coord.submit(b.source, &args, 48, Priority::Interactive).unwrap().wait().unwrap();
             assert_eq!(r.verified, Some(true));
         }
     }
@@ -156,7 +156,7 @@ fn single_partition_alternation_is_worst_case_churn() {
     for _ in 0..4 {
         for b in kernels {
             let args = random_args(&ctx, param_count(b.source), 32, &mut rng);
-            let r = coord.submit(b.source, &args, 32).unwrap().wait().unwrap();
+            let r = coord.submit(b.source, &args, 32, Priority::Interactive).unwrap().wait().unwrap();
             assert_eq!(r.partition, 0);
             assert!(r.event.config_seconds > 0.0, "every alternation must reconfigure");
             n_dispatch += 1;
@@ -188,6 +188,7 @@ fn scalar_arguments_flow_through_the_coordinator() {
                 SubmitArg::Buffer(b.clone()),
             ],
             n,
+            Priority::Batch,
         )
         .unwrap()
         .wait()

@@ -1,0 +1,415 @@
+//! Heterogeneous-fleet integration tests: the coordinator over mixed
+//! 8×8 + 4×4 overlay partitions.
+//!
+//! Locks in the properties the fleet subsystem promises:
+//! * **placement** — small (interactive, low-demand) dispatches never
+//!   occupy an 8×8 partition while a 4×4 partition is idle, and wide
+//!   data-parallel dispatches always land on the spec with the
+//!   highest replication throughput (audited via the routing log);
+//! * **isolation** — per-spec kernel-cache shards never exchange
+//!   entries (zero cross-spec hits; one compile per (kernel, spec));
+//! * **liveness** — every benchmark kernel is eventually served and
+//!   verified, whatever mix of specs it fits (the router-starvation
+//!   regression);
+//! * **fusion** — same-kernel dispatches drained in one worker batch
+//!   execute as a single wider simulator invocation, bit-exactly;
+//! * **QoS** — the priority class rides through to the completion
+//!   record.
+
+use overlay_jit::bench_kernels::BENCHMARKS;
+use overlay_jit::coordinator::{
+    wait_all, Coordinator, CoordinatorConfig, Priority, SubmitArg,
+};
+use overlay_jit::fleet::RouteReason;
+use overlay_jit::overlay::{FuType, OverlaySpec};
+use overlay_jit::runtime_ocl::{Backend, Context, Device};
+use overlay_jit::util::XorShiftRng;
+
+const SMALL_ITEMS: usize = 256;
+const WIDE_ITEMS: usize = 16_384;
+
+fn big_spec() -> OverlaySpec {
+    OverlaySpec::zynq_default()
+}
+
+fn small_spec() -> OverlaySpec {
+    OverlaySpec::new(4, 4, FuType::Dsp2)
+}
+
+fn mixed_coordinator(big_parts: usize, small_parts: usize) -> Coordinator {
+    Coordinator::new(CoordinatorConfig::sim_fleet_mixed(vec![
+        (big_spec(), big_parts),
+        (small_spec(), small_parts),
+    ]))
+    .unwrap()
+}
+
+fn host_ctx() -> Context {
+    let dev = Device {
+        spec: big_spec(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    Context::new(&dev)
+}
+
+/// Random input buffers (with stencil slack) for a benchmark's params.
+fn random_args(ctx: &Context, nparams: usize, n: usize, rng: &mut XorShiftRng) -> Vec<SubmitArg> {
+    (0..nparams)
+        .map(|_| {
+            let buf = ctx.create_buffer(n + 16);
+            let data: Vec<i32> = (0..n + 16).map(|_| rng.gen_i64(-30, 30) as i32).collect();
+            buf.write(&data);
+            SubmitArg::Buffer(buf)
+        })
+        .collect()
+}
+
+fn param_count(source: &str) -> usize {
+    overlay_jit::frontend::parse_kernel(source).unwrap().params.len()
+}
+
+#[test]
+fn mixed_fleet_soak_places_by_size_and_verifies() {
+    let coord = mixed_coordinator(2, 2);
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0xF1EE7);
+    let small_fp = small_spec().fingerprint();
+    let big_fp = big_spec().fingerprint();
+
+    // contended stream: wide chebyshev batches interleaved with small
+    // interactive dispatches, all in flight at once
+    let smalls = [&BENCHMARKS[0], &BENCHMARKS[4], &BENCHMARKS[5]]; // chebyshev, poly1, poly2
+    let cheb = &BENCHMARKS[0];
+    let mut handles = Vec::new();
+    for _ in 0..4 {
+        let wargs = random_args(&ctx, param_count(cheb.source), WIDE_ITEMS, &mut rng);
+        handles.push(
+            coord
+                .submit(cheb.source, &wargs, WIDE_ITEMS, Priority::Batch)
+                .unwrap(),
+        );
+        for s in &smalls {
+            let sargs = random_args(&ctx, param_count(s.source), SMALL_ITEMS, &mut rng);
+            handles.push(
+                coord
+                    .submit(s.source, &sargs, SMALL_ITEMS, Priority::Interactive)
+                    .unwrap(),
+            );
+        }
+    }
+    let results = wait_all(handles).unwrap();
+    assert!(results.iter().all(|r| r.verified == Some(true)));
+
+    // audit every routing decision
+    let log = coord.routing_log();
+    assert_eq!(log.len(), results.len());
+    let mut small_served = 0;
+    for rec in &log {
+        let small_obs = rec
+            .specs
+            .iter()
+            .find(|o| o.fingerprint == small_fp)
+            .expect("small spec observed");
+        if rec.global_size == SMALL_ITEMS && !rec.fallback {
+            // the headline invariant: a small kernel never occupies a
+            // large partition while any small partition is idle
+            if small_obs.adequate && small_obs.min_queue_depth == 0 {
+                assert_eq!(
+                    rec.chosen, small_fp,
+                    "{} (small) routed to the big tier while a 4x4 was idle",
+                    rec.kernel
+                );
+            }
+            if rec.chosen == small_fp {
+                small_served += 1;
+            }
+        }
+        if rec.global_size == WIDE_ITEMS {
+            // wide data-parallel work always takes the widest spec
+            assert_eq!(
+                rec.chosen, big_fp,
+                "wide {} dispatch routed off the 8x8 tier",
+                rec.kernel
+            );
+            assert!(rec.copies_wanted > 5, "wide demand exceeds the 4x4 factor");
+        }
+    }
+    assert!(small_served > 0, "the 4x4 tier never served a small kernel");
+
+    let stats = coord.stats();
+    assert_eq!(stats.verify_failures, 0);
+    assert_eq!(stats.dispatch_errors, 0);
+    assert!(stats.per_spec.iter().all(|s| s.cross_spec_hits == 0));
+    // both tiers served work
+    for s in &stats.per_spec {
+        assert!(s.routed > 0, "spec {} served nothing", s.spec);
+    }
+    // replication histograms are per spec: the 8x8 serves chebyshev at
+    // 16 copies, the 4x4 at 5
+    let big_stats = stats.per_spec.iter().find(|s| s.fingerprint == big_fp).unwrap();
+    assert!(big_stats.replication_histogram.iter().any(|&(f, _)| f == 16));
+    let small_stats =
+        stats.per_spec.iter().find(|s| s.fingerprint == small_fp).unwrap();
+    assert!(small_stats.replication_histogram.iter().all(|&(f, _)| f <= 5));
+}
+
+#[test]
+fn per_spec_cache_shards_are_isolated() {
+    let coord = mixed_coordinator(1, 1);
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x15A);
+    let cheb = &BENCHMARKS[0];
+    let nparams = param_count(cheb.source);
+
+    // chebyshev lands on both tiers: small → 4x4, wide → 8x8; each
+    // shard compiles it once, repeats hit the shard's own cache
+    for _ in 0..3 {
+        let sargs = random_args(&ctx, nparams, SMALL_ITEMS, &mut rng);
+        let r = coord
+            .submit(cheb.source, &sargs, SMALL_ITEMS, Priority::Interactive)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.spec, "4x4-dsp2");
+        assert_eq!(r.verified, Some(true));
+        let wargs = random_args(&ctx, nparams, WIDE_ITEMS, &mut rng);
+        let r = coord
+            .submit(cheb.source, &wargs, WIDE_ITEMS, Priority::Batch)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.spec, "8x8-dsp2");
+        assert_eq!(r.verified, Some(true));
+    }
+
+    let stats = coord.stats();
+    // one compile per (kernel, spec) — six dispatches, two misses
+    assert_eq!(stats.cache.misses, 2);
+    assert_eq!(stats.cache.hits, 4);
+    assert_eq!(stats.per_spec.len(), 2);
+    for s in &stats.per_spec {
+        assert_eq!(s.cache.misses, 1, "spec {} compiled more than once", s.spec);
+        assert_eq!(s.cache.hits, 2);
+        assert_eq!(s.cross_spec_hits, 0, "shard isolation violated on {}", s.spec);
+        assert_eq!(s.routed, 3);
+    }
+}
+
+#[test]
+fn every_benchmark_is_eventually_served() {
+    // router-starvation regression: the full six-benchmark stream over
+    // a minimal mixed fleet, small and wide, everything completes
+    let coord = mixed_coordinator(1, 1);
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x5EED);
+    let mut handles = Vec::new();
+    let mut names = Vec::new();
+    for _ in 0..2 {
+        for b in &BENCHMARKS {
+            let nparams = param_count(b.source);
+            let sargs = random_args(&ctx, nparams, SMALL_ITEMS, &mut rng);
+            handles.push(
+                coord
+                    .submit(b.source, &sargs, SMALL_ITEMS, Priority::Interactive)
+                    .unwrap(),
+            );
+            names.push(b.name);
+            let wargs = random_args(&ctx, nparams, WIDE_ITEMS, &mut rng);
+            handles.push(
+                coord
+                    .submit(b.source, &wargs, WIDE_ITEMS, Priority::Batch)
+                    .unwrap(),
+            );
+            names.push(b.name);
+        }
+    }
+    let results = wait_all(handles).unwrap();
+    for b in &BENCHMARKS {
+        let served = results
+            .iter()
+            .zip(&names)
+            .filter(|(r, n)| **n == b.name && r.verified == Some(true))
+            .count();
+        assert_eq!(served, 4, "benchmark {} starved", b.name);
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.dispatch_errors, 0);
+    for s in &stats.per_spec {
+        assert!(s.routed > 0, "spec {} starved", s.spec);
+    }
+    // the routing log records only-fit placements for kernels too
+    // large for the 4x4 tier (e.g. qspline) without starving them
+    let log = coord.routing_log();
+    assert!(log
+        .iter()
+        .all(|r| r.reason != RouteReason::OnlyFit || r.chosen == big_spec().fingerprint()));
+}
+
+#[test]
+fn consecutive_same_kernel_jobs_fuse_into_one_invocation() {
+    // single partition: occupy the worker with a long dispatch, queue
+    // four more of the same kernel behind it — they drain together and
+    // must fuse, bit-exactly
+    let coord = Coordinator::new(CoordinatorConfig::sim_fleet(big_spec(), 1)).unwrap();
+    let ctx = host_ctx();
+    let cheb = &BENCHMARKS[0];
+
+    let cheb_ref = |x: i32| {
+        x.wrapping_mul(
+            x.wrapping_mul(16i32.wrapping_mul(x).wrapping_mul(x).wrapping_sub(20))
+                .wrapping_mul(x)
+                .wrapping_add(5),
+        )
+    };
+
+    // warm the cache so the queued submits are O(lookup)
+    let warm_in = ctx.create_buffer(64);
+    let warm_out = ctx.create_buffer(64);
+    warm_in.write(&vec![1; 64]);
+    coord
+        .submit(
+            cheb.source,
+            &[SubmitArg::Buffer(warm_in), SubmitArg::Buffer(warm_out)],
+            64,
+            Priority::Interactive,
+        )
+        .unwrap()
+        .wait()
+        .unwrap();
+
+    // the long dispatch that holds the worker busy
+    let n_long = 1 << 19;
+    let long_in = ctx.create_buffer(n_long);
+    let long_out = ctx.create_buffer(n_long);
+    long_in.write(&(0..n_long as i32).map(|i| i % 11 - 5).collect::<Vec<_>>());
+    let long_handle = coord
+        .submit(
+            cheb.source,
+            &[SubmitArg::Buffer(long_in), SubmitArg::Buffer(long_out)],
+            n_long,
+            Priority::Interactive,
+        )
+        .unwrap();
+
+    // four quick same-kernel dispatches queue behind it
+    let n = 128;
+    let mut handles = Vec::new();
+    let mut outputs = Vec::new();
+    for round in 0..4 {
+        let a = ctx.create_buffer(n);
+        let b = ctx.create_buffer(n);
+        let xs: Vec<i32> = (0..n as i32).map(|i| (i % 9) - 4 + round).collect();
+        a.write(&xs);
+        handles.push(
+            coord
+                .submit(
+                    cheb.source,
+                    &[SubmitArg::Buffer(a), SubmitArg::Buffer(b.clone())],
+                    n,
+                    Priority::Interactive,
+                )
+                .unwrap(),
+        );
+        outputs.push((xs, b));
+    }
+    long_handle.wait().unwrap();
+    let results = wait_all(handles).unwrap();
+
+    // every fused dispatch is verified and bit-exact per job
+    assert!(results.iter().all(|r| r.verified == Some(true)));
+    for (xs, b) in outputs {
+        let out = b.read();
+        for (x, y) in xs.iter().zip(&out) {
+            assert_eq!(*y, cheb_ref(*x));
+        }
+    }
+    let stats = coord.stats();
+    assert!(
+        stats.fused_batches >= 1,
+        "queued same-kernel dispatches did not fuse (fused_batches = {})",
+        stats.fused_batches
+    );
+    assert!(
+        results.iter().any(|r| r.fused >= 2),
+        "no dispatch reports a fusion width >= 2"
+    );
+    assert_eq!(stats.verify_failures, 0);
+}
+
+#[test]
+fn priority_class_rides_through_to_completion() {
+    let coord = mixed_coordinator(1, 1);
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(7);
+    let cheb = &BENCHMARKS[0];
+    let nparams = param_count(cheb.source);
+    let args = random_args(&ctx, nparams, SMALL_ITEMS, &mut rng);
+    let ri = coord
+        .submit(cheb.source, &args, SMALL_ITEMS, Priority::Interactive)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(ri.priority, Priority::Interactive);
+    let args = random_args(&ctx, nparams, SMALL_ITEMS, &mut rng);
+    let rb = coord
+        .submit(cheb.source, &args, SMALL_ITEMS, Priority::Batch)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(rb.priority, Priority::Batch);
+}
+
+#[test]
+fn mixed_fleet_snapshot_warm_starts_both_shards() {
+    let dir = std::env::temp_dir().join(format!(
+        "overlay-jit-fleet-test-snapshot-{}",
+        std::process::id()
+    ));
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x5A9);
+    let cheb = &BENCHMARKS[0];
+    let nparams = param_count(cheb.source);
+    {
+        let coord = mixed_coordinator(1, 1);
+        // populate both shards
+        let s = random_args(&ctx, nparams, SMALL_ITEMS, &mut rng);
+        coord
+            .submit(cheb.source, &s, SMALL_ITEMS, Priority::Interactive)
+            .unwrap()
+            .wait()
+            .unwrap();
+        let w = random_args(&ctx, nparams, WIDE_ITEMS, &mut rng);
+        coord
+            .submit(cheb.source, &w, WIDE_ITEMS, Priority::Batch)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(coord.save_snapshot(&dir).unwrap(), 2);
+    }
+    let mut cfg = CoordinatorConfig::sim_fleet_mixed(vec![
+        (big_spec(), 1),
+        (small_spec(), 1),
+    ]);
+    cfg.snapshot_dir = Some(dir.clone());
+    let warm = Coordinator::new(cfg).unwrap();
+    let s = random_args(&ctx, nparams, SMALL_ITEMS, &mut rng);
+    let r1 = warm
+        .submit(cheb.source, &s, SMALL_ITEMS, Priority::Interactive)
+        .unwrap()
+        .wait()
+        .unwrap();
+    let w = random_args(&ctx, nparams, WIDE_ITEMS, &mut rng);
+    let r2 = warm
+        .submit(cheb.source, &w, WIDE_ITEMS, Priority::Batch)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(r1.cache_hit && r2.cache_hit, "warm fleet recompiled");
+    assert_eq!(r1.verified, Some(true));
+    assert_eq!(r2.verified, Some(true));
+    let stats = warm.stats();
+    assert_eq!(stats.cache.misses, 0);
+    assert_eq!(stats.compile_seconds, 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
