@@ -1,9 +1,13 @@
 # overlay-jit build + CI entry points.
 #
 #   make check      — fmt --check, clippy -D warnings, cargo test -q,
-#                     cargo bench --no-run (bench code must keep compiling)
+#                     cargo bench --no-run (bench code must keep
+#                     compiling), cargo doc --no-deps warning-clean
 #   make build      — release build (tier-1 first half)
 #   make test       — cargo test -q (tier-1 second half)
+#   make soak       — long-form autoscale convergence soak (fixed
+#                     seed; #[ignore]d in the default suite). Wired
+#                     into CI as a separate non-blocking job.
 #   make bench      — the paper-figure + serving bench harnesses
 #   make artifacts  — AOT-lower the Pallas overlay emulator to HLO text
 #                     (needs the Python jax/pallas toolchain; only
@@ -12,9 +16,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy build test bench bench-build artifacts
+.PHONY: check fmt clippy build test soak bench bench-build doc artifacts
 
-check: fmt clippy test bench-build
+check: fmt clippy test bench-build doc
 
 fmt:
 	$(CARGO) fmt --check
@@ -28,15 +32,26 @@ build:
 test:
 	$(CARGO) test -q
 
+# the long-form autoscale convergence test: six wide<->small phase
+# cycles with a fixed seed, asserting exactly one scale event per
+# phase shift (no flapping) and pure cache hits from the second cycle
+soak:
+	$(CARGO) test --release --test autoscale -- --ignored --nocapture
+
 bench:
 	$(CARGO) bench --bench serve_throughput
 	$(CARGO) bench --bench fleet_routing
+	$(CARGO) bench --bench autoscale
 	$(CARGO) bench --bench hotpath
 
 # compile every bench harness without running it — keeps bench code
-# (fleet_routing included) from silently rotting in CI
+# (fleet_routing, autoscale included) from silently rotting in CI
 bench-build:
 	$(CARGO) bench --no-run
+
+# rustdoc must stay warning-clean (broken intra-doc links rot fast)
+doc:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps --quiet
 
 artifacts:
 	cd python/compile && $(PYTHON) aot.py --out-dir ../../artifacts

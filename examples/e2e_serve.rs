@@ -20,6 +20,19 @@
 //! dispatch fails verification, the caches never hit, a spec serves
 //! no kernel, or any cross-spec cache hit occurs.
 //!
+//! **Autoscale mode** — `cargo run --release --example e2e_serve --
+//! autoscale` — a **phase-shifting** load against an autoscaling
+//! fleet (2× 8×8-dsp2): chebyshev is streamed wide (16384 items,
+//! demand 16 = its plan ceiling), then small (512 items, demand 1),
+//! then wide, then small again. The feedback loop must scale the
+//! replication factor down to 1, back up to 16, and down again —
+//! with the second cycle served **entirely from the kernel cache**
+//! (scaling back to a previously compiled factor pays no JIT). The
+//! run fails (non-zero exit) unless the `ScaleEvent` log shows ≥ 1
+//! scale-up and ≥ 1 scale-down, every swap completed with zero
+//! failed in-flight handles, cache misses did not grow across the
+//! second cycle, and every dispatch stayed simulator-verified.
+//!
 //! **PJRT mode** — `make artifacts && cargo run --release --features
 //! pjrt --example e2e_serve -- pjrt` — the original single-device
 //! path: JIT-compiles the six benchmarks and serves batched requests
@@ -28,7 +41,7 @@
 //! agreement. Requires the `pjrt` cargo feature and `make artifacts`.
 //!
 //! Results are recorded in EXPERIMENTS.md (§E7 PJRT, §E8 coordinator,
-//! §E9 heterogeneous fleet).
+//! §E9 heterogeneous fleet, §E10 adaptive scaling).
 
 use std::time::Instant;
 
@@ -57,6 +70,7 @@ fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     match args.first().map(String::as_str) {
         Some("pjrt") => serve_pjrt(),
+        Some("autoscale") => serve_autoscale(),
         Some("coordinator") | None => {
             let per_spec = args
                 .get(1)
@@ -64,8 +78,155 @@ fn main() -> Result<()> {
                 .unwrap_or(2);
             serve_coordinator(per_spec)
         }
-        Some(other) => bail!("unknown mode '{other}' (coordinator [N] | pjrt)"),
+        Some(other) => bail!("unknown mode '{other}' (coordinator [N] | autoscale | pjrt)"),
     }
+}
+
+// ---------------------------------------------------------------------
+// autoscale mode: phase-shifting load against the feedback loop
+// ---------------------------------------------------------------------
+
+fn serve_autoscale() -> Result<()> {
+    use overlay_jit::autoscale::{ScaleDirection, ScaleOutcome};
+
+    let spec = reference_overlay();
+    let mut cfg = CoordinatorConfig::sim_fleet(spec.clone(), 2);
+    cfg.autoscale = Some(AutoscalePolicy::default());
+    let coord = Coordinator::new(cfg)?;
+
+    let host = Device {
+        spec: spec.clone(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    let ctx = Context::new(&host);
+    let mut rng = XorShiftRng::new(0xADA7);
+    let cheb = &BENCHMARKS[0];
+
+    // wide wants 16 copies (chebyshev's 8×8 ceiling); small wants 1
+    const PHASES: [(&str, usize, usize); 4] = [
+        ("wide", WIDE_ITEMS, 24),
+        ("small", SMALL_ITEMS, 24),
+        ("wide", WIDE_ITEMS, 24),
+        ("small", SMALL_ITEMS, 24),
+    ];
+    println!(
+        "phase-shifting chebyshev stream on 2x {}: {} phases \
+         (wide {WIDE_ITEMS} / small {SMALL_ITEMS} items)\n",
+        spec.name(),
+        PHASES.len()
+    );
+
+    let mut misses_after_first_cycle = 0;
+    let t_serve = Instant::now();
+    for (pi, (label, items, dispatches)) in PHASES.iter().enumerate() {
+        for _ in 0..*dispatches {
+            let args: Vec<SubmitArg> = (0..2)
+                .map(|_| {
+                    let buf = ctx.create_buffer(items + 16);
+                    let data: Vec<i32> = (0..items + 16)
+                        .map(|_| rng.gen_i64(-40, 40) as i32)
+                        .collect();
+                    buf.write(&data);
+                    SubmitArg::Buffer(buf)
+                })
+                .collect();
+            // every handle must complete: swaps may not fail in-flight
+            // work
+            let r = coord
+                .submit(cheb.source, &args, *items, Priority::Interactive)?
+                .wait()?;
+            if r.verified != Some(true) {
+                bail!("phase {label}: dispatch diverged from the cycle simulator");
+            }
+        }
+        coord.drain_background();
+        let stats = coord.stats();
+        // the first cycle is phases 0+1 (wide, small): everything the
+        // stream will ever need — the plan-factor artifact and the
+        // factor-1 variant — has compiled by the end of phase 1, so
+        // the entire second cycle (phases 2+3, scale-up included)
+        // must be cache hits
+        if pi == 1 {
+            misses_after_first_cycle = stats.cache.misses;
+        }
+        println!(
+            "phase {pi} ({label:5}): {} dispatches, factor log {} events, \
+             {} cache misses so far",
+            dispatches,
+            coord.scale_log().len(),
+            stats.cache.misses
+        );
+    }
+    let serve_s = t_serve.elapsed().as_secs_f64();
+
+    // the audit trail
+    let events = coord.scale_log();
+    let mut table = TextTable::new(vec![
+        "seq", "kernel", "spec", "dir", "from", "to", "mean demand", "cache hit",
+    ]);
+    for e in &events {
+        let hit = match &e.outcome {
+            ScaleOutcome::Applied { cache_hit, .. } => {
+                if *cache_hit {
+                    "hit"
+                } else {
+                    "compile"
+                }
+            }
+            ScaleOutcome::Failed { .. } => "FAILED",
+        };
+        table.row(vec![
+            e.seq.to_string(),
+            e.kernel.clone(),
+            e.spec.clone(),
+            e.direction.name().to_string(),
+            e.from_factor.to_string(),
+            e.to_factor.to_string(),
+            format!("{:.2}", e.trigger.mean_demand),
+            hit.to_string(),
+        ]);
+    }
+    println!("\n{}", table.render());
+    let stats = coord.stats();
+    println!("{}", stats.render());
+    println!(
+        "throughput : {:.2} Mitems/s end-to-end ({} dispatches in {:.2} s)\n",
+        stats.total_items as f64 / serve_s / 1e6,
+        stats.total_dispatches,
+        serve_s
+    );
+
+    // acceptance: ≥1 up and ≥1 down, zero failed handles, cache
+    // misses frozen across the second cycle, everything verified
+    let ups = events.iter().filter(|e| e.direction == ScaleDirection::Up).count();
+    let downs = events.iter().filter(|e| e.direction == ScaleDirection::Down).count();
+    if ups < 1 || downs < 1 {
+        bail!("expected >=1 scale-up and >=1 scale-down, got {ups} up / {downs} down");
+    }
+    if stats.dispatch_errors > 0 {
+        bail!("{} in-flight handles failed during rescales", stats.dispatch_errors);
+    }
+    if stats.verify_failures > 0 {
+        bail!("verification failure under rescaling");
+    }
+    if stats.cache.misses != misses_after_first_cycle {
+        bail!(
+            "cache misses grew across the second cycle ({} -> {}): scale-backs \
+             did not hit the kernel cache",
+            misses_after_first_cycle,
+            stats.cache.misses
+        );
+    }
+    let a = stats.autoscale.expect("autoscaler configured");
+    if a.failed_rescales > 0 {
+        bail!("{} rescales failed to compile", a.failed_rescales);
+    }
+    println!(
+        "OK: {} scale-ups, {} scale-downs, {} rescale cache hits, misses frozen at {}",
+        a.scale_ups, a.scale_downs, a.rescale_cache_hits, stats.cache.misses
+    );
+    Ok(())
 }
 
 // ---------------------------------------------------------------------

@@ -1,0 +1,552 @@
+//! Adaptive runtime performance scaling: the feedback loop from
+//! observed serving metrics back into the JIT compiler.
+//!
+//! The paper's premise is that overlay JIT compilation is fast enough
+//! to manage kernels *at run time*; everything below
+//! [`crate::coordinator`] nevertheless froze each kernel's replication
+//! factor at first compile. This module closes the loop:
+//!
+//! ```text
+//!  submit ──▶ router ──▶ shard ──▶ partitions ──▶ completions
+//!    │                                                │
+//!    │  demand, queue depth                 latency, modeled time
+//!    ▼                                                ▼
+//!  [LoadSignal per (kernel, spec)]  ◀─────────────────┘
+//!    │ window full, cooldown elapsed
+//!    ▼
+//!  [AutoscalePolicy] — hysteresis bands + queue floors (provably
+//!    │                 oscillation-free; see `policy` docs)
+//!    ▼ ScaleProposal
+//!  background lane ──▶ JitCompiler::compile_at_factor (cache-keyed
+//!    │                 per factor: scale-backs are cache **hits**)
+//!    ▼
+//!  atomic variant swap — in-flight dispatches keep their Arc'd
+//!  kernel; the next submit routes, schedules and reconfigures for
+//!  the new factor. Every decision lands in the bounded ScaleEvent
+//!  audit log, mirroring the fleet's RouteRecord.
+//! ```
+//!
+//! The [`Autoscaler`] owns the signals, the policy state (cooldowns,
+//! queue floors, pending flags) and the audit log; the
+//! [`crate::coordinator::Coordinator`] owns the background compile
+//! lane and calls in from both ends of the dispatch path. Nothing
+//! here spawns threads or touches devices, which keeps every scaling
+//! decision unit-testable.
+
+mod policy;
+mod rescaler;
+mod signal;
+
+pub use policy::{AutoscalePolicy, QueueFloor, ScaleDecision, ScaleDirection};
+pub use rescaler::{BgTask, Rescaler};
+pub use signal::{LoadSignal, SignalSnapshot};
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::compiler::ServableKernel;
+use crate::coordinator::CacheKey;
+use crate::metrics::AutoscaleStats;
+
+/// (kernel, spec) pairs tracked at once. Signals are tiny, but the
+/// serving layer's memory must stay flat however many distinct
+/// sources a long-running fleet sees; past the bound new kernels
+/// simply serve at their frozen plan (mirrors the fleet's profile
+/// cache bound).
+const MAX_TRACKED: usize = 1024;
+
+/// The non-default replication variant currently serving one
+/// (kernel, spec) pair. In-flight dispatches hold their own `Arc`, so
+/// installing a new variant never invalidates running work.
+#[derive(Debug, Clone)]
+pub struct ActiveVariant {
+    pub factor: usize,
+    /// Kernel-cache key of the variant (its options fingerprint embeds
+    /// the fixed factor, so per-factor bitstreams coexist in the cache
+    /// and per-factor residency is tracked by the slot scheduler).
+    pub key: CacheKey,
+    pub servable: Arc<ServableKernel>,
+}
+
+/// A policy-approved rescale awaiting its background compile.
+#[derive(Debug, Clone)]
+pub struct ScaleProposal {
+    pub kernel: String,
+    pub source: String,
+    pub source_hash: u64,
+    pub spec: String,
+    pub spec_fp: u64,
+    pub from_factor: usize,
+    pub to_factor: usize,
+    /// Resource-aware replication bound on this spec; a target equal
+    /// to it reverts the kernel to its default (plan-factor) artifact.
+    pub ceiling: usize,
+    pub direction: ScaleDirection,
+    /// Whether queue pressure (not demand alone) drove the decision.
+    pub queue_triggered: bool,
+    /// The signal the decision was made from.
+    pub trigger: SignalSnapshot,
+}
+
+/// Terminal outcome of a proposal.
+#[derive(Debug, Clone)]
+pub enum ScaleOutcome {
+    /// The variant compiled (or was already cached) and now serves.
+    Applied {
+        /// The target factor's artifact was already resident in the
+        /// kernel cache — no JIT was paid.
+        cache_hit: bool,
+        /// Wall seconds the background lane spent on this rescale.
+        compile_seconds: f64,
+    },
+    /// The background compile failed; the previous factor keeps
+    /// serving and the cooldown delays a retry.
+    Failed { error: String },
+}
+
+/// One audited scaling decision — the autoscaler's analogue of the
+/// fleet's [`crate::fleet::RouteRecord`].
+#[derive(Debug, Clone)]
+pub struct ScaleEvent {
+    /// Monotone sequence number (gaps impossible; the log is bounded
+    /// but `dropped` says how many events fell off the end).
+    pub seq: u64,
+    pub kernel: String,
+    pub source_hash: u64,
+    pub spec: String,
+    pub spec_fp: u64,
+    pub from_factor: usize,
+    pub to_factor: usize,
+    pub direction: ScaleDirection,
+    pub queue_triggered: bool,
+    /// The load signal the policy evaluated.
+    pub trigger: SignalSnapshot,
+    pub outcome: ScaleOutcome,
+}
+
+/// Submit-side observation handed to [`Autoscaler::note_submit`].
+#[derive(Debug, Clone, Copy)]
+pub struct SubmitObservation<'a> {
+    pub kernel: &'a str,
+    pub source: &'a str,
+    pub source_hash: u64,
+    pub spec: &'a str,
+    pub spec_fp: u64,
+    /// Copies this dispatch wants (the router's demand).
+    pub demand: usize,
+    /// Shallowest queue among the serving spec's partitions.
+    pub queue_depth: usize,
+    /// Factor the dispatch is actually served at.
+    pub factor: usize,
+    /// Resource-aware replication ceiling on the serving spec.
+    pub ceiling: usize,
+}
+
+struct KernelScaleState {
+    source: String,
+    kernel: String,
+    signal: LoadSignal,
+    active: Option<ActiveVariant>,
+    /// A proposal is in the background lane; suppress re-evaluation
+    /// until it lands.
+    pending: bool,
+    /// Submits since the last applied/failed event (`None` before the
+    /// first event — the first evaluation is gated by the window
+    /// alone).
+    since_event: Option<usize>,
+    floor: Option<QueueFloor>,
+}
+
+#[derive(Default)]
+struct EventLog {
+    events: Vec<ScaleEvent>,
+    dropped: u64,
+    seq: u64,
+    ups: u64,
+    downs: u64,
+    failed: u64,
+    cache_hits: u64,
+    compile_seconds: f64,
+}
+
+/// The feedback-driven autoscaler. Shared (`Arc`) between the
+/// coordinator's submit path, its partition workers and its
+/// background rescale lane.
+pub struct Autoscaler {
+    policy: AutoscalePolicy,
+    state: Mutex<HashMap<(u64, u64), KernelScaleState>>,
+    log: Mutex<EventLog>,
+}
+
+impl std::fmt::Debug for Autoscaler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // lock order everywhere is state → log (see `stats`)
+        let tracked = self.state.lock().unwrap().len();
+        let log = self.log.lock().unwrap();
+        f.debug_struct("Autoscaler")
+            .field("tracked", &tracked)
+            .field("events", &(log.ups + log.downs + log.failed))
+            .finish()
+    }
+}
+
+impl Autoscaler {
+    /// Build an autoscaler around a validated policy (the coordinator
+    /// calls [`AutoscalePolicy::validate`] first).
+    pub fn new(policy: AutoscalePolicy) -> Autoscaler {
+        Autoscaler {
+            policy,
+            state: Mutex::new(HashMap::new()),
+            log: Mutex::new(EventLog::default()),
+        }
+    }
+
+    pub fn policy(&self) -> &AutoscalePolicy {
+        &self.policy
+    }
+
+    /// The variant currently serving a (kernel, spec), if the factor
+    /// has been moved off the frozen plan.
+    pub fn active(&self, source_hash: u64, spec_fp: u64) -> Option<ActiveVariant> {
+        self.state
+            .lock()
+            .unwrap()
+            .get(&(source_hash, spec_fp))
+            .and_then(|s| s.active.clone())
+    }
+
+    /// [`Autoscaler::active`] for every spec of a fleet in one lock
+    /// acquisition — the submit hot path calls this once per dispatch
+    /// instead of once per shard.
+    pub fn active_all(&self, source_hash: u64, spec_fps: &[u64]) -> Vec<Option<ActiveVariant>> {
+        let state = self.state.lock().unwrap();
+        spec_fps
+            .iter()
+            .map(|&fp| state.get(&(source_hash, fp)).and_then(|s| s.active.clone()))
+            .collect()
+    }
+
+    /// Record one routed dispatch and evaluate the policy. Returns a
+    /// proposal when the load has persistently crossed a hysteresis
+    /// band; the caller owns executing it (background compile + an
+    /// eventual [`Autoscaler::install`] / [`Autoscaler::fail`]).
+    pub fn note_submit(&self, obs: &SubmitObservation) -> Option<ScaleProposal> {
+        let mut state = self.state.lock().unwrap();
+        let key = (obs.source_hash, obs.spec_fp);
+        if !state.contains_key(&key) && state.len() >= MAX_TRACKED {
+            return None;
+        }
+        let st = state.entry(key).or_insert_with(|| KernelScaleState {
+            source: obs.source.to_string(),
+            kernel: obs.kernel.to_string(),
+            signal: LoadSignal::new(self.policy.window),
+            active: None,
+            pending: false,
+            since_event: None,
+            floor: None,
+        });
+        st.signal.record_submit(obs.demand, obs.queue_depth);
+        if let Some(n) = st.since_event.as_mut() {
+            *n += 1;
+        }
+        if st.pending || !st.signal.warmed_up() {
+            return None;
+        }
+        if st.since_event.is_some_and(|n| n < self.policy.cooldown) {
+            return None;
+        }
+        let snapshot = st.signal.snapshot();
+        let decision =
+            self.policy
+                .evaluate(&snapshot, obs.factor, obs.ceiling, &mut st.floor)?;
+        // (the queue floor a queue-triggered up ratchets is recorded
+        // in `install`, once the rescale actually lands — a failed
+        // compile must not leave a floor that blocks scale-downs)
+        st.pending = true;
+        Some(ScaleProposal {
+            kernel: st.kernel.clone(),
+            source: st.source.clone(),
+            source_hash: obs.source_hash,
+            spec: obs.spec.to_string(),
+            spec_fp: obs.spec_fp,
+            from_factor: obs.factor,
+            to_factor: decision.target,
+            ceiling: obs.ceiling,
+            direction: decision.direction,
+            queue_triggered: decision.queue_triggered,
+            trigger: snapshot,
+        })
+    }
+
+    /// Record one completed dispatch (worker side): end-to-end latency
+    /// and the modeled execution time.
+    pub fn note_complete(
+        &self,
+        source_hash: u64,
+        spec_fp: u64,
+        latency_ms: f64,
+        modeled_ms: f64,
+    ) {
+        if let Some(st) = self.state.lock().unwrap().get_mut(&(source_hash, spec_fp)) {
+            st.signal.record_complete(latency_ms, modeled_ms);
+        }
+    }
+
+    /// Atomically swap the served variant after a successful
+    /// background compile. A target equal to the spec's plan ceiling
+    /// reverts to the default artifact (no variant entry — the base
+    /// cache key serves again). In-flight dispatches are untouched:
+    /// they hold their own `Arc` to whatever kernel they were bound
+    /// to.
+    pub fn install(
+        &self,
+        proposal: &ScaleProposal,
+        servable: Arc<ServableKernel>,
+        key: CacheKey,
+        cache_hit: bool,
+        compile_seconds: f64,
+    ) {
+        {
+            let mut state = self.state.lock().unwrap();
+            if let Some(st) = state.get_mut(&(proposal.source_hash, proposal.spec_fp)) {
+                st.active = if proposal.to_factor == proposal.ceiling {
+                    None
+                } else {
+                    Some(ActiveVariant {
+                        factor: proposal.to_factor,
+                        key,
+                        servable,
+                    })
+                };
+                if proposal.queue_triggered {
+                    // the pre-scale factor was observed queue-bound:
+                    // ratchet the anti-flap floor, tagged with the
+                    // demand regime the queueing belonged to
+                    st.floor = Some(QueueFloor {
+                        min_factor: proposal.from_factor + 1,
+                        demand_at_set: proposal.trigger.mean_demand,
+                    });
+                }
+                st.pending = false;
+                st.since_event = Some(0);
+            }
+        }
+        let mut log = self.log.lock().unwrap();
+        match proposal.direction {
+            ScaleDirection::Up => log.ups += 1,
+            ScaleDirection::Down => log.downs += 1,
+        }
+        if cache_hit {
+            log.cache_hits += 1;
+        }
+        log.compile_seconds += compile_seconds;
+        let outcome = ScaleOutcome::Applied { cache_hit, compile_seconds };
+        Self::push_event(&mut log, &self.policy, proposal, outcome);
+    }
+
+    /// Record a failed background compile: the previous factor keeps
+    /// serving, the cooldown delays a retry.
+    pub fn fail(&self, proposal: &ScaleProposal, error: &str) {
+        {
+            let mut state = self.state.lock().unwrap();
+            if let Some(st) = state.get_mut(&(proposal.source_hash, proposal.spec_fp)) {
+                st.pending = false;
+                st.since_event = Some(0);
+            }
+        }
+        let mut log = self.log.lock().unwrap();
+        log.failed += 1;
+        let outcome = ScaleOutcome::Failed { error: error.to_string() };
+        Self::push_event(&mut log, &self.policy, proposal, outcome);
+    }
+
+    fn push_event(
+        log: &mut EventLog,
+        policy: &AutoscalePolicy,
+        p: &ScaleProposal,
+        outcome: ScaleOutcome,
+    ) {
+        let seq = log.seq;
+        log.seq += 1;
+        let event = ScaleEvent {
+            seq,
+            kernel: p.kernel.clone(),
+            source_hash: p.source_hash,
+            spec: p.spec.clone(),
+            spec_fp: p.spec_fp,
+            from_factor: p.from_factor,
+            to_factor: p.to_factor,
+            direction: p.direction,
+            queue_triggered: p.queue_triggered,
+            trigger: p.trigger,
+            outcome,
+        };
+        if log.events.len() < policy.max_events {
+            log.events.push(event);
+        } else {
+            log.dropped += 1;
+        }
+    }
+
+    /// The retained scale events (oldest first, bounded by
+    /// [`AutoscalePolicy::max_events`]).
+    pub fn events(&self) -> Vec<ScaleEvent> {
+        self.log.lock().unwrap().events.clone()
+    }
+
+    pub fn stats(&self) -> AutoscaleStats {
+        let state = self.state.lock().unwrap();
+        let log = self.log.lock().unwrap();
+        AutoscaleStats {
+            scale_ups: log.ups,
+            scale_downs: log.downs,
+            failed_rescales: log.failed,
+            rescale_cache_hits: log.cache_hits,
+            rescale_compile_seconds: log.compile_seconds,
+            active_variants: state.values().filter(|s| s.active.is_some()).count(),
+            tracked_kernels: state.len(),
+            events_dropped: log.dropped,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::JitCompiler;
+    use crate::overlay::{FuType, OverlaySpec};
+
+    fn servable() -> Arc<ServableKernel> {
+        let jit = JitCompiler::new(OverlaySpec::new(4, 4, FuType::Dsp2));
+        Arc::new(jit.compile(crate::bench_kernels::CHEBYSHEV).unwrap().servable())
+    }
+
+    fn obs(demand: usize, factor: usize) -> SubmitObservation<'static> {
+        SubmitObservation {
+            kernel: "chebyshev",
+            source: crate::bench_kernels::CHEBYSHEV,
+            source_hash: 7,
+            spec: "8x8-dsp2",
+            spec_fp: 0xA,
+            demand,
+            queue_depth: 0,
+            factor,
+            ceiling: 16,
+        }
+    }
+
+    fn policy4() -> AutoscalePolicy {
+        AutoscalePolicy { window: 4, cooldown: 4, ..Default::default() }
+    }
+
+    #[test]
+    fn proposals_wait_for_a_full_window_and_respect_pending() {
+        let a = Autoscaler::new(policy4());
+        // three under-provisioned submits: window not full yet
+        for _ in 0..3 {
+            assert!(a.note_submit(&obs(1, 16)).is_none());
+        }
+        let p = a.note_submit(&obs(1, 16)).expect("fourth submit fills the window");
+        assert_eq!(p.direction, ScaleDirection::Down);
+        assert_eq!((p.from_factor, p.to_factor), (16, 1));
+        assert_eq!(p.trigger.samples, 4);
+        // pending: no second proposal until the first lands
+        assert!(a.note_submit(&obs(1, 16)).is_none());
+        let k = CacheKey { source: 7, spec: 0xA, options: 1 };
+        a.install(&p, servable(), k, false, 0.25);
+        let v = a.active(7, 0xA).expect("variant active after install");
+        assert_eq!(v.factor, 1);
+        assert_eq!(v.key, k);
+        // the batched lookup agrees with the per-spec one
+        let all = a.active_all(7, &[0xA, 0xB]);
+        assert_eq!(all[0].as_ref().map(|v| v.factor), Some(1));
+        assert!(all[1].is_none());
+        let s = a.stats();
+        assert_eq!(s.scale_downs, 1);
+        assert_eq!(s.active_variants, 1);
+        assert!((s.rescale_compile_seconds - 0.25).abs() < 1e-12);
+        // cooldown: the next 3 submits cannot re-propose
+        for _ in 0..3 {
+            assert!(a.note_submit(&obs(1, 1)).is_none());
+        }
+    }
+
+    #[test]
+    fn installing_the_ceiling_factor_reverts_to_the_default_artifact() {
+        let a = Autoscaler::new(policy4());
+        for _ in 0..4 {
+            let _ = a.note_submit(&obs(1, 16));
+        }
+        let down = a.events(); // no events yet — proposals aren't events
+        assert!(down.is_empty());
+        let p = ScaleProposal {
+            kernel: "chebyshev".into(),
+            source: crate::bench_kernels::CHEBYSHEV.into(),
+            source_hash: 7,
+            spec: "8x8-dsp2".into(),
+            spec_fp: 0xA,
+            from_factor: 1,
+            to_factor: 16,
+            ceiling: 16,
+            direction: ScaleDirection::Up,
+            queue_triggered: false,
+            trigger: LoadSignal::new(4).snapshot(),
+        };
+        let k = CacheKey { source: 7, spec: 0xA, options: 0 };
+        a.install(&p, servable(), k, true, 0.0);
+        assert!(a.active(7, 0xA).is_none(), "ceiling install clears the variant");
+        let s = a.stats();
+        assert_eq!(s.scale_ups, 1);
+        assert_eq!(s.rescale_cache_hits, 1);
+        assert_eq!(s.active_variants, 0);
+    }
+
+    #[test]
+    fn failed_rescales_keep_serving_and_audit_the_error() {
+        let a = Autoscaler::new(policy4());
+        let mut p = None;
+        for _ in 0..4 {
+            p = a.note_submit(&obs(1, 16));
+        }
+        let p = p.unwrap();
+        a.fail(&p, "placement exploded");
+        assert!(a.active(7, 0xA).is_none());
+        let events = a.events();
+        assert_eq!(events.len(), 1);
+        assert!(matches!(
+            &events[0].outcome,
+            ScaleOutcome::Failed { error } if error.contains("placement")
+        ));
+        assert_eq!(a.stats().failed_rescales, 1);
+        // the cooldown now gates a retry
+        assert!(a.note_submit(&obs(1, 16)).is_none());
+    }
+
+    #[test]
+    fn event_log_is_bounded_with_monotone_sequence_numbers() {
+        let mut policy = policy4();
+        policy.max_events = 2;
+        let a = Autoscaler::new(policy);
+        let k = CacheKey { source: 7, spec: 0xA, options: 1 };
+        for round in 0..5usize {
+            // alternate factors so a proposal fires each round
+            let (factor, _want) = if round % 2 == 0 { (16, 1) } else { (1, 16) };
+            let demand = if round % 2 == 0 { 1 } else { 16 };
+            let mut p = None;
+            for _ in 0..8 {
+                if let Some(got) = a.note_submit(&obs(demand, factor)) {
+                    p = Some(got);
+                }
+            }
+            let p = p.expect("each phase crosses a band");
+            a.install(&p, servable(), k, round > 0, 0.0);
+        }
+        let events = a.events();
+        assert_eq!(events.len(), 2, "log bounded at max_events");
+        assert_eq!(events[0].seq, 0);
+        assert_eq!(events[1].seq, 1);
+        let s = a.stats();
+        assert_eq!(s.events_dropped, 3);
+        assert_eq!(s.applied(), 5);
+    }
+}

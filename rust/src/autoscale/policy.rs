@@ -1,0 +1,335 @@
+//! The scale policy: when to re-replicate, and why it cannot
+//! oscillate.
+//!
+//! A kernel's replication factor starts at the resource-aware ceiling
+//! ([`crate::replicate::plan`]'s factor — the FU/IO bound the paper's
+//! §III-C computes). The policy proposes a different factor only when
+//! the observed load persistently disagrees with it:
+//!
+//! * **Scale down** when the windowed *mean* copy demand sits at or
+//!   below `factor × down_ratio` — the kernel is over-provisioned and
+//!   its extra copies idle on short streams while hogging FUs and
+//!   inflating every reconfiguration of its (larger) bitstream.
+//! * **Scale up** when the windowed mean demand reaches
+//!   `factor × up_ratio`, or the spec's queues are persistently deep
+//!   (`mean_queue ≥ queue_hi`) — the kernel is queue-bound and wider
+//!   replication shortens every dispatch.
+//!
+//! The proposed **target** is `ceil(max demand over the window)`
+//! clamped to `[1, ceiling]` (queue-triggered scale-ups take at least
+//! a doubling). Using the window *max* for the target and the window
+//! *mean* for the trigger makes targets a function of the workload
+//! phase rather than of how the sliding window happens to straddle a
+//! phase boundary — which is what keeps rescale targets (and hence
+//! kernel-cache keys) deterministic per phase.
+//!
+//! # Why this provably cannot oscillate
+//!
+//! Consider a constant workload: every dispatch wants `d` copies and
+//! the queue signal is stationary. Then:
+//!
+//! 1. A demand-driven event moves the factor to `t = clamp(⌈d⌉, 1,
+//!    ceiling)`, which is a **fixed point**: the up trigger needs
+//!    `d ≥ t × up_ratio > t ≥ d` (impossible, since `up_ratio > 1`),
+//!    and the down trigger needs `d ≤ t × down_ratio < t − ½ < d` for
+//!    every `t ≥ 2` (impossible, since `down_ratio < ½` and
+//!    `d > t − 1`), while from `t = 1` there is nowhere down to go.
+//!    [`AutoscalePolicy::validate`] rejects bands that violate these
+//!    inequalities, so the two trigger conditions can never overlap.
+//! 2. A queue-driven scale-up from factor `f` records a **floor** of
+//!    `f + 1` tagged with the demand regime it was observed under.
+//!    While the regime holds (mean demand within `regime_band` of the
+//!    recorded value), no scale-down may go below the floor — so a
+//!    kernel proven queue-bound at `f` can never return to `f`, which
+//!    removes the classic down/up flap where added capacity drains
+//!    the queue, tempts a scale-down, and immediately re-queues.
+//!    Under a constant workload the regime never changes, the floor
+//!    never clears, and queue-driven ups are monotone and bounded by
+//!    the ceiling.
+//! 3. A **cooldown** of at least one full window between events means
+//!    every evaluation sees only post-event samples — no decision is
+//!    ever made on a window polluted by pre-scale queue depths.
+//!
+//! Together: under any constant workload the factor sequence is a
+//! (possibly empty) run of monotone queue-driven ups followed by at
+//! most one demand-driven move to a fixed point — finitely many
+//! events, then **zero** forever. The property test in
+//! `rust/tests/autoscale.rs` asserts exactly that, and the unit tests
+//! below sweep the fixed-point inequalities. When the workload *does*
+//! shift phase, the regime tag no longer matches, floors clear, and
+//! the policy converges on the new phase by the same argument.
+
+use anyhow::{bail, Result};
+
+use super::signal::SignalSnapshot;
+
+/// Direction of a proposed or applied rescale.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDirection {
+    Up,
+    Down,
+}
+
+impl ScaleDirection {
+    pub fn name(self) -> &'static str {
+        match self {
+            ScaleDirection::Up => "up",
+            ScaleDirection::Down => "down",
+        }
+    }
+}
+
+/// Anti-flap floor recorded by a queue-driven scale-up: the factor
+/// below it was observed queue-bound, so scale-downs must not return
+/// there while the demand regime that produced the queueing persists.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueFloor {
+    /// Scale-downs may not go below this factor.
+    pub min_factor: usize,
+    /// Mean demand when the floor was set — the regime tag.
+    pub demand_at_set: f64,
+}
+
+/// What the policy decided for one evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleDecision {
+    pub target: usize,
+    pub direction: ScaleDirection,
+    /// Whether deep queues (rather than demand alone) drove the
+    /// decision — such scale-ups record a [`QueueFloor`].
+    pub queue_triggered: bool,
+}
+
+/// Tunable knobs of the feedback loop. Construct, adjust, then let
+/// [`crate::coordinator::Coordinator::new`] call
+/// [`AutoscalePolicy::validate`].
+#[derive(Debug, Clone)]
+pub struct AutoscalePolicy {
+    /// Submit-side samples required (and retained) per evaluation —
+    /// the sliding-window length.
+    pub window: usize,
+    /// Submits after an applied (or failed) rescale before the next
+    /// evaluation. Must be ≥ `window` so every decision is made on a
+    /// fully post-event window.
+    pub cooldown: usize,
+    /// Scale up when mean demand ≥ `factor × up_ratio` (> 1.0).
+    pub up_ratio: f64,
+    /// Scale down when mean demand ≤ `factor × down_ratio` (< 0.5 —
+    /// see the module docs for why ½ is the oscillation bound).
+    pub down_ratio: f64,
+    /// Scale up (toward at least a doubling) when the mean queue
+    /// depth observed at submit time reaches this.
+    pub queue_hi: f64,
+    /// Fractional demand shift that counts as a regime change and
+    /// clears queue floors (e.g. 0.5 = mean demand moved ±50%).
+    pub regime_band: f64,
+    /// Scale events retained verbatim in the audit log; counters keep
+    /// counting after the buffer fills (mirrors
+    /// [`crate::fleet::RoutingPolicy::max_records`]).
+    pub max_events: usize,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        AutoscalePolicy {
+            window: 8,
+            cooldown: 8,
+            up_ratio: 1.5,
+            down_ratio: 0.45,
+            queue_hi: 4.0,
+            regime_band: 0.5,
+            max_events: 1024,
+        }
+    }
+}
+
+impl AutoscalePolicy {
+    /// Check the hysteresis invariants the no-oscillation argument
+    /// rests on (module docs). The coordinator refuses to start an
+    /// autoscaler whose bands could overlap.
+    pub fn validate(&self) -> Result<()> {
+        if self.window == 0 {
+            bail!("autoscale window must be at least 1 sample");
+        }
+        if self.cooldown < self.window {
+            bail!(
+                "autoscale cooldown ({}) must cover the window ({}) so \
+                 evaluations never see pre-event samples",
+                self.cooldown,
+                self.window
+            );
+        }
+        if self.up_ratio <= 1.0 {
+            bail!("up_ratio must exceed 1.0, got {}", self.up_ratio);
+        }
+        if !(0.0..0.5).contains(&self.down_ratio) {
+            bail!(
+                "down_ratio must lie in [0, 0.5) for the hysteresis bands \
+                 to be disjoint at every factor, got {}",
+                self.down_ratio
+            );
+        }
+        if self.queue_hi <= 0.0 {
+            bail!("queue_hi must be positive, got {}", self.queue_hi);
+        }
+        if self.regime_band <= 0.0 {
+            bail!("regime_band must be positive, got {}", self.regime_band);
+        }
+        if self.max_events == 0 {
+            bail!("max_events must be at least 1");
+        }
+        Ok(())
+    }
+
+    /// Evaluate one warmed-up snapshot against the current factor.
+    /// `ceiling` is the resource-aware replication bound for this
+    /// (kernel, spec); `floor` is the kernel's queue floor, cleared
+    /// here when the demand regime has shifted and (re)set by a
+    /// queue-triggered decision's caller. Returns `None` at a fixed
+    /// point.
+    pub fn evaluate(
+        &self,
+        s: &SignalSnapshot,
+        factor: usize,
+        ceiling: usize,
+        floor: &mut Option<QueueFloor>,
+    ) -> Option<ScaleDecision> {
+        // a shifted demand regime invalidates queue floors: the
+        // queueing they memorialized belonged to a different workload
+        if let Some(f) = *floor {
+            if (s.mean_demand - f.demand_at_set).abs()
+                > self.regime_band * f.demand_at_set.max(1.0)
+            {
+                *floor = None;
+            }
+        }
+
+        let demand_up = s.mean_demand >= factor as f64 * self.up_ratio;
+        let queue_up = s.mean_queue >= self.queue_hi;
+        if (demand_up || queue_up) && factor < ceiling {
+            let mut target = s.max_demand.max(1).min(ceiling);
+            if queue_up {
+                // queue-bound: take at least a doubling toward the
+                // ceiling even when per-dispatch demand looks small
+                target = target.max((factor * 2).min(ceiling));
+            }
+            if target > factor {
+                return Some(ScaleDecision {
+                    target,
+                    direction: ScaleDirection::Up,
+                    queue_triggered: queue_up && !demand_up,
+                });
+            }
+        }
+
+        if s.mean_demand <= factor as f64 * self.down_ratio {
+            let mut target = s.max_demand.max(1);
+            if let Some(f) = *floor {
+                target = target.max(f.min_factor);
+            }
+            let target = target.min(ceiling);
+            if target < factor {
+                return Some(ScaleDecision {
+                    target,
+                    direction: ScaleDirection::Down,
+                    queue_triggered: false,
+                });
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(mean_demand: f64, max_demand: usize, mean_queue: f64) -> SignalSnapshot {
+        SignalSnapshot {
+            samples: 8,
+            mean_demand,
+            max_demand,
+            mean_queue,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
+            mean_modeled_ms: 0.0,
+            submits: 8,
+            completions: 8,
+        }
+    }
+
+    #[test]
+    fn defaults_validate_and_bad_bands_are_rejected() {
+        AutoscalePolicy::default().validate().unwrap();
+        let overlap = AutoscalePolicy { down_ratio: 0.6, ..Default::default() };
+        assert!(overlap.validate().is_err());
+        let inverted = AutoscalePolicy { up_ratio: 0.9, ..Default::default() };
+        assert!(inverted.validate().is_err());
+        let short = AutoscalePolicy { cooldown: 2, window: 8, ..Default::default() };
+        assert!(short.validate().is_err());
+    }
+
+    #[test]
+    fn fixed_points_are_silent_at_every_demand() {
+        // the inequality sweep behind the no-oscillation proof: after
+        // converging to t = clamp(ceil(d)), neither band re-fires
+        let p = AutoscalePolicy::default();
+        for ceiling in [1usize, 5, 16, 64] {
+            for d in 1..=80usize {
+                let t = d.clamp(1, ceiling);
+                let mut floor = None;
+                let verdict = p.evaluate(&snap(d as f64, d, 0.0), t, ceiling, &mut floor);
+                assert!(
+                    verdict.is_none(),
+                    "demand {d} at factor {t} (ceiling {ceiling}) proposed {verdict:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn over_provisioned_kernels_scale_down_to_the_window_max() {
+        let p = AutoscalePolicy::default();
+        let mut floor = None;
+        let d = p.evaluate(&snap(1.0, 1, 0.0), 16, 16, &mut floor).unwrap();
+        assert_eq!(d.direction, ScaleDirection::Down);
+        assert_eq!(d.target, 1);
+        // a window still holding one wide sample keeps the target at
+        // the phase max — no event, because target == factor
+        assert!(p.evaluate(&snap(2.9, 16, 0.0), 16, 16, &mut floor).is_none());
+    }
+
+    #[test]
+    fn queue_bound_kernels_scale_up_and_record_a_floor() {
+        let p = AutoscalePolicy::default();
+        let mut floor = None;
+        // demand alone would not trigger (mean 1 < 2 * 1.5) but the
+        // queue is deep
+        let d = p.evaluate(&snap(1.0, 1, 6.0), 2, 16, &mut floor).unwrap();
+        assert_eq!(d.direction, ScaleDirection::Up);
+        assert_eq!(d.target, 4, "queue-triggered up doubles");
+        assert!(d.queue_triggered);
+        // the caller records the floor; a later down proposal honors it
+        floor = Some(QueueFloor { min_factor: 3, demand_at_set: 1.0 });
+        let down = p.evaluate(&snap(1.0, 1, 0.0), 8, 16, &mut floor).unwrap();
+        assert_eq!(down.direction, ScaleDirection::Down);
+        assert_eq!(down.target, 3, "scale-down clamped to the queue floor");
+        // a regime shift clears the floor and frees the full range
+        let down2 = p.evaluate(&snap(4.0, 4, 0.0), 16, 16, &mut floor);
+        assert!(floor.is_none(), "regime shift must clear the floor");
+        let down2 = down2.unwrap();
+        assert_eq!(down2.target, 4);
+    }
+
+    #[test]
+    fn demand_up_targets_the_phase_max_and_respects_the_ceiling() {
+        let p = AutoscalePolicy::default();
+        let mut floor = None;
+        let d = p.evaluate(&snap(4.0, 16, 0.0), 1, 16, &mut floor).unwrap();
+        assert_eq!(d.direction, ScaleDirection::Up);
+        assert_eq!(d.target, 16);
+        assert!(!d.queue_triggered);
+        // already at the ceiling: queue pressure proposes nothing
+        assert!(p.evaluate(&snap(40.0, 64, 9.0), 16, 16, &mut floor).is_none());
+    }
+}

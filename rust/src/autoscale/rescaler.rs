@@ -1,0 +1,228 @@
+//! The background compile lane: rescales (and periodic snapshots)
+//! happen off the dispatch path.
+//!
+//! A [`super::ScaleProposal`] costs a JIT compile — seconds-class, per
+//! the paper — so executing it inline would stall the very dispatch
+//! stream that triggered it. The [`Rescaler`] owns one background
+//! thread and a closeable task queue: the coordinator pushes
+//! [`BgTask::Rescale`] when the policy fires and [`BgTask::Snapshot`]
+//! on the [`crate::coordinator::CoordinatorConfig::snapshot_every`]
+//! cadence; the thread compiles the variant on the owning shard
+//! (scale-backs to a previously compiled factor are kernel-cache
+//! **hits**) and atomically installs it through
+//! [`super::Autoscaler::install`]. Serving never blocks: until the
+//! install lands, dispatches keep riding the previous factor.
+//!
+//! [`Rescaler::drain`] blocks until the lane is empty *and* idle —
+//! the hook tests and phase-shifting drivers use to make swap timing
+//! deterministic.
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use crate::fleet::Fleet;
+
+use super::{Autoscaler, ScaleProposal};
+
+/// Work items of the background lane.
+#[derive(Debug)]
+pub enum BgTask {
+    /// Compile `to_factor` on the owning shard and swap it in.
+    Rescale(ScaleProposal),
+    /// Flush every shard's kernel cache to the snapshot directory.
+    Snapshot,
+}
+
+struct BgState {
+    queue: VecDeque<BgTask>,
+    busy: bool,
+    closed: bool,
+}
+
+struct BgQueue {
+    state: Mutex<BgState>,
+    cv: Condvar,
+    /// Signalled whenever the lane becomes empty and idle.
+    idle_cv: Condvar,
+}
+
+/// The background worker: one thread, one task queue, shared counters.
+pub struct Rescaler {
+    queue: Arc<BgQueue>,
+    join: Option<thread::JoinHandle<()>>,
+    snapshots_written: Arc<AtomicU64>,
+    snapshot_errors: Arc<AtomicU64>,
+}
+
+impl std::fmt::Debug for Rescaler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Rescaler")
+            .field("queued", &self.queue.state.lock().unwrap().queue.len())
+            .finish()
+    }
+}
+
+impl Rescaler {
+    /// Spawn the lane. `autoscaler` handles rescale installs (may be
+    /// absent when the lane only snapshots); `snapshot_dir` receives
+    /// [`BgTask::Snapshot`] flushes.
+    pub fn spawn(
+        fleet: Arc<Fleet>,
+        autoscaler: Option<Arc<Autoscaler>>,
+        snapshot_dir: Option<PathBuf>,
+    ) -> Rescaler {
+        let queue = Arc::new(BgQueue {
+            state: Mutex::new(BgState {
+                queue: VecDeque::new(),
+                busy: false,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+            idle_cv: Condvar::new(),
+        });
+        let snapshots_written = Arc::new(AtomicU64::new(0));
+        let snapshot_errors = Arc::new(AtomicU64::new(0));
+        let worker_queue = queue.clone();
+        let written = snapshots_written.clone();
+        let errors = snapshot_errors.clone();
+        let join = thread::Builder::new()
+            .name("overlay-rescale".into())
+            .spawn(move || {
+                bg_loop(worker_queue, fleet, autoscaler, snapshot_dir, written, errors)
+            })
+            .expect("spawning background rescale thread");
+        Rescaler { queue, join: Some(join), snapshots_written, snapshot_errors }
+    }
+
+    /// Enqueue a task; silently dropped after close, and anything
+    /// still queued when the lane closes is discarded unrun (shutdown
+    /// is in progress — there is nothing useful left to rescale, and
+    /// a final snapshot is the caller's explicit
+    /// [`crate::coordinator::Coordinator::save_snapshot`]).
+    pub fn push(&self, task: BgTask) {
+        let mut s = self.queue.state.lock().unwrap();
+        if s.closed {
+            return;
+        }
+        s.queue.push_back(task);
+        drop(s);
+        self.queue.cv.notify_one();
+    }
+
+    /// Block until the lane is empty and idle — every pushed rescale
+    /// has installed (or failed) and every snapshot has flushed.
+    pub fn drain(&self) {
+        let mut s = self.queue.state.lock().unwrap();
+        while !s.queue.is_empty() || s.busy {
+            s = self.queue.idle_cv.wait(s).unwrap();
+        }
+    }
+
+    /// Snapshot flushes completed by the lane.
+    pub fn snapshots_written(&self) -> u64 {
+        self.snapshots_written.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot flushes that errored (disk trouble; serving is
+    /// unaffected).
+    pub fn snapshot_errors(&self) -> u64 {
+        self.snapshot_errors.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Rescaler {
+    fn drop(&mut self) {
+        {
+            let mut s = self.queue.state.lock().unwrap();
+            s.closed = true;
+        }
+        self.queue.cv.notify_all();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+fn bg_loop(
+    queue: Arc<BgQueue>,
+    fleet: Arc<Fleet>,
+    autoscaler: Option<Arc<Autoscaler>>,
+    snapshot_dir: Option<PathBuf>,
+    snapshots_written: Arc<AtomicU64>,
+    snapshot_errors: Arc<AtomicU64>,
+) {
+    loop {
+        let task = {
+            let mut s = queue.state.lock().unwrap();
+            loop {
+                // closed is checked BEFORE popping: whatever is still
+                // queued at shutdown is discarded, not compiled — a
+                // seconds-class rescale whose result nobody will ever
+                // serve must not stall Coordinator::drop
+                if s.closed {
+                    return;
+                }
+                if let Some(t) = s.queue.pop_front() {
+                    s.busy = true;
+                    break t;
+                }
+                s = queue.cv.wait(s).unwrap();
+            }
+        };
+        match task {
+            BgTask::Rescale(p) => run_rescale(&fleet, autoscaler.as_deref(), p),
+            BgTask::Snapshot => {
+                if let Some(dir) = &snapshot_dir {
+                    match fleet.save_snapshot(dir) {
+                        Ok(_) => {
+                            snapshots_written.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(_) => {
+                            snapshot_errors.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+        let mut s = queue.state.lock().unwrap();
+        s.busy = false;
+        if s.queue.is_empty() {
+            queue.idle_cv.notify_all();
+        }
+    }
+}
+
+/// Execute one rescale: cache-or-compile the target factor on the
+/// owning shard, then swap. A target equal to the spec's plan ceiling
+/// compiles through the shard's default path, so "scale back up to
+/// the plan" hits the very first artifact the kernel ever compiled.
+fn run_rescale(fleet: &Fleet, autoscaler: Option<&Autoscaler>, p: ScaleProposal) {
+    let Some(autoscaler) = autoscaler else {
+        return;
+    };
+    let t0 = Instant::now();
+    let result = match fleet.shard_index(p.spec_fp) {
+        None => Err(anyhow::anyhow!(
+            "no shard with spec fingerprint {:#018x}",
+            p.spec_fp
+        )),
+        Some(si) => {
+            let shard = &fleet.shards()[si];
+            if p.to_factor == p.ceiling {
+                shard.get_or_compile(&p.source)
+            } else {
+                shard.get_or_compile_at(&p.source, p.to_factor)
+            }
+        }
+    };
+    match result {
+        Ok((servable, cache_hit, key)) => {
+            autoscaler.install(&p, servable, key, cache_hit, t0.elapsed().as_secs_f64());
+        }
+        Err(e) => autoscaler.fail(&p, &format!("{e:#}")),
+    }
+}

@@ -1,0 +1,158 @@
+//! Per-(kernel, spec) load signals: what the scale policy sees.
+//!
+//! Each (kernel, overlay-spec) pair the fleet serves gets one
+//! [`LoadSignal`]: a pair of bounded sliding windows fed from the two
+//! ends of a dispatch's life. The **submit side** records the copy
+//! demand (`ceil(global_size / target_chunk)`, the router's quantity)
+//! and the queue depth observed at routing time; the **completion
+//! side** records end-to-end latency and the modeled execution time.
+//! A [`SignalSnapshot`] freezes all of it at evaluation time and rides
+//! along in the [`crate::autoscale::ScaleEvent`] audit log, so every
+//! scaling decision can be replayed from the numbers it was made on.
+
+use crate::metrics::SlidingWindow;
+
+/// Sliding-window load aggregator for one (kernel, spec) pair.
+#[derive(Debug, Clone)]
+pub struct LoadSignal {
+    /// Copies wanted per dispatch (router demand), submit-fed.
+    demand: SlidingWindow,
+    /// Spec queue depth observed at submit time.
+    queue: SlidingWindow,
+    /// End-to-end latency (enqueue → completion), milliseconds.
+    latency_ms: SlidingWindow,
+    /// Modeled II=1 execution time per dispatch, milliseconds — the
+    /// "achieved vs. modeled" denominator.
+    modeled_ms: SlidingWindow,
+    submits: u64,
+    completions: u64,
+}
+
+/// Frozen view of a [`LoadSignal`] at one evaluation instant.
+#[derive(Debug, Clone, Copy)]
+pub struct SignalSnapshot {
+    /// Submit-side samples currently in the window.
+    pub samples: usize,
+    /// Mean copies wanted over the window (the hysteresis input).
+    pub mean_demand: f64,
+    /// Maximum copies wanted over the window (the scale target input —
+    /// using the max makes targets a function of the workload phase,
+    /// not of how the window straddles a phase boundary).
+    pub max_demand: usize,
+    /// Mean queue depth observed at submit time.
+    pub mean_queue: f64,
+    /// Completion-side latency percentiles (0.0 until completions
+    /// arrive — completions race submits by design).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Mean modeled execution milliseconds per dispatch.
+    pub mean_modeled_ms: f64,
+    /// Lifetime submit / completion counts (not windowed).
+    pub submits: u64,
+    pub completions: u64,
+}
+
+impl LoadSignal {
+    /// A signal whose submit-side windows hold `window` samples (the
+    /// policy's evaluation horizon); completion-side windows keep a
+    /// few multiples for stabler percentiles.
+    pub fn new(window: usize) -> LoadSignal {
+        let window = window.max(1);
+        LoadSignal {
+            demand: SlidingWindow::new(window),
+            queue: SlidingWindow::new(window),
+            latency_ms: SlidingWindow::new(window * 8),
+            modeled_ms: SlidingWindow::new(window * 8),
+            submits: 0,
+            completions: 0,
+        }
+    }
+
+    /// Record one routed dispatch (submit side).
+    pub fn record_submit(&mut self, demand_copies: usize, queue_depth: usize) {
+        self.demand.push(demand_copies as f64);
+        self.queue.push(queue_depth as f64);
+        self.submits += 1;
+    }
+
+    /// Record one completed dispatch (worker side).
+    pub fn record_complete(&mut self, latency_ms: f64, modeled_ms: f64) {
+        self.latency_ms.push(latency_ms);
+        self.modeled_ms.push(modeled_ms);
+        self.completions += 1;
+    }
+
+    /// Whether the submit window is full — the policy never evaluates
+    /// a partially observed workload.
+    pub fn warmed_up(&self) -> bool {
+        self.demand.is_full()
+    }
+
+    pub fn snapshot(&self) -> SignalSnapshot {
+        SignalSnapshot {
+            samples: self.demand.len(),
+            mean_demand: self.demand.mean(),
+            max_demand: self.demand.max().round() as usize,
+            mean_queue: self.queue.mean(),
+            p50_ms: self.latency_ms.percentile(0.50),
+            p99_ms: self.latency_ms.percentile(0.99),
+            mean_modeled_ms: self.modeled_ms.mean(),
+            submits: self.submits,
+            completions: self.completions,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_the_window_not_the_lifetime() {
+        let mut s = LoadSignal::new(4);
+        assert!(!s.warmed_up());
+        // 8 submits of demand 16, then 4 of demand 1: the window only
+        // sees the last 4
+        for _ in 0..8 {
+            s.record_submit(16, 2);
+        }
+        for _ in 0..4 {
+            s.record_submit(1, 0);
+        }
+        assert!(s.warmed_up());
+        let snap = s.snapshot();
+        assert_eq!(snap.samples, 4);
+        assert!((snap.mean_demand - 1.0).abs() < 1e-12);
+        assert_eq!(snap.max_demand, 1);
+        assert_eq!(snap.mean_queue, 0.0);
+        assert_eq!(snap.submits, 12);
+        assert_eq!(snap.completions, 0);
+    }
+
+    #[test]
+    fn completions_feed_latency_percentiles() {
+        let mut s = LoadSignal::new(4);
+        s.record_submit(2, 1);
+        for i in 1..=10 {
+            s.record_complete(i as f64, 0.5);
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.completions, 10);
+        assert!(snap.p50_ms >= 5.0 && snap.p50_ms <= 6.0, "{}", snap.p50_ms);
+        assert_eq!(snap.p99_ms, 10.0);
+        assert!((snap.mean_modeled_ms - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn window_straddling_a_phase_boundary_keeps_the_max() {
+        let mut s = LoadSignal::new(4);
+        for _ in 0..3 {
+            s.record_submit(1, 0);
+        }
+        s.record_submit(16, 0);
+        let snap = s.snapshot();
+        // mean is diluted, max is not — targets stay phase-accurate
+        assert!(snap.mean_demand < 5.0);
+        assert_eq!(snap.max_demand, 16);
+    }
+}

@@ -331,8 +331,10 @@ impl JitCompiler {
     /// transform → resource-aware replication decision. One code
     /// path, so the router's plans are *structurally* identical to
     /// what a full compile produces — any future pass added here
-    /// changes both automatically.
-    fn front_half(&self, source: &str) -> Result<FrontHalf> {
+    /// changes both automatically. `replication` is usually
+    /// `self.options.replication`; the autoscaler's
+    /// [`JitCompiler::compile_at_factor`] passes an override.
+    fn front_half(&self, source: &str, replication: Replication) -> Result<FrontHalf> {
         let mut sw = Stopwatch::new();
         let mut stages: Vec<(String, std::time::Duration)> = Vec::new();
 
@@ -354,7 +356,7 @@ impl JitCompiler {
         // resource-aware replication decision
         let mut rep_plan = plan(&single, &self.spec, self.options.backend_limits)
             .context("replication planning")?;
-        if let Replication::Fixed(n) = self.options.replication {
+        if let Replication::Fixed(n) = replication {
             if n > rep_plan.factor {
                 anyhow::bail!(
                     "requested {} copies but the {} overlay supports at most {} ({})",
@@ -379,7 +381,7 @@ impl JitCompiler {
     /// [`JitCompiler::compile`] would produce — both run the same
     /// [`JitCompiler::front_half`].
     pub fn plan_kernel(&self, source: &str) -> Result<KernelPlan> {
-        let front = self.front_half(source)?;
+        let front = self.front_half(source, self.options.replication)?;
         Ok(KernelPlan {
             name: front.ast.name,
             ops_per_copy: front.dfg.num_ops(),
@@ -389,8 +391,29 @@ impl JitCompiler {
 
     /// JIT-compile an OpenCL kernel to an overlay configuration.
     pub fn compile(&self, source: &str) -> Result<CompiledKernel> {
+        self.compile_with_replication(source, self.options.replication)
+    }
+
+    /// JIT-compile at an explicit replication factor — the
+    /// autoscaler's entry point. Reuses this compiler's prebuilt
+    /// routing-resource graph and every other option; only the copy
+    /// count differs, so the artifact is exactly what
+    /// [`JitCompiler::compile`] under
+    /// `CompileOptions { replication: Replication::Fixed(factor), .. }`
+    /// would produce (and caches under that options fingerprint).
+    /// Errors when `factor` exceeds the resource-aware ceiling
+    /// reported by [`JitCompiler::plan_kernel`].
+    pub fn compile_at_factor(&self, source: &str, factor: usize) -> Result<CompiledKernel> {
+        self.compile_with_replication(source, Replication::Fixed(factor))
+    }
+
+    fn compile_with_replication(
+        &self,
+        source: &str,
+        replication: Replication,
+    ) -> Result<CompiledKernel> {
         let FrontHalf { ast, dfg, fused, single, plan: rep_plan, pass_stats, stages } =
-            self.front_half(source)?;
+            self.front_half(source, replication)?;
         let mut report = CompileReport { stages, pass_stats: Some(pass_stats), ..Default::default() };
         let mut sw = Stopwatch::new();
         let lap = |sw: &mut Stopwatch, report: &mut CompileReport, name: &str| {
@@ -575,6 +598,25 @@ mod tests {
             assert_eq!(p.plan.limit, k.plan.limit);
             assert_eq!(p.ops_per_copy, k.ops_per_copy());
         }
+    }
+
+    #[test]
+    fn compile_at_factor_matches_fixed_option_artifacts() {
+        let jit = JitCompiler::new(OverlaySpec::zynq_default());
+        let k4 = jit.compile_at_factor(CHEB, 4).unwrap();
+        assert_eq!(k4.copies(), 4);
+        // byte-identical to a compiler configured with Fixed(4) — the
+        // cache-key equivalence the autoscaler's variants rely on
+        let fixed = JitCompiler::with_options(
+            OverlaySpec::zynq_default(),
+            CompileOptions { replication: Replication::Fixed(4), ..Default::default() },
+        )
+        .compile(CHEB)
+        .unwrap();
+        assert_eq!(k4.bitstream.to_bytes(), fixed.bitstream.to_bytes());
+        assert_eq!(k4.schedule, fixed.schedule);
+        // the resource-aware ceiling still binds
+        assert!(jit.compile_at_factor(CHEB, 17).is_err());
     }
 
     #[test]

@@ -26,7 +26,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
-use crate::compiler::{stable_source_hash, CompileOptions, ServableKernel};
+use crate::compiler::{stable_source_hash, CompileOptions, Replication, ServableKernel};
 use crate::configgen::{EmuGeometry, SlotSchedule};
 use crate::frontend::{Param, ParamKind, Type};
 use crate::latency::LatencyReport;
@@ -178,7 +178,10 @@ impl KernelCache {
     /// Persist every resident entry (key + executable kernel slice) to
     /// `path` as JSON. Entries are written in deterministic key order,
     /// so identical cache contents produce identical snapshot bytes.
-    /// Returns the number of entries actually serialized.
+    /// Returns the number of entries serialized. Format version 2 is
+    /// byte-compatible with version 1 (the kernel object has always
+    /// carried its replication factor); the bump marks the
+    /// variant-aware load semantics below.
     pub fn save_snapshot(&self, path: &Path) -> Result<usize> {
         let mut pairs: Vec<(&CacheKey, &Entry)> = self.map.iter().collect();
         pairs.sort_by_key(|(k, _)| (k.source, k.spec, k.options));
@@ -195,7 +198,7 @@ impl KernelCache {
             })
             .collect();
         let mut root = std::collections::BTreeMap::new();
-        root.insert("version".to_string(), JsonValue::Number(1.0));
+        root.insert("version".to_string(), JsonValue::Number(2.0));
         root.insert("entries".to_string(), JsonValue::Array(entries));
         std::fs::write(path, JsonValue::Object(root).render())
             .with_context(|| format!("writing cache snapshot {}", path.display()))?;
@@ -203,15 +206,27 @@ impl KernelCache {
     }
 
     /// Restore entries from a snapshot written by
-    /// [`KernelCache::save_snapshot`]. Only entries whose key matches
-    /// `spec` and `options` fingerprints are loaded (a shard never
-    /// admits another spec's kernels — the isolation invariant), and
-    /// loading stops at capacity — a snapshot written by a larger
+    /// [`KernelCache::save_snapshot`]. Only entries compiled for
+    /// `spec` **and** for these `options` are loaded: either the
+    /// options fingerprint matches outright, or the replication
+    /// factor recorded in the entry's kernel object re-derives a
+    /// matching variant fingerprint (`Replication::Fixed(factor)`
+    /// under the same base options — the autoscaler's variants; this
+    /// also restores variants from version-1 snapshots). Anything
+    /// else — another spec's kernels, or entries built under
+    /// since-changed compile options — is skipped rather than
+    /// silently mismatched; unknown format versions fail the load.
+    /// Loading stops at capacity — a snapshot written by a larger
     /// cache neither evicts what was loaded first nor inflates the
     /// eviction counter. Returns how many entries are actually
     /// resident afterwards. Restored entries count neither hits nor
     /// misses.
-    pub fn load_snapshot(&mut self, path: &Path, spec: u64, options: u64) -> Result<usize> {
+    pub fn load_snapshot(
+        &mut self,
+        path: &Path,
+        spec: u64,
+        options: &CompileOptions,
+    ) -> Result<usize> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading cache snapshot {}", path.display()))?;
         let doc = JsonValue::parse(&text)
@@ -220,9 +235,15 @@ impl KernelCache {
             .get("version")
             .and_then(JsonValue::as_i64)
             .ok_or_else(|| anyhow!("snapshot missing version"))?;
-        if version != 1 {
+        if !(1..=2).contains(&version) {
             bail!("unsupported snapshot version {version}");
         }
+        let base_fp = options.fingerprint();
+        let variant_fp = |factor: usize| {
+            let mut o = options.clone();
+            o.replication = Replication::Fixed(factor);
+            o.fingerprint()
+        };
         let entries = doc
             .get("entries")
             .and_then(JsonValue::as_array)
@@ -234,7 +255,14 @@ impl KernelCache {
                 spec: get_hex64(ent, "spec")?,
                 options: get_hex64(ent, "options")?,
             };
-            if key.spec != spec || key.options != options {
+            let options_ok = key.options == base_fp
+                || ent
+                    .get("kernel")
+                    .and_then(|k| k.get("factor"))
+                    .and_then(JsonValue::as_i64)
+                    .filter(|&f| f > 0)
+                    .is_some_and(|f| key.options == variant_fp(f as usize));
+            if key.spec != spec || !options_ok {
                 continue;
             }
             if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
@@ -745,7 +773,7 @@ mod tests {
 
         let mut restored = KernelCache::new(8);
         let n = restored
-            .load_snapshot(&path, spec.fingerprint(), opts.fingerprint())
+            .load_snapshot(&path, spec.fingerprint(), &opts)
             .unwrap();
         assert_eq!(n, 1);
         let got = restored.get(&k).expect("restored entry resident");
@@ -763,7 +791,7 @@ mod tests {
 
         // a shard with a different spec fingerprint loads nothing
         let mut other = KernelCache::new(8);
-        assert_eq!(other.load_snapshot(&path, 0xdead, opts.fingerprint()).unwrap(), 0);
+        assert_eq!(other.load_snapshot(&path, 0xdead, &opts).unwrap(), 0);
         assert!(other.is_empty());
         let _ = std::fs::remove_file(&path);
     }
@@ -786,7 +814,7 @@ mod tests {
         std::fs::write(&path, text.replace("\"n_inputs\":1", "\"n_inputs\":3")).unwrap();
         let mut restored = KernelCache::new(4);
         let err = restored
-            .load_snapshot(&path, spec.fingerprint(), opts.fingerprint())
+            .load_snapshot(&path, spec.fingerprint(), &opts)
             .unwrap_err();
         assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
         assert!(restored.is_empty());
@@ -815,11 +843,55 @@ mod tests {
         // evictions, an honest loaded count
         let mut small = KernelCache::new(2);
         let n = small
-            .load_snapshot(&path, spec.fingerprint(), opts.fingerprint())
+            .load_snapshot(&path, spec.fingerprint(), &opts)
             .unwrap();
         assert_eq!(n, 2);
         assert_eq!(small.len(), 2);
         assert_eq!(small.stats().evictions, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn snapshot_restores_factor_variants_and_invalidates_stale_options() {
+        let spec = OverlaySpec::new(4, 4, FuType::Dsp2);
+        let opts = CompileOptions::default();
+        let jit = JitCompiler::new(spec.clone());
+        let base = Arc::new(jit.compile(crate::bench_kernels::CHEBYSHEV).unwrap().servable());
+        let v2 = Arc::new(
+            jit.compile_at_factor(crate::bench_kernels::CHEBYSHEV, 2)
+                .unwrap()
+                .servable(),
+        );
+        let mut variant_opts = opts.clone();
+        variant_opts.replication = Replication::Fixed(2);
+
+        let mut cache = KernelCache::new(8);
+        let base_key = CacheKey::new(crate::bench_kernels::CHEBYSHEV, &spec, &opts);
+        let variant_key = CacheKey::new(crate::bench_kernels::CHEBYSHEV, &spec, &variant_opts);
+        cache.insert(base_key, base);
+        cache.insert(variant_key, v2);
+        let path = std::env::temp_dir().join(format!(
+            "overlay-jit-snapshot-variant-test-{}.json",
+            std::process::id()
+        ));
+        assert_eq!(cache.save_snapshot(&path).unwrap(), 2);
+
+        // a restart under the same base options restores the default
+        // entry AND the autoscaler's factor-2 variant (its fingerprint
+        // is re-derived from the recorded factor)
+        let mut warm = KernelCache::new(8);
+        let n = warm.load_snapshot(&path, spec.fingerprint(), &opts).unwrap();
+        assert_eq!(n, 2);
+        assert!(warm.contains(&base_key));
+        assert!(warm.contains(&variant_key));
+        assert_eq!(warm.get(&variant_key).unwrap().factor, 2);
+
+        // changed compile options invalidate every stale entry on load
+        // instead of silently mismatching
+        let changed = CompileOptions { seed: 99, ..Default::default() };
+        let mut stale = KernelCache::new(8);
+        assert_eq!(stale.load_snapshot(&path, spec.fingerprint(), &changed).unwrap(), 0);
+        assert!(stale.is_empty());
         let _ = std::fs::remove_file(&path);
     }
 }

@@ -35,6 +35,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::autoscale::Autoscaler;
 use crate::fleet::Priority;
 use crate::runtime_ocl::{Backend, Buffer, Device, Event, Kernel};
 use crate::sim;
@@ -70,7 +71,8 @@ pub struct DispatchResult {
     pub cache_hit: bool,
     /// Time spent queued before the worker picked the job up.
     pub queue_wait: Duration,
-    /// Jobs drained in the same worker batch (≥ 1).
+    /// Jobs drained in the same worker batch, including any absorbed
+    /// through the cross-batch fusion window (≥ 1, always ≥ `fused`).
     pub batch_size: usize,
     /// Same-kernel jobs co-executed in one backend invocation with
     /// this one (≥ 1; > 1 means the dispatch was batch-fused).
@@ -146,10 +148,18 @@ pub(crate) struct Job {
     pub key: CacheKey,
     /// Serving spec name, echoed into the result.
     pub spec: String,
+    /// Stable source hash + spec fingerprint — the autoscaler's
+    /// load-signal key, fed on completion.
+    pub source_hash: u64,
+    pub spec_fp: u64,
     pub priority: Priority,
     /// Modeled bitstream-load seconds charged by the scheduler
     /// (0.0 when the partition already held the configuration).
     pub config_seconds: f64,
+    /// Optional deadline (coordinator-monotonic nanos) — shields the
+    /// partition from eviction while queued (see
+    /// [`SlotScheduler::pick_with_deadline`]).
+    pub deadline_nanos: Option<u64>,
     pub cache_hit: bool,
     pub enqueued: Instant,
     pub handle: Arc<HandleInner>,
@@ -226,6 +236,46 @@ impl<T> LaneQueue<T> {
     /// still jumps the line.
     pub(crate) fn take_interactive(&self) -> Vec<T> {
         self.inner.lock().unwrap().interactive.drain(..).collect()
+    }
+
+    /// Cross-batch fusion window: wait up to `window` for more
+    /// batch-lane jobs matching `matches` (same kernel key) to
+    /// trickle in, popping matching jobs off the **front** of the
+    /// batch lane so lane FIFO order is preserved. Stops immediately
+    /// when the interactive lane is non-empty (QoS: fusion must never
+    /// delay latency-sensitive work), when the batch-lane head stops
+    /// matching (head-of-line work must not starve behind a fusion
+    /// hunt), on close, or at the deadline — the wait is bounded by
+    /// construction.
+    pub(crate) fn absorb_batch_front<F: Fn(&T) -> bool>(
+        &self,
+        window: Duration,
+        matches: F,
+    ) -> Vec<T> {
+        let deadline = Instant::now() + window;
+        let mut out = Vec::new();
+        let mut l = self.inner.lock().unwrap();
+        loop {
+            if !l.interactive.is_empty() {
+                break;
+            }
+            while let Some(front) = l.batch.front() {
+                if !matches(front) {
+                    break;
+                }
+                out.push(l.batch.pop_front().expect("matched front exists"));
+            }
+            if !l.batch.is_empty() || l.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self.cv.wait_timeout(l, deadline - now).unwrap();
+            l = guard;
+        }
+        out
     }
 
     /// Close and return whatever was still queued (worker teardown:
@@ -351,6 +401,8 @@ pub(crate) fn spawn_worker(
     scheduler: Arc<Mutex<SlotScheduler>>,
     log: Arc<Mutex<ServeLog>>,
     verify: bool,
+    fusion_window: Duration,
+    autoscaler: Option<Arc<Autoscaler>>,
 ) -> Worker {
     let queue = LaneQueue::new();
     let worker_queue = queue.clone();
@@ -358,12 +410,22 @@ pub(crate) fn spawn_worker(
         .name(format!("overlay-part{partition}"))
         .spawn(move || {
             let _teardown = WorkerTeardown { queue: worker_queue.clone(), partition };
-            worker_loop(partition, device, worker_queue, scheduler, log, verify)
+            worker_loop(
+                partition,
+                device,
+                worker_queue,
+                scheduler,
+                log,
+                verify,
+                fusion_window,
+                autoscaler,
+            )
         })
         .expect("spawning coordinator worker thread");
     Worker { queue, join: Some(join) }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     partition: usize,
     device: Device,
@@ -371,6 +433,8 @@ fn worker_loop(
     scheduler: Arc<Mutex<SlotScheduler>>,
     log: Arc<Mutex<ServeLog>>,
     verify: bool,
+    fusion_window: Duration,
+    autoscaler: Option<Arc<Autoscaler>>,
 ) {
     while let Some(batch) = queue.drain() {
         let batch_size = batch.len();
@@ -378,11 +442,16 @@ fn worker_loop(
             partition,
             handles: batch.iter().map(|j| j.handle.clone()).collect(),
         };
-        let mut pending: VecDeque<(Vec<Box<Job>>, usize)> = group_runs(batch)
+        // (run, batch size it was drained with, fusion window already
+        // spent) — the window is one-shot per run, so a batch run that
+        // keeps getting preempted by interactive arrivals never waits
+        // a fresh window on each re-pop (that would let a steady
+        // interactive stream starve batch work indefinitely)
+        let mut pending: VecDeque<(Vec<Box<Job>>, usize, bool)> = group_runs(batch)
             .into_iter()
-            .map(|r| (r, batch_size))
+            .map(|r| (r, batch_size, false))
             .collect();
-        while let Some((run, run_batch_size)) = pending.pop_front() {
+        while let Some((mut run, mut run_batch_size, mut window_spent)) = pending.pop_front() {
             // interactive work that arrived after this batch was
             // drained jumps ahead of any batch-class run — the QoS
             // guarantee holds across drains, not just within one
@@ -393,11 +462,44 @@ fn worker_loop(
                     guard
                         .handles
                         .extend(arrivals.iter().map(|j| j.handle.clone()));
-                    pending.push_front((run, run_batch_size));
+                    pending.push_front((run, run_batch_size, window_spent));
                     for r in group_runs(arrivals).into_iter().rev() {
-                        pending.push_front((r, n));
+                        pending.push_front((r, n, false));
                     }
                     continue;
+                }
+                // cross-batch fusion window: with nothing else queued
+                // on this worker, wait a bounded interval for more
+                // same-kernel batch jobs to trickle in and ride the
+                // same backend invocation
+                if !fusion_window.is_zero() && pending.is_empty() && !window_spent {
+                    window_spent = true;
+                    let absorbed = queue.absorb_batch_front(fusion_window, |j| {
+                        j.key == run[0].key && j.priority == Priority::Batch
+                    });
+                    if !absorbed.is_empty() {
+                        guard
+                            .handles
+                            .extend(absorbed.iter().map(|j| j.handle.clone()));
+                        // absorbed jobs join this run's batch for
+                        // reporting too, so batch_size ≥ fused holds
+                        run_batch_size += absorbed.len();
+                        run.extend(absorbed);
+                    }
+                    // interactive work that arrived during the wait
+                    // still jumps the line
+                    let arrivals = queue.take_interactive();
+                    if !arrivals.is_empty() {
+                        let n = arrivals.len();
+                        guard
+                            .handles
+                            .extend(arrivals.iter().map(|j| j.handle.clone()));
+                        pending.push_front((run, run_batch_size, window_spent));
+                        for r in group_runs(arrivals).into_iter().rev() {
+                            pending.push_front((r, n, false));
+                        }
+                        continue;
+                    }
                 }
             }
             let results = serve_run(&device, &run, run_batch_size, verify);
@@ -410,7 +512,10 @@ fn worker_loop(
                     Ok(r) => r.event.modeled.seconds + r.event.config_seconds,
                     Err(_) => 0.0,
                 };
-                scheduler.lock().unwrap().complete(partition, busy);
+                scheduler
+                    .lock()
+                    .unwrap()
+                    .complete_with_deadline(partition, busy, job.deadline_nanos);
                 {
                     let mut lg = log.lock().unwrap();
                     lg.total_dispatches += 1;
@@ -425,6 +530,16 @@ fn worker_loop(
                         }
                         Err(_) => lg.errors += 1,
                     }
+                }
+                // feed the autoscaler's completion-side load signal
+                if let (Some(a), Ok(r)) = (&autoscaler, &result) {
+                    let e2e = r.queue_wait + r.event.wall;
+                    a.note_complete(
+                        job.source_hash,
+                        job.spec_fp,
+                        e2e.as_secs_f64() * 1e3,
+                        r.event.modeled.seconds * 1e3,
+                    );
                 }
                 job.handle.fulfill(result);
             }
@@ -637,6 +752,45 @@ mod tests {
         thread::sleep(Duration::from_millis(10));
         q.push(7, Priority::Batch).unwrap();
         assert_eq!(t.join().unwrap(), Some(vec![7]));
+    }
+
+    #[test]
+    fn absorb_batch_front_takes_matching_trickle_only() {
+        let q: Arc<LaneQueue<i32>> = LaneQueue::new();
+        q.push(2, Priority::Batch).unwrap();
+        q.push(2, Priority::Batch).unwrap();
+        q.push(3, Priority::Batch).unwrap();
+        // matching front items pop immediately; the non-matching head
+        // ends the hunt without waiting out the window
+        let t0 = Instant::now();
+        let got = q.absorb_batch_front(Duration::from_millis(400), |&x| x == 2);
+        assert_eq!(got, vec![2, 2]);
+        assert!(t0.elapsed() < Duration::from_millis(300));
+        assert_eq!(q.drain(), Some(vec![3]));
+    }
+
+    #[test]
+    fn absorb_batch_front_yields_to_interactive_arrivals() {
+        let q: Arc<LaneQueue<i32>> = LaneQueue::new();
+        q.push(9, Priority::Interactive).unwrap();
+        let t0 = Instant::now();
+        assert!(q.absorb_batch_front(Duration::from_millis(400), |_| true).is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(300));
+        // the interactive job is untouched
+        assert_eq!(q.take_interactive(), vec![9]);
+    }
+
+    #[test]
+    fn absorb_batch_front_catches_a_trickle_arrival() {
+        let q: Arc<LaneQueue<i32>> = LaneQueue::new();
+        let q2 = q.clone();
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            q2.push(5, Priority::Batch).unwrap();
+        });
+        let got = q.absorb_batch_front(Duration::from_millis(2_000), |&x| x == 5);
+        t.join().unwrap();
+        assert_eq!(got, vec![5]);
     }
 
     #[test]

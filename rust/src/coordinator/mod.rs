@@ -59,15 +59,20 @@ pub use crate::fleet::{Priority, RoutingPolicy};
 pub use crate::metrics::CacheStats;
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, bail, Context as _, Result};
 
+use crate::autoscale::{
+    ActiveVariant, AutoscalePolicy, Autoscaler, BgTask, Rescaler, ScaleEvent,
+    SubmitObservation,
+};
 use crate::compiler::CompileOptions;
 use crate::fleet::{Fleet, RouteRecord, Router, SpecObservation};
 use crate::metrics::{
-    LatencyStats, PartitionServingStats, ServingStats, SpecServingStats,
+    achieved_gops, LatencyStats, PartitionServingStats, ServingStats, SpecServingStats,
 };
 use crate::overlay::{ConfigSizeModel, OverlaySpec};
 use crate::runtime_ocl::{Device, Kernel, Platform};
@@ -97,6 +102,23 @@ pub struct CoordinatorConfig {
     /// files are fine). Write snapshots with
     /// [`Coordinator::save_snapshot`].
     pub snapshot_dir: Option<PathBuf>,
+    /// When set (requires `snapshot_dir`), flush kernel-cache
+    /// snapshots **in the background** every N accepted submits — a
+    /// long-running fleet keeps its warm-start state fresh without a
+    /// shutdown hook. Must be ≥ 1.
+    pub snapshot_every: Option<u64>,
+    /// Feedback-driven runtime rescaling ([`crate::autoscale`]):
+    /// `Some(policy)` re-replicates kernels whose observed load
+    /// persistently disagrees with their frozen plan; `None` (the
+    /// default) keeps every factor fixed at first compile.
+    pub autoscale: Option<AutoscalePolicy>,
+    /// Cross-batch fusion window: a worker whose queue ran dry waits
+    /// up to this long for more same-kernel batch-lane jobs before
+    /// launching, so trickle arrivals still fuse into one backend
+    /// invocation. Zero (the default) launches immediately —
+    /// exactly the pre-window behavior. Interactive work is never
+    /// delayed by the window.
+    pub fusion_window: Duration,
 }
 
 impl CoordinatorConfig {
@@ -109,6 +131,9 @@ impl CoordinatorConfig {
             verify: true,
             routing: RoutingPolicy::default(),
             snapshot_dir: None,
+            snapshot_every: None,
+            autoscale: None,
+            fusion_window: Duration::ZERO,
         }
     }
 
@@ -123,6 +148,9 @@ impl CoordinatorConfig {
             verify: true,
             routing: RoutingPolicy::default(),
             snapshot_dir: None,
+            snapshot_every: None,
+            autoscale: None,
+            fusion_window: Duration::ZERO,
         }
     }
 
@@ -135,6 +163,9 @@ impl CoordinatorConfig {
             verify: true,
             routing: RoutingPolicy::default(),
             snapshot_dir: None,
+            snapshot_every: None,
+            autoscale: None,
+            fusion_window: Duration::ZERO,
         }
     }
 }
@@ -147,12 +178,22 @@ impl Default for CoordinatorConfig {
 
 /// The multi-overlay serving coordinator. See module docs.
 pub struct Coordinator {
-    fleet: Fleet,
+    fleet: Arc<Fleet>,
     router: Mutex<Router>,
     scheduler: Arc<Mutex<SlotScheduler>>,
     log: Arc<Mutex<ServeLog>>,
     workers: Vec<Worker>,
     partition_names: Vec<String>,
+    /// The feedback loop from serving metrics back into the JIT
+    /// compiler; absent when the config froze replication plans.
+    autoscaler: Option<Arc<Autoscaler>>,
+    /// Background compile/snapshot lane; spawned only when the
+    /// autoscaler or the snapshot cadence needs it (and it owns the
+    /// snapshot directory).
+    bg: Option<Rescaler>,
+    snapshot_every: Option<u64>,
+    /// Accepted submits — drives the snapshot cadence.
+    submitted: AtomicU64,
     start: Instant,
 }
 
@@ -179,9 +220,21 @@ impl Coordinator {
             verify,
             routing,
             snapshot_dir,
+            snapshot_every,
+            autoscale,
+            fusion_window,
         } = config;
         if devices.is_empty() {
             bail!("coordinator needs at least one overlay partition");
+        }
+        if snapshot_every == Some(0) {
+            bail!("snapshot_every must be at least 1 submit");
+        }
+        if snapshot_every.is_some() && snapshot_dir.is_none() {
+            bail!("snapshot_every requires snapshot_dir");
+        }
+        if let Some(policy) = &autoscale {
+            policy.validate().context("autoscale policy")?;
         }
         // group partitions by spec fingerprint, first-seen order
         let mut groups: Vec<(OverlaySpec, Vec<usize>)> = Vec::new();
@@ -194,7 +247,7 @@ impl Coordinator {
                 None => groups.push((d.spec.clone(), vec![i])),
             }
         }
-        let fleet = Fleet::new(groups, &compile_options, cache_capacity)?;
+        let fleet = Arc::new(Fleet::new(groups, &compile_options, cache_capacity)?);
         if let Some(dir) = &snapshot_dir {
             fleet.load_snapshot(dir)?;
         }
@@ -204,10 +257,26 @@ impl Coordinator {
         let router = Mutex::new(Router::new(routing));
         let log = Arc::new(Mutex::new(ServeLog::default()));
         let partition_names: Vec<String> = devices.iter().map(|d| d.name.clone()).collect();
+        let autoscaler = autoscale.map(|policy| Arc::new(Autoscaler::new(policy)));
+        let bg = if autoscaler.is_some() || snapshot_every.is_some() {
+            Some(Rescaler::spawn(fleet.clone(), autoscaler.clone(), snapshot_dir))
+        } else {
+            None
+        };
         let workers: Vec<Worker> = devices
             .into_iter()
             .enumerate()
-            .map(|(i, d)| dispatch::spawn_worker(i, d, scheduler.clone(), log.clone(), verify))
+            .map(|(i, d)| {
+                dispatch::spawn_worker(
+                    i,
+                    d,
+                    scheduler.clone(),
+                    log.clone(),
+                    verify,
+                    fusion_window,
+                    autoscaler.clone(),
+                )
+            })
             .collect();
         Ok(Coordinator {
             fleet,
@@ -216,6 +285,10 @@ impl Coordinator {
             log,
             workers,
             partition_names,
+            autoscaler,
+            bg,
+            snapshot_every,
+            submitted: AtomicU64::new(0),
             start: Instant::now(),
         })
     }
@@ -236,9 +309,10 @@ impl Coordinator {
     }
 
     /// Asynchronously serve one kernel dispatch: route to a spec
-    /// (resource-aware), cache-or-compile on that spec's shard,
-    /// schedule onto a same-spec partition, enqueue on its priority
-    /// lane, return a completion handle.
+    /// (resource-aware, at each spec's **live** replication factor),
+    /// cache-or-compile on that spec's shard, schedule onto a
+    /// same-spec partition, enqueue on its priority lane, return a
+    /// completion handle.
     pub fn submit(
         &self,
         source: &str,
@@ -246,10 +320,43 @@ impl Coordinator {
         global_size: usize,
         priority: Priority,
     ) -> Result<DispatchHandle> {
-        let profile = self.fleet.profile(source)?;
+        self.submit_with_deadline(source, args, global_size, priority, None)
+    }
 
-        // per-spec observations (queue depth, residency) under one
-        // scheduler lock, merged with the profile's plans
+    /// [`Coordinator::submit`] with an optional completion deadline
+    /// ("due in" relative to now). The deadline does not preempt
+    /// anything; it shields the dispatch's partition from being
+    /// chosen as a reconfiguration victim while the job is queued —
+    /// a resident with imminent queued deadlines is never evicted in
+    /// favor of slack batch work.
+    pub fn submit_with_deadline(
+        &self,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<DispatchHandle> {
+        let profile = self.fleet.profile(source)?;
+        let deadline_nanos =
+            deadline.map(|d| (self.start.elapsed() + d).as_nanos() as u64);
+
+        // live (possibly rescaled) variant per shard — one autoscaler
+        // lock for the whole fleet, taken before the scheduler lock so
+        // the two never nest
+        let variants: Vec<Option<ActiveVariant>> = match &self.autoscaler {
+            Some(a) => {
+                let fps: Vec<u64> =
+                    self.fleet.shards().iter().map(|s| s.fingerprint()).collect();
+                a.active_all(profile.source_hash, &fps)
+            }
+            None => vec![None; self.fleet.shards().len()],
+        };
+
+        // per-spec observations (queue depth, residency at the live
+        // factor's key) under one scheduler lock, merged with the
+        // profile's plans — the router sees the factor each spec
+        // would actually serve at
         let mut observations: Vec<SpecObservation> = {
             let sched = self.scheduler.lock().unwrap();
             self.fleet
@@ -257,18 +364,31 @@ impl Coordinator {
                 .iter()
                 .enumerate()
                 .map(|(i, shard)| {
-                    let key = shard.cache_key_for_hash(profile.source_hash);
+                    let key = variants[i]
+                        .as_ref()
+                        .map(|v| v.key)
+                        .unwrap_or_else(|| shard.cache_key_for_hash(profile.source_hash));
                     let (min_queue_depth, resident) =
                         sched.observe(shard.fingerprint(), &key);
                     let fit = profile.fits[i];
+                    let factor = match (&variants[i], fit) {
+                        (Some(v), _) => v.factor,
+                        (None, Some(f)) => f.factor,
+                        (None, None) => 0,
+                    };
+                    let gops = if fit.is_some() {
+                        achieved_gops(factor, profile.ops_per_copy, shard.spec().fmax_mhz())
+                    } else {
+                        0.0
+                    };
                     SpecObservation {
                         fingerprint: shard.fingerprint(),
                         spec: shard.spec().name(),
                         fits: fit.is_some(),
                         adequate: false,
-                        factor: fit.map(|f| f.factor).unwrap_or(0),
+                        factor,
                         limit: fit.map(|f| f.limit),
-                        gops: fit.map(|f| f.gops).unwrap_or(0.0),
+                        gops,
                         peak_gops: shard.spec().peak_gops(),
                         min_queue_depth,
                         resident,
@@ -284,12 +404,28 @@ impl Coordinator {
                 .unwrap()
                 .rank(&profile, &mut observations, global_size)?;
 
-        // cache-or-compile on the ranked shards; a compile failure
-        // poisons that (kernel, spec) pair and falls through
+        // cache-or-compile on the ranked shards — through the live
+        // variant where one is installed; a compile failure poisons
+        // that (kernel, spec) pair and falls through
         let mut chosen = None;
         let mut fallback = false;
         let mut last_err: Option<anyhow::Error> = None;
         for &si in &ranked {
+            if let Some(v) = &variants[si] {
+                let shard = &self.fleet.shards()[si];
+                let (servable, cache_hit) = match shard.get_cached(&v.key) {
+                    Some(k) => (k, true),
+                    None => {
+                        // the LRU evicted the variant's entry; the
+                        // autoscaler still holds the artifact, so
+                        // re-admit it instead of recompiling
+                        shard.admit(v.key, v.servable.clone());
+                        (v.servable.clone(), false)
+                    }
+                };
+                chosen = Some((si, (servable, cache_hit, v.key)));
+                break;
+            }
             match self.fleet.shards()[si].get_or_compile(source) {
                 Ok(hit) => {
                     chosen = Some((si, hit));
@@ -311,6 +447,7 @@ impl Coordinator {
                 )));
         };
         let shard = &self.fleet.shards()[shard_index];
+        let queue_depth_seen = observations[shard_index].min_queue_depth;
 
         if args.len() != servable.params.len() {
             bail!(
@@ -332,11 +469,13 @@ impl Coordinator {
             shard.spec(),
             servable.bitstream.byte_size(),
         );
-        let decision =
-            self.scheduler
-                .lock()
-                .unwrap()
-                .pick(shard.fingerprint(), key, config_cost, priority);
+        let decision = self.scheduler.lock().unwrap().pick_with_deadline(
+            shard.fingerprint(),
+            key,
+            config_cost,
+            priority,
+            deadline_nanos,
+        );
 
         let handle = HandleInner::new();
         let job = Job {
@@ -345,8 +484,11 @@ impl Coordinator {
             partition: decision.partition,
             key,
             spec: shard.spec().name(),
+            source_hash: profile.source_hash,
+            spec_fp: shard.fingerprint(),
             priority,
             config_seconds: decision.config_seconds,
+            deadline_nanos,
             cache_hit,
             enqueued: Instant::now(),
             handle: handle.clone(),
@@ -358,7 +500,7 @@ impl Coordinator {
         {
             // dead worker: the dispatch never ran, undo its accounting
             // (the route record is only committed below, on success)
-            self.scheduler.lock().unwrap().cancel(&decision);
+            self.scheduler.lock().unwrap().cancel(&decision, deadline_nanos);
             bail!("partition {} worker is gone", decision.partition);
         }
 
@@ -377,6 +519,39 @@ impl Coordinator {
             },
             servable.factor,
         );
+
+        // post-accept hooks: feed the autoscaler's submit-side load
+        // signal (possibly enqueueing a background rescale) and
+        // advance the periodic-snapshot cadence
+        if let (Some(a), Some(bg)) = (&self.autoscaler, &self.bg) {
+            // the plan (compile-free front-half) factor is the FU/IO
+            // ceiling scale-ups may grow back toward
+            if let Some(fit) = profile.fits[shard_index] {
+                let spec_name = shard.spec().name();
+                let proposal = a.note_submit(&SubmitObservation {
+                    kernel: &profile.name,
+                    source,
+                    source_hash: profile.source_hash,
+                    spec: &spec_name,
+                    spec_fp: shard.fingerprint(),
+                    demand: copies_wanted,
+                    queue_depth: queue_depth_seen,
+                    factor: servable.factor,
+                    ceiling: fit.factor,
+                });
+                if let Some(p) = proposal {
+                    bg.push(BgTask::Rescale(p));
+                }
+            }
+        }
+        if let (Some(every), Some(bg)) = (self.snapshot_every, &self.bg) {
+            // the constructor guarantees snapshot_every implies
+            // snapshot_dir, so the cadence alone decides
+            let n = self.submitted.fetch_add(1, Ordering::Relaxed) + 1;
+            if n % every == 0 {
+                bg.push(BgTask::Snapshot);
+            }
+        }
         Ok(DispatchHandle { inner: handle })
     }
 
@@ -445,7 +620,42 @@ impl Coordinator {
             dispatch_errors: log.errors,
             fused_batches: log.fused_batches,
             compile_seconds,
+            autoscale: self.autoscaler.as_ref().map(|a| a.stats()),
         }
+    }
+
+    /// The retained scale events (oldest first, bounded by
+    /// [`AutoscalePolicy::max_events`]) — the autoscaler's audit
+    /// trail, mirroring [`Coordinator::routing_log`]. Empty when no
+    /// autoscaler is configured.
+    pub fn scale_log(&self) -> Vec<ScaleEvent> {
+        self.autoscaler
+            .as_ref()
+            .map_or_else(Vec::new, |a| a.events())
+    }
+
+    /// Block until the background lane is idle: every proposed
+    /// rescale has installed (or failed) and every periodic snapshot
+    /// has flushed. A no-op without a background lane. Phase-shifting
+    /// drivers and tests call this to make swap timing deterministic;
+    /// serving itself never needs it.
+    pub fn drain_background(&self) {
+        if let Some(bg) = &self.bg {
+            bg.drain();
+        }
+    }
+
+    /// Periodic snapshots flushed by the background lane (see
+    /// [`CoordinatorConfig::snapshot_every`]).
+    pub fn background_snapshots_written(&self) -> u64 {
+        self.bg.as_ref().map_or(0, |b| b.snapshots_written())
+    }
+
+    /// Periodic snapshot flushes that errored (disk trouble; serving
+    /// is unaffected, but warm-start state is going stale — monitor
+    /// this on long-running fleets).
+    pub fn background_snapshot_errors(&self) -> u64 {
+        self.bg.as_ref().map_or(0, |b| b.snapshot_errors())
     }
 
     /// The retained routing decisions (oldest first, bounded by
@@ -471,6 +681,9 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
+        // stop the background lane first so no rescale installs race
+        // worker teardown (Rescaler's own Drop closes and joins)
+        self.bg.take();
         for w in &self.workers {
             w.queue.close();
         }
@@ -650,7 +863,27 @@ mod tests {
             verify: false,
             routing: RoutingPolicy::default(),
             snapshot_dir: None,
+            snapshot_every: None,
+            autoscale: None,
+            fusion_window: Duration::ZERO,
         };
+        assert!(Coordinator::new(cfg).is_err());
+    }
+
+    #[test]
+    fn invalid_background_configs_are_rejected() {
+        let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+        cfg.snapshot_every = Some(4); // cadence without a directory
+        assert!(Coordinator::new(cfg).is_err());
+        let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+        cfg.snapshot_dir = Some(std::env::temp_dir());
+        cfg.snapshot_every = Some(0);
+        assert!(Coordinator::new(cfg).is_err());
+        let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+        cfg.autoscale = Some(crate::autoscale::AutoscalePolicy {
+            down_ratio: 0.9, // overlapping hysteresis bands
+            ..Default::default()
+        });
         assert!(Coordinator::new(cfg).is_err());
     }
 

@@ -10,10 +10,18 @@
 //! 1. **Affinity** — prefer a partition whose resident bitstream
 //!    matches the request (least queue depth among them);
 //! 2. **Cold fill** — otherwise prefer a never-configured partition;
-//! 3. **Victim** — otherwise evict by (queue depth, priority class,
-//!    last-use): an idle partition holding only **batch**-class work
-//!    gives up its configuration before one serving interactive
-//!    kernels, then least-recently-used wins.
+//! 3. **Victim** — otherwise evict by (queue depth, queued deadlines,
+//!    priority class, last-use): among equally loaded candidates, a
+//!    partition with **deadline-carrying work still queued** is never
+//!    evicted in favor of one holding only slack batch work (and
+//!    sooner deadlines protect harder), then batch-class residents
+//!    give way before interactive ones, then least-recently-used
+//!    wins.
+//!
+//! Deadlines are optional per dispatch
+//! ([`crate::coordinator::Coordinator::submit_with_deadline`]),
+//! expressed in nanoseconds on the coordinator's monotonic clock, and
+//! tracked per partition from pick to completion.
 //!
 //! In a heterogeneous fleet every partition carries the
 //! [`crate::overlay::OverlaySpec::fingerprint`] it was built from and
@@ -42,6 +50,9 @@ pub struct PartitionState {
     pub last_used: u64,
     /// Dispatches enqueued but not yet completed.
     pub queue_depth: usize,
+    /// Deadlines (monotonic nanos) of the queued-but-incomplete
+    /// dispatches that carry one — the victim-selection shield.
+    pub queued_deadlines: Vec<u64>,
     pub dispatches: u64,
     pub reconfigs: u64,
     /// Modeled overlay-busy seconds (execution + reconfiguration).
@@ -56,6 +67,7 @@ impl PartitionState {
             loaded_class: Priority::Batch,
             last_used: 0,
             queue_depth: 0,
+            queued_deadlines: Vec::new(),
             dispatches: 0,
             reconfigs: 0,
             busy_seconds: 0.0,
@@ -144,6 +156,23 @@ impl SlotScheduler {
         config_seconds_if_load: f64,
         priority: Priority,
     ) -> Decision {
+        self.pick_with_deadline(spec, key, config_seconds_if_load, priority, None)
+    }
+
+    /// [`SlotScheduler::pick`] with an optional per-job deadline
+    /// (nanoseconds on the caller's monotonic clock). The deadline
+    /// does not change *where* this dispatch lands; it shields the
+    /// chosen partition from eviction while the job is queued —
+    /// victim selection never sacrifices a resident with imminent
+    /// queued deadlines to make room for slack batch work.
+    pub fn pick_with_deadline(
+        &mut self,
+        spec: u64,
+        key: CacheKey,
+        config_seconds_if_load: f64,
+        priority: Priority,
+        deadline_nanos: Option<u64>,
+    ) -> Decision {
         self.clock += 1;
         let cand: Vec<usize> = (0..self.parts.len())
             .filter(|&i| self.parts[i].spec_fingerprint == spec)
@@ -171,13 +200,20 @@ impl SlotScheduler {
             // 2) cold fill: a never-configured partition
             (i, true)
         } else {
-            // 3) victim: idle-most, batch-class first, then LRU
+            // 3) victim: idle-most, deadline-free first (sooner queued
+            //    deadlines protect harder), batch-class next, then LRU
             let i = cand
                 .iter()
                 .copied()
                 .min_by_key(|&i| {
                     (
                         self.parts[i].queue_depth,
+                        self.parts[i]
+                            .queued_deadlines
+                            .iter()
+                            .min()
+                            .map(|&d| u64::MAX - d)
+                            .unwrap_or(0),
                         self.parts[i].loaded_class == Priority::Interactive,
                         self.parts[i].last_used,
                         i,
@@ -190,6 +226,9 @@ impl SlotScheduler {
         let p = &mut self.parts[idx];
         p.last_used = self.clock;
         p.queue_depth += 1;
+        if let Some(d) = deadline_nanos {
+            p.queued_deadlines.push(d);
+        }
         p.dispatches += 1;
         p.loaded_class = priority;
         let config_seconds = if reconfigure {
@@ -206,19 +245,41 @@ impl SlotScheduler {
     /// Record completion of a dispatch on `partition`, crediting the
     /// modeled busy time.
     pub fn complete(&mut self, partition: usize, busy_seconds: f64) {
+        self.complete_with_deadline(partition, busy_seconds, None)
+    }
+
+    /// [`SlotScheduler::complete`] for a dispatch that carried a
+    /// deadline: the completed job stops shielding its partition.
+    pub fn complete_with_deadline(
+        &mut self,
+        partition: usize,
+        busy_seconds: f64,
+        deadline_nanos: Option<u64>,
+    ) {
         let p = &mut self.parts[partition];
         p.queue_depth = p.queue_depth.saturating_sub(1);
         p.busy_seconds += busy_seconds;
+        if let Some(d) = deadline_nanos {
+            if let Some(pos) = p.queued_deadlines.iter().position(|&x| x == d) {
+                p.queued_deadlines.swap_remove(pos);
+            }
+        }
     }
 
     /// Roll a [`SlotScheduler::pick`] back after a failed enqueue
     /// (dead worker): the dispatch never ran, so its queue/dispatch/
-    /// reconfiguration accounting must not stick. The `loaded` mark is
-    /// left as-is — the partition is unreachable either way.
-    pub fn cancel(&mut self, d: &Decision) {
+    /// reconfiguration/deadline accounting must not stick. The
+    /// `loaded` mark is left as-is — the partition is unreachable
+    /// either way.
+    pub fn cancel(&mut self, d: &Decision, deadline_nanos: Option<u64>) {
         let p = &mut self.parts[d.partition];
         p.queue_depth = p.queue_depth.saturating_sub(1);
         p.dispatches = p.dispatches.saturating_sub(1);
+        if let Some(dl) = deadline_nanos {
+            if let Some(pos) = p.queued_deadlines.iter().position(|&x| x == dl) {
+                p.queued_deadlines.swap_remove(pos);
+            }
+        }
         if d.reconfigure {
             p.reconfigs = p.reconfigs.saturating_sub(1);
             self.reconfig_seconds -= d.config_seconds;
@@ -311,7 +372,7 @@ mod tests {
         let d = pick(&mut s, 1, 3e-6);
         assert_eq!(s.partitions()[0].queue_depth, 1);
         assert_eq!(s.reconfig_count(), 1);
-        s.cancel(&d);
+        s.cancel(&d, None);
         let p = &s.partitions()[0];
         assert_eq!(p.queue_depth, 0);
         assert_eq!(p.dispatches, 0);
@@ -362,6 +423,49 @@ mod tests {
         s.complete(d.partition, 0.0);
         // an unknown spec fingerprint observes an empty fleet
         assert_eq!(s.observe(0xFFF, &key(1)), (0, false));
+    }
+
+    #[test]
+    fn queued_deadlines_shield_a_partition_from_eviction() {
+        let mut s = SlotScheduler::new(2);
+        // p0 queues a deadline-carrying interactive job; p1 queues
+        // slack batch work. Equal queue depths, and p1 is the *more*
+        // recently used (so plain LRU would evict p0).
+        let a = s.pick_with_deadline(0, key(1), 1e-6, Priority::Interactive, Some(5_000));
+        let b = s.pick(0, key(2), 1e-6, Priority::Batch);
+        assert_ne!(a.partition, b.partition);
+        // a third kernel must evict the slack-batch partition, not the
+        // one with an imminent queued deadline
+        let c = s.pick(0, key(3), 1e-6, Priority::Interactive);
+        assert_eq!(c.partition, b.partition);
+        assert!(c.reconfigure);
+    }
+
+    #[test]
+    fn sooner_deadlines_protect_harder_and_completion_lifts_the_shield() {
+        let mut s = SlotScheduler::new(2);
+        let a = s.pick_with_deadline(0, key(1), 1e-6, Priority::Batch, Some(1_000));
+        let b = s.pick_with_deadline(0, key(2), 1e-6, Priority::Batch, Some(9_000));
+        // both shielded: the one whose deadline is further out yields
+        let c = s.pick(0, key(3), 1e-6, Priority::Batch);
+        assert_eq!(c.partition, b.partition);
+        s.complete_with_deadline(c.partition, 0.0, None);
+        // the soon-deadline job completes: its shield lifts, and with
+        // depths equal again the partition becomes evictable
+        s.complete_with_deadline(a.partition, 0.0, Some(1_000));
+        assert!(s.partitions()[a.partition].queued_deadlines.is_empty());
+        let d = s.pick(0, key(4), 1e-6, Priority::Batch);
+        assert_eq!(d.partition, a.partition);
+    }
+
+    #[test]
+    fn cancel_removes_the_queued_deadline() {
+        let mut s = SlotScheduler::new(1);
+        let d = s.pick_with_deadline(0, key(1), 1e-6, Priority::Interactive, Some(42));
+        assert_eq!(s.partitions()[0].queued_deadlines, vec![42]);
+        s.cancel(&d, Some(42));
+        assert!(s.partitions()[0].queued_deadlines.is_empty());
+        assert_eq!(s.partitions()[0].queue_depth, 0);
     }
 
     #[test]

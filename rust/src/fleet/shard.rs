@@ -18,7 +18,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::compiler::{CompileOptions, JitCompiler, ServableKernel};
+use crate::compiler::{
+    stable_source_hash, CompileOptions, JitCompiler, Replication, ServableKernel,
+};
 use crate::coordinator::{CacheKey, KernelCache};
 use crate::metrics::CacheStats;
 use crate::overlay::{ConfigSizeModel, OverlayBitstream, OverlaySpec};
@@ -114,10 +116,48 @@ impl CompileShard {
         }
     }
 
+    /// The cache key this shard files a `factor`-copy variant of
+    /// `source_hash` under: the options fingerprint of this shard's
+    /// options with `Replication::Fixed(factor)` — identical to what
+    /// a compiler configured that way would produce, so variant
+    /// entries coexist with (and never collide with) the default
+    /// plan's entry.
+    pub fn variant_key(&self, source_hash: u64, factor: usize) -> CacheKey {
+        let mut options = self.jit.options.clone();
+        options.replication = Replication::Fixed(factor);
+        CacheKey {
+            source: source_hash,
+            spec: self.fingerprint,
+            options: options.fingerprint(),
+        }
+    }
+
     /// Cache-or-compile: the shard's hot path. Returns the executable
     /// kernel, whether it came from the cache, and its key.
     pub fn get_or_compile(&self, source: &str) -> Result<(Arc<ServableKernel>, bool, CacheKey)> {
         let key = CacheKey::new(source, &self.spec, &self.jit.options);
+        self.get_or_compile_keyed(source, key, None)
+    }
+
+    /// Cache-or-compile an explicit-factor variant — the autoscaler's
+    /// rescale path. Scale-backs to a factor this shard compiled
+    /// before are cache **hits**: the variant key is stable, so the
+    /// artifact is still resident (and even survives snapshots).
+    pub fn get_or_compile_at(
+        &self,
+        source: &str,
+        factor: usize,
+    ) -> Result<(Arc<ServableKernel>, bool, CacheKey)> {
+        let key = self.variant_key(stable_source_hash(source), factor);
+        self.get_or_compile_keyed(source, key, Some(factor))
+    }
+
+    fn get_or_compile_keyed(
+        &self,
+        source: &str,
+        key: CacheKey,
+        factor: Option<usize>,
+    ) -> Result<(Arc<ServableKernel>, bool, CacheKey)> {
         if let Some(k) = self.cache.lock().unwrap().get(&key) {
             if k.bitstream.rows == self.spec.rows && k.bitstream.cols == self.spec.cols {
                 return Ok((k, true, key));
@@ -128,13 +168,36 @@ impl CompileShard {
             self.cross_spec_hits.fetch_add(1, Ordering::Relaxed);
         }
         // the seconds-class step — paid once per distinct
-        // (source, overlay, options)
+        // (source, overlay, options[, factor])
         let t0 = Instant::now();
-        let compiled = self.jit.compile(source)?;
+        let compiled = match factor {
+            None => self.jit.compile(source)?,
+            Some(f) => self.jit.compile_at_factor(source, f)?,
+        };
         *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
         let servable = Arc::new(compiled.servable());
         self.cache.lock().unwrap().insert(key, servable.clone());
         Ok((servable, false, key))
+    }
+
+    /// Cache lookup without a compile fallback (counts a hit or miss,
+    /// refreshes LRU order, enforces the geometry tripwire). The
+    /// coordinator's variant dispatch path uses this: the autoscaler
+    /// holds its own `Arc` of the active variant, so an evicted entry
+    /// is re-admitted rather than recompiled.
+    pub fn get_cached(&self, key: &CacheKey) -> Option<Arc<ServableKernel>> {
+        let k = self.cache.lock().unwrap().get(key)?;
+        if k.bitstream.rows == self.spec.rows && k.bitstream.cols == self.spec.cols {
+            return Some(k);
+        }
+        self.cross_spec_hits.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Re-admit an already-compiled kernel (an autoscaler variant the
+    /// LRU evicted) without paying a compile.
+    pub fn admit(&self, key: CacheKey, servable: Arc<ServableKernel>) {
+        self.cache.lock().unwrap().insert(key, servable);
     }
 
     pub fn cache_stats(&self) -> CacheStats {
@@ -162,7 +225,7 @@ impl CompileShard {
         self.cache
             .lock()
             .unwrap()
-            .load_snapshot(path, self.fingerprint, self.options_fingerprint)
+            .load_snapshot(path, self.fingerprint, &self.jit.options)
     }
 }
 
@@ -191,6 +254,39 @@ mod tests {
         assert!(shard.compile_seconds() > 0.0);
         assert_eq!(shard.cross_spec_hits(), 0);
         assert_eq!(shard.partitions(), &[0, 1]);
+    }
+
+    #[test]
+    fn factor_variants_cache_independently_and_scale_backs_hit() {
+        let shard = CompileShard::new(
+            OverlaySpec::zynq_default(),
+            CompileOptions::default(),
+            8,
+            vec![0],
+        );
+        let (base, _, base_key) = shard.get_or_compile(CHEBYSHEV).unwrap();
+        assert_eq!(base.factor, 16);
+        // scale down: a distinct key, a fresh compile
+        let (v2, hit2, key2) = shard.get_or_compile_at(CHEBYSHEV, 2).unwrap();
+        assert!(!hit2);
+        assert_eq!(v2.factor, 2);
+        assert_ne!(key2, base_key);
+        assert_eq!(key2, shard.variant_key(base_key.source, 2));
+        // the base artifact is untouched and still a hit
+        let (_, hit_base, _) = shard.get_or_compile(CHEBYSHEV).unwrap();
+        assert!(hit_base);
+        // scaling back to factor 2 is a cache hit — no recompile
+        let misses_before = shard.cache_stats().misses;
+        let (v2b, hit2b, _) = shard.get_or_compile_at(CHEBYSHEV, 2).unwrap();
+        assert!(hit2b);
+        assert!(Arc::ptr_eq(&v2, &v2b));
+        assert_eq!(shard.cache_stats().misses, misses_before);
+        // get_cached counts a hit without compiling; admit restores an
+        // evicted entry
+        assert!(shard.get_cached(&key2).is_some());
+        assert!(shard.get_cached(&shard.variant_key(base_key.source, 7)).is_none());
+        shard.admit(shard.variant_key(base_key.source, 7), v2b);
+        assert!(shard.get_cached(&shard.variant_key(base_key.source, 7)).is_some());
     }
 
     #[test]

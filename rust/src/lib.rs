@@ -48,12 +48,22 @@
 //!   where copies × throughput peaks.
 //! * [`coordinator`] — the overlay serving layer: per-spec kernel
 //!   caches keyed by (source hash, overlay fingerprint, options
-//!   fingerprint) with disk snapshots for warm restarts, a slot-aware
+//!   fingerprint) with disk snapshots for warm restarts (periodic, in
+//!   the background, on a submit-count cadence), a slot-aware
 //!   scheduler that treats configured partitions as a cache (affinity
-//!   dispatch, batch-class-first victims paying the modeled 42
-//!   µs-class reconfiguration cost), and async per-partition dispatch
-//!   queues with two QoS lanes, same-kernel batch fusion, completion
-//!   handles and serving statistics.
+//!   dispatch, deadline-shielded victims, batch-class-first eviction
+//!   paying the modeled 42 µs-class reconfiguration cost), and async
+//!   per-partition dispatch queues with two QoS lanes, same-kernel
+//!   batch fusion (plus a bounded cross-batch fusion window),
+//!   completion handles and serving statistics.
+//! * [`autoscale`] — adaptive runtime performance scaling: per-
+//!   (kernel, spec) sliding-window load signals fed from both ends of
+//!   the dispatch path, a hysteresis + cooldown scale policy that
+//!   provably cannot oscillate, and a background rescale lane that
+//!   re-replicates hot kernels (or shrinks over-provisioned ones)
+//!   while serving — variants are cache-keyed per factor, swaps are
+//!   atomic, and every decision lands in a bounded `ScaleEvent` audit
+//!   log.
 //! * [`bench_kernels`] — the paper's six benchmark kernels as OpenCL-C
 //!   sources with their Table III metadata.
 //! * [`metrics`] — the GOPS / resource / configuration-time models behind
@@ -65,6 +75,7 @@
 //! [`runtime`] module loads through the PJRT C API. Nothing on the
 //! request path touches Python.
 
+pub mod autoscale;
 pub mod bench_kernels;
 pub mod compiler;
 pub mod configgen;
@@ -89,6 +100,7 @@ pub mod util;
 
 /// Convenient re-exports for the common compile-and-run flow.
 pub mod prelude {
+    pub use crate::autoscale::{AutoscalePolicy, ScaleDirection, ScaleEvent};
     pub use crate::compiler::{
         CompileOptions, CompileReport, CompiledKernel, JitCompiler, KernelCost,
         Replication,

@@ -71,6 +71,75 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx.min(sorted.len() - 1)]
 }
 
+/// A bounded sliding window of scalar samples — the building block of
+/// the autoscaler's [`crate::autoscale::LoadSignal`]. Pushing past the
+/// capacity drops the oldest sample, so every summary reflects only
+/// the most recent `capacity` observations.
+#[derive(Debug, Clone)]
+pub struct SlidingWindow {
+    buf: std::collections::VecDeque<f64>,
+    capacity: usize,
+}
+
+impl SlidingWindow {
+    /// A window retaining the last `capacity` samples (clamped ≥ 1).
+    pub fn new(capacity: usize) -> SlidingWindow {
+        let capacity = capacity.max(1);
+        SlidingWindow { buf: std::collections::VecDeque::with_capacity(capacity), capacity }
+    }
+
+    /// Append a sample, evicting the oldest once full.
+    pub fn push(&mut self, v: f64) {
+        if self.buf.len() == self.capacity {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Whether the window holds `capacity` samples.
+    pub fn is_full(&self) -> bool {
+        self.buf.len() == self.capacity
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Mean of the retained samples (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            0.0
+        } else {
+            self.buf.iter().sum::<f64>() / self.buf.len() as f64
+        }
+    }
+
+    /// Maximum of the retained samples (0.0 when empty).
+    pub fn max(&self) -> f64 {
+        self.buf.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Percentile (nearest-rank, [`percentile`]) of the retained
+    /// samples; 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut sorted: Vec<f64> = self.buf.iter().copied().collect();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile(&sorted, p)
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+}
+
 /// Latency distribution summary (milliseconds).
 #[derive(Debug, Clone, Default)]
 pub struct LatencyStats {
@@ -173,6 +242,39 @@ pub struct SpecServingStats {
     pub replication_histogram: Vec<(usize, u64)>,
 }
 
+/// Counters of the feedback-driven autoscaler
+/// ([`crate::autoscale::Autoscaler`]): how often kernels were
+/// re-replicated at run time and what the rescales cost.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AutoscaleStats {
+    /// Applied rescales that raised the replication factor.
+    pub scale_ups: u64,
+    /// Applied rescales that lowered the replication factor.
+    pub scale_downs: u64,
+    /// Rescales whose background compile failed (the previous factor
+    /// keeps serving).
+    pub failed_rescales: u64,
+    /// Rescales whose target factor was already resident in the
+    /// kernel cache — scaling back to a previously compiled factor
+    /// pays no JIT.
+    pub rescale_cache_hits: u64,
+    /// Wall seconds the background lane spent compiling variants.
+    pub rescale_compile_seconds: f64,
+    /// (kernel, spec) pairs currently served by a non-default factor.
+    pub active_variants: usize,
+    /// (kernel, spec) pairs with live load signals.
+    pub tracked_kernels: usize,
+    /// Scale events beyond the bounded audit log.
+    pub events_dropped: u64,
+}
+
+impl AutoscaleStats {
+    /// Applied scale events (ups + downs).
+    pub fn applied(&self) -> u64 {
+        self.scale_ups + self.scale_downs
+    }
+}
+
 /// Aggregate serving statistics reported by the coordinator: the
 /// quantities that decide whether run-time kernel management is
 /// actually paying off (paper's premise — seconds-class JIT + µs-class
@@ -204,6 +306,9 @@ pub struct ServingStats {
     pub fused_batches: u64,
     /// Wall seconds of JIT compilation spent on cache misses.
     pub compile_seconds: f64,
+    /// Run-time rescale counters; `None` when the coordinator runs
+    /// with frozen replication plans (no autoscaler configured).
+    pub autoscale: Option<AutoscaleStats>,
 }
 
 impl ServingStats {
@@ -229,6 +334,18 @@ impl ServingStats {
             self.latency.max_ms,
             self.latency.count,
         );
+        if let Some(a) = &self.autoscale {
+            out.push_str(&format!(
+                "autoscale  : {} up / {} down ({} failed), {} rescale cache hits, \
+                 {:.1} ms variant compiles, {} active variants\n",
+                a.scale_ups,
+                a.scale_downs,
+                a.failed_rescales,
+                a.rescale_cache_hits,
+                a.rescale_compile_seconds * 1e3,
+                a.active_variants,
+            ));
+        }
         for s in &self.per_spec {
             let histogram: Vec<String> = s
                 .replication_histogram
@@ -397,6 +514,12 @@ mod tests {
             dispatch_errors: 0,
             fused_batches: 1,
             compile_seconds: 0.2,
+            autoscale: Some(AutoscaleStats {
+                scale_ups: 1,
+                scale_downs: 2,
+                rescale_cache_hits: 1,
+                ..Default::default()
+            }),
         };
         assert!((s.cache.hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
@@ -406,6 +529,33 @@ mod tests {
         assert!(r.contains("spec 8x8-dsp2"), "{r}");
         assert!(r.contains("x16:4"), "{r}");
         assert!(r.contains("1 fused batches"), "{r}");
+        assert!(r.contains("1 up / 2 down"), "{r}");
+        assert_eq!(s.autoscale.unwrap().applied(), 3);
+    }
+
+    #[test]
+    fn sliding_window_evicts_oldest_and_summarizes() {
+        let mut w = SlidingWindow::new(4);
+        assert!(w.is_empty());
+        assert_eq!(w.mean(), 0.0);
+        for v in [1.0, 2.0, 3.0, 4.0] {
+            w.push(v);
+        }
+        assert!(w.is_full());
+        assert_eq!(w.len(), 4);
+        assert!((w.mean() - 2.5).abs() < 1e-12);
+        assert_eq!(w.max(), 4.0);
+        // pushing past capacity drops the oldest sample (1.0)
+        w.push(8.0);
+        assert_eq!(w.len(), 4);
+        assert!((w.mean() - (2.0 + 3.0 + 4.0 + 8.0) / 4.0).abs() < 1e-12);
+        assert_eq!(w.max(), 8.0);
+        assert_eq!(w.percentile(0.0), 2.0);
+        assert_eq!(w.percentile(1.0), 8.0);
+        w.clear();
+        assert!(w.is_empty());
+        // capacity is clamped to at least one sample
+        assert_eq!(SlidingWindow::new(0).capacity(), 1);
     }
 
     #[test]
