@@ -9,6 +9,9 @@
 #                     seed; #[ignore]d in the default suite). Wired
 #                     into CI as a separate non-blocking job.
 #   make bench      — the paper-figure + serving bench harnesses
+#   make bench-json — the §E11 hot-path data-plane bench; writes
+#                     machine-readable BENCH_hotpath.json at the repo
+#                     root (perf trajectory; non-blocking CI job)
 #   make artifacts  — AOT-lower the Pallas overlay emulator to HLO text
 #                     (needs the Python jax/pallas toolchain; only
 #                     required for the `pjrt` feature paths)
@@ -16,7 +19,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy build test soak bench bench-build doc artifacts
+.PHONY: check fmt clippy build test soak bench bench-build bench-json doc artifacts
 
 check: fmt clippy test bench-build doc
 
@@ -42,7 +45,14 @@ bench:
 	$(CARGO) bench --bench serve_throughput
 	$(CARGO) bench --bench fleet_routing
 	$(CARGO) bench --bench autoscale
-	$(CARGO) bench --bench hotpath
+	$(CARGO) bench --bench jit_stages
+	$(CARGO) bench --bench hot_path
+
+# the §E11 data-plane bench (scalar-vs-blocked simulator, cloned-vs-
+# arena dispatch, global-vs-sharded log, submit hot path); emits
+# BENCH_hotpath.json in the working directory
+bench-json:
+	$(CARGO) bench --bench hot_path
 
 # compile every bench harness without running it — keeps bench code
 # (fleet_routing, autoscale included) from silently rotting in CI

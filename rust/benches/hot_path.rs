@@ -1,0 +1,329 @@
+//! Bench: §E11 — the zero-copy, lock-light serving data plane.
+//!
+//! Quantifies each leg of the data-plane rebuild and emits the
+//! results machine-readably to `BENCH_hotpath.json` (override with
+//! the `BENCH_JSON` environment variable) so the perf trajectory can
+//! be tracked across commits:
+//!
+//! * **scalar vs blocked** — `sim::execute_reference` (one work-item
+//!   at a time through the slot table) against the blocked SoA
+//!   executor (`sim::execute_into` with a warmed scratch), ns/item
+//!   per benchmark kernel;
+//! * **cloned vs arena** — the legacy dispatch composition
+//!   (`pack_streams` → `execute` → `scatter_outputs`, fresh vectors
+//!   and argument clones per call) against the snapshot + arena path
+//!   (`snapshot_args` → `pack_streams_into` → `execute_into` →
+//!   `scatter_outputs_from`), µs/dispatch;
+//! * **global vs sharded log** — N threads hammering one
+//!   mutex-guarded counter pair vs per-thread atomic shards merged at
+//!   the end, ns/op (the `ServeLog` sharding);
+//! * **submit hot path** — µs per `Coordinator::submit` of a
+//!   cache-resident kernel (the narrowed router/scheduler critical
+//!   sections live here).
+//!
+//! Run: `cargo bench --bench hot_path` (or `make bench-json`).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Instant;
+
+use overlay_jit::arena::{ScratchPool, StreamArena};
+use overlay_jit::bench_kernels::{reference_overlay, BENCHMARKS, CHEBYSHEV};
+use overlay_jit::coordinator::wait_all;
+use overlay_jit::metrics::TextTable;
+use overlay_jit::prelude::*;
+use overlay_jit::runtime_ocl::{Backend, Context, Device};
+use overlay_jit::sim::{self, SimScratch};
+use overlay_jit::util::{JsonValue, XorShiftRng};
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn num(v: f64) -> JsonValue {
+    JsonValue::Number(v)
+}
+
+fn obj(fields: Vec<(&str, JsonValue)>) -> JsonValue {
+    JsonValue::Object(
+        fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Scalar walker vs blocked SoA executor, per benchmark kernel.
+fn bench_scalar_vs_blocked(jit: &JitCompiler) -> (JsonValue, String) {
+    let mut table = TextTable::new(vec![
+        "benchmark", "items", "scalar ns/item", "blocked ns/item", "speedup",
+    ]);
+    let mut rows = Vec::new();
+    for b in &BENCHMARKS {
+        let k = jit.compile(b.source).expect("compile");
+        let chunk = 16 * 1024;
+        let items = chunk * k.copies(); // work-items per invocation
+        let mut rng = XorShiftRng::new(11);
+        let streams: Vec<Vec<i32>> = (0..k.schedule.num_inputs)
+            .map(|_| (0..chunk).map(|_| rng.gen_i64(-40, 40) as i32).collect())
+            .collect();
+        let mut arena = StreamArena::new();
+        arena.fill_from(&streams, chunk);
+        let mut scratch = SimScratch::new();
+        let mut out = StreamArena::new();
+        // warm both paths once
+        sim::execute_into(&k.schedule, &arena, chunk, &mut scratch, &mut out).unwrap();
+        let reference = sim::execute_reference(&k.schedule, &streams, chunk).unwrap();
+        assert_eq!(out.to_vecs(), reference, "{}: blocked output diverged", b.name);
+
+        let mut scalar_s = Vec::new();
+        let mut blocked_s = Vec::new();
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            sim::execute_reference(&k.schedule, &streams, chunk).unwrap();
+            scalar_s.push(t0.elapsed().as_secs_f64());
+            let t1 = Instant::now();
+            sim::execute_into(&k.schedule, &arena, chunk, &mut scratch, &mut out).unwrap();
+            blocked_s.push(t1.elapsed().as_secs_f64());
+        }
+        let scalar_ns = median(scalar_s) * 1e9 / items as f64;
+        let blocked_ns = median(blocked_s) * 1e9 / items as f64;
+        table.row(vec![
+            b.name.to_string(),
+            items.to_string(),
+            format!("{scalar_ns:.2}"),
+            format!("{blocked_ns:.2}"),
+            format!("{:.2}x", scalar_ns / blocked_ns),
+        ]);
+        rows.push(obj(vec![
+            ("kernel", JsonValue::String(b.name.to_string())),
+            ("items", num(items as f64)),
+            ("scalar_ns_per_item", num(scalar_ns)),
+            ("blocked_ns_per_item", num(blocked_ns)),
+            ("speedup", num(scalar_ns / blocked_ns)),
+        ]));
+    }
+    (JsonValue::Array(rows), table.render())
+}
+
+/// Legacy cloned dispatch composition vs the snapshot + arena path.
+fn bench_cloned_vs_arena(jit: &JitCompiler) -> (JsonValue, String) {
+    let k = Arc::new(jit.compile(CHEBYSHEV).expect("compile").servable());
+    let kernel = Kernel::from_servable(k.clone());
+    let dev = Device {
+        spec: reference_overlay(),
+        backend: Backend::CycleSim,
+        name: "bench".into(),
+    };
+    let ctx = Context::new(&dev);
+    let n = 16 * 1024;
+    let a = ctx.create_buffer(n);
+    let b = ctx.create_buffer(n);
+    a.write(&(0..n as i32).map(|i| i % 19 - 9).collect::<Vec<_>>());
+    kernel.set_arg(0, &a).unwrap();
+    kernel.set_arg(1, &b).unwrap();
+
+    let reps = 20;
+    // legacy composition: fresh vectors + an argument-table clone in
+    // every one of pack, scatter (and execute allocating its outputs)
+    let mut cloned_s = Vec::new();
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let (streams, chunk) = kernel.pack_streams(n).unwrap();
+        let outs = sim::execute(&k.schedule, &streams, chunk).unwrap();
+        kernel.scatter_outputs(&outs, n);
+        cloned_s.push(t0.elapsed().as_secs_f64());
+    }
+    // arena composition: one snapshot, pooled scratch, zero steady-
+    // state allocations
+    let pool = ScratchPool::new();
+    let mut arena_s = Vec::new();
+    for _ in 0..reps + 1 {
+        let t0 = Instant::now();
+        let mut scratch = pool.checkout();
+        let snap = kernel.snapshot_args().unwrap();
+        let chunk = kernel.chunk_for(n);
+        scratch.inputs.reset(k.schedule.num_inputs, chunk);
+        kernel.pack_streams_into(&snap, n, &mut scratch.inputs, 0).unwrap();
+        sim::execute_into(&k.schedule, &scratch.inputs, chunk, &mut scratch.sim, &mut scratch.outputs)
+            .unwrap();
+        kernel.scatter_outputs_from(&snap, &scratch.outputs, 0, n);
+        pool.checkin(scratch);
+        arena_s.push(t0.elapsed().as_secs_f64());
+    }
+    arena_s.remove(0); // warm-up rep grows the arenas; steady state doesn't
+    let cloned_us = median(cloned_s) * 1e6;
+    let arena_us = median(arena_s) * 1e6;
+    let stats = pool.stats();
+    let text = format!(
+        "cloned path : {cloned_us:.1} us/dispatch ({n} items)\n\
+         arena path  : {arena_us:.1} us/dispatch ({:.2}x), {} heap growths over {} dispatches\n",
+        cloned_us / arena_us,
+        stats.grow_events,
+        stats.checkouts,
+    );
+    (
+        obj(vec![
+            ("items", num(n as f64)),
+            ("cloned_us_per_dispatch", num(cloned_us)),
+            ("arena_us_per_dispatch", num(arena_us)),
+            ("speedup", num(cloned_us / arena_us)),
+            ("arena_grow_events", num(stats.grow_events as f64)),
+            ("arena_dispatches", num(stats.checkouts as f64)),
+        ]),
+        text,
+    )
+}
+
+/// One mutex-guarded counter pair vs per-thread atomic shards.
+fn bench_log_sharding() -> (JsonValue, String) {
+    let threads = 4usize;
+    let ops = 200_000u64;
+
+    let global = Arc::new(Mutex::new((0u64, 0u64)));
+    let t0 = Instant::now();
+    let hs: Vec<_> = (0..threads)
+        .map(|_| {
+            let g = global.clone();
+            thread::spawn(move || {
+                for i in 0..ops {
+                    let mut l = g.lock().unwrap();
+                    l.0 += 1;
+                    l.1 += i;
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    let global_s = t0.elapsed().as_secs_f64();
+    assert_eq!(global.lock().unwrap().0, threads as u64 * ops);
+
+    let shards: Vec<Arc<(AtomicU64, AtomicU64)>> =
+        (0..threads).map(|_| Arc::new((AtomicU64::new(0), AtomicU64::new(0)))).collect();
+    let t1 = Instant::now();
+    let hs: Vec<_> = shards
+        .iter()
+        .map(|s| {
+            let s = s.clone();
+            thread::spawn(move || {
+                for i in 0..ops {
+                    s.0.fetch_add(1, Ordering::Relaxed);
+                    s.1.fetch_add(i, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    let sharded_s = t1.elapsed().as_secs_f64();
+    let merged: u64 = shards.iter().map(|s| s.0.load(Ordering::Relaxed)).sum();
+    assert_eq!(merged, threads as u64 * ops);
+
+    let total_ops = (threads as u64 * ops) as f64;
+    let global_ns = global_s * 1e9 / total_ops;
+    let sharded_ns = sharded_s * 1e9 / total_ops;
+    let text = format!(
+        "global mutex log : {global_ns:.1} ns/op ({threads} threads)\n\
+         sharded atomics  : {sharded_ns:.1} ns/op ({:.2}x)\n",
+        global_ns / sharded_ns
+    );
+    (
+        obj(vec![
+            ("threads", num(threads as f64)),
+            ("ops_per_thread", num(ops as f64)),
+            ("global_mutex_ns_per_op", num(global_ns)),
+            ("sharded_atomic_ns_per_op", num(sharded_ns)),
+            ("speedup", num(global_ns / sharded_ns)),
+        ]),
+        text,
+    )
+}
+
+/// µs per `submit` of a cache-resident kernel — the end-to-end cost
+/// of the narrowed router/scheduler critical sections.
+fn bench_submit_hot_path() -> (JsonValue, String) {
+    let coord = Coordinator::new(CoordinatorConfig::sim_fleet(reference_overlay(), 2))
+        .expect("coordinator");
+    let dev = Device {
+        spec: reference_overlay(),
+        backend: Backend::CycleSim,
+        name: "bench".into(),
+    };
+    let ctx = Context::new(&dev);
+    let n = 1024;
+    let submit = |count: usize| {
+        let handles: Vec<_> = (0..count)
+            .map(|_| {
+                let a = ctx.create_buffer(n);
+                let b = ctx.create_buffer(n);
+                a.write(&(0..n as i32).map(|i| i % 7 - 3).collect::<Vec<_>>());
+                coord
+                    .submit(
+                        CHEBYSHEV,
+                        &[SubmitArg::Buffer(a), SubmitArg::Buffer(b)],
+                        n,
+                        Priority::Interactive,
+                    )
+                    .unwrap()
+            })
+            .collect();
+        wait_all(handles).unwrap();
+    };
+    submit(8); // compile + warm the pool and caches
+    let rounds = 200;
+    let t0 = Instant::now();
+    submit(rounds);
+    let total_s = t0.elapsed().as_secs_f64();
+    let us = total_s * 1e6 / rounds as f64;
+    let pool = coord.pool_stats();
+    let text = format!(
+        "submit hot path  : {us:.1} us/dispatch e2e (cache-resident, {} pool growths)\n",
+        pool.grow_events
+    );
+    (
+        obj(vec![
+            ("dispatches", num(rounds as f64)),
+            ("e2e_us_per_dispatch", num(us)),
+            ("pool_grow_events", num(pool.grow_events as f64)),
+            ("pool_created", num(pool.created as f64)),
+        ]),
+        text,
+    )
+}
+
+fn main() {
+    let spec = reference_overlay();
+    let jit = JitCompiler::new(spec);
+
+    println!("# §E11 — scalar vs blocked SoA executor\n");
+    let (sim_json, sim_text) = bench_scalar_vs_blocked(&jit);
+    println!("{sim_text}");
+
+    println!("# §E11 — cloned vs arena dispatch path (chebyshev x16)\n");
+    let (pack_json, pack_text) = bench_cloned_vs_arena(&jit);
+    println!("{pack_text}");
+
+    println!("# §E11 — global mutex vs sharded serving log\n");
+    let (log_json, log_text) = bench_log_sharding();
+    println!("{log_text}");
+
+    println!("# §E11 — coordinator submit hot path\n");
+    let (submit_json, submit_text) = bench_submit_hot_path();
+    println!("{submit_text}");
+
+    let doc = obj(vec![
+        ("bench", JsonValue::String("hot_path".to_string())),
+        ("sim_block", num(overlay_jit::sim::SIM_BLOCK as f64)),
+        ("scalar_vs_blocked", sim_json),
+        ("cloned_vs_arena", pack_json),
+        ("log_sharding", log_json),
+        ("submit_hot_path", submit_json),
+    ]);
+    let path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    std::fs::write(&path, doc.render()).expect("writing bench JSON");
+    println!("wrote {path}");
+}

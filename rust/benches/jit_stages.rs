@@ -7,7 +7,7 @@
 //! * placement and routing isolated (the PAR hot loops);
 //! * cycle-sim and PJRT dispatch throughput (work-items/s).
 //!
-//! Run: `cargo bench --bench hotpath`
+//! Run: `cargo bench --bench jit_stages`
 
 use std::time::Instant;
 

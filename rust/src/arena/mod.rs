@@ -1,0 +1,267 @@
+//! Flat stream arenas and the pooled dispatch scratch — the zero-copy
+//! data plane under [`crate::runtime_ocl`] and [`crate::coordinator`].
+//!
+//! The original dispatch path shuttled work-item streams around as
+//! `Vec<Vec<i32>>`: one heap allocation per stream per dispatch, plus
+//! whole-argument clones in `pack_streams` / `scatter_outputs`, plus
+//! fresh output vectors inside the simulator. None of that models the
+//! overlay (whose streams are DMA bursts over a fixed buffer) and all
+//! of it dominated serving time. This module replaces the plumbing:
+//!
+//! * [`StreamArena`] — one contiguous `i32` buffer holding `streams`
+//!   equal-length lanes (stream-major). Packing writes **into** the
+//!   arena at a lane offset, so a fused batch concatenates jobs by
+//!   offset instead of re-copying their streams; splitting results
+//!   back out is a borrowed sub-slice, not a copy. `reset` keeps the
+//!   allocation, so a warmed arena performs zero heap allocation.
+//! * [`DispatchScratch`] — everything one dispatch needs to run
+//!   without touching the allocator: an input arena, an output arena,
+//!   and the blocked simulator's [`crate::sim::SimScratch`].
+//! * [`ScratchPool`] — a checkout/checkin pool of dispatch scratches
+//!   shared by the coordinator's partition workers and the synchronous
+//!   [`crate::runtime_ocl::CommandQueue`]. [`PoolStats::grow_events`]
+//!   counts the (warm-up only) heap growth, which the hot-path tests
+//!   pin to prove the steady state allocates nothing per work-item.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::SimScratch;
+
+/// A flat, reusable stream matrix: `streams` lanes of `items` `i32`s
+/// in one contiguous buffer (stream-major), standing in for the
+/// overlay's DMA staging buffer.
+#[derive(Debug, Default)]
+pub struct StreamArena {
+    data: Vec<i32>,
+    streams: usize,
+    items: usize,
+    grow_events: u64,
+}
+
+impl StreamArena {
+    pub fn new() -> StreamArena {
+        StreamArena::default()
+    }
+
+    /// An arena pre-sized for `streams × items` (no warm-up growth).
+    pub fn with_shape(streams: usize, items: usize) -> StreamArena {
+        let mut a = StreamArena::new();
+        a.reset(streams, items);
+        a.grow_events = 0;
+        a
+    }
+
+    /// Reshape for a new dispatch: `streams` lanes × `items` columns,
+    /// all zeroed. Keeps the existing allocation whenever it is large
+    /// enough; growth is counted in [`StreamArena::grow_events`].
+    pub fn reset(&mut self, streams: usize, items: usize) {
+        let need = streams * items;
+        let cap0 = self.data.capacity();
+        self.data.clear();
+        self.data.resize(need, 0);
+        if self.data.capacity() > cap0 {
+            self.grow_events += 1;
+        }
+        self.streams = streams;
+        self.items = items;
+    }
+
+    /// Number of streams (lanes).
+    pub fn streams(&self) -> usize {
+        self.streams
+    }
+
+    /// Items per stream.
+    pub fn items(&self) -> usize {
+        self.items
+    }
+
+    /// Borrow stream `s` (length [`StreamArena::items`]).
+    pub fn stream(&self, s: usize) -> &[i32] {
+        &self.data[s * self.items..(s + 1) * self.items]
+    }
+
+    /// Mutably borrow stream `s`.
+    pub fn stream_mut(&mut self, s: usize) -> &mut [i32] {
+        &mut self.data[s * self.items..(s + 1) * self.items]
+    }
+
+    /// The live `streams × items` region as one flat slice.
+    pub fn as_flat(&self) -> &[i32] {
+        &self.data[..self.streams * self.items]
+    }
+
+    /// Heap (re)allocations this arena has performed — stable after
+    /// warm-up on a fixed dispatch shape.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+
+    /// Copy the arena out into per-stream vectors (compatibility with
+    /// the legacy `Vec<Vec<i32>>` plumbing and the PJRT FFI boundary).
+    pub fn to_vecs(&self) -> Vec<Vec<i32>> {
+        (0..self.streams).map(|s| self.stream(s).to_vec()).collect()
+    }
+
+    /// Fill the arena from per-stream slices (shape taken from the
+    /// input; every stream must be `items` long).
+    pub fn fill_from(&mut self, streams: &[Vec<i32>], items: usize) {
+        self.reset(streams.len(), items);
+        for (s, v) in streams.iter().enumerate() {
+            self.stream_mut(s).copy_from_slice(&v[..items]);
+        }
+    }
+}
+
+/// Everything one dispatch needs to execute with zero heap traffic
+/// once warm: pack target, simulator scratch, output staging.
+#[derive(Debug, Default)]
+pub struct DispatchScratch {
+    /// Packed input streams (written by `pack_streams_into`).
+    pub inputs: StreamArena,
+    /// Backend output streams (written by `sim::execute_into`).
+    pub outputs: StreamArena,
+    /// Simulator re-execution target for cross-checking a non-sim
+    /// backend's outputs (idle on cycle-sim partitions).
+    pub verify: StreamArena,
+    /// The blocked simulator's slot-table block and lane buffers.
+    pub sim: SimScratch,
+}
+
+impl DispatchScratch {
+    pub fn new() -> DispatchScratch {
+        DispatchScratch::default()
+    }
+
+    /// Total heap growth across the scratch's components.
+    pub fn grow_events(&self) -> u64 {
+        self.inputs.grow_events()
+            + self.outputs.grow_events()
+            + self.verify.grow_events()
+            + self.sim.grow_events()
+    }
+}
+
+/// Counters of a [`ScratchPool`] — the evidence behind the "zero
+/// allocations per work-item after warm-up" claim (§E11).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Scratches ever constructed (warm-up; bounded by peak
+    /// concurrency, not by dispatch count).
+    pub created: u64,
+    /// Checkouts served (≥ `created`; the difference is reuse).
+    pub checkouts: u64,
+    /// Checkouts satisfied from the free list without allocating.
+    pub reuses: u64,
+    /// Scratches currently parked in the pool.
+    pub pooled: usize,
+    /// Heap growth summed over the parked scratches — stable once the
+    /// fleet has seen its working set of dispatch shapes.
+    pub grow_events: u64,
+}
+
+/// A checkout/checkin pool of [`DispatchScratch`]es. The lock guards
+/// only a `Vec` push/pop (nanoseconds); one checkout serves a whole
+/// fused run, so the pool never becomes a per-job serialization point.
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    free: Mutex<Vec<DispatchScratch>>,
+    created: AtomicU64,
+    checkouts: AtomicU64,
+    reuses: AtomicU64,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// Take a scratch (reusing a parked one when available).
+    pub fn checkout(&self) -> DispatchScratch {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        if let Some(s) = self.free.lock().unwrap().pop() {
+            self.reuses.fetch_add(1, Ordering::Relaxed);
+            s
+        } else {
+            self.created.fetch_add(1, Ordering::Relaxed);
+            DispatchScratch::new()
+        }
+    }
+
+    /// Return a scratch (its warmed allocations come back with it).
+    pub fn checkin(&self, scratch: DispatchScratch) {
+        self.free.lock().unwrap().push(scratch);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let free = self.free.lock().unwrap();
+        PoolStats {
+            created: self.created.load(Ordering::Relaxed),
+            checkouts: self.checkouts.load(Ordering::Relaxed),
+            reuses: self.reuses.load(Ordering::Relaxed),
+            pooled: free.len(),
+            grow_events: free.iter().map(|s| s.grow_events()).sum(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arena_shapes_zeroes_and_reuses_its_allocation() {
+        let mut a = StreamArena::new();
+        a.reset(2, 4);
+        assert_eq!((a.streams(), a.items()), (2, 4));
+        assert_eq!(a.grow_events(), 1);
+        a.stream_mut(1).copy_from_slice(&[1, 2, 3, 4]);
+        assert_eq!(a.stream(0), &[0, 0, 0, 0]);
+        assert_eq!(a.stream(1), &[1, 2, 3, 4]);
+        assert_eq!(a.as_flat(), &[0, 0, 0, 0, 1, 2, 3, 4]);
+        // reshaping within capacity allocates nothing and re-zeroes
+        a.reset(4, 2);
+        assert_eq!(a.grow_events(), 1);
+        assert!(a.as_flat().iter().all(|&v| v == 0));
+        // growth is counted
+        a.reset(8, 64);
+        assert_eq!(a.grow_events(), 2);
+        assert_eq!(a.to_vecs().len(), 8);
+    }
+
+    #[test]
+    fn arena_round_trips_vec_plumbing() {
+        let streams = vec![vec![1, 2, 3], vec![4, 5, 6]];
+        let mut a = StreamArena::new();
+        a.fill_from(&streams, 3);
+        assert_eq!(a.to_vecs(), streams);
+        // with_shape starts warm: a same-shape reset never grows
+        let mut b = StreamArena::with_shape(2, 3);
+        assert_eq!(b.grow_events(), 0);
+        b.reset(2, 3);
+        assert_eq!(b.grow_events(), 0);
+    }
+
+    #[test]
+    fn pool_reuses_scratches_and_tracks_growth() {
+        let pool = ScratchPool::new();
+        let mut s = pool.checkout();
+        s.inputs.reset(4, 128);
+        s.outputs.reset(4, 128);
+        pool.checkin(s);
+        let stats = pool.stats();
+        assert_eq!((stats.created, stats.checkouts, stats.reuses), (1, 1, 0));
+        assert_eq!(stats.pooled, 1);
+        let warm_growth = stats.grow_events;
+        assert!(warm_growth >= 2);
+        // the second checkout reuses the warmed scratch; a same-shape
+        // reset adds no growth
+        let mut s = pool.checkout();
+        assert_eq!(pool.stats().reuses, 1);
+        s.inputs.reset(4, 128);
+        s.outputs.reset(4, 128);
+        pool.checkin(s);
+        assert_eq!(pool.stats().grow_events, warm_growth);
+    }
+}

@@ -11,33 +11,44 @@
 //!
 //! Workers drain their queue in batches, and **fuse** consecutive
 //! drained jobs that share a kernel fingerprint into one wider
-//! simulator invocation: the per-copy input streams are concatenated
-//! along the item axis and executed in a single backend call, which
-//! amortizes dispatch overhead exactly the way the paper's runtime
-//! reuses a loaded overlay configuration across
-//! `clEnqueueNDRangeKernel` calls ([`ServeLog::fused_batches`] counts
-//! these). Outputs are split back per job, scattered into each job's
-//! own buffers and verified per job.
+//! simulator invocation. The data plane is zero-copy: every job packs
+//! its argument buffers **directly into one flat
+//! [`crate::arena::StreamArena`]** at its own lane offset (drawn from
+//! the coordinator's [`crate::arena::ScratchPool`]), so a fused batch
+//! concatenates by offset instead of building per-job vectors and
+//! re-copying them; results split back out as borrowed arena views.
+//! This amortizes dispatch overhead exactly the way the paper's
+//! runtime reuses a loaded overlay configuration across
+//! `clEnqueueNDRangeKernel` calls ([`LogShard::fused_batches`] counts
+//! these). Outputs are scattered into each job's own buffers and
+//! verified per job.
+//!
+//! Serving counters are **sharded per worker** ([`LogShard`]: plain
+//! atomics plus a worker-private latency reservoir) and merged only
+//! when statistics are read, so the submit/complete hot path never
+//! contends on a global log mutex.
 //!
 //! Completion carries the same timing breakdown as a synchronous
-//! [`crate::runtime_ocl::Event`] (wall time, modeled configuration
-//! load, modeled II=1 overlay timing) plus serving metadata: queue
-//! wait, compile-cache hit flag, serving spec, priority class, batch
-//! and fusion sizes, and the optional cycle-simulator verification
-//! verdict. For a fused run the measured wall time spans from the
-//! run's pack start to each job's own scatter/verify completion; the
-//! modeled timing is always per job.
+//! [`crate::runtime_ocl::Event`] (wall time, pack/scatter split,
+//! modeled configuration load, modeled II=1 overlay timing) plus
+//! serving metadata: queue wait, compile-cache hit flag, serving
+//! spec, priority class, batch and fusion sizes, and the optional
+//! cycle-simulator verification verdict. For a fused run the measured
+//! wall time spans from the run's pack start to each job's own
+//! scatter/verify completion; the modeled timing is always per job.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::arena::{DispatchScratch, ScratchPool};
 use crate::autoscale::Autoscaler;
 use crate::fleet::Priority;
-use crate::runtime_ocl::{Backend, Buffer, Device, Event, Kernel};
+use crate::runtime_ocl::{ArgSnapshot, Backend, Buffer, Device, Event, Kernel};
 use crate::sim;
 
 use super::cache::CacheKey;
@@ -291,59 +302,134 @@ impl<T> LaneQueue<T> {
     }
 }
 
-/// Latency samples kept before the buffer halves its resolution —
-/// bounds coordinator memory on long-running fleets.
+/// Latency samples kept per worker shard before the buffer halves its
+/// resolution — bounds coordinator memory on long-running fleets.
 pub(crate) const MAX_LATENCY_SAMPLES: usize = 65_536;
 
-/// Shared serving counters the workers append to.
+/// Bounded, decimating latency sample buffer (one per worker shard;
+/// only its worker writes, so the guarding lock is uncontended).
 #[derive(Debug)]
-pub(crate) struct ServeLog {
+pub(crate) struct LatencyReservoir {
+    samples: Vec<f64>,
+    /// Every `stride`-th sample is kept; doubles each time the buffer
+    /// fills (decimation keeps percentiles representative).
+    stride: u64,
+    seen: u64,
+}
+
+impl Default for LatencyReservoir {
+    fn default() -> Self {
+        LatencyReservoir { samples: Vec::new(), stride: 1, seen: 0 }
+    }
+}
+
+impl LatencyReservoir {
+    fn record(&mut self, ms: f64) {
+        self.seen += 1;
+        if self.seen % self.stride != 0 {
+            return;
+        }
+        if self.samples.len() >= MAX_LATENCY_SAMPLES {
+            let mut i = 0usize;
+            self.samples.retain(|_| {
+                i += 1;
+                i % 2 == 1
+            });
+            self.stride *= 2;
+        }
+        self.samples.push(ms);
+    }
+}
+
+/// One worker's shard of the serving counters: plain atomics bumped
+/// lock-free on the completion path, plus the worker-private latency
+/// reservoir. Nothing here is shared between workers — the global
+/// view is assembled by [`ServeLog::totals`] when someone asks.
+#[derive(Debug, Default)]
+pub(crate) struct LogShard {
+    pub total_items: AtomicU64,
+    pub total_dispatches: AtomicU64,
+    pub verify_failures: AtomicU64,
+    pub errors: AtomicU64,
+    /// Runs in which ≥ 2 same-kernel jobs were fused into one backend
+    /// invocation.
+    pub fused_batches: AtomicU64,
+    latencies: Mutex<LatencyReservoir>,
+}
+
+impl LogShard {
+    /// Record one end-to-end dispatch latency, downsampling once the
+    /// reservoir reaches [`MAX_LATENCY_SAMPLES`].
+    pub(crate) fn record_latency(&self, ms: f64) {
+        self.latencies.lock().unwrap().record(ms);
+    }
+
+    /// The retained samples plus the stride they were kept at (one
+    /// retained sample represents `stride` dispatches).
+    pub(crate) fn latency_samples(&self) -> (u64, Vec<f64>) {
+        let l = self.latencies.lock().unwrap();
+        (l.stride, l.samples.clone())
+    }
+}
+
+/// Merged view of every shard — what [`ServeLog::totals`] returns.
+#[derive(Debug, Default)]
+pub(crate) struct LogTotals {
     pub latencies_ms: Vec<f64>,
-    /// Every `lat_stride`-th dispatch is sampled; doubles each time
-    /// the buffer fills (decimation keeps percentiles representative).
-    lat_stride: u64,
-    lat_seen: u64,
     pub total_items: u64,
     pub total_dispatches: u64,
     pub verify_failures: u64,
     pub errors: u64,
-    /// Worker batches in which ≥ 2 same-kernel jobs were fused into
-    /// one backend invocation.
     pub fused_batches: u64,
 }
 
-impl Default for ServeLog {
-    fn default() -> Self {
-        ServeLog {
-            latencies_ms: Vec::new(),
-            lat_stride: 1,
-            lat_seen: 0,
-            total_items: 0,
-            total_dispatches: 0,
-            verify_failures: 0,
-            errors: 0,
-            fused_batches: 0,
-        }
-    }
+/// The sharded serving log: one [`LogShard`] per partition worker,
+/// merged on read.
+#[derive(Debug)]
+pub(crate) struct ServeLog {
+    shards: Vec<Arc<LogShard>>,
 }
 
 impl ServeLog {
-    /// Record one end-to-end dispatch latency, downsampling once the
-    /// buffer reaches [`MAX_LATENCY_SAMPLES`].
-    pub(crate) fn record_latency(&mut self, ms: f64) {
-        self.lat_seen += 1;
-        if self.lat_seen % self.lat_stride != 0 {
-            return;
+    pub(crate) fn new(partitions: usize) -> ServeLog {
+        ServeLog {
+            shards: (0..partitions.max(1)).map(|_| Arc::new(LogShard::default())).collect(),
         }
-        if self.latencies_ms.len() >= MAX_LATENCY_SAMPLES {
-            let mut i = 0usize;
-            self.latencies_ms.retain(|_| {
-                i += 1;
-                i % 2 == 1
-            });
-            self.lat_stride *= 2;
+    }
+
+    /// The shard owned by partition `i`'s worker.
+    pub(crate) fn shard(&self, i: usize) -> Arc<LogShard> {
+        self.shards[i].clone()
+    }
+
+    /// Merge every shard into one snapshot (read-side only; the write
+    /// path never takes a cross-shard lock).
+    ///
+    /// Shards decimate independently (a shard's stride doubles each
+    /// time its reservoir fills), so a raw concatenation would weight
+    /// a busy stride-2 shard's samples half as much as an idle
+    /// stride-1 shard's and bias the merged percentiles toward idle
+    /// partitions. Strides are powers of two: every shard is thinned
+    /// to the fleet-wide maximum stride before merging, so each
+    /// retained sample represents the same number of dispatches.
+    pub(crate) fn totals(&self) -> LogTotals {
+        let mut t = LogTotals::default();
+        let mut reservoirs: Vec<(u64, Vec<f64>)> = Vec::with_capacity(self.shards.len());
+        for s in &self.shards {
+            t.total_items += s.total_items.load(Ordering::Relaxed);
+            t.total_dispatches += s.total_dispatches.load(Ordering::Relaxed);
+            t.verify_failures += s.verify_failures.load(Ordering::Relaxed);
+            t.errors += s.errors.load(Ordering::Relaxed);
+            t.fused_batches += s.fused_batches.load(Ordering::Relaxed);
+            reservoirs.push(s.latency_samples());
         }
-        self.latencies_ms.push(ms);
+        let max_stride =
+            reservoirs.iter().map(|(stride, _)| *stride).max().unwrap_or(1).max(1);
+        for (stride, samples) in reservoirs {
+            let step = (max_stride / stride.max(1)).max(1) as usize;
+            t.latencies_ms.extend(samples.into_iter().step_by(step));
+        }
+        t
     }
 }
 
@@ -395,11 +481,13 @@ impl Drop for BatchGuard {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn spawn_worker(
     partition: usize,
     device: Device,
     scheduler: Arc<Mutex<SlotScheduler>>,
-    log: Arc<Mutex<ServeLog>>,
+    log: Arc<LogShard>,
+    pool: Arc<ScratchPool>,
     verify: bool,
     fusion_window: Duration,
     autoscaler: Option<Arc<Autoscaler>>,
@@ -416,6 +504,7 @@ pub(crate) fn spawn_worker(
                 worker_queue,
                 scheduler,
                 log,
+                pool,
                 verify,
                 fusion_window,
                 autoscaler,
@@ -431,7 +520,8 @@ fn worker_loop(
     device: Device,
     queue: Arc<LaneQueue<Box<Job>>>,
     scheduler: Arc<Mutex<SlotScheduler>>,
-    log: Arc<Mutex<ServeLog>>,
+    log: Arc<LogShard>,
+    pool: Arc<ScratchPool>,
     verify: bool,
     fusion_window: Duration,
     autoscaler: Option<Arc<Autoscaler>>,
@@ -502,10 +592,12 @@ fn worker_loop(
                     }
                 }
             }
-            let results = serve_run(&device, &run, run_batch_size, verify);
+            let mut scratch = pool.checkout();
+            let results = serve_run(&device, &run, run_batch_size, verify, &mut scratch);
+            pool.checkin(scratch);
             let live = results.iter().filter(|r| r.is_ok()).count();
             if live >= 2 {
-                log.lock().unwrap().fused_batches += 1;
+                log.fused_batches.fetch_add(1, Ordering::Relaxed);
             }
             for (job, result) in run.into_iter().zip(results) {
                 let busy = match &result {
@@ -516,19 +608,19 @@ fn worker_loop(
                     .lock()
                     .unwrap()
                     .complete_with_deadline(partition, busy, job.deadline_nanos);
-                {
-                    let mut lg = log.lock().unwrap();
-                    lg.total_dispatches += 1;
-                    match &result {
-                        Ok(r) => {
-                            let e2e = r.queue_wait + r.event.wall;
-                            lg.record_latency(e2e.as_secs_f64() * 1e3);
-                            lg.total_items += r.event.global_size as u64;
-                            if r.verified == Some(false) {
-                                lg.verify_failures += 1;
-                            }
+                log.total_dispatches.fetch_add(1, Ordering::Relaxed);
+                match &result {
+                    Ok(r) => {
+                        let e2e = r.queue_wait + r.event.wall;
+                        log.record_latency(e2e.as_secs_f64() * 1e3);
+                        log.total_items
+                            .fetch_add(r.event.global_size as u64, Ordering::Relaxed);
+                        if r.verified == Some(false) {
+                            log.verify_failures.fetch_add(1, Ordering::Relaxed);
                         }
-                        Err(_) => lg.errors += 1,
+                    }
+                    Err(_) => {
+                        log.errors.fetch_add(1, Ordering::Relaxed);
                     }
                 }
                 // feed the autoscaler's completion-side load signal
@@ -569,102 +661,142 @@ fn group_runs(batch: Vec<Box<Job>>) -> Vec<Vec<Box<Job>>> {
 
 /// Execute one fusion run (1..N same-kernel jobs) on this worker's
 /// device in a single backend invocation and assemble the per-job
-/// completion reports (index-aligned with `run`).
+/// completion reports (index-aligned with `run`). Every job packs
+/// directly into the run's shared input arena at its own lane offset
+/// and reads its outputs back from the shared output arena at the
+/// same offset — the fused batch is concatenated and split without
+/// any intermediate stream copies.
 fn serve_run(
     device: &Device,
     run: &[Box<Job>],
     batch_size: usize,
     verify: bool,
+    scratch: &mut DispatchScratch,
 ) -> Vec<Result<DispatchResult>> {
     let queue_waits: Vec<Duration> = run.iter().map(|j| j.enqueued.elapsed()).collect();
     // wall clock covers the whole serve — pack, execute, cross-check,
     // and (per job) scatter + verification — matching the synchronous
     // runtime path's event semantics
     let t0 = Instant::now();
-    // pack each job's argument buffers into per-copy input streams
-    let packed: Vec<Result<(Vec<Vec<i32>>, usize)>> = run
-        .iter()
-        .map(|j| j.kernel.pack_streams(j.global_size))
-        .collect();
-    let live: Vec<usize> = (0..run.len()).filter(|&i| packed[i].is_ok()).collect();
+    // one argument snapshot per job (one short lock each); a job with
+    // unset arguments fails alone, not the run
+    let snaps: Vec<Result<ArgSnapshot>> =
+        run.iter().map(|j| j.kernel.snapshot_args()).collect();
+    let live: Vec<usize> = (0..run.len()).filter(|&i| snaps[i].is_ok()).collect();
+    let chunks: Vec<usize> =
+        run.iter().map(|j| j.kernel.chunk_for(j.global_size)).collect();
 
-    // one backend invocation over the concatenated streams
-    let exec: Result<(Vec<Vec<i32>>, bool)> = if live.is_empty() {
+    // pack every live job into one flat arena and run one backend
+    // invocation over the concatenation
+    let mut pack_ns = 0u64;
+    let exec: Result<bool> = if live.is_empty() {
         Err(anyhow!("no dispatch in this run packed successfully"))
     } else {
-        let k = &run[live[0]].kernel.compiled;
-        let n_streams = packed[live[0]].as_ref().unwrap().0.len();
-        let total: usize = live.iter().map(|&i| packed[i].as_ref().unwrap().1).sum();
-        let mut fused: Vec<Vec<i32>> = Vec::with_capacity(n_streams);
-        for s in 0..n_streams {
-            let mut col = Vec::with_capacity(total);
+        (|| -> Result<bool> {
+            let k = &run[live[0]].kernel.compiled;
+            let total: usize = live.iter().map(|&i| chunks[i]).sum();
+            let tp = Instant::now();
+            scratch.inputs.reset(k.factor.max(1) * k.n_inputs, total);
+            let mut off = 0usize;
             for &i in &live {
-                col.extend_from_slice(&packed[i].as_ref().unwrap().0[s]);
+                let snap = snaps[i].as_ref().expect("live job has a snapshot");
+                run[i].kernel.pack_streams_into(
+                    snap,
+                    run[i].global_size,
+                    &mut scratch.inputs,
+                    off,
+                )?;
+                off += chunks[i];
             }
-            fused.push(col);
-        }
-        let executed = match &device.backend {
-            Backend::CycleSim => sim::execute(&k.schedule, &fused, total),
-            Backend::Pjrt(rt) => rt.execute_overlay(&k.schedule, &fused, total),
-        };
-        match executed {
-            Err(e) => Err(e),
-            Ok(outs) => {
-                // cross-check: PJRT partitions re-execute on the cycle
-                // simulator and must agree stream-for-stream; on
-                // cycle-sim partitions `outs` *is* the simulator's
-                // output, so the cross check is free.
-                let cross = if verify {
-                    match &device.backend {
-                        Backend::CycleSim => Ok(true),
-                        Backend::Pjrt(_) => {
-                            sim::execute(&k.schedule, &fused, total).map(|s| s == outs)
-                        }
-                    }
-                } else {
-                    Ok(true)
-                };
-                match cross {
-                    Ok(c) => Ok((outs, c)),
-                    Err(e) => Err(e),
+            pack_ns = tp.elapsed().as_nanos() as u64;
+            match &device.backend {
+                Backend::CycleSim => sim::execute_into(
+                    &k.schedule,
+                    &scratch.inputs,
+                    total,
+                    &mut scratch.sim,
+                    &mut scratch.outputs,
+                )?,
+                Backend::Pjrt(rt) => {
+                    // the PJRT FFI boundary still wants owned vectors
+                    let outs =
+                        rt.execute_overlay(&k.schedule, &scratch.inputs.to_vecs(), total)?;
+                    scratch.outputs.fill_from(&outs, total);
                 }
             }
-        }
+            // cross-check: PJRT partitions re-execute on the cycle
+            // simulator and must agree stream-for-stream; on cycle-sim
+            // partitions the output arena *is* the simulator's output,
+            // so the cross check is free. The re-execution reuses the
+            // pooled sim scratch (idle on the PJRT path) and the
+            // scratch's dedicated verify arena — no per-run heap
+            // traffic once warm.
+            if verify {
+                if let Backend::Pjrt(_) = &device.backend {
+                    sim::execute_into(
+                        &k.schedule,
+                        &scratch.inputs,
+                        total,
+                        &mut scratch.sim,
+                        &mut scratch.verify,
+                    )?;
+                    return Ok(scratch.verify.as_flat() == scratch.outputs.as_flat());
+                }
+            }
+            Ok(true)
+        })()
     };
 
-    // split outputs per job, scatter, verify, report
+    // split outputs per job by lane offset, scatter, verify, report
     let mut results: Vec<Result<DispatchResult>> = Vec::with_capacity(run.len());
     match exec {
         Err(e) => {
             let msg = format!("{e:#}");
-            for p in packed {
-                results.push(match p {
-                    Err(pack_err) => Err(pack_err),
+            for s in snaps {
+                results.push(match s {
+                    Err(snap_err) => Err(snap_err),
                     Ok(_) => Err(anyhow!("{msg}")),
                 });
             }
         }
-        Ok((outs, cross)) => {
+        Ok(cross) => {
             let fused_count = live.len();
             let mut off = 0usize;
-            for (i, p) in packed.into_iter().enumerate() {
-                match p {
-                    Err(pack_err) => results.push(Err(pack_err)),
-                    Ok((_, chunk)) => {
+            for (i, s) in snaps.into_iter().enumerate() {
+                match s {
+                    Err(snap_err) => results.push(Err(snap_err)),
+                    Ok(snap) => {
                         let job = &run[i];
-                        let outs_j: Vec<Vec<i32>> =
-                            outs.iter().map(|s| s[off..off + chunk].to_vec()).collect();
-                        off += chunk;
-                        job.kernel.scatter_outputs(&outs_j, job.global_size);
+                        let ts = Instant::now();
+                        job.kernel.scatter_outputs_from(
+                            &snap,
+                            &scratch.outputs,
+                            off,
+                            job.global_size,
+                        );
+                        // scatter_ns covers the scatter alone (same
+                        // meaning as the synchronous path); the
+                        // verification read-back below is deliberately
+                        // outside the attribution window
+                        let scatter_ns = ts.elapsed().as_nanos() as u64;
                         // read the scattered buffers back and require
                         // the simulator-verified values exactly — this
                         // catches pack/scatter/fusion indexing bugs a
                         // re-execution alone cannot.
                         let verified = if verify {
-                            Some(cross && job.kernel.outputs_match(&outs_j, job.global_size))
+                            Some(
+                                cross
+                                    && job.kernel.outputs_match_from(
+                                        &snap,
+                                        &scratch.outputs,
+                                        off,
+                                        job.global_size,
+                                    ),
+                            )
                         } else {
                             None
                         };
+                        off += chunks[i];
                         let k = &job.kernel.compiled;
                         let modeled = sim::timing(
                             &device.spec,
@@ -676,6 +808,8 @@ fn serve_run(
                         results.push(Ok(DispatchResult {
                             event: Event {
                                 wall: t0.elapsed(),
+                                pack_ns,
+                                scatter_ns,
                                 config_seconds: job.config_seconds,
                                 modeled,
                                 global_size: job.global_size,
@@ -794,12 +928,58 @@ mod tests {
     }
 
     #[test]
-    fn latency_log_decimates_at_capacity() {
-        let mut log = ServeLog::default();
+    fn latency_reservoir_decimates_at_capacity() {
+        let shard = LogShard::default();
         for i in 0..(MAX_LATENCY_SAMPLES + 10) {
-            log.record_latency(i as f64);
+            shard.record_latency(i as f64);
         }
-        assert!(log.latencies_ms.len() <= MAX_LATENCY_SAMPLES);
-        assert!(log.latencies_ms.len() > MAX_LATENCY_SAMPLES / 4);
+        let (stride, samples) = shard.latency_samples();
+        assert!(stride >= 2, "filling the reservoir must raise the stride");
+        assert!(samples.len() <= MAX_LATENCY_SAMPLES);
+        assert!(samples.len() > MAX_LATENCY_SAMPLES / 4);
+    }
+
+    #[test]
+    fn merged_latencies_are_stride_aligned_across_shards() {
+        // shard 0 overflows its reservoir (stride 2); shard 1 stays at
+        // stride 1. The merge must thin shard 1 to the max stride so
+        // both shards' samples carry equal weight.
+        let log = ServeLog::new(2);
+        for i in 0..(MAX_LATENCY_SAMPLES + 10) {
+            log.shard(0).record_latency(i as f64);
+        }
+        let idle = 64usize;
+        for i in 0..idle {
+            log.shard(1).record_latency(1e9 + i as f64);
+        }
+        let (hot_stride, hot_samples) = log.shard(0).latency_samples();
+        assert_eq!(hot_stride, 2);
+        let t = log.totals();
+        let idle_kept =
+            t.latencies_ms.iter().filter(|&&ms| ms >= 1e9).count();
+        assert_eq!(idle_kept, idle / hot_stride as usize, "idle shard thinned to max stride");
+        assert_eq!(t.latencies_ms.len(), hot_samples.len() + idle_kept);
+    }
+
+    #[test]
+    fn sharded_log_merges_counter_and_latency_shards() {
+        let log = ServeLog::new(3);
+        for (i, items) in [(0usize, 10u64), (1, 20), (2, 30)] {
+            let shard = log.shard(i);
+            shard.total_dispatches.fetch_add(1, Ordering::Relaxed);
+            shard.total_items.fetch_add(items, Ordering::Relaxed);
+            shard.record_latency(items as f64);
+        }
+        log.shard(1).fused_batches.fetch_add(1, Ordering::Relaxed);
+        log.shard(2).errors.fetch_add(2, Ordering::Relaxed);
+        let t = log.totals();
+        assert_eq!(t.total_dispatches, 3);
+        assert_eq!(t.total_items, 60);
+        assert_eq!(t.fused_batches, 1);
+        assert_eq!(t.errors, 2);
+        assert_eq!(t.verify_failures, 0);
+        let mut lat = t.latencies_ms.clone();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(lat, vec![10.0, 20.0, 30.0]);
     }
 }

@@ -65,12 +65,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
+use crate::arena::{PoolStats, ScratchPool};
 use crate::autoscale::{
     ActiveVariant, AutoscalePolicy, Autoscaler, BgTask, Rescaler, ScaleEvent,
     SubmitObservation,
 };
 use crate::compiler::CompileOptions;
-use crate::fleet::{Fleet, RouteRecord, Router, SpecObservation};
+use crate::fleet::{rank_specs, Fleet, RouteRecord, Router, SpecObservation};
 use crate::metrics::{
     achieved_gops, LatencyStats, PartitionServingStats, ServingStats, SpecServingStats,
 };
@@ -179,9 +180,19 @@ impl Default for CoordinatorConfig {
 /// The multi-overlay serving coordinator. See module docs.
 pub struct Coordinator {
     fleet: Arc<Fleet>,
+    /// Guards only the decision history ([`Router::commit`]); ranking
+    /// itself runs lock-free through [`rank_specs`].
     router: Mutex<Router>,
+    /// The routing knobs, copied out so the submit path can rank
+    /// without touching the router lock.
+    routing_policy: RoutingPolicy,
     scheduler: Arc<Mutex<SlotScheduler>>,
-    log: Arc<Mutex<ServeLog>>,
+    /// Per-worker counter shards, merged on read — the submit and
+    /// completion hot paths never share a log mutex.
+    log: ServeLog,
+    /// Warmed dispatch scratches (flat stream arenas + simulator
+    /// blocks) shared by every partition worker.
+    pool: Arc<ScratchPool>,
     workers: Vec<Worker>,
     partition_names: Vec<String>,
     /// The feedback loop from serving metrics back into the JIT
@@ -254,8 +265,10 @@ impl Coordinator {
         let scheduler = Arc::new(Mutex::new(SlotScheduler::with_specs(
             devices.iter().map(|d| d.spec.fingerprint()).collect(),
         )));
+        let routing_policy = routing.clone();
         let router = Mutex::new(Router::new(routing));
-        let log = Arc::new(Mutex::new(ServeLog::default()));
+        let log = ServeLog::new(devices.len());
+        let pool = Arc::new(ScratchPool::new());
         let partition_names: Vec<String> = devices.iter().map(|d| d.name.clone()).collect();
         let autoscaler = autoscale.map(|policy| Arc::new(Autoscaler::new(policy)));
         let bg = if autoscaler.is_some() || snapshot_every.is_some() {
@@ -271,7 +284,8 @@ impl Coordinator {
                     i,
                     d,
                     scheduler.clone(),
-                    log.clone(),
+                    log.shard(i),
+                    pool.clone(),
                     verify,
                     fusion_window,
                     autoscaler.clone(),
@@ -281,8 +295,10 @@ impl Coordinator {
         Ok(Coordinator {
             fleet,
             router,
+            routing_policy,
             scheduler,
             log,
+            pool,
             workers,
             partition_names,
             autoscaler,
@@ -353,56 +369,71 @@ impl Coordinator {
             None => vec![None; self.fleet.shards().len()],
         };
 
-        // per-spec observations (queue depth, residency at the live
-        // factor's key) under one scheduler lock, merged with the
-        // profile's plans — the router sees the factor each spec
-        // would actually serve at
-        let mut observations: Vec<SpecObservation> = {
+        // per-spec cache keys at the live factor, computed before any
+        // lock is taken
+        let keys: Vec<CacheKey> = self
+            .fleet
+            .shards()
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                variants[i]
+                    .as_ref()
+                    .map(|v| v.key)
+                    .unwrap_or_else(|| shard.cache_key_for_hash(profile.source_hash))
+            })
+            .collect();
+
+        // the scheduler lock is held only for the raw (queue depth,
+        // residency) reads — the decision itself; everything derived
+        // from the profile's plans is assembled outside it
+        let sched_obs: Vec<(usize, bool)> = {
             let sched = self.scheduler.lock().unwrap();
             self.fleet
                 .shards()
                 .iter()
-                .enumerate()
-                .map(|(i, shard)| {
-                    let key = variants[i]
-                        .as_ref()
-                        .map(|v| v.key)
-                        .unwrap_or_else(|| shard.cache_key_for_hash(profile.source_hash));
-                    let (min_queue_depth, resident) =
-                        sched.observe(shard.fingerprint(), &key);
-                    let fit = profile.fits[i];
-                    let factor = match (&variants[i], fit) {
-                        (Some(v), _) => v.factor,
-                        (None, Some(f)) => f.factor,
-                        (None, None) => 0,
-                    };
-                    let gops = if fit.is_some() {
-                        achieved_gops(factor, profile.ops_per_copy, shard.spec().fmax_mhz())
-                    } else {
-                        0.0
-                    };
-                    SpecObservation {
-                        fingerprint: shard.fingerprint(),
-                        spec: shard.spec().name(),
-                        fits: fit.is_some(),
-                        adequate: false,
-                        factor,
-                        limit: fit.map(|f| f.limit),
-                        gops,
-                        peak_gops: shard.spec().peak_gops(),
-                        min_queue_depth,
-                        resident,
-                        config_seconds: shard.config_seconds_estimate(),
-                    }
-                })
+                .zip(&keys)
+                .map(|(shard, key)| sched.observe(shard.fingerprint(), key))
                 .collect()
         };
+        let mut observations: Vec<SpecObservation> = self
+            .fleet
+            .shards()
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let (min_queue_depth, resident) = sched_obs[i];
+                let fit = profile.fits[i];
+                let factor = match (&variants[i], fit) {
+                    (Some(v), _) => v.factor,
+                    (None, Some(f)) => f.factor,
+                    (None, None) => 0,
+                };
+                let gops = if fit.is_some() {
+                    achieved_gops(factor, profile.ops_per_copy, shard.spec().fmax_mhz())
+                } else {
+                    0.0
+                };
+                SpecObservation {
+                    fingerprint: shard.fingerprint(),
+                    spec: shard.spec().name(),
+                    fits: fit.is_some(),
+                    adequate: false,
+                    factor,
+                    limit: fit.map(|f| f.limit),
+                    gops,
+                    peak_gops: shard.spec().peak_gops(),
+                    min_queue_depth,
+                    resident,
+                    config_seconds: shard.config_seconds_estimate(),
+                }
+            })
+            .collect();
 
+        // ranking is pure — no router lock held (the lock guards only
+        // the decision history appended by `commit` below)
         let (ranked, reason, copies_wanted) =
-            self.router
-                .lock()
-                .unwrap()
-                .rank(&profile, &mut observations, global_size)?;
+            rank_specs(&self.routing_policy, &profile, &mut observations, global_size)?;
 
         // cache-or-compile on the ranked shards — through the live
         // variant where one is installed; a compile failure poisons
@@ -555,63 +586,71 @@ impl Coordinator {
         Ok(DispatchHandle { inner: handle })
     }
 
-    /// Snapshot of the serving statistics.
+    /// Snapshot of the serving statistics. Locks are taken one at a
+    /// time, briefly: the sharded log merges without any global
+    /// mutex, and the router/scheduler are each held only long enough
+    /// to copy their counters out.
     pub fn stats(&self) -> ServingStats {
-        let sched = self.scheduler.lock().unwrap();
-        let log = self.log.lock().unwrap();
-        let router = self.router.lock().unwrap();
         let elapsed = self.start.elapsed().as_secs_f64().max(1e-9);
+        let log = self.log.totals();
 
         let mut cache = CacheStats::default();
         let mut compile_seconds = 0.0;
         let mut per_spec = Vec::with_capacity(self.fleet.shards().len());
-        for shard in self.fleet.shards() {
-            let c = shard.cache_stats();
-            cache.hits += c.hits;
-            cache.misses += c.misses;
-            cache.evictions += c.evictions;
-            cache.entries += c.entries;
-            cache.capacity += c.capacity;
-            let cs = shard.compile_seconds();
-            compile_seconds += cs;
-            let r = router.spec_stats(shard.fingerprint());
-            per_spec.push(SpecServingStats {
-                spec: shard.spec().name(),
-                fingerprint: shard.fingerprint(),
-                partitions: shard.partitions().len(),
-                cache: c,
-                compile_seconds: cs,
-                routed: r.map_or(0, |r| r.routed),
-                best_fit: r.map_or(0, |r| r.best_fit),
-                widest: r.map_or(0, |r| r.widest),
-                only_fit: r.map_or(0, |r| r.only_fit),
-                fallbacks: r.map_or(0, |r| r.fallbacks),
-                cross_spec_hits: shard.cross_spec_hits(),
-                replication_histogram: r.map_or_else(Vec::new, |r| {
-                    r.histogram.iter().map(|(&f, &n)| (f, n)).collect()
-                }),
-            });
+        {
+            let router = self.router.lock().unwrap();
+            for shard in self.fleet.shards() {
+                let c = shard.cache_stats();
+                cache.hits += c.hits;
+                cache.misses += c.misses;
+                cache.evictions += c.evictions;
+                cache.entries += c.entries;
+                cache.capacity += c.capacity;
+                let cs = shard.compile_seconds();
+                compile_seconds += cs;
+                let r = router.spec_stats(shard.fingerprint());
+                per_spec.push(SpecServingStats {
+                    spec: shard.spec().name(),
+                    fingerprint: shard.fingerprint(),
+                    partitions: shard.partitions().len(),
+                    cache: c,
+                    compile_seconds: cs,
+                    routed: r.map_or(0, |r| r.routed),
+                    best_fit: r.map_or(0, |r| r.best_fit),
+                    widest: r.map_or(0, |r| r.widest),
+                    only_fit: r.map_or(0, |r| r.only_fit),
+                    fallbacks: r.map_or(0, |r| r.fallbacks),
+                    cross_spec_hits: shard.cross_spec_hits(),
+                    replication_histogram: r.map_or_else(Vec::new, |r| {
+                        r.histogram.iter().map(|(&f, &n)| (f, n)).collect()
+                    }),
+                });
+            }
         }
 
-        let partitions = sched
-            .partitions()
-            .iter()
-            .enumerate()
-            .map(|(i, p)| PartitionServingStats {
-                partition: i,
-                overlay: self.partition_names[i].clone(),
-                dispatches: p.dispatches,
-                reconfigs: p.reconfigs,
-                busy_seconds: p.busy_seconds,
-                utilization: (p.busy_seconds / elapsed).min(1.0),
-            })
-            .collect();
+        let (partitions, reconfig_count, reconfig_seconds) = {
+            let sched = self.scheduler.lock().unwrap();
+            let partitions: Vec<PartitionServingStats> = sched
+                .partitions()
+                .iter()
+                .enumerate()
+                .map(|(i, p)| PartitionServingStats {
+                    partition: i,
+                    overlay: self.partition_names[i].clone(),
+                    dispatches: p.dispatches,
+                    reconfigs: p.reconfigs,
+                    busy_seconds: p.busy_seconds,
+                    utilization: (p.busy_seconds / elapsed).min(1.0),
+                })
+                .collect();
+            (partitions, sched.reconfig_count(), sched.reconfig_seconds)
+        };
 
         ServingStats {
             cache,
-            reconfig_count: sched.reconfig_count(),
-            reconfig_seconds: sched.reconfig_seconds,
-            latency: LatencyStats::from_samples_ms(log.latencies_ms.clone()),
+            reconfig_count,
+            reconfig_seconds,
+            latency: LatencyStats::from_samples_ms(log.latencies_ms),
             partitions,
             per_spec,
             total_dispatches: log.total_dispatches,
@@ -620,8 +659,15 @@ impl Coordinator {
             dispatch_errors: log.errors,
             fused_batches: log.fused_batches,
             compile_seconds,
+            scratch_pool: self.pool.stats(),
             autoscale: self.autoscaler.as_ref().map(|a| a.stats()),
         }
+    }
+
+    /// Scratch-pool counters of the dispatch data plane (arena reuse
+    /// and warm-up heap growth; see [`crate::arena::PoolStats`]).
+    pub fn pool_stats(&self) -> PoolStats {
+        self.pool.stats()
     }
 
     /// The retained scale events (oldest first, bounded by

@@ -28,8 +28,8 @@ mod shard;
 
 pub use policy::{Priority, RoutingPolicy};
 pub use router::{
-    KernelProfile, PlanSummary, RouteReason, RouteRecord, Router, SpecObservation,
-    SpecRouteStats,
+    rank_specs, KernelProfile, PlanSummary, RouteReason, RouteRecord, Router,
+    SpecObservation, SpecRouteStats,
 };
 pub use shard::CompileShard;
 

@@ -174,6 +174,87 @@ fn f64_cmp(a: f64, b: f64) -> Ordering {
     a.partial_cmp(&b).unwrap_or(Ordering::Equal)
 }
 
+/// Copies a dispatch of `global_size` items wants under `policy`.
+pub fn copies_wanted(policy: &RoutingPolicy, global_size: usize) -> usize {
+    global_size.div_ceil(policy.target_chunk.max(1)).max(1)
+}
+
+/// Rank the specs for one dispatch — the pure decision function, free
+/// of any router state so the coordinator's submit path can rank
+/// **without holding the router lock** (the lock guards only the
+/// bounded decision history appended by [`Router::commit`]).
+///
+/// `obs` must be in fleet shard order with the profile-derived fields
+/// (`fits`, `factor`, `limit`, `gops`) already filled; this fills
+/// `adequate` and returns shard indices in preference order (the tail
+/// entries are compile-failure fallbacks), the reason for the first
+/// choice, and the copy demand.
+pub fn rank_specs(
+    policy: &RoutingPolicy,
+    profile: &KernelProfile,
+    obs: &mut [SpecObservation],
+    global_size: usize,
+) -> Result<(Vec<usize>, RouteReason, usize)> {
+    let wanted = copies_wanted(policy, global_size);
+    for o in obs.iter_mut() {
+        o.adequate = o.fits && o.factor >= wanted;
+    }
+    let fitting: Vec<usize> = (0..obs.len()).filter(|&i| obs[i].fits).collect();
+    if fitting.is_empty() {
+        bail!(
+            "kernel '{}' fits none of the fleet's overlay specs",
+            profile.name
+        );
+    }
+    if fitting.len() == 1 {
+        return Ok((fitting, RouteReason::OnlyFit, wanted));
+    }
+    let adequate: Vec<usize> = fitting
+        .iter()
+        .copied()
+        .filter(|&i| obs[i].adequate)
+        .collect();
+    if !adequate.is_empty() {
+        // small-kernel path: least loaded, then smallest overlay,
+        // then cheapest reconfiguration, then stable order
+        let mut ranked = adequate.clone();
+        ranked.sort_by(|&a, &b| {
+            let (oa, ob) = (&obs[a], &obs[b]);
+            oa.min_queue_depth
+                .cmp(&ob.min_queue_depth)
+                .then(f64_cmp(oa.peak_gops, ob.peak_gops))
+                .then(f64_cmp(
+                    oa.effective_config_seconds(),
+                    ob.effective_config_seconds(),
+                ))
+                .then(oa.fingerprint.cmp(&ob.fingerprint))
+        });
+        // compile-failure fallbacks: the remaining fitting specs,
+        // widest first
+        let mut rest: Vec<usize> = fitting
+            .iter()
+            .copied()
+            .filter(|i| !adequate.contains(i))
+            .collect();
+        rest.sort_by(|&a, &b| f64_cmp(obs[b].gops, obs[a].gops));
+        ranked.extend(rest);
+        return Ok((ranked, RouteReason::BestFit, wanted));
+    }
+    // wide data-parallel path: highest copies × throughput wins
+    let mut ranked = fitting;
+    ranked.sort_by(|&a, &b| {
+        let (oa, ob) = (&obs[a], &obs[b]);
+        f64_cmp(ob.gops, oa.gops)
+            .then(oa.min_queue_depth.cmp(&ob.min_queue_depth))
+            .then(f64_cmp(
+                oa.effective_config_seconds(),
+                ob.effective_config_seconds(),
+            ))
+            .then(oa.fingerprint.cmp(&ob.fingerprint))
+    });
+    Ok((ranked, RouteReason::Widest, wanted))
+}
+
 impl Router {
     pub fn new(policy: RoutingPolicy) -> Router {
         Router {
@@ -190,79 +271,17 @@ impl Router {
 
     /// Copies a dispatch of `global_size` items wants.
     pub fn copies_wanted(&self, global_size: usize) -> usize {
-        global_size.div_ceil(self.policy.target_chunk.max(1)).max(1)
+        copies_wanted(&self.policy, global_size)
     }
 
-    /// Rank the specs for one dispatch. `obs` must be in fleet shard
-    /// order with the profile-derived fields (`fits`, `factor`,
-    /// `limit`, `gops`) already filled; the router fills `adequate`
-    /// and returns shard indices in preference order (the tail
-    /// entries are compile-failure fallbacks), the reason for the
-    /// first choice, and the copy demand.
+    /// Rank the specs for one dispatch (see [`rank_specs`]).
     pub fn rank(
         &self,
         profile: &KernelProfile,
         obs: &mut [SpecObservation],
         global_size: usize,
     ) -> Result<(Vec<usize>, RouteReason, usize)> {
-        let wanted = self.copies_wanted(global_size);
-        for o in obs.iter_mut() {
-            o.adequate = o.fits && o.factor >= wanted;
-        }
-        let fitting: Vec<usize> = (0..obs.len()).filter(|&i| obs[i].fits).collect();
-        if fitting.is_empty() {
-            bail!(
-                "kernel '{}' fits none of the fleet's overlay specs",
-                profile.name
-            );
-        }
-        if fitting.len() == 1 {
-            return Ok((fitting, RouteReason::OnlyFit, wanted));
-        }
-        let adequate: Vec<usize> = fitting
-            .iter()
-            .copied()
-            .filter(|&i| obs[i].adequate)
-            .collect();
-        if !adequate.is_empty() {
-            // small-kernel path: least loaded, then smallest overlay,
-            // then cheapest reconfiguration, then stable order
-            let mut ranked = adequate.clone();
-            ranked.sort_by(|&a, &b| {
-                let (oa, ob) = (&obs[a], &obs[b]);
-                oa.min_queue_depth
-                    .cmp(&ob.min_queue_depth)
-                    .then(f64_cmp(oa.peak_gops, ob.peak_gops))
-                    .then(f64_cmp(
-                        oa.effective_config_seconds(),
-                        ob.effective_config_seconds(),
-                    ))
-                    .then(oa.fingerprint.cmp(&ob.fingerprint))
-            });
-            // compile-failure fallbacks: the remaining fitting specs,
-            // widest first
-            let mut rest: Vec<usize> = fitting
-                .iter()
-                .copied()
-                .filter(|i| !adequate.contains(i))
-                .collect();
-            rest.sort_by(|&a, &b| f64_cmp(obs[b].gops, obs[a].gops));
-            ranked.extend(rest);
-            return Ok((ranked, RouteReason::BestFit, wanted));
-        }
-        // wide data-parallel path: highest copies × throughput wins
-        let mut ranked = fitting;
-        ranked.sort_by(|&a, &b| {
-            let (oa, ob) = (&obs[a], &obs[b]);
-            f64_cmp(ob.gops, oa.gops)
-                .then(oa.min_queue_depth.cmp(&ob.min_queue_depth))
-                .then(f64_cmp(
-                    oa.effective_config_seconds(),
-                    ob.effective_config_seconds(),
-                ))
-                .then(oa.fingerprint.cmp(&ob.fingerprint))
-        });
-        Ok((ranked, RouteReason::Widest, wanted))
+        rank_specs(&self.policy, profile, obs, global_size)
     }
 
     /// Record a served dispatch: bump the chosen spec's counters and

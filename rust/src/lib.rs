@@ -34,7 +34,15 @@
 //!   technology mapping and PAR at fabric granularity, standing in for
 //!   Vivado in Fig. 7 / Table III.
 //! * [`sim`] — a cycle-level functional + timing simulator of the
-//!   configured overlay.
+//!   configured overlay: a blocked structure-of-arrays executor
+//!   (slot-major inner loops over [`sim::SIM_BLOCK`]-lane blocks,
+//!   reusable [`sim::SimScratch`], zero allocation once warm) pinned
+//!   bit-exact against the scalar reference walker.
+//! * [`arena`] — the zero-copy dispatch data plane: flat
+//!   [`arena::StreamArena`] stream matrices packed in place (fused
+//!   batches concatenate by lane offset), plus the
+//!   [`arena::ScratchPool`] of warmed per-dispatch scratches shared
+//!   by the command queue and the coordinator workers.
 //! * [`runtime`] — the XLA/PJRT execution backend that loads the
 //!   AOT-compiled overlay-emulator artifacts (`artifacts/*.hlo.txt`).
 //! * [`runtime_ocl`] — an OpenCL-flavoured host API (platform, device,
@@ -75,6 +83,7 @@
 //! [`runtime`] module loads through the PJRT C API. Nothing on the
 //! request path touches Python.
 
+pub mod arena;
 pub mod autoscale;
 pub mod bench_kernels;
 pub mod compiler;
@@ -100,6 +109,7 @@ pub mod util;
 
 /// Convenient re-exports for the common compile-and-run flow.
 pub mod prelude {
+    pub use crate::arena::{DispatchScratch, PoolStats, ScratchPool, StreamArena};
     pub use crate::autoscale::{AutoscalePolicy, ScaleDirection, ScaleEvent};
     pub use crate::compiler::{
         CompileOptions, CompileReport, CompiledKernel, JitCompiler, KernelCost,

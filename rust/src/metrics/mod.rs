@@ -306,6 +306,9 @@ pub struct ServingStats {
     pub fused_batches: u64,
     /// Wall seconds of JIT compilation spent on cache misses.
     pub compile_seconds: f64,
+    /// Dispatch-scratch pool counters (arena reuse; warm-up-only heap
+    /// growth — the zero-copy data plane's allocation evidence).
+    pub scratch_pool: crate::arena::PoolStats,
     /// Run-time rescale counters; `None` when the coordinator runs
     /// with frozen replication plans (no autoscaler configured).
     pub autoscale: Option<AutoscaleStats>,
@@ -334,6 +337,13 @@ impl ServingStats {
             self.latency.max_ms,
             self.latency.count,
         );
+        out.push_str(&format!(
+            "scratch    : {} checkouts over {} scratches ({} pooled), {} heap growths\n",
+            self.scratch_pool.checkouts,
+            self.scratch_pool.created,
+            self.scratch_pool.pooled,
+            self.scratch_pool.grow_events,
+        ));
         if let Some(a) = &self.autoscale {
             out.push_str(&format!(
                 "autoscale  : {} up / {} down ({} failed), {} rescale cache hits, \
@@ -514,6 +524,13 @@ mod tests {
             dispatch_errors: 0,
             fused_batches: 1,
             compile_seconds: 0.2,
+            scratch_pool: crate::arena::PoolStats {
+                created: 1,
+                checkouts: 4,
+                reuses: 3,
+                pooled: 1,
+                grow_events: 2,
+            },
             autoscale: Some(AutoscaleStats {
                 scale_ups: 1,
                 scale_downs: 2,
@@ -529,6 +546,7 @@ mod tests {
         assert!(r.contains("spec 8x8-dsp2"), "{r}");
         assert!(r.contains("x16:4"), "{r}");
         assert!(r.contains("1 fused batches"), "{r}");
+        assert!(r.contains("4 checkouts over 1 scratches"), "{r}");
         assert!(r.contains("1 up / 2 down"), "{r}");
         assert_eq!(s.autoscale.unwrap().applied(), 3);
     }

@@ -1,20 +1,37 @@
 //! Cycle-level overlay simulator.
 //!
-//! Two halves:
-//! * [`execute`] — functional simulation of a [`SlotSchedule`] over a
-//!   batch of work-items with the 32-bit wrap-around semantics of the
-//!   DSP datapath. This is the Rust twin of the Pallas emulator kernel
-//!   (`python/compile/kernels/fu_alu.py`); integration tests assert
-//!   both backends agree bit-for-bit.
+//! Three halves:
+//! * [`execute_into`] — the **blocked structure-of-arrays** functional
+//!   simulator: work-items are processed in [`SIM_BLOCK`]-lane blocks
+//!   with a slot-major inner loop over contiguous lanes the compiler
+//!   can vectorize, reading from / writing to flat
+//!   [`crate::arena::StreamArena`]s through a reusable [`SimScratch`]
+//!   (zero heap allocation once warm). This is the faithful model of
+//!   the II=1 overlay — each configured FU column retires one lane per
+//!   "cycle" across the whole block — *and* the fast one.
+//! * [`execute_reference`] — the original scalar walker, one work-item
+//!   at a time through the slot table, with the 32-bit wrap-around
+//!   semantics of the DSP datapath. It is the Rust twin of the Pallas
+//!   emulator kernel (`python/compile/kernels/fu_alu.py`); the blocked
+//!   path is test-pinned bit-exact against it ([`execute`] runs
+//!   blocked), and integration tests assert both backends agree with
+//!   PJRT bit-for-bit.
 //! * [`Timing`] — the pipeline timing model: a spatially configured
 //!   II=1 overlay streams one work-item per cycle per kernel copy
 //!   after a fill latency of `pipeline_depth` cycles.
 
 use anyhow::{bail, Result};
 
+use crate::arena::StreamArena;
 use crate::configgen::SlotSchedule;
 use crate::latency::LatencyReport;
 use crate::overlay::OverlaySpec;
+
+/// Work-items per simulator block: the slot-table block is
+/// `num_slots × SIM_BLOCK` i32s (~147 KiB for the default 288-slot
+/// emulator geometry — L2-resident), and every inner loop runs over
+/// `SIM_BLOCK` contiguous lanes.
+pub const SIM_BLOCK: usize = 128;
 
 /// Opcode semantics (must match `DfgOp::opcode` and geometry.py).
 fn alu(op: i32, a: i32, b: i32, c: i32) -> i32 {
@@ -32,24 +49,220 @@ fn alu(op: i32, a: i32, b: i32, c: i32) -> i32 {
     }
 }
 
+/// One FU opcode applied across a block of lanes. Each arm is a
+/// branch-free loop over contiguous slices — the autovectorizer's
+/// favorite shape — and the semantics per lane are exactly [`alu`].
+fn alu_block(op: i32, a: &[i32], b: &[i32], c: &[i32], dst: &mut [i32]) {
+    match op {
+        1 => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                *d = x.wrapping_add(y);
+            }
+        }
+        2 => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                *d = x.wrapping_sub(y);
+            }
+        }
+        3 => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                *d = x.wrapping_mul(y);
+            }
+        }
+        4 => {
+            for (((d, &x), &y), &z) in dst.iter_mut().zip(a).zip(b).zip(c) {
+                *d = x.wrapping_mul(y).wrapping_add(z);
+            }
+        }
+        5 => {
+            for (((d, &x), &y), &z) in dst.iter_mut().zip(a).zip(b).zip(c) {
+                *d = x.wrapping_mul(y).wrapping_sub(z);
+            }
+        }
+        6 => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                *d = y.wrapping_sub(x);
+            }
+        }
+        7 => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                *d = x.max(y);
+            }
+        }
+        8 => {
+            for ((d, &x), &y) in dst.iter_mut().zip(a).zip(b) {
+                *d = x.min(y);
+            }
+        }
+        _ => dst.copy_from_slice(a),
+    }
+}
+
+/// Reusable scratch state of the blocked simulator: the slot-table
+/// block (`num_slots × SIM_BLOCK` lanes, slot-major) plus three lane
+/// buffers for gathered operands. `ensure` re-zeroes the table for
+/// each dispatch (so a pooled scratch can never leak one kernel's
+/// values into the next) while keeping the allocation; growth happens
+/// only when a dispatch needs a larger geometry than any before it.
+#[derive(Debug)]
+pub struct SimScratch {
+    table: Vec<i32>,
+    lane_a: Vec<i32>,
+    lane_b: Vec<i32>,
+    lane_c: Vec<i32>,
+    grow_events: u64,
+}
+
+impl Default for SimScratch {
+    fn default() -> Self {
+        SimScratch::new()
+    }
+}
+
+impl SimScratch {
+    pub fn new() -> SimScratch {
+        SimScratch {
+            table: Vec::new(),
+            lane_a: vec![0; SIM_BLOCK],
+            lane_b: vec![0; SIM_BLOCK],
+            lane_c: vec![0; SIM_BLOCK],
+            grow_events: 0,
+        }
+    }
+
+    /// Zero the slot-table block for a dispatch over `num_slots`
+    /// columns, growing it only if this geometry is the largest seen.
+    fn ensure(&mut self, num_slots: usize) {
+        let need = num_slots * SIM_BLOCK;
+        let cap0 = self.table.capacity();
+        self.table.clear();
+        self.table.resize(need, 0);
+        if self.table.capacity() > cap0 {
+            self.grow_events += 1;
+        }
+    }
+
+    /// Heap (re)allocations performed — stable after warm-up.
+    pub fn grow_events(&self) -> u64 {
+        self.grow_events
+    }
+}
+
+fn check_shape(schedule: &SlotSchedule, streams: usize) -> Result<()> {
+    if streams != schedule.num_inputs {
+        bail!(
+            "kernel has {} input streams, got {}",
+            schedule.num_inputs,
+            streams
+        );
+    }
+    Ok(())
+}
+
+/// Functionally execute `schedule` for `n_items` work-items with the
+/// blocked SoA executor, reading inputs from `inputs` (one stream per
+/// input port, each `n_items` long) and leaving one output stream per
+/// kernel output port in `out` (reshaped by this call). Bit-exact
+/// with [`execute_reference`]; performs zero heap allocation once
+/// `scratch` and `out` have warmed up on the dispatch shape.
+pub fn execute_into(
+    schedule: &SlotSchedule,
+    inputs: &StreamArena,
+    n_items: usize,
+    scratch: &mut SimScratch,
+    out: &mut StreamArena,
+) -> Result<()> {
+    let geom = schedule.geometry;
+    check_shape(schedule, inputs.streams())?;
+    if inputs.items() != n_items {
+        bail!("input arena holds {} items, dispatch wants {n_items}", inputs.items());
+    }
+    scratch.ensure(geom.num_slots());
+    out.reset(schedule.out_col.len(), n_items);
+
+    const B: usize = SIM_BLOCK;
+    // constant-pool columns hold the same value in every lane; filled
+    // once per dispatch (the tail block reads a prefix of them)
+    for &(col, v) in &schedule.imm_pool {
+        scratch.table[col * B..(col + 1) * B].fill(v);
+    }
+
+    let out_base = geom.out_base();
+    let mut start = 0usize;
+    while start < n_items {
+        let bl = B.min(n_items - start);
+        for p in 0..schedule.num_inputs {
+            scratch.table[p * B..p * B + bl]
+                .copy_from_slice(&inputs.stream(p)[start..start + bl]);
+        }
+        // slot-major: every mapped FU fires once over the whole block.
+        // Levelization guarantees slot t only reads input, immediate,
+        // or earlier-slot columns — all already written for this block.
+        for t in 0..schedule.n_slots() {
+            let a_col = schedule.src_a[t] as usize;
+            let b_col = schedule.src_b[t] as usize;
+            let c_col = schedule.src_c[t] as usize;
+            scratch.lane_a[..bl].copy_from_slice(&scratch.table[a_col * B..a_col * B + bl]);
+            scratch.lane_b[..bl].copy_from_slice(&scratch.table[b_col * B..b_col * B + bl]);
+            scratch.lane_c[..bl].copy_from_slice(&scratch.table[c_col * B..c_col * B + bl]);
+            let dst = out_base + t;
+            alu_block(
+                schedule.ops[t],
+                &scratch.lane_a[..bl],
+                &scratch.lane_b[..bl],
+                &scratch.lane_c[..bl],
+                &mut scratch.table[dst * B..dst * B + bl],
+            );
+        }
+        for (o, &col) in schedule.out_col.iter().enumerate() {
+            out.stream_mut(o)[start..start + bl]
+                .copy_from_slice(&scratch.table[col * B..col * B + bl]);
+        }
+        start += bl;
+    }
+    Ok(())
+}
+
 /// Functionally execute `schedule` for `n_items` work-items.
 ///
 /// `inputs[p]` is the stream for input port `p` (each `n_items` long;
 /// a fully-constant kernel legitimately has zero streams).
 /// Returns one vector per kernel output port.
+///
+/// Convenience wrapper over the blocked [`execute_into`] for callers
+/// still on the `Vec<Vec<i32>>` plumbing; hot paths should hold a
+/// [`SimScratch`] + [`StreamArena`] pair and call `execute_into`
+/// directly to skip the copies and allocations this performs.
 pub fn execute(
     schedule: &SlotSchedule,
     inputs: &[Vec<i32>],
     n_items: usize,
 ) -> Result<Vec<Vec<i32>>> {
-    let geom = schedule.geometry;
-    if inputs.len() != schedule.num_inputs {
-        bail!(
-            "kernel has {} input streams, got {}",
-            schedule.num_inputs,
-            inputs.len()
-        );
+    check_shape(schedule, inputs.len())?;
+    for (p, v) in inputs.iter().enumerate() {
+        if v.len() != n_items {
+            bail!("input stream {p} length {} != {}", v.len(), n_items);
+        }
     }
+    let mut arena = StreamArena::new();
+    arena.fill_from(inputs, n_items);
+    let mut scratch = SimScratch::new();
+    let mut out = StreamArena::new();
+    execute_into(schedule, &arena, n_items, &mut scratch, &mut out)?;
+    Ok(out.to_vecs())
+}
+
+/// The scalar reference walker: one work-item at a time through the
+/// slot table — the executable spec the blocked path is pinned
+/// against (`rust/tests/hot_path.rs`). Same signature and semantics
+/// as [`execute`].
+pub fn execute_reference(
+    schedule: &SlotSchedule,
+    inputs: &[Vec<i32>],
+    n_items: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let geom = schedule.geometry;
+    check_shape(schedule, inputs.len())?;
     for (p, v) in inputs.iter().enumerate() {
         if v.len() != n_items {
             bail!("input stream {p} length {} != {}", v.len(), n_items);
@@ -178,10 +391,45 @@ mod tests {
     }
 
     #[test]
+    fn blocked_executor_matches_reference_across_block_boundaries() {
+        let k = compile_cheb(4);
+        for n in [1usize, SIM_BLOCK - 1, SIM_BLOCK, SIM_BLOCK + 1, 3 * SIM_BLOCK + 5] {
+            let streams: Vec<Vec<i32>> = (0..k.schedule.num_inputs)
+                .map(|p| (0..n).map(|i| (i as i32 + p as i32) % 17 - 8).collect())
+                .collect();
+            let blocked = execute(&k.schedule, &streams, n).unwrap();
+            let reference = execute_reference(&k.schedule, &streams, n).unwrap();
+            assert_eq!(blocked, reference, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_allocation_free_and_leak_free() {
+        let k = compile_cheb(2);
+        let n = SIM_BLOCK + 3;
+        let mut scratch = SimScratch::new();
+        let mut arena = StreamArena::new();
+        let mut out = StreamArena::new();
+        let streams: Vec<Vec<i32>> = (0..k.schedule.num_inputs)
+            .map(|p| (0..n).map(|i| (i as i32) - 3 * p as i32).collect())
+            .collect();
+        arena.fill_from(&streams, n);
+        execute_into(&k.schedule, &arena, n, &mut scratch, &mut out).unwrap();
+        let warm = scratch.grow_events() + out.grow_events();
+        let first = out.to_vecs();
+        for _ in 0..5 {
+            execute_into(&k.schedule, &arena, n, &mut scratch, &mut out).unwrap();
+        }
+        assert_eq!(scratch.grow_events() + out.grow_events(), warm);
+        assert_eq!(out.to_vecs(), first);
+    }
+
+    #[test]
     fn wrong_stream_count_is_rejected() {
         let k = compile_cheb(2);
         assert!(execute(&k.schedule, &[vec![1, 2, 3]], 3).is_err());
         assert!(execute(&k.schedule, &[vec![1], vec![1, 2]], 1).is_err());
+        assert!(execute_reference(&k.schedule, &[vec![1, 2, 3]], 3).is_err());
     }
 
     #[test]
