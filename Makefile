@@ -8,6 +8,13 @@
 #   make soak       — long-form autoscale convergence soak (fixed
 #                     seed; #[ignore]d in the default suite). Wired
 #                     into CI as a separate non-blocking job.
+#   make overload   — overload-admission + fault-recovery harness
+#                     (examples/e2e_serve -- overload): 4-tenant
+#                     bursty mix at ~2x capacity against a seeded
+#                     fault plan; exits non-zero unless every submit
+#                     reaches a terminal outcome, interactive p99
+#                     holds while batch is shed, and every injected
+#                     fault kind recovers. Non-blocking CI job.
 #   make bench      — the paper-figure + serving bench harnesses
 #   make bench-json — the §E11 hot-path data-plane bench; writes
 #                     machine-readable BENCH_hotpath.json at the repo
@@ -19,7 +26,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy build test soak bench bench-build bench-json doc artifacts
+.PHONY: check fmt clippy build test soak overload bench bench-build bench-json doc artifacts
 
 check: fmt clippy test bench-build doc
 
@@ -40,6 +47,13 @@ test:
 # phase shift (no flapping) and pure cache hits from the second cycle
 soak:
 	$(CARGO) test --release --test autoscale -- --ignored --nocapture
+
+# the overload/fault-recovery acceptance harness: asserts zero hung
+# handles, interactive p99 within SLO while batch sheds, and
+# injected-then-recovered strikes for every fault kind (worker death,
+# reconfig failure, verify corruption, poisoned compile + re-probe)
+overload:
+	$(CARGO) run --release --example e2e_serve -- overload
 
 bench:
 	$(CARGO) bench --bench serve_throughput

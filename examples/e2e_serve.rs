@@ -33,6 +33,21 @@
 //! failed in-flight handles, cache misses did not grow across the
 //! second cycle, and every dispatch stayed simulator-verified.
 //!
+//! **Overload mode** — `cargo run --release --example e2e_serve --
+//! overload` — a 4-tenant bursty mix at roughly twice what the fleet
+//! can absorb, served through the admission gate while a seeded
+//! [`FaultPlan`](overlay_jit::admission::FaultPlan) campaign strikes
+//! the dispatch plane: a scripted compile failure (poisoning one
+//! (kernel, spec) pair), a worker death mid-batch, a reconfiguration
+//! failure and a corrupted sim-verify, plus low-rate background
+//! strikes. The run fails (non-zero exit) unless **every** submit
+//! reaches a terminal outcome (zero hung handles), interactive p99
+//! holds under the SLO while batch work is shed, every injected fault
+//! kind also *recovered* (the struck dispatch completed on a sibling
+//! partition), the poisoned pair healed through a TTL re-probe, the
+//! bursting tenants were quota-rejected, and a deliberately doomed
+//! deadline was rejected before consuming any fleet resource.
+//!
 //! **PJRT mode** — `make artifacts && cargo run --release --features
 //! pjrt --example e2e_serve -- pjrt` — the original single-device
 //! path: JIT-compiles the six benchmarks and serves batched requests
@@ -41,9 +56,10 @@
 //! agreement. Requires the `pjrt` cargo feature and `make artifacts`.
 //!
 //! Results are recorded in EXPERIMENTS.md (§E7 PJRT, §E8 coordinator,
-//! §E9 heterogeneous fleet, §E10 adaptive scaling).
+//! §E9 heterogeneous fleet, §E10 adaptive scaling, §E12 overload).
 
-use std::time::Instant;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
@@ -71,6 +87,7 @@ fn main() -> Result<()> {
     match args.first().map(String::as_str) {
         Some("pjrt") => serve_pjrt(),
         Some("autoscale") => serve_autoscale(),
+        Some("overload") => serve_overload(),
         Some("coordinator") | None => {
             let per_spec = args
                 .get(1)
@@ -78,7 +95,9 @@ fn main() -> Result<()> {
                 .unwrap_or(2);
             serve_coordinator(per_spec)
         }
-        Some(other) => bail!("unknown mode '{other}' (coordinator [N] | autoscale | pjrt)"),
+        Some(other) => {
+            bail!("unknown mode '{other}' (coordinator [N] | autoscale | overload | pjrt)")
+        }
     }
 }
 
@@ -225,6 +244,374 @@ fn serve_autoscale() -> Result<()> {
     println!(
         "OK: {} scale-ups, {} scale-downs, {} rescale cache hits, misses frozen at {}",
         a.scale_ups, a.scale_downs, a.rescale_cache_hits, stats.cache.misses
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// overload mode: 4-tenant bursty mix + seeded fault campaign
+// ---------------------------------------------------------------------
+
+/// Rounds of the 4-tenant mixed stream.
+const OVERLOAD_ROUNDS: usize = 4;
+/// Interactive p99 SLO the admission gate defends, in milliseconds.
+const OVERLOAD_SLO_MS: f64 = 500.0;
+/// Wide batch submits the flood tenant fires back-to-back mid-run —
+/// far past its token bucket, so quota rejection and queue-depth
+/// pressure are both guaranteed regardless of wall-clock speed.
+const FLOOD_SUBMITS: usize = 120;
+/// Ceiling for every handle to reach a terminal outcome.
+const OVERLOAD_TIMEOUT: Duration = Duration::from_secs(240);
+
+/// Per-tenant admission accounting for the overload report.
+#[derive(Default)]
+struct TenantLedger {
+    submitted: u64,
+    admitted: u64,
+    completed: u64,
+    rejected_quota: u64,
+    rejected_deadline: u64,
+    shed: u64,
+    /// Submits refused because the kernel's only fitting spec was
+    /// poisoned and awaiting its re-probe — a transient, not a bug.
+    poison_backoff: u64,
+}
+
+/// One gated submit, folded into the tenant's ledger. Rejections are
+/// normal overload outcomes; only real failures propagate as errors.
+#[allow(clippy::too_many_arguments)]
+fn submit_one(
+    coord: &Coordinator,
+    ledgers: &mut HashMap<&'static str, TenantLedger>,
+    handles: &mut Vec<(&'static str, bool, overlay_jit::coordinator::DispatchHandle)>,
+    tenant: &'static str,
+    source: &str,
+    args: &[SubmitArg],
+    items: usize,
+    priority: Priority,
+    deadline: Option<Duration>,
+) -> Result<()> {
+    let led = ledgers.entry(tenant).or_default();
+    led.submitted += 1;
+    match coord.submit_gated(tenant, source, args, items, priority, deadline) {
+        Ok(Admission::Admitted(h)) => {
+            led.admitted += 1;
+            handles.push((tenant, matches!(priority, Priority::Interactive), h));
+        }
+        Ok(Admission::Rejected(r)) => match r {
+            RejectReason::QuotaExhausted { .. } => led.rejected_quota += 1,
+            RejectReason::DeadlineUnmeetable { .. } => led.rejected_deadline += 1,
+            RejectReason::Shed { .. } => led.shed += 1,
+        },
+        Err(e) => {
+            let msg = format!("{e:#}");
+            if msg.contains("poison") || msg.contains("injected compile fault") {
+                led.poison_backoff += 1;
+            } else {
+                return Err(e);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn serve_overload() -> Result<()> {
+    use overlay_jit::admission::ALL_FAULT_KINDS;
+
+    let big = reference_overlay();
+    let small = OverlaySpec::new(4, 4, FuType::Dsp2);
+    let mut cfg = CoordinatorConfig::sim_fleet_mixed(vec![
+        (big.clone(), 2),
+        (small.clone(), 2),
+    ]);
+    cfg.admission = Some(AdmissionConfig {
+        tenant_rate_per_sec: 48.0,
+        tenant_burst: 24.0,
+        shed_pressure: 0.5,
+        interactive_slo_ms: OVERLOAD_SLO_MS,
+        queue_stall_depth: 4,
+        pressure_window: 16,
+        max_tenants: 16,
+    });
+    // scripted strikes land on the first five submissions (seq 0..4 are
+    // five distinct cold kernels, so every strike finds its trigger:
+    // a cold compile at 1, a dispatched run at 2, a reconfiguring pick
+    // at 3, a verified execution at 4); background rates keep the rest
+    // of the run lightly seasoned without ever stacking retries past
+    // the recovery bound (worker kills and compile faults stay
+    // scripted-only so no job can be struck by two different kinds
+    // more than once each)
+    cfg.faults = Some(FaultPlanConfig {
+        seed: 0xFA17,
+        worker_kill_rate: 0.0,
+        reconfig_fail_rate: 0.01,
+        verify_corrupt_rate: 0.01,
+        compile_fail_rate: 0.0,
+        scripted: vec![
+            (1, FaultKind::CompileFail),
+            (2, FaultKind::WorkerKill),
+            (3, FaultKind::ReconfigFail),
+            (4, FaultKind::VerifyCorrupt),
+        ],
+    });
+    // rejections feed the autoscaler's load signal: refused demand
+    // should still push replication toward the hot kernels
+    cfg.autoscale = Some(AutoscalePolicy::default());
+    let coord = Coordinator::new(cfg)?;
+    println!(
+        "overload: 4 tenants + flood over 2x {} + 2x {}, {} rounds, \
+         seeded fault campaign 0xFA17\n",
+        big.name(),
+        small.name(),
+        OVERLOAD_ROUNDS
+    );
+
+    let host = Device {
+        spec: big.clone(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    let ctx = Context::new(&host);
+    let mut rng = XorShiftRng::new(0x0B5E55);
+
+    let mut nparams_by_bench = Vec::with_capacity(BENCHMARKS.len());
+    for b in &BENCHMARKS {
+        nparams_by_bench.push(overlay_jit::frontend::parse_kernel(b.source)?.params.len());
+    }
+    let make_args = |nparams: usize, items: usize, rng: &mut XorShiftRng| {
+        (0..nparams)
+            .map(|_| {
+                let buf = ctx.create_buffer(items + 16);
+                let data: Vec<i32> = (0..items + 16)
+                    .map(|_| rng.gen_i64(-40, 40) as i32)
+                    .collect();
+                buf.write(&data);
+                SubmitArg::Buffer(buf)
+            })
+            .collect::<Vec<SubmitArg>>()
+    };
+
+    let mut ledgers: HashMap<&'static str, TenantLedger> = HashMap::new();
+    let mut handles: Vec<(&'static str, bool, overlay_jit::coordinator::DispatchHandle)> =
+        Vec::new();
+    let t_serve = Instant::now();
+
+    // primer: five distinct kernels pin the scripted strikes to known
+    // sequence numbers while the fleet is idle (nothing can be shed or
+    // quota-rejected yet, so seq 0..4 are exactly these five)
+    for (b, &nparams) in BENCHMARKS.iter().take(5).zip(&nparams_by_bench) {
+        let args = make_args(nparams, WIDE_ITEMS, &mut rng);
+        submit_one(
+            &coord, &mut ledgers, &mut handles, "primer", b.source, &args, WIDE_ITEMS,
+            Priority::Batch, None,
+        )?;
+    }
+    // a deliberately doomed deadline: typed early rejection must fire
+    // before any compile or scheduling work is spent on it
+    let args = make_args(nparams_by_bench[0], WIDE_ITEMS, &mut rng);
+    submit_one(
+        &coord, &mut ledgers, &mut handles, "doomed", BENCHMARKS[0].source, &args,
+        WIDE_ITEMS, Priority::Batch, Some(Duration::from_nanos(1)),
+    )?;
+
+    let compliant = ["alice", "bob", "carol"];
+    for round in 0..OVERLOAD_ROUNDS {
+        if round == 1 {
+            // the flood: one tenant bursting far past its quota. The
+            // first two dozen admits drive every 8x8 queue past the
+            // stall depth; the rest die on the dry token bucket.
+            for _ in 0..FLOOD_SUBMITS {
+                let args = make_args(nparams_by_bench[0], WIDE_ITEMS, &mut rng);
+                submit_one(
+                    &coord, &mut ledgers, &mut handles, "flood", BENCHMARKS[0].source,
+                    &args, WIDE_ITEMS, Priority::Batch, None,
+                )?;
+            }
+        }
+        for (b, &nparams) in BENCHMARKS.iter().zip(&nparams_by_bench) {
+            for t in compliant {
+                let narrow = make_args(nparams, SMALL_ITEMS, &mut rng);
+                submit_one(
+                    &coord, &mut ledgers, &mut handles, t, b.source, &narrow,
+                    SMALL_ITEMS, Priority::Interactive, None,
+                )?;
+                let wide = make_args(nparams, WIDE_ITEMS, &mut rng);
+                submit_one(
+                    &coord, &mut ledgers, &mut handles, t, b.source, &wide, WIDE_ITEMS,
+                    Priority::Batch, None,
+                )?;
+            }
+            // dave: the bursty tenant — 5 submits per benchmark slot,
+            // roughly 10x a compliant tenant's batch rate
+            let narrow = make_args(nparams, SMALL_ITEMS, &mut rng);
+            submit_one(
+                &coord, &mut ledgers, &mut handles, "dave", b.source, &narrow,
+                SMALL_ITEMS, Priority::Interactive, None,
+            )?;
+            for _ in 0..4 {
+                let wide = make_args(nparams, WIDE_ITEMS, &mut rng);
+                submit_one(
+                    &coord, &mut ledgers, &mut handles, "dave", b.source, &wide,
+                    WIDE_ITEMS, Priority::Batch, None,
+                )?;
+            }
+        }
+    }
+
+    // every admitted handle must reach a terminal outcome: poll with a
+    // hard ceiling so a hung dispatch fails the run instead of wedging
+    // it
+    let mut results: Vec<(&'static str, bool, overlay_jit::coordinator::DispatchResult)> =
+        Vec::new();
+    let mut open = handles;
+    let poll_deadline = Instant::now() + OVERLOAD_TIMEOUT;
+    while !open.is_empty() {
+        if Instant::now() > poll_deadline {
+            bail!(
+                "{} dispatch handles hung past {:?}: not every submit reached a \
+                 terminal outcome",
+                open.len(),
+                OVERLOAD_TIMEOUT
+            );
+        }
+        let mut still = Vec::with_capacity(open.len());
+        for (tenant, interactive, h) in open {
+            match h.try_wait_typed() {
+                Some(Ok(r)) => {
+                    ledgers.entry(tenant).or_default().completed += 1;
+                    results.push((tenant, interactive, r));
+                }
+                Some(Err(e)) => bail!(
+                    "tenant {tenant} dispatch failed unrecovered ({}): {e}",
+                    e.reason().name()
+                ),
+                None => still.push((tenant, interactive, h)),
+            }
+        }
+        open = still;
+        if !open.is_empty() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let serve_s = t_serve.elapsed().as_secs_f64();
+    coord.drain_background();
+
+    // heal the scripted compile poison: each submit ticks the decay
+    // clock; once the TTL expires the next ranking offers the pair
+    // back and the clean compile clears it
+    let mut probes = 0;
+    while coord.stats().poison.recoveries == 0 && probes < 32 {
+        probes += 1;
+        let args = make_args(nparams_by_bench[1], WIDE_ITEMS, &mut rng);
+        match coord.submit_gated(
+            "reprobe",
+            BENCHMARKS[1].source,
+            &args,
+            WIDE_ITEMS,
+            Priority::Interactive,
+            None,
+        ) {
+            Ok(Admission::Admitted(h)) => {
+                h.wait()?;
+            }
+            Ok(Admission::Rejected(_)) => {}
+            Err(e) => {
+                let msg = format!("{e:#}");
+                if !(msg.contains("poison") || msg.contains("injected compile fault")) {
+                    return Err(e);
+                }
+            }
+        }
+    }
+
+    // the report
+    let mut table = TextTable::new(vec![
+        "tenant", "submitted", "admitted", "completed", "quota", "deadline", "shed",
+        "backoff",
+    ]);
+    for t in ["primer", "doomed", "alice", "bob", "carol", "dave", "flood"] {
+        let Some(l) = ledgers.get(t) else { continue };
+        table.row(vec![
+            t.to_string(),
+            l.submitted.to_string(),
+            l.admitted.to_string(),
+            l.completed.to_string(),
+            l.rejected_quota.to_string(),
+            l.rejected_deadline.to_string(),
+            l.shed.to_string(),
+            l.poison_backoff.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    let stats = coord.stats();
+    println!("{}", stats.render());
+    let good_items: u64 = results.iter().map(|(_, _, r)| r.event.global_size as u64).sum();
+    let mut int_lat: Vec<f64> = results
+        .iter()
+        .filter(|(_, interactive, _)| *interactive)
+        .map(|(_, _, r)| (r.queue_wait + r.event.wall).as_secs_f64() * 1e3)
+        .collect();
+    int_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let int_p99 = percentile(&int_lat, 0.99);
+    println!(
+        "goodput    : {:.2} Mitems/s ({} completed dispatches in {:.2} s), \
+         interactive p99 {:.2} ms ({} probes to heal poison)\n",
+        good_items as f64 / serve_s / 1e6,
+        results.len(),
+        serve_s,
+        int_p99,
+        probes,
+    );
+
+    // acceptance: zero hung handles already held (the poll loop would
+    // have bailed); now the QoS, fairness and recovery criteria
+    if stats.verify_failures > 0 {
+        bail!("verification failure under fault injection");
+    }
+    if let Some((t, _, _)) = results.iter().find(|(_, _, r)| r.verified != Some(true)) {
+        bail!("tenant {t} received an unverified dispatch");
+    }
+    let adm = stats.admission.clone().expect("admission configured");
+    if adm.shed == 0 {
+        bail!("overload never shed batch work — the admission gate is not holding");
+    }
+    if adm.rejected_quota == 0 {
+        bail!("bursting tenants were never quota-rejected");
+    }
+    if ledgers.get("doomed").map_or(0, |l| l.rejected_deadline) == 0 {
+        bail!("the doomed deadline was not rejected early");
+    }
+    if int_p99 > OVERLOAD_SLO_MS {
+        bail!(
+            "interactive p99 {int_p99:.1} ms broke the {OVERLOAD_SLO_MS} ms SLO \
+             while batch was shed"
+        );
+    }
+    let tally = coord.fault_tally().expect("fault plan configured");
+    for kind in ALL_FAULT_KINDS {
+        if tally.injected_of(kind) == 0 {
+            bail!("fault {} was never injected", kind.name());
+        }
+        if tally.recovered_of(kind) == 0 {
+            bail!("no dispatch struck by {} recovered", kind.name());
+        }
+    }
+    if stats.poison.recoveries == 0 {
+        bail!("the poisoned (kernel, spec) pair never recovered via re-probe");
+    }
+    println!(
+        "OK: {} admitted / {} quota / {} deadline / {} shed; faults {} injected, \
+         {} recovered; poison healed after {} re-probe(s); interactive p99 \
+         {:.2} ms <= {} ms SLO",
+        adm.admitted,
+        adm.rejected_quota,
+        adm.rejected_deadline,
+        adm.shed,
+        tally.total_injected(),
+        tally.total_recovered(),
+        stats.poison.probes,
+        int_p99,
+        OVERLOAD_SLO_MS
     );
     Ok(())
 }

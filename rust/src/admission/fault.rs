@@ -1,0 +1,290 @@
+//! Deterministic fault injection for the dispatch plane.
+//!
+//! A [`FaultPlan`] decides, purely as a function of `(seed, dispatch
+//! sequence number, fault kind, salt)`, whether a given event is struck
+//! by a fault. Because the decision is a pure hash — not a shared
+//! mutable RNG — every worker thread sees the same verdict for the same
+//! dispatch regardless of interleaving, which is what makes fault runs
+//! replayable from a seed alone.
+//!
+//! Two trigger modes compose:
+//!
+//! * **Scripted** entries `(seq, kind)` fire exactly once at a known
+//!   dispatch sequence number — tests and the `e2e_serve -- overload`
+//!   harness use these to guarantee at least one of each fault kind.
+//! * **Rate-based** injection draws a per-event uniform from a
+//!   [`XorShiftRng`](crate::util::rng::XorShiftRng) seeded by the mixed
+//!   key, firing with the configured probability.
+//!
+//! Faults strike only a job's *first* attempt (`attempt == 0`), so
+//! bounded retry-with-backoff is guaranteed to converge: the recovery
+//! path never chases a fault that re-fires forever.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::rng::XorShiftRng;
+
+/// The failure modes the plan can inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// The worker serving a batch dies mid-batch; every in-flight job of
+    /// the run must be requeued onto a sibling partition.
+    WorkerKill,
+    /// A partition reconfiguration fails; the scheduler must re-place
+    /// the dispatch on a sibling and strike the failing partition.
+    ReconfigFail,
+    /// The dispatch's sim-verify comes back corrupted; the job must be
+    /// re-executed rather than served with a bad verdict.
+    VerifyCorrupt,
+    /// The JIT compile of a kernel on a shard fails transiently; the
+    /// router poisons the `(kernel, spec)` pair and must later re-probe.
+    CompileFail,
+}
+
+impl FaultKind {
+    /// Stable name for logs and stats.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::WorkerKill => "worker_kill",
+            FaultKind::ReconfigFail => "reconfig_fail",
+            FaultKind::VerifyCorrupt => "verify_corrupt",
+            FaultKind::CompileFail => "compile_fail",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultKind::WorkerKill => 0,
+            FaultKind::ReconfigFail => 1,
+            FaultKind::VerifyCorrupt => 2,
+            FaultKind::CompileFail => 3,
+        }
+    }
+}
+
+/// All four kinds, for matrix-style iteration in tests.
+pub const ALL_FAULT_KINDS: [FaultKind; 4] = [
+    FaultKind::WorkerKill,
+    FaultKind::ReconfigFail,
+    FaultKind::VerifyCorrupt,
+    FaultKind::CompileFail,
+];
+
+/// Declarative description of a fault campaign.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlanConfig {
+    /// Seed for the per-event hash; the whole campaign replays from it.
+    pub seed: u64,
+    /// Probability per served run that the worker dies mid-batch.
+    pub worker_kill_rate: f64,
+    /// Probability per reconfiguring pick that the reconfiguration fails.
+    pub reconfig_fail_rate: f64,
+    /// Probability per dispatched job that its sim-verify is corrupted.
+    pub verify_corrupt_rate: f64,
+    /// Probability per first-time compile that the JIT fails.
+    pub compile_fail_rate: f64,
+    /// Scripted `(sequence number, kind)` strikes, checked before rates.
+    pub scripted: Vec<(u64, FaultKind)>,
+}
+
+/// Counters per fault kind: how many were injected and how many of the
+/// struck dispatches subsequently completed (recovered).
+#[derive(Debug, Default)]
+struct KindCounters {
+    injected: AtomicU64,
+    recovered: AtomicU64,
+}
+
+/// Snapshot of a plan's injection/recovery tallies.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultTally {
+    /// Faults injected, per [`FaultKind::index`] order
+    /// (worker_kill, reconfig_fail, verify_corrupt, compile_fail).
+    pub injected: [u64; 4],
+    /// Struck dispatches that later completed, same order.
+    pub recovered: [u64; 4],
+}
+
+impl FaultTally {
+    /// Injected count for one kind.
+    pub fn injected_of(&self, kind: FaultKind) -> u64 {
+        self.injected[kind.index()]
+    }
+
+    /// Recovered count for one kind.
+    pub fn recovered_of(&self, kind: FaultKind) -> u64 {
+        self.recovered[kind.index()]
+    }
+
+    /// Total faults injected across kinds.
+    pub fn total_injected(&self) -> u64 {
+        self.injected.iter().sum()
+    }
+
+    /// Total struck dispatches that recovered.
+    pub fn total_recovered(&self) -> u64 {
+        self.recovered.iter().sum()
+    }
+}
+
+/// A live, thread-safe fault campaign. Decision methods are pure in the
+/// inputs; only the tally counters mutate.
+#[derive(Debug)]
+pub struct FaultPlan {
+    cfg: FaultPlanConfig,
+    counters: [KindCounters; 4],
+}
+
+impl FaultPlan {
+    /// Instantiate a campaign from its config.
+    pub fn new(cfg: FaultPlanConfig) -> Self {
+        FaultPlan { cfg, counters: Default::default() }
+    }
+
+    fn rate_of(&self, kind: FaultKind) -> f64 {
+        match kind {
+            FaultKind::WorkerKill => self.cfg.worker_kill_rate,
+            FaultKind::ReconfigFail => self.cfg.reconfig_fail_rate,
+            FaultKind::VerifyCorrupt => self.cfg.verify_corrupt_rate,
+            FaultKind::CompileFail => self.cfg.compile_fail_rate,
+        }
+    }
+
+    /// Should `kind` strike the event identified by `(seq, salt)` on
+    /// attempt `attempt`? Pure in its inputs. `salt` disambiguates
+    /// events that share a sequence number (e.g. compile attempts on
+    /// different shards); scripted entries fire only at `salt == 0`.
+    pub fn strikes(&self, kind: FaultKind, seq: u64, salt: u64, attempt: u32) -> bool {
+        if attempt > 0 {
+            return false; // retries are clean: recovery converges
+        }
+        if salt == 0 && self.cfg.scripted.iter().any(|&(s, k)| s == seq && k == kind) {
+            return true;
+        }
+        let rate = self.rate_of(kind);
+        if rate <= 0.0 {
+            return false;
+        }
+        // Independent stream per (seed, seq, kind, salt); one draw.
+        let mixed = self
+            .cfg
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ seq.wrapping_mul(0xBF58_476D_1CE4_E5B9)
+            ^ ((kind.index() as u64 + 1).wrapping_mul(0x94D0_49BB_1331_11EB))
+            ^ salt.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+        XorShiftRng::new(mixed).gen_f64() < rate
+    }
+
+    /// Record that `kind` was injected.
+    pub fn note_injected(&self, kind: FaultKind) {
+        self.counters[kind.index()].injected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record that a dispatch struck by `kind` later completed.
+    pub fn note_recovered(&self, kind: FaultKind) {
+        self.counters[kind.index()].recovered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the tallies.
+    pub fn tally(&self) -> FaultTally {
+        let mut t = FaultTally::default();
+        for (i, c) in self.counters.iter().enumerate() {
+            t.injected[i] = c.injected.load(Ordering::Relaxed);
+            t.recovered[i] = c.recovered.load(Ordering::Relaxed);
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_in_the_seed() {
+        let cfg = FaultPlanConfig { seed: 77, worker_kill_rate: 0.3, ..Default::default() };
+        let a = FaultPlan::new(cfg.clone());
+        let b = FaultPlan::new(cfg);
+        for seq in 0..200 {
+            assert_eq!(
+                a.strikes(FaultKind::WorkerKill, seq, 0, 0),
+                b.strikes(FaultKind::WorkerKill, seq, 0, 0),
+            );
+        }
+    }
+
+    #[test]
+    fn kinds_draw_independent_streams() {
+        let plan = FaultPlan::new(FaultPlanConfig {
+            seed: 5,
+            worker_kill_rate: 0.5,
+            reconfig_fail_rate: 0.5,
+            ..Default::default()
+        });
+        let same = (0..256)
+            .filter(|&s| {
+                plan.strikes(FaultKind::WorkerKill, s, 0, 0)
+                    == plan.strikes(FaultKind::ReconfigFail, s, 0, 0)
+            })
+            .count();
+        assert!(same < 200, "streams must not be mirror images");
+    }
+
+    #[test]
+    fn scripted_strikes_fire_exactly_where_placed() {
+        let plan = FaultPlan::new(FaultPlanConfig {
+            seed: 1,
+            scripted: vec![(3, FaultKind::VerifyCorrupt), (7, FaultKind::WorkerKill)],
+            ..Default::default()
+        });
+        assert!(plan.strikes(FaultKind::VerifyCorrupt, 3, 0, 0));
+        assert!(plan.strikes(FaultKind::WorkerKill, 7, 0, 0));
+        assert!(!plan.strikes(FaultKind::VerifyCorrupt, 4, 0, 0));
+        assert!(!plan.strikes(FaultKind::WorkerKill, 3, 0, 0));
+        // Scripted entries only hit the primary salt stream.
+        assert!(!plan.strikes(FaultKind::VerifyCorrupt, 3, 1, 0));
+    }
+
+    #[test]
+    fn retries_are_never_struck() {
+        let plan = FaultPlan::new(FaultPlanConfig {
+            seed: 9,
+            worker_kill_rate: 1.0,
+            scripted: vec![(0, FaultKind::WorkerKill)],
+            ..Default::default()
+        });
+        assert!(plan.strikes(FaultKind::WorkerKill, 0, 0, 0));
+        assert!(!plan.strikes(FaultKind::WorkerKill, 0, 0, 1));
+        assert!(!plan.strikes(FaultKind::WorkerKill, 0, 0, 2));
+    }
+
+    #[test]
+    fn rate_zero_never_strikes_and_rate_one_always_does() {
+        let off = FaultPlan::new(FaultPlanConfig { seed: 2, ..Default::default() });
+        let on = FaultPlan::new(FaultPlanConfig {
+            seed: 2,
+            verify_corrupt_rate: 1.0,
+            ..Default::default()
+        });
+        for seq in 0..100 {
+            assert!(!off.strikes(FaultKind::VerifyCorrupt, seq, 0, 0));
+            assert!(on.strikes(FaultKind::VerifyCorrupt, seq, 0, 0));
+        }
+    }
+
+    #[test]
+    fn tally_tracks_injections_and_recoveries() {
+        let plan = FaultPlan::new(FaultPlanConfig::default());
+        plan.note_injected(FaultKind::ReconfigFail);
+        plan.note_injected(FaultKind::ReconfigFail);
+        plan.note_recovered(FaultKind::ReconfigFail);
+        plan.note_injected(FaultKind::CompileFail);
+        let t = plan.tally();
+        assert_eq!(t.injected_of(FaultKind::ReconfigFail), 2);
+        assert_eq!(t.recovered_of(FaultKind::ReconfigFail), 1);
+        assert_eq!(t.injected_of(FaultKind::CompileFail), 1);
+        assert_eq!(t.total_injected(), 3);
+        assert_eq!(t.total_recovered(), 1);
+    }
+}

@@ -1,0 +1,527 @@
+//! Overload-safe admission control for the serving coordinator.
+//!
+//! The paper's runtime adapts *compilation* to what the hardware can
+//! sustain; this module makes the *serving* layer do the same for load.
+//! Every submit passes through an [`AdmissionController`] before any
+//! compilation or scheduling work is spent on it:
+//!
+//! 1. **Deadline triage** — a dispatch whose deadline cannot be met even
+//!    on an idle fleet ("will miss anyway") is failed fast with
+//!    [`RejectReason::DeadlineUnmeetable`] instead of wasting a slot.
+//! 2. **Per-tenant token buckets** — each tenant draws from its own
+//!    [`TokenBucket`]; a bursting tenant exhausts only its own bucket
+//!    ([`RejectReason::QuotaExhausted`]) and cannot raise a compliant
+//!    tenant's reject rate.
+//! 3. **Pressure-driven batch shedding** — a pressure signal in `[0, 1]`
+//!    is derived from per-partition queue depth (the pressure-stall
+//!    idiom: the fraction of recent submits that observed a stalled
+//!    queue) combined with the serving p99 against the interactive SLO.
+//!    When pressure crosses the shed threshold, `Priority::Batch` work
+//!    is shed first ([`RejectReason::Shed`]) so interactive p99 holds;
+//!    interactive work is never shed, only quota- or deadline-rejected.
+//!
+//! All clocks are caller-supplied nanosecond counters, so every decision
+//! is deterministic under test. The fault-injection plane lives in the
+//! [`fault`] submodule.
+
+pub mod fault;
+
+pub use fault::{FaultKind, FaultPlan, FaultPlanConfig, FaultTally, ALL_FAULT_KINDS};
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Why a submit was refused. Returned as a *value* (not an error): a
+/// rejection is a normal overload outcome with a typed cause, so callers
+/// can count, retry, or back off per reason instead of string-matching.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RejectReason {
+    /// The tenant's token bucket is empty: it exceeded its sustained
+    /// rate plus burst allowance. Other tenants are unaffected.
+    QuotaExhausted {
+        /// Tenant whose bucket ran dry.
+        tenant: String,
+    },
+    /// The dispatch cannot meet its deadline even if admitted now:
+    /// estimated service time (queue backlog + reconfiguration +
+    /// execution) already exceeds the remaining budget.
+    DeadlineUnmeetable {
+        /// Estimated time to completion if admitted, in milliseconds.
+        needed_ms: f64,
+        /// Deadline budget the caller supplied, in milliseconds.
+        budget_ms: f64,
+    },
+    /// Batch-lane load shedding: the fleet is under pressure and this
+    /// submit is `Priority::Batch`, which is shed first so interactive
+    /// latency holds.
+    Shed {
+        /// Pressure in `[0, 1]` at the moment of rejection.
+        pressure: f64,
+    },
+}
+
+impl RejectReason {
+    /// Short stable tag for logs and counters.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RejectReason::QuotaExhausted { .. } => "quota",
+            RejectReason::DeadlineUnmeetable { .. } => "deadline",
+            RejectReason::Shed { .. } => "shed",
+        }
+    }
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::QuotaExhausted { tenant } => {
+                write!(f, "rejected[quota]: tenant '{tenant}' exhausted its token bucket")
+            }
+            RejectReason::DeadlineUnmeetable { needed_ms, budget_ms } => write!(
+                f,
+                "rejected[deadline]: needs ~{needed_ms:.3} ms but only {budget_ms:.3} ms of budget remain"
+            ),
+            RejectReason::Shed { pressure } => {
+                write!(f, "rejected[shed]: batch lane shed at pressure {pressure:.2}")
+            }
+        }
+    }
+}
+
+/// Tuning knobs for the admission layer. All thresholds have serving-
+/// oriented defaults; tests override them for determinism.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Sustained per-tenant submit rate (tokens per second).
+    pub tenant_rate_per_sec: f64,
+    /// Per-tenant burst allowance (bucket capacity, in submits).
+    pub tenant_burst: f64,
+    /// Pressure in `[0, 1]` at which batch submits start being shed.
+    pub shed_pressure: f64,
+    /// Interactive p99 SLO in milliseconds; p99 above this contributes
+    /// saturating pressure.
+    pub interactive_slo_ms: f64,
+    /// A submit that observes a best-candidate queue at or above this
+    /// depth counts as a stall sample.
+    pub queue_stall_depth: usize,
+    /// Number of recent submits over which the stall fraction is taken.
+    pub pressure_window: usize,
+    /// Cap on distinct tenant buckets kept; beyond it, unknown tenants
+    /// share the overflow bucket keyed by the empty string.
+    pub max_tenants: usize,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            tenant_rate_per_sec: 256.0,
+            tenant_burst: 64.0,
+            shed_pressure: 0.5,
+            interactive_slo_ms: 250.0,
+            queue_stall_depth: 4,
+            pressure_window: 64,
+            max_tenants: 256,
+        }
+    }
+}
+
+/// Classic token bucket with a caller-supplied nanosecond clock, so
+/// refill is deterministic under test.
+#[derive(Debug, Clone)]
+pub struct TokenBucket {
+    capacity: f64,
+    tokens: f64,
+    rate_per_sec: f64,
+    last_ns: u64,
+}
+
+impl TokenBucket {
+    /// A bucket that starts full.
+    pub fn new(capacity: f64, rate_per_sec: f64) -> Self {
+        TokenBucket { capacity, tokens: capacity, rate_per_sec, last_ns: 0 }
+    }
+
+    /// Refill for the elapsed time and try to take one token.
+    pub fn try_take(&mut self, now_ns: u64) -> bool {
+        let dt = now_ns.saturating_sub(self.last_ns) as f64 / 1e9;
+        self.last_ns = now_ns;
+        self.tokens = (self.tokens + dt * self.rate_per_sec).min(self.capacity);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available (after the last refill).
+    pub fn available(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// Pressure-stall gauge: a ring of 0/1 samples ("did this submit observe
+/// a stalled queue?") whose mean is the stall fraction, blended with the
+/// p99-vs-SLO ratio. Both components saturate at 1.0.
+#[derive(Debug)]
+struct PressureGauge {
+    window: usize,
+    samples: Vec<u8>,
+    next: usize,
+    filled: usize,
+}
+
+impl PressureGauge {
+    fn new(window: usize) -> Self {
+        let window = window.max(1);
+        PressureGauge { window, samples: vec![0; window], next: 0, filled: 0 }
+    }
+
+    fn record(&mut self, stalled: bool) {
+        self.samples[self.next] = stalled as u8;
+        self.next = (self.next + 1) % self.window;
+        self.filled = (self.filled + 1).min(self.window);
+    }
+
+    fn stall_fraction(&self) -> f64 {
+        if self.filled == 0 {
+            return 0.0;
+        }
+        let hits: u32 = self.samples[..self.filled].iter().map(|&s| s as u32).sum();
+        f64::from(hits) / self.filled as f64
+    }
+}
+
+/// Live counters for the admission layer, snapshot into
+/// `metrics::ServingStats`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdmissionStats {
+    /// Submits that passed admission.
+    pub admitted: u64,
+    /// Rejections due to an exhausted tenant bucket.
+    pub rejected_quota: u64,
+    /// Rejections due to an unmeetable deadline.
+    pub rejected_deadline: u64,
+    /// Batch submits shed under pressure.
+    pub shed: u64,
+    /// Pressure at the most recent admission decision.
+    pub pressure: f64,
+    /// Distinct tenants with a bucket.
+    pub tenants: u64,
+}
+
+/// The gate in front of `Coordinator::submit`. Thread-safe; every check
+/// takes the caller's clock so decisions replay deterministically.
+#[derive(Debug)]
+pub struct AdmissionController {
+    cfg: AdmissionConfig,
+    buckets: Mutex<HashMap<String, TokenBucket>>,
+    gauge: Mutex<PressureGauge>,
+    admitted: AtomicU64,
+    rejected_quota: AtomicU64,
+    rejected_deadline: AtomicU64,
+    shed: AtomicU64,
+    /// Last computed pressure, stored as `f64::to_bits`.
+    pressure_bits: AtomicU64,
+}
+
+/// Everything the controller needs to know about one submit. The caller
+/// (the coordinator) computes these from its scheduler observations
+/// before any compilation happens.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmitRequest<'a> {
+    /// Tenant name; unknown tenants get a bucket on first sight.
+    pub tenant: &'a str,
+    /// True for `Priority::Interactive`, false for batch.
+    pub interactive: bool,
+    /// Caller clock in nanoseconds since coordinator start.
+    pub now_ns: u64,
+    /// Best-candidate queue depth observed for this submit.
+    pub queue_depth: usize,
+    /// Current serving p99 in milliseconds (0 when unwarmed).
+    pub p99_ms: f64,
+    /// Estimated service time if admitted now, in milliseconds
+    /// (backlog + reconfiguration + modeled execution).
+    pub est_service_ms: f64,
+    /// Remaining deadline budget in milliseconds, if any.
+    pub budget_ms: Option<f64>,
+}
+
+impl AdmissionController {
+    /// Build a controller from its config.
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        let gauge = PressureGauge::new(cfg.pressure_window);
+        AdmissionController {
+            cfg,
+            buckets: Mutex::new(HashMap::new()),
+            gauge: Mutex::new(gauge),
+            admitted: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
+            rejected_deadline: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+            pressure_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Decide one submit. `Ok(())` admits; `Err(reason)` carries the
+    /// typed cause. Checks run cheapest-and-most-specific first:
+    /// deadline triage (spend nothing on doomed work), then the tenant
+    /// bucket, then pressure shedding for batch work.
+    pub fn admit(&self, req: &AdmitRequest<'_>) -> Result<(), RejectReason> {
+        // 1. Deadline triage: will miss anyway -> fail fast, and do not
+        // charge the tenant a token for work we refused to queue.
+        if let Some(budget_ms) = req.budget_ms {
+            if req.est_service_ms > budget_ms {
+                self.rejected_deadline.fetch_add(1, Ordering::Relaxed);
+                return Err(RejectReason::DeadlineUnmeetable {
+                    needed_ms: req.est_service_ms,
+                    budget_ms,
+                });
+            }
+        }
+
+        // 2. Per-tenant quota.
+        {
+            let mut buckets = self.buckets.lock().unwrap();
+            let key = if buckets.len() >= self.cfg.max_tenants
+                && !buckets.contains_key(req.tenant)
+            {
+                String::new() // overflow bucket for the long tail
+            } else {
+                req.tenant.to_string()
+            };
+            let bucket = buckets.entry(key).or_insert_with(|| {
+                TokenBucket::new(self.cfg.tenant_burst, self.cfg.tenant_rate_per_sec)
+            });
+            if !bucket.try_take(req.now_ns) {
+                self.rejected_quota.fetch_add(1, Ordering::Relaxed);
+                return Err(RejectReason::QuotaExhausted {
+                    tenant: req.tenant.to_string(),
+                });
+            }
+        }
+
+        // 3. Pressure: stall fraction from queue depth, blended with the
+        // p99-vs-SLO ratio. Batch is shed first; interactive rides out
+        // the pressure so its p99 holds while batch degrades.
+        let stall = {
+            let mut gauge = self.gauge.lock().unwrap();
+            gauge.record(req.queue_depth >= self.cfg.queue_stall_depth);
+            gauge.stall_fraction()
+        };
+        let slo = (req.p99_ms / self.cfg.interactive_slo_ms).clamp(0.0, 1.0);
+        let pressure = stall.max(slo);
+        self.pressure_bits.store(pressure.to_bits(), Ordering::Relaxed);
+        if !req.interactive && pressure >= self.cfg.shed_pressure {
+            self.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(RejectReason::Shed { pressure });
+        }
+
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Pressure at the most recent decision, in `[0, 1]`.
+    pub fn pressure(&self) -> f64 {
+        f64::from_bits(self.pressure_bits.load(Ordering::Relaxed))
+    }
+
+    /// Snapshot the live counters.
+    pub fn stats(&self) -> AdmissionStats {
+        AdmissionStats {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected_quota: self.rejected_quota.load(Ordering::Relaxed),
+            rejected_deadline: self.rejected_deadline.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            pressure: self.pressure(),
+            tenants: self.buckets.lock().unwrap().len() as u64,
+        }
+    }
+}
+
+/// Estimate, in milliseconds, how long a dispatch would take if admitted
+/// now: queued work ahead of it, the reconfiguration it would trigger,
+/// and its own modeled execution. Deliberately pessimistic (assumes the
+/// backlog is same-shaped work) — admission only fails fast on submits
+/// that are hopeless even under this rough model.
+pub fn estimate_service_ms(
+    ops_total: f64,
+    gops: f64,
+    queue_depth: usize,
+    config_seconds: f64,
+    resident: bool,
+) -> f64 {
+    let exec_ms = if gops > 0.0 { ops_total / (gops * 1e9) * 1e3 } else { 0.0 };
+    let config_ms = if resident { 0.0 } else { config_seconds * 1e3 };
+    exec_ms * (queue_depth as f64 + 1.0) + config_ms
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn strict_cfg() -> AdmissionConfig {
+        AdmissionConfig {
+            tenant_rate_per_sec: 1.0,
+            tenant_burst: 4.0,
+            shed_pressure: 0.5,
+            interactive_slo_ms: 100.0,
+            queue_stall_depth: 2,
+            pressure_window: 4,
+            max_tenants: 8,
+        }
+    }
+
+    fn idle(tenant: &str, now_ns: u64) -> AdmitRequest<'_> {
+        AdmitRequest {
+            tenant,
+            interactive: true,
+            now_ns,
+            queue_depth: 0,
+            p99_ms: 0.0,
+            est_service_ms: 0.0,
+            budget_ms: None,
+        }
+    }
+
+    #[test]
+    fn token_bucket_refills_deterministically() {
+        let mut b = TokenBucket::new(2.0, 1.0);
+        assert!(b.try_take(0));
+        assert!(b.try_take(0));
+        assert!(!b.try_take(0), "burst exhausted");
+        // One second refills exactly one token.
+        assert!(b.try_take(1_000_000_000));
+        assert!(!b.try_take(1_000_000_000));
+        // Refill never exceeds capacity.
+        assert!(b.try_take(100_000_000_000));
+        assert!(b.try_take(100_000_000_000));
+        assert!(!b.try_take(100_000_000_000));
+    }
+
+    #[test]
+    fn burst_tenant_exhausts_only_its_own_bucket() {
+        let ctl = AdmissionController::new(strict_cfg());
+        let mut spammer_rejects = 0;
+        for _ in 0..40 {
+            if ctl.admit(&idle("spammer", 0)).is_err() {
+                spammer_rejects += 1;
+            }
+        }
+        assert_eq!(spammer_rejects, 36, "burst of 4 then dry at t=0");
+        // Compliant tenants still have full buckets.
+        for t in ["a", "b", "c"] {
+            for _ in 0..4 {
+                assert!(ctl.admit(&idle(t, 0)).is_ok(), "tenant {t} must not be rejected");
+            }
+        }
+        let stats = ctl.stats();
+        assert_eq!(stats.rejected_quota, 36);
+        assert_eq!(stats.admitted, 16);
+    }
+
+    #[test]
+    fn deadline_triage_fails_fast_without_charging_quota() {
+        let ctl = AdmissionController::new(strict_cfg());
+        let mut req = idle("t", 0);
+        req.est_service_ms = 50.0;
+        req.budget_ms = Some(10.0);
+        match ctl.admit(&req) {
+            Err(RejectReason::DeadlineUnmeetable { needed_ms, budget_ms }) => {
+                assert!((needed_ms - 50.0).abs() < 1e-9);
+                assert!((budget_ms - 10.0).abs() < 1e-9);
+            }
+            other => panic!("expected deadline reject, got {other:?}"),
+        }
+        // The doomed submit consumed no token: the full burst remains.
+        for _ in 0..4 {
+            assert!(ctl.admit(&idle("t", 0)).is_ok());
+        }
+        assert_eq!(ctl.stats().rejected_deadline, 1);
+    }
+
+    #[test]
+    fn pressure_sheds_batch_first_and_never_interactive() {
+        let ctl = AdmissionController::new(AdmissionConfig {
+            tenant_rate_per_sec: 1000.0,
+            tenant_burst: 1000.0,
+            ..strict_cfg()
+        });
+        // Saturate the stall window: every submit sees a deep queue.
+        let mut req = idle("t", 0);
+        req.queue_depth = 10;
+        for _ in 0..4 {
+            assert!(ctl.admit(&req).is_ok(), "interactive rides out pressure");
+        }
+        assert!(ctl.pressure() >= 0.5);
+        req.interactive = false;
+        match ctl.admit(&req) {
+            Err(RejectReason::Shed { pressure }) => assert!(pressure >= 0.5),
+            other => panic!("expected shed, got {other:?}"),
+        }
+        // Interactive is still admitted at the same pressure.
+        req.interactive = true;
+        assert!(ctl.admit(&req).is_ok());
+        assert_eq!(ctl.stats().shed, 1);
+    }
+
+    #[test]
+    fn p99_above_slo_contributes_pressure() {
+        let ctl = AdmissionController::new(AdmissionConfig {
+            tenant_rate_per_sec: 1000.0,
+            tenant_burst: 1000.0,
+            ..strict_cfg()
+        });
+        let mut req = idle("t", 0);
+        req.interactive = false;
+        req.p99_ms = 100.0; // == SLO -> ratio 1.0 -> shed
+        match ctl.admit(&req) {
+            Err(RejectReason::Shed { pressure }) => assert!((pressure - 1.0).abs() < 1e-9),
+            other => panic!("expected shed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn overflow_tenants_share_one_bucket() {
+        let mut cfg = strict_cfg();
+        cfg.max_tenants = 2;
+        let ctl = AdmissionController::new(cfg);
+        assert!(ctl.admit(&idle("a", 0)).is_ok());
+        assert!(ctl.admit(&idle("b", 0)).is_ok());
+        // "c" and "d" both land in the overflow bucket (4 tokens total).
+        for i in 0..4 {
+            let t = if i % 2 == 0 { "c" } else { "d" };
+            assert!(ctl.admit(&idle(t, 0)).is_ok());
+        }
+        assert!(ctl.admit(&idle("e", 0)).is_err(), "overflow bucket dry");
+        // Named tenants keep their own tokens.
+        assert!(ctl.admit(&idle("a", 0)).is_ok());
+    }
+
+    #[test]
+    fn reject_reason_display_is_stable() {
+        let q = RejectReason::QuotaExhausted { tenant: "t3".into() };
+        assert!(q.to_string().contains("rejected[quota]"));
+        assert_eq!(q.kind(), "quota");
+        let d = RejectReason::DeadlineUnmeetable { needed_ms: 5.0, budget_ms: 1.0 };
+        assert!(d.to_string().contains("rejected[deadline]"));
+        let s = RejectReason::Shed { pressure: 0.75 };
+        assert!(s.to_string().contains("rejected[shed]"));
+    }
+
+    #[test]
+    fn service_estimate_charges_backlog_and_config() {
+        // 1e9 ops at 1 GOPS = 1 ms execution.
+        let ms = estimate_service_ms(1e9, 1.0, 0, 0.0, true);
+        assert!((ms - 1.0).abs() < 1e-9);
+        // Three queued ahead quadruples the wait; a cold partition adds
+        // its reconfiguration cost.
+        let ms = estimate_service_ms(1e9, 1.0, 3, 0.002, false);
+        assert!((ms - 6.0).abs() < 1e-9);
+        // Unknown throughput estimates only the config cost.
+        let ms = estimate_service_ms(1e9, 0.0, 5, 0.002, false);
+        assert!((ms - 2.0).abs() < 1e-9);
+    }
+}

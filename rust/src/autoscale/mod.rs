@@ -278,6 +278,29 @@ impl Autoscaler {
         })
     }
 
+    /// Record one submit the admission gate refused. Rejected demand
+    /// feeds the same load signal as admitted demand — a kernel hot
+    /// enough to be turned away is exactly the kernel re-replication
+    /// should relieve — but never proposes a rescale itself: proposals
+    /// stay on the admitted path, where the cooldown accounting lives.
+    pub fn note_reject(&self, obs: &SubmitObservation) {
+        let mut state = self.state.lock().unwrap();
+        let key = (obs.source_hash, obs.spec_fp);
+        if !state.contains_key(&key) && state.len() >= MAX_TRACKED {
+            return;
+        }
+        let st = state.entry(key).or_insert_with(|| KernelScaleState {
+            source: obs.source.to_string(),
+            kernel: obs.kernel.to_string(),
+            signal: LoadSignal::new(self.policy.window),
+            active: None,
+            pending: false,
+            since_event: None,
+            floor: None,
+        });
+        st.signal.record_reject(obs.demand, obs.queue_depth);
+    }
+
     /// Record one completed dispatch (worker side): end-to-end latency
     /// and the modeled execution time.
     pub fn note_complete(
@@ -406,6 +429,7 @@ impl Autoscaler {
             active_variants: state.values().filter(|s| s.active.is_some()).count(),
             tracked_kernels: state.len(),
             events_dropped: log.dropped,
+            admission_rejects: state.values().map(|s| s.signal.rejects()).sum(),
         }
     }
 }

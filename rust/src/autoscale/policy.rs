@@ -255,6 +255,7 @@ mod tests {
             mean_modeled_ms: 0.0,
             submits: 8,
             completions: 8,
+            rejects: 0,
         }
     }
 

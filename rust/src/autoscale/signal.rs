@@ -26,6 +26,9 @@ pub struct LoadSignal {
     modeled_ms: SlidingWindow,
     submits: u64,
     completions: u64,
+    /// Submits the admission gate refused for this pair — demand the
+    /// fleet failed to absorb.
+    rejects: u64,
 }
 
 /// Frozen view of a [`LoadSignal`] at one evaluation instant.
@@ -50,6 +53,8 @@ pub struct SignalSnapshot {
     /// Lifetime submit / completion counts (not windowed).
     pub submits: u64,
     pub completions: u64,
+    /// Lifetime admission rejections fed back into this signal.
+    pub rejects: u64,
 }
 
 impl LoadSignal {
@@ -65,6 +70,7 @@ impl LoadSignal {
             modeled_ms: SlidingWindow::new(window * 8),
             submits: 0,
             completions: 0,
+            rejects: 0,
         }
     }
 
@@ -73,6 +79,17 @@ impl LoadSignal {
         self.demand.push(demand_copies as f64);
         self.queue.push(queue_depth as f64);
         self.submits += 1;
+    }
+
+    /// Record one submit the admission gate refused. The rejected
+    /// demand and the queue depth that provoked the rejection still
+    /// enter the windows — refused load is load the fleet failed to
+    /// absorb, and it should push scale-up decisions exactly like
+    /// admitted load does.
+    pub fn record_reject(&mut self, demand_copies: usize, queue_depth: usize) {
+        self.demand.push(demand_copies as f64);
+        self.queue.push(queue_depth as f64);
+        self.rejects += 1;
     }
 
     /// Record one completed dispatch (worker side).
@@ -88,6 +105,11 @@ impl LoadSignal {
         self.demand.is_full()
     }
 
+    /// Lifetime admission rejections fed into this signal.
+    pub fn rejects(&self) -> u64 {
+        self.rejects
+    }
+
     pub fn snapshot(&self) -> SignalSnapshot {
         SignalSnapshot {
             samples: self.demand.len(),
@@ -99,6 +121,7 @@ impl LoadSignal {
             mean_modeled_ms: self.modeled_ms.mean(),
             submits: self.submits,
             completions: self.completions,
+            rejects: self.rejects,
         }
     }
 }
@@ -141,6 +164,21 @@ mod tests {
         assert!(snap.p50_ms >= 5.0 && snap.p50_ms <= 6.0, "{}", snap.p50_ms);
         assert_eq!(snap.p99_ms, 10.0);
         assert!((snap.mean_modeled_ms - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejections_feed_the_windows_without_counting_as_submits() {
+        let mut s = LoadSignal::new(4);
+        for _ in 0..4 {
+            s.record_reject(8, 3);
+        }
+        // rejected demand warms the window like admitted demand does
+        assert!(s.warmed_up());
+        let snap = s.snapshot();
+        assert_eq!(snap.rejects, 4);
+        assert_eq!(snap.submits, 0);
+        assert!((snap.mean_demand - 8.0).abs() < 1e-12);
+        assert!((snap.mean_queue - 3.0).abs() < 1e-12);
     }
 
     #[test]

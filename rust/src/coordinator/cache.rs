@@ -215,67 +215,94 @@ impl KernelCache {
     /// also restores variants from version-1 snapshots). Anything
     /// else — another spec's kernels, or entries built under
     /// since-changed compile options — is skipped rather than
-    /// silently mismatched; unknown format versions fail the load.
-    /// Loading stops at capacity — a snapshot written by a larger
-    /// cache neither evicts what was loaded first nor inflates the
-    /// eviction counter. Returns how many entries are actually
-    /// resident afterwards. Restored entries count neither hits nor
-    /// misses.
-    pub fn load_snapshot(
-        &mut self,
-        path: &Path,
-        spec: u64,
-        options: &CompileOptions,
-    ) -> Result<usize> {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading cache snapshot {}", path.display()))?;
-        let doc = JsonValue::parse(&text)
-            .with_context(|| format!("parsing cache snapshot {}", path.display()))?;
-        let version = doc
-            .get("version")
-            .and_then(JsonValue::as_i64)
-            .ok_or_else(|| anyhow!("snapshot missing version"))?;
-        if !(1..=2).contains(&version) {
-            bail!("unsupported snapshot version {version}");
-        }
-        let base_fp = options.fingerprint();
-        let variant_fp = |factor: usize| {
-            let mut o = options.clone();
-            o.replication = Replication::Fixed(factor);
-            o.fingerprint()
-        };
-        let entries = doc
-            .get("entries")
-            .and_then(JsonValue::as_array)
-            .ok_or_else(|| anyhow!("snapshot missing entries array"))?;
-        let mut loaded = 0usize;
-        for ent in entries {
-            let key = CacheKey {
-                source: get_hex64(ent, "source")?,
-                spec: get_hex64(ent, "spec")?,
-                options: get_hex64(ent, "options")?,
-            };
-            let options_ok = key.options == base_fp
-                || ent
-                    .get("kernel")
-                    .and_then(|k| k.get("factor"))
-                    .and_then(JsonValue::as_i64)
-                    .filter(|&f| f > 0)
-                    .is_some_and(|f| key.options == variant_fp(f as usize));
-            if key.spec != spec || !options_ok {
-                continue;
+    /// silently mismatched.
+    ///
+    /// A snapshot is an *optimization*, never a correctness input: a
+    /// truncated, unparsable or internally inconsistent file (and an
+    /// unknown format version) is logged to stderr and ignored — the
+    /// cache simply cold-starts, exactly as if the file were absent.
+    /// The decode is two-phase (parse **everything**, then insert),
+    /// so corruption anywhere in the file leaves the cache untouched
+    /// rather than half-warm. Loading stops at capacity — a snapshot
+    /// written by a larger cache neither evicts what was loaded first
+    /// nor inflates the eviction counter. Returns how many entries
+    /// are actually resident afterwards. Restored entries count
+    /// neither hits nor misses.
+    pub fn load_snapshot(&mut self, path: &Path, spec: u64, options: &CompileOptions) -> usize {
+        let parsed = match parse_snapshot(path, spec, options) {
+            Ok(entries) => entries,
+            Err(e) => {
+                eprintln!(
+                    "[kernel-cache] snapshot {} unusable ({e:#}); cold-starting this shard",
+                    path.display()
+                );
+                return 0;
             }
+        };
+        let mut loaded = 0usize;
+        for (key, kernel) in parsed {
             if self.map.len() >= self.capacity && !self.map.contains_key(&key) {
                 continue; // smaller cache than the snapshot's writer
             }
-            let kernel = ent
-                .get("kernel")
-                .ok_or_else(|| anyhow!("snapshot entry missing kernel"))?;
-            self.insert(key, Arc::new(servable_from_json(kernel)?));
+            self.insert(key, kernel);
             loaded += 1;
         }
-        Ok(loaded)
+        loaded
     }
+}
+
+/// Strict snapshot decode: read, parse, filter to `(spec, options)`
+/// and validate **every** surviving entry before the caller mutates
+/// anything. Any defect anywhere fails the whole decode.
+fn parse_snapshot(
+    path: &Path,
+    spec: u64,
+    options: &CompileOptions,
+) -> Result<Vec<(CacheKey, Arc<ServableKernel>)>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading cache snapshot {}", path.display()))?;
+    let doc = JsonValue::parse(&text)
+        .with_context(|| format!("parsing cache snapshot {}", path.display()))?;
+    let version = doc
+        .get("version")
+        .and_then(JsonValue::as_i64)
+        .ok_or_else(|| anyhow!("snapshot missing version"))?;
+    if !(1..=2).contains(&version) {
+        bail!("unsupported snapshot version {version}");
+    }
+    let base_fp = options.fingerprint();
+    let variant_fp = |factor: usize| {
+        let mut o = options.clone();
+        o.replication = Replication::Fixed(factor);
+        o.fingerprint()
+    };
+    let entries = doc
+        .get("entries")
+        .and_then(JsonValue::as_array)
+        .ok_or_else(|| anyhow!("snapshot missing entries array"))?;
+    let mut out = Vec::new();
+    for ent in entries {
+        let key = CacheKey {
+            source: get_hex64(ent, "source")?,
+            spec: get_hex64(ent, "spec")?,
+            options: get_hex64(ent, "options")?,
+        };
+        let options_ok = key.options == base_fp
+            || ent
+                .get("kernel")
+                .and_then(|k| k.get("factor"))
+                .and_then(JsonValue::as_i64)
+                .filter(|&f| f > 0)
+                .is_some_and(|f| key.options == variant_fp(f as usize));
+        if key.spec != spec || !options_ok {
+            continue;
+        }
+        let kernel = ent
+            .get("kernel")
+            .ok_or_else(|| anyhow!("snapshot entry missing kernel"))?;
+        out.push((key, Arc::new(servable_from_json(kernel)?)));
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------
@@ -772,9 +799,7 @@ mod tests {
         cache.save_snapshot(&path).unwrap();
 
         let mut restored = KernelCache::new(8);
-        let n = restored
-            .load_snapshot(&path, spec.fingerprint(), &opts)
-            .unwrap();
+        let n = restored.load_snapshot(&path, spec.fingerprint(), &opts);
         assert_eq!(n, 1);
         let got = restored.get(&k).expect("restored entry resident");
         assert_eq!(got.name, original.name);
@@ -791,13 +816,13 @@ mod tests {
 
         // a shard with a different spec fingerprint loads nothing
         let mut other = KernelCache::new(8);
-        assert_eq!(other.load_snapshot(&path, 0xdead, &opts).unwrap(), 0);
+        assert_eq!(other.load_snapshot(&path, 0xdead, &opts), 0);
         assert!(other.is_empty());
         let _ = std::fs::remove_file(&path);
     }
 
     #[test]
-    fn corrupted_snapshot_fails_the_load_not_the_worker() {
+    fn corrupted_snapshot_falls_back_to_cold_start() {
         let spec = OverlaySpec::new(4, 4, FuType::Dsp2);
         let opts = CompileOptions::default();
         let mut cache = KernelCache::new(4);
@@ -812,12 +837,46 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains("\"n_inputs\":1"), "fixture drifted: {text:.120}");
         std::fs::write(&path, text.replace("\"n_inputs\":1", "\"n_inputs\":3")).unwrap();
+        // the defect must not fail the load (a restart would never
+        // come up); the shard just cold-starts
         let mut restored = KernelCache::new(4);
-        let err = restored
-            .load_snapshot(&path, spec.fingerprint(), &opts)
-            .unwrap_err();
-        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+        assert_eq!(restored.load_snapshot(&path, spec.fingerprint(), &opts), 0);
         assert!(restored.is_empty());
+        // the strict decoder still names the defect for the log line
+        let err = parse_snapshot(&path, spec.fingerprint(), &opts).unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+        // and the cache remains fully serviceable after the fallback
+        restored.insert(CacheKey::new("src", &spec, &opts), compiled());
+        assert_eq!(restored.len(), 1);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_snapshot_loads_nothing_not_half_a_cache() {
+        let spec = OverlaySpec::new(4, 4, FuType::Dsp2);
+        let opts = CompileOptions::default();
+        let k = compiled();
+        let mut cache = KernelCache::new(4);
+        for tag in 0..3u64 {
+            cache.insert(
+                CacheKey { source: tag, spec: spec.fingerprint(), options: opts.fingerprint() },
+                k.clone(),
+            );
+        }
+        let path = std::env::temp_dir().join(format!(
+            "overlay-jit-snapshot-truncated-test-{}.json",
+            std::process::id()
+        ));
+        cache.save_snapshot(&path).unwrap();
+        // chop the file mid-entry, as a crashed writer would leave it
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+        // the decode is two-phase: even though entry 0 was intact, the
+        // cache stays empty rather than warm-starting half a snapshot
+        let mut restored = KernelCache::new(4);
+        assert_eq!(restored.load_snapshot(&path, spec.fingerprint(), &opts), 0);
+        assert!(restored.is_empty());
+        assert!(parse_snapshot(&path, spec.fingerprint(), &opts).is_err());
         let _ = std::fs::remove_file(&path);
     }
 
@@ -842,9 +901,7 @@ mod tests {
         // a smaller restarted cache keeps only what fits — no silent
         // evictions, an honest loaded count
         let mut small = KernelCache::new(2);
-        let n = small
-            .load_snapshot(&path, spec.fingerprint(), &opts)
-            .unwrap();
+        let n = small.load_snapshot(&path, spec.fingerprint(), &opts);
         assert_eq!(n, 2);
         assert_eq!(small.len(), 2);
         assert_eq!(small.stats().evictions, 0);
@@ -880,7 +937,7 @@ mod tests {
         // entry AND the autoscaler's factor-2 variant (its fingerprint
         // is re-derived from the recorded factor)
         let mut warm = KernelCache::new(8);
-        let n = warm.load_snapshot(&path, spec.fingerprint(), &opts).unwrap();
+        let n = warm.load_snapshot(&path, spec.fingerprint(), &opts);
         assert_eq!(n, 2);
         assert!(warm.contains(&base_key));
         assert!(warm.contains(&variant_key));
@@ -890,7 +947,7 @@ mod tests {
         // instead of silently mismatching
         let changed = CompileOptions { seed: 99, ..Default::default() };
         let mut stale = KernelCache::new(8);
-        assert_eq!(stale.load_snapshot(&path, spec.fingerprint(), &changed).unwrap(), 0);
+        assert_eq!(stale.load_snapshot(&path, spec.fingerprint(), &changed), 0);
         assert!(stale.is_empty());
         let _ = std::fs::remove_file(&path);
     }

@@ -45,6 +45,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::admission::{FaultKind, FaultPlan};
 use crate::arena::{DispatchScratch, ScratchPool};
 use crate::autoscale::Autoscaler;
 use crate::fleet::Priority;
@@ -53,6 +54,68 @@ use crate::sim;
 
 use super::cache::CacheKey;
 use super::scheduler::SlotScheduler;
+
+/// Typed cause of a failed dispatch, so callers can tell shed work
+/// from crashes (and both from deadline losses) without parsing error
+/// strings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailReason {
+    /// The worker owning the dispatch died (really, or by injected
+    /// fault) and recovery could not complete it elsewhere.
+    WorkerDied,
+    /// The dispatch was batch-lane work dropped under load or at
+    /// teardown — deliberate degradation, not a crash.
+    Shed,
+    /// The dispatch's deadline passed before it could run.
+    DeadlineRejected,
+    /// The dispatch's simulator verification was corrupted and retries
+    /// were exhausted.
+    VerifyCorrupted,
+    /// The kernel itself failed to execute (unset arguments, backend
+    /// error) — retrying elsewhere would not help.
+    ExecFailed,
+}
+
+impl FailReason {
+    /// Stable tag for logs and assertions.
+    pub fn name(self) -> &'static str {
+        match self {
+            FailReason::WorkerDied => "worker_died",
+            FailReason::Shed => "shed",
+            FailReason::DeadlineRejected => "deadline_rejected",
+            FailReason::VerifyCorrupted => "verify_corrupted",
+            FailReason::ExecFailed => "exec_failed",
+        }
+    }
+}
+
+/// The error type a [`DispatchHandle`] resolves to: a [`FailReason`]
+/// plus a human-readable message. Converts into `anyhow::Error` (for
+/// the classic `wait()` path) without losing the message.
+#[derive(Debug, Clone)]
+pub struct DispatchError {
+    reason: FailReason,
+    message: String,
+}
+
+impl DispatchError {
+    pub(crate) fn new(reason: FailReason, message: String) -> DispatchError {
+        DispatchError { reason, message }
+    }
+
+    /// Why the dispatch failed.
+    pub fn reason(&self) -> FailReason {
+        self.reason
+    }
+}
+
+impl std::fmt::Display for DispatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
+impl std::error::Error for DispatchError {}
 
 /// An argument to [`crate::coordinator::Coordinator::submit`].
 #[derive(Debug, Clone)]
@@ -97,7 +160,7 @@ pub struct DispatchResult {
 }
 
 pub(crate) struct HandleInner {
-    slot: Mutex<Option<Result<DispatchResult>>>,
+    slot: Mutex<Option<std::result::Result<DispatchResult, DispatchError>>>,
     cv: Condvar,
     /// Set by the first `fulfill`; later calls (the panic guards'
     /// blanket error sweeps) are no-ops, so a delivered result is
@@ -115,7 +178,7 @@ impl HandleInner {
     }
 
     /// Deliver the result exactly once; first caller wins.
-    pub(crate) fn fulfill(&self, result: Result<DispatchResult>) {
+    pub(crate) fn fulfill(&self, result: std::result::Result<DispatchResult, DispatchError>) {
         if self
             .delivered
             .swap(true, std::sync::atomic::Ordering::SeqCst)
@@ -135,6 +198,12 @@ pub struct DispatchHandle {
 impl DispatchHandle {
     /// Block until the dispatch completes and return its result.
     pub fn wait(self) -> Result<DispatchResult> {
+        self.wait_typed().map_err(anyhow::Error::from)
+    }
+
+    /// [`DispatchHandle::wait`], but a failure keeps its typed
+    /// [`FailReason`] so callers can tell shed work from crashes.
+    pub fn wait_typed(self) -> std::result::Result<DispatchResult, DispatchError> {
         let mut slot = self.inner.slot.lock().unwrap();
         loop {
             if let Some(r) = slot.take() {
@@ -146,6 +215,13 @@ impl DispatchHandle {
 
     /// Non-blocking poll: `Some(result)` once the dispatch completed.
     pub fn try_wait(&self) -> Option<Result<DispatchResult>> {
+        self.try_wait_typed().map(|r| r.map_err(anyhow::Error::from))
+    }
+
+    /// Non-blocking poll preserving the typed [`FailReason`].
+    pub fn try_wait_typed(
+        &self,
+    ) -> Option<std::result::Result<DispatchResult, DispatchError>> {
         self.inner.slot.lock().unwrap().take()
     }
 }
@@ -174,6 +250,132 @@ pub(crate) struct Job {
     pub cache_hit: bool,
     pub enqueued: Instant,
     pub handle: Arc<HandleInner>,
+    /// Coordinator-wide dispatch sequence number — the fault plan's
+    /// deterministic strike key.
+    pub seq: u64,
+    /// Times this job has been requeued by the recovery plane.
+    pub attempts: u32,
+    /// The fault that last struck this job, if any — a completion
+    /// after a strike counts as a recovery.
+    pub last_fault: Option<FaultKind>,
+    /// Modeled bitstream-load cost of this kernel on its spec — what a
+    /// recovery re-pick charges if the sibling must reconfigure.
+    pub config_cost: f64,
+}
+
+/// The recovery half of the fault plane: shared by every worker, it
+/// re-places a struck job onto the least-loaded sibling partition of
+/// the same spec (bounded retries, short exponential backoff) and
+/// fails the handle with a typed [`DispatchError`] only when retries
+/// run out or no partition remains.
+pub(crate) struct RecoveryPlane {
+    pub(crate) faults: Option<Arc<FaultPlan>>,
+    pub(crate) max_retries: u32,
+    scheduler: Arc<Mutex<SlotScheduler>>,
+    /// Per-partition queues, registered once the coordinator has
+    /// spawned every worker (workers never requeue before serving).
+    queues: Mutex<Vec<Arc<LaneQueue<Box<Job>>>>>,
+    /// Total recovery requeues performed.
+    pub(crate) retried: AtomicU64,
+}
+
+impl RecoveryPlane {
+    pub(crate) fn new(
+        faults: Option<Arc<FaultPlan>>,
+        max_retries: u32,
+        scheduler: Arc<Mutex<SlotScheduler>>,
+    ) -> RecoveryPlane {
+        RecoveryPlane {
+            faults,
+            max_retries,
+            scheduler,
+            queues: Mutex::new(Vec::new()),
+            retried: AtomicU64::new(0),
+        }
+    }
+
+    /// Late-bind the worker queues (the plane is created before the
+    /// workers so each worker can hold a reference to it).
+    pub(crate) fn register_queues(&self, queues: Vec<Arc<LaneQueue<Box<Job>>>>) {
+        *self.queues.lock().unwrap() = queues;
+    }
+
+    pub(crate) fn retried_count(&self) -> u64 {
+        self.retried.load(Ordering::Relaxed)
+    }
+
+    fn fail_reason_for(kind: FaultKind) -> FailReason {
+        match kind {
+            FaultKind::VerifyCorrupt => FailReason::VerifyCorrupted,
+            _ => FailReason::WorkerDied,
+        }
+    }
+
+    /// Requeue a struck job onto a sibling partition. The caller must
+    /// already have released the job's scheduler accounting on the
+    /// failed partition (via `complete_with_deadline`).
+    pub(crate) fn requeue(&self, mut job: Box<Job>, kind: FaultKind, from: usize) {
+        job.attempts += 1;
+        job.last_fault = Some(kind);
+        if job.attempts > self.max_retries {
+            job.handle.fulfill(Err(DispatchError::new(
+                Self::fail_reason_for(kind),
+                format!(
+                    "dispatch on partition {from} failed {} times (last fault: {}); retries exhausted",
+                    job.attempts,
+                    kind.name()
+                ),
+            )));
+            return;
+        }
+        // Short exponential backoff: a "restarted" worker gets a beat
+        // to come back before the retry lands.
+        thread::sleep(Duration::from_micros(50u64 << job.attempts.min(4) as u64));
+        let decision = self.scheduler.lock().unwrap().requeue_sibling(
+            job.spec_fp,
+            job.key,
+            job.config_cost,
+            job.priority,
+            job.deadline_nanos,
+            from,
+        );
+        let decision = match decision {
+            Some(d) => d,
+            None => {
+                job.handle.fulfill(Err(DispatchError::new(
+                    FailReason::WorkerDied,
+                    format!(
+                        "no partition left to recover the dispatch struck by {} on partition {from}",
+                        kind.name()
+                    ),
+                )));
+                return;
+            }
+        };
+        job.partition = decision.partition;
+        job.config_seconds = decision.config_seconds;
+        self.retried.fetch_add(1, Ordering::Relaxed);
+        let queue = {
+            let queues = self.queues.lock().unwrap();
+            queues.get(decision.partition).cloned()
+        };
+        let priority = job.priority;
+        let deadline = job.deadline_nanos;
+        let pushed = match queue {
+            Some(q) => q.push(job, priority),
+            None => Err(job), // queues not registered: treat as closed
+        };
+        if let Err(job) = pushed {
+            self.scheduler.lock().unwrap().cancel(&decision, deadline);
+            job.handle.fulfill(Err(DispatchError::new(
+                FailReason::WorkerDied,
+                format!(
+                    "partition {} worker is gone; dispatch dropped during recovery",
+                    decision.partition
+                ),
+            )));
+        }
+    }
 }
 
 /// A two-lane (interactive / batch) MPSC queue with blocking drain.
@@ -443,18 +645,47 @@ pub(crate) struct Worker {
 /// Jobs already drained out of the queue are covered by
 /// [`BatchGuard`]; `fulfill` is first-wins, so the sweeps never
 /// clobber a delivered result.
+///
+/// Each drained job carries a typed [`FailReason`]: work whose
+/// deadline already passed is `DeadlineRejected`, still-viable batch
+/// work dropped at teardown is `Shed` (deliberate degradation), and
+/// still-viable interactive work is `WorkerDied` — callers can tell a
+/// crash from load shedding without parsing messages.
 struct WorkerTeardown {
     queue: Arc<LaneQueue<Box<Job>>>,
     partition: usize,
+    /// The coordinator's monotonic epoch, for evaluating deadlines.
+    start: Instant,
 }
 
 impl Drop for WorkerTeardown {
     fn drop(&mut self) {
+        let now_ns = self.start.elapsed().as_nanos() as u64;
         for job in self.queue.close_and_drain() {
-            job.handle.fulfill(Err(anyhow!(
-                "partition {} worker terminated before running this dispatch",
-                self.partition
-            )));
+            let (reason, message) = match job.deadline_nanos {
+                Some(d) if d <= now_ns => (
+                    FailReason::DeadlineRejected,
+                    format!(
+                        "partition {} worker shut down; the dispatch deadline had already passed",
+                        self.partition
+                    ),
+                ),
+                _ if job.priority == Priority::Batch => (
+                    FailReason::Shed,
+                    format!(
+                        "partition {} worker shut down; queued batch dispatch shed",
+                        self.partition
+                    ),
+                ),
+                _ => (
+                    FailReason::WorkerDied,
+                    format!(
+                        "partition {} worker terminated before running this dispatch",
+                        self.partition
+                    ),
+                ),
+            };
+            job.handle.fulfill(Err(DispatchError::new(reason, message)));
         }
     }
 }
@@ -473,9 +704,12 @@ impl Drop for BatchGuard {
             return;
         }
         for h in &self.handles {
-            h.fulfill(Err(anyhow!(
-                "partition {} worker panicked before completing this dispatch",
-                self.partition
+            h.fulfill(Err(DispatchError::new(
+                FailReason::WorkerDied,
+                format!(
+                    "partition {} worker panicked before completing this dispatch",
+                    self.partition
+                ),
             )));
         }
     }
@@ -485,19 +719,22 @@ impl Drop for BatchGuard {
 pub(crate) fn spawn_worker(
     partition: usize,
     device: Device,
+    queue: Arc<LaneQueue<Box<Job>>>,
     scheduler: Arc<Mutex<SlotScheduler>>,
     log: Arc<LogShard>,
     pool: Arc<ScratchPool>,
     verify: bool,
     fusion_window: Duration,
     autoscaler: Option<Arc<Autoscaler>>,
+    recovery: Arc<RecoveryPlane>,
+    start: Instant,
 ) -> Worker {
-    let queue = LaneQueue::new();
     let worker_queue = queue.clone();
     let join = thread::Builder::new()
         .name(format!("overlay-part{partition}"))
         .spawn(move || {
-            let _teardown = WorkerTeardown { queue: worker_queue.clone(), partition };
+            let _teardown =
+                WorkerTeardown { queue: worker_queue.clone(), partition, start };
             worker_loop(
                 partition,
                 device,
@@ -508,6 +745,7 @@ pub(crate) fn spawn_worker(
                 verify,
                 fusion_window,
                 autoscaler,
+                recovery,
             )
         })
         .expect("spawning coordinator worker thread");
@@ -525,6 +763,7 @@ fn worker_loop(
     verify: bool,
     fusion_window: Duration,
     autoscaler: Option<Arc<Autoscaler>>,
+    recovery: Arc<RecoveryPlane>,
 ) {
     while let Some(batch) = queue.drain() {
         let batch_size = batch.len();
@@ -592,6 +831,31 @@ fn worker_loop(
                     }
                 }
             }
+            // injected worker death: the worker "crashes" before the
+            // run executes. Every in-flight job is released from this
+            // partition's accounting and requeued onto the least-loaded
+            // sibling; the partition takes a quarantine strike. The
+            // thread itself then continues — modeling a supervisor
+            // restart — so the partition count stays stable.
+            if let Some(faults) = &recovery.faults {
+                let struck = run
+                    .iter()
+                    .any(|j| faults.strikes(FaultKind::WorkerKill, j.seq, 0, j.attempts));
+                if struck {
+                    faults.note_injected(FaultKind::WorkerKill);
+                    {
+                        let mut s = scheduler.lock().unwrap();
+                        s.note_partition_failure(partition);
+                        for j in &run {
+                            s.complete_with_deadline(partition, 0.0, j.deadline_nanos);
+                        }
+                    }
+                    for job in run {
+                        recovery.requeue(job, FaultKind::WorkerKill, partition);
+                    }
+                    continue;
+                }
+            }
             let mut scratch = pool.checkout();
             let results = serve_run(&device, &run, run_batch_size, verify, &mut scratch);
             pool.checkin(scratch);
@@ -599,6 +863,7 @@ fn worker_loop(
             if live >= 2 {
                 log.fused_batches.fetch_add(1, Ordering::Relaxed);
             }
+            let any_ok = results.iter().any(|r| r.is_ok());
             for (job, result) in run.into_iter().zip(results) {
                 let busy = match &result {
                     Ok(r) => r.event.modeled.seconds + r.event.config_seconds,
@@ -608,6 +873,20 @@ fn worker_loop(
                     .lock()
                     .unwrap()
                     .complete_with_deadline(partition, busy, job.deadline_nanos);
+                // injected verify corruption: the dispatch executed but
+                // its simulator verdict is untrustworthy — re-execute
+                // on a sibling instead of delivering a lie (or a
+                // spurious failure) to the caller.
+                if let Some(faults) = &recovery.faults {
+                    if result.is_ok()
+                        && faults.strikes(FaultKind::VerifyCorrupt, job.seq, 0, job.attempts)
+                    {
+                        faults.note_injected(FaultKind::VerifyCorrupt);
+                        scheduler.lock().unwrap().note_partition_failure(partition);
+                        recovery.requeue(job, FaultKind::VerifyCorrupt, partition);
+                        continue;
+                    }
+                }
                 log.total_dispatches.fetch_add(1, Ordering::Relaxed);
                 match &result {
                     Ok(r) => {
@@ -633,7 +912,18 @@ fn worker_loop(
                         r.event.modeled.seconds * 1e3,
                     );
                 }
-                job.handle.fulfill(result);
+                // a completion after a fault strike is a recovery
+                if result.is_ok() {
+                    if let (Some(faults), Some(kind)) = (&recovery.faults, job.last_fault) {
+                        faults.note_recovered(kind);
+                    }
+                }
+                job.handle.fulfill(result.map_err(|e| {
+                    DispatchError::new(FailReason::ExecFailed, format!("{e:#}"))
+                }));
+            }
+            if any_ok {
+                scheduler.lock().unwrap().note_partition_success(partition);
             }
         }
     }
@@ -925,6 +1215,46 @@ mod tests {
         let got = q.absorb_batch_front(Duration::from_millis(2_000), |&x| x == 5);
         t.join().unwrap();
         assert_eq!(got, vec![5]);
+    }
+
+    #[test]
+    fn handle_preserves_typed_fail_reason() {
+        let inner = HandleInner::new();
+        let h = DispatchHandle { inner: inner.clone() };
+        inner.fulfill(Err(DispatchError::new(FailReason::Shed, "dropped".into())));
+        // first-wins: later deliveries are ignored
+        inner.fulfill(Err(DispatchError::new(FailReason::WorkerDied, "late".into())));
+        let err = h.wait_typed().unwrap_err();
+        assert_eq!(err.reason(), FailReason::Shed);
+        assert_eq!(err.to_string(), "dropped");
+        assert_eq!(err.reason().name(), "shed");
+    }
+
+    #[test]
+    fn wait_converts_dispatch_error_to_anyhow() {
+        let inner = HandleInner::new();
+        let h = DispatchHandle { inner: inner.clone() };
+        inner.fulfill(Err(DispatchError::new(
+            FailReason::WorkerDied,
+            "partition 3 worker terminated before running this dispatch".into(),
+        )));
+        let err = h.wait().unwrap_err();
+        assert!(err.to_string().contains("partition 3"));
+    }
+
+    #[test]
+    fn try_wait_typed_polls_without_blocking() {
+        let inner = HandleInner::new();
+        let h = DispatchHandle { inner: inner.clone() };
+        assert!(h.try_wait_typed().is_none());
+        inner.fulfill(Err(DispatchError::new(
+            FailReason::DeadlineRejected,
+            "too late".into(),
+        )));
+        let err = h.try_wait_typed().expect("delivered").unwrap_err();
+        assert_eq!(err.reason(), FailReason::DeadlineRejected);
+        // the slot is a take(): a second poll sees nothing
+        assert!(h.try_wait_typed().is_none());
     }
 
     #[test]

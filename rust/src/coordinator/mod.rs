@@ -47,12 +47,19 @@ mod dispatch;
 mod scheduler;
 
 pub use cache::{CacheKey, CompileCache, KernelCache};
-pub use dispatch::{DispatchHandle, DispatchResult, SubmitArg};
+pub use dispatch::{DispatchError, DispatchHandle, DispatchResult, FailReason, SubmitArg};
 pub use scheduler::{Decision, PartitionState, SlotScheduler};
 
 /// Re-exported from [`crate::fleet`]: the QoS class of a dispatch and
 /// the routing knobs.
 pub use crate::fleet::{Priority, RoutingPolicy};
+
+/// Re-exported from [`crate::admission`]: the gate's knobs, its typed
+/// rejections, and the deterministic fault plan.
+pub use crate::admission::{
+    AdmissionConfig, AdmissionStats, FaultKind, FaultPlanConfig, FaultTally,
+    RejectReason,
+};
 
 /// Re-exported for convenience: the serving statistics live in
 /// [`crate::metrics`].
@@ -65,20 +72,46 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context as _, Result};
 
+use crate::admission::{
+    estimate_service_ms, AdmissionController, AdmitRequest, FaultPlan,
+};
 use crate::arena::{PoolStats, ScratchPool};
 use crate::autoscale::{
     ActiveVariant, AutoscalePolicy, Autoscaler, BgTask, Rescaler, ScaleEvent,
     SubmitObservation,
 };
 use crate::compiler::CompileOptions;
-use crate::fleet::{rank_specs, Fleet, RouteRecord, Router, SpecObservation};
+use crate::fleet::{
+    apply_poison_mask, rank_specs, Fleet, RouteRecord, Router, SpecObservation,
+};
 use crate::metrics::{
     achieved_gops, LatencyStats, PartitionServingStats, ServingStats, SpecServingStats,
 };
 use crate::overlay::{ConfigSizeModel, OverlaySpec};
 use crate::runtime_ocl::{Device, Kernel, Platform};
 
-use dispatch::{HandleInner, Job, ServeLog, Worker};
+use dispatch::{HandleInner, Job, LaneQueue, RecoveryPlane, ServeLog, Worker};
+
+/// How many times the recovery plane re-places a struck dispatch
+/// before failing its handle with a typed [`DispatchError`].
+const MAX_DISPATCH_RETRIES: u32 = 3;
+
+/// Tenant charged by the ungated [`Coordinator::submit`] entry points
+/// when an admission controller is configured.
+const DEFAULT_TENANT: &str = "default";
+
+/// Outcome of a gated submit ([`Coordinator::submit_gated`]): either a
+/// completion handle or a typed, non-fatal admission rejection. A
+/// rejection is part of normal overload operation — callers retry
+/// later, downshift to batch, or surface it to the tenant — so it is
+/// `Ok(Rejected)` rather than an `Err`.
+#[derive(Debug)]
+pub enum Admission {
+    /// The dispatch was admitted and queued.
+    Admitted(DispatchHandle),
+    /// The dispatch was refused before consuming fleet resources.
+    Rejected(RejectReason),
+}
 
 /// Configuration of a serving fleet.
 #[derive(Debug, Clone)]
@@ -120,6 +153,18 @@ pub struct CoordinatorConfig {
     /// exactly the pre-window behavior. Interactive work is never
     /// delayed by the window.
     pub fusion_window: Duration,
+    /// Overload-safe admission control ([`crate::admission`]):
+    /// `Some(cfg)` gates every submit behind per-tenant token buckets,
+    /// deadline triage and pressure-driven batch shedding; `None` (the
+    /// default) admits everything — exactly the pre-gate behavior.
+    pub admission: Option<AdmissionConfig>,
+    /// Deterministic fault injection ([`crate::admission::FaultPlan`]):
+    /// `Some(cfg)` arms seeded worker-kill / reconfig-fail /
+    /// verify-corrupt / compile-fail strikes so the recovery plane can
+    /// be exercised reproducibly; `None` (the default) injects
+    /// nothing. Recovery itself is always armed — real worker deaths
+    /// are requeued whether or not faults are injected.
+    pub faults: Option<FaultPlanConfig>,
 }
 
 impl CoordinatorConfig {
@@ -135,6 +180,8 @@ impl CoordinatorConfig {
             snapshot_every: None,
             autoscale: None,
             fusion_window: Duration::ZERO,
+            admission: None,
+            faults: None,
         }
     }
 
@@ -152,6 +199,8 @@ impl CoordinatorConfig {
             snapshot_every: None,
             autoscale: None,
             fusion_window: Duration::ZERO,
+            admission: None,
+            faults: None,
         }
     }
 
@@ -167,6 +216,8 @@ impl CoordinatorConfig {
             snapshot_every: None,
             autoscale: None,
             fusion_window: Duration::ZERO,
+            admission: None,
+            faults: None,
         }
     }
 }
@@ -205,6 +256,21 @@ pub struct Coordinator {
     snapshot_every: Option<u64>,
     /// Accepted submits — drives the snapshot cadence.
     submitted: AtomicU64,
+    /// The overload gate; absent when the config admits everything.
+    admission: Option<AdmissionController>,
+    /// The seeded fault plan; absent when no faults are injected.
+    faults: Option<Arc<FaultPlan>>,
+    /// The recovery half of the fault plane, shared with every worker.
+    recovery: Arc<RecoveryPlane>,
+    /// Coordinator-wide dispatch sequence — the fault plan's
+    /// deterministic strike key. Counts every gated submit, admitted
+    /// or not, so scripted strike sequences are stable under load.
+    seq: AtomicU64,
+    /// Gated submits since start — paces the p99 refresh below.
+    gate_count: AtomicU64,
+    /// Cached serving p99 (f64 bits), refreshed every few gated
+    /// submits so admission never pays a full log merge per submit.
+    p99_bits: AtomicU64,
     start: Instant,
 }
 
@@ -234,6 +300,8 @@ impl Coordinator {
             snapshot_every,
             autoscale,
             fusion_window,
+            admission,
+            faults,
         } = config;
         if devices.is_empty() {
             bail!("coordinator needs at least one overlay partition");
@@ -260,7 +328,9 @@ impl Coordinator {
         }
         let fleet = Arc::new(Fleet::new(groups, &compile_options, cache_capacity)?);
         if let Some(dir) = &snapshot_dir {
-            fleet.load_snapshot(dir)?;
+            // infallible: unusable snapshot files are logged and cost a
+            // cold start, never a failed restart
+            fleet.load_snapshot(dir);
         }
         let scheduler = Arc::new(Mutex::new(SlotScheduler::with_specs(
             devices.iter().map(|d| d.spec.fingerprint()).collect(),
@@ -276,6 +346,18 @@ impl Coordinator {
         } else {
             None
         };
+        let start = Instant::now();
+        let faults = faults.map(|cfg| Arc::new(FaultPlan::new(cfg)));
+        let recovery = Arc::new(RecoveryPlane::new(
+            faults.clone(),
+            MAX_DISPATCH_RETRIES,
+            scheduler.clone(),
+        ));
+        // queues exist before workers so the recovery plane can requeue
+        // a struck job onto any sibling partition
+        let queues: Vec<Arc<LaneQueue<Box<Job>>>> =
+            (0..devices.len()).map(|_| LaneQueue::new()).collect();
+        recovery.register_queues(queues.clone());
         let workers: Vec<Worker> = devices
             .into_iter()
             .enumerate()
@@ -283,12 +365,15 @@ impl Coordinator {
                 dispatch::spawn_worker(
                     i,
                     d,
+                    queues[i].clone(),
                     scheduler.clone(),
                     log.shard(i),
                     pool.clone(),
                     verify,
                     fusion_window,
                     autoscaler.clone(),
+                    recovery.clone(),
+                    start,
                 )
             })
             .collect();
@@ -305,7 +390,13 @@ impl Coordinator {
             bg,
             snapshot_every,
             submitted: AtomicU64::new(0),
-            start: Instant::now(),
+            admission: admission.map(AdmissionController::new),
+            faults,
+            recovery,
+            seq: AtomicU64::new(0),
+            gate_count: AtomicU64::new(0),
+            p99_bits: AtomicU64::new(0),
+            start,
         })
     }
 
@@ -353,6 +444,35 @@ impl Coordinator {
         priority: Priority,
         deadline: Option<Duration>,
     ) -> Result<DispatchHandle> {
+        match self.submit_gated(DEFAULT_TENANT, source, args, global_size, priority, deadline)? {
+            Admission::Admitted(h) => Ok(h),
+            Admission::Rejected(r) => Err(anyhow!("{}", r)),
+        }
+    }
+
+    /// [`Coordinator::submit_with_deadline`] with explicit tenant
+    /// attribution and a non-fatal rejection channel. When the config
+    /// carries an [`AdmissionConfig`], every submit is triaged before
+    /// any fleet resource is consumed — deadline feasibility first (no
+    /// token charged for work that would miss anyway), then the
+    /// tenant's token bucket, then pressure-driven batch shedding —
+    /// and refused work comes back as [`Admission::Rejected`] with a
+    /// typed [`RejectReason`]. `Err` is reserved for real failures
+    /// (unknown kernel, argument mismatch, fleet-wide compile
+    /// failure).
+    pub fn submit_gated(
+        &self,
+        tenant: &str,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Admission> {
+        // every gated submit gets a sequence number — admitted or not —
+        // so a fault plan's scripted strikes stay deterministic even
+        // when admission decisions change upstream of them
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
         let profile = self.fleet.profile(source)?;
         let deadline_nanos =
             deadline.map(|d| (self.start.elapsed() + d).as_nanos() as u64);
@@ -430,10 +550,70 @@ impl Coordinator {
             })
             .collect();
 
+        // withhold poisoned (kernel, spec) pairs from ranking — expired
+        // entries pass through once as a re-probe (see `Fleet::poison`)
+        let mask = self.fleet.poison_mask(profile.source_hash);
+        let withheld = apply_poison_mask(&mut observations, &mask);
+
         // ranking is pure — no router lock held (the lock guards only
         // the decision history appended by `commit` below)
         let (ranked, reason, copies_wanted) =
-            rank_specs(&self.routing_policy, &profile, &mut observations, global_size)?;
+            match rank_specs(&self.routing_policy, &profile, &mut observations, global_size) {
+                Ok(r) => r,
+                Err(e) if withheld > 0 => {
+                    // distinguish "fits nowhere" from "every fitting
+                    // spec is cooling off after repeated failures"
+                    return Err(anyhow!(
+                        "{e:#}; {withheld} fitting spec(s) are poisoned and awaiting re-probe"
+                    ));
+                }
+                Err(e) => return Err(e),
+            };
+
+        // the admission gate sits after ranking (it needs the best
+        // candidate's queue depth and throughput to price the dispatch)
+        // but before compilation — refused work never touches the JIT
+        if let Some(ctrl) = &self.admission {
+            let best = &observations[ranked[0]];
+            let est_service_ms = estimate_service_ms(
+                (profile.ops_per_copy * global_size) as f64,
+                best.gops,
+                best.min_queue_depth,
+                best.config_seconds,
+                best.resident,
+            );
+            let req = AdmitRequest {
+                tenant,
+                interactive: matches!(priority, Priority::Interactive),
+                now_ns: self.start.elapsed().as_nanos() as u64,
+                queue_depth: best.min_queue_depth,
+                p99_ms: self.gate_p99_ms(),
+                est_service_ms,
+                budget_ms: deadline.map(|d| d.as_secs_f64() * 1e3),
+            };
+            if let Err(reject) = ctrl.admit(&req) {
+                // rejections still feed the autoscaler's load signal:
+                // refused demand is demand the fleet failed to absorb,
+                // and re-replicating the hot kernel relieves it
+                if let Some(a) = &self.autoscaler {
+                    if let Some(fit) = profile.fits[ranked[0]] {
+                        let best = &observations[ranked[0]];
+                        a.note_reject(&SubmitObservation {
+                            kernel: &profile.name,
+                            source,
+                            source_hash: profile.source_hash,
+                            spec: &best.spec,
+                            spec_fp: best.fingerprint,
+                            demand: copies_wanted,
+                            queue_depth: best.min_queue_depth,
+                            factor: best.factor,
+                            ceiling: fit.factor,
+                        });
+                    }
+                }
+                return Ok(Admission::Rejected(reject));
+            }
+        }
 
         // cache-or-compile on the ranked shards — through the live
         // variant where one is installed; a compile failure poisons
@@ -441,7 +621,7 @@ impl Coordinator {
         let mut chosen = None;
         let mut fallback = false;
         let mut last_err: Option<anyhow::Error> = None;
-        for &si in &ranked {
+        for (pos, &si) in ranked.iter().enumerate() {
             if let Some(v) = &variants[si] {
                 let shard = &self.fleet.shards()[si];
                 let (servable, cache_hit) = match shard.get_cached(&v.key) {
@@ -457,13 +637,40 @@ impl Coordinator {
                 chosen = Some((si, (servable, cache_hit, v.key)));
                 break;
             }
-            match self.fleet.shards()[si].get_or_compile(source) {
+            let shard = &self.fleet.shards()[si];
+            // injected compile fault: only a *cold* compile can fail
+            // (a cached kernel never re-enters the JIT), and only the
+            // first-ranked spec honors scripted strikes (salt = rank)
+            if let Some(f) = &self.faults {
+                if !shard.contains(&keys[si])
+                    && f.strikes(FaultKind::CompileFail, seq, pos as u64, 0)
+                {
+                    f.note_injected(FaultKind::CompileFail);
+                    self.fleet.poison(profile.source_hash, si);
+                    fallback = true;
+                    last_err = Some(anyhow!(
+                        "injected compile fault for kernel '{}' on spec {}",
+                        profile.name,
+                        shard.spec().name()
+                    ));
+                    continue;
+                }
+            }
+            match shard.get_or_compile(source) {
                 Ok(hit) => {
+                    // a success on a previously poisoned pair is the
+                    // re-probe paying off — lift the poison and credit
+                    // the recovery
+                    if self.fleet.clear_poison(profile.source_hash, si) {
+                        if let Some(f) = &self.faults {
+                            f.note_recovered(FaultKind::CompileFail);
+                        }
+                    }
                     chosen = Some((si, hit));
                     break;
                 }
                 Err(e) => {
-                    self.fleet.mark_unfit(profile.source_hash, si);
+                    self.fleet.poison(profile.source_hash, si);
                     fallback = true;
                     last_err = Some(e);
                 }
@@ -500,13 +707,70 @@ impl Coordinator {
             shard.spec(),
             servable.bitstream.byte_size(),
         );
-        let decision = self.scheduler.lock().unwrap().pick_with_deadline(
-            shard.fingerprint(),
-            key,
-            config_cost,
-            priority,
-            deadline_nanos,
-        );
+        // place the dispatch; an injected reconfiguration failure
+        // strikes the chosen partition and re-places onto the
+        // least-loaded sibling (attempt > 0 is never struck, so the
+        // loop is bounded by the partition count)
+        let decision = {
+            let mut attempt: u32 = 0;
+            let mut struck_partition = 0;
+            loop {
+                let d = {
+                    let mut sched = self.scheduler.lock().unwrap();
+                    if attempt == 0 {
+                        sched.pick_with_deadline(
+                            shard.fingerprint(),
+                            key,
+                            config_cost,
+                            priority,
+                            deadline_nanos,
+                        )
+                    } else {
+                        // re-place away from the partition whose load
+                        // just failed (falls back to it only when it
+                        // is the spec's sole partition)
+                        match sched.requeue_sibling(
+                            shard.fingerprint(),
+                            key,
+                            config_cost,
+                            priority,
+                            deadline_nanos,
+                            struck_partition,
+                        ) {
+                            Some(d) => d,
+                            None => bail!(
+                                "no partition of spec {} left to configure",
+                                shard.spec().name()
+                            ),
+                        }
+                    }
+                };
+                let struck = d.reconfigure
+                    && self.faults.as_ref().is_some_and(|f| {
+                        f.strikes(FaultKind::ReconfigFail, seq, 0, attempt)
+                    });
+                if struck {
+                    let f = self.faults.as_ref().unwrap();
+                    f.note_injected(FaultKind::ReconfigFail);
+                    let mut sched = self.scheduler.lock().unwrap();
+                    // the load never happened: undo the pick's
+                    // accounting and charge the partition a strike so
+                    // repeat offenders quarantine
+                    sched.cancel(&d, deadline_nanos);
+                    sched.note_partition_failure(d.partition);
+                    struck_partition = d.partition;
+                    attempt += 1;
+                    continue;
+                }
+                if attempt > 0 {
+                    // the re-pick configured cleanly somewhere else
+                    if let Some(f) = &self.faults {
+                        f.note_recovered(FaultKind::ReconfigFail);
+                    }
+                }
+                break d;
+            }
+        };
 
         let handle = HandleInner::new();
         let job = Job {
@@ -523,6 +787,10 @@ impl Coordinator {
             cache_hit,
             enqueued: Instant::now(),
             handle: handle.clone(),
+            seq,
+            attempts: 0,
+            last_fault: None,
+            config_cost,
         };
         if self.workers[decision.partition]
             .queue
@@ -583,7 +851,20 @@ impl Coordinator {
                 bg.push(BgTask::Snapshot);
             }
         }
-        Ok(DispatchHandle { inner: handle })
+        Ok(Admission::Admitted(DispatchHandle { inner: handle }))
+    }
+
+    /// Serving p99 for the admission gate, refreshed every few gated
+    /// submits (a full log merge per submit would put an O(dispatches)
+    /// walk on the hot path).
+    fn gate_p99_ms(&self) -> f64 {
+        let g = self.gate_count.fetch_add(1, Ordering::Relaxed);
+        if g % 32 == 0 {
+            let p99 =
+                LatencyStats::from_samples_ms(self.log.totals().latencies_ms).p99_ms;
+            self.p99_bits.store(p99.to_bits(), Ordering::Relaxed);
+        }
+        f64::from_bits(self.p99_bits.load(Ordering::Relaxed))
     }
 
     /// Snapshot of the serving statistics. Locks are taken one at a
@@ -628,7 +909,7 @@ impl Coordinator {
             }
         }
 
-        let (partitions, reconfig_count, reconfig_seconds) = {
+        let (partitions, reconfig_count, reconfig_seconds, quarantine_events, quarantined) = {
             let sched = self.scheduler.lock().unwrap();
             let partitions: Vec<PartitionServingStats> = sched
                 .partitions()
@@ -643,8 +924,20 @@ impl Coordinator {
                     utilization: (p.busy_seconds / elapsed).min(1.0),
                 })
                 .collect();
-            (partitions, sched.reconfig_count(), sched.reconfig_seconds)
+            (
+                partitions,
+                sched.reconfig_count(),
+                sched.reconfig_seconds,
+                sched.quarantine_events(),
+                sched.quarantined_count(),
+            )
         };
+
+        let admission = self.admission.as_ref().map(|a| a.stats());
+        let rejected_submits = admission
+            .as_ref()
+            .map_or(0, |a| a.rejected_quota + a.rejected_deadline);
+        let shed_submits = admission.as_ref().map_or(0, |a| a.shed);
 
         ServingStats {
             cache,
@@ -661,6 +954,14 @@ impl Coordinator {
             compile_seconds,
             scratch_pool: self.pool.stats(),
             autoscale: self.autoscaler.as_ref().map(|a| a.stats()),
+            rejected_submits,
+            shed_submits,
+            retried_dispatches: self.recovery.retried_count(),
+            quarantine_events,
+            quarantined_partitions: quarantined,
+            admission,
+            faults: self.faults.as_ref().map(|f| f.tally()),
+            poison: self.fleet.poison_stats(),
         }
     }
 
@@ -668,6 +969,18 @@ impl Coordinator {
     /// and warm-up heap growth; see [`crate::arena::PoolStats`]).
     pub fn pool_stats(&self) -> PoolStats {
         self.pool.stats()
+    }
+
+    /// The fault plan's injected/recovered tallies; `None` when no
+    /// faults are configured.
+    pub fn fault_tally(&self) -> Option<FaultTally> {
+        self.faults.as_ref().map(|f| f.tally())
+    }
+
+    /// The admission gate's live counters; `None` when every submit
+    /// is admitted.
+    pub fn admission_stats(&self) -> Option<AdmissionStats> {
+        self.admission.as_ref().map(|a| a.stats())
     }
 
     /// The retained scale events (oldest first, bounded by
@@ -912,6 +1225,8 @@ mod tests {
             snapshot_every: None,
             autoscale: None,
             fusion_window: Duration::ZERO,
+            admission: None,
+            faults: None,
         };
         assert!(Coordinator::new(cfg).is_err());
     }

@@ -30,10 +30,28 @@
 //!
 //! All decisions are deterministic: logical-clock timestamps are
 //! unique and ties fall back to the lowest partition index.
+//!
+//! **Quarantine.** Partitions that repeatedly fail (dead workers,
+//! failed reconfigurations — real or injected by a
+//! [`crate::admission::FaultPlan`]) accumulate strikes; at
+//! [`QUARANTINE_STRIKES`] the partition is quarantined for
+//! [`QUARANTINE_PROBE_TICKS`] logical ticks, during which no dispatch
+//! is routed to it while a sibling exists. When the window expires the
+//! partition becomes probe-eligible again: one success clears its
+//! strikes, another failure re-quarantines it. Availability beats
+//! purity — if *every* matching partition is quarantined, the fleet
+//! keeps serving on all of them rather than refusing work.
 
 use crate::fleet::Priority;
 
 use super::cache::CacheKey;
+
+/// Consecutive failures before a partition is quarantined.
+pub const QUARANTINE_STRIKES: u32 = 3;
+
+/// Logical-clock ticks a quarantined partition sits out before it is
+/// re-probed with live traffic.
+pub const QUARANTINE_PROBE_TICKS: u64 = 64;
 
 /// Mutable serving state of one overlay partition.
 #[derive(Debug, Clone)]
@@ -57,6 +75,12 @@ pub struct PartitionState {
     pub reconfigs: u64,
     /// Modeled overlay-busy seconds (execution + reconfiguration).
     pub busy_seconds: f64,
+    /// Consecutive failures charged to this partition (cleared by the
+    /// first success).
+    pub strikes: u32,
+    /// Logical tick until which this partition is quarantined
+    /// (0 = never quarantined / shield lifted).
+    pub quarantined_until: u64,
 }
 
 impl PartitionState {
@@ -71,6 +95,8 @@ impl PartitionState {
             dispatches: 0,
             reconfigs: 0,
             busy_seconds: 0.0,
+            strikes: 0,
+            quarantined_until: 0,
         }
     }
 }
@@ -94,6 +120,8 @@ pub struct SlotScheduler {
     clock: u64,
     /// Total modeled seconds spent loading bitstreams.
     pub reconfig_seconds: f64,
+    /// Times any partition entered quarantine.
+    quarantine_events: u64,
 }
 
 impl SlotScheduler {
@@ -114,6 +142,7 @@ impl SlotScheduler {
             parts: fps.into_iter().map(PartitionState::new).collect(),
             clock: 0,
             reconfig_seconds: 0.0,
+            quarantine_events: 0,
         }
     }
 
@@ -173,14 +202,60 @@ impl SlotScheduler {
         priority: Priority,
         deadline_nanos: Option<u64>,
     ) -> Decision {
+        self.pick_inner(spec, key, config_seconds_if_load, priority, deadline_nanos, None)
+            .unwrap_or_else(|| {
+                panic!("no partition matches spec fingerprint {spec:#018x}")
+            })
+    }
+
+    /// Re-place a dispatch that failed on `from` (dead worker, failed
+    /// reconfiguration, corrupted verify) onto the least-loaded sibling
+    /// partition of the same spec. Falls back to `from` itself when it
+    /// is the spec's only partition — a restarted worker can still
+    /// recover the job. Returns `None` only if the spec has no
+    /// partitions at all.
+    pub fn requeue_sibling(
+        &mut self,
+        spec: u64,
+        key: CacheKey,
+        config_seconds_if_load: f64,
+        priority: Priority,
+        deadline_nanos: Option<u64>,
+        from: usize,
+    ) -> Option<Decision> {
+        self.pick_inner(spec, key, config_seconds_if_load, priority, deadline_nanos, Some(from))
+            .or_else(|| {
+                self.pick_inner(spec, key, config_seconds_if_load, priority, deadline_nanos, None)
+            })
+    }
+
+    fn pick_inner(
+        &mut self,
+        spec: u64,
+        key: CacheKey,
+        config_seconds_if_load: f64,
+        priority: Priority,
+        deadline_nanos: Option<u64>,
+        exclude: Option<usize>,
+    ) -> Option<Decision> {
         self.clock += 1;
-        let cand: Vec<usize> = (0..self.parts.len())
-            .filter(|&i| self.parts[i].spec_fingerprint == spec)
+        let all: Vec<usize> = (0..self.parts.len())
+            .filter(|&i| self.parts[i].spec_fingerprint == spec && Some(i) != exclude)
             .collect();
-        assert!(
-            !cand.is_empty(),
-            "no partition matches spec fingerprint {spec:#018x}"
-        );
+        if all.is_empty() {
+            return None;
+        }
+        // Quarantined partitions sit out while a sibling exists;
+        // availability beats purity when every candidate is struck.
+        let clock = self.clock;
+        let cand: Vec<usize> = {
+            let open: Vec<usize> = all
+                .iter()
+                .copied()
+                .filter(|&i| self.parts[i].quarantined_until <= clock)
+                .collect();
+            if open.is_empty() { all } else { open }
+        };
 
         // 1) affinity: a partition already configured with this kernel
         let resident = cand
@@ -239,7 +314,43 @@ impl SlotScheduler {
         } else {
             0.0
         };
-        Decision { partition: idx, reconfigure, config_seconds }
+        Some(Decision { partition: idx, reconfigure, config_seconds })
+    }
+
+    /// Charge one failure (dead worker, failed reconfiguration —
+    /// real or injected) to `partition`. At [`QUARANTINE_STRIKES`]
+    /// consecutive failures the partition is quarantined for
+    /// [`QUARANTINE_PROBE_TICKS`] logical ticks. Returns `true` when
+    /// this call (re-)entered quarantine.
+    pub fn note_partition_failure(&mut self, partition: usize) -> bool {
+        let clock = self.clock;
+        let p = &mut self.parts[partition];
+        p.strikes += 1;
+        if p.strikes >= QUARANTINE_STRIKES && p.quarantined_until <= clock {
+            p.quarantined_until = clock + QUARANTINE_PROBE_TICKS;
+            self.quarantine_events += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Clear `partition`'s strikes after a successful dispatch; an
+    /// expired quarantine whose probe succeeded lifts fully.
+    pub fn note_partition_success(&mut self, partition: usize) {
+        let p = &mut self.parts[partition];
+        p.strikes = 0;
+        p.quarantined_until = 0;
+    }
+
+    /// Partitions currently sitting out a quarantine window.
+    pub fn quarantined_count(&self) -> usize {
+        let clock = self.clock;
+        self.parts.iter().filter(|p| p.quarantined_until > clock).count()
+    }
+
+    /// Total times any partition entered quarantine.
+    pub fn quarantine_events(&self) -> u64 {
+        self.quarantine_events
     }
 
     /// Record completion of a dispatch on `partition`, crediting the
@@ -267,10 +378,11 @@ impl SlotScheduler {
     }
 
     /// Roll a [`SlotScheduler::pick`] back after a failed enqueue
-    /// (dead worker): the dispatch never ran, so its queue/dispatch/
-    /// reconfiguration/deadline accounting must not stick. The
-    /// `loaded` mark is left as-is — the partition is unreachable
-    /// either way.
+    /// (dead worker) or a failed reconfiguration: the dispatch never
+    /// ran, so its queue/dispatch/reconfiguration/deadline accounting
+    /// must not stick. A cancelled reconfiguration also clears the
+    /// `loaded` mark — the bitstream load did not complete, so the
+    /// partition's configuration is cold, not resident.
     pub fn cancel(&mut self, d: &Decision, deadline_nanos: Option<u64>) {
         let p = &mut self.parts[d.partition];
         p.queue_depth = p.queue_depth.saturating_sub(1);
@@ -283,6 +395,7 @@ impl SlotScheduler {
         if d.reconfigure {
             p.reconfigs = p.reconfigs.saturating_sub(1);
             self.reconfig_seconds -= d.config_seconds;
+            p.loaded = None;
         }
     }
 }
@@ -485,5 +598,92 @@ mod tests {
         let d = s.pick(0, key(3), 1e-6, Priority::Interactive);
         assert_eq!(d.partition, b.partition);
         assert!(d.reconfigure);
+    }
+
+    #[test]
+    fn repeated_failures_quarantine_and_divert_traffic() {
+        let mut s = SlotScheduler::new(2);
+        let a = pick(&mut s, 1, 1e-6); // p? ← k1 resident
+        s.complete(a.partition, 0.0);
+        for i in 0..QUARANTINE_STRIKES {
+            let entered = s.note_partition_failure(a.partition);
+            assert_eq!(entered, i + 1 == QUARANTINE_STRIKES);
+        }
+        assert_eq!(s.quarantined_count(), 1);
+        assert_eq!(s.quarantine_events(), 1);
+        // Even an affinity hit is refused while quarantined: the job
+        // pays a reconfiguration on the sibling instead.
+        let b = pick(&mut s, 1, 1e-6);
+        assert_ne!(b.partition, a.partition);
+        assert!(b.reconfigure);
+        s.complete(b.partition, 0.0);
+    }
+
+    #[test]
+    fn expired_quarantine_is_probed_and_success_clears_it() {
+        let mut s = SlotScheduler::new(2);
+        let a = pick(&mut s, 1, 1e-6);
+        s.complete(a.partition, 0.0);
+        for _ in 0..QUARANTINE_STRIKES {
+            s.note_partition_failure(a.partition);
+        }
+        // Sit out the window on the sibling.
+        for _ in 0..=QUARANTINE_PROBE_TICKS {
+            let d = pick(&mut s, 2, 1e-6);
+            assert_ne!(d.partition, a.partition, "no traffic while quarantined");
+            s.complete(d.partition, 0.0);
+        }
+        // Window expired: the partition is probe-eligible again and the
+        // old affinity wins.
+        let probe = pick(&mut s, 1, 1e-6);
+        assert_eq!(probe.partition, a.partition);
+        s.complete(probe.partition, 0.0);
+        s.note_partition_success(probe.partition);
+        assert_eq!(s.quarantined_count(), 0);
+        assert_eq!(s.partitions()[a.partition].strikes, 0);
+    }
+
+    #[test]
+    fn fully_quarantined_spec_still_serves() {
+        let mut s = SlotScheduler::new(1);
+        for _ in 0..QUARANTINE_STRIKES {
+            s.note_partition_failure(0);
+        }
+        assert_eq!(s.quarantined_count(), 1);
+        // Availability beats purity: the only partition keeps serving.
+        let d = pick(&mut s, 1, 1e-6);
+        assert_eq!(d.partition, 0);
+        s.complete(d.partition, 0.0);
+    }
+
+    #[test]
+    fn requeue_lands_on_least_loaded_sibling() {
+        let mut s = SlotScheduler::new(3);
+        let a = pick(&mut s, 1, 1e-6); // the partition that "failed"
+        let b = pick(&mut s, 2, 1e-6); // a busy sibling
+        let _ = b;
+        let r = s
+            .requeue_sibling(0, key(1), 1e-6, Priority::Interactive, None, a.partition)
+            .expect("siblings exist");
+        assert_ne!(r.partition, a.partition);
+        // the idle cold sibling wins over the busy one
+        assert_eq!(s.partitions()[r.partition].queue_depth, 1);
+        assert!(r.reconfigure);
+    }
+
+    #[test]
+    fn requeue_falls_back_to_the_sole_partition() {
+        let mut s = SlotScheduler::new(1);
+        let a = pick(&mut s, 1, 1e-6);
+        s.complete(a.partition, 0.0);
+        let r = s
+            .requeue_sibling(0, key(1), 1e-6, Priority::Interactive, None, 0)
+            .expect("sole partition still usable");
+        assert_eq!(r.partition, 0);
+        assert!(!r.reconfigure, "bitstream still resident");
+        // an unknown spec genuinely has nowhere to go
+        assert!(s
+            .requeue_sibling(0xDEAD, key(1), 1e-6, Priority::Interactive, None, 0)
+            .is_none());
     }
 }

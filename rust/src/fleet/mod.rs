@@ -28,8 +28,8 @@ mod shard;
 
 pub use policy::{Priority, RoutingPolicy};
 pub use router::{
-    rank_specs, KernelProfile, PlanSummary, RouteReason, RouteRecord, Router,
-    SpecObservation, SpecRouteStats,
+    apply_poison_mask, rank_specs, KernelProfile, PlanSummary, RouteReason,
+    RouteRecord, Router, SpecObservation, SpecRouteStats,
 };
 pub use shard::CompileShard;
 
@@ -49,12 +49,51 @@ use crate::overlay::OverlaySpec;
 /// however many distinct sources a long-running fleet sees.
 const MAX_PROFILES: usize = 4096;
 
+/// Poison TTL, in poison-clock ticks (one tick per profiled submit),
+/// after the first compile failure of a `(kernel, spec)` pair.
+pub const POISON_BASE_TTL: u64 = 8;
+
+/// Ceiling on the exponentially backed-off poison TTL.
+pub const POISON_MAX_TTL: u64 = 1024;
+
+/// One poisoned `(kernel, shard)` pair: a compile failure quarantines
+/// the pair for a TTL that doubles with each repeated failure, instead
+/// of forever — a transient failure is not a life sentence.
+#[derive(Debug, Clone, Copy)]
+struct PoisonEntry {
+    /// Compile failures observed for this pair.
+    strikes: u32,
+    /// Poison-clock tick at which the pair becomes probe-eligible.
+    until: u64,
+    /// Whether the expired entry has already been offered for re-probe
+    /// (counted once per expiry).
+    probing: bool,
+}
+
+/// Counters for the poison/decay/re-probe lifecycle.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoisonStats {
+    /// Pairs currently inside their poison TTL.
+    pub active: u64,
+    /// Expired entries offered back to the router for a re-probe.
+    pub probes: u64,
+    /// Entries cleared by a successful re-probe compile.
+    pub recoveries: u64,
+}
+
 /// A heterogeneous set of per-spec compilation shards.
 pub struct Fleet {
     shards: Vec<CompileShard>,
     /// Kernel source hash → per-spec plans (aligned with `shards`),
     /// bounded by [`MAX_PROFILES`].
     profiles: Mutex<HashMap<u64, KernelProfile>>,
+    /// `(source hash, shard index)` pairs whose JIT compile failed,
+    /// with decaying TTLs.
+    poisoned: Mutex<HashMap<(u64, usize), PoisonEntry>>,
+    /// Advances once per [`Fleet::profile`] call — the decay clock.
+    poison_clock: std::sync::atomic::AtomicU64,
+    poison_probes: std::sync::atomic::AtomicU64,
+    poison_recoveries: std::sync::atomic::AtomicU64,
 }
 
 impl std::fmt::Debug for Fleet {
@@ -94,7 +133,14 @@ impl Fleet {
                 partitions,
             ));
         }
-        Ok(Fleet { shards, profiles: Mutex::new(HashMap::new()) })
+        Ok(Fleet {
+            shards,
+            profiles: Mutex::new(HashMap::new()),
+            poisoned: Mutex::new(HashMap::new()),
+            poison_clock: std::sync::atomic::AtomicU64::new(0),
+            poison_probes: std::sync::atomic::AtomicU64::new(0),
+            poison_recoveries: std::sync::atomic::AtomicU64::new(0),
+        })
     }
 
     pub fn shards(&self) -> &[CompileShard] {
@@ -111,6 +157,8 @@ impl Fleet {
     /// the stable source hash. Errors only when the kernel fits no
     /// spec in the fleet.
     pub fn profile(&self, source: &str) -> Result<KernelProfile> {
+        use std::sync::atomic::Ordering;
+        self.poison_clock.fetch_add(1, Ordering::Relaxed);
         let hash = stable_source_hash(source);
         if let Some(p) = self.profiles.lock().unwrap().get(&hash) {
             return Ok(p.clone());
@@ -157,17 +205,80 @@ impl Fleet {
         Ok(p)
     }
 
-    /// Mark a (kernel, shard) pair unfit after a compile failure so
-    /// the router stops offering that spec for this kernel. The
-    /// compiler is a pure function of (source, spec, options), so one
-    /// failure predicts all retries; a no-op when the profile was not
-    /// retained (the bounded cache was full), in which case the
-    /// router's compile-fallback ranking still serves the kernel.
-    pub fn mark_unfit(&self, source_hash: u64, shard_index: usize) {
-        if let Some(p) = self.profiles.lock().unwrap().get_mut(&source_hash) {
-            if shard_index < p.fits.len() {
-                p.fits[shard_index] = None;
+    /// Poison a `(kernel, shard)` pair after a compile failure so the
+    /// router stops offering that spec for this kernel — but only for
+    /// a decaying TTL, not forever. The first failure quarantines the
+    /// pair for [`POISON_BASE_TTL`] poison-clock ticks; each repeated
+    /// failure doubles the TTL (capped at [`POISON_MAX_TTL`]). When the
+    /// TTL expires the pair is offered back to the router exactly once
+    /// per expiry (a *re-probe*); a successful compile then clears the
+    /// entry via [`Fleet::clear_poison`], a failed one re-poisons it
+    /// with a longer TTL. Transient environment failures (and the
+    /// injected ones from [`crate::admission::FaultPlan`]) therefore
+    /// heal instead of permanently shrinking the kernel's fleet.
+    pub fn poison(&self, source_hash: u64, shard_index: usize) {
+        use std::sync::atomic::Ordering;
+        let clock = self.poison_clock.load(Ordering::Relaxed);
+        let mut map = self.poisoned.lock().unwrap();
+        let e = map
+            .entry((source_hash, shard_index))
+            .or_insert(PoisonEntry { strikes: 0, until: 0, probing: false });
+        e.strikes += 1;
+        let ttl = POISON_BASE_TTL
+            .saturating_mul(1u64 << (e.strikes - 1).min(62))
+            .min(POISON_MAX_TTL);
+        e.until = clock + ttl;
+        e.probing = false;
+    }
+
+    /// Clear a pair's poison after a successful compile; counts a
+    /// recovery when the pair was actually poisoned and tells the
+    /// caller (true) so fault tallies can credit the re-probe.
+    pub fn clear_poison(&self, source_hash: u64, shard_index: usize) -> bool {
+        use std::sync::atomic::Ordering;
+        if self.poisoned.lock().unwrap().remove(&(source_hash, shard_index)).is_some() {
+            self.poison_recoveries.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Per-shard poison mask for a kernel: `true` means "do not offer
+    /// this spec right now". Expired entries return `false` (the
+    /// re-probe) and are counted once per expiry.
+    pub fn poison_mask(&self, source_hash: u64) -> Vec<bool> {
+        use std::sync::atomic::Ordering;
+        let clock = self.poison_clock.load(Ordering::Relaxed);
+        let mut mask = vec![false; self.shards.len()];
+        let mut map = self.poisoned.lock().unwrap();
+        for (i, m) in mask.iter_mut().enumerate() {
+            if let Some(e) = map.get_mut(&(source_hash, i)) {
+                if clock < e.until {
+                    *m = true;
+                } else if !e.probing {
+                    e.probing = true;
+                    self.poison_probes.fetch_add(1, Ordering::Relaxed);
+                }
             }
+        }
+        mask
+    }
+
+    /// Snapshot the poison lifecycle counters.
+    pub fn poison_stats(&self) -> PoisonStats {
+        use std::sync::atomic::Ordering;
+        let clock = self.poison_clock.load(Ordering::Relaxed);
+        let active = self
+            .poisoned
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|e| clock < e.until)
+            .count() as u64;
+        PoisonStats {
+            active,
+            probes: self.poison_probes.load(Ordering::Relaxed),
+            recoveries: self.poison_recoveries.load(Ordering::Relaxed),
         }
     }
 
@@ -190,17 +301,19 @@ impl Fleet {
     }
 
     /// Warm-start every shard whose snapshot file exists under `dir`.
-    /// Missing files are fine (new spec in an existing deployment);
-    /// malformed files are errors. Returns total entries loaded.
-    pub fn load_snapshot(&self, dir: &Path) -> Result<usize> {
+    /// Missing files are fine (new spec in an existing deployment),
+    /// and truncated or corrupt files are logged and cost only a cold
+    /// start for that shard — a damaged snapshot must never abort a
+    /// coordinator restart. Returns total entries loaded.
+    pub fn load_snapshot(&self, dir: &Path) -> usize {
         let mut total = 0;
         for shard in &self.shards {
             let path = self.snapshot_path(dir, shard);
             if path.exists() {
-                total += shard.load_snapshot(&path)?;
+                total += shard.load_snapshot(&path);
             }
         }
-        Ok(total)
+        total
     }
 }
 
@@ -261,13 +374,64 @@ mod tests {
     }
 
     #[test]
-    fn mark_unfit_removes_a_spec_from_the_profile() {
+    fn poison_masks_a_spec_without_destroying_the_profile() {
         let fleet = mixed_fleet();
         let p = fleet.profile(CHEBYSHEV).unwrap();
-        fleet.mark_unfit(p.source_hash, 1);
+        fleet.poison(p.source_hash, 1);
+        // the mask hides the poisoned shard; the profile keeps its plan
+        let mask = fleet.poison_mask(p.source_hash);
+        assert_eq!(mask, vec![false, true]);
         let q = fleet.profile(CHEBYSHEV).unwrap();
-        assert!(q.fits[0].is_some());
-        assert!(q.fits[1].is_none());
+        assert!(q.fits[1].is_some(), "the plan survives for the re-probe");
+        assert_eq!(fleet.poison_stats().active, 1);
+    }
+
+    #[test]
+    fn poison_decays_into_a_reprobe_and_clears_on_success() {
+        let fleet = mixed_fleet();
+        let p = fleet.profile(CHEBYSHEV).unwrap();
+        fleet.poison(p.source_hash, 0);
+        assert_eq!(fleet.poison_mask(p.source_hash), vec![true, false]);
+        // each profile() call ticks the decay clock
+        for _ in 0..POISON_BASE_TTL {
+            let _ = fleet.profile(CHEBYSHEV).unwrap();
+        }
+        // TTL expired: the shard is offered again, counted as a probe
+        assert_eq!(fleet.poison_mask(p.source_hash), vec![false, false]);
+        let stats = fleet.poison_stats();
+        assert_eq!(stats.active, 0);
+        assert_eq!(stats.probes, 1);
+        // the probe is counted once per expiry, not per mask query
+        let _ = fleet.poison_mask(p.source_hash);
+        assert_eq!(fleet.poison_stats().probes, 1);
+        // a successful re-probe compile clears the entry
+        assert!(fleet.clear_poison(p.source_hash, 0));
+        assert_eq!(fleet.poison_stats().recoveries, 1);
+        // clearing an unpoisoned pair is not a recovery
+        assert!(!fleet.clear_poison(p.source_hash, 0));
+        assert_eq!(fleet.poison_stats().recoveries, 1);
+    }
+
+    #[test]
+    fn repeated_poison_backs_off_exponentially() {
+        let fleet = mixed_fleet();
+        let p = fleet.profile(CHEBYSHEV).unwrap();
+        fleet.poison(p.source_hash, 0);
+        for _ in 0..POISON_BASE_TTL {
+            let _ = fleet.profile(CHEBYSHEV).unwrap();
+        }
+        assert_eq!(fleet.poison_mask(p.source_hash), vec![false, false]);
+        // the re-probe fails: TTL doubles, so the base TTL no longer
+        // clears it
+        fleet.poison(p.source_hash, 0);
+        for _ in 0..POISON_BASE_TTL {
+            let _ = fleet.profile(CHEBYSHEV).unwrap();
+        }
+        assert_eq!(fleet.poison_mask(p.source_hash), vec![true, false]);
+        for _ in 0..POISON_BASE_TTL {
+            let _ = fleet.profile(CHEBYSHEV).unwrap();
+        }
+        assert_eq!(fleet.poison_mask(p.source_hash), vec![false, false]);
     }
 
     #[test]
@@ -304,7 +468,7 @@ mod tests {
         assert_eq!(written, 2);
 
         let warm = mixed_fleet();
-        let loaded = warm.load_snapshot(&dir).unwrap();
+        let loaded = warm.load_snapshot(&dir);
         assert_eq!(loaded, 2);
         // both shards now serve from cache without compiling
         let (_, hit_big, _) = warm.shards()[0].get_or_compile(CHEBYSHEV).unwrap();

@@ -45,8 +45,10 @@ pub struct PlanSummary {
 
 /// What the fleet knows about one kernel: its name and, per shard
 /// (fleet order), whether it fits and with what replication plan.
-/// `None` marks a spec the kernel does not fit (or whose compile
-/// failed — see [`crate::fleet::Fleet::mark_unfit`]).
+/// `None` marks a spec the kernel does not fit. Compile failures do
+/// *not* edit the profile; they poison the `(kernel, spec)` pair with
+/// a decaying TTL instead (see [`crate::fleet::Fleet::poison`]) and
+/// are withheld at ranking time via [`apply_poison_mask`].
 #[derive(Debug, Clone)]
 pub struct KernelProfile {
     pub name: String,
@@ -177,6 +179,24 @@ fn f64_cmp(a: f64, b: f64) -> Ordering {
 /// Copies a dispatch of `global_size` items wants under `policy`.
 pub fn copies_wanted(policy: &RoutingPolicy, global_size: usize) -> usize {
     global_size.div_ceil(policy.target_chunk.max(1)).max(1)
+}
+
+/// Withhold poisoned `(kernel, spec)` pairs from ranking: any spec the
+/// fleet's [`poison mask`](crate::fleet::Fleet::poison_mask) marks is
+/// treated as unfit for this dispatch only — the profile itself is
+/// untouched, so the spec comes back automatically when the TTL
+/// expires. Returns how many otherwise-fitting specs were withheld,
+/// letting the caller tell "kernel does not fit the fleet" apart from
+/// "every fitting spec is temporarily poisoned".
+pub fn apply_poison_mask(obs: &mut [SpecObservation], mask: &[bool]) -> usize {
+    let mut withheld = 0;
+    for (o, &masked) in obs.iter_mut().zip(mask) {
+        if masked && o.fits {
+            o.fits = false;
+            withheld += 1;
+        }
+    }
+    withheld
 }
 
 /// Rank the specs for one dispatch — the pure decision function, free
@@ -447,6 +467,23 @@ mod tests {
         let (ranked, reason, _) = router().rank(&p, &mut obs, 64).unwrap();
         assert_eq!(reason, RouteReason::OnlyFit);
         assert_eq!(ranked, vec![0]);
+    }
+
+    #[test]
+    fn poison_mask_withholds_fitting_specs_without_editing_the_profile() {
+        let p = profile(vec![Some(ps(16, 33.6)), Some(ps(5, 10.5))]);
+        let mut obs = two_specs();
+        let withheld = apply_poison_mask(&mut obs, &[false, true]);
+        assert_eq!(withheld, 1);
+        assert!(obs[0].fits && !obs[1].fits);
+        // ranking proceeds on the surviving spec
+        let (ranked, reason, _) = router().rank(&p, &mut obs, 64).unwrap();
+        assert_eq!(reason, RouteReason::OnlyFit);
+        assert_eq!(ranked, vec![0]);
+        // masking an already-unfit spec counts nothing
+        let mut obs2 = two_specs();
+        obs2[1].fits = false;
+        assert_eq!(apply_poison_mask(&mut obs2, &[false, true]), 0);
     }
 
     #[test]

@@ -194,6 +194,13 @@ impl CompileShard {
         None
     }
 
+    /// Residency check that does NOT touch hit/miss counters or LRU
+    /// order — for peeking (e.g. fault-injection gates) where a probe
+    /// must not skew cache statistics.
+    pub fn contains(&self, key: &CacheKey) -> bool {
+        self.cache.lock().unwrap().contains(key)
+    }
+
     /// Re-admit an already-compiled kernel (an autoscaler variant the
     /// LRU evicted) without paying a compile.
     pub fn admit(&self, key: CacheKey, servable: Arc<ServableKernel>) {
@@ -220,8 +227,10 @@ impl CompileShard {
     }
 
     /// Warm-start this shard's cache from a snapshot; entries for
-    /// other specs or options are skipped. Returns entries loaded.
-    pub fn load_snapshot(&self, path: &Path) -> Result<usize> {
+    /// other specs or options are skipped, and a truncated or corrupt
+    /// file is logged and ignored (cold start) rather than propagated
+    /// — see [`KernelCache::load_snapshot`]. Returns entries loaded.
+    pub fn load_snapshot(&self, path: &Path) -> usize {
         self.cache
             .lock()
             .unwrap()

@@ -72,6 +72,12 @@
 //!   while serving — variants are cache-keyed per factor, swaps are
 //!   atomic, and every decision lands in a bounded `ScaleEvent` audit
 //!   log.
+//! * [`admission`] — overload-safe admission control: per-tenant token
+//!   buckets on submit, a pressure-stall signal from queue depth + p99,
+//!   deadline-based early rejection with typed reject reasons, batch-
+//!   first load shedding, and a deterministic seeded fault-injection
+//!   plan (worker kills, reconfiguration failures, verify corruption,
+//!   transient compile failures) the dispatch plane must recover from.
 //! * [`bench_kernels`] — the paper's six benchmark kernels as OpenCL-C
 //!   sources with their Table III metadata.
 //! * [`metrics`] — the GOPS / resource / configuration-time models behind
@@ -83,6 +89,7 @@
 //! [`runtime`] module loads through the PJRT C API. Nothing on the
 //! request path touches Python.
 
+pub mod admission;
 pub mod arena;
 pub mod autoscale;
 pub mod bench_kernels;
@@ -109,6 +116,10 @@ pub mod util;
 
 /// Convenient re-exports for the common compile-and-run flow.
 pub mod prelude {
+    pub use crate::admission::{
+        AdmissionConfig, AdmissionStats, FaultKind, FaultPlanConfig, FaultTally,
+        RejectReason,
+    };
     pub use crate::arena::{DispatchScratch, PoolStats, ScratchPool, StreamArena};
     pub use crate::autoscale::{AutoscalePolicy, ScaleDirection, ScaleEvent};
     pub use crate::compiler::{
@@ -116,8 +127,8 @@ pub mod prelude {
         Replication,
     };
     pub use crate::coordinator::{
-        Coordinator, CoordinatorConfig, DispatchHandle, DispatchResult, Priority,
-        RoutingPolicy, SubmitArg,
+        Admission, Coordinator, CoordinatorConfig, DispatchError, DispatchHandle,
+        DispatchResult, FailReason, Priority, RoutingPolicy, SubmitArg,
     };
     pub use crate::fleet::RouteReason;
     pub use crate::overlay::{FuType, OverlaySpec};

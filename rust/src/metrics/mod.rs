@@ -266,6 +266,9 @@ pub struct AutoscaleStats {
     pub tracked_kernels: usize,
     /// Scale events beyond the bounded audit log.
     pub events_dropped: u64,
+    /// Admission rejections fed back into load signals (refused demand
+    /// still pushes scale-ups).
+    pub admission_rejects: u64,
 }
 
 impl AutoscaleStats {
@@ -312,6 +315,27 @@ pub struct ServingStats {
     /// Run-time rescale counters; `None` when the coordinator runs
     /// with frozen replication plans (no autoscaler configured).
     pub autoscale: Option<AutoscaleStats>,
+    /// Submits refused by the admission gate (quota + unmeetable
+    /// deadline). Zero when no gate is configured.
+    pub rejected_submits: u64,
+    /// Batch submits shed under pressure to protect interactive p99.
+    pub shed_submits: u64,
+    /// Dispatches the recovery plane re-placed onto a sibling
+    /// partition after a worker death, failed reconfiguration or
+    /// corrupted verify.
+    pub retried_dispatches: u64,
+    /// Times any partition entered quarantine after repeated failures.
+    pub quarantine_events: u64,
+    /// Partitions currently sitting out in quarantine.
+    pub quarantined_partitions: usize,
+    /// The admission gate's live counters; `None` when every submit is
+    /// admitted ungated.
+    pub admission: Option<crate::admission::AdmissionStats>,
+    /// Injected-fault tallies; `None` when no fault plan is armed.
+    pub faults: Option<crate::admission::FaultTally>,
+    /// Poisoned (kernel, spec) pairs: currently withheld, re-probes
+    /// offered, recoveries (probe compiled clean).
+    pub poison: crate::fleet::PoisonStats,
 }
 
 impl ServingStats {
@@ -344,6 +368,44 @@ impl ServingStats {
             self.scratch_pool.pooled,
             self.scratch_pool.grow_events,
         ));
+        if let Some(a) = &self.admission {
+            out.push_str(&format!(
+                "admission  : {} admitted, {} rejected ({} quota / {} deadline), \
+                 {} shed, pressure {:.2}, {} tenants\n",
+                a.admitted,
+                self.rejected_submits,
+                a.rejected_quota,
+                a.rejected_deadline,
+                self.shed_submits,
+                a.pressure,
+                a.tenants,
+            ));
+        }
+        if self.retried_dispatches > 0
+            || self.quarantine_events > 0
+            || self.faults.is_some()
+        {
+            out.push_str(&format!(
+                "recovery   : {} retried dispatches, {} quarantine events \
+                 ({} partitions out now)\n",
+                self.retried_dispatches,
+                self.quarantine_events,
+                self.quarantined_partitions,
+            ));
+        }
+        if let Some(f) = &self.faults {
+            out.push_str(&format!(
+                "faults     : {} injected / {} recovered\n",
+                f.total_injected(),
+                f.total_recovered(),
+            ));
+        }
+        if self.poison.active > 0 || self.poison.probes > 0 || self.poison.recoveries > 0 {
+            out.push_str(&format!(
+                "poison     : {} active pairs, {} re-probes, {} recoveries\n",
+                self.poison.active, self.poison.probes, self.poison.recoveries,
+            ));
+        }
         if let Some(a) = &self.autoscale {
             out.push_str(&format!(
                 "autoscale  : {} up / {} down ({} failed), {} rescale cache hits, \
@@ -537,6 +599,21 @@ mod tests {
                 rescale_cache_hits: 1,
                 ..Default::default()
             }),
+            rejected_submits: 3,
+            shed_submits: 2,
+            retried_dispatches: 1,
+            quarantine_events: 1,
+            quarantined_partitions: 0,
+            admission: Some(crate::admission::AdmissionStats {
+                admitted: 10,
+                rejected_quota: 2,
+                rejected_deadline: 1,
+                shed: 2,
+                pressure: 0.42,
+                tenants: 4,
+            }),
+            faults: None,
+            poison: crate::fleet::PoisonStats { active: 1, probes: 2, recoveries: 1 },
         };
         assert!((s.cache.hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
@@ -548,6 +625,10 @@ mod tests {
         assert!(r.contains("1 fused batches"), "{r}");
         assert!(r.contains("4 checkouts over 1 scratches"), "{r}");
         assert!(r.contains("1 up / 2 down"), "{r}");
+        assert!(r.contains("3 rejected (2 quota / 1 deadline)"), "{r}");
+        assert!(r.contains("2 shed"), "{r}");
+        assert!(r.contains("1 retried dispatches, 1 quarantine events"), "{r}");
+        assert!(r.contains("1 active pairs, 2 re-probes, 1 recoveries"), "{r}");
         assert_eq!(s.autoscale.unwrap().applied(), 3);
     }
 

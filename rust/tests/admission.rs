@@ -1,0 +1,314 @@
+//! Admission-control and fault-recovery integration tests: the
+//! overload gate and the seeded fault plane observed through the
+//! public serving API.
+//!
+//! Covers the robustness promises end to end:
+//! * **fairness** — a tenant bursting at 10x its quota exhausts only
+//!   its own token bucket; compliant tenants' reject rate stays at
+//!   exactly zero while fleet capacity remains;
+//! * **typed rejection** — a deadline that cannot be met is refused
+//!   *before* any compile or scheduling work is spent, and batch-lane
+//!   shedding under pressure never touches interactive work;
+//! * **fault matrix** — every [`FaultKind`] is injected from a
+//!   scripted, seeded plan and the struck dispatch deterministically
+//!   recovers (completes on a sibling partition, or heals the
+//!   poisoned `(kernel, spec)` pair through a TTL re-probe).
+
+use std::time::Duration;
+
+use overlay_jit::admission::ALL_FAULT_KINDS;
+use overlay_jit::bench_kernels::BENCHMARKS;
+use overlay_jit::coordinator::{Admission, Coordinator, CoordinatorConfig, SubmitArg};
+use overlay_jit::overlay::{FuType, OverlaySpec};
+use overlay_jit::prelude::*;
+use overlay_jit::runtime_ocl::{Context, Device};
+use overlay_jit::util::XorShiftRng;
+
+fn host_ctx() -> Context {
+    let dev = Device {
+        spec: OverlaySpec::zynq_default(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    Context::new(&dev)
+}
+
+/// Random input buffers (with stencil slack) for a benchmark's params.
+fn random_args(ctx: &Context, nparams: usize, n: usize, rng: &mut XorShiftRng) -> Vec<SubmitArg> {
+    (0..nparams)
+        .map(|_| {
+            let buf = ctx.create_buffer(n + 16);
+            let data: Vec<i32> = (0..n + 16).map(|_| rng.gen_i64(-30, 30) as i32).collect();
+            buf.write(&data);
+            SubmitArg::Buffer(buf)
+        })
+        .collect()
+}
+
+fn param_count(source: &str) -> usize {
+    overlay_jit::frontend::parse_kernel(source).unwrap().params.len()
+}
+
+/// A near-zero refill rate: buckets are effectively their burst
+/// capacity for the duration of any test run, so quota outcomes do
+/// not depend on wall-clock speed.
+fn frozen_quota(burst: f64) -> AdmissionConfig {
+    AdmissionConfig {
+        tenant_rate_per_sec: 0.001,
+        tenant_burst: burst,
+        // a stall depth no test queue reaches: pressure stays zero, so
+        // quota is the only admission dimension in play
+        queue_stall_depth: 1_000_000,
+        ..AdmissionConfig::default()
+    }
+}
+
+#[test]
+fn bursting_tenant_cannot_raise_compliant_reject_rate() {
+    let spec = OverlaySpec::zynq_default();
+    let mut cfg = CoordinatorConfig::sim_fleet(spec, 2);
+    cfg.admission = Some(frozen_quota(8.0));
+    let coord = Coordinator::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0xFA1);
+
+    const ITEMS: usize = 64;
+    let b = &BENCHMARKS[0];
+    let nparams = param_count(b.source);
+
+    // the spammer fires 10x its burst; compliant tenants stay at their
+    // burst allowance. Interleaved so the spam brackets every
+    // compliant submit.
+    let mut spammer_rejects = 0u64;
+    let mut compliant_rejects = 0u64;
+    let mut handles = Vec::new();
+    for round in 0..8 {
+        for _ in 0..10 {
+            let args = random_args(&ctx, nparams, ITEMS, &mut rng);
+            match coord
+                .submit_gated("spammer", b.source, &args, ITEMS, Priority::Interactive, None)
+                .unwrap()
+            {
+                Admission::Admitted(h) => handles.push(h),
+                Admission::Rejected(r) => {
+                    assert_eq!(r.kind(), "quota", "only quota can reject here: {r}");
+                    spammer_rejects += 1;
+                }
+            }
+        }
+        for tenant in ["alice", "bob", "carol"] {
+            let args = random_args(&ctx, nparams, ITEMS, &mut rng);
+            match coord
+                .submit_gated(tenant, b.source, &args, ITEMS, Priority::Interactive, None)
+                .unwrap()
+            {
+                Admission::Admitted(h) => handles.push(h),
+                Admission::Rejected(r) => {
+                    compliant_rejects += 1;
+                    panic!("compliant tenant {tenant} rejected in round {round}: {r}");
+                }
+            }
+        }
+    }
+
+    // capacity remained: every admitted dispatch completes verified
+    for h in handles {
+        let r = h.wait().unwrap();
+        assert_eq!(r.verified, Some(true));
+    }
+    assert_eq!(compliant_rejects, 0);
+    // burst 8, refill frozen: at least 80 - 8 - 1 spam rejects
+    assert!(spammer_rejects >= 71, "expected >= 71 spam rejects, got {spammer_rejects}");
+    let adm = coord.admission_stats().unwrap();
+    assert_eq!(adm.rejected_quota, spammer_rejects);
+    assert_eq!(adm.rejected_deadline, 0);
+    assert_eq!(adm.shed, 0);
+    // 3 compliant + 1 spammer bucket
+    assert_eq!(adm.tenants, 4);
+}
+
+#[test]
+fn doomed_deadline_is_rejected_before_any_compile() {
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.admission = Some(frozen_quota(64.0));
+    let coord = Coordinator::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0xD00);
+
+    let b = &BENCHMARKS[0];
+    let args = random_args(&ctx, param_count(b.source), 64, &mut rng);
+    let outcome = coord
+        .submit_gated("t", b.source, &args, 64, Priority::Interactive, Some(Duration::from_nanos(1)))
+        .unwrap();
+    match outcome {
+        Admission::Rejected(RejectReason::DeadlineUnmeetable { needed_ms, budget_ms }) => {
+            assert!(needed_ms > budget_ms);
+        }
+        other => panic!("expected a typed deadline rejection, got {other:?}"),
+    }
+    let stats = coord.stats();
+    // refused before compilation: the kernel cache was never touched
+    assert_eq!(stats.cache.misses, 0);
+    assert_eq!(stats.cache.hits, 0);
+    let adm = stats.admission.unwrap();
+    assert_eq!(adm.rejected_deadline, 1);
+    assert_eq!(adm.admitted, 0);
+    // the doomed submit consumed no quota token
+    let args = random_args(&ctx, param_count(b.source), 64, &mut rng);
+    match coord.submit_gated("t", b.source, &args, 64, Priority::Interactive, None).unwrap() {
+        Admission::Admitted(h) => assert_eq!(h.wait().unwrap().verified, Some(true)),
+        Admission::Rejected(r) => panic!("clean submit rejected: {r}"),
+    }
+}
+
+#[test]
+fn pressure_sheds_batch_but_never_interactive() {
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2);
+    cfg.admission = Some(AdmissionConfig {
+        tenant_rate_per_sec: 0.001,
+        tenant_burst: 64.0,
+        // stall depth 0: every observed queue counts as stalled, so
+        // pressure sits at 1.0 from the first gauge sample — shedding
+        // is deterministic without racing real queue depths
+        queue_stall_depth: 0,
+        shed_pressure: 0.5,
+        ..AdmissionConfig::default()
+    });
+    let coord = Coordinator::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x5ED);
+
+    let b = &BENCHMARKS[0];
+    let nparams = param_count(b.source);
+    let mut shed = 0u64;
+    let mut handles = Vec::new();
+    for _ in 0..6 {
+        let args = random_args(&ctx, nparams, 64, &mut rng);
+        match coord.submit_gated("t", b.source, &args, 64, Priority::Interactive, None).unwrap() {
+            Admission::Admitted(h) => handles.push(h),
+            Admission::Rejected(r) => panic!("interactive must ride out pressure: {r}"),
+        }
+        let args = random_args(&ctx, nparams, 64, &mut rng);
+        match coord.submit_gated("t", b.source, &args, 64, Priority::Batch, None).unwrap() {
+            Admission::Rejected(RejectReason::Shed { pressure }) => {
+                assert!(pressure >= 0.5);
+                shed += 1;
+            }
+            other => panic!("expected batch shed under saturated pressure, got {other:?}"),
+        }
+    }
+    for h in handles {
+        assert_eq!(h.wait().unwrap().verified, Some(true));
+    }
+    let adm = coord.admission_stats().unwrap();
+    assert_eq!(adm.shed, shed);
+    assert_eq!(shed, 6);
+    assert!(adm.pressure >= 0.5);
+}
+
+#[test]
+fn scripted_fault_matrix_every_kind_injects_and_recovers() {
+    // the three dispatch-plane faults on a homogeneous 2-partition
+    // fleet: the struck dispatch must complete on the sibling
+    for kind in [FaultKind::WorkerKill, FaultKind::ReconfigFail, FaultKind::VerifyCorrupt] {
+        let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 2);
+        cfg.faults = Some(FaultPlanConfig {
+            seed: 0x5EED,
+            scripted: vec![(0, kind)],
+            ..FaultPlanConfig::default()
+        });
+        let coord = Coordinator::new(cfg).unwrap();
+        let ctx = host_ctx();
+        let mut rng = XorShiftRng::new(7);
+        let b = &BENCHMARKS[0];
+        let args = random_args(&ctx, param_count(b.source), 64, &mut rng);
+        let r = coord
+            .submit(b.source, &args, 64, Priority::Interactive)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.verified, Some(true), "{}: recovery must re-verify", kind.name());
+
+        let tally = coord.fault_tally().unwrap();
+        assert_eq!(tally.injected_of(kind), 1, "{} injected", kind.name());
+        assert_eq!(tally.recovered_of(kind), 1, "{} recovered", kind.name());
+        for other in ALL_FAULT_KINDS {
+            if other != kind {
+                assert_eq!(tally.injected_of(other), 0, "{} uninvolved", other.name());
+            }
+        }
+        let stats = coord.stats();
+        assert_eq!(stats.verify_failures, 0);
+        assert_eq!(stats.dispatch_errors, 0);
+        match kind {
+            // requeue-path faults go through the recovery plane
+            FaultKind::WorkerKill | FaultKind::VerifyCorrupt => {
+                assert!(stats.retried_dispatches >= 1, "{}", kind.name())
+            }
+            // the reconfig retry happens on the submit path, before a
+            // queue is ever involved
+            _ => assert_eq!(stats.retried_dispatches, 0),
+        }
+    }
+}
+
+#[test]
+fn compile_fault_poisons_then_heals_via_reprobe() {
+    // a heterogeneous fleet so the struck compile has a fallback spec,
+    // and the poisoned pair can later be re-probed
+    let big = OverlaySpec::zynq_default();
+    let small = OverlaySpec::new(4, 4, FuType::Dsp2);
+    let mut cfg =
+        CoordinatorConfig::sim_fleet_mixed(vec![(big.clone(), 1), (small.clone(), 1)]);
+    cfg.faults = Some(FaultPlanConfig {
+        seed: 0xC0,
+        scripted: vec![(0, FaultKind::CompileFail)],
+        ..FaultPlanConfig::default()
+    });
+    let coord = Coordinator::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0xC0);
+
+    // wide enough that copies x throughput ranks the big spec first —
+    // the scripted strike fires on the first-ranked (salt 0) compile
+    const WIDE: usize = 16_384;
+    let b = &BENCHMARKS[0];
+    let nparams = param_count(b.source);
+    let args = random_args(&ctx, nparams, WIDE, &mut rng);
+    let r = coord.submit(b.source, &args, WIDE, Priority::Batch).unwrap().wait().unwrap();
+    // the fallback spec served it
+    assert_eq!(r.verified, Some(true));
+    assert_eq!(r.spec, small.name(), "struck compile must fall through to the sibling spec");
+
+    let tally = coord.fault_tally().unwrap();
+    assert_eq!(tally.injected_of(FaultKind::CompileFail), 1);
+    assert_eq!(tally.recovered_of(FaultKind::CompileFail), 0, "not yet re-probed");
+    let poison = coord.stats().poison;
+    assert_eq!(poison.active, 1, "the (kernel, big-spec) pair is cooling off");
+    assert_eq!(poison.recoveries, 0);
+
+    // each submit ticks the decay clock; once the TTL expires the pair
+    // is offered back and the clean compile heals it
+    let mut healed_at = None;
+    for i in 0..20 {
+        let args = random_args(&ctx, nparams, WIDE, &mut rng);
+        let r = coord.submit(b.source, &args, WIDE, Priority::Batch).unwrap().wait().unwrap();
+        assert_eq!(r.verified, Some(true));
+        if coord.fault_tally().unwrap().recovered_of(FaultKind::CompileFail) == 1 {
+            healed_at = Some(i);
+            break;
+        }
+    }
+    let healed_at = healed_at.expect("poisoned pair never healed within 20 re-submissions");
+    // the base TTL is 8 profile ticks: healing cannot happen instantly
+    assert!(healed_at >= 5, "healed suspiciously early (iteration {healed_at})");
+    let poison = coord.stats().poison;
+    assert_eq!(poison.active, 0);
+    assert_eq!(poison.probes, 1);
+    assert_eq!(poison.recoveries, 1);
+    // and the healed spec serves the kernel again
+    let args = random_args(&ctx, nparams, WIDE, &mut rng);
+    let r = coord.submit(b.source, &args, WIDE, Priority::Batch).unwrap().wait().unwrap();
+    assert_eq!(r.verified, Some(true));
+    assert_eq!(r.spec, big.name(), "the re-probed spec must win wide work back");
+}
