@@ -15,6 +15,14 @@
 #                     reaches a terminal outcome, interactive p99
 #                     holds while batch is shed, and every injected
 #                     fault kind recovers. Non-blocking CI job.
+#   make cluster    — cluster-tier acceptance harness
+#                     (examples/e2e_serve -- cluster): 3 consistent-
+#                     hash nodes serving a mixed stream with a
+#                     scripted node death mid-stream; exits non-zero
+#                     unless every submit reaches a terminal outcome,
+#                     affinity beats random placement, and the node
+#                     rejoins warm from its snapshot. Non-blocking CI
+#                     job.
 #   make bench      — the paper-figure + serving bench harnesses
 #   make bench-json — the §E11 hot-path data-plane bench; writes
 #                     machine-readable BENCH_hotpath.json at the repo
@@ -26,7 +34,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy build test soak overload bench bench-build bench-json doc artifacts
+.PHONY: check fmt clippy build test soak overload cluster bench bench-build bench-json doc artifacts
 
 check: fmt clippy test bench-build doc
 
@@ -55,9 +63,17 @@ soak:
 overload:
 	$(CARGO) run --release --example e2e_serve -- overload
 
+# the cluster-tier acceptance harness: 3 consistent-hash nodes, mixed
+# workload, one scripted node death mid-stream; asserts zero hung
+# handles, typed failover of the dead node's ring range, and a warm
+# snapshot rejoin with no new compile misses
+cluster:
+	$(CARGO) run --release --example e2e_serve -- cluster
+
 bench:
 	$(CARGO) bench --bench serve_throughput
 	$(CARGO) bench --bench fleet_routing
+	$(CARGO) bench --bench cluster_routing
 	$(CARGO) bench --bench autoscale
 	$(CARGO) bench --bench jit_stages
 	$(CARGO) bench --bench hot_path

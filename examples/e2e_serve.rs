@@ -48,6 +48,20 @@
 //! bursting tenants were quota-rejected, and a deliberately doomed
 //! deadline was rejected before consuming any fleet resource.
 //!
+//! **Cluster mode** — `cargo run --release --example e2e_serve --
+//! cluster` — the consistent-hash serving tier: **3 nodes** (each its
+//! own coordinator over 2× 8×8-dsp2 partitions) behind one
+//! [`ClusterFrontend`](overlay_jit::cluster::ClusterFrontend). A mixed
+//! wide + small stream of all six benchmarks is routed by ring
+//! affinity; mid-stream the home node of the chebyshev kernel is
+//! **killed** (scripted death), its ring range fails over to its
+//! successors, and it later rejoins warm from its cache snapshot. The
+//! run fails (non-zero exit) unless **every** submit reaches a
+//! terminal outcome (zero hung handles — failures must carry typed
+//! reasons and trace to the killed node), affinity beats random
+//! placement by a wide margin, ≥ 1 typed failover fired, and the
+//! rejoined node serves its range without a single new compile miss.
+//!
 //! **PJRT mode** — `make artifacts && cargo run --release --features
 //! pjrt --example e2e_serve -- pjrt` — the original single-device
 //! path: JIT-compiles the six benchmarks and serves batched requests
@@ -56,7 +70,8 @@
 //! agreement. Requires the `pjrt` cargo feature and `make artifacts`.
 //!
 //! Results are recorded in EXPERIMENTS.md (§E7 PJRT, §E8 coordinator,
-//! §E9 heterogeneous fleet, §E10 adaptive scaling, §E12 overload).
+//! §E9 heterogeneous fleet, §E10 adaptive scaling, §E12 overload,
+//! §E13 cluster).
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -88,6 +103,7 @@ fn main() -> Result<()> {
         Some("pjrt") => serve_pjrt(),
         Some("autoscale") => serve_autoscale(),
         Some("overload") => serve_overload(),
+        Some("cluster") => serve_cluster(),
         Some("coordinator") | None => {
             let per_spec = args
                 .get(1)
@@ -96,7 +112,10 @@ fn main() -> Result<()> {
             serve_coordinator(per_spec)
         }
         Some(other) => {
-            bail!("unknown mode '{other}' (coordinator [N] | autoscale | overload | pjrt)")
+            bail!(
+                "unknown mode '{other}' (coordinator [N] | autoscale | overload | \
+                 cluster | pjrt)"
+            )
         }
     }
 }
@@ -613,6 +632,238 @@ fn serve_overload() -> Result<()> {
         int_p99,
         OVERLOAD_SLO_MS
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// cluster mode: consistent-hash tier with a scripted node death
+// ---------------------------------------------------------------------
+
+/// Cluster nodes (each its own coordinator).
+const CLUSTER_NODES: usize = 3;
+/// Rounds of the mixed stream; the scripted death fires halfway.
+const CLUSTER_ROUNDS: usize = 4;
+/// Ceiling for every cluster handle to reach a terminal outcome.
+const CLUSTER_TIMEOUT: Duration = Duration::from_secs(240);
+
+fn serve_cluster() -> Result<()> {
+    use overlay_jit::cluster::{ClusterConfig, ClusterFrontend, Health};
+
+    let spec = reference_overlay();
+    let snapshot_base = std::env::temp_dir().join(format!(
+        "overlay-jit-e2e-cluster-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&snapshot_base);
+    let mut cfg = ClusterConfig::sim_cluster(
+        CLUSTER_NODES,
+        CoordinatorConfig::sim_fleet(spec.clone(), 2),
+    );
+    cfg.snapshot_base = Some(snapshot_base.clone());
+    let cluster = ClusterFrontend::new(cfg)?;
+
+    let host = Device {
+        spec: spec.clone(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    let ctx = Context::new(&host);
+    let mut rng = XorShiftRng::new(0xC1A5);
+
+    let mut nparams_by_bench = Vec::with_capacity(BENCHMARKS.len());
+    for b in &BENCHMARKS {
+        nparams_by_bench.push(overlay_jit::frontend::parse_kernel(b.source)?.params.len());
+    }
+    let make_args = |nparams: usize, items: usize, rng: &mut XorShiftRng| {
+        (0..nparams)
+            .map(|_| {
+                let buf = ctx.create_buffer(items + 16);
+                let data: Vec<i32> = (0..items + 16)
+                    .map(|_| rng.gen_i64(-40, 40) as i32)
+                    .collect();
+                buf.write(&data);
+                SubmitArg::Buffer(buf)
+            })
+            .collect::<Vec<SubmitArg>>()
+    };
+
+    // the scripted victim: whichever node the ring made chebyshev's home
+    let victim = cluster.home_of(BENCHMARKS[0].source);
+    println!(
+        "cluster: {CLUSTER_NODES} nodes x 2 {} partitions, {CLUSTER_ROUNDS} rounds \
+         of {} benchmarks (wide {WIDE_ITEMS} + small {SMALL_ITEMS}); node-{victim} \
+         (chebyshev's home) dies after round {}\n",
+        spec.name(),
+        BENCHMARKS.len(),
+        CLUSTER_ROUNDS / 2,
+    );
+    for b in &BENCHMARKS {
+        println!("  {:<12} -> node-{}", b.name, cluster.home_of(b.source));
+    }
+    println!();
+
+    let tenants = ["alice", "bob", "carol"];
+    // (kernel, was submitted while its home was the live victim)
+    let mut handles: Vec<(&'static str, bool, overlay_jit::coordinator::DispatchHandle)> =
+        Vec::new();
+    let mut killed = false;
+    let t_serve = Instant::now();
+    for round in 0..CLUSTER_ROUNDS {
+        if round == CLUSTER_ROUNDS / 2 {
+            // the scripted death, mid-stream: queued work on the victim
+            // fails typed, its ring range fails over to its successors
+            if !cluster.kill_node(victim)? {
+                bail!("scripted victim node-{victim} was already down");
+            }
+            killed = true;
+            if cluster.health_of(victim) != Health::Down {
+                bail!("killed node-{victim} must report Down");
+            }
+        }
+        for (bi, (b, &nparams)) in BENCHMARKS.iter().zip(&nparams_by_bench).enumerate() {
+            let at_risk = !killed && cluster.home_of(b.source) == victim;
+            let tenant = tenants[(round + bi) % tenants.len()];
+            let wide = make_args(nparams, WIDE_ITEMS, &mut rng);
+            match cluster
+                .submit_gated(tenant, b.source, &wide, WIDE_ITEMS, Priority::Batch, None)?
+            {
+                Admission::Admitted(h) => handles.push((b.name, at_risk, h)),
+                Admission::Rejected(r) => bail!("ungated cluster rejected {}: {r}", b.name),
+            }
+            let narrow = make_args(nparams, SMALL_ITEMS, &mut rng);
+            match cluster.submit_gated(
+                tenant,
+                b.source,
+                &narrow,
+                SMALL_ITEMS,
+                Priority::Interactive,
+                None,
+            )? {
+                Admission::Admitted(h) => handles.push((b.name, at_risk, h)),
+                Admission::Rejected(r) => bail!("ungated cluster rejected {}: {r}", b.name),
+            }
+        }
+    }
+    let submitted = handles.len();
+
+    // every submit must reach a terminal outcome: poll with a hard
+    // ceiling so a hung handle fails the run instead of wedging it
+    let mut completed = 0usize;
+    let mut failed_typed = 0usize;
+    let mut open = handles;
+    let poll_deadline = Instant::now() + CLUSTER_TIMEOUT;
+    while !open.is_empty() {
+        if Instant::now() > poll_deadline {
+            bail!(
+                "{} cluster handles hung past {:?}: not every submit reached a \
+                 terminal outcome",
+                open.len(),
+                CLUSTER_TIMEOUT
+            );
+        }
+        let mut still = Vec::with_capacity(open.len());
+        for (name, at_risk, h) in open {
+            match h.try_wait_typed() {
+                Some(Ok(r)) => {
+                    if r.verified != Some(true) {
+                        bail!("{name}: dispatch diverged from the cycle simulator");
+                    }
+                    completed += 1;
+                }
+                Some(Err(e)) => {
+                    // the only legitimate failures are dispatches that
+                    // were already queued on the victim when it died —
+                    // and they must carry a typed reason
+                    if !at_risk {
+                        bail!(
+                            "{name}: failed ({}) although its home outlived it: {e}",
+                            e.reason().name()
+                        );
+                    }
+                    failed_typed += 1;
+                }
+                None => still.push((name, at_risk, h)),
+            }
+        }
+        open = still;
+        if !open.is_empty() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    let serve_s = t_serve.elapsed().as_secs_f64();
+
+    let mid_stats = cluster.stats();
+    let misses_before_rejoin = mid_stats.merged.cache.misses;
+    println!("{}", mid_stats.render());
+    println!(
+        "throughput : {:.2} Mitems/s end-to-end ({} submits, {} completed, \
+         {} failed typed, in {:.2} s)\n",
+        mid_stats.merged.total_items as f64 / serve_s / 1e6,
+        submitted,
+        completed,
+        failed_typed,
+        serve_s
+    );
+
+    // rejoin: the victim comes back warm from its snapshot and takes
+    // its ring range back — one more full round, no new compile miss
+    cluster.revive_node(victim)?;
+    if cluster.health_of(victim) != Health::Live {
+        bail!("revived node-{victim} must report Live");
+    }
+    for (b, &nparams) in BENCHMARKS.iter().zip(&nparams_by_bench) {
+        let narrow = make_args(nparams, SMALL_ITEMS, &mut rng);
+        let r = cluster
+            .submit(b.source, &narrow, SMALL_ITEMS, Priority::Interactive)?
+            .wait()?;
+        if r.verified != Some(true) {
+            bail!("post-rejoin {}: dispatch diverged from the cycle simulator", b.name);
+        }
+    }
+    let stats = cluster.stats();
+
+    // acceptance
+    if completed + failed_typed != submitted {
+        bail!("{} submits unaccounted for", submitted - completed - failed_typed);
+    }
+    if stats.failovers < 1 {
+        bail!("the scripted death never produced a typed failover");
+    }
+    // random placement over 3 nodes lands home 1/3 of the time; ring
+    // affinity must clearly beat that even though the death phase
+    // forcibly re-routes the victim's whole range
+    let random_rate = 1.0 / CLUSTER_NODES as f64;
+    if stats.affinity_rate() <= random_rate + 0.05 {
+        bail!(
+            "affinity rate {:.2} does not beat random placement ({random_rate:.2})",
+            stats.affinity_rate()
+        );
+    }
+    if stats.merged.cache.misses != misses_before_rejoin {
+        bail!(
+            "rejoin recompiled ({} -> {} misses): the snapshot warm-start failed",
+            misses_before_rejoin,
+            stats.merged.cache.misses
+        );
+    }
+    if stats.merged.verify_failures > 0 {
+        bail!("verification failure in the cluster stream");
+    }
+    println!(
+        "OK: {} submits all terminal ({} completed / {} failed typed on the dead \
+         node), affinity {:.0}% vs {:.0}% random, {} failovers, {} spills, rejoin \
+         warm with misses frozen at {}",
+        submitted,
+        completed,
+        failed_typed,
+        100.0 * stats.affinity_rate(),
+        100.0 * random_rate,
+        stats.failovers,
+        stats.spills,
+        stats.merged.cache.misses
+    );
+    cluster.shutdown();
+    let _ = std::fs::remove_dir_all(&snapshot_base);
     Ok(())
 }
 

@@ -1,0 +1,549 @@
+//! The cluster front door: ring-affinity routing over a set of
+//! [`Node`]s, with overflow spill, failover, and merged stats.
+//!
+//! Every submit is routed by the kernel's stable fingerprint through
+//! the [`HashRing`]: while a kernel's home node is `Live`, the kernel
+//! always lands there, so its compiled variants and partition
+//! residency stay hot on exactly one node's shard of the keyspace —
+//! the cluster-scale version of the paper's bitstream-cache affinity.
+//! Two typed exceptions, both counted and logged per tenant:
+//!
+//! * **overflow spill** ([`SpillReason::HomeOverloaded`]) — the home
+//!   node's queues exceed the pressure threshold and a strictly
+//!   less-loaded live sibling exists. Interactive work is never
+//!   spilled onto a node already shedding batch traffic (that node is
+//!   protecting its own interactive SLO; dumping more interactive
+//!   load on it helps nobody).
+//! * **failover** ([`SpillReason::HomeDown`]) — the home node is
+//!   `Down`, so its ring range is served by its successors in ring
+//!   order ([`HashRing::successors`]) until it rejoins.
+//!
+//! Completion is the same [`DispatchHandle`]-style contract as the
+//! single-node API: the front door returns the home/spill node's
+//! handle unchanged, and a node teardown fails its queued handles
+//! with typed reasons — callers never hang on a dead node.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::{
+    Admission, CoordinatorConfig, DispatchHandle, Priority, SubmitArg,
+};
+use crate::metrics::ServingStats;
+use crate::util::fnv1a_64;
+
+use super::health::{Health, HealthBoard};
+use super::node::Node;
+use super::ring::{HashRing, DEFAULT_VNODES};
+
+/// Tenant charged by the ungated [`ClusterFrontend::submit`] entry
+/// points, mirroring the coordinator's default.
+const DEFAULT_TENANT: &str = "default";
+
+/// Why a dispatch left its home node — typed, counted, and recorded
+/// in the spill log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpillReason {
+    /// The home node's queues exceeded the pressure threshold and a
+    /// strictly less-loaded live sibling took the dispatch.
+    HomeOverloaded,
+    /// The home node is `Down`; its ring range failed over to a
+    /// successor.
+    HomeDown,
+}
+
+impl SpillReason {
+    /// Stable tag for logs and assertions.
+    pub fn name(self) -> &'static str {
+        match self {
+            SpillReason::HomeOverloaded => "home_overloaded",
+            SpillReason::HomeDown => "home_down",
+        }
+    }
+}
+
+/// One audited off-home routing decision, tenant-attributed so
+/// per-tenant traffic can be traced per node.
+#[derive(Debug, Clone)]
+pub struct SpillRecord {
+    /// Stable kernel fingerprint ([`ClusterFrontend::kernel_key`]).
+    pub kernel_key: u64,
+    /// Admission tenant the dispatch was submitted under.
+    pub tenant: String,
+    /// The home node the dispatch left.
+    pub from: usize,
+    /// The node that took it.
+    pub to: usize,
+    pub reason: SpillReason,
+    pub priority: Priority,
+}
+
+/// Configuration of a cluster front door.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Number of nodes (ids `0..nodes`).
+    pub nodes: usize,
+    /// Per-node coordinator template; each node gets a clone (plus its
+    /// own snapshot directory when `snapshot_base` is set).
+    pub node_config: CoordinatorConfig,
+    /// Virtual nodes per member on the placement ring.
+    pub vnodes: usize,
+    /// Overflow spill fires when the home node's queue depth exceeds
+    /// this many queued-or-executing jobs.
+    pub spill_threshold: usize,
+    /// When set, node `i` snapshots its kernel caches under
+    /// `snapshot_base/node-i`, giving [`Node::kill`]/[`Node::revive`]
+    /// warm-restart state.
+    pub snapshot_base: Option<PathBuf>,
+    /// Heartbeat lapse (ms of the front door's test-controllable
+    /// clock) after which a node turns `Suspect`.
+    pub suspect_after_ms: u64,
+    /// Heartbeat lapse after which a node turns `Down`.
+    pub down_after_ms: u64,
+    /// Bounded spill-log length; older records beyond it are counted
+    /// as dropped, mirroring the router's record buffer.
+    pub max_spill_records: usize,
+}
+
+impl ClusterConfig {
+    /// A cluster of `nodes` identical sim-backed nodes with the
+    /// default ring/health knobs.
+    pub fn sim_cluster(nodes: usize, node_config: CoordinatorConfig) -> ClusterConfig {
+        ClusterConfig {
+            nodes,
+            node_config,
+            vnodes: DEFAULT_VNODES,
+            spill_threshold: 4,
+            snapshot_base: None,
+            suspect_after_ms: 500,
+            down_after_ms: 2_000,
+            max_spill_records: 4_096,
+        }
+    }
+}
+
+/// Cluster-wide serving statistics: per-node views plus merged
+/// totals and the front door's routing counters.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    pub per_node: Vec<NodeStatus>,
+    /// Every node's (lifetime) stats merged with the stride-aligned
+    /// latency discipline ([`ServingStats::merge`]).
+    pub merged: ServingStats,
+    /// Dispatches routed to their ring home.
+    pub affinity_hits: u64,
+    /// Overflow spills ([`SpillReason::HomeOverloaded`]).
+    pub spills: u64,
+    /// Failovers ([`SpillReason::HomeDown`]).
+    pub failovers: u64,
+    /// Spill-log records dropped beyond the bounded buffer.
+    pub dropped_spill_records: u64,
+}
+
+/// One node's row in [`ClusterStats`].
+#[derive(Debug, Clone)]
+pub struct NodeStatus {
+    pub node: usize,
+    pub name: String,
+    pub health: Health,
+    pub up: bool,
+    /// Routing decisions that landed on this node — the ring-balance
+    /// histogram across rows.
+    pub routed: u64,
+    pub queue_depth: usize,
+    /// The node's lifetime stats (all incarnations merged).
+    pub stats: ServingStats,
+}
+
+impl ClusterStats {
+    /// Total routing decisions made.
+    pub fn routed_total(&self) -> u64 {
+        self.per_node.iter().map(|n| n.routed).sum()
+    }
+
+    /// Fraction of dispatches that landed on their ring home (0 when
+    /// nothing was routed). Random placement across `N` live nodes
+    /// would score ≈ `1/N`; affinity routing should approach 1.
+    pub fn affinity_rate(&self) -> f64 {
+        let total = self.routed_total();
+        if total == 0 {
+            0.0
+        } else {
+            self.affinity_hits as f64 / total as f64
+        }
+    }
+
+    /// A compact multi-line report for examples and benches.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "cluster    : {} nodes, {} routed ({:.0}% affinity), {} spills, \
+             {} failovers\n",
+            self.per_node.len(),
+            self.routed_total(),
+            100.0 * self.affinity_rate(),
+            self.spills,
+            self.failovers,
+        );
+        for n in &self.per_node {
+            out.push_str(&format!(
+                "{}: {} ({}), {} routed, depth {}, {} dispatches, \
+                 {} hits / {} misses\n",
+                n.name,
+                n.health.name(),
+                if n.up { "up" } else { "down" },
+                n.routed,
+                n.queue_depth,
+                n.stats.total_dispatches,
+                n.stats.cache.hits,
+                n.stats.cache.misses,
+            ));
+        }
+        out.push_str("merged:\n");
+        out.push_str(&self.merged.render());
+        out
+    }
+}
+
+/// The cluster front door. See module docs.
+pub struct ClusterFrontend {
+    nodes: Vec<Mutex<Node>>,
+    ring: HashRing,
+    health: Mutex<HealthBoard>,
+    /// Test-controllable clock (ms); advanced by the driver, never by
+    /// wall time, so health transitions are exactly reproducible.
+    clock_ms: AtomicU64,
+    spill_threshold: usize,
+    max_spill_records: usize,
+    affinity_hits: AtomicU64,
+    spills: AtomicU64,
+    failovers: AtomicU64,
+    routed_per_node: Vec<AtomicU64>,
+    dropped_spill_records: AtomicU64,
+    spill_log: Mutex<Vec<SpillRecord>>,
+}
+
+impl std::fmt::Debug for ClusterFrontend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ClusterFrontend")
+            .field("nodes", &self.nodes.len())
+            .finish()
+    }
+}
+
+impl ClusterFrontend {
+    /// Bring the cluster up: one [`Node`] (own coordinator) per id,
+    /// all joined on the ring and starting `Live`.
+    pub fn new(config: ClusterConfig) -> Result<ClusterFrontend> {
+        if config.nodes == 0 {
+            bail!("cluster needs at least one node");
+        }
+        if config.max_spill_records == 0 {
+            bail!("max_spill_records must be at least 1");
+        }
+        let mut nodes = Vec::with_capacity(config.nodes);
+        for id in 0..config.nodes {
+            let mut node_config = config.node_config.clone();
+            if let Some(base) = &config.snapshot_base {
+                node_config.snapshot_dir = Some(base.join(format!("node-{id}")));
+            }
+            nodes.push(Mutex::new(Node::new(id, node_config)?));
+        }
+        Ok(ClusterFrontend {
+            ring: HashRing::with_nodes(config.nodes, config.vnodes),
+            health: Mutex::new(HealthBoard::new(
+                config.nodes,
+                config.suspect_after_ms,
+                config.down_after_ms,
+            )),
+            clock_ms: AtomicU64::new(0),
+            spill_threshold: config.spill_threshold,
+            max_spill_records: config.max_spill_records,
+            affinity_hits: AtomicU64::new(0),
+            spills: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            routed_per_node: (0..config.nodes).map(|_| AtomicU64::new(0)).collect(),
+            dropped_spill_records: AtomicU64::new(0),
+            spill_log: Mutex::new(Vec::new()),
+            nodes,
+        })
+    }
+
+    /// The stable routing fingerprint of a kernel source — what the
+    /// ring places. Process- and run-independent (FNV-1a).
+    pub fn kernel_key(source: &str) -> u64 {
+        fnv1a_64(source.as_bytes())
+    }
+
+    /// Number of cluster nodes (up or down).
+    pub fn nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// The placement ring (for tests asserting remap properties).
+    pub fn ring(&self) -> &HashRing {
+        &self.ring
+    }
+
+    /// The ring home of `source` — where it lands while that node is
+    /// `Live`.
+    pub fn home_of(&self, source: &str) -> usize {
+        self.ring
+            .home(Self::kernel_key(source))
+            .expect("constructor guarantees a non-empty ring")
+    }
+
+    /// The front door's clock (ms since construction, driver-advanced).
+    pub fn now_ms(&self) -> u64 {
+        self.clock_ms.load(Ordering::Relaxed)
+    }
+
+    /// Advance the test-controllable health clock.
+    pub fn advance_clock(&self, ms: u64) {
+        self.clock_ms.fetch_add(ms, Ordering::Relaxed);
+    }
+
+    /// Record a heartbeat from `node` at the current clock.
+    pub fn heartbeat(&self, node: usize) {
+        let now = self.now_ms();
+        self.health.lock().unwrap().beat(node, now);
+    }
+
+    /// `node`'s health at the current clock.
+    pub fn health_of(&self, node: usize) -> Health {
+        let now = self.now_ms();
+        self.health.lock().unwrap().health(node, now)
+    }
+
+    /// Route one dispatch: `(target, home, off-home reason)`.
+    ///
+    /// Lock discipline: the health board and the node mutexes are
+    /// never held together (kill/revive take them in the opposite
+    /// order), so the health states are copied out first.
+    fn route(&self, key: u64, priority: Priority) -> Result<(usize, usize, Option<SpillReason>)> {
+        let order = self.ring.successors(key);
+        let home = order[0];
+        let states: Vec<Health> = {
+            let now = self.now_ms();
+            let h = self.health.lock().unwrap();
+            order.iter().map(|&n| h.health(n, now)).collect()
+        };
+        let Some(pos) = states.iter().position(|&s| s != Health::Down) else {
+            bail!("every cluster node is down");
+        };
+        let target = order[pos];
+        if target != home {
+            return Ok((target, home, Some(SpillReason::HomeDown)));
+        }
+        // overflow spill: only when the home's queues exceed the
+        // threshold AND a strictly less-loaded live sibling exists
+        let home_depth = self.nodes[home].lock().unwrap().queue_depth();
+        if home_depth > self.spill_threshold {
+            let interactive = matches!(priority, Priority::Interactive);
+            let mut best: Option<(usize, usize)> = None; // (depth, node)
+            for (i, &n) in order.iter().enumerate().skip(1) {
+                if states[i] == Health::Down {
+                    continue;
+                }
+                let cand = self.nodes[n].lock().unwrap();
+                if !cand.is_up() {
+                    continue;
+                }
+                if interactive && cand.is_shedding() {
+                    // never spill interactive onto a shedding node
+                    continue;
+                }
+                let depth = cand.queue_depth();
+                drop(cand);
+                if best.map_or(true, |(d, _)| depth < d) {
+                    best = Some((depth, n));
+                }
+            }
+            if let Some((depth, n)) = best {
+                if depth < home_depth {
+                    return Ok((n, home, Some(SpillReason::HomeOverloaded)));
+                }
+            }
+        }
+        Ok((home, home, None))
+    }
+
+    fn note_route(
+        &self,
+        key: u64,
+        tenant: &str,
+        priority: Priority,
+        target: usize,
+        home: usize,
+        reason: Option<SpillReason>,
+    ) {
+        self.routed_per_node[target].fetch_add(1, Ordering::Relaxed);
+        let Some(reason) = reason else {
+            self.affinity_hits.fetch_add(1, Ordering::Relaxed);
+            return;
+        };
+        match reason {
+            SpillReason::HomeOverloaded => self.spills.fetch_add(1, Ordering::Relaxed),
+            SpillReason::HomeDown => self.failovers.fetch_add(1, Ordering::Relaxed),
+        };
+        let mut log = self.spill_log.lock().unwrap();
+        if log.len() < self.max_spill_records {
+            log.push(SpillRecord {
+                kernel_key: key,
+                tenant: tenant.to_string(),
+                from: home,
+                to: target,
+                reason,
+                priority,
+            });
+        } else {
+            self.dropped_spill_records.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Cluster submit with the single-node completion contract (see
+    /// [`crate::coordinator::Coordinator::submit`]).
+    pub fn submit(
+        &self,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+    ) -> Result<DispatchHandle> {
+        self.submit_with_deadline(source, args, global_size, priority, None)
+    }
+
+    /// [`ClusterFrontend::submit`] with an optional completion
+    /// deadline, forwarded to the serving node's coordinator.
+    pub fn submit_with_deadline(
+        &self,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<DispatchHandle> {
+        match self.submit_gated(DEFAULT_TENANT, source, args, global_size, priority, deadline)? {
+            Admission::Admitted(h) => Ok(h),
+            Admission::Rejected(r) => Err(anyhow!("{}", r)),
+        }
+    }
+
+    /// Tenant-attributed gated submit, routed by ring affinity with
+    /// overflow spill and failover (see module docs). The typed
+    /// [`Admission`] outcome is the serving node's own.
+    pub fn submit_gated(
+        &self,
+        tenant: &str,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Admission> {
+        let key = Self::kernel_key(source);
+        // a routing decision can race a kill; each pass either submits
+        // or declares one more node down, so the loop is bounded
+        for _ in 0..=self.nodes.len() {
+            let (target, home, reason) = self.route(key, priority)?;
+            let node = self.nodes[target].lock().unwrap();
+            if !node.is_up() {
+                drop(node);
+                self.health.lock().unwrap().mark_down(target);
+                continue;
+            }
+            let admission =
+                node.submit_gated(tenant, source, args, global_size, priority, deadline)?;
+            drop(node);
+            self.note_route(key, tenant, priority, target, home, reason);
+            return Ok(admission);
+        }
+        bail!("no live cluster node accepted the dispatch");
+    }
+
+    /// Scripted node death: snapshot + tear down node `id`'s
+    /// coordinator (its queued handles fail with typed reasons — no
+    /// hangs) and mark it `Down` so its ring range fails over.
+    /// Returns whether the node was up.
+    pub fn kill_node(&self, id: usize) -> Result<bool> {
+        if id >= self.nodes.len() {
+            bail!("no cluster node {id}");
+        }
+        let was_up = self.nodes[id].lock().unwrap().kill();
+        self.health.lock().unwrap().mark_down(id);
+        Ok(was_up)
+    }
+
+    /// Rejoin node `id`: rebuild its coordinator (warm-starting from
+    /// its snapshot when one is configured) and mark it `Live`.
+    pub fn revive_node(&self, id: usize) -> Result<()> {
+        if id >= self.nodes.len() {
+            bail!("no cluster node {id}");
+        }
+        self.nodes[id].lock().unwrap().revive()?;
+        let now = self.now_ms();
+        self.health.lock().unwrap().mark_live(id, now);
+        Ok(())
+    }
+
+    /// Block until every live node's background lane is idle.
+    pub fn drain(&self) {
+        for n in &self.nodes {
+            n.lock().unwrap().drain();
+        }
+    }
+
+    /// The retained off-home routing records (oldest first, bounded by
+    /// [`ClusterConfig::max_spill_records`]).
+    pub fn spill_log(&self) -> Vec<SpillRecord> {
+        self.spill_log.lock().unwrap().clone()
+    }
+
+    /// Cluster-wide stats: per-node views (lifetime — a killed node's
+    /// earlier incarnations still count) plus stride-aligned merged
+    /// totals and the routing counters.
+    pub fn stats(&self) -> ClusterStats {
+        let now = self.now_ms();
+        let healths: Vec<Health> = {
+            let h = self.health.lock().unwrap();
+            (0..self.nodes.len()).map(|id| h.health(id, now)).collect()
+        };
+        let mut per_node = Vec::with_capacity(self.nodes.len());
+        let mut all: Vec<ServingStats> = Vec::new();
+        for (id, slot) in self.nodes.iter().enumerate() {
+            let node = slot.lock().unwrap();
+            let lifetime = node.lifetime_stats();
+            let status = NodeStatus {
+                node: id,
+                name: node.name().to_string(),
+                health: healths[id],
+                up: node.is_up(),
+                routed: self.routed_per_node[id].load(Ordering::Relaxed),
+                queue_depth: node.queue_depth(),
+                stats: ServingStats::merge(&lifetime),
+            };
+            drop(node);
+            all.extend(lifetime);
+            per_node.push(status);
+        }
+        ClusterStats {
+            per_node,
+            merged: ServingStats::merge(&all),
+            affinity_hits: self.affinity_hits.load(Ordering::Relaxed),
+            spills: self.spills.load(Ordering::Relaxed),
+            failovers: self.failovers.load(Ordering::Relaxed),
+            dropped_spill_records: self.dropped_spill_records.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful cluster shutdown: every node snapshots (when
+    /// configured) and tears down deterministically.
+    pub fn shutdown(&self) {
+        for id in 0..self.nodes.len() {
+            let _ = self.kill_node(id);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Node health: heartbeat-driven `Live` / `Suspect` / `Down` states.
+//!
+//! The board is a pure data structure over a **caller-supplied clock**
+//! (milliseconds on an arbitrary monotonic epoch), so every transition
+//! is exactly reproducible in tests: no wall-clock reads, no timers.
+//! The cluster front door owns one board, feeds it heartbeats while
+//! nodes serve, and consults it on every routing decision — a `Down`
+//! node's ring range fails over to its successors
+//! ([`super::HashRing::successors`]).
+//!
+//! Two paths into `Down`:
+//! * **lapse** — no heartbeat for `down_after_ms` (passing through
+//!   `Suspect` after `suspect_after_ms`);
+//! * **scripted** — [`HealthBoard::mark_down`], the front door's kill
+//!   switch, which overrides heartbeats until
+//!   [`HealthBoard::mark_live`] rejoins the node.
+
+/// Health of one cluster node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Health {
+    /// Heartbeating normally; owns its ring range.
+    Live,
+    /// Heartbeat lapsed past the suspect threshold: still routed to
+    /// (it may just be slow), but flagged in the cluster stats.
+    Suspect,
+    /// Dead — declared (scripted kill / graceful leave) or heartbeat
+    /// lapsed past the down threshold. Its ring range fails over.
+    Down,
+}
+
+impl Health {
+    /// Stable tag for logs and assertions.
+    pub fn name(self) -> &'static str {
+        match self {
+            Health::Live => "live",
+            Health::Suspect => "suspect",
+            Health::Down => "down",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+struct NodeBeat {
+    last_beat_ms: u64,
+    /// Scripted death: overrides heartbeats until `mark_live`.
+    forced_down: bool,
+}
+
+/// Heartbeat ledger for a fixed set of nodes (ids `0..nodes`).
+#[derive(Debug, Clone)]
+pub struct HealthBoard {
+    suspect_after_ms: u64,
+    down_after_ms: u64,
+    nodes: Vec<NodeBeat>,
+}
+
+impl HealthBoard {
+    /// A board for `nodes` members, all considered freshly beating at
+    /// clock 0. `down_after_ms` is clamped to at least
+    /// `suspect_after_ms` so the states stay ordered.
+    pub fn new(nodes: usize, suspect_after_ms: u64, down_after_ms: u64) -> HealthBoard {
+        HealthBoard {
+            suspect_after_ms,
+            down_after_ms: down_after_ms.max(suspect_after_ms),
+            nodes: vec![NodeBeat { last_beat_ms: 0, forced_down: false }; nodes],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Record a heartbeat from `node` at `now_ms`. Ignored while the
+    /// node is scripted down — a killed node's stale worker cannot
+    /// beat itself back into the ring; only `mark_live` rejoins it.
+    pub fn beat(&mut self, node: usize, now_ms: u64) {
+        let b = &mut self.nodes[node];
+        if !b.forced_down {
+            b.last_beat_ms = b.last_beat_ms.max(now_ms);
+        }
+    }
+
+    /// Scripted death (or graceful leave): `Down` regardless of
+    /// heartbeats until [`HealthBoard::mark_live`].
+    pub fn mark_down(&mut self, node: usize) {
+        self.nodes[node].forced_down = true;
+    }
+
+    /// Rejoin `node` at `now_ms`: clears a scripted death and counts
+    /// as a fresh heartbeat.
+    pub fn mark_live(&mut self, node: usize, now_ms: u64) {
+        let b = &mut self.nodes[node];
+        b.forced_down = false;
+        b.last_beat_ms = now_ms;
+    }
+
+    /// `node`'s health as of `now_ms`.
+    pub fn health(&self, node: usize, now_ms: u64) -> Health {
+        let b = &self.nodes[node];
+        if b.forced_down {
+            return Health::Down;
+        }
+        let lapsed = now_ms.saturating_sub(b.last_beat_ms);
+        if lapsed >= self.down_after_ms {
+            Health::Down
+        } else if lapsed >= self.suspect_after_ms {
+            Health::Suspect
+        } else {
+            Health::Live
+        }
+    }
+
+    /// Node ids not `Down` as of `now_ms` — the routable set.
+    pub fn routable(&self, now_ms: u64) -> Vec<usize> {
+        (0..self.nodes.len())
+            .filter(|&n| self.health(n, now_ms) != Health::Down)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lapse_walks_live_suspect_down_and_a_beat_recovers() {
+        let mut b = HealthBoard::new(2, 100, 300);
+        assert_eq!(b.health(0, 0), Health::Live);
+        assert_eq!(b.health(0, 99), Health::Live);
+        assert_eq!(b.health(0, 100), Health::Suspect);
+        assert_eq!(b.health(0, 299), Health::Suspect);
+        assert_eq!(b.health(0, 300), Health::Down);
+        // a late heartbeat brings the node all the way back
+        b.beat(0, 310);
+        assert_eq!(b.health(0, 320), Health::Live);
+        // node 1 beat independently the whole time
+        b.beat(1, 250);
+        assert_eq!(b.health(1, 300), Health::Live);
+        assert_eq!(b.routable(320), vec![0, 1]);
+    }
+
+    #[test]
+    fn scripted_death_overrides_heartbeats_until_rejoin() {
+        let mut b = HealthBoard::new(3, 100, 300);
+        b.mark_down(1);
+        assert_eq!(b.health(1, 0), Health::Down);
+        b.beat(1, 10); // a zombie beat must not resurrect the node
+        assert_eq!(b.health(1, 10), Health::Down);
+        assert_eq!(b.routable(10), vec![0, 2]);
+        b.mark_live(1, 400);
+        assert_eq!(b.health(1, 450), Health::Live);
+        // the rejoin counted as a beat: no instant re-suspect
+        assert_eq!(b.health(1, 400 + 99), Health::Live);
+    }
+
+    #[test]
+    fn down_threshold_is_clamped_above_suspect() {
+        let b = HealthBoard::new(1, 200, 50); // misordered thresholds
+        assert_eq!(b.health(0, 199), Health::Live);
+        assert_eq!(b.health(0, 200), Health::Down); // clamped to 200
+    }
+}

@@ -1,0 +1,67 @@
+//! The cluster serving tier: a consistent-hash node layer above
+//! [`crate::coordinator::Coordinator`].
+//!
+//! One coordinator — however fast its data plane — is one process;
+//! the millions-of-users half of the north star needs many. This
+//! module composes N single-process coordinators into one serving
+//! surface without changing the submit contract:
+//!
+//! * [`Node`] — an in-process handle wrapping one coordinator (own
+//!   fleet, cache shards, autoscaler, admission gate) behind a narrow
+//!   submit/stats/drain API, so the whole tier runs and tests offline
+//!   with no network;
+//! * [`HashRing`] — a consistent-hash ring over stable kernel
+//!   fingerprints (virtual nodes for balance, [`crate::util::StableHasher`]
+//!   underneath): each kernel has one home node, so its compiled
+//!   variants and partition residency stay hot on exactly one shard of
+//!   the keyspace — the distributed analogue of the paper's
+//!   bitstream-cache affinity — and membership changes remap only the
+//!   departed node's keys;
+//! * [`ClusterFrontend`] — the front door: routes
+//!   `submit`/`submit_with_deadline`/`submit_gated` by ring affinity,
+//!   spills to the least-loaded live sibling when the home node's
+//!   queues exceed a pressure threshold (typed [`SpillReason`],
+//!   counted, tenant-attributed in the spill log; interactive work is
+//!   never spilled onto a shedding node), and returns the same
+//!   [`crate::coordinator::DispatchHandle`] completion the
+//!   single-node API gives;
+//! * [`HealthBoard`] — heartbeat-driven [`Health`] states
+//!   (`Live`/`Suspect`/`Down`) on a test-controllable clock: a `Down`
+//!   node's ring range fails over to its successors, its in-flight
+//!   handles fail with typed reasons (no hangs), and a recovered node
+//!   rejoins warm from its cache snapshot.
+//!
+//! Cluster-wide [`ClusterStats`] merge every node's `ServingStats`
+//! with the stride-aligned latency-reservoir discipline
+//! ([`crate::metrics::ServingStats::merge`]) so cluster percentiles
+//! aren't biased toward idle nodes, and carry the spill/failover
+//! counters plus the per-node routing histogram.
+//!
+//! ```text
+//! submit(source, …) ──▶ ring.home(fnv1a(source)) ──▶ node k (Live?)
+//!        │                       │ queues > threshold   │ Down
+//!        │                       ▼                      ▼
+//!        │            least-loaded live sibling   ring successor
+//!        │            (SpillReason::HomeOverloaded) (SpillReason::HomeDown)
+//!        ▼
+//!   DispatchHandle (same completion contract as one coordinator)
+//! ```
+//!
+//! Exercised end to end by `e2e_serve -- cluster` (`make cluster`): 3
+//! nodes, mixed workload, one scripted node death mid-stream —
+//! self-checking for terminal outcomes on every submit, affinity
+//! beating random placement, and zero hung handles across the
+//! failover.
+
+mod frontend;
+mod health;
+mod node;
+mod ring;
+
+pub use frontend::{
+    ClusterConfig, ClusterFrontend, ClusterStats, NodeStatus, SpillReason,
+    SpillRecord,
+};
+pub use health::{Health, HealthBoard};
+pub use node::Node;
+pub use ring::{HashRing, DEFAULT_VNODES};

@@ -1,0 +1,265 @@
+//! One cluster node: an in-process handle wrapping one
+//! [`Coordinator`] behind a narrow submit/stats/drain API.
+//!
+//! A node owns everything a single-process deployment owns today —
+//! its fleet of overlay partitions, per-spec compile shards and kernel
+//! caches, autoscaler, admission gate — so the cluster tier composes
+//! nodes without reaching into any of them. Because the handle is
+//! in-process (no network, no serialization), the whole tier is
+//! testable offline; a real RPC transport slots in behind this same
+//! API later (ROADMAP follow-on).
+//!
+//! Lifecycle: a node is **up** (serving) or **down** (its coordinator
+//! torn down). [`Node::kill`] models a node restart with surviving
+//! local disk: the kernel-cache snapshot is flushed (standing in for
+//! the periodic background cadence a long-running node keeps anyway,
+//! see [`CoordinatorConfig::snapshot_every`]), then the coordinator is
+//! dropped — which closes its lane queues, joins its workers, and
+//! fails every still-queued dispatch with a typed
+//! [`crate::coordinator::FailReason`], so no caller ever hangs on a
+//! dead node's handle. [`Node::revive`] rebuilds the coordinator from
+//! the same config; with a snapshot directory configured the rebuilt
+//! node warm-starts its shard of the keyspace with zero compile
+//! misses.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{
+    Admission, Coordinator, CoordinatorConfig, Priority, SubmitArg,
+};
+use crate::metrics::ServingStats;
+
+/// An in-process cluster node. See module docs.
+pub struct Node {
+    id: usize,
+    name: String,
+    /// The config the coordinator was (and will be re-) built from.
+    config: CoordinatorConfig,
+    /// `Some` while the node is up.
+    coordinator: Option<Coordinator>,
+    /// The admission gate's shed threshold, copied out so the front
+    /// door can ask [`Node::is_shedding`] without a config round-trip.
+    shed_pressure: Option<f64>,
+    /// Stats captured at each teardown, so cluster-wide totals keep
+    /// counting work served by earlier incarnations.
+    retired: Vec<ServingStats>,
+}
+
+impl std::fmt::Debug for Node {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Node")
+            .field("id", &self.id)
+            .field("name", &self.name)
+            .field("up", &self.coordinator.is_some())
+            .finish()
+    }
+}
+
+impl Node {
+    /// Bring node `id` up with its own coordinator. Set
+    /// `config.snapshot_dir` (the cluster front door does) to give the
+    /// node local warm-start state that survives [`Node::kill`].
+    pub fn new(id: usize, config: CoordinatorConfig) -> Result<Node> {
+        let shed_pressure = config.admission.as_ref().map(|a| a.shed_pressure);
+        let coordinator = Coordinator::new(config.clone())?;
+        Ok(Node {
+            id,
+            name: format!("node-{id}"),
+            config,
+            coordinator: Some(coordinator),
+            shed_pressure,
+            retired: Vec::new(),
+        })
+    }
+
+    pub fn id(&self) -> usize {
+        self.id
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Whether the node currently serves (its coordinator is alive).
+    pub fn is_up(&self) -> bool {
+        self.coordinator.is_some()
+    }
+
+    fn up(&self) -> Result<&Coordinator> {
+        match &self.coordinator {
+            Some(c) => Ok(c),
+            None => bail!("cluster node {} is down", self.name),
+        }
+    }
+
+    /// Gated submit on this node's coordinator (see
+    /// [`Coordinator::submit_gated`]). Fails fast when the node is
+    /// down — the front door re-routes instead of queueing here.
+    pub fn submit_gated(
+        &self,
+        tenant: &str,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+    ) -> Result<Admission> {
+        self.up()?
+            .submit_gated(tenant, source, args, global_size, priority, deadline)
+    }
+
+    /// Jobs queued or executing across the node's partitions — the
+    /// front door's cheap pressure signal (no stats merge).
+    pub fn queue_depth(&self) -> usize {
+        self.coordinator.as_ref().map_or(0, |c| c.queue_depth())
+    }
+
+    /// Whether the node's admission gate is at or past its
+    /// batch-shedding pressure threshold. Interactive work is never
+    /// spilled onto a shedding node. Always `false` without a gate.
+    pub fn is_shedding(&self) -> bool {
+        let (Some(c), Some(threshold)) = (&self.coordinator, self.shed_pressure) else {
+            return false;
+        };
+        c.admission_stats().is_some_and(|a| a.pressure >= threshold)
+    }
+
+    /// The live coordinator's serving stats; `None` when down.
+    pub fn stats(&self) -> Option<ServingStats> {
+        self.coordinator.as_ref().map(|c| c.stats())
+    }
+
+    /// Every incarnation's stats, oldest first: retired snapshots plus
+    /// the live coordinator's — what cluster-wide merges fold over so
+    /// a killed node's served work is not forgotten.
+    pub fn lifetime_stats(&self) -> Vec<ServingStats> {
+        let mut all = self.retired.clone();
+        if let Some(c) = &self.coordinator {
+            all.push(c.stats());
+        }
+        all
+    }
+
+    /// Block until the node's background rescale/snapshot lane is
+    /// idle (a no-op when down or without a background lane).
+    pub fn drain(&self) {
+        if let Some(c) = &self.coordinator {
+            c.drain_background();
+        }
+    }
+
+    /// Flush the node's kernel-cache snapshot to its configured
+    /// directory. `Ok(0)` when no directory is configured.
+    pub fn save_snapshot(&self) -> Result<usize> {
+        match (&self.coordinator, &self.config.snapshot_dir) {
+            (Some(c), Some(dir)) => c.save_snapshot(dir),
+            _ => Ok(0),
+        }
+    }
+
+    /// Take the node down (see module docs: snapshot, then tear the
+    /// coordinator down, failing queued work with typed reasons).
+    /// Returns `true` if the node was up. Never hangs: worker threads
+    /// drain-and-exit on queue close.
+    pub fn kill(&mut self) -> bool {
+        let Some(c) = self.coordinator.take() else {
+            return false;
+        };
+        if let Some(dir) = &self.config.snapshot_dir {
+            // best-effort: a failed flush costs the rejoin a cold
+            // start, never the teardown
+            let _ = c.save_snapshot(dir);
+        }
+        self.retired.push(c.stats());
+        c.shutdown();
+        true
+    }
+
+    /// Bring a downed node back up. With a snapshot directory in the
+    /// config the rebuilt coordinator warm-starts from the state
+    /// [`Node::kill`] flushed. A no-op when already up.
+    pub fn revive(&mut self) -> Result<()> {
+        if self.coordinator.is_none() {
+            self.coordinator = Some(Coordinator::new(self.config.clone())?);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_kernels::CHEBYSHEV;
+    use crate::overlay::OverlaySpec;
+    use crate::runtime_ocl::{Backend, Context, Device};
+
+    fn ctx() -> Context {
+        Context::new(&Device {
+            spec: OverlaySpec::zynq_default(),
+            backend: Backend::CycleSim,
+            name: "host".into(),
+        })
+    }
+
+    fn submit_cheb(node: &Node, ctx: &Context) -> Result<Admission> {
+        let n = 64;
+        let a = ctx.create_buffer(n + 8);
+        let b = ctx.create_buffer(n + 8);
+        a.write(&vec![1i32; n + 8]);
+        node.submit_gated(
+            "t0",
+            CHEBYSHEV,
+            &[SubmitArg::Buffer(a), SubmitArg::Buffer(b)],
+            n,
+            Priority::Interactive,
+            None,
+        )
+    }
+
+    #[test]
+    fn kill_revive_cycle_warm_starts_from_snapshot() {
+        let dir = std::env::temp_dir().join(format!(
+            "overlay-jit-cluster-node-{}",
+            std::process::id()
+        ));
+        let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+        cfg.snapshot_dir = Some(dir.clone());
+        let mut node = Node::new(7, cfg).unwrap();
+        assert_eq!(node.name(), "node-7");
+        assert!(node.is_up());
+
+        let ctx = ctx();
+        match submit_cheb(&node, &ctx).unwrap() {
+            Admission::Admitted(h) => {
+                h.wait().unwrap();
+            }
+            Admission::Rejected(r) => panic!("ungated node rejected: {r}"),
+        }
+        assert_eq!(node.stats().unwrap().cache.misses, 1);
+
+        assert!(node.kill());
+        assert!(!node.kill(), "double-kill is a no-op");
+        assert!(!node.is_up());
+        assert_eq!(node.queue_depth(), 0);
+        assert!(submit_cheb(&node, &ctx).is_err(), "down node fails fast");
+        // the killed incarnation's work survives in lifetime stats
+        assert_eq!(node.lifetime_stats().len(), 1);
+        assert_eq!(node.lifetime_stats()[0].total_dispatches, 1);
+
+        node.revive().unwrap();
+        assert!(node.is_up());
+        match submit_cheb(&node, &ctx).unwrap() {
+            Admission::Admitted(h) => {
+                h.wait().unwrap();
+            }
+            Admission::Rejected(r) => panic!("ungated node rejected: {r}"),
+        }
+        let s = node.stats().unwrap();
+        assert_eq!(s.cache.misses, 0, "rejoin must warm-start, not recompile");
+        assert_eq!(s.cache.hits, 1);
+        assert_eq!(node.lifetime_stats().len(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

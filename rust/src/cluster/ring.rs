@@ -1,0 +1,237 @@
+//! Consistent-hash ring over stable kernel fingerprints.
+//!
+//! The cluster's placement primitive: each node owns `vnodes` points
+//! on a 64-bit ring (virtual nodes smooth the per-node keyspace share
+//! to within a few percent), and a kernel's home node is the owner of
+//! the first point at or after the kernel's fingerprint. Because a
+//! node's points are a pure function of `(node id, replica index)` via
+//! [`StableHasher`], the ring is identical across processes and runs —
+//! the distributed analogue of the paper's bitstream-cache affinity:
+//! the same kernel always compiles, caches and stays resident on the
+//! same node's shard of the keyspace.
+//!
+//! Membership changes remap minimally: removing a node deletes only
+//! that node's points, so a key's owner changes **only** if its owner
+//! was the removed node (it slides to the next surviving point);
+//! every other assignment is untouched. Re-adding the node restores
+//! the exact original map. `rust/tests/cluster.rs` pins both
+//! properties over randomized key sets.
+
+use crate::util::StableHasher;
+
+/// Default virtual nodes per member — enough to keep a 3-node ring's
+/// keyspace shares within a few percent of 1/3.
+pub const DEFAULT_VNODES: usize = 64;
+
+/// A consistent-hash ring mapping 64-bit keys to node ids.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    vnodes: usize,
+    /// `(point hash, node id)`, sorted by hash. Ties are impossible in
+    /// practice (64-bit FNV over distinct inputs); if two points ever
+    /// collided the lower node id would win deterministically.
+    points: Vec<(u64, usize)>,
+    /// Member node ids, sorted.
+    members: Vec<usize>,
+}
+
+/// The ring position of one `(node, replica)` virtual node.
+fn vnode_hash(node: usize, replica: usize) -> u64 {
+    let mut h = StableHasher::new();
+    h.write_str("cluster-ring-vnode");
+    h.write_usize(node);
+    h.write_usize(replica);
+    h.finish()
+}
+
+impl HashRing {
+    /// An empty ring placing `vnodes` virtual nodes per member
+    /// (clamped ≥ 1).
+    pub fn new(vnodes: usize) -> HashRing {
+        HashRing { vnodes: vnodes.max(1), points: Vec::new(), members: Vec::new() }
+    }
+
+    /// A ring with members `0..nodes` already joined.
+    pub fn with_nodes(nodes: usize, vnodes: usize) -> HashRing {
+        let mut ring = HashRing::new(vnodes);
+        for n in 0..nodes {
+            ring.add(n);
+        }
+        ring
+    }
+
+    /// Join `node`; a no-op if it is already a member.
+    pub fn add(&mut self, node: usize) {
+        if self.contains(node) {
+            return;
+        }
+        let at = self.members.partition_point(|&m| m < node);
+        self.members.insert(at, node);
+        for replica in 0..self.vnodes {
+            let point = (vnode_hash(node, replica), node);
+            let at = self.points.partition_point(|&p| p < point);
+            self.points.insert(at, point);
+        }
+    }
+
+    /// Leave: delete only `node`'s points, so every surviving
+    /// assignment is untouched. Returns whether it was a member.
+    pub fn remove(&mut self, node: usize) -> bool {
+        if !self.contains(node) {
+            return false;
+        }
+        self.members.retain(|&m| m != node);
+        self.points.retain(|&(_, n)| n != node);
+        true
+    }
+
+    pub fn contains(&self, node: usize) -> bool {
+        self.members.binary_search(&node).is_ok()
+    }
+
+    /// Member node ids, sorted.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    pub fn len(&self) -> usize {
+        self.members.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.members.is_empty()
+    }
+
+    /// Index into `points` of the point owning `key` (first point at
+    /// or after `key`, wrapping at the top of the ring).
+    fn owner_index(&self, key: u64) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let at = self.points.partition_point(|&(h, _)| h < key);
+        Some(if at == self.points.len() { 0 } else { at })
+    }
+
+    /// The home node of `key`; `None` on an empty ring.
+    pub fn home(&self, key: u64) -> Option<usize> {
+        self.owner_index(key).map(|i| self.points[i].1)
+    }
+
+    /// Every member in ring order starting at `key`'s home — the
+    /// failover preference order: when the home is down its range is
+    /// served by the next distinct node clockwise, and so on.
+    pub fn successors(&self, key: u64) -> Vec<usize> {
+        let Some(start) = self.owner_index(key) else {
+            return Vec::new();
+        };
+        let mut order = Vec::with_capacity(self.members.len());
+        for i in 0..self.points.len() {
+            let node = self.points[(start + i) % self.points.len()].1;
+            if !order.contains(&node) {
+                order.push(node);
+                if order.len() == self.members.len() {
+                    break;
+                }
+            }
+        }
+        order
+    }
+
+    /// Keys-per-member histogram over a key sample (ring-balance
+    /// evidence for the cluster stats). Members owning none of the
+    /// sample still appear, with a zero count.
+    pub fn balance(&self, keys: &[u64]) -> Vec<(usize, u64)> {
+        let mut counts: Vec<(usize, u64)> =
+            self.members.iter().map(|&m| (m, 0)).collect();
+        for &k in keys {
+            if let Some(home) = self.home(k) {
+                if let Some(c) = counts.iter_mut().find(|(m, _)| *m == home) {
+                    c.1 += 1;
+                }
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn keys(n: u64) -> Vec<u64> {
+        // spread deterministic keys over the ring via the same hasher
+        (0..n)
+            .map(|i| {
+                let mut h = StableHasher::new();
+                h.write_str("test-key");
+                h.write_u64(i);
+                h.finish()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn placement_is_deterministic_and_total() {
+        let a = HashRing::with_nodes(3, 64);
+        let b = HashRing::with_nodes(3, 64);
+        for k in keys(500) {
+            let home = a.home(k).unwrap();
+            assert_eq!(b.home(k).unwrap(), home, "rings must agree");
+            assert!(home < 3);
+        }
+        assert!(HashRing::new(8).home(42).is_none(), "empty ring has no home");
+    }
+
+    #[test]
+    fn virtual_nodes_balance_the_keyspace() {
+        let ring = HashRing::with_nodes(3, DEFAULT_VNODES);
+        let sample = keys(9_000);
+        let balance = ring.balance(&sample);
+        assert_eq!(balance.len(), 3);
+        for &(node, count) in &balance {
+            // with 64 vnodes each node's share stays well clear of
+            // starvation (an exact third is 3000)
+            assert!(
+                count > 1_500 && count < 4_500,
+                "node {node} owns {count} of 9000 keys — ring is unbalanced"
+            );
+        }
+    }
+
+    #[test]
+    fn successors_start_at_home_and_cover_every_member() {
+        let ring = HashRing::with_nodes(4, 16);
+        for k in keys(50) {
+            let order = ring.successors(k);
+            assert_eq!(order[0], ring.home(k).unwrap());
+            let mut sorted = order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3], "every member appears once");
+        }
+    }
+
+    #[test]
+    fn removal_slides_keys_to_their_successor() {
+        let ring = HashRing::with_nodes(3, 32);
+        let sample = keys(300);
+        let before: Vec<(u64, usize, Vec<usize>)> = sample
+            .iter()
+            .map(|&k| (k, ring.home(k).unwrap(), ring.successors(k)))
+            .collect();
+        let mut shrunk = ring.clone();
+        assert!(shrunk.remove(1));
+        assert!(!shrunk.remove(1), "double-remove is a no-op");
+        for (k, home, order) in &before {
+            let new_home = shrunk.home(*k).unwrap();
+            if *home == 1 {
+                // the orphaned range lands on the next surviving
+                // successor, exactly as the failover order predicted
+                let expected =
+                    order.iter().copied().find(|&n| n != 1).unwrap();
+                assert_eq!(new_home, expected);
+            } else {
+                assert_eq!(new_home, *home, "surviving keys must not move");
+            }
+        }
+    }
+}

@@ -578,6 +578,9 @@ impl LogShard {
 #[derive(Debug, Default)]
 pub(crate) struct LogTotals {
     pub latencies_ms: Vec<f64>,
+    /// Decimation stride `latencies_ms` is aligned to (shards are
+    /// thinned to the max stride on merge); 0 only for the empty log.
+    pub latency_stride: u64,
     pub total_items: u64,
     pub total_dispatches: u64,
     pub verify_failures: u64,
@@ -627,6 +630,7 @@ impl ServeLog {
         }
         let max_stride =
             reservoirs.iter().map(|(stride, _)| *stride).max().unwrap_or(1).max(1);
+        t.latency_stride = max_stride;
         for (stride, samples) in reservoirs {
             let step = (max_stride / stride.max(1)).max(1) as usize;
             t.latencies_ms.extend(samples.into_iter().step_by(step));

@@ -806,6 +806,7 @@ impl Coordinator {
         self.router.lock().unwrap().commit(
             RouteRecord {
                 kernel: profile.name.clone(),
+                tenant: tenant.to_string(),
                 source_hash: profile.source_hash,
                 global_size,
                 copies_wanted,
@@ -943,7 +944,11 @@ impl Coordinator {
             cache,
             reconfig_count,
             reconfig_seconds,
-            latency: LatencyStats::from_samples_ms(log.latencies_ms),
+            latency: LatencyStats::from_samples_ms(log.latencies_ms.clone()),
+            latency_raw: crate::metrics::LatencyRaw {
+                stride: log.latency_stride,
+                samples_ms: log.latencies_ms,
+            },
             partitions,
             per_spec,
             total_dispatches: log.total_dispatches,
@@ -1033,13 +1038,30 @@ impl Coordinator {
         self.fleet.save_snapshot(dir)
     }
 
-    /// Graceful shutdown: finish queued work, stop workers. (Also
-    /// runs on drop.)
-    pub fn shutdown(self) {}
-}
+    /// Jobs currently queued or executing summed across every
+    /// partition — the cluster tier's cheap pressure signal. One
+    /// scheduler lock, no log merge: a full [`Coordinator::stats`]
+    /// per routing decision would put an O(dispatches) walk on the
+    /// cluster front door's hot path.
+    pub fn queue_depth(&self) -> usize {
+        let sched = self.scheduler.lock().unwrap();
+        sched.partitions().iter().map(|p| p.queue_depth).sum()
+    }
 
-impl Drop for Coordinator {
-    fn drop(&mut self) {
+    /// Graceful, deterministic shutdown: stop the background
+    /// rescale/snapshot lane (its `Drop` drains and joins), close
+    /// every partition's lane queue so workers finish what's queued
+    /// and exit, then join the worker threads. Queued jobs a worker
+    /// cannot finish are failed with typed reasons by its teardown
+    /// guard — `wait()`ing callers never hang. Also runs on drop;
+    /// both paths share the same idempotent teardown.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+        // Drop re-runs shutdown_impl; every step below is a no-op the
+        // second time (`take()`d options, idempotent queue close)
+    }
+
+    fn shutdown_impl(&mut self) {
         // stop the background lane first so no rescale installs race
         // worker teardown (Rescaler's own Drop closes and joins)
         self.bg.take();
@@ -1051,6 +1073,12 @@ impl Drop for Coordinator {
                 let _ = j.join();
             }
         }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_impl();
     }
 }
 

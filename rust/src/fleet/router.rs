@@ -119,6 +119,11 @@ impl RouteReason {
 #[derive(Debug, Clone)]
 pub struct RouteRecord {
     pub kernel: String,
+    /// Admission tenant the dispatch was submitted under (the
+    /// coordinator's default tenant for ungated submits) — lets
+    /// per-tenant traffic be attributed per spec and, at cluster
+    /// scale, per node.
+    pub tenant: String,
     pub source_hash: u64,
     pub global_size: usize,
     pub copies_wanted: usize,
@@ -505,6 +510,7 @@ mod tests {
         r.commit(
             RouteRecord {
                 kernel: "k".into(),
+                tenant: "default".into(),
                 source_hash: 1,
                 global_size: 256,
                 copies_wanted: wanted,
@@ -535,6 +541,7 @@ mod tests {
             r.commit(
                 RouteRecord {
                     kernel: format!("k{i}"),
+                    tenant: format!("tenant-{i}"),
                     source_hash: i,
                     global_size: 64,
                     copies_wanted: wanted,

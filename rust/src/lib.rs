@@ -78,6 +78,13 @@
 //!   first load shedding, and a deterministic seeded fault-injection
 //!   plan (worker kills, reconfiguration failures, verify corruption,
 //!   transient compile failures) the dispatch plane must recover from.
+//! * [`cluster`] — the cluster serving tier: N in-process coordinator
+//!   nodes behind one front door, a consistent-hash ring over stable
+//!   kernel fingerprints (virtual nodes; minimal remapping on
+//!   membership change) keeping each kernel's compiled variants hot on
+//!   its home node, pressure-threshold spill to the least-loaded live
+//!   sibling, heartbeat-driven health with failover to ring successors
+//!   and warm snapshot rejoin, and cluster-wide merged serving stats.
 //! * [`bench_kernels`] — the paper's six benchmark kernels as OpenCL-C
 //!   sources with their Table III metadata.
 //! * [`metrics`] — the GOPS / resource / configuration-time models behind
@@ -93,6 +100,7 @@ pub mod admission;
 pub mod arena;
 pub mod autoscale;
 pub mod bench_kernels;
+pub mod cluster;
 pub mod compiler;
 pub mod configgen;
 pub mod coordinator;
@@ -122,6 +130,10 @@ pub mod prelude {
     };
     pub use crate::arena::{DispatchScratch, PoolStats, ScratchPool, StreamArena};
     pub use crate::autoscale::{AutoscalePolicy, ScaleDirection, ScaleEvent};
+    pub use crate::cluster::{
+        ClusterConfig, ClusterFrontend, ClusterStats, HashRing, Health, Node,
+        SpillReason,
+    };
     pub use crate::compiler::{
         CompileOptions, CompileReport, CompiledKernel, JitCompiler, KernelCost,
         Replication,

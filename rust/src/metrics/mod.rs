@@ -169,6 +169,26 @@ impl LatencyStats {
     }
 }
 
+/// Stride-tagged raw latency samples backing a [`ServingStats`]
+/// snapshot — what [`ServingStats::merge`] needs to combine nodes
+/// without biasing percentiles.
+///
+/// The coordinator's per-worker reservoirs decimate independently
+/// (each shard's stride doubles when its buffer fills), and the same
+/// happens across cluster nodes: a busy node keeping every 4th sample
+/// must not be outvoted by an idle node keeping every sample. Strides
+/// are powers of two, so merging thins every side to the common
+/// maximum stride first — exactly the discipline
+/// `ServeLog::totals` established for per-shard merges.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRaw {
+    /// Decimation stride the samples were retained at: one sample
+    /// represents `stride` dispatches (0 is treated as 1).
+    pub stride: u64,
+    /// The retained end-to-end latencies, milliseconds.
+    pub samples_ms: Vec<f64>,
+}
+
 /// Kernel-cache counters (produced by
 /// [`crate::coordinator::KernelCache::stats`]).
 #[derive(Debug, Clone, Copy, Default)]
@@ -282,7 +302,7 @@ impl AutoscaleStats {
 /// quantities that decide whether run-time kernel management is
 /// actually paying off (paper's premise — seconds-class JIT + µs-class
 /// reconfiguration make the overlay fleet a schedulable cache).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct ServingStats {
     /// Kernel-cache counters summed across every spec shard
     /// (`capacity` and `entries` sum too).
@@ -293,6 +313,10 @@ pub struct ServingStats {
     pub reconfig_seconds: f64,
     /// End-to-end dispatch latency (enqueue → completion).
     pub latency: LatencyStats,
+    /// The raw samples `latency` was summarized from, tagged with
+    /// their decimation stride so snapshots from several nodes merge
+    /// without idle-node bias (see [`ServingStats::merge`]).
+    pub latency_raw: LatencyRaw,
     pub partitions: Vec<PartitionServingStats>,
     /// Per-spec shard breakdown (cache isolation, routing decisions,
     /// replication-factor histograms).
@@ -339,6 +363,151 @@ pub struct ServingStats {
 }
 
 impl ServingStats {
+    /// Merge node-level snapshots into one cluster-wide view.
+    ///
+    /// Counters sum; partition rows concatenate with re-numbered
+    /// indices; per-spec rows merge by spec fingerprint (histograms
+    /// included). Latency uses the stride-aligned reservoir
+    /// discipline (see [`LatencyRaw`]): every snapshot's samples are
+    /// thinned to the cluster-wide maximum stride before the merged
+    /// percentiles are taken, so one retained sample represents the
+    /// same number of dispatches on every node and idle nodes don't
+    /// drag the cluster p99 down.
+    ///
+    /// Caveats, by construction: `admission.pressure` is the maximum
+    /// across nodes (pressure is a level, not a count),
+    /// `admission.tenants` is the per-node maximum (tenants served by
+    /// several nodes cannot be de-duplicated from counters alone),
+    /// and `faults` stays `None` (injected-fault tallies are per-node
+    /// diagnostics; read them off the node's own stats).
+    pub fn merge(nodes: &[ServingStats]) -> ServingStats {
+        let mut out = ServingStats::default();
+
+        // stride-aligned latency merge: thin every snapshot to the
+        // cluster-wide maximum stride (strides are powers of two)
+        let max_stride = nodes
+            .iter()
+            .map(|n| n.latency_raw.stride.max(1))
+            .max()
+            .unwrap_or(1);
+        let mut samples: Vec<f64> = Vec::new();
+        for n in nodes {
+            let step = (max_stride / n.latency_raw.stride.max(1)).max(1) as usize;
+            samples.extend(n.latency_raw.samples_ms.iter().copied().step_by(step));
+        }
+        out.latency = LatencyStats::from_samples_ms(samples.clone());
+        out.latency_raw = LatencyRaw { stride: max_stride, samples_ms: samples };
+
+        let mut specs: std::collections::BTreeMap<u64, SpecServingStats> =
+            std::collections::BTreeMap::new();
+        let mut histograms: std::collections::BTreeMap<
+            u64,
+            std::collections::BTreeMap<usize, u64>,
+        > = std::collections::BTreeMap::new();
+        let mut partition_offset = 0usize;
+        for n in nodes {
+            out.cache.hits += n.cache.hits;
+            out.cache.misses += n.cache.misses;
+            out.cache.evictions += n.cache.evictions;
+            out.cache.entries += n.cache.entries;
+            out.cache.capacity += n.cache.capacity;
+            out.reconfig_count += n.reconfig_count;
+            out.reconfig_seconds += n.reconfig_seconds;
+            out.total_dispatches += n.total_dispatches;
+            out.total_items += n.total_items;
+            out.verify_failures += n.verify_failures;
+            out.dispatch_errors += n.dispatch_errors;
+            out.fused_batches += n.fused_batches;
+            out.compile_seconds += n.compile_seconds;
+            out.rejected_submits += n.rejected_submits;
+            out.shed_submits += n.shed_submits;
+            out.retried_dispatches += n.retried_dispatches;
+            out.quarantine_events += n.quarantine_events;
+            out.quarantined_partitions += n.quarantined_partitions;
+            out.scratch_pool.created += n.scratch_pool.created;
+            out.scratch_pool.checkouts += n.scratch_pool.checkouts;
+            out.scratch_pool.reuses += n.scratch_pool.reuses;
+            out.scratch_pool.pooled += n.scratch_pool.pooled;
+            out.scratch_pool.grow_events += n.scratch_pool.grow_events;
+            out.poison.active += n.poison.active;
+            out.poison.probes += n.poison.probes;
+            out.poison.recoveries += n.poison.recoveries;
+
+            for p in &n.partitions {
+                let mut p = p.clone();
+                p.partition += partition_offset;
+                out.partitions.push(p);
+            }
+            partition_offset += n.partitions.len();
+
+            for s in &n.per_spec {
+                let e = specs.entry(s.fingerprint).or_insert_with(|| SpecServingStats {
+                    spec: s.spec.clone(),
+                    fingerprint: s.fingerprint,
+                    partitions: 0,
+                    cache: CacheStats::default(),
+                    compile_seconds: 0.0,
+                    routed: 0,
+                    best_fit: 0,
+                    widest: 0,
+                    only_fit: 0,
+                    fallbacks: 0,
+                    cross_spec_hits: 0,
+                    replication_histogram: Vec::new(),
+                });
+                e.partitions += s.partitions;
+                e.cache.hits += s.cache.hits;
+                e.cache.misses += s.cache.misses;
+                e.cache.evictions += s.cache.evictions;
+                e.cache.entries += s.cache.entries;
+                e.cache.capacity += s.cache.capacity;
+                e.compile_seconds += s.compile_seconds;
+                e.routed += s.routed;
+                e.best_fit += s.best_fit;
+                e.widest += s.widest;
+                e.only_fit += s.only_fit;
+                e.fallbacks += s.fallbacks;
+                e.cross_spec_hits += s.cross_spec_hits;
+                let h = histograms.entry(s.fingerprint).or_default();
+                for &(factor, count) in &s.replication_histogram {
+                    *h.entry(factor).or_insert(0) += count;
+                }
+            }
+
+            if let Some(a) = &n.autoscale {
+                let m = out.autoscale.get_or_insert_with(AutoscaleStats::default);
+                m.scale_ups += a.scale_ups;
+                m.scale_downs += a.scale_downs;
+                m.failed_rescales += a.failed_rescales;
+                m.rescale_cache_hits += a.rescale_cache_hits;
+                m.rescale_compile_seconds += a.rescale_compile_seconds;
+                m.active_variants += a.active_variants;
+                m.tracked_kernels += a.tracked_kernels;
+                m.events_dropped += a.events_dropped;
+                m.admission_rejects += a.admission_rejects;
+            }
+            if let Some(a) = &n.admission {
+                let m = out
+                    .admission
+                    .get_or_insert_with(crate::admission::AdmissionStats::default);
+                m.admitted += a.admitted;
+                m.rejected_quota += a.rejected_quota;
+                m.rejected_deadline += a.rejected_deadline;
+                m.shed += a.shed;
+                m.pressure = m.pressure.max(a.pressure);
+                m.tenants = m.tenants.max(a.tenants);
+            }
+        }
+        for (fp, s) in specs {
+            let mut s = s;
+            s.replication_histogram = histograms
+                .remove(&fp)
+                .map_or_else(Vec::new, |h| h.into_iter().collect());
+            out.per_spec.push(s);
+        }
+        out
+    }
+
     /// A compact multi-line report for examples and benches.
     pub fn render(&self) -> String {
         let mut out = format!(
@@ -558,6 +727,7 @@ mod tests {
             reconfig_count: 2,
             reconfig_seconds: 84.8e-6,
             latency: LatencyStats::from_samples_ms(vec![1.0, 2.0, 3.0]),
+            latency_raw: LatencyRaw { stride: 1, samples_ms: vec![1.0, 2.0, 3.0] },
             partitions: vec![PartitionServingStats {
                 partition: 0,
                 overlay: "8x8-dsp2".into(),
@@ -630,6 +800,127 @@ mod tests {
         assert!(r.contains("1 retried dispatches, 1 quarantine events"), "{r}");
         assert!(r.contains("1 active pairs, 2 re-probes, 1 recoveries"), "{r}");
         assert_eq!(s.autoscale.unwrap().applied(), 3);
+    }
+
+    #[test]
+    fn serving_stats_merge_aligns_strides_and_sums_counters() {
+        // busy node: reservoir decimated twice (stride 4), slow samples
+        let busy = ServingStats {
+            total_dispatches: 32,
+            total_items: 3200,
+            cache: CacheStats { hits: 30, misses: 2, evictions: 1, entries: 2, capacity: 32 },
+            latency_raw: LatencyRaw { stride: 4, samples_ms: vec![100.0; 8] },
+            per_spec: vec![SpecServingStats {
+                spec: "8x8-dsp2".into(),
+                fingerprint: 0xABCD,
+                partitions: 2,
+                cache: CacheStats { hits: 30, misses: 2, evictions: 1, entries: 2, capacity: 32 },
+                compile_seconds: 0.2,
+                routed: 32,
+                best_fit: 30,
+                widest: 2,
+                only_fit: 0,
+                fallbacks: 0,
+                cross_spec_hits: 0,
+                replication_histogram: vec![(16, 30), (8, 2)],
+            }],
+            partitions: vec![PartitionServingStats {
+                partition: 0,
+                overlay: "8x8-dsp2".into(),
+                dispatches: 32,
+                reconfigs: 1,
+                busy_seconds: 0.8,
+                utilization: 0.8,
+            }],
+            admission: Some(crate::admission::AdmissionStats {
+                admitted: 32,
+                rejected_quota: 1,
+                rejected_deadline: 0,
+                shed: 2,
+                pressure: 0.9,
+                tenants: 3,
+            }),
+            ..Default::default()
+        };
+        // idle node: undecimated reservoir (stride 1), fast samples
+        let idle = ServingStats {
+            total_dispatches: 8,
+            total_items: 800,
+            cache: CacheStats { hits: 6, misses: 2, evictions: 0, entries: 2, capacity: 32 },
+            latency_raw: LatencyRaw { stride: 1, samples_ms: vec![1.0; 8] },
+            per_spec: vec![SpecServingStats {
+                spec: "8x8-dsp2".into(),
+                fingerprint: 0xABCD,
+                partitions: 1,
+                cache: CacheStats { hits: 6, misses: 2, evictions: 0, entries: 2, capacity: 32 },
+                compile_seconds: 0.1,
+                routed: 8,
+                best_fit: 8,
+                widest: 0,
+                only_fit: 0,
+                fallbacks: 0,
+                cross_spec_hits: 0,
+                replication_histogram: vec![(16, 8)],
+            }],
+            partitions: vec![PartitionServingStats {
+                partition: 0,
+                overlay: "8x8-dsp2".into(),
+                dispatches: 8,
+                reconfigs: 1,
+                busy_seconds: 0.1,
+                utilization: 0.1,
+            }],
+            admission: Some(crate::admission::AdmissionStats {
+                admitted: 8,
+                rejected_quota: 0,
+                rejected_deadline: 1,
+                shed: 0,
+                pressure: 0.1,
+                tenants: 2,
+            }),
+            ..Default::default()
+        };
+
+        let m = ServingStats::merge(&[busy, idle]);
+        assert_eq!(m.total_dispatches, 40);
+        assert_eq!(m.total_items, 4000);
+        assert_eq!(m.cache.hits, 36);
+        assert_eq!(m.cache.misses, 4);
+
+        // stride alignment: the idle node's 8 stride-1 samples thin to
+        // 2 at the cluster stride of 4, so the busy node's 8 retained
+        // samples (each standing for 4 dispatches) dominate the merged
+        // p50 — a naive 8-vs-8 concat would have dragged it to ~1ms.
+        assert_eq!(m.latency_raw.stride, 4);
+        assert_eq!(m.latency_raw.samples_ms.len(), 10);
+        assert_eq!(m.latency.count, 10);
+        assert_eq!(m.latency.p50_ms, 100.0);
+
+        // partition rows re-number instead of colliding
+        assert_eq!(m.partitions.len(), 2);
+        assert_eq!(m.partitions[0].partition, 0);
+        assert_eq!(m.partitions[1].partition, 1);
+
+        // per-spec rows merge by fingerprint, histograms included
+        assert_eq!(m.per_spec.len(), 1);
+        let spec = &m.per_spec[0];
+        assert_eq!(spec.fingerprint, 0xABCD);
+        assert_eq!(spec.partitions, 3);
+        assert_eq!(spec.routed, 40);
+        assert_eq!(spec.replication_histogram, vec![(8, 2), (16, 38)]);
+
+        // admission: counts sum, pressure/tenants take the max
+        let adm = m.admission.expect("merged admission");
+        assert_eq!(adm.admitted, 40);
+        assert_eq!(adm.rejected_quota, 1);
+        assert_eq!(adm.rejected_deadline, 1);
+        assert_eq!(adm.shed, 2);
+        assert_eq!(adm.pressure, 0.9);
+        assert_eq!(adm.tenants, 3);
+
+        // faults stay per-node; merging nothing yields a default
+        assert!(m.faults.is_none());
+        assert_eq!(ServingStats::merge(&[]).total_dispatches, 0);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Cluster-tier integration tests: the consistent-hash node layer
+//! observed through the public [`ClusterFrontend`] API.
+//!
+//! Covers the tier's core promises end to end, all offline:
+//! * **minimal remapping** — removing a ring member remaps only the
+//!   departed node's keys, and a rejoin restores the original map
+//!   exactly;
+//! * **affinity** — while its home node is `Live`, a kernel always
+//!   lands there, so cluster-wide compile misses equal the number of
+//!   distinct kernels — the distributed bitstream-cache property;
+//! * **overflow spill** — a saturated home spills to a strictly
+//!   less-loaded live sibling, typed, counted, and tenant-attributed
+//!   in the spill log;
+//! * **failover without hangs** — killing a node mid-stream resolves
+//!   every outstanding handle (completed, or failed with a typed
+//!   reason) and re-routes the node's ring range to its successors;
+//! * **warm rejoin** — a revived node restarts from its cache
+//!   snapshot and serves its shard with zero new compile misses.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use overlay_jit::bench_kernels::BENCHMARKS;
+use overlay_jit::cluster::{ClusterConfig, ClusterFrontend, HashRing, Health, SpillReason};
+use overlay_jit::coordinator::{
+    Admission, CoordinatorConfig, DispatchHandle, Priority, SubmitArg,
+};
+use overlay_jit::overlay::OverlaySpec;
+use overlay_jit::runtime_ocl::{Backend, Context, Device};
+use overlay_jit::util::XorShiftRng;
+
+fn host_ctx() -> Context {
+    let dev = Device {
+        spec: OverlaySpec::zynq_default(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    Context::new(&dev)
+}
+
+/// Random input buffers (with stencil slack) for a benchmark's params.
+fn random_args(ctx: &Context, source: &str, n: usize, rng: &mut XorShiftRng) -> Vec<SubmitArg> {
+    let nparams = overlay_jit::frontend::parse_kernel(source).unwrap().params.len();
+    (0..nparams)
+        .map(|_| {
+            let buf = ctx.create_buffer(n + 16);
+            let data: Vec<i32> = (0..n + 16).map(|_| rng.gen_i64(-30, 30) as i32).collect();
+            buf.write(&data);
+            SubmitArg::Buffer(buf)
+        })
+        .collect()
+}
+
+/// Poll a handle to a terminal outcome with a hard ceiling — the
+/// zero-hang check: a handle that never resolves fails the test
+/// instead of wedging it.
+fn resolve(h: &DispatchHandle, what: &str) -> Result<(), String> {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if let Some(outcome) = h.try_wait_typed() {
+            return match outcome {
+                Ok(r) => {
+                    assert_eq!(r.verified, Some(true), "{what}: completed unverified");
+                    Ok(())
+                }
+                Err(e) => Err(e.reason().name().to_string()),
+            };
+        }
+        if Instant::now() >= deadline {
+            panic!("{what}: handle hung past the 60s ceiling");
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+#[test]
+fn ring_removal_remaps_only_departed_keys_and_rejoin_restores() {
+    const NODES: usize = 5;
+    const KEYS: usize = 4_000;
+    let mut rng = XorShiftRng::new(0x41B9);
+    let keys: Vec<u64> = (0..KEYS).map(|_| rng.next_u64()).collect();
+
+    let mut ring = HashRing::with_nodes(NODES, 64);
+    let before: BTreeMap<u64, usize> =
+        keys.iter().map(|&k| (k, ring.home(k).unwrap())).collect();
+
+    let departed = 2;
+    assert!(ring.remove(departed));
+    assert!(!ring.contains(departed));
+    let mut moved = 0usize;
+    for &k in &keys {
+        let now = ring.home(k).unwrap();
+        if before[&k] == departed {
+            moved += 1;
+            assert_ne!(now, departed, "key {k:#x} still maps to the departed node");
+        } else {
+            // the minimal-remap property: every other key stays put
+            assert_eq!(
+                now, before[&k],
+                "key {k:#x} moved although its home {} never left",
+                before[&k]
+            );
+        }
+    }
+    // the departed node owned a real share of the keyspace
+    assert!(
+        moved > KEYS / (NODES * 4),
+        "departed node owned implausibly few keys ({moved})"
+    );
+
+    // rejoin restores the original map exactly — vnode hashes depend
+    // only on (node, replica), so placement is history-independent
+    ring.add(departed);
+    for &k in &keys {
+        assert_eq!(ring.home(k).unwrap(), before[&k]);
+    }
+}
+
+#[test]
+fn affinity_keeps_every_kernel_on_its_home_node() {
+    let node_cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    let mut cfg = ClusterConfig::sim_cluster(3, node_cfg);
+    // spill disabled: this test isolates the affinity property
+    cfg.spill_threshold = 1_000_000;
+    let cluster = ClusterFrontend::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0xAFF1);
+
+    const ROUNDS: usize = 4;
+    const ITEMS: usize = 256;
+    for round in 0..ROUNDS {
+        for b in BENCHMARKS {
+            let args = random_args(&ctx, b.source, ITEMS, &mut rng);
+            let h = cluster.submit(b.source, &args, ITEMS, Priority::Interactive).unwrap();
+            let r = h.wait().unwrap();
+            assert_eq!(r.verified, Some(true), "{} round {round}", b.name);
+        }
+    }
+
+    let stats = cluster.stats();
+    let total = (ROUNDS * BENCHMARKS.len()) as u64;
+    assert_eq!(stats.routed_total(), total);
+    assert_eq!(stats.affinity_hits, total, "every dispatch must land on its ring home");
+    assert_eq!(stats.affinity_rate(), 1.0);
+    assert_eq!(stats.spills, 0);
+    assert_eq!(stats.failovers, 0);
+    assert!(cluster.spill_log().is_empty());
+
+    // the distributed cache-affinity property: each distinct kernel
+    // compiles exactly once cluster-wide (on its home), every repeat
+    // is a hit there
+    assert_eq!(stats.merged.cache.misses, BENCHMARKS.len() as u64);
+    assert_eq!(stats.merged.cache.hits, total - BENCHMARKS.len() as u64);
+    assert_eq!(stats.merged.total_dispatches, total);
+
+    // the routed histogram matches the ring placement exactly
+    let mut expected = vec![0u64; 3];
+    for b in BENCHMARKS {
+        expected[cluster.home_of(b.source)] += ROUNDS as u64;
+    }
+    for (node, want) in expected.iter().enumerate() {
+        assert_eq!(stats.per_node[node].routed, *want, "node {node} routed histogram");
+        assert_eq!(stats.per_node[node].health, Health::Live);
+        assert!(stats.per_node[node].up);
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn saturated_home_spills_to_least_loaded_sibling() {
+    let node_cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    let mut cfg = ClusterConfig::sim_cluster(3, node_cfg);
+    // any queued-or-executing job counts as saturation
+    cfg.spill_threshold = 0;
+    let cluster = ClusterFrontend::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x5B1);
+
+    // wide batches of one kernel, fired without waiting: the home
+    // executes the first while later submits see its non-empty queue
+    const WIDE: usize = 16_384;
+    const BURST: usize = 6;
+    let b = &BENCHMARKS[0];
+    let home = cluster.home_of(b.source);
+    let mut handles = Vec::new();
+    for _ in 0..BURST {
+        let args = random_args(&ctx, b.source, WIDE, &mut rng);
+        match cluster
+            .submit_gated("burst-tenant", b.source, &args, WIDE, Priority::Batch, None)
+            .unwrap()
+        {
+            Admission::Admitted(h) => handles.push(h),
+            Admission::Rejected(r) => panic!("ungated cluster rejected: {r}"),
+        }
+    }
+    for (i, h) in handles.iter().enumerate() {
+        resolve(h, &format!("burst {i}")).expect("no node died; every dispatch completes");
+    }
+
+    let stats = cluster.stats();
+    assert_eq!(stats.routed_total(), BURST as u64);
+    assert!(stats.spills >= 1, "a saturated home must spill: {}", stats.render());
+    assert_eq!(stats.failovers, 0, "nobody died; off-home routing is all overflow");
+    assert_eq!(stats.spills + stats.affinity_hits, BURST as u64);
+    assert_eq!(stats.dropped_spill_records, 0);
+
+    // the spill log carries the typed reason and the admission tenant
+    let log = cluster.spill_log();
+    assert_eq!(log.len() as u64, stats.spills);
+    for rec in &log {
+        assert_eq!(rec.reason, SpillReason::HomeOverloaded);
+        assert_eq!(rec.reason.name(), "home_overloaded");
+        assert_eq!(rec.tenant, "burst-tenant");
+        assert_eq!(rec.from, home);
+        assert_ne!(rec.to, home, "a spill by definition leaves the home node");
+        assert_eq!(rec.kernel_key, ClusterFrontend::kernel_key(b.source));
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn node_death_mid_stream_resolves_every_handle_and_fails_over() {
+    let node_cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    let mut cfg = ClusterConfig::sim_cluster(3, node_cfg);
+    cfg.spill_threshold = 1_000_000; // isolate failover from overflow spill
+    let cluster = ClusterFrontend::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0xDEAD);
+
+    const WIDE: usize = 16_384;
+    let b = &BENCHMARKS[0];
+    let victim = cluster.home_of(b.source);
+    assert_eq!(cluster.health_of(victim), Health::Live);
+
+    // a stream of wide jobs piles onto the victim's queue...
+    let mut pre_kill = Vec::new();
+    for _ in 0..4 {
+        let args = random_args(&ctx, b.source, WIDE, &mut rng);
+        pre_kill.push(cluster.submit(b.source, &args, WIDE, Priority::Batch).unwrap());
+    }
+    // ...and the victim dies mid-stream
+    assert!(cluster.kill_node(victim).unwrap());
+    assert_eq!(cluster.health_of(victim), Health::Down);
+    assert!(!cluster.kill_node(victim).unwrap(), "double-kill reports already down");
+
+    // zero hangs: every outstanding handle resolves — completed
+    // (drained before the kill) or failed with a typed reason
+    let mut completed = 0usize;
+    let mut failed = 0usize;
+    for (i, h) in pre_kill.iter().enumerate() {
+        match resolve(h, &format!("pre-kill {i}")) {
+            Ok(()) => completed += 1,
+            Err(reason) => {
+                failed += 1;
+                assert!(
+                    ["worker_died", "shed", "deadline_rejected"].contains(&reason.as_str()),
+                    "pre-kill {i}: unexpected fail reason {reason:?}"
+                );
+            }
+        }
+    }
+    assert_eq!(completed + failed, 4);
+
+    // the victim's ring range now serves from its successors: new
+    // submits of the same kernel succeed as typed failovers
+    for i in 0..3 {
+        let args = random_args(&ctx, b.source, 256, &mut rng);
+        let h = cluster.submit(b.source, &args, 256, Priority::Interactive).unwrap();
+        resolve(&h, &format!("failover {i}")).expect("failover dispatch must complete");
+    }
+    let stats = cluster.stats();
+    assert_eq!(stats.failovers, 3, "{}", stats.render());
+    let log = cluster.spill_log();
+    assert_eq!(log.len(), 3);
+    for rec in &log {
+        assert_eq!(rec.reason, SpillReason::HomeDown);
+        assert_eq!(rec.from, victim);
+        assert_ne!(rec.to, victim);
+    }
+    // the dead node stays down and visible in the per-node rows
+    assert!(!stats.per_node[victim].up);
+    assert_eq!(stats.per_node[victim].health, Health::Down);
+    cluster.shutdown();
+}
+
+#[test]
+fn revived_node_warm_starts_and_reclaims_its_ring_range() {
+    let dir = std::env::temp_dir().join(format!(
+        "overlay-jit-cluster-rejoin-{}",
+        std::process::id()
+    ));
+    let node_cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    let mut cfg = ClusterConfig::sim_cluster(3, node_cfg);
+    cfg.spill_threshold = 1_000_000;
+    cfg.snapshot_base = Some(dir.clone());
+    let cluster = ClusterFrontend::new(cfg).unwrap();
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0xECA);
+
+    const ITEMS: usize = 256;
+    let b = &BENCHMARKS[0];
+    let victim = cluster.home_of(b.source);
+
+    // first contact compiles once on the home
+    let args = random_args(&ctx, b.source, ITEMS, &mut rng);
+    cluster.submit(b.source, &args, ITEMS, Priority::Interactive).unwrap().wait().unwrap();
+    assert_eq!(cluster.stats().merged.cache.misses, 1);
+
+    // kill (flushes the snapshot) and rejoin
+    assert!(cluster.kill_node(victim).unwrap());
+    cluster.revive_node(victim).unwrap();
+    assert_eq!(cluster.health_of(victim), Health::Live);
+
+    // the revived home reclaims its range and serves it warm: no new
+    // compile miss anywhere in the cluster
+    let args = random_args(&ctx, b.source, ITEMS, &mut rng);
+    let r = cluster
+        .submit(b.source, &args, ITEMS, Priority::Interactive)
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert_eq!(r.verified, Some(true));
+    let stats = cluster.stats();
+    assert_eq!(
+        stats.merged.cache.misses, 1,
+        "rejoin must warm-start from the snapshot, not recompile: {}",
+        stats.render()
+    );
+    assert!(stats.merged.cache.hits >= 1);
+    assert_eq!(stats.failovers, 0, "a Live rejoined home takes its range back");
+    assert_eq!(stats.per_node[victim].routed, 2);
+    cluster.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
