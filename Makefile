@@ -23,6 +23,15 @@
 #                     affinity beats random placement, and the node
 #                     rejoins warm from its snapshot. Non-blocking CI
 #                     job.
+#   make trace      — observability acceptance harness
+#                     (examples/e2e_serve -- trace): replays the
+#                     overload campaign and a cluster failover with
+#                     the span recorder armed; exits non-zero unless
+#                     every trace is complete, the failover hop is
+#                     attributed, the flight recorder holds an
+#                     exemplar per anomaly, and both telemetry
+#                     exports (trace.json, metrics.prom) re-parse
+#                     consistently. Non-blocking CI job.
 #   make bench      — the paper-figure + serving bench harnesses
 #   make bench-json — the §E11 hot-path data-plane bench; writes
 #                     machine-readable BENCH_hotpath.json at the repo
@@ -34,7 +43,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy build test soak overload cluster bench bench-build bench-json doc artifacts
+.PHONY: check fmt clippy build test soak overload cluster trace bench bench-build bench-json doc artifacts
 
 check: fmt clippy test bench-build doc
 
@@ -70,6 +79,12 @@ overload:
 cluster:
 	$(CARGO) run --release --example e2e_serve -- cluster
 
+# the observability acceptance harness: traced overload + cluster
+# failover; writes $$TRACE_OUT (default trace.json) and $$METRICS_OUT
+# (default metrics.prom) and re-parses both
+trace:
+	$(CARGO) run --release --example e2e_serve -- trace
+
 bench:
 	$(CARGO) bench --bench serve_throughput
 	$(CARGO) bench --bench fleet_routing
@@ -77,6 +92,7 @@ bench:
 	$(CARGO) bench --bench autoscale
 	$(CARGO) bench --bench jit_stages
 	$(CARGO) bench --bench hot_path
+	$(CARGO) bench --bench obs_overhead
 
 # the §E11 data-plane bench (scalar-vs-blocked simulator, cloned-vs-
 # arena dispatch, global-vs-sharded log, submit hot path); emits

@@ -62,6 +62,21 @@
 //! placement by a wide margin, ≥ 1 typed failover fired, and the
 //! rejoined node serves its range without a single new compile miss.
 //!
+//! **Trace mode** — `cargo run --release --example e2e_serve --
+//! trace` — the observability harness: the overload campaign (part A)
+//! and a 3-node cluster with a scripted home-node death (part B) are
+//! replayed with the [`overlay_jit::obs`] span recorder armed. Every
+//! submit must produce a structurally complete trace (exactly one
+//! root, zero orphaned parent references, zero ring overwrites), at
+//! least one cross-node hop span must attribute the failover to the
+//! sibling that actually served it, and the flight recorder must hold
+//! an exemplar trace for every exercised rejection kind and fault
+//! kind. Both exporters run and are re-parsed: the merged Chrome
+//! trace document goes to `$TRACE_OUT` (default `trace.json`) and the
+//! Prometheus text page to `$METRICS_OUT` (default `metrics.prom`),
+//! whose counters must agree with [`ServingStats`] totals. Any
+//! violated check exits non-zero.
+//!
 //! **PJRT mode** — `make artifacts && cargo run --release --features
 //! pjrt --example e2e_serve -- pjrt` — the original single-device
 //! path: JIT-compiles the six benchmarks and serves batched requests
@@ -104,6 +119,7 @@ fn main() -> Result<()> {
         Some("autoscale") => serve_autoscale(),
         Some("overload") => serve_overload(),
         Some("cluster") => serve_cluster(),
+        Some("trace") => serve_trace(),
         Some("coordinator") | None => {
             let per_spec = args
                 .get(1)
@@ -114,7 +130,7 @@ fn main() -> Result<()> {
         Some(other) => {
             bail!(
                 "unknown mode '{other}' (coordinator [N] | autoscale | overload | \
-                 cluster | pjrt)"
+                 cluster | trace | pjrt)"
             )
         }
     }
@@ -864,6 +880,398 @@ fn serve_cluster() -> Result<()> {
     );
     cluster.shutdown();
     let _ = std::fs::remove_dir_all(&snapshot_base);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// trace mode: end-to-end tracing, flight recorder, telemetry export
+// ---------------------------------------------------------------------
+
+/// Rounds of the traced overload stream (part A).
+const TRACE_ROUNDS: usize = 2;
+/// Ceiling for every traced handle to reach a terminal outcome.
+const TRACE_TIMEOUT: Duration = Duration::from_secs(240);
+
+fn serve_trace() -> Result<()> {
+    use anyhow::anyhow;
+    use overlay_jit::admission::ALL_FAULT_KINDS;
+    use overlay_jit::cluster::{ClusterConfig, ClusterFrontend};
+    use overlay_jit::obs::{
+        check_traces, chrome_trace, Phase, Span, TraceHandle, TraceSink, CLASS_FAULT,
+        CLASS_REJECT, CLASS_TAIL, FRONTEND_NODE,
+    };
+    use overlay_jit::util::JsonValue;
+
+    // ---- part A: the overload campaign, traced -----------------------
+    // Same recipe as overload mode (flood tenant → quota + shed, doomed
+    // deadline → early rejection, scripted strikes on the five cold
+    // primer submits → all four fault kinds), shrunk to TRACE_ROUNDS.
+    let sink_a = TraceSink::new(8, 16_384);
+    let big = reference_overlay();
+    let small = OverlaySpec::new(4, 4, FuType::Dsp2);
+    let mut cfg = CoordinatorConfig::sim_fleet_mixed(vec![
+        (big.clone(), 2),
+        (small.clone(), 2),
+    ]);
+    cfg.admission = Some(AdmissionConfig {
+        tenant_rate_per_sec: 48.0,
+        tenant_burst: 24.0,
+        shed_pressure: 0.5,
+        interactive_slo_ms: OVERLOAD_SLO_MS,
+        queue_stall_depth: 4,
+        pressure_window: 16,
+        max_tenants: 16,
+    });
+    cfg.faults = Some(FaultPlanConfig {
+        seed: 0xFA17,
+        worker_kill_rate: 0.0,
+        reconfig_fail_rate: 0.0,
+        verify_corrupt_rate: 0.0,
+        compile_fail_rate: 0.0,
+        scripted: vec![
+            (1, FaultKind::CompileFail),
+            (2, FaultKind::WorkerKill),
+            (3, FaultKind::ReconfigFail),
+            (4, FaultKind::VerifyCorrupt),
+        ],
+    });
+    cfg.trace = Some(TraceHandle::new(sink_a.clone(), 0));
+    let coord = Coordinator::new(cfg)?;
+    println!(
+        "trace A: overload campaign over 2x {} + 2x {}, {TRACE_ROUNDS} rounds, \
+         recorder armed (8 shards x 16384 spans)\n",
+        big.name(),
+        small.name()
+    );
+
+    let host = Device {
+        spec: big.clone(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    let ctx = Context::new(&host);
+    let mut rng = XorShiftRng::new(0x0B5E55);
+
+    let mut nparams_by_bench = Vec::with_capacity(BENCHMARKS.len());
+    for b in &BENCHMARKS {
+        nparams_by_bench.push(overlay_jit::frontend::parse_kernel(b.source)?.params.len());
+    }
+    let make_args = |nparams: usize, items: usize, rng: &mut XorShiftRng| {
+        (0..nparams)
+            .map(|_| {
+                let buf = ctx.create_buffer(items + 16);
+                let data: Vec<i32> = (0..items + 16)
+                    .map(|_| rng.gen_i64(-40, 40) as i32)
+                    .collect();
+                buf.write(&data);
+                SubmitArg::Buffer(buf)
+            })
+            .collect::<Vec<SubmitArg>>()
+    };
+
+    let mut ledgers: HashMap<&'static str, TenantLedger> = HashMap::new();
+    let mut handles: Vec<(&'static str, bool, overlay_jit::coordinator::DispatchHandle)> =
+        Vec::new();
+
+    // primer: pins the scripted strikes to seq 0..4 (five cold kernels)
+    for (b, &nparams) in BENCHMARKS.iter().take(5).zip(&nparams_by_bench) {
+        let args = make_args(nparams, WIDE_ITEMS, &mut rng);
+        submit_one(
+            &coord, &mut ledgers, &mut handles, "primer", b.source, &args, WIDE_ITEMS,
+            Priority::Batch, None,
+        )?;
+    }
+    // the doomed deadline: a typed early rejection → deadline exemplar
+    let args = make_args(nparams_by_bench[0], WIDE_ITEMS, &mut rng);
+    submit_one(
+        &coord, &mut ledgers, &mut handles, "doomed", BENCHMARKS[0].source, &args,
+        WIDE_ITEMS, Priority::Batch, Some(Duration::from_nanos(1)),
+    )?;
+
+    let compliant = ["alice", "bob", "carol"];
+    for round in 0..TRACE_ROUNDS {
+        if round == 1 {
+            // the flood: guarantees quota rejections and batch shedding
+            for _ in 0..FLOOD_SUBMITS {
+                let args = make_args(nparams_by_bench[0], WIDE_ITEMS, &mut rng);
+                submit_one(
+                    &coord, &mut ledgers, &mut handles, "flood", BENCHMARKS[0].source,
+                    &args, WIDE_ITEMS, Priority::Batch, None,
+                )?;
+            }
+        }
+        for (b, &nparams) in BENCHMARKS.iter().zip(&nparams_by_bench) {
+            for t in compliant {
+                let narrow = make_args(nparams, SMALL_ITEMS, &mut rng);
+                submit_one(
+                    &coord, &mut ledgers, &mut handles, t, b.source, &narrow,
+                    SMALL_ITEMS, Priority::Interactive, None,
+                )?;
+                let wide = make_args(nparams, WIDE_ITEMS, &mut rng);
+                submit_one(
+                    &coord, &mut ledgers, &mut handles, t, b.source, &wide, WIDE_ITEMS,
+                    Priority::Batch, None,
+                )?;
+            }
+        }
+    }
+
+    // every admitted handle must reach a terminal outcome
+    let mut completed = 0usize;
+    let mut open = handles;
+    let poll_deadline = Instant::now() + TRACE_TIMEOUT;
+    while !open.is_empty() {
+        if Instant::now() > poll_deadline {
+            bail!(
+                "{} traced handles hung past {:?}: not every submit reached a \
+                 terminal outcome",
+                open.len(),
+                TRACE_TIMEOUT
+            );
+        }
+        let mut still = Vec::with_capacity(open.len());
+        for (tenant, interactive, h) in open {
+            match h.try_wait_typed() {
+                Some(Ok(_)) => completed += 1,
+                Some(Err(e)) => bail!(
+                    "tenant {tenant} dispatch failed unrecovered ({}): {e}",
+                    e.reason().name()
+                ),
+                None => still.push((tenant, interactive, h)),
+            }
+        }
+        open = still;
+        if !open.is_empty() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    coord.drain_background();
+    let stats = coord.stats();
+
+    // structural completeness over part A's merged spans
+    let spans_a = sink_a.spans();
+    let sink_stats = sink_a.stats();
+    if sink_stats.overwritten > 0 {
+        bail!(
+            "{} spans overwritten: the ring capacity is too small for a \
+             completeness check",
+            sink_stats.overwritten
+        );
+    }
+    let chk = check_traces(&spans_a);
+    if chk.orphans != 0 {
+        bail!("{} orphaned spans: a parent reference escaped its trace", chk.orphans);
+    }
+    if chk.rooted != chk.traces {
+        bail!(
+            "{} of {} traces lack exactly one root span",
+            chk.traces - chk.rooted,
+            chk.traces
+        );
+    }
+    if chk.traces != sink_stats.traces as usize {
+        bail!(
+            "{} traces opened but only {} survive in the rings",
+            sink_stats.traces,
+            chk.traces
+        );
+    }
+    println!(
+        "part A: {} spans across {} traces, all rooted, 0 orphans \
+         ({} completed dispatches)",
+        spans_a.len(),
+        chk.traces,
+        completed
+    );
+
+    // the flight recorder must hold an exemplar per exercised anomaly
+    for kind in ["quota", "deadline", "shed"] {
+        let e = sink_a
+            .exemplar(CLASS_REJECT, kind)
+            .ok_or_else(|| anyhow!("no exemplar trace pinned for rejection '{kind}'"))?;
+        println!(
+            "  exemplar reject/{kind:<9} trace {} ({} occurrences)",
+            e.trace_id, e.count
+        );
+    }
+    for kind in ALL_FAULT_KINDS {
+        let e = sink_a.exemplar(CLASS_FAULT, kind.name()).ok_or_else(|| {
+            anyhow!("no exemplar trace pinned for fault '{}'", kind.name())
+        })?;
+        println!(
+            "  exemplar fault/{:<10} trace {} ({} occurrences)",
+            kind.name(),
+            e.trace_id,
+            e.count
+        );
+    }
+    let tail = sink_a
+        .exemplar(CLASS_TAIL, "e2e")
+        .ok_or_else(|| anyhow!("no tail-latency exemplar pinned"))?;
+    println!(
+        "  exemplar tail/e2e       trace {} ({} µs worst end-to-end)\n",
+        tail.trace_id, tail.weight
+    );
+
+    // ---- part B: cluster failover with trace propagation -------------
+    let sink_b = TraceSink::new(4, 8_192);
+    let spec = reference_overlay();
+    let mut ccfg = ClusterConfig::sim_cluster(
+        CLUSTER_NODES,
+        CoordinatorConfig::sim_fleet(spec.clone(), 2),
+    );
+    ccfg.trace = Some(sink_b.clone());
+    let cluster = ClusterFrontend::new(ccfg)?;
+    let victim = cluster.home_of(BENCHMARKS[0].source);
+    println!(
+        "trace B: {CLUSTER_NODES} nodes x 2 {} partitions; node-{victim} \
+         (chebyshev's home) dies after the warm round",
+        spec.name()
+    );
+
+    // warm round: every benchmark served on its home, waited to
+    // completion so the kill strands no in-flight work
+    for (b, &nparams) in BENCHMARKS.iter().zip(&nparams_by_bench) {
+        let narrow = make_args(nparams, SMALL_ITEMS, &mut rng);
+        match cluster.submit_gated(
+            "tracer", b.source, &narrow, SMALL_ITEMS, Priority::Interactive, None,
+        )? {
+            Admission::Admitted(h) => {
+                h.wait()?;
+            }
+            Admission::Rejected(r) => bail!("ungated cluster rejected {}: {r}", b.name),
+        }
+    }
+    // the scripted death: the victim's range fails over, and every
+    // post-kill submit homed there must carry a hop span
+    if !cluster.kill_node(victim)? {
+        bail!("scripted victim node-{victim} was already down");
+    }
+    for (b, &nparams) in BENCHMARKS.iter().zip(&nparams_by_bench) {
+        let narrow = make_args(nparams, SMALL_ITEMS, &mut rng);
+        match cluster.submit_gated(
+            "tracer", b.source, &narrow, SMALL_ITEMS, Priority::Interactive, None,
+        )? {
+            Admission::Admitted(h) => {
+                h.wait()?;
+            }
+            Admission::Rejected(r) => bail!("ungated cluster rejected {}: {r}", b.name),
+        }
+    }
+    cluster.drain();
+
+    let spans_b = sink_b.spans();
+    let chk_b = check_traces(&spans_b);
+    if chk_b.orphans != 0 || chk_b.rooted != chk_b.traces {
+        bail!(
+            "cluster traces incomplete: {} traces, {} rooted, {} orphans \
+             (trace context failed to propagate across the node boundary)",
+            chk_b.traces,
+            chk_b.rooted,
+            chk_b.orphans
+        );
+    }
+    // ≥ 1 failover hop, attributed to the sibling that actually served
+    // the dispatch: the hop's target (a1) must equal the node id on the
+    // same trace's coordinator-side Submit span
+    let hops: Vec<&Span> = spans_b
+        .iter()
+        .filter(|s| s.phase == Phase::Hop && s.node == FRONTEND_NODE)
+        .collect();
+    let mut attributed = 0usize;
+    for hop in &hops {
+        if hop.tag != "home_down" || hop.a0 as usize != victim {
+            continue;
+        }
+        let target = hop.a1 as u32;
+        if target as usize == victim {
+            bail!("failover hop re-targeted the dead home node-{victim}");
+        }
+        if spans_b.iter().any(|s| {
+            s.trace_id == hop.trace_id && s.phase == Phase::Submit && s.node == target
+        }) {
+            attributed += 1;
+        }
+    }
+    if attributed == 0 {
+        bail!(
+            "no failover hop was attributed to the sibling that served it \
+             ({} hop spans total)",
+            hops.len()
+        );
+    }
+    println!(
+        "part B: {} spans across {} traces, all rooted, 0 orphans; \
+         {} hop span(s), {} attributed home_down failover(s)\n",
+        spans_b.len(),
+        chk_b.traces,
+        hops.len(),
+        attributed
+    );
+
+    // ---- exporters: write, re-parse, cross-check ----------------------
+    // one Chrome document for both sinks: shift part B's ids clear of
+    // part A's so traces from the two runs cannot collide
+    const B_OFFSET: u64 = 1 << 32;
+    let mut merged = spans_a.clone();
+    merged.extend(spans_b.iter().map(|s| {
+        let mut s = *s;
+        s.trace_id += B_OFFSET;
+        s.span_id += B_OFFSET;
+        if s.parent != 0 {
+            s.parent += B_OFFSET;
+        }
+        s
+    }));
+    let doc = chrome_trace(&merged, 0);
+    let trace_out =
+        std::env::var("TRACE_OUT").unwrap_or_else(|_| "trace.json".to_string());
+    std::fs::write(&trace_out, doc.render())?;
+    let reparsed = JsonValue::parse(&std::fs::read_to_string(&trace_out)?)?;
+    let events = reparsed
+        .get("traceEvents")
+        .and_then(|v| v.as_array())
+        .ok_or_else(|| anyhow!("exported Chrome trace lacks a traceEvents array"))?;
+    if events.len() != merged.len() {
+        bail!(
+            "Chrome trace round-trip lost events: wrote {}, re-read {}",
+            merged.len(),
+            events.len()
+        );
+    }
+
+    let metrics_out =
+        std::env::var("METRICS_OUT").unwrap_or_else(|_| "metrics.prom".to_string());
+    std::fs::write(&metrics_out, stats.prometheus())?;
+    let samples = metrics::parse_prometheus(&std::fs::read_to_string(&metrics_out)?)?;
+    let sample = |name: &str| -> Result<f64> {
+        samples
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| anyhow!("exported metrics page lacks {name}"))
+    };
+    for (name, want) in [
+        ("overlay_jit_dispatches_total", stats.total_dispatches as f64),
+        ("overlay_jit_cache_hits_total", stats.cache.hits as f64),
+        ("overlay_jit_rejected_submits_total", stats.rejected_submits as f64),
+        ("overlay_jit_shed_submits_total", stats.shed_submits as f64),
+        ("overlay_jit_retried_dispatches_total", stats.retried_dispatches as f64),
+        ("overlay_jit_verify_failures_total", stats.verify_failures as f64),
+    ] {
+        let got = sample(name)?;
+        if got != want {
+            bail!("{name}: exported {got} but ServingStats says {want}");
+        }
+    }
+
+    cluster.shutdown();
+    println!(
+        "OK: {} events exported to {trace_out}, {} Prometheus samples to \
+         {metrics_out}, counters agree with ServingStats",
+        events.len(),
+        samples.len()
+    );
     Ok(())
 }
 

@@ -1,0 +1,156 @@
+//! Bench: §E14 — what the span recorder costs the serving hot path.
+//!
+//! Quantifies the tracing tax at both granularities and emits the
+//! results machine-readably to `BENCH_obs.json` (override with the
+//! `BENCH_JSON` environment variable):
+//!
+//! * **record micro-cost** — ns per `TraceSink::record` into a shard
+//!   ring (the per-span price every instrumented stage pays), against
+//!   the disabled sink's first-branch return;
+//! * **submit hot path** — µs per `Coordinator::submit` + wait of a
+//!   cache-resident kernel with tracing off vs on, the end-to-end
+//!   overhead a production deployment would see per dispatch.
+//!
+//! Run: `cargo bench --bench obs_overhead` (or `make bench`).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use overlay_jit::bench_kernels::BENCHMARKS;
+use overlay_jit::coordinator::{Coordinator, CoordinatorConfig, Priority, SubmitArg};
+use overlay_jit::metrics::TextTable;
+use overlay_jit::obs::{Phase, Span, TraceHandle, TraceSink, NO_WORKER};
+use overlay_jit::overlay::OverlaySpec;
+use overlay_jit::runtime_ocl::{Backend, Context, Device};
+use overlay_jit::util::{JsonValue, XorShiftRng};
+
+const RECORDS: usize = 200_000;
+const DISPATCHES: usize = 200;
+const ITEMS: usize = 512;
+
+fn median(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[xs.len() / 2]
+}
+
+fn bench_record(sink: &TraceSink) -> f64 {
+    let span = Span {
+        trace_id: 1,
+        span_id: 1,
+        parent: 0,
+        phase: Phase::Exec,
+        tag: "warm",
+        node: 0,
+        worker: NO_WORKER,
+        start_us: 0,
+        dur_us: 1,
+        a0: 0,
+        a1: 0,
+    };
+    let t = Instant::now();
+    for i in 0..RECORDS {
+        let mut s = span;
+        s.trace_id = i as u64 + 1;
+        sink.record(s);
+    }
+    t.elapsed().as_nanos() as f64 / RECORDS as f64
+}
+
+/// Median µs for submit + wait of a cache-resident kernel.
+fn bench_submit(coord: &Coordinator, ctx: &Context, rng: &mut XorShiftRng) -> f64 {
+    let b = &BENCHMARKS[0];
+    let nparams = overlay_jit::frontend::parse_kernel(b.source).unwrap().params.len();
+    let make_args = |rng: &mut XorShiftRng| {
+        (0..nparams)
+            .map(|_| {
+                let buf = ctx.create_buffer(ITEMS + 16);
+                let data: Vec<i32> =
+                    (0..ITEMS + 16).map(|_| rng.gen_i64(-40, 40) as i32).collect();
+                buf.write(&data);
+                SubmitArg::Buffer(buf)
+            })
+            .collect::<Vec<SubmitArg>>()
+    };
+    // warm: pay the one-time JIT outside the timed loop
+    let args = make_args(rng);
+    coord
+        .submit(b.source, &args, ITEMS, Priority::Interactive)
+        .unwrap()
+        .wait()
+        .unwrap();
+
+    let mut us = Vec::with_capacity(DISPATCHES);
+    for _ in 0..DISPATCHES {
+        let args = make_args(rng);
+        let t = Instant::now();
+        coord
+            .submit(b.source, &args, ITEMS, Priority::Interactive)
+            .unwrap()
+            .wait()
+            .unwrap();
+        us.push(t.elapsed().as_micros() as f64);
+    }
+    median(us)
+}
+
+fn main() {
+    let mut rng = XorShiftRng::new(0x0B5E);
+
+    // record micro-cost: armed ring vs the no-op recorder
+    let armed = TraceSink::new(8, 65_536);
+    let on_ns = bench_record(&armed);
+    let disabled = TraceSink::disabled();
+    let off_ns = bench_record(&disabled);
+
+    // submit hot path: two identical single-partition fleets
+    let ctx = Context::new(&Device {
+        spec: OverlaySpec::zynq_default(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    });
+    let coord_off =
+        Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1))
+            .unwrap();
+    let off_us = bench_submit(&coord_off, &ctx, &mut rng);
+
+    let sink = TraceSink::new(8, 65_536);
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.trace = Some(TraceHandle::new(sink.clone(), 0));
+    let coord_on = Coordinator::new(cfg).unwrap();
+    let on_us = bench_submit(&coord_on, &ctx, &mut rng);
+    let per_dispatch_spans =
+        sink.stats().recorded as f64 / (DISPATCHES + 1) as f64;
+
+    let mut table = TextTable::new(vec!["path", "tracing off", "tracing on", "overhead"]);
+    table.row(vec![
+        "record ns/span".to_string(),
+        format!("{off_ns:.1}"),
+        format!("{on_ns:.1}"),
+        format!("+{:.1} ns", on_ns - off_ns),
+    ]);
+    table.row(vec![
+        "submit+wait µs/dispatch".to_string(),
+        format!("{off_us:.1}"),
+        format!("{on_us:.1}"),
+        format!("{:+.1}%", 100.0 * (on_us - off_us) / off_us),
+    ]);
+    println!("{}", table.render());
+    println!(
+        "({} records, {} timed dispatches, ~{:.1} spans recorded per dispatch)",
+        RECORDS, DISPATCHES, per_dispatch_spans
+    );
+
+    let mut doc = BTreeMap::new();
+    doc.insert("record_ns_off".to_string(), JsonValue::Number(off_ns));
+    doc.insert("record_ns_on".to_string(), JsonValue::Number(on_ns));
+    doc.insert("submit_us_off".to_string(), JsonValue::Number(off_us));
+    doc.insert("submit_us_on".to_string(), JsonValue::Number(on_us));
+    doc.insert(
+        "spans_per_dispatch".to_string(),
+        JsonValue::Number(per_dispatch_spans),
+    );
+    let path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_obs.json".to_string());
+    std::fs::write(&path, JsonValue::Object(doc).render()).expect("write bench json");
+    println!("wrote {path}");
+}

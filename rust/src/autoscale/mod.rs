@@ -47,6 +47,7 @@ use std::sync::{Arc, Mutex};
 use crate::compiler::ServableKernel;
 use crate::coordinator::CacheKey;
 use crate::metrics::AutoscaleStats;
+use crate::util::BoundedLog;
 
 /// (kernel, spec) pairs tracked at once. Signals are tiny, but the
 /// serving layer's memory must stay flat however many distinct
@@ -157,16 +158,28 @@ struct KernelScaleState {
     floor: Option<QueueFloor>,
 }
 
-#[derive(Default)]
 struct EventLog {
-    events: Vec<ScaleEvent>,
-    dropped: u64,
+    events: BoundedLog<ScaleEvent>,
     seq: u64,
     ups: u64,
     downs: u64,
     failed: u64,
     cache_hits: u64,
     compile_seconds: f64,
+}
+
+impl EventLog {
+    fn new(capacity: usize) -> EventLog {
+        EventLog {
+            events: BoundedLog::new(capacity),
+            seq: 0,
+            ups: 0,
+            downs: 0,
+            failed: 0,
+            cache_hits: 0,
+            compile_seconds: 0.0,
+        }
+    }
 }
 
 /// The feedback-driven autoscaler. Shared (`Arc`) between the
@@ -194,11 +207,8 @@ impl Autoscaler {
     /// Build an autoscaler around a validated policy (the coordinator
     /// calls [`AutoscalePolicy::validate`] first).
     pub fn new(policy: AutoscalePolicy) -> Autoscaler {
-        Autoscaler {
-            policy,
-            state: Mutex::new(HashMap::new()),
-            log: Mutex::new(EventLog::default()),
-        }
+        let log = Mutex::new(EventLog::new(policy.max_events));
+        Autoscaler { policy, state: Mutex::new(HashMap::new()), log }
     }
 
     pub fn policy(&self) -> &AutoscalePolicy {
@@ -364,7 +374,7 @@ impl Autoscaler {
         }
         log.compile_seconds += compile_seconds;
         let outcome = ScaleOutcome::Applied { cache_hit, compile_seconds };
-        Self::push_event(&mut log, &self.policy, proposal, outcome);
+        Self::push_event(&mut log, proposal, outcome);
     }
 
     /// Record a failed background compile: the previous factor keeps
@@ -380,18 +390,13 @@ impl Autoscaler {
         let mut log = self.log.lock().unwrap();
         log.failed += 1;
         let outcome = ScaleOutcome::Failed { error: error.to_string() };
-        Self::push_event(&mut log, &self.policy, proposal, outcome);
+        Self::push_event(&mut log, proposal, outcome);
     }
 
-    fn push_event(
-        log: &mut EventLog,
-        policy: &AutoscalePolicy,
-        p: &ScaleProposal,
-        outcome: ScaleOutcome,
-    ) {
+    fn push_event(log: &mut EventLog, p: &ScaleProposal, outcome: ScaleOutcome) {
         let seq = log.seq;
         log.seq += 1;
-        let event = ScaleEvent {
+        log.events.push(ScaleEvent {
             seq,
             kernel: p.kernel.clone(),
             source_hash: p.source_hash,
@@ -403,18 +408,13 @@ impl Autoscaler {
             queue_triggered: p.queue_triggered,
             trigger: p.trigger,
             outcome,
-        };
-        if log.events.len() < policy.max_events {
-            log.events.push(event);
-        } else {
-            log.dropped += 1;
-        }
+        });
     }
 
     /// The retained scale events (oldest first, bounded by
     /// [`AutoscalePolicy::max_events`]).
     pub fn events(&self) -> Vec<ScaleEvent> {
-        self.log.lock().unwrap().events.clone()
+        self.log.lock().unwrap().events.items().to_vec()
     }
 
     pub fn stats(&self) -> AutoscaleStats {
@@ -428,7 +428,7 @@ impl Autoscaler {
             rescale_compile_seconds: log.compile_seconds,
             active_variants: state.values().filter(|s| s.active.is_some()).count(),
             tracked_kernels: state.len(),
-            events_dropped: log.dropped,
+            events_dropped: log.events.dropped(),
             admission_rejects: state.values().map(|s| s.signal.rejects()).sum(),
         }
     }

@@ -25,7 +25,7 @@
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
@@ -34,7 +34,10 @@ use crate::coordinator::{
     Admission, CoordinatorConfig, DispatchHandle, Priority, SubmitArg,
 };
 use crate::metrics::ServingStats;
-use crate::util::fnv1a_64;
+use crate::obs::{
+    ParentCtx, Phase, SubmitTrace, TraceHandle, TraceSink, FRONTEND_NODE,
+};
+use crate::util::{fnv1a_64, BoundedLog};
 
 use super::health::{Health, HealthBoard};
 use super::node::Node;
@@ -107,6 +110,11 @@ pub struct ClusterConfig {
     /// Bounded spill-log length; older records beyond it are counted
     /// as dropped, mirroring the router's record buffer.
     pub max_spill_records: usize,
+    /// When set, every node's coordinator and the front door itself
+    /// record phase spans into this shared sink (the front door's own
+    /// spans carry node id [`FRONTEND_NODE`]); `None` serves untraced
+    /// through the no-op recorder.
+    pub trace: Option<Arc<TraceSink>>,
 }
 
 impl ClusterConfig {
@@ -122,6 +130,7 @@ impl ClusterConfig {
             suspect_after_ms: 500,
             down_after_ms: 2_000,
             max_spill_records: 4_096,
+            trace: None,
         }
     }
 }
@@ -217,13 +226,12 @@ pub struct ClusterFrontend {
     /// wall time, so health transitions are exactly reproducible.
     clock_ms: AtomicU64,
     spill_threshold: usize,
-    max_spill_records: usize,
     affinity_hits: AtomicU64,
     spills: AtomicU64,
     failovers: AtomicU64,
     routed_per_node: Vec<AtomicU64>,
-    dropped_spill_records: AtomicU64,
-    spill_log: Mutex<Vec<SpillRecord>>,
+    spill_log: Mutex<BoundedLog<SpillRecord>>,
+    trace: TraceHandle,
 }
 
 impl std::fmt::Debug for ClusterFrontend {
@@ -250,8 +258,17 @@ impl ClusterFrontend {
             if let Some(base) = &config.snapshot_base {
                 node_config.snapshot_dir = Some(base.join(format!("node-{id}")));
             }
+            if let Some(sink) = &config.trace {
+                // the handle lives in the node's retained config, so a
+                // revived node keeps tracing into the same sink
+                node_config.trace = Some(TraceHandle::new(sink.clone(), id as u32));
+            }
             nodes.push(Mutex::new(Node::new(id, node_config)?));
         }
+        let trace = match &config.trace {
+            Some(sink) => TraceHandle::new(sink.clone(), FRONTEND_NODE),
+            None => TraceHandle::disabled(),
+        };
         Ok(ClusterFrontend {
             ring: HashRing::with_nodes(config.nodes, config.vnodes),
             health: Mutex::new(HealthBoard::new(
@@ -261,13 +278,12 @@ impl ClusterFrontend {
             )),
             clock_ms: AtomicU64::new(0),
             spill_threshold: config.spill_threshold,
-            max_spill_records: config.max_spill_records,
             affinity_hits: AtomicU64::new(0),
             spills: AtomicU64::new(0),
             failovers: AtomicU64::new(0),
             routed_per_node: (0..config.nodes).map(|_| AtomicU64::new(0)).collect(),
-            dropped_spill_records: AtomicU64::new(0),
-            spill_log: Mutex::new(Vec::new()),
+            spill_log: Mutex::new(BoundedLog::new(config.max_spill_records)),
+            trace,
             nodes,
         })
     }
@@ -389,19 +405,14 @@ impl ClusterFrontend {
             SpillReason::HomeOverloaded => self.spills.fetch_add(1, Ordering::Relaxed),
             SpillReason::HomeDown => self.failovers.fetch_add(1, Ordering::Relaxed),
         };
-        let mut log = self.spill_log.lock().unwrap();
-        if log.len() < self.max_spill_records {
-            log.push(SpillRecord {
-                kernel_key: key,
-                tenant: tenant.to_string(),
-                from: home,
-                to: target,
-                reason,
-                priority,
-            });
-        } else {
-            self.dropped_spill_records.fetch_add(1, Ordering::Relaxed);
-        }
+        self.spill_log.lock().unwrap().push(SpillRecord {
+            kernel_key: key,
+            tenant: tenant.to_string(),
+            from: home,
+            to: target,
+            reason,
+            priority,
+        });
     }
 
     /// Cluster submit with the single-node completion contract (see
@@ -444,19 +455,68 @@ impl ClusterFrontend {
         priority: Priority,
         deadline: Option<Duration>,
     ) -> Result<Admission> {
+        let trace = SubmitTrace::begin(&self.trace, None);
+        let result = self.submit_routed(
+            tenant,
+            source,
+            args,
+            global_size,
+            priority,
+            deadline,
+            trace.as_ref(),
+        );
+        if let Some(t) = &trace {
+            let tag = match &result {
+                Ok(Admission::Admitted(_)) => "admitted",
+                Ok(Admission::Rejected(_)) => "rejected",
+                Err(_) => "error",
+            };
+            t.finish_root(Phase::Frontend, tag, 0);
+        }
+        result
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn submit_routed(
+        &self,
+        tenant: &str,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+        trace: Option<&SubmitTrace>,
+    ) -> Result<Admission> {
         let key = Self::kernel_key(source);
+        let parent = trace.map(|t| ParentCtx {
+            trace_id: t.trace_id,
+            parent_span: t.root,
+        });
         // a routing decision can race a kill; each pass either submits
         // or declares one more node down, so the loop is bounded
         for _ in 0..=self.nodes.len() {
+            let t_route = trace.map(|t| t.now()).unwrap_or(0);
             let (target, home, reason) = self.route(key, priority)?;
+            if let (Some(t), Some(r)) = (trace, reason) {
+                // the hop span attributes the off-home decision:
+                // a0 = home node, a1 = the sibling that took it
+                t.child(Phase::Hop, r.name(), t_route, home as u64, target as u64);
+            }
             let node = self.nodes[target].lock().unwrap();
             if !node.is_up() {
                 drop(node);
                 self.health.lock().unwrap().mark_down(target);
                 continue;
             }
-            let admission =
-                node.submit_gated(tenant, source, args, global_size, priority, deadline)?;
+            let admission = node.submit_traced(
+                tenant,
+                source,
+                args,
+                global_size,
+                priority,
+                deadline,
+                parent,
+            )?;
             drop(node);
             self.note_route(key, tenant, priority, target, home, reason);
             return Ok(admission);
@@ -499,7 +559,13 @@ impl ClusterFrontend {
     /// The retained off-home routing records (oldest first, bounded by
     /// [`ClusterConfig::max_spill_records`]).
     pub fn spill_log(&self) -> Vec<SpillRecord> {
-        self.spill_log.lock().unwrap().clone()
+        self.spill_log.lock().unwrap().items().to_vec()
+    }
+
+    /// The front door's trace handle (the shared sink when tracing is
+    /// on, the no-op recorder otherwise).
+    pub fn trace(&self) -> &TraceHandle {
+        &self.trace
     }
 
     /// Cluster-wide stats: per-node views (lifetime — a killed node's
@@ -535,7 +601,7 @@ impl ClusterFrontend {
             affinity_hits: self.affinity_hits.load(Ordering::Relaxed),
             spills: self.spills.load(Ordering::Relaxed),
             failovers: self.failovers.load(Ordering::Relaxed),
-            dropped_spill_records: self.dropped_spill_records.load(Ordering::Relaxed),
+            dropped_spill_records: self.spill_log.lock().unwrap().dropped(),
         }
     }
 

@@ -30,6 +30,7 @@ use crate::coordinator::{
     Admission, Coordinator, CoordinatorConfig, Priority, SubmitArg,
 };
 use crate::metrics::ServingStats;
+use crate::obs::ParentCtx;
 
 /// An in-process cluster node. See module docs.
 pub struct Node {
@@ -108,6 +109,31 @@ impl Node {
     ) -> Result<Admission> {
         self.up()?
             .submit_gated(tenant, source, args, global_size, priority, deadline)
+    }
+
+    /// [`Node::submit_gated`] with trace-context propagation: the
+    /// coordinator's submit spans parent to the front door's root span
+    /// instead of opening a fresh trace.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_traced(
+        &self,
+        tenant: &str,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+        parent: Option<ParentCtx>,
+    ) -> Result<Admission> {
+        self.up()?.submit_traced(
+            tenant,
+            source,
+            args,
+            global_size,
+            priority,
+            deadline,
+            parent,
+        )
     }
 
     /// Jobs queued or executing across the node's partitions — the

@@ -49,6 +49,7 @@ use crate::admission::{FaultKind, FaultPlan};
 use crate::arena::{DispatchScratch, ScratchPool};
 use crate::autoscale::Autoscaler;
 use crate::fleet::Priority;
+use crate::obs::{JobTrace, Phase, CLASS_FAULT, CLASS_QUARANTINE, CLASS_TAIL, NO_WORKER};
 use crate::runtime_ocl::{ArgSnapshot, Backend, Buffer, Device, Event, Kernel};
 use crate::sim;
 
@@ -261,6 +262,10 @@ pub(crate) struct Job {
     /// Modeled bitstream-load cost of this kernel on its spec — what a
     /// recovery re-pick charges if the sibling must reconfigure.
     pub config_cost: f64,
+    /// Trace context carried from the submit path: worker-side phase
+    /// spans (queue wait, pack, exec, scatter, verify, retries) parent
+    /// to the submit's root span. `None` when tracing is off.
+    pub trace: Option<JobTrace>,
 }
 
 /// The recovery half of the fault plane: shared by every worker, it
@@ -317,6 +322,19 @@ impl RecoveryPlane {
     pub(crate) fn requeue(&self, mut job: Box<Job>, kind: FaultKind, from: usize) {
         job.attempts += 1;
         job.last_fault = Some(kind);
+        if let Some(t) = &job.trace {
+            let now = t.now();
+            t.span(
+                Phase::Retry,
+                kind.name(),
+                NO_WORKER,
+                now,
+                0,
+                job.attempts as u64,
+                from as u64,
+            );
+            t.pin(CLASS_FAULT, kind.name(), job.attempts as u64);
+        }
         if job.attempts > self.max_retries {
             job.handle.fulfill(Err(DispatchError::new(
                 Self::fail_reason_for(kind),
@@ -847,11 +865,19 @@ fn worker_loop(
                     .any(|j| faults.strikes(FaultKind::WorkerKill, j.seq, 0, j.attempts));
                 if struck {
                     faults.note_injected(FaultKind::WorkerKill);
-                    {
+                    let quarantined = {
                         let mut s = scheduler.lock().unwrap();
-                        s.note_partition_failure(partition);
+                        let q = s.note_partition_failure(partition);
                         for j in &run {
                             s.complete_with_deadline(partition, 0.0, j.deadline_nanos);
+                        }
+                        q
+                    };
+                    if quarantined {
+                        for j in &run {
+                            if let Some(t) = &j.trace {
+                                t.pin(CLASS_QUARANTINE, "partition", 0);
+                            }
                         }
                     }
                     for job in run {
@@ -886,7 +912,15 @@ fn worker_loop(
                         && faults.strikes(FaultKind::VerifyCorrupt, job.seq, 0, job.attempts)
                     {
                         faults.note_injected(FaultKind::VerifyCorrupt);
-                        scheduler.lock().unwrap().note_partition_failure(partition);
+                        let quarantined = scheduler
+                            .lock()
+                            .unwrap()
+                            .note_partition_failure(partition);
+                        if quarantined {
+                            if let Some(t) = &job.trace {
+                                t.pin(CLASS_QUARANTINE, "partition", 0);
+                            }
+                        }
                         recovery.requeue(job, FaultKind::VerifyCorrupt, partition);
                         continue;
                     }
@@ -900,6 +934,67 @@ fn worker_loop(
                             .fetch_add(r.event.global_size as u64, Ordering::Relaxed);
                         if r.verified == Some(false) {
                             log.verify_failures.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if let Some(t) = &job.trace {
+                            // reconstruct the worker-side timeline from
+                            // the completion's timing breakdown, ending
+                            // at "now" — spans share the submit's root
+                            let end = t.now();
+                            let w = partition as i32;
+                            let wall_us = r.event.wall.as_micros() as u64;
+                            let pack_us = r.event.pack_ns / 1_000;
+                            let scatter_us = r.event.scatter_ns / 1_000;
+                            let queue_us = r.queue_wait.as_micros() as u64;
+                            let run_start = end.saturating_sub(wall_us);
+                            let lane = match job.priority {
+                                Priority::Interactive => "interactive",
+                                Priority::Batch => "batch",
+                            };
+                            t.span(
+                                Phase::QueueWait,
+                                lane,
+                                w,
+                                run_start.saturating_sub(queue_us),
+                                queue_us,
+                                job.attempts as u64,
+                                0,
+                            );
+                            t.span(
+                                Phase::Pack,
+                                "pack",
+                                w,
+                                run_start,
+                                pack_us,
+                                r.batch_size as u64,
+                                r.fused as u64,
+                            );
+                            let exec_us =
+                                wall_us.saturating_sub(pack_us + scatter_us);
+                            t.span(
+                                Phase::Exec,
+                                if r.cache_hit { "warm" } else { "cold" },
+                                w,
+                                run_start + pack_us,
+                                exec_us,
+                                r.event.global_size as u64,
+                                0,
+                            );
+                            t.span(
+                                Phase::Scatter,
+                                "scatter",
+                                w,
+                                end.saturating_sub(scatter_us),
+                                scatter_us,
+                                0,
+                                0,
+                            );
+                            let vtag = match r.verified {
+                                Some(true) => "ok",
+                                Some(false) => "corrupt",
+                                None => "skipped",
+                            };
+                            t.span(Phase::Verify, vtag, w, end, 0, 0, 0);
+                            t.pin(CLASS_TAIL, "e2e", queue_us + wall_us);
                         }
                     }
                     Err(_) => {

@@ -87,6 +87,7 @@ use crate::fleet::{
 use crate::metrics::{
     achieved_gops, LatencyStats, PartitionServingStats, ServingStats, SpecServingStats,
 };
+use crate::obs::{ParentCtx, Phase, SubmitTrace, TraceHandle};
 use crate::overlay::{ConfigSizeModel, OverlaySpec};
 use crate::runtime_ocl::{Device, Kernel, Platform};
 
@@ -165,6 +166,11 @@ pub struct CoordinatorConfig {
     /// nothing. Recovery itself is always armed — real worker deaths
     /// are requeued whether or not faults are injected.
     pub faults: Option<FaultPlanConfig>,
+    /// End-to-end dispatch tracing ([`crate::obs`]): `Some(handle)`
+    /// records a phase span for every serving stage of every submit
+    /// into the handle's sink; `None` (the default) serves through the
+    /// allocation-free no-op recorder.
+    pub trace: Option<TraceHandle>,
 }
 
 impl CoordinatorConfig {
@@ -182,6 +188,7 @@ impl CoordinatorConfig {
             fusion_window: Duration::ZERO,
             admission: None,
             faults: None,
+            trace: None,
         }
     }
 
@@ -201,6 +208,7 @@ impl CoordinatorConfig {
             fusion_window: Duration::ZERO,
             admission: None,
             faults: None,
+            trace: None,
         }
     }
 
@@ -218,6 +226,7 @@ impl CoordinatorConfig {
             fusion_window: Duration::ZERO,
             admission: None,
             faults: None,
+            trace: None,
         }
     }
 }
@@ -271,6 +280,9 @@ pub struct Coordinator {
     /// Cached serving p99 (f64 bits), refreshed every few gated
     /// submits so admission never pays a full log merge per submit.
     p99_bits: AtomicU64,
+    /// Span recorder for the whole serving stack; the no-op handle
+    /// when tracing is off.
+    trace: TraceHandle,
     start: Instant,
 }
 
@@ -302,7 +314,9 @@ impl Coordinator {
             fusion_window,
             admission,
             faults,
+            trace,
         } = config;
+        let trace = trace.unwrap_or_else(TraceHandle::disabled);
         if devices.is_empty() {
             bail!("coordinator needs at least one overlay partition");
         }
@@ -396,8 +410,15 @@ impl Coordinator {
             seq: AtomicU64::new(0),
             gate_count: AtomicU64::new(0),
             p99_bits: AtomicU64::new(0),
+            trace,
             start,
         })
+    }
+
+    /// The coordinator's trace handle (the no-op recorder when the
+    /// config left tracing off).
+    pub fn trace(&self) -> &TraceHandle {
+        &self.trace
     }
 
     /// The fleet's primary (first-configured) overlay description.
@@ -469,10 +490,65 @@ impl Coordinator {
         priority: Priority,
         deadline: Option<Duration>,
     ) -> Result<Admission> {
+        self.submit_traced(tenant, source, args, global_size, priority, deadline, None)
+    }
+
+    /// [`Coordinator::submit_gated`] with trace-context propagation:
+    /// when tracing is on, the whole submit is recorded as one trace —
+    /// a root `submit` span plus a child per serving stage — parented
+    /// to `parent` when a cluster front door passed one down.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_traced(
+        &self,
+        tenant: &str,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+        parent: Option<ParentCtx>,
+    ) -> Result<Admission> {
         // every gated submit gets a sequence number — admitted or not —
         // so a fault plan's scripted strikes stay deterministic even
         // when admission decisions change upstream of them
         let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let trace = SubmitTrace::begin(&self.trace, parent);
+        let result = self.submit_inner(
+            tenant,
+            source,
+            args,
+            global_size,
+            priority,
+            deadline,
+            seq,
+            trace.as_ref(),
+        );
+        if let Some(t) = &trace {
+            // the root is recorded last, on every exit path, so a
+            // complete trace always has exactly one
+            let tag = match &result {
+                Ok(Admission::Admitted(_)) => "admitted",
+                Ok(Admission::Rejected(_)) => "rejected",
+                Err(_) => "error",
+            };
+            t.finish_root(Phase::Submit, tag, seq);
+        }
+        result
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn submit_inner(
+        &self,
+        tenant: &str,
+        source: &str,
+        args: &[SubmitArg],
+        global_size: usize,
+        priority: Priority,
+        deadline: Option<Duration>,
+        seq: u64,
+        trace: Option<&SubmitTrace>,
+    ) -> Result<Admission> {
+        let t_route = trace.map(|t| t.now()).unwrap_or(0);
         let profile = self.fleet.profile(source)?;
         let deadline_nanos =
             deadline.map(|d| (self.start.elapsed() + d).as_nanos() as u64);
@@ -569,11 +645,22 @@ impl Coordinator {
                 }
                 Err(e) => return Err(e),
             };
+        if let Some(t) = trace {
+            // a0 = winning spec fingerprint, a1 = copies wanted
+            t.child(
+                Phase::Route,
+                reason.name(),
+                t_route,
+                observations[ranked[0]].fingerprint,
+                copies_wanted as u64,
+            );
+        }
 
         // the admission gate sits after ranking (it needs the best
         // candidate's queue depth and throughput to price the dispatch)
         // but before compilation — refused work never touches the JIT
         if let Some(ctrl) = &self.admission {
+            let t_admit = trace.map(|t| t.now()).unwrap_or(0);
             let best = &observations[ranked[0]];
             let est_service_ms = estimate_service_ms(
                 (profile.ops_per_copy * global_size) as f64,
@@ -592,6 +679,10 @@ impl Coordinator {
                 budget_ms: deadline.map(|d| d.as_secs_f64() * 1e3),
             };
             if let Err(reject) = ctrl.admit(&req) {
+                if let Some(t) = trace {
+                    t.child(Phase::Admission, reject.kind(), t_admit, 0, 0);
+                    t.pin(crate::obs::CLASS_REJECT, reject.kind());
+                }
                 // rejections still feed the autoscaler's load signal:
                 // refused demand is demand the fleet failed to absorb,
                 // and re-replicating the hot kernel relieves it
@@ -613,11 +704,15 @@ impl Coordinator {
                 }
                 return Ok(Admission::Rejected(reject));
             }
+            if let Some(t) = trace {
+                t.child(Phase::Admission, "admitted", t_admit, 0, 0);
+            }
         }
 
         // cache-or-compile on the ranked shards — through the live
         // variant where one is installed; a compile failure poisons
         // that (kernel, spec) pair and falls through
+        let t_cache = trace.map(|t| t.now()).unwrap_or(0);
         let mut chosen = None;
         let mut fallback = false;
         let mut last_err: Option<anyhow::Error> = None;
@@ -646,6 +741,16 @@ impl Coordinator {
                     && f.strikes(FaultKind::CompileFail, seq, pos as u64, 0)
                 {
                     f.note_injected(FaultKind::CompileFail);
+                    if let Some(t) = trace {
+                        t.child(
+                            Phase::Compile,
+                            FaultKind::CompileFail.name(),
+                            t_cache,
+                            si as u64,
+                            0,
+                        );
+                        t.pin(crate::obs::CLASS_FAULT, FaultKind::CompileFail.name());
+                    }
                     self.fleet.poison(profile.source_hash, si);
                     fallback = true;
                     last_err = Some(anyhow!(
@@ -686,6 +791,14 @@ impl Coordinator {
         };
         let shard = &self.fleet.shards()[shard_index];
         let queue_depth_seen = observations[shard_index].min_queue_depth;
+        if let Some(t) = trace {
+            let (phase, tag) = if cache_hit {
+                (Phase::CacheLookup, "hit")
+            } else {
+                (Phase::Compile, "miss")
+            };
+            t.child(phase, tag, t_cache, shard_index as u64, cache_hit as u64);
+        }
 
         if args.len() != servable.params.len() {
             bail!(
@@ -711,7 +824,8 @@ impl Coordinator {
         // strikes the chosen partition and re-places onto the
         // least-loaded sibling (attempt > 0 is never struck, so the
         // loop is bounded by the partition count)
-        let decision = {
+        let t_slot = trace.map(|t| t.now()).unwrap_or(0);
+        let (decision, place_attempts) = {
             let mut attempt: u32 = 0;
             let mut struck_partition = 0;
             loop {
@@ -752,12 +866,27 @@ impl Coordinator {
                 if struck {
                     let f = self.faults.as_ref().unwrap();
                     f.note_injected(FaultKind::ReconfigFail);
-                    let mut sched = self.scheduler.lock().unwrap();
-                    // the load never happened: undo the pick's
-                    // accounting and charge the partition a strike so
-                    // repeat offenders quarantine
-                    sched.cancel(&d, deadline_nanos);
-                    sched.note_partition_failure(d.partition);
+                    let quarantined = {
+                        let mut sched = self.scheduler.lock().unwrap();
+                        // the load never happened: undo the pick's
+                        // accounting and charge the partition a strike
+                        // so repeat offenders quarantine
+                        sched.cancel(&d, deadline_nanos);
+                        sched.note_partition_failure(d.partition)
+                    };
+                    if let Some(t) = trace {
+                        t.child(
+                            Phase::Retry,
+                            FaultKind::ReconfigFail.name(),
+                            t_slot,
+                            attempt as u64,
+                            d.partition as u64,
+                        );
+                        t.pin(crate::obs::CLASS_FAULT, FaultKind::ReconfigFail.name());
+                        if quarantined {
+                            t.pin(crate::obs::CLASS_QUARANTINE, "partition");
+                        }
+                    }
                     struck_partition = d.partition;
                     attempt += 1;
                     continue;
@@ -768,9 +897,19 @@ impl Coordinator {
                         f.note_recovered(FaultKind::ReconfigFail);
                     }
                 }
-                break d;
+                break (d, attempt);
             }
         };
+        if let Some(t) = trace {
+            let tag = if decision.reconfigure { "reconfigure" } else { "resident" };
+            t.child(
+                Phase::SlotPick,
+                tag,
+                t_slot,
+                decision.partition as u64,
+                place_attempts as u64,
+            );
+        }
 
         let handle = HandleInner::new();
         let job = Job {
@@ -791,6 +930,7 @@ impl Coordinator {
             attempts: 0,
             last_fault: None,
             config_cost,
+            trace: trace.map(|t| t.job_trace()),
         };
         if self.workers[decision.partition]
             .queue
@@ -1255,6 +1395,7 @@ mod tests {
             fusion_window: Duration::ZERO,
             admission: None,
             faults: None,
+            trace: None,
         };
         assert!(Coordinator::new(cfg).is_err());
     }

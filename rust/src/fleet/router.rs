@@ -29,6 +29,7 @@ use std::collections::{BTreeMap, HashMap};
 use anyhow::{bail, Result};
 
 use crate::replicate::LimitReason;
+use crate::util::BoundedLog;
 
 use super::policy::{Priority, RoutingPolicy};
 
@@ -172,8 +173,7 @@ impl SpecRouteStats {
 #[derive(Debug)]
 pub struct Router {
     policy: RoutingPolicy,
-    records: Vec<RouteRecord>,
-    dropped_records: u64,
+    records: BoundedLog<RouteRecord>,
     per_spec: HashMap<u64, SpecRouteStats>,
 }
 
@@ -282,12 +282,8 @@ pub fn rank_specs(
 
 impl Router {
     pub fn new(policy: RoutingPolicy) -> Router {
-        Router {
-            policy,
-            records: Vec::new(),
-            dropped_records: 0,
-            per_spec: HashMap::new(),
-        }
+        let records = BoundedLog::new(policy.max_records);
+        Router { policy, records, per_spec: HashMap::new() }
     }
 
     pub fn policy(&self) -> &RoutingPolicy {
@@ -326,22 +322,18 @@ impl Router {
             s.fallbacks += 1;
         }
         *s.histogram.entry(factor).or_insert(0) += 1;
-        if self.records.len() < self.policy.max_records {
-            self.records.push(record);
-        } else {
-            self.dropped_records += 1;
-        }
+        self.records.push(record);
     }
 
     /// The retained decision records (oldest first). Aggregates keep
     /// counting after the buffer fills; `dropped_records` says how
     /// many decisions are missing here.
     pub fn records(&self) -> &[RouteRecord] {
-        &self.records
+        self.records.items()
     }
 
     pub fn dropped_records(&self) -> u64 {
-        self.dropped_records
+        self.records.dropped()
     }
 
     pub fn spec_stats(&self, fingerprint: u64) -> Option<&SpecRouteStats> {

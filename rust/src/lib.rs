@@ -89,7 +89,16 @@
 //!   sources with their Table III metadata.
 //! * [`metrics`] — the GOPS / resource / configuration-time models behind
 //!   Figs. 6–7 and Table III, plus the coordinator's serving stats
-//!   (cache hit rate, reconfigurations, utilization, p50/p99 latency).
+//!   (cache hit rate, reconfigurations, utilization, p50/p99 latency)
+//!   and their Prometheus text exposition
+//!   (`metrics::ServingStats::prometheus`).
+//! * [`obs`] — end-to-end dispatch tracing: per-submit [`obs::TraceId`]s
+//!   with phase spans across every serving layer (admission, route,
+//!   cache/compile, slot pick, queue wait, pack, exec, scatter, verify,
+//!   retries, cluster hops), collected in lock-light per-worker span
+//!   rings (tracing off is a no-op recorder), a flight recorder pinning
+//!   exemplar traces per anomaly class, and a Chrome-trace-event JSON
+//!   exporter ([`obs::chrome_trace`]).
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! AOT-lowers the overlay-datapath emulator to HLO text which the
@@ -113,6 +122,7 @@ pub mod ir;
 pub mod latency;
 pub mod metrics;
 pub mod netlist;
+pub mod obs;
 pub mod overlay;
 pub mod place;
 pub mod replicate;
@@ -143,6 +153,9 @@ pub mod prelude {
         DispatchResult, FailReason, Priority, RoutingPolicy, SubmitArg,
     };
     pub use crate::fleet::RouteReason;
+    pub use crate::obs::{
+        chrome_trace, Exemplar, Phase, Span, TraceHandle, TraceId, TraceSink,
+    };
     pub use crate::overlay::{FuType, OverlaySpec};
     pub use crate::replicate::ReplicationPlan;
     pub use crate::runtime_ocl::{

@@ -619,6 +619,179 @@ impl ServingStats {
         }
         out
     }
+
+    /// Prometheus text exposition of the counter-shaped serving
+    /// fields — the unified telemetry export written by
+    /// `e2e_serve -- trace` alongside the Chrome trace. Round-trips
+    /// through [`parse_prometheus`].
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut metric = |name: &str, kind: &str, help: &str, value: f64| {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} {kind}\n{name} {value}\n"
+            ));
+        };
+        metric(
+            "overlay_jit_cache_hits_total",
+            "counter",
+            "Kernel-cache hits across every spec shard",
+            self.cache.hits as f64,
+        );
+        metric(
+            "overlay_jit_cache_misses_total",
+            "counter",
+            "Kernel-cache misses (JIT compiles paid)",
+            self.cache.misses as f64,
+        );
+        metric(
+            "overlay_jit_cache_evictions_total",
+            "counter",
+            "Kernel-cache LRU evictions",
+            self.cache.evictions as f64,
+        );
+        metric(
+            "overlay_jit_cache_entries",
+            "gauge",
+            "Compiled kernels currently resident",
+            self.cache.entries as f64,
+        );
+        metric(
+            "overlay_jit_reconfigurations_total",
+            "counter",
+            "Partition bitstream loads",
+            self.reconfig_count as f64,
+        );
+        metric(
+            "overlay_jit_reconfig_seconds_total",
+            "counter",
+            "Modeled seconds spent loading bitstreams",
+            self.reconfig_seconds,
+        );
+        metric(
+            "overlay_jit_compile_seconds_total",
+            "counter",
+            "Wall seconds of JIT compilation on cache misses",
+            self.compile_seconds,
+        );
+        metric(
+            "overlay_jit_dispatches_total",
+            "counter",
+            "Completed dispatches",
+            self.total_dispatches as f64,
+        );
+        metric(
+            "overlay_jit_items_total",
+            "counter",
+            "Work items served",
+            self.total_items as f64,
+        );
+        metric(
+            "overlay_jit_verify_failures_total",
+            "counter",
+            "Dispatches that disagreed with the cycle simulator",
+            self.verify_failures as f64,
+        );
+        metric(
+            "overlay_jit_dispatch_errors_total",
+            "counter",
+            "Dispatches that errored before producing a result",
+            self.dispatch_errors as f64,
+        );
+        metric(
+            "overlay_jit_fused_batches_total",
+            "counter",
+            "Worker batches that fused 2+ same-kernel dispatches",
+            self.fused_batches as f64,
+        );
+        metric(
+            "overlay_jit_rejected_submits_total",
+            "counter",
+            "Submits refused by the admission gate",
+            self.rejected_submits as f64,
+        );
+        metric(
+            "overlay_jit_shed_submits_total",
+            "counter",
+            "Batch submits shed under pressure",
+            self.shed_submits as f64,
+        );
+        metric(
+            "overlay_jit_retried_dispatches_total",
+            "counter",
+            "Dispatches re-placed by the recovery plane",
+            self.retried_dispatches as f64,
+        );
+        metric(
+            "overlay_jit_quarantine_events_total",
+            "counter",
+            "Times any partition entered quarantine",
+            self.quarantine_events as f64,
+        );
+        metric(
+            "overlay_jit_quarantined_partitions",
+            "gauge",
+            "Partitions currently sitting out in quarantine",
+            self.quarantined_partitions as f64,
+        );
+        metric(
+            "overlay_jit_latency_p50_ms",
+            "gauge",
+            "End-to-end dispatch latency p50",
+            self.latency.p50_ms,
+        );
+        metric(
+            "overlay_jit_latency_p99_ms",
+            "gauge",
+            "End-to-end dispatch latency p99",
+            self.latency.p99_ms,
+        );
+        metric(
+            "overlay_jit_latency_max_ms",
+            "gauge",
+            "End-to-end dispatch latency max",
+            self.latency.max_ms,
+        );
+        if let Some(f) = &self.faults {
+            metric(
+                "overlay_jit_faults_injected_total",
+                "counter",
+                "Faults injected by the seeded plan",
+                f.total_injected() as f64,
+            );
+            metric(
+                "overlay_jit_faults_recovered_total",
+                "counter",
+                "Injected faults the serving plane recovered from",
+                f.total_recovered() as f64,
+            );
+        }
+        out
+    }
+}
+
+/// Parse a Prometheus text-exposition page back into `(name, value)`
+/// pairs — the re-parse half of the telemetry round-trip check in
+/// `e2e_serve -- trace`. Comment (`#`) and blank lines are skipped;
+/// malformed sample lines are reported, not ignored.
+pub fn parse_prometheus(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(name), Some(value), None) =
+            (parts.next(), parts.next(), parts.next())
+        else {
+            anyhow::bail!("malformed Prometheus sample line: {line:?}");
+        };
+        let value: f64 = value
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad value in {line:?}: {e}"))?;
+        out.push((name.to_string(), value));
+    }
+    Ok(out)
 }
 
 /// Simple fixed-width table formatter used by the bench harnesses to
@@ -956,5 +1129,103 @@ mod tests {
         let s = t.render();
         assert!(s.contains("name"));
         assert!(s.lines().count() >= 4);
+    }
+
+    #[test]
+    fn percentile_degenerate_inputs() {
+        // empty slice: every percentile is 0.0, no panic
+        assert_eq!(percentile(&[], 0.0), 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[], 1.0), 0.0);
+        // single sample: every percentile is that sample
+        assert_eq!(percentile(&[7.5], 0.0), 7.5);
+        assert_eq!(percentile(&[7.5], 0.5), 7.5);
+        assert_eq!(percentile(&[7.5], 1.0), 7.5);
+        // p = 0 / p = 1 hit the exact ends of a multi-sample slice
+        let sorted = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&sorted, 0.0), 1.0);
+        assert_eq!(percentile(&sorted, 1.0), 5.0);
+        // out-of-range p clamps to the last index instead of panicking
+        assert_eq!(percentile(&sorted, 2.0), 5.0);
+    }
+
+    #[test]
+    fn sliding_window_degenerate_inputs() {
+        // empty window: every summary is 0.0
+        let w = SlidingWindow::new(4);
+        assert_eq!(w.mean(), 0.0);
+        assert_eq!(w.max(), 0.0);
+        assert_eq!(w.percentile(0.0), 0.0);
+        assert_eq!(w.percentile(0.5), 0.0);
+        assert_eq!(w.percentile(1.0), 0.0);
+        // single sample: every percentile collapses onto it
+        let mut w = SlidingWindow::new(4);
+        w.push(3.25);
+        assert_eq!(w.percentile(0.0), 3.25);
+        assert_eq!(w.percentile(0.5), 3.25);
+        assert_eq!(w.percentile(1.0), 3.25);
+        assert_eq!(w.mean(), 3.25);
+        assert_eq!(w.max(), 3.25);
+    }
+
+    #[test]
+    fn empty_latency_and_empty_merge_are_all_zero() {
+        let empty = LatencyStats::from_samples_ms(vec![]);
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.p50_ms, 0.0);
+        assert_eq!(empty.p99_ms, 0.0);
+        assert_eq!(empty.max_ms, 0.0);
+        assert_eq!(empty.mean_ms, 0.0);
+        let merged = ServingStats::merge(&[]);
+        assert_eq!(merged.total_dispatches, 0);
+        assert_eq!(merged.latency.count, 0);
+        assert_eq!(merged.latency_raw.samples_ms.len(), 0);
+        assert!(merged.partitions.is_empty());
+        assert!(merged.per_spec.is_empty());
+        assert!(merged.admission.is_none());
+        assert!(merged.autoscale.is_none());
+        assert!(merged.faults.is_none());
+    }
+
+    #[test]
+    fn prometheus_exposition_round_trips() {
+        let s = ServingStats {
+            cache: CacheStats { hits: 9, misses: 3, evictions: 1, entries: 2, capacity: 32 },
+            total_dispatches: 12,
+            total_items: 1200,
+            retried_dispatches: 2,
+            rejected_submits: 4,
+            shed_submits: 1,
+            quarantine_events: 1,
+            latency: LatencyStats::from_samples_ms(vec![1.0, 2.0, 4.0]),
+            faults: Some(crate::admission::FaultTally::default()),
+            ..Default::default()
+        };
+        let page = s.prometheus();
+        let parsed = parse_prometheus(&page).expect("well-formed page");
+        let get = |name: &str| -> f64 {
+            parsed
+                .iter()
+                .find(|(n, _)| n == name)
+                .unwrap_or_else(|| panic!("missing metric {name}"))
+                .1
+        };
+        assert_eq!(get("overlay_jit_cache_hits_total"), 9.0);
+        assert_eq!(get("overlay_jit_cache_misses_total"), 3.0);
+        assert_eq!(get("overlay_jit_dispatches_total"), 12.0);
+        assert_eq!(get("overlay_jit_items_total"), 1200.0);
+        assert_eq!(get("overlay_jit_retried_dispatches_total"), 2.0);
+        assert_eq!(get("overlay_jit_rejected_submits_total"), 4.0);
+        assert_eq!(get("overlay_jit_shed_submits_total"), 1.0);
+        assert_eq!(get("overlay_jit_quarantine_events_total"), 1.0);
+        assert_eq!(get("overlay_jit_latency_max_ms"), 4.0);
+        assert_eq!(get("overlay_jit_faults_injected_total"), 0.0);
+        // every sample line names a declared metric (HELP + TYPE)
+        for (name, _) in &parsed {
+            assert!(page.contains(&format!("# TYPE {name} ")), "undeclared {name}");
+        }
+        // malformed pages are errors, not silent zeros
+        assert!(parse_prometheus("metric_without_value\n").is_err());
+        assert!(parse_prometheus("metric nan_oops extra\n").is_err());
     }
 }

@@ -1,0 +1,809 @@
+//! End-to-end dispatch tracing, flight recorder, and telemetry export.
+//!
+//! Every gated submit is assigned a stable [`TraceId`] and leaves a
+//! tree of phase [`Span`]s behind as it crosses the serving layers:
+//! admission triage, route ranking, cache lookup / JIT compile, slot
+//! pick on the submit path; queue wait, pack, exec, scatter, verify on
+//! the worker path; retry spans for fault-recovery requeues; and hop
+//! spans when the cluster frontend spills or fails a dispatch over to
+//! a sibling node (the trace context propagates `ClusterFrontend` →
+//! `Node` → `Coordinator`, so one trace covers the whole journey).
+//!
+//! Spans land in per-worker ring buffers in the sharded-log style of
+//! the dispatch data plane: each shard is an independently locked,
+//! pre-sized ring (a [`Span`] is `Copy` — recording never allocates),
+//! and shards are merged only when a reader asks. A disabled sink
+//! ([`TraceSink::disabled`]) owns no rings at all and every recording
+//! helper bails on one branch — the tracing-off hot path is a no-op
+//! recorder, pinned by `rust/tests/obs.rs`.
+//!
+//! The [`FlightRecorder`] additionally pins one exemplar trace per
+//! anomaly class — each admission [`RejectReason`] kind, each injected
+//! [`FaultKind`], partition quarantines, and the slowest (p99-tail)
+//! completion — so a postmortem dump after an overload or node-death
+//! run shows *why* the slow or failed dispatches were slow.
+//!
+//! Exporters: [`chrome_trace`] renders the merged spans as
+//! Chrome-trace-event JSON (load `trace.json` in Perfetto / about:
+//! tracing), and `ServingStats::prometheus` (in [`crate::metrics`])
+//! emits the Prometheus text exposition. `examples/e2e_serve -- trace`
+//! writes both (`TRACE_OUT` / `METRICS_OUT` env override the paths)
+//! and re-parses them as part of its acceptance check.
+//!
+//! [`RejectReason`]: crate::admission::RejectReason
+//! [`FaultKind`]: crate::admission::FaultKind
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::JsonValue;
+
+/// Stable identifier of one submit's end-to-end trace (1-based; 0
+/// means "not traced").
+pub type TraceId = u64;
+
+/// Marker worker index for spans recorded off the worker path (the
+/// submit front door, the cluster frontend).
+pub const NO_WORKER: i32 = -1;
+
+/// Marker node id for spans recorded by the cluster front door itself
+/// (rendered as the `frontend` process in the Chrome trace).
+pub const FRONTEND_NODE: u32 = u32::MAX;
+
+/// The phase a span measures. `name()` doubles as the Chrome-trace
+/// event name and the flight-recorder dump label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Root of a cluster-front-door trace (one per cluster submit).
+    Frontend,
+    /// Root of a coordinator trace; child of [`Phase::Frontend`] when
+    /// the submit arrived through the cluster tier.
+    Submit,
+    /// Admission triage (token bucket, deadline, shed pressure).
+    Admission,
+    /// Fleet route ranking across spec shards.
+    Route,
+    /// Kernel-cache lookup that hit.
+    CacheLookup,
+    /// Kernel-cache miss paying the seconds-class JIT compile.
+    Compile,
+    /// Slot-aware scheduler pick (including any reconfiguration cost).
+    SlotPick,
+    /// Queue residency between submit and the worker starting the job.
+    QueueWait,
+    /// Stream-arena pack on the worker.
+    Pack,
+    /// Backend execution.
+    Exec,
+    /// Scatter of results back into the argument buffers.
+    Scatter,
+    /// Cycle-simulator verification.
+    Verify,
+    /// A fault-recovery requeue hop to a sibling partition.
+    Retry,
+    /// A cluster spill/failover hop to a sibling node.
+    Hop,
+}
+
+/// Every phase, for exhaustive export/report loops.
+pub const ALL_PHASES: [Phase; 14] = [
+    Phase::Frontend,
+    Phase::Submit,
+    Phase::Admission,
+    Phase::Route,
+    Phase::CacheLookup,
+    Phase::Compile,
+    Phase::SlotPick,
+    Phase::QueueWait,
+    Phase::Pack,
+    Phase::Exec,
+    Phase::Scatter,
+    Phase::Verify,
+    Phase::Retry,
+    Phase::Hop,
+];
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Frontend => "frontend",
+            Phase::Submit => "submit",
+            Phase::Admission => "admission",
+            Phase::Route => "route",
+            Phase::CacheLookup => "cache_lookup",
+            Phase::Compile => "compile",
+            Phase::SlotPick => "slot_pick",
+            Phase::QueueWait => "queue_wait",
+            Phase::Pack => "pack",
+            Phase::Exec => "exec",
+            Phase::Scatter => "scatter",
+            Phase::Verify => "verify",
+            Phase::Retry => "retry",
+            Phase::Hop => "hop",
+        }
+    }
+}
+
+/// One recorded phase span. `Copy` on purpose: recording a span into
+/// a ring moves 80-odd bytes and never touches the heap.
+#[derive(Debug, Clone, Copy)]
+pub struct Span {
+    pub trace_id: TraceId,
+    /// 1-based, unique within the sink.
+    pub span_id: u64,
+    /// Parent span id, or 0 for a trace root.
+    pub parent: u64,
+    pub phase: Phase,
+    /// Static detail tag: a reject kind, fault name, spill reason…
+    /// Empty when the phase needs none.
+    pub tag: &'static str,
+    /// Cluster node id ([`FRONTEND_NODE`] for the front door;
+    /// 0 for a standalone coordinator).
+    pub node: u32,
+    /// Worker / partition index, [`NO_WORKER`] off the worker path.
+    pub worker: i32,
+    /// Start, microseconds since the sink epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Phase-specific payload (e.g. hop: `a0` = home node, `a1` =
+    /// chosen sibling; retry: `a0` = attempt, `a1` = sibling
+    /// partition; exec: `a0` = batch size).
+    pub a0: u64,
+    pub a1: u64,
+}
+
+/// One shard of the span store: an independently locked, pre-sized
+/// ring. New spans overwrite the oldest once full (overwrites are
+/// counted sink-wide).
+struct ShardRing {
+    ring: Mutex<RingInner>,
+}
+
+struct RingInner {
+    buf: Vec<Span>,
+    /// Next overwrite position once `buf` reached capacity.
+    head: usize,
+}
+
+/// Counters describing a sink's state; all cheap atomic reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSinkStats {
+    /// Ring shards owned (0 for a disabled sink).
+    pub shards: usize,
+    /// Per-shard ring capacity in spans.
+    pub capacity: usize,
+    /// Spans pre-allocated across all rings (0 for a disabled sink —
+    /// the no-op recorder owns no ring memory at all).
+    pub allocated_spans: usize,
+    /// Spans recorded since creation.
+    pub recorded: u64,
+    /// Spans overwritten by ring wrap-around (lost to readers).
+    pub overwritten: u64,
+    /// Traces started.
+    pub traces: u64,
+}
+
+/// The lock-light span store: N independently locked pre-sized rings
+/// plus the [`FlightRecorder`]. Shared via `Arc` by every layer that
+/// records (frontend, coordinator submit path, workers, recovery).
+pub struct TraceSink {
+    enabled: bool,
+    epoch: Instant,
+    next_trace: AtomicU64,
+    next_span: AtomicU64,
+    recorded: AtomicU64,
+    overwritten: AtomicU64,
+    capacity: usize,
+    shards: Vec<ShardRing>,
+    flight: Mutex<FlightRecorder>,
+}
+
+impl TraceSink {
+    /// An enabled sink with `shards` rings of `capacity` spans each.
+    /// Ring memory is allocated up front so the record path never
+    /// grows a buffer.
+    pub fn new(shards: usize, capacity: usize) -> Arc<TraceSink> {
+        let shards = shards.max(1);
+        let capacity = capacity.max(1);
+        Arc::new(TraceSink {
+            enabled: true,
+            epoch: Instant::now(),
+            next_trace: AtomicU64::new(0),
+            next_span: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            overwritten: AtomicU64::new(0),
+            capacity,
+            shards: (0..shards)
+                .map(|_| ShardRing {
+                    ring: Mutex::new(RingInner {
+                        buf: Vec::with_capacity(capacity),
+                        head: 0,
+                    }),
+                })
+                .collect(),
+            flight: Mutex::new(FlightRecorder::new()),
+        })
+    }
+
+    /// The no-op recorder: owns zero rings, never allocates, and every
+    /// recording entry point returns on its first branch. This is what
+    /// "tracing off" costs.
+    pub fn disabled() -> Arc<TraceSink> {
+        Arc::new(TraceSink {
+            enabled: false,
+            epoch: Instant::now(),
+            next_trace: AtomicU64::new(0),
+            next_span: AtomicU64::new(0),
+            recorded: AtomicU64::new(0),
+            overwritten: AtomicU64::new(0),
+            capacity: 0,
+            shards: Vec::new(),
+            flight: Mutex::new(FlightRecorder::new()),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Microseconds since the sink epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Start a new trace; 0 when disabled.
+    pub fn begin_trace(&self) -> TraceId {
+        if !self.enabled {
+            return 0;
+        }
+        self.next_trace.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Reserve a span id (so a root can be handed to children before
+    /// the root span itself is recorded); 0 when disabled.
+    pub fn next_span_id(&self) -> u64 {
+        if !self.enabled {
+            return 0;
+        }
+        self.next_span.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record one span into its shard ring. Worker-path spans land in
+    /// the worker's shard; front-door spans spread by trace id.
+    pub fn record(&self, span: Span) {
+        if !self.enabled {
+            return;
+        }
+        let shard = if span.worker >= 0 {
+            span.worker as usize % self.shards.len()
+        } else {
+            span.trace_id as usize % self.shards.len()
+        };
+        let mut inner = self.shards[shard].ring.lock().unwrap();
+        if inner.buf.len() < self.capacity {
+            inner.buf.push(span);
+        } else {
+            let at = inner.head;
+            inner.buf[at] = span;
+            inner.head = (at + 1) % self.capacity;
+            self.overwritten.fetch_add(1, Ordering::Relaxed);
+        }
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merge every shard's retained spans, ordered by
+    /// (trace, start, span id). This is the only cross-shard read.
+    pub fn spans(&self) -> Vec<Span> {
+        let mut all = Vec::new();
+        for s in &self.shards {
+            all.extend_from_slice(&s.ring.lock().unwrap().buf);
+        }
+        all.sort_by_key(|s| (s.trace_id, s.start_us, s.span_id));
+        all
+    }
+
+    pub fn stats(&self) -> TraceSinkStats {
+        TraceSinkStats {
+            shards: self.shards.len(),
+            capacity: self.capacity,
+            allocated_spans: self.shards.len() * self.capacity,
+            recorded: self.recorded.load(Ordering::Relaxed),
+            overwritten: self.overwritten.load(Ordering::Relaxed),
+            traces: self.next_trace.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Pin `trace_id` as the exemplar for an anomaly `(class, kind)`.
+    /// Keep-first per key, except [`CLASS_TAIL`] which keeps the
+    /// largest `weight` (latency) seen — the slowest completion is by
+    /// construction in the p99 tail.
+    pub fn pin(&self, class: &'static str, kind: &'static str, trace_id: TraceId, weight: u64) {
+        if !self.enabled || trace_id == 0 {
+            return;
+        }
+        self.flight.lock().unwrap().pin(class, kind, trace_id, weight);
+    }
+
+    /// The pinned exemplars, sorted by (class, kind).
+    pub fn exemplars(&self) -> Vec<Exemplar> {
+        self.flight.lock().unwrap().exemplars()
+    }
+
+    /// The exemplar pinned for `(class, kind)`, if any.
+    pub fn exemplar(&self, class: &str, kind: &str) -> Option<Exemplar> {
+        self.flight
+            .lock()
+            .unwrap()
+            .entries
+            .iter()
+            .find(|e| e.class == class && e.kind == kind)
+            .copied()
+    }
+}
+
+/// Flight-recorder class for admission rejections (kind =
+/// `RejectReason::kind()`).
+pub const CLASS_REJECT: &str = "reject";
+/// Flight-recorder class for injected faults (kind =
+/// `FaultKind::name()`).
+pub const CLASS_FAULT: &str = "fault";
+/// Flight-recorder class for partition quarantines.
+pub const CLASS_QUARANTINE: &str = "quarantine";
+/// Flight-recorder class for the slowest (p99-tail) completion.
+pub const CLASS_TAIL: &str = "tail";
+
+/// Hard bound on distinct pinned anomaly keys. The key space is tiny
+/// by construction (3 reject kinds + 4 fault kinds + quarantine +
+/// tail), so hitting the bound means a new anomaly class forgot to
+/// budget here.
+pub const MAX_EXEMPLARS: usize = 64;
+
+/// One pinned exemplar trace for an anomaly class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Exemplar {
+    pub class: &'static str,
+    pub kind: &'static str,
+    /// The pinned trace.
+    pub trace_id: TraceId,
+    /// Occurrences of this (class, kind) since creation (including
+    /// ones that did not replace the pin).
+    pub count: u64,
+    /// The pin's weight (tail: latency in µs; others: 0).
+    pub weight: u64,
+}
+
+/// Bounded map (class, kind) → exemplar. Tiny and cold — a plain Vec
+/// behind the sink's flight mutex.
+struct FlightRecorder {
+    entries: Vec<Exemplar>,
+    dropped: u64,
+}
+
+impl FlightRecorder {
+    fn new() -> FlightRecorder {
+        FlightRecorder { entries: Vec::new(), dropped: 0 }
+    }
+
+    fn pin(&mut self, class: &'static str, kind: &'static str, trace_id: TraceId, weight: u64) {
+        if let Some(e) = self
+            .entries
+            .iter_mut()
+            .find(|e| e.class == class && e.kind == kind)
+        {
+            e.count += 1;
+            if class == CLASS_TAIL && weight > e.weight {
+                e.trace_id = trace_id;
+                e.weight = weight;
+            }
+            return;
+        }
+        if self.entries.len() >= MAX_EXEMPLARS {
+            self.dropped += 1;
+            return;
+        }
+        self.entries.push(Exemplar { class, kind, trace_id, count: 1, weight });
+    }
+
+    fn exemplars(&self) -> Vec<Exemplar> {
+        let mut out = self.entries.clone();
+        out.sort_by_key(|e| (e.class, e.kind));
+        out
+    }
+}
+
+/// The cheap per-layer handle: the shared sink plus the cluster node
+/// id this layer records under. Cloning is an `Arc` bump.
+#[derive(Clone)]
+pub struct TraceHandle {
+    pub sink: Arc<TraceSink>,
+    pub node: u32,
+}
+
+impl TraceHandle {
+    pub fn new(sink: Arc<TraceSink>, node: u32) -> TraceHandle {
+        TraceHandle { sink, node }
+    }
+
+    /// A standalone-coordinator handle (node 0) over a fresh sink.
+    pub fn local(shards: usize, capacity: usize) -> TraceHandle {
+        TraceHandle { sink: TraceSink::new(shards, capacity), node: 0 }
+    }
+
+    /// A handle over the no-op recorder.
+    pub fn disabled() -> TraceHandle {
+        TraceHandle { sink: TraceSink::disabled(), node: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.sink.enabled()
+    }
+}
+
+/// Trace context a caller threads into a deeper layer so the deeper
+/// layer's spans join the caller's tree instead of rooting a new one.
+#[derive(Debug, Clone, Copy)]
+pub struct ParentCtx {
+    pub trace_id: TraceId,
+    pub parent_span: u64,
+}
+
+/// Live trace state of one submit crossing the coordinator: the trace
+/// id, a pre-reserved root span id children parent to, and the root's
+/// start time. Built by [`SubmitTrace::begin`] (returns `None` when
+/// tracing is off, so the hot path carries nothing), finished by
+/// [`SubmitTrace::finish_root`] on every exit path.
+#[derive(Clone)]
+pub struct SubmitTrace {
+    pub handle: TraceHandle,
+    pub trace_id: TraceId,
+    /// The reserved root span id.
+    pub root: u64,
+    /// The caller's span this root parents to (0 = this is the top).
+    pub parent: u64,
+    /// Root start, µs since the sink epoch.
+    pub t0: u64,
+}
+
+impl SubmitTrace {
+    pub fn begin(handle: &TraceHandle, parent: Option<ParentCtx>) -> Option<SubmitTrace> {
+        if !handle.enabled() {
+            return None;
+        }
+        let trace_id = match parent {
+            Some(p) if p.trace_id != 0 => p.trace_id,
+            _ => handle.sink.begin_trace(),
+        };
+        Some(SubmitTrace {
+            handle: handle.clone(),
+            trace_id,
+            root: handle.sink.next_span_id(),
+            parent: parent.map_or(0, |p| p.parent_span),
+            t0: handle.sink.now_us(),
+        })
+    }
+
+    pub fn now(&self) -> u64 {
+        self.handle.sink.now_us()
+    }
+
+    /// Record a child phase span running from `start_us` to now.
+    pub fn child(&self, phase: Phase, tag: &'static str, start_us: u64, a0: u64, a1: u64) {
+        let now = self.now();
+        self.handle.sink.record(Span {
+            trace_id: self.trace_id,
+            span_id: self.handle.sink.next_span_id(),
+            parent: self.root,
+            phase,
+            tag,
+            node: self.handle.node,
+            worker: NO_WORKER,
+            start_us,
+            dur_us: now.saturating_sub(start_us),
+            a0,
+            a1,
+        });
+    }
+
+    /// Record the reserved root span, covering begin → now. Call
+    /// exactly once, on the submit's exit path (admitted, rejected or
+    /// errored — a trace must always gain its root).
+    pub fn finish_root(&self, phase: Phase, tag: &'static str, a0: u64) {
+        let now = self.now();
+        self.handle.sink.record(Span {
+            trace_id: self.trace_id,
+            span_id: self.root,
+            parent: self.parent,
+            phase,
+            tag,
+            node: self.handle.node,
+            worker: NO_WORKER,
+            start_us: self.t0,
+            dur_us: now.saturating_sub(self.t0),
+            a0,
+            a1: 0,
+        });
+    }
+
+    /// Pin this trace as an anomaly exemplar.
+    pub fn pin(&self, class: &'static str, kind: &'static str) {
+        self.handle.sink.pin(class, kind, self.trace_id, 0);
+    }
+
+    /// The slimmed context a queued job carries to the worker path.
+    pub fn job_trace(&self) -> JobTrace {
+        JobTrace {
+            handle: self.handle.clone(),
+            trace_id: self.trace_id,
+            root: self.root,
+            enq_us: self.now(),
+        }
+    }
+}
+
+/// Trace context carried by a queued job: lets the worker path attach
+/// queue-wait / pack / exec / scatter / verify / retry spans to the
+/// submit's tree. An `Arc` bump to clone; absent entirely when
+/// tracing is off.
+#[derive(Clone)]
+pub struct JobTrace {
+    pub handle: TraceHandle,
+    pub trace_id: TraceId,
+    /// The submit root span these worker spans parent to.
+    pub root: u64,
+    /// Enqueue time, µs since the sink epoch (queue-wait span start).
+    pub enq_us: u64,
+}
+
+impl JobTrace {
+    pub fn now(&self) -> u64 {
+        self.handle.sink.now_us()
+    }
+
+    /// Record a worker-path span with explicit timing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(
+        &self,
+        phase: Phase,
+        tag: &'static str,
+        worker: i32,
+        start_us: u64,
+        dur_us: u64,
+        a0: u64,
+        a1: u64,
+    ) {
+        self.handle.sink.record(Span {
+            trace_id: self.trace_id,
+            span_id: self.handle.sink.next_span_id(),
+            parent: self.root,
+            phase,
+            tag,
+            node: self.handle.node,
+            worker,
+            start_us,
+            dur_us,
+            a0,
+            a1,
+        });
+    }
+
+    /// Pin this trace as an anomaly exemplar (weight: tail latency µs).
+    pub fn pin(&self, class: &'static str, kind: &'static str, weight: u64) {
+        self.handle.sink.pin(class, kind, self.trace_id, weight);
+    }
+}
+
+/// Per-trace structural report from [`check_traces`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCheck {
+    /// Distinct traces seen.
+    pub traces: usize,
+    /// Traces with exactly one root span (parent == 0).
+    pub rooted: usize,
+    /// Spans whose parent id is absent from their trace.
+    pub orphans: usize,
+}
+
+/// Structural completeness over a merged span set: every trace must
+/// have exactly one root and every parent reference must resolve
+/// within its trace.
+pub fn check_traces(spans: &[Span]) -> TraceCheck {
+    use std::collections::{HashMap, HashSet};
+    let mut ids: HashMap<TraceId, HashSet<u64>> = HashMap::new();
+    for s in spans {
+        ids.entry(s.trace_id).or_default().insert(s.span_id);
+    }
+    let mut roots: HashMap<TraceId, usize> = HashMap::new();
+    let mut orphans = 0usize;
+    for s in spans {
+        if s.parent == 0 {
+            *roots.entry(s.trace_id).or_insert(0) += 1;
+        } else if !ids[&s.trace_id].contains(&s.parent) {
+            orphans += 1;
+        }
+    }
+    TraceCheck {
+        traces: ids.len(),
+        rooted: roots.values().filter(|&&n| n == 1).count(),
+        orphans,
+    }
+}
+
+/// Render spans as a Chrome-trace-event JSON document (the Perfetto /
+/// `about:tracing` format): one complete (`"ph":"X"`) event per span,
+/// `pid` = node, `tid` = worker (+1 so the front door renders as tid
+/// 0), span/trace/parent ids and the phase payload under `args`.
+///
+/// `id_offset` shifts trace and span ids, letting multiple sinks merge
+/// into one document without collisions.
+pub fn chrome_trace(spans: &[Span], id_offset: u64) -> JsonValue {
+    use std::collections::BTreeMap;
+    let mut events = Vec::with_capacity(spans.len());
+    for s in spans {
+        let mut args = BTreeMap::new();
+        args.insert("trace_id".to_string(), JsonValue::Number((s.trace_id + id_offset) as f64));
+        args.insert("span_id".to_string(), JsonValue::Number((s.span_id + id_offset) as f64));
+        let parent = if s.parent == 0 { 0 } else { s.parent + id_offset };
+        args.insert("parent".to_string(), JsonValue::Number(parent as f64));
+        if !s.tag.is_empty() {
+            args.insert("tag".to_string(), JsonValue::String(s.tag.to_string()));
+        }
+        args.insert("a0".to_string(), JsonValue::Number(s.a0 as f64));
+        args.insert("a1".to_string(), JsonValue::Number(s.a1 as f64));
+        let mut ev = BTreeMap::new();
+        ev.insert("name".to_string(), JsonValue::String(s.phase.name().to_string()));
+        ev.insert("cat".to_string(), JsonValue::String("dispatch".to_string()));
+        ev.insert("ph".to_string(), JsonValue::String("X".to_string()));
+        ev.insert("ts".to_string(), JsonValue::Number(s.start_us as f64));
+        ev.insert("dur".to_string(), JsonValue::Number(s.dur_us as f64));
+        ev.insert("pid".to_string(), JsonValue::Number(s.node as f64));
+        ev.insert("tid".to_string(), JsonValue::Number((s.worker + 1) as f64));
+        ev.insert("args".to_string(), JsonValue::Object(args));
+        events.push(JsonValue::Object(ev));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("traceEvents".to_string(), JsonValue::Array(events));
+    doc.insert(
+        "displayTimeUnit".to_string(),
+        JsonValue::String("ms".to_string()),
+    );
+    JsonValue::Object(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(trace: u64, id: u64, parent: u64, phase: Phase) -> Span {
+        Span {
+            trace_id: trace,
+            span_id: id,
+            parent,
+            phase,
+            tag: "",
+            node: 0,
+            worker: NO_WORKER,
+            start_us: id * 10,
+            dur_us: 5,
+            a0: 0,
+            a1: 0,
+        }
+    }
+
+    #[test]
+    fn disabled_sink_is_a_true_noop() {
+        let sink = TraceSink::disabled();
+        assert!(!sink.enabled());
+        assert_eq!(sink.begin_trace(), 0);
+        assert_eq!(sink.next_span_id(), 0);
+        sink.record(span(1, 1, 0, Phase::Submit));
+        sink.pin(CLASS_TAIL, "", 1, 9);
+        let st = sink.stats();
+        assert_eq!(st.shards, 0);
+        assert_eq!(st.allocated_spans, 0);
+        assert_eq!(st.recorded, 0);
+        assert_eq!(st.traces, 0);
+        assert!(sink.spans().is_empty());
+        assert!(sink.exemplars().is_empty());
+    }
+
+    #[test]
+    fn rings_are_bounded_and_count_overwrites() {
+        let sink = TraceSink::new(1, 4);
+        for i in 1..=7 {
+            sink.record(span(1, i, 0, Phase::Exec));
+        }
+        let st = sink.stats();
+        assert_eq!(st.recorded, 7);
+        assert_eq!(st.overwritten, 3);
+        let spans = sink.spans();
+        assert_eq!(spans.len(), 4);
+        // the oldest three were overwritten
+        assert!(spans.iter().all(|s| s.span_id >= 4));
+    }
+
+    #[test]
+    fn spans_merge_across_shards_in_trace_order() {
+        let sink = TraceSink::new(4, 16);
+        let t1 = sink.begin_trace();
+        let t2 = sink.begin_trace();
+        assert_eq!((t1, t2), (1, 2));
+        let mut w0 = span(t2, sink.next_span_id(), 0, Phase::Submit);
+        w0.worker = 3;
+        sink.record(w0);
+        let mut w1 = span(t1, sink.next_span_id(), 0, Phase::Submit);
+        w1.worker = 0;
+        sink.record(w1);
+        let spans = sink.spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].trace_id, t1);
+        assert_eq!(spans[1].trace_id, t2);
+    }
+
+    #[test]
+    fn check_traces_flags_orphans_and_multiple_roots() {
+        let good = vec![
+            span(1, 1, 0, Phase::Submit),
+            span(1, 2, 1, Phase::Route),
+            span(1, 3, 1, Phase::Exec),
+        ];
+        let c = check_traces(&good);
+        assert_eq!(c, TraceCheck { traces: 1, rooted: 1, orphans: 0 });
+
+        let orphan = vec![span(2, 4, 0, Phase::Submit), span(2, 5, 99, Phase::Exec)];
+        let c = check_traces(&orphan);
+        assert_eq!(c.orphans, 1);
+
+        let two_roots = vec![span(3, 6, 0, Phase::Submit), span(3, 7, 0, Phase::Submit)];
+        let c = check_traces(&two_roots);
+        assert_eq!(c.rooted, 0);
+    }
+
+    #[test]
+    fn flight_recorder_keeps_first_except_tail_keeps_slowest() {
+        let sink = TraceSink::new(1, 8);
+        sink.pin(CLASS_REJECT, "quota", 1, 0);
+        sink.pin(CLASS_REJECT, "quota", 2, 0);
+        sink.pin(CLASS_TAIL, "", 3, 100);
+        sink.pin(CLASS_TAIL, "", 4, 900);
+        sink.pin(CLASS_TAIL, "", 5, 50);
+        let q = sink.exemplar(CLASS_REJECT, "quota").unwrap();
+        assert_eq!((q.trace_id, q.count), (1, 2));
+        let t = sink.exemplar(CLASS_TAIL, "").unwrap();
+        assert_eq!((t.trace_id, t.weight, t.count), (4, 900, 3));
+        assert!(sink.exemplar(CLASS_FAULT, "worker_kill").is_none());
+    }
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_json_reader() {
+        let sink = TraceSink::new(2, 8);
+        let t = sink.begin_trace();
+        let root = sink.next_span_id();
+        sink.record(span(t, root, 0, Phase::Submit));
+        let mut hop = span(t, sink.next_span_id(), root, Phase::Hop);
+        hop.tag = "home_down";
+        hop.a0 = 1;
+        hop.a1 = 2;
+        sink.record(hop);
+        let doc = chrome_trace(&sink.spans(), 1000);
+        let text = doc.render();
+        let back = JsonValue::parse(&text).unwrap();
+        let events = back.get("traceEvents").unwrap().as_array().unwrap();
+        assert_eq!(events.len(), 2);
+        let names: Vec<_> = events
+            .iter()
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(names.contains(&"submit") && names.contains(&"hop"));
+        for e in events {
+            let args = e.get("args").unwrap();
+            assert_eq!(args.get("trace_id").unwrap().as_i64(), Some((t + 1000) as i64));
+        }
+        let hop_ev = events
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("hop"))
+            .unwrap();
+        assert_eq!(hop_ev.get("args").unwrap().get("tag").unwrap().as_str(), Some("home_down"));
+        assert_eq!(hop_ev.get("args").unwrap().get("a1").unwrap().as_i64(), Some(2));
+    }
+}

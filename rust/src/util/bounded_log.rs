@@ -1,0 +1,98 @@
+//! A bounded keep-first audit log.
+//!
+//! Three subsystems grew the same hand-rolled shape independently —
+//! the router's `RouteRecord` history, the autoscaler's `ScaleEvent`
+//! log and the cluster frontend's spill log: retain the first N
+//! records, count everything past the bound instead of reallocating
+//! or rotating (audit logs favor the run's opening moves — the cold
+//! compiles, the first spills — and a bounded `Vec` never grows after
+//! the cap is reached, so long-lived servers cannot leak). This type
+//! is that shape, once.
+
+/// Bounded keep-first log: the first `capacity` pushes are retained,
+/// later ones are counted in `dropped`.
+#[derive(Debug, Clone)]
+pub struct BoundedLog<T> {
+    capacity: usize,
+    items: Vec<T>,
+    dropped: u64,
+}
+
+impl<T> BoundedLog<T> {
+    /// A log retaining at most `capacity` records (clamped to ≥ 1 so a
+    /// misconfigured zero bound still audits something).
+    pub fn new(capacity: usize) -> Self {
+        BoundedLog { capacity: capacity.max(1), items: Vec::new(), dropped: 0 }
+    }
+
+    /// Record one entry; past the bound it is counted, not stored.
+    pub fn push(&mut self, item: T) {
+        if self.items.len() < self.capacity {
+            self.items.push(item);
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// The retained records, oldest first.
+    pub fn items(&self) -> &[T] {
+        &self.items
+    }
+
+    /// Records pushed past the bound (and therefore not retained).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keeps_first_and_counts_the_rest() {
+        let mut log = BoundedLog::new(3);
+        for i in 0..7 {
+            log.push(i);
+        }
+        assert_eq!(log.items(), &[0, 1, 2]);
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped(), 4);
+        assert_eq!(log.capacity(), 3);
+        assert!(!log.is_empty());
+        assert_eq!(log.iter().sum::<i32>(), 3);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut log = BoundedLog::new(0);
+        log.push("a");
+        log.push("b");
+        assert_eq!(log.items(), &["a"]);
+        assert_eq!(log.dropped(), 1);
+    }
+
+    #[test]
+    fn empty_log_reports_empty() {
+        let log: BoundedLog<u8> = BoundedLog::new(4);
+        assert!(log.is_empty());
+        assert_eq!(log.len(), 0);
+        assert_eq!(log.dropped(), 0);
+    }
+}

@@ -132,6 +132,11 @@ fn write_escaped(s: &str, out: &mut String) {
             '\n' => out.push_str("\\n"),
             '\t' => out.push_str("\\t"),
             '\r' => out.push_str("\\r"),
+            // the remaining C0 controls (U+0000–U+001F) must not appear
+            // raw inside a JSON string
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
             c => out.push(c),
         }
     }
@@ -247,6 +252,36 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
                     b'"' => s.push('"'),
                     b'\\' => s.push('\\'),
                     b'/' => s.push('/'),
+                    b'b' => s.push('\u{0008}'),
+                    b'f' => s.push('\u{000C}'),
+                    b'u' => {
+                        *pos += 1;
+                        let hi = parse_hex4(b, pos)?;
+                        let c = if (0xD800..0xDC00).contains(&hi) {
+                            // high surrogate: a \uDC00-range low
+                            // surrogate must follow
+                            if b.len() - *pos < 2 || b[*pos] != b'\\' || b[*pos + 1] != b'u' {
+                                bail!("lone high surrogate \\u{hi:04x}");
+                            }
+                            *pos += 2;
+                            let lo = parse_hex4(b, pos)?;
+                            if !(0xDC00..0xE000).contains(&lo) {
+                                bail!("invalid low surrogate \\u{lo:04x}");
+                            }
+                            0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                        } else if (0xDC00..0xE000).contains(&hi) {
+                            bail!("lone low surrogate \\u{hi:04x}");
+                        } else {
+                            hi
+                        };
+                        match char::from_u32(c) {
+                            Some(c) => s.push(c),
+                            None => bail!("invalid code point \\u{c:04x}"),
+                        }
+                        // parse_hex4 already advanced past the digits;
+                        // compensate for the shared `*pos += 1` below
+                        *pos -= 1;
+                    }
                     c => bail!("unsupported escape '\\{}'", c as char),
                 }
                 *pos += 1;
@@ -258,6 +293,25 @@ fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
         }
     }
     bail!("unterminated string");
+}
+
+/// Four hex digits of a `\uXXXX` escape; leaves `pos` one past them.
+fn parse_hex4(b: &[u8], pos: &mut usize) -> Result<u32> {
+    if b.len() - *pos < 4 {
+        bail!("truncated \\u escape at byte {pos}");
+    }
+    let mut v = 0u32;
+    for _ in 0..4 {
+        let d = match b[*pos] {
+            c @ b'0'..=b'9' => (c - b'0') as u32,
+            c @ b'a'..=b'f' => (c - b'a') as u32 + 10,
+            c @ b'A'..=b'F' => (c - b'A') as u32 + 10,
+            c => bail!("invalid hex digit '{}' in \\u escape", c as char),
+        };
+        v = (v << 4) | d;
+        *pos += 1;
+    }
+    Ok(v)
 }
 
 fn parse_number(b: &[u8], pos: &mut usize) -> Result<JsonValue> {
@@ -339,6 +393,47 @@ mod tests {
     fn render_escapes_strings() {
         let v = JsonValue::String("a\"b\\c\nd".into());
         assert_eq!(JsonValue::parse(&v.render()).unwrap(), v);
+    }
+
+    #[test]
+    fn control_characters_round_trip() {
+        // every C0 control (U+0000..=U+001F) must escape to valid JSON
+        // and parse back to the identical string
+        let all: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let v = JsonValue::String(all.clone());
+        let text = v.render();
+        // no raw control byte may appear in the rendered text
+        assert!(
+            text.bytes().all(|b| b >= 0x20),
+            "rendered JSON leaked a raw control byte: {text:?}"
+        );
+        assert_eq!(JsonValue::parse(&text).unwrap(), v);
+        // the common three keep their shorthand escapes
+        assert!(text.contains("\\n") && text.contains("\\t") && text.contains("\\r"));
+        // the rest use \u00XX
+        assert!(text.contains("\\u0000") && text.contains("\\u001f"));
+    }
+
+    #[test]
+    fn unicode_escapes_parse() {
+        assert_eq!(
+            JsonValue::parse("\"A\\u00e9\"").unwrap().as_str(),
+            Some("A\u{00e9}")
+        );
+        // surrogate pair for U+1F600
+        assert_eq!(
+            JsonValue::parse("\"\\ud83d\\ude00\"").unwrap().as_str(),
+            Some("\u{1F600}")
+        );
+        // \b and \f shorthands
+        assert_eq!(
+            JsonValue::parse(r#""\b\f""#).unwrap().as_str(),
+            Some("\u{0008}\u{000C}")
+        );
+        // lone surrogates are rejected
+        assert!(JsonValue::parse(r#""\ud83d""#).is_err());
+        assert!(JsonValue::parse(r#""\ude00""#).is_err());
+        assert!(JsonValue::parse(r#""\u12"#).is_err());
     }
 
     #[test]

@@ -1,17 +1,20 @@
 //! Small self-contained utilities: a seeded PRNG for the stochastic
 //! passes, a stopwatch, a stable FNV-1a hasher for the coordinator's
-//! compile-cache keys, and a minimal JSON reader for
-//! `artifacts/geometry.json`.
+//! compile-cache keys, a minimal JSON reader for
+//! `artifacts/geometry.json`, and the bounded keep-first
+//! [`BoundedLog`] shared by every audit trail.
 //!
 //! (The build environment is fully offline with only the `xla` crate's
 //! dependency closure vendored, so `rand`, `serde` and friends are
 //! hand-rolled here — see DESIGN.md §Key design decisions.)
 
+mod bounded_log;
 mod hash;
 mod json;
 mod rng;
 mod timer;
 
+pub use bounded_log::BoundedLog;
 pub use hash::{fnv1a_64, StableHasher};
 pub use json::JsonValue;
 pub use rng::XorShiftRng;

@@ -1,0 +1,222 @@
+//! Observability integration tests: the [`overlay_jit::obs`] span
+//! recorder observed through the public serving APIs.
+//!
+//! Covers the layer's two core promises end to end, all offline:
+//! * **tracing off costs nothing** — a coordinator built without a
+//!   trace handle allocates zero ring spans and records zero spans or
+//!   traces while serving (the no-op recorder's counters stay 0);
+//! * **tracing on is structurally complete** — every submit yields a
+//!   trace with exactly one root and no orphaned parent references,
+//!   the serving phases appear under it, and cluster-front-door
+//!   traces keep a single root across the node boundary with the hop
+//!   attributed to the node that served the dispatch.
+
+use std::time::{Duration, Instant};
+
+use overlay_jit::bench_kernels::BENCHMARKS;
+use overlay_jit::cluster::{ClusterConfig, ClusterFrontend};
+use overlay_jit::coordinator::{
+    Admission, Coordinator, CoordinatorConfig, DispatchHandle, Priority, SubmitArg,
+};
+use overlay_jit::obs::{
+    check_traces, chrome_trace, Phase, TraceHandle, TraceSink, CLASS_TAIL,
+    FRONTEND_NODE,
+};
+use overlay_jit::overlay::OverlaySpec;
+use overlay_jit::runtime_ocl::{Backend, Context, Device};
+use overlay_jit::util::{JsonValue, XorShiftRng};
+
+fn host_ctx() -> Context {
+    let dev = Device {
+        spec: OverlaySpec::zynq_default(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    Context::new(&dev)
+}
+
+fn random_args(ctx: &Context, source: &str, n: usize, rng: &mut XorShiftRng) -> Vec<SubmitArg> {
+    let nparams = overlay_jit::frontend::parse_kernel(source).unwrap().params.len();
+    (0..nparams)
+        .map(|_| {
+            let buf = ctx.create_buffer(n + 16);
+            let data: Vec<i32> = (0..n + 16).map(|_| rng.gen_i64(-30, 30) as i32).collect();
+            buf.write(&data);
+            SubmitArg::Buffer(buf)
+        })
+        .collect()
+}
+
+fn resolve(h: DispatchHandle, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        match h.try_wait_typed() {
+            Some(Ok(_)) => return,
+            Some(Err(e)) => panic!("{what}: dispatch failed: {e}"),
+            None => {
+                assert!(Instant::now() < deadline, "{what}: dispatch hung");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// Tracing off is the default, and it must be a true no-op: the
+/// disabled sink owns zero ring capacity and a full serve/complete
+/// cycle bumps none of its counters.
+#[test]
+fn tracing_off_allocates_and_records_nothing() {
+    let disabled = TraceSink::disabled();
+    assert!(!disabled.enabled());
+    let st = disabled.stats();
+    assert_eq!(st.allocated_spans, 0, "disabled sink must own no ring memory");
+    assert_eq!(st.shards, 0);
+
+    let coord =
+        Coordinator::new(CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1))
+            .unwrap();
+    assert!(!coord.trace().enabled());
+
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x0B5);
+    for b in BENCHMARKS.iter().take(2) {
+        let args = random_args(&ctx, b.source, 256, &mut rng);
+        let h = coord
+            .submit(b.source, &args, 256, Priority::Interactive)
+            .unwrap();
+        resolve(h, b.name);
+    }
+    coord.drain_background();
+
+    let st = coord.trace().sink.stats();
+    assert_eq!(st.allocated_spans, 0, "serving must not grow ring memory");
+    assert_eq!(st.recorded, 0, "no spans may be recorded with tracing off");
+    assert_eq!(st.traces, 0, "no traces may be opened with tracing off");
+    assert!(coord.trace().sink.spans().is_empty());
+    assert!(coord.trace().sink.exemplars().is_empty());
+}
+
+/// With the recorder armed, every submit produces a structurally
+/// complete trace — one root, no orphans — carrying the serving
+/// phases, and the slowest completion is pinned as the tail exemplar.
+#[test]
+fn enabled_traces_are_rooted_and_orphan_free() {
+    let sink = TraceSink::new(2, 4096);
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.trace = Some(TraceHandle::new(sink.clone(), 0));
+    let coord = Coordinator::new(cfg).unwrap();
+    assert!(coord.trace().enabled());
+
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x0B6);
+    const SUBMITS: usize = 3;
+    for _ in 0..SUBMITS {
+        let b = &BENCHMARKS[0];
+        let args = random_args(&ctx, b.source, 256, &mut rng);
+        let h = coord
+            .submit(b.source, &args, 256, Priority::Interactive)
+            .unwrap();
+        resolve(h, b.name);
+    }
+    coord.drain_background();
+
+    let spans = sink.spans();
+    let st = sink.stats();
+    assert_eq!(st.overwritten, 0);
+    let chk = check_traces(&spans);
+    assert_eq!(chk.traces, SUBMITS, "one trace per submit");
+    assert_eq!(chk.rooted, chk.traces, "every trace has exactly one root");
+    assert_eq!(chk.orphans, 0, "every parent reference resolves in-trace");
+
+    // the serving phases all appear: admission-free submit → route →
+    // cache (miss then hits) → slot pick → worker timeline
+    for phase in [
+        Phase::Submit,
+        Phase::Route,
+        Phase::SlotPick,
+        Phase::QueueWait,
+        Phase::Pack,
+        Phase::Exec,
+        Phase::Scatter,
+        Phase::Verify,
+    ] {
+        assert!(
+            spans.iter().any(|s| s.phase == phase),
+            "phase {} missing from the trace set",
+            phase.name()
+        );
+    }
+    assert!(
+        spans.iter().any(|s| s.phase == Phase::Compile && s.tag == "miss"),
+        "first submit must record the cold compile"
+    );
+    assert!(
+        spans.iter().any(|s| s.phase == Phase::CacheLookup && s.tag == "hit"),
+        "warm submits must record cache hits"
+    );
+
+    // worker spans carry a real worker id; submit-path spans do not
+    assert!(spans.iter().any(|s| s.phase == Phase::Exec && s.worker >= 0));
+    assert!(spans.iter().all(|s| s.phase != Phase::Submit || s.worker < 0));
+
+    // the flight recorder pinned a tail exemplar for a live trace
+    let tail = sink.exemplar(CLASS_TAIL, "e2e").expect("tail exemplar pinned");
+    assert!(spans.iter().any(|s| s.trace_id == tail.trace_id));
+    assert_eq!(tail.count as usize, SUBMITS);
+
+    // the Chrome exporter round-trips every span
+    let doc = chrome_trace(&spans, 0).render();
+    let parsed = JsonValue::parse(&doc).unwrap();
+    let events = parsed.get("traceEvents").and_then(|v| v.as_array()).unwrap();
+    assert_eq!(events.len(), spans.len());
+}
+
+/// A cluster front-door trace stays one tree across the node
+/// boundary: the frontend root is the only root, the serving node's
+/// submit span parents to it, and node attribution survives.
+#[test]
+fn cluster_trace_propagates_across_the_node_boundary() {
+    let sink = TraceSink::new(2, 4096);
+    let mut cfg = ClusterConfig::sim_cluster(
+        2,
+        CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1),
+    );
+    cfg.trace = Some(sink.clone());
+    let cluster = ClusterFrontend::new(cfg).unwrap();
+
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x0B7);
+    let b = &BENCHMARKS[0];
+    let args = random_args(&ctx, b.source, 256, &mut rng);
+    match cluster
+        .submit_gated("t0", b.source, &args, 256, Priority::Interactive, None)
+        .unwrap()
+    {
+        Admission::Admitted(h) => resolve(h, b.name),
+        Admission::Rejected(r) => panic!("ungated cluster rejected: {r}"),
+    }
+    cluster.drain();
+
+    let spans = sink.spans();
+    let chk = check_traces(&spans);
+    assert_eq!(chk.traces, 1);
+    assert_eq!(chk.rooted, 1, "exactly one root across both layers");
+    assert_eq!(chk.orphans, 0, "the node-side spans parent into the frontend trace");
+
+    let root = spans
+        .iter()
+        .find(|s| s.parent == 0)
+        .expect("frontend root span");
+    assert_eq!(root.phase, Phase::Frontend);
+    assert_eq!(root.node, FRONTEND_NODE);
+    let submit = spans
+        .iter()
+        .find(|s| s.phase == Phase::Submit)
+        .expect("node-side submit span");
+    assert_eq!(submit.parent, root.span_id, "submit parents to the frontend root");
+    assert!(submit.node != FRONTEND_NODE, "submit carries the serving node's id");
+    // worker spans executed on the same node the submit landed on
+    let exec = spans.iter().find(|s| s.phase == Phase::Exec).expect("exec span");
+    assert_eq!(exec.node, submit.node);
+    cluster.shutdown();
+}
