@@ -32,6 +32,17 @@
 #                     exemplar per anomaly, and both telemetry
 #                     exports (trace.json, metrics.prom) re-parse
 #                     consistently. Non-blocking CI job.
+#   make slo        — continuous-telemetry acceptance harness
+#                     (examples/e2e_serve -- slo): four scripted SLO
+#                     windows (calm, overload, burn-fed recovery,
+#                     clean) against the burn-rate engine with a 1/8
+#                     head-sampled recorder; exits non-zero unless
+#                     the availability alert fires at tick 2 and
+#                     clears at tick 4, sampling books balance while
+#                     histograms count every completion, exemplar
+#                     pins survive sampling, and the exported
+#                     Prometheus page (metrics.prom) re-parses equal
+#                     to the in-process stats. Non-blocking CI job.
 #   make bench      — the paper-figure + serving bench harnesses
 #   make bench-json — the §E11 hot-path data-plane bench; writes
 #                     machine-readable BENCH_hotpath.json at the repo
@@ -43,7 +54,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy build test soak overload cluster trace bench bench-build bench-json doc artifacts
+.PHONY: check fmt clippy build test soak overload cluster trace slo bench bench-build bench-json doc artifacts
 
 check: fmt clippy test bench-build doc
 
@@ -84,6 +95,12 @@ cluster:
 # (default metrics.prom) and re-parses both
 trace:
 	$(CARGO) run --release --example e2e_serve -- trace
+
+# the continuous-telemetry acceptance harness: scripted SLO windows
+# under 1/8 head sampling; writes $$METRICS_OUT (default metrics.prom)
+# and re-parses it against the in-process serving stats
+slo:
+	$(CARGO) run --release --example e2e_serve -- slo
 
 bench:
 	$(CARGO) bench --bench serve_throughput

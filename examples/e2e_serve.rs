@@ -77,6 +77,28 @@
 //! whose counters must agree with [`ServingStats`] totals. Any
 //! violated check exits non-zero.
 //!
+//! **SLO mode** — `cargo run --release --example e2e_serve -- slo` —
+//! the continuous-telemetry harness: the overload recipe is replayed
+//! with the SLO engine armed (availability floor + interactive-p99
+//! objective), the span recorder **head-sampled at 1/8**, and the
+//! burn-rate window clock driven by a scripted tick per phase. The
+//! calm phase must close tick 1 with no alert; the flood (plus a
+//! deliberately doomed deadline and a post-flood shed salvo) must
+//! fire the availability burn alert at exactly tick 2 (fast burn ≥ 2,
+//! slow burn ≥ 1); the alert must still be pending at tick 3 (the
+//! burn-fed admission gate sheds a probe batch submit while letting
+//! interactive through) and clear at exactly tick 4 after two calm
+//! interactive rounds. Sampling is checked against the books: every
+//! submit consumes exactly one sampling candidate, sampled-out
+//! submits still land in the latency histograms, and — because the
+//! scripted strike and doomed sequence numbers are chosen on
+//! sampled-in candidates — the flight recorder still pins an exemplar
+//! for **every** anomaly class at 1/8. The Prometheus page (with the
+//! `overlay_jit_slo_*` gauges and the `_bucket`/`_sum`/`_count`
+//! histogram series) goes to `$METRICS_OUT` (default `metrics.prom`)
+//! and is re-parsed and cross-checked. Any violated check exits
+//! non-zero.
+//!
 //! **PJRT mode** — `make artifacts && cargo run --release --features
 //! pjrt --example e2e_serve -- pjrt` — the original single-device
 //! path: JIT-compiles the six benchmarks and serves batched requests
@@ -86,7 +108,7 @@
 //!
 //! Results are recorded in EXPERIMENTS.md (§E7 PJRT, §E8 coordinator,
 //! §E9 heterogeneous fleet, §E10 adaptive scaling, §E12 overload,
-//! §E13 cluster).
+//! §E13 cluster, §E14 tracing, §E15 SLO telemetry).
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -120,6 +142,7 @@ fn main() -> Result<()> {
         Some("overload") => serve_overload(),
         Some("cluster") => serve_cluster(),
         Some("trace") => serve_trace(),
+        Some("slo") => serve_slo(),
         Some("coordinator") | None => {
             let per_spec = args
                 .get(1)
@@ -130,7 +153,7 @@ fn main() -> Result<()> {
         Some(other) => {
             bail!(
                 "unknown mode '{other}' (coordinator [N] | autoscale | overload | \
-                 cluster | trace | pjrt)"
+                 cluster | trace | slo | pjrt)"
             )
         }
     }
@@ -1270,6 +1293,470 @@ fn serve_trace() -> Result<()> {
         "OK: {} events exported to {trace_out}, {} Prometheus samples to \
          {metrics_out}, counters agree with ServingStats",
         events.len(),
+        samples.len()
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// slo mode: burn-rate alerting under flood, head-sampled tracing
+// ---------------------------------------------------------------------
+
+/// Scripted SLO window clock period: one tick closes each phase.
+const SLO_TICK_NS: u64 = 1_000_000_000;
+/// Availability floor the burn-rate alert defends (1% error budget).
+const SLO_AVAILABILITY: f64 = 0.99;
+/// Head-sampling ratio of the armed recorder: ~1 in 8 submits.
+const SLO_SAMPLE_DENOM: u64 = 8;
+/// Ceiling for every handle to reach a terminal outcome.
+const SLO_TIMEOUT: Duration = Duration::from_secs(240);
+
+/// Poll every open handle to a terminal outcome (bounded), folding
+/// completions into the ledgers. Returns how many completed.
+fn drain_handles(
+    open: Vec<(&'static str, bool, overlay_jit::coordinator::DispatchHandle)>,
+    ledgers: &mut HashMap<&'static str, TenantLedger>,
+    timeout: Duration,
+) -> Result<usize> {
+    let mut completed = 0usize;
+    let mut open = open;
+    let poll_deadline = Instant::now() + timeout;
+    while !open.is_empty() {
+        if Instant::now() > poll_deadline {
+            bail!(
+                "{} dispatch handles hung past {timeout:?}: not every submit \
+                 reached a terminal outcome",
+                open.len()
+            );
+        }
+        let mut still = Vec::with_capacity(open.len());
+        for (tenant, interactive, h) in open {
+            match h.try_wait_typed() {
+                Some(Ok(_)) => {
+                    ledgers.entry(tenant).or_default().completed += 1;
+                    completed += 1;
+                }
+                Some(Err(e)) => bail!(
+                    "tenant {tenant} dispatch failed unrecovered ({}): {e}",
+                    e.reason().name()
+                ),
+                None => still.push((tenant, interactive, h)),
+            }
+        }
+        open = still;
+        if !open.is_empty() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    Ok(completed)
+}
+
+fn serve_slo() -> Result<()> {
+    use anyhow::anyhow;
+    use overlay_jit::admission::ALL_FAULT_KINDS;
+    use overlay_jit::obs::{
+        AlertState, Sampler, TraceHandle, TraceSink, CLASS_FAULT, CLASS_REJECT,
+        CLASS_TAIL,
+    };
+
+    // Head-sampled recorder: ~1/8 of submits carry spans, the rest run
+    // completely untraced yet still land in every histogram and SLO
+    // window. Sampling hashes the candidate trace id, which for a
+    // single-threaded submit stream is exactly seq + 1 — so the
+    // scripted strike seqs {5, 28, 32, 37} and the doomed-deadline seq
+    // 42 below sit on candidates {6, 29, 33, 38, 43}, all of which
+    // satisfy mix64(c) % 8 == 0 and are sampled IN. That is what keeps
+    // every anomaly class pinned in the flight recorder at 1/8.
+    let sink = TraceSink::sampled(8, 16_384, Sampler::ratio(SLO_SAMPLE_DENOM));
+    let big = reference_overlay();
+    let small = OverlaySpec::new(4, 4, FuType::Dsp2);
+    let mut cfg = CoordinatorConfig::sim_fleet_mixed(vec![
+        (big.clone(), 2),
+        (small.clone(), 2),
+    ]);
+    cfg.admission = Some(AdmissionConfig {
+        tenant_rate_per_sec: 48.0,
+        tenant_burst: 24.0,
+        shed_pressure: 0.5,
+        interactive_slo_ms: OVERLOAD_SLO_MS,
+        queue_stall_depth: 4,
+        pressure_window: 16,
+        max_tenants: 16,
+    });
+    // deterministic strikes only (zero background rates): CompileFail
+    // needs a cold first-ranked compile, ReconfigFail a fresh
+    // bitstream load — the calm schedule below plants first-sight
+    // kernels at those seqs
+    cfg.faults = Some(FaultPlanConfig {
+        seed: 0xFA17,
+        worker_kill_rate: 0.0,
+        reconfig_fail_rate: 0.0,
+        verify_corrupt_rate: 0.0,
+        compile_fail_rate: 0.0,
+        scripted: vec![
+            (5, FaultKind::CompileFail),
+            (28, FaultKind::WorkerKill),
+            (32, FaultKind::ReconfigFail),
+            (37, FaultKind::VerifyCorrupt),
+        ],
+    });
+    cfg.trace = Some(TraceHandle::new(sink.clone(), 0));
+    cfg.slo = Some(overlay_jit::obs::SloPolicy::serving(
+        OVERLOAD_SLO_MS,
+        SLO_AVAILABILITY,
+    ));
+    let coord = Coordinator::new(cfg)?;
+    println!(
+        "slo: overload recipe over 2x {} + 2x {}, recorder sampled 1/{}, \
+         availability {} + interactive p99 {} ms objectives, scripted tick clock\n",
+        big.name(),
+        small.name(),
+        SLO_SAMPLE_DENOM,
+        SLO_AVAILABILITY,
+        OVERLOAD_SLO_MS
+    );
+
+    let host = Device {
+        spec: big.clone(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    let ctx = Context::new(&host);
+    let mut rng = XorShiftRng::new(0x0B5E55);
+
+    let mut nparams_by_bench = Vec::with_capacity(BENCHMARKS.len());
+    for b in &BENCHMARKS {
+        nparams_by_bench.push(overlay_jit::frontend::parse_kernel(b.source)?.params.len());
+    }
+    let make_args = |nparams: usize, items: usize, rng: &mut XorShiftRng| {
+        (0..nparams)
+            .map(|_| {
+                let buf = ctx.create_buffer(items + 16);
+                let data: Vec<i32> = (0..items + 16)
+                    .map(|_| rng.gen_i64(-40, 40) as i32)
+                    .collect();
+                buf.write(&data);
+                SubmitArg::Buffer(buf)
+            })
+            .collect::<Vec<SubmitArg>>()
+    };
+
+    let mut ledgers: HashMap<&'static str, TenantLedger> = HashMap::new();
+    let mut handles: Vec<(&'static str, bool, overlay_jit::coordinator::DispatchHandle)> =
+        Vec::new();
+    let mut total_submits = 0usize;
+    let mut completed = 0usize;
+
+    // ---- window 1: the calm phase --------------------------------------
+    // 42 scripted submits; the strike seqs are marked. Kernel 1 is
+    // first-seen at seq 5 (a cold first-ranked compile for the
+    // CompileFail strike) and kernel 4 at seq 32 (a fresh bitstream
+    // load for the ReconfigFail strike); kernel 5 stays unused.
+    #[rustfmt::skip]
+    const CALM: [(&str, usize, bool); 42] = [
+        ("alice", 0, true), ("bob", 0, false), ("carol", 0, true),
+        ("alice", 0, false), ("bob", 0, true),
+        ("carol", 1, true), // seq 5: CompileFail (cold kernel 1)
+        ("alice", 2, true), ("bob", 3, true), ("carol", 2, false),
+        ("alice", 3, false), ("bob", 2, true), ("carol", 3, true),
+        ("alice", 0, true), ("bob", 0, false), ("carol", 2, true),
+        ("alice", 3, true), ("bob", 0, true), ("carol", 0, false),
+        ("alice", 2, false), ("bob", 3, false), ("carol", 0, true),
+        ("alice", 0, false), ("bob", 2, true), ("carol", 3, true),
+        ("alice", 0, true), ("bob", 0, false), ("carol", 2, false),
+        ("alice", 3, false),
+        ("bob", 2, true),   // seq 28: WorkerKill
+        ("carol", 3, true), ("alice", 0, true), ("bob", 0, false),
+        ("carol", 4, true), // seq 32: ReconfigFail (first load of kernel 4)
+        ("alice", 2, true), ("bob", 3, true), ("carol", 0, false),
+        ("alice", 0, true),
+        ("bob", 3, true),   // seq 37: VerifyCorrupt
+        ("carol", 2, true), ("alice", 0, false), ("bob", 2, false),
+        ("carol", 3, false),
+    ];
+    for &(tenant, b, wide) in CALM.iter() {
+        let items = if wide { WIDE_ITEMS } else { SMALL_ITEMS };
+        let args = make_args(nparams_by_bench[b], items, &mut rng);
+        let priority = if wide { Priority::Batch } else { Priority::Interactive };
+        submit_one(
+            &coord, &mut ledgers, &mut handles, tenant, BENCHMARKS[b].source, &args,
+            items, priority, None,
+        )?;
+        total_submits += 1;
+    }
+    completed += drain_handles(std::mem::take(&mut handles), &mut ledgers, SLO_TIMEOUT)?;
+    let alerts = coord.slo_tick(SLO_TICK_NS);
+    if !alerts.is_empty() {
+        bail!("tick 1 (calm) raised {} alert(s); expected none", alerts.len());
+    }
+    println!("tick 1: calm window closed, no alert ({completed} completed)");
+
+    // ---- window 2: doomed deadline + flood + shed salvo ----------------
+    // seq 42 (sampled-in candidate 43): the deadline exemplar
+    let args = make_args(nparams_by_bench[0], WIDE_ITEMS, &mut rng);
+    submit_one(
+        &coord, &mut ledgers, &mut handles, "doomed", BENCHMARKS[0].source, &args,
+        WIDE_ITEMS, Priority::Batch, Some(Duration::from_nanos(1)),
+    )?;
+    total_submits += 1;
+    // seqs 43..162: the flood — burst admits stuff the 8x8 queues,
+    // then pressure sheds, then the dry token bucket quota-rejects
+    for _ in 0..FLOOD_SUBMITS {
+        let args = make_args(nparams_by_bench[0], WIDE_ITEMS, &mut rng);
+        submit_one(
+            &coord, &mut ledgers, &mut handles, "flood", BENCHMARKS[0].source, &args,
+            WIDE_ITEMS, Priority::Batch, None,
+        )?;
+        total_submits += 1;
+    }
+    // seqs 163..180: the shed salvo — compliant tenants with fresh
+    // tokens submit batch into the still-stuffed queues, so the
+    // sampled-in candidates in this range pin the shed exemplar
+    let compliant = ["alice", "bob", "carol"];
+    for i in 0..18 {
+        let args = make_args(nparams_by_bench[0], WIDE_ITEMS, &mut rng);
+        submit_one(
+            &coord, &mut ledgers, &mut handles, compliant[i % 3], BENCHMARKS[0].source,
+            &args, WIDE_ITEMS, Priority::Batch, None,
+        )?;
+        total_submits += 1;
+    }
+    completed += drain_handles(std::mem::take(&mut handles), &mut ledgers, SLO_TIMEOUT)?;
+    let alerts = coord.slo_tick(2 * SLO_TICK_NS);
+    let fired = alerts
+        .iter()
+        .find(|a| a.objective == "availability" && a.state == AlertState::Firing)
+        .ok_or_else(|| {
+            anyhow!("availability burn alert did not fire at tick 2 (the flood window)")
+        })?;
+    if fired.tick != 2 {
+        bail!("availability alert fired at tick {}, expected 2", fired.tick);
+    }
+    if fired.fast_burn < 2.0 || fired.slow_burn < 1.0 {
+        bail!(
+            "firing alert carries burn {:.1}x fast / {:.1}x slow — below the \
+             2x/1x thresholds that supposedly fired it",
+            fired.fast_burn,
+            fired.slow_burn
+        );
+    }
+    println!(
+        "tick 2: availability alert FIRING ({:.0}x fast burn, {:.0}x slow burn)",
+        fired.fast_burn, fired.slow_burn
+    );
+
+    // ---- window 3: burn-fed admission, alert stays pending -------------
+    // the burn now rides the admission pressure: with the fleet idle
+    // again, a batch probe is still shed while interactive rides
+    // through — then a calm interactive round keeps the fast window
+    // just dirty enough that the alert must NOT clear at tick 3
+    let args = make_args(nparams_by_bench[0], WIDE_ITEMS, &mut rng);
+    submit_one(
+        &coord, &mut ledgers, &mut handles, "dave", BENCHMARKS[0].source, &args,
+        WIDE_ITEMS, Priority::Batch, None,
+    )?;
+    total_submits += 1;
+    if ledgers.get("dave").map_or(0, |l| l.shed) != 1 {
+        bail!("burn-fed pressure failed to shed dave's batch probe on an idle fleet");
+    }
+    let args = make_args(nparams_by_bench[0], SMALL_ITEMS, &mut rng);
+    submit_one(
+        &coord, &mut ledgers, &mut handles, "dave", BENCHMARKS[0].source, &args,
+        SMALL_ITEMS, Priority::Interactive, None,
+    )?;
+    total_submits += 1;
+    if ledgers.get("dave").map_or(0, |l| l.admitted) != 1 {
+        bail!("interactive was refused while only batch should shed under burn");
+    }
+    for &(tenant, b) in &[
+        ("alice", 0), ("bob", 2), ("carol", 3), ("alice", 2), ("bob", 3), ("carol", 0),
+        ("alice", 3), ("bob", 0), ("carol", 2), ("alice", 0), ("bob", 2), ("carol", 3),
+    ] {
+        let args = make_args(nparams_by_bench[b], SMALL_ITEMS, &mut rng);
+        submit_one(
+            &coord, &mut ledgers, &mut handles, tenant, BENCHMARKS[b].source, &args,
+            SMALL_ITEMS, Priority::Interactive, None,
+        )?;
+        total_submits += 1;
+    }
+    completed += drain_handles(std::mem::take(&mut handles), &mut ledgers, SLO_TIMEOUT)?;
+    let alerts = coord.slo_tick(3 * SLO_TICK_NS);
+    if alerts.iter().any(|a| a.objective == "availability") {
+        bail!(
+            "availability alert transitioned at tick 3; the shed probe should \
+             have kept the fast window burning"
+        );
+    }
+    println!("tick 3: alert still pending (burn-shed batch probe, interactive served)");
+
+    // ---- window 4: clean recovery clears the alert ---------------------
+    for &(tenant, b) in &[
+        ("alice", 0), ("bob", 2), ("carol", 3), ("alice", 2), ("bob", 3), ("carol", 0),
+        ("alice", 3), ("bob", 0), ("carol", 2), ("alice", 0), ("bob", 2), ("carol", 3),
+    ] {
+        let args = make_args(nparams_by_bench[b], SMALL_ITEMS, &mut rng);
+        submit_one(
+            &coord, &mut ledgers, &mut handles, tenant, BENCHMARKS[b].source, &args,
+            SMALL_ITEMS, Priority::Interactive, None,
+        )?;
+        total_submits += 1;
+    }
+    completed += drain_handles(std::mem::take(&mut handles), &mut ledgers, SLO_TIMEOUT)?;
+    let alerts = coord.slo_tick(4 * SLO_TICK_NS);
+    let cleared = alerts
+        .iter()
+        .find(|a| a.objective == "availability" && a.state == AlertState::Cleared)
+        .ok_or_else(|| {
+            anyhow!("availability alert did not clear at tick 4 (the recovery window)")
+        })?;
+    if cleared.tick != 4 {
+        bail!("availability alert cleared at tick {}, expected 4", cleared.tick);
+    }
+    println!("tick 4: availability alert CLEARED\n");
+    coord.drain_background();
+
+    // ---- the books ------------------------------------------------------
+    let stats = coord.stats();
+    println!("{}", stats.render());
+    let slo = stats.slo.expect("slo policy configured");
+    if slo.ticks != 4 || slo.objectives != 2 {
+        bail!(
+            "SLO engine saw {} ticks over {} objectives, expected 4 over 2",
+            slo.ticks,
+            slo.objectives
+        );
+    }
+    if slo.firing != 0 {
+        bail!("{} objective(s) still firing after the recovery window", slo.firing);
+    }
+    let avail: Vec<(AlertState, u64)> = coord
+        .slo_alerts()
+        .iter()
+        .filter(|a| a.objective == "availability")
+        .map(|a| (a.state, a.tick))
+        .collect();
+    if avail != [(AlertState::Firing, 2), (AlertState::Cleared, 4)] {
+        bail!("availability alert log {avail:?} != [Firing@2, Cleared@4]");
+    }
+    let p99 = coord
+        .slo_windowed_p99_ms("interactive-p99", 6)
+        .ok_or_else(|| anyhow!("no windowed p99 for the interactive objective"))?;
+    if !(p99.is_finite() && p99 <= OVERLOAD_SLO_MS) {
+        bail!("windowed interactive p99 {p99:.1} ms broke the {OVERLOAD_SLO_MS} ms SLO");
+    }
+
+    // sampling books: every submit consumed exactly one candidate, and
+    // the histograms counted every completion the sampler dropped
+    let sk = sink.stats();
+    if sk.sampled_out == 0 {
+        bail!("1/{SLO_SAMPLE_DENOM} sampling never sampled a submit out");
+    }
+    if sk.traces + sk.sampled_out != total_submits as u64 {
+        bail!(
+            "{} traces + {} sampled-out != {} submits: a submit skipped the sampler",
+            sk.traces,
+            sk.sampled_out,
+            total_submits
+        );
+    }
+    if stats.latency_hist.count() != completed as u64 {
+        bail!(
+            "latency histogram holds {} samples but {} dispatches completed — \
+             sampled-out submits must still be measured",
+            stats.latency_hist.count(),
+            completed
+        );
+    }
+
+    // fault + QoS acceptance (the overload criteria still hold)
+    if stats.verify_failures > 0 {
+        bail!("verification failure under fault injection");
+    }
+    let adm = stats.admission.clone().expect("admission configured");
+    if adm.shed == 0 || adm.rejected_quota == 0 {
+        bail!("the flood never exercised shed + quota rejection");
+    }
+    if ledgers.get("doomed").map_or(0, |l| l.rejected_deadline) == 0 {
+        bail!("the doomed deadline was not rejected early");
+    }
+    let tally = coord.fault_tally().expect("fault plan configured");
+    for kind in ALL_FAULT_KINDS {
+        if tally.injected_of(kind) == 0 {
+            bail!("fault {} was never injected", kind.name());
+        }
+        if tally.recovered_of(kind) == 0 {
+            bail!("no dispatch struck by {} recovered", kind.name());
+        }
+    }
+
+    // the flight recorder still pins every anomaly class at 1/8
+    for kind in ["quota", "deadline", "shed"] {
+        let e = sink
+            .exemplar(CLASS_REJECT, kind)
+            .ok_or_else(|| anyhow!("no exemplar pinned for rejection '{kind}' at 1/8"))?;
+        println!(
+            "  exemplar reject/{kind:<9} trace {} ({} occurrences)",
+            e.trace_id, e.count
+        );
+    }
+    for kind in ALL_FAULT_KINDS {
+        let e = sink.exemplar(CLASS_FAULT, kind.name()).ok_or_else(|| {
+            anyhow!("no exemplar pinned for fault '{}' at 1/8", kind.name())
+        })?;
+        println!(
+            "  exemplar fault/{:<10} trace {} ({} occurrences)",
+            kind.name(),
+            e.trace_id,
+            e.count
+        );
+    }
+    let tail = sink
+        .exemplar(CLASS_TAIL, "e2e")
+        .ok_or_else(|| anyhow!("no tail-latency exemplar pinned at 1/8"))?;
+    println!(
+        "  exemplar tail/e2e       trace {} ({} µs worst end-to-end)\n",
+        tail.trace_id, tail.weight
+    );
+
+    // ---- export, re-parse, cross-check ---------------------------------
+    let metrics_out =
+        std::env::var("METRICS_OUT").unwrap_or_else(|_| "metrics.prom".to_string());
+    std::fs::write(&metrics_out, stats.prometheus())?;
+    let samples = metrics::parse_prometheus(&std::fs::read_to_string(&metrics_out)?)?;
+    let sample = |name: &str| -> Result<f64> {
+        samples
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| anyhow!("exported metrics page lacks {name}"))
+    };
+    for (name, want) in [
+        ("overlay_jit_slo_firing", slo.firing as f64),
+        ("overlay_jit_slo_alerts_total", slo.alerts_total as f64),
+        ("overlay_jit_latency_ms_count", stats.latency_hist.count() as f64),
+        (
+            "overlay_jit_latency_ms_bucket{le=\"+Inf\"}",
+            stats.latency_hist.count() as f64,
+        ),
+        ("overlay_jit_rejected_submits_total", stats.rejected_submits as f64),
+        ("overlay_jit_shed_submits_total", stats.shed_submits as f64),
+    ] {
+        let got = sample(name)?;
+        if got != want {
+            bail!("{name}: exported {got} but ServingStats says {want}");
+        }
+    }
+    if (sample("overlay_jit_slo_burn")? - slo.burn).abs() > 1e-9 {
+        bail!("exported slo burn disagrees with SloStats");
+    }
+
+    println!(
+        "OK: alert fired@2 / cleared@4, {} of {} submits traced ({} sampled out), \
+         hist kept all {} completions, {} Prometheus samples to {metrics_out}",
+        sk.traces,
+        total_submits,
+        sk.sampled_out,
+        completed,
         samples.len()
     );
     Ok(())

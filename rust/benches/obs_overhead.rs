@@ -9,7 +9,14 @@
 //!   the disabled sink's first-branch return;
 //! * **submit hot path** — µs per `Coordinator::submit` + wait of a
 //!   cache-resident kernel with tracing off vs on, the end-to-end
-//!   overhead a production deployment would see per dispatch.
+//!   overhead a production deployment would see per dispatch;
+//! * **latency carrier** — ns per recorded sample into the
+//!   log-bucketed [`LatencyHist`] vs the stride-decimating reservoir
+//!   it replaced (replicated locally below), the price §E15 pays for
+//!   lossless merge;
+//! * **head sampling** — µs per dispatch with a 1/8 [`Sampler`] on
+//!   the armed sink vs tracing every submit, the knob that keeps
+//!   always-on tracing affordable.
 //!
 //! Run: `cargo bench --bench obs_overhead` (or `make bench`).
 
@@ -19,7 +26,7 @@ use std::time::Instant;
 use overlay_jit::bench_kernels::BENCHMARKS;
 use overlay_jit::coordinator::{Coordinator, CoordinatorConfig, Priority, SubmitArg};
 use overlay_jit::metrics::TextTable;
-use overlay_jit::obs::{Phase, Span, TraceHandle, TraceSink, NO_WORKER};
+use overlay_jit::obs::{LatencyHist, Phase, Sampler, Span, TraceHandle, TraceSink, NO_WORKER};
 use overlay_jit::overlay::OverlaySpec;
 use overlay_jit::runtime_ocl::{Backend, Context, Device};
 use overlay_jit::util::{JsonValue, XorShiftRng};
@@ -54,6 +61,62 @@ fn bench_record(sink: &TraceSink) -> f64 {
         sink.record(s);
     }
     t.elapsed().as_nanos() as f64 / RECORDS as f64
+}
+
+/// The pre-§E15 latency carrier, replicated for an apples-to-apples
+/// record cost: an unbounded-stream reservoir that decimates in place
+/// and doubles its stride whenever the buffer fills. Kept local so
+/// the library only ships the histogram.
+struct LegacyReservoir {
+    samples: Vec<f64>,
+    stride: usize,
+    seen: usize,
+}
+
+impl LegacyReservoir {
+    fn new(cap: usize) -> Self {
+        Self { samples: Vec::with_capacity(cap), stride: 1, seen: 0 }
+    }
+
+    fn record_ms(&mut self, ms: f64) {
+        if self.seen % self.stride == 0 {
+            if self.samples.len() == self.samples.capacity() {
+                let mut i = 0;
+                self.samples.retain(|_| {
+                    i += 1;
+                    i % 2 == 1
+                });
+                self.stride *= 2;
+            }
+            self.samples.push(ms);
+        }
+        self.seen += 1;
+    }
+}
+
+/// ns per recorded latency sample: log-bucketed histogram vs the
+/// stride-decimating reservoir it replaced.
+fn bench_latency_carriers(rng: &mut XorShiftRng) -> (f64, f64) {
+    let ms: Vec<f64> =
+        (0..RECORDS).map(|_| rng.gen_i64(1, 400_000) as f64 / 1000.0).collect();
+
+    let mut hist = LatencyHist::new();
+    let t = Instant::now();
+    for &m in &ms {
+        hist.record_ms(m);
+    }
+    let hist_ns = t.elapsed().as_nanos() as f64 / RECORDS as f64;
+    assert_eq!(hist.count(), RECORDS as u64);
+
+    let mut res = LegacyReservoir::new(1024);
+    let t = Instant::now();
+    for &m in &ms {
+        res.record_ms(m);
+    }
+    let res_ns = t.elapsed().as_nanos() as f64 / RECORDS as f64;
+    assert_eq!(res.seen, RECORDS);
+
+    (hist_ns, res_ns)
 }
 
 /// Median µs for submit + wait of a cache-resident kernel.
@@ -121,6 +184,18 @@ fn main() {
     let per_dispatch_spans =
         sink.stats().recorded as f64 / (DISPATCHES + 1) as f64;
 
+    // head sampling: same armed fleet, 1/8 of submits open a trace
+    let sampled_sink = TraceSink::sampled(8, 65_536, Sampler::ratio(8));
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.trace = Some(TraceHandle::new(sampled_sink.clone(), 0));
+    let coord_sampled = Coordinator::new(cfg).unwrap();
+    let sampled_us = bench_submit(&coord_sampled, &ctx, &mut rng);
+    let sk = sampled_sink.stats();
+    assert!(sk.sampled_out > 0, "1/8 sampler must decline most submits");
+
+    // latency carrier: histogram vs the reservoir it replaced
+    let (hist_ns, res_ns) = bench_latency_carriers(&mut rng);
+
     let mut table = TextTable::new(vec!["path", "tracing off", "tracing on", "overhead"]);
     table.row(vec![
         "record ns/span".to_string(),
@@ -133,6 +208,18 @@ fn main() {
         format!("{off_us:.1}"),
         format!("{on_us:.1}"),
         format!("{:+.1}%", 100.0 * (on_us - off_us) / off_us),
+    ]);
+    table.row(vec![
+        "submit+wait µs, sampled 1/8".to_string(),
+        format!("{off_us:.1}"),
+        format!("{sampled_us:.1}"),
+        format!("{:+.1}%", 100.0 * (sampled_us - off_us) / off_us),
+    ]);
+    table.row(vec![
+        "latency carrier ns/sample".to_string(),
+        format!("{res_ns:.1} (reservoir)"),
+        format!("{hist_ns:.1} (histogram)"),
+        format!("{:+.1} ns", hist_ns - res_ns),
     ]);
     println!("{}", table.render());
     println!(
@@ -149,6 +236,9 @@ fn main() {
         "spans_per_dispatch".to_string(),
         JsonValue::Number(per_dispatch_spans),
     );
+    doc.insert("submit_us_sampled".to_string(), JsonValue::Number(sampled_us));
+    doc.insert("hist_record_ns".to_string(), JsonValue::Number(hist_ns));
+    doc.insert("reservoir_record_ns".to_string(), JsonValue::Number(res_ns));
     let path =
         std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_obs.json".to_string());
     std::fs::write(&path, JsonValue::Object(doc).render()).expect("write bench json");

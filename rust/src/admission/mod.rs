@@ -225,6 +225,11 @@ pub struct AdmissionController {
     shed: AtomicU64,
     /// Last computed pressure, stored as `f64::to_bits`.
     pressure_bits: AtomicU64,
+    /// Latest SLO burn rate fed by `Coordinator::slo_tick`, stored as
+    /// `f64::to_bits`. Folded (clamped to `[0, 1]`) into the pressure
+    /// max: a tenant burning error budget sheds batch work even while
+    /// queues look shallow.
+    slo_burn_bits: AtomicU64,
 }
 
 /// Everything the controller needs to know about one submit. The caller
@@ -262,7 +267,16 @@ impl AdmissionController {
             rejected_deadline: AtomicU64::new(0),
             shed: AtomicU64::new(0),
             pressure_bits: AtomicU64::new(0),
+            slo_burn_bits: AtomicU64::new(0),
         }
+    }
+
+    /// Feed the latest SLO burn rate (from the coordinator's SLO tick)
+    /// into the pressure signal. A burn ≥ 1.0 — budget being spent
+    /// faster than it accrues — saturates the pressure contribution.
+    pub fn set_slo_burn(&self, burn: f64) {
+        let burn = if burn.is_finite() { burn.max(0.0) } else { 0.0 };
+        self.slo_burn_bits.store(burn.to_bits(), Ordering::Relaxed);
     }
 
     /// Decide one submit. `Ok(())` admits; `Err(reason)` carries the
@@ -312,7 +326,9 @@ impl AdmissionController {
             gauge.stall_fraction()
         };
         let slo = (req.p99_ms / self.cfg.interactive_slo_ms).clamp(0.0, 1.0);
-        let pressure = stall.max(slo);
+        let burn = f64::from_bits(self.slo_burn_bits.load(Ordering::Relaxed))
+            .clamp(0.0, 1.0);
+        let pressure = stall.max(slo).max(burn);
         self.pressure_bits.store(pressure.to_bits(), Ordering::Relaxed);
         if !req.interactive && pressure >= self.cfg.shed_pressure {
             self.shed.fetch_add(1, Ordering::Relaxed);
@@ -465,6 +481,36 @@ mod tests {
         req.interactive = true;
         assert!(ctl.admit(&req).is_ok());
         assert_eq!(ctl.stats().shed, 1);
+    }
+
+    #[test]
+    fn slo_burn_sheds_batch_even_with_shallow_queues() {
+        let ctl = AdmissionController::new(AdmissionConfig {
+            tenant_rate_per_sec: 1000.0,
+            tenant_burst: 1000.0,
+            ..strict_cfg()
+        });
+        let mut req = idle("t", 0);
+        req.interactive = false;
+        // No queue stall, p99 fine — but the SLO engine reports the
+        // error budget burning 2x faster than it accrues.
+        ctl.set_slo_burn(2.0);
+        match ctl.admit(&req) {
+            Err(RejectReason::Shed { pressure }) => {
+                assert!((pressure - 1.0).abs() < 1e-9, "burn clamps to 1.0");
+            }
+            other => panic!("expected shed, got {other:?}"),
+        }
+        // Interactive still rides through; the burn only sheds batch.
+        req.interactive = true;
+        assert!(ctl.admit(&req).is_ok());
+        // A recovered budget releases the shed.
+        ctl.set_slo_burn(0.0);
+        req.interactive = false;
+        assert!(ctl.admit(&req).is_ok());
+        // Degenerate inputs are ignored, not poisonous.
+        ctl.set_slo_burn(f64::NAN);
+        assert!(ctl.admit(&req).is_ok());
     }
 
     #[test]

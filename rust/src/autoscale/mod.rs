@@ -42,6 +42,7 @@ pub use rescaler::{BgTask, Rescaler};
 pub use signal::{LoadSignal, SignalSnapshot};
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::compiler::ServableKernel;
@@ -189,6 +190,14 @@ pub struct Autoscaler {
     policy: AutoscalePolicy,
     state: Mutex<HashMap<(u64, u64), KernelScaleState>>,
     log: Mutex<EventLog>,
+    /// Fleet-wide SLO burn rate (`f64` bits), pushed by
+    /// [`crate::coordinator::Coordinator::slo_tick`]. A burn ≥ 1.0
+    /// means an objective is spending its error budget faster than it
+    /// accrues; `note_submit` then treats every warmed-up kernel as
+    /// queue-bound so the existing queue-triggered scale-up path (and
+    /// its anti-flap floor machinery) fires even when raw queue
+    /// depths look shallow.
+    slo_burn_bits: AtomicU64,
 }
 
 impl std::fmt::Debug for Autoscaler {
@@ -208,7 +217,25 @@ impl Autoscaler {
     /// calls [`AutoscalePolicy::validate`] first).
     pub fn new(policy: AutoscalePolicy) -> Autoscaler {
         let log = Mutex::new(EventLog::new(policy.max_events));
-        Autoscaler { policy, state: Mutex::new(HashMap::new()), log }
+        Autoscaler {
+            policy,
+            state: Mutex::new(HashMap::new()),
+            log,
+            slo_burn_bits: AtomicU64::new(0.0f64.to_bits()),
+        }
+    }
+
+    /// Update the fleet-wide SLO burn rate. Non-finite and negative
+    /// values are treated as "not burning" so a pathological objective
+    /// can never wedge the autoscaler into permanent scale-up.
+    pub fn set_slo_burn(&self, burn: f64) {
+        let burn = if burn.is_finite() { burn.max(0.0) } else { 0.0 };
+        self.slo_burn_bits.store(burn.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The last SLO burn rate pushed via [`Autoscaler::set_slo_burn`].
+    pub fn slo_burn(&self) -> f64 {
+        f64::from_bits(self.slo_burn_bits.load(Ordering::Relaxed))
     }
 
     pub fn policy(&self) -> &AutoscalePolicy {
@@ -265,7 +292,15 @@ impl Autoscaler {
         if st.since_event.is_some_and(|n| n < self.policy.cooldown) {
             return None;
         }
-        let snapshot = st.signal.snapshot();
+        let mut snapshot = st.signal.snapshot();
+        let burn = f64::from_bits(self.slo_burn_bits.load(Ordering::Relaxed));
+        if burn >= 1.0 && snapshot.mean_queue < self.policy.queue_hi {
+            // burning error budget == latency objective failing: act
+            // as if the queue crossed `queue_hi` so the queue-up path
+            // (at-least-doubling toward the ceiling) takes over even
+            // while per-kernel queues still look shallow
+            snapshot.mean_queue = self.policy.queue_hi;
+        }
         let decision =
             self.policy
                 .evaluate(&snapshot, obs.factor, obs.ceiling, &mut st.floor)?;
@@ -493,6 +528,30 @@ mod tests {
         for _ in 0..3 {
             assert!(a.note_submit(&obs(1, 1)).is_none());
         }
+    }
+
+    #[test]
+    fn slo_burn_promotes_a_scale_up_that_load_alone_would_not() {
+        let a = Autoscaler::new(policy4());
+        // steady demand exactly at the provisioned factor, empty
+        // queues: a fixed point for the pure load policy
+        for _ in 0..4 {
+            assert!(a.note_submit(&obs(4, 4)).is_none());
+        }
+        assert_eq!(a.slo_burn(), 0.0);
+        // an objective burning budget at 2x flips the same load to
+        // the queue-triggered up path (at-least-doubling)
+        a.set_slo_burn(2.0);
+        assert_eq!(a.slo_burn(), 2.0);
+        let p = a.note_submit(&obs(4, 4)).expect("burning SLO proposes a scale-up");
+        assert_eq!(p.direction, ScaleDirection::Up);
+        assert!(p.queue_triggered);
+        assert_eq!((p.from_factor, p.to_factor), (4, 8));
+        // non-finite / negative burns are sanitized to "not burning"
+        a.set_slo_burn(f64::NAN);
+        assert_eq!(a.slo_burn(), 0.0);
+        a.set_slo_burn(-3.0);
+        assert_eq!(a.slo_burn(), 0.0);
     }
 
     #[test]

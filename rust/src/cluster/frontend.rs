@@ -140,8 +140,8 @@ impl ClusterConfig {
 #[derive(Debug, Clone)]
 pub struct ClusterStats {
     pub per_node: Vec<NodeStatus>,
-    /// Every node's (lifetime) stats merged with the stride-aligned
-    /// latency discipline ([`ServingStats::merge`]).
+    /// Every node's (lifetime) stats merged by bucket-wise histogram
+    /// addition ([`ServingStats::merge`]) — lossless, order-invariant.
     pub merged: ServingStats,
     /// Dispatches routed to their ring home.
     pub affinity_hits: u64,
@@ -569,8 +569,8 @@ impl ClusterFrontend {
     }
 
     /// Cluster-wide stats: per-node views (lifetime — a killed node's
-    /// earlier incarnations still count) plus stride-aligned merged
-    /// totals and the routing counters.
+    /// earlier incarnations still count) plus histogram-merged totals
+    /// and the routing counters.
     pub fn stats(&self) -> ClusterStats {
         let now = self.now_ms();
         let healths: Vec<Health> = {

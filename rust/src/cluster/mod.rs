@@ -32,10 +32,11 @@
 //!   rejoins warm from its cache snapshot.
 //!
 //! Cluster-wide [`ClusterStats`] merge every node's `ServingStats`
-//! with the stride-aligned latency-reservoir discipline
-//! ([`crate::metrics::ServingStats::merge`]) so cluster percentiles
-//! aren't biased toward idle nodes, and carry the spill/failover
-//! counters plus the per-node routing histogram.
+//! by bucket-wise addition of their log-bucketed latency histograms
+//! ([`crate::metrics::ServingStats::merge`]) — lossless and
+//! order-invariant, so cluster percentiles aren't biased toward idle
+//! nodes — and carry the spill/failover counters plus the per-node
+//! routing histogram.
 //!
 //! ```text
 //! submit(source, …) ──▶ ring.home(fnv1a(source)) ──▶ node k (Live?)

@@ -24,9 +24,10 @@
 //! verified per job.
 //!
 //! Serving counters are **sharded per worker** ([`LogShard`]: plain
-//! atomics plus a worker-private latency reservoir) and merged only
-//! when statistics are read, so the submit/complete hot path never
-//! contends on a global log mutex.
+//! atomics plus a worker-private log-bucketed
+//! [`crate::obs::LatencyHist`]) and merged only when statistics are
+//! read — bucket-wise addition, lossless and order-invariant — so the
+//! submit/complete hot path never contends on a global log mutex.
 //!
 //! Completion carries the same timing breakdown as a synchronous
 //! [`crate::runtime_ocl::Event`] (wall time, pack/scatter split,
@@ -49,7 +50,10 @@ use crate::admission::{FaultKind, FaultPlan};
 use crate::arena::{DispatchScratch, ScratchPool};
 use crate::autoscale::Autoscaler;
 use crate::fleet::Priority;
-use crate::obs::{JobTrace, Phase, CLASS_FAULT, CLASS_QUARANTINE, CLASS_TAIL, NO_WORKER};
+use crate::obs::{
+    JobTrace, LatencyHist, Phase, SloProbe, CLASS_FAULT, CLASS_QUARANTINE, CLASS_TAIL,
+    NO_WORKER,
+};
 use crate::runtime_ocl::{ArgSnapshot, Backend, Buffer, Device, Event, Kernel};
 use crate::sim;
 
@@ -127,6 +131,27 @@ pub enum SubmitArg {
     Scalar(i32),
 }
 
+/// Measured worker-side stage boundaries, µs on the trace-sink clock.
+///
+/// Captured with `now()` reads **at** the pack/exec/scatter/verify
+/// boundaries while the run executes — not reconstructed afterwards
+/// from duration arithmetic — so consecutive stamps are monotone by
+/// construction and worker spans nest exactly inside the measured
+/// timeline. All-zero when the run carried no trace context (tracing
+/// off or every job head-sampled out): no clock is read at all.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StageStamps {
+    /// Run picked up by the worker; argument packing begins.
+    pub run_start_us: u64,
+    /// Packing done; the fused backend invocation begins.
+    pub exec_start_us: u64,
+    /// This job's output scatter begins (for a fused run this is
+    /// after the shared invocation *and* any earlier jobs' scatters).
+    pub scatter_start_us: u64,
+    /// This job's scatter + verification read-back completed.
+    pub done_us: u64,
+}
+
 /// Completed-dispatch report: the event an OpenCL profiling query
 /// would return, plus the coordinator's serving metadata.
 #[derive(Debug, Clone)]
@@ -158,6 +183,8 @@ pub struct DispatchResult {
     /// streams agreed with a simulator re-execution). `None` when
     /// verification is disabled.
     pub verified: Option<bool>,
+    /// Measured stage-boundary stamps (all-zero when untraced).
+    pub stamps: StageStamps,
 }
 
 pub(crate) struct HandleInner {
@@ -266,6 +293,11 @@ pub(crate) struct Job {
     /// spans (queue wait, pack, exec, scatter, verify, retries) parent
     /// to the submit's root span. `None` when tracing is off.
     pub trace: Option<JobTrace>,
+    /// SLO completion hook (mirrors `trace`): reports this job's
+    /// end-to-end latency and outcome into the coordinator's SLO
+    /// engine under the submitting tenant. `None` when no SLO policy
+    /// is configured.
+    pub slo: Option<SloProbe>,
 }
 
 /// The recovery half of the fault plane: shared by every worker, it
@@ -522,18 +554,22 @@ impl<T> LaneQueue<T> {
     }
 }
 
-/// Latency samples kept per worker shard before the buffer halves its
-/// resolution — bounds coordinator memory on long-running fleets.
+/// Latency samples kept per worker shard before the legacy reservoir
+/// halves its resolution. Retained (with [`LatencyReservoir`]) only as
+/// the comparison baseline for the histogram-agreement test and the
+/// `obs_overhead` bench.
 pub(crate) const MAX_LATENCY_SAMPLES: usize = 65_536;
 
-/// Bounded, decimating latency sample buffer (one per worker shard;
-/// only its worker writes, so the guarding lock is uncontended).
+/// **Legacy** bounded, decimating latency sample buffer — the carrier
+/// [`crate::obs::LatencyHist`] replaced. Kept (test/bench-only) so the
+/// percentile-agreement test can check the histogram against the exact
+/// sample path it displaced.
 #[derive(Debug)]
 pub(crate) struct LatencyReservoir {
-    samples: Vec<f64>,
+    pub(crate) samples: Vec<f64>,
     /// Every `stride`-th sample is kept; doubles each time the buffer
     /// fills (decimation keeps percentiles representative).
-    stride: u64,
+    pub(crate) stride: u64,
     seen: u64,
 }
 
@@ -544,7 +580,7 @@ impl Default for LatencyReservoir {
 }
 
 impl LatencyReservoir {
-    fn record(&mut self, ms: f64) {
+    pub(crate) fn record(&mut self, ms: f64) {
         self.seen += 1;
         if self.seen % self.stride != 0 {
             return;
@@ -563,7 +599,7 @@ impl LatencyReservoir {
 
 /// One worker's shard of the serving counters: plain atomics bumped
 /// lock-free on the completion path, plus the worker-private latency
-/// reservoir. Nothing here is shared between workers — the global
+/// histogram. Nothing here is shared between workers — the global
 /// view is assembled by [`ServeLog::totals`] when someone asks.
 #[derive(Debug, Default)]
 pub(crate) struct LogShard {
@@ -574,31 +610,30 @@ pub(crate) struct LogShard {
     /// Runs in which ≥ 2 same-kernel jobs were fused into one backend
     /// invocation.
     pub fused_batches: AtomicU64,
-    latencies: Mutex<LatencyReservoir>,
+    /// Log-bucketed end-to-end latency histogram: fixed memory, every
+    /// completion counted, lossless on merge (no reservoir decimation).
+    latencies: Mutex<LatencyHist>,
 }
 
 impl LogShard {
-    /// Record one end-to-end dispatch latency, downsampling once the
-    /// reservoir reaches [`MAX_LATENCY_SAMPLES`].
+    /// Record one end-to-end dispatch latency into the shard's
+    /// log-bucketed histogram.
     pub(crate) fn record_latency(&self, ms: f64) {
-        self.latencies.lock().unwrap().record(ms);
+        self.latencies.lock().unwrap().record_ms(ms);
     }
 
-    /// The retained samples plus the stride they were kept at (one
-    /// retained sample represents `stride` dispatches).
-    pub(crate) fn latency_samples(&self) -> (u64, Vec<f64>) {
-        let l = self.latencies.lock().unwrap();
-        (l.stride, l.samples.clone())
+    /// Snapshot of the shard's latency histogram.
+    pub(crate) fn latency_hist(&self) -> LatencyHist {
+        self.latencies.lock().unwrap().clone()
     }
 }
 
 /// Merged view of every shard — what [`ServeLog::totals`] returns.
 #[derive(Debug, Default)]
 pub(crate) struct LogTotals {
-    pub latencies_ms: Vec<f64>,
-    /// Decimation stride `latencies_ms` is aligned to (shards are
-    /// thinned to the max stride on merge); 0 only for the empty log.
-    pub latency_stride: u64,
+    /// Bucket-wise sum of every shard's latency histogram — lossless,
+    /// order-invariant, covers every recorded completion.
+    pub latency_hist: LatencyHist,
     pub total_items: u64,
     pub total_dispatches: u64,
     pub verify_failures: u64,
@@ -628,30 +663,19 @@ impl ServeLog {
     /// Merge every shard into one snapshot (read-side only; the write
     /// path never takes a cross-shard lock).
     ///
-    /// Shards decimate independently (a shard's stride doubles each
-    /// time its reservoir fills), so a raw concatenation would weight
-    /// a busy stride-2 shard's samples half as much as an idle
-    /// stride-1 shard's and bias the merged percentiles toward idle
-    /// partitions. Strides are powers of two: every shard is thinned
-    /// to the fleet-wide maximum stride before merging, so each
-    /// retained sample represents the same number of dispatches.
+    /// Latency merging is bucket-wise histogram addition — lossless
+    /// and order-invariant, unlike the stride-aligned reservoir
+    /// thinning this replaced: every shard's every completion is
+    /// weighted identically in the merged percentiles.
     pub(crate) fn totals(&self) -> LogTotals {
         let mut t = LogTotals::default();
-        let mut reservoirs: Vec<(u64, Vec<f64>)> = Vec::with_capacity(self.shards.len());
         for s in &self.shards {
             t.total_items += s.total_items.load(Ordering::Relaxed);
             t.total_dispatches += s.total_dispatches.load(Ordering::Relaxed);
             t.verify_failures += s.verify_failures.load(Ordering::Relaxed);
             t.errors += s.errors.load(Ordering::Relaxed);
             t.fused_batches += s.fused_batches.load(Ordering::Relaxed);
-            reservoirs.push(s.latency_samples());
-        }
-        let max_stride =
-            reservoirs.iter().map(|(stride, _)| *stride).max().unwrap_or(1).max(1);
-        t.latency_stride = max_stride;
-        for (stride, samples) in reservoirs {
-            let step = (max_stride / stride.max(1)).max(1) as usize;
-            t.latencies_ms.extend(samples.into_iter().step_by(step));
+            t.latency_hist.merge(&s.latency_hist());
         }
         t
     }
@@ -926,6 +950,21 @@ fn worker_loop(
                     }
                 }
                 log.total_dispatches.fetch_add(1, Ordering::Relaxed);
+                // SLO completion feed (per job, success and failure):
+                // end-to-end latency plus whether the dispatch met its
+                // contract (a corrupt verify verdict is a bad event)
+                if let Some(p) = &job.slo {
+                    match &result {
+                        Ok(r) => {
+                            let e2e = r.queue_wait + r.event.wall;
+                            p.complete(
+                                e2e.as_secs_f64() * 1e3,
+                                r.verified != Some(false),
+                            );
+                        }
+                        Err(_) => p.complete(0.0, false),
+                    }
+                }
                 match &result {
                     Ok(r) => {
                         let e2e = r.queue_wait + r.event.wall;
@@ -936,16 +975,14 @@ fn worker_loop(
                             log.verify_failures.fetch_add(1, Ordering::Relaxed);
                         }
                         if let Some(t) = &job.trace {
-                            // reconstruct the worker-side timeline from
-                            // the completion's timing breakdown, ending
-                            // at "now" — spans share the submit's root
-                            let end = t.now();
+                            // worker-side timeline from the *measured*
+                            // stage-boundary stamps serve_run captured
+                            // on the sink clock — spans share the
+                            // submit's root and are monotone by
+                            // construction (each boundary was stamped
+                            // after the previous one, on one clock)
+                            let st = r.stamps;
                             let w = partition as i32;
-                            let wall_us = r.event.wall.as_micros() as u64;
-                            let pack_us = r.event.pack_ns / 1_000;
-                            let scatter_us = r.event.scatter_ns / 1_000;
-                            let queue_us = r.queue_wait.as_micros() as u64;
-                            let run_start = end.saturating_sub(wall_us);
                             let lane = match job.priority {
                                 Priority::Interactive => "interactive",
                                 Priority::Batch => "batch",
@@ -954,8 +991,8 @@ fn worker_loop(
                                 Phase::QueueWait,
                                 lane,
                                 w,
-                                run_start.saturating_sub(queue_us),
-                                queue_us,
+                                t.enq_us,
+                                st.run_start_us.saturating_sub(t.enq_us),
                                 job.attempts as u64,
                                 0,
                             );
@@ -963,19 +1000,17 @@ fn worker_loop(
                                 Phase::Pack,
                                 "pack",
                                 w,
-                                run_start,
-                                pack_us,
+                                st.run_start_us,
+                                st.exec_start_us.saturating_sub(st.run_start_us),
                                 r.batch_size as u64,
                                 r.fused as u64,
                             );
-                            let exec_us =
-                                wall_us.saturating_sub(pack_us + scatter_us);
                             t.span(
                                 Phase::Exec,
                                 if r.cache_hit { "warm" } else { "cold" },
                                 w,
-                                run_start + pack_us,
-                                exec_us,
+                                st.exec_start_us,
+                                st.scatter_start_us.saturating_sub(st.exec_start_us),
                                 r.event.global_size as u64,
                                 0,
                             );
@@ -983,8 +1018,8 @@ fn worker_loop(
                                 Phase::Scatter,
                                 "scatter",
                                 w,
-                                end.saturating_sub(scatter_us),
-                                scatter_us,
+                                st.scatter_start_us,
+                                st.done_us.saturating_sub(st.scatter_start_us),
                                 0,
                                 0,
                             );
@@ -993,8 +1028,8 @@ fn worker_loop(
                                 Some(false) => "corrupt",
                                 None => "skipped",
                             };
-                            t.span(Phase::Verify, vtag, w, end, 0, 0, 0);
-                            t.pin(CLASS_TAIL, "e2e", queue_us + wall_us);
+                            t.span(Phase::Verify, vtag, w, st.done_us, 0, 0, 0);
+                            t.pin(CLASS_TAIL, "e2e", st.done_us.saturating_sub(t.enq_us));
                         }
                     }
                     Err(_) => {
@@ -1063,10 +1098,17 @@ fn serve_run(
     scratch: &mut DispatchScratch,
 ) -> Vec<Result<DispatchResult>> {
     let queue_waits: Vec<Duration> = run.iter().map(|j| j.enqueued.elapsed()).collect();
+    // stage-boundary stamps ride the trace-sink clock; any traced job
+    // in the run supplies it (one sink per coordinator, so the clock
+    // is shared). Untraced runs never read a clock.
+    let clock: Option<&JobTrace> = run.iter().find_map(|j| j.trace.as_ref());
+    let stamp = || clock.map_or(0, |t| t.now());
     // wall clock covers the whole serve — pack, execute, cross-check,
     // and (per job) scatter + verification — matching the synchronous
     // runtime path's event semantics
     let t0 = Instant::now();
+    let run_start_us = stamp();
+    let mut exec_start_us = 0u64;
     // one argument snapshot per job (one short lock each); a job with
     // unset arguments fails alone, not the run
     let snaps: Vec<Result<ArgSnapshot>> =
@@ -1098,6 +1140,7 @@ fn serve_run(
                 off += chunks[i];
             }
             pack_ns = tp.elapsed().as_nanos() as u64;
+            exec_start_us = stamp();
             match &device.backend {
                 Backend::CycleSim => sim::execute_into(
                     &k.schedule,
@@ -1156,6 +1199,7 @@ fn serve_run(
                     Err(snap_err) => results.push(Err(snap_err)),
                     Ok(snap) => {
                         let job = &run[i];
+                        let scatter_start_us = stamp();
                         let ts = Instant::now();
                         job.kernel.scatter_outputs_from(
                             &snap,
@@ -1211,6 +1255,12 @@ fn serve_run(
                             batch_size,
                             fused: fused_count,
                             verified,
+                            stamps: StageStamps {
+                                run_start_us,
+                                exec_start_us,
+                                scatter_start_us,
+                                done_us: stamp(),
+                            },
                         }));
                     }
                 }
@@ -1357,37 +1407,71 @@ mod tests {
     }
 
     #[test]
-    fn latency_reservoir_decimates_at_capacity() {
+    fn histogram_counts_every_sample_where_the_reservoir_decimated() {
+        // The legacy reservoir halves its resolution past capacity;
+        // the histogram shard must keep an exact count forever.
         let shard = LogShard::default();
-        for i in 0..(MAX_LATENCY_SAMPLES + 10) {
+        let mut reservoir = LatencyReservoir::default();
+        let n = MAX_LATENCY_SAMPLES + 10;
+        for i in 0..n {
             shard.record_latency(i as f64);
+            reservoir.record(i as f64);
         }
-        let (stride, samples) = shard.latency_samples();
-        assert!(stride >= 2, "filling the reservoir must raise the stride");
-        assert!(samples.len() <= MAX_LATENCY_SAMPLES);
-        assert!(samples.len() > MAX_LATENCY_SAMPLES / 4);
+        assert!(reservoir.stride >= 2, "filling the reservoir raises its stride");
+        assert!(reservoir.samples.len() < n, "the reservoir dropped samples");
+        let h = shard.latency_hist();
+        assert_eq!(h.count(), n as u64, "the histogram dropped none");
     }
 
     #[test]
-    fn merged_latencies_are_stride_aligned_across_shards() {
-        // shard 0 overflows its reservoir (stride 2); shard 1 stays at
-        // stride 1. The merge must thin shard 1 to the max stride so
-        // both shards' samples carry equal weight.
+    fn histogram_percentiles_agree_with_the_reservoir_within_a_bucket() {
+        // Same deterministic long-tailed stream into both carriers:
+        // the histogram's percentile must land within one log bucket
+        // (a factor of sqrt(2)) of the exact sample percentile the
+        // reservoir path computed.
+        let shard = LogShard::default();
+        let mut exact: Vec<f64> = Vec::new();
+        for i in 1..=2000u64 {
+            let ms = 0.05 * i as f64 + ((i * i) % 251) as f64 * 0.2;
+            shard.record_latency(ms);
+            exact.push(ms);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let h = shard.latency_hist();
+        for &p in &[0.5, 0.9, 0.99, 0.999] {
+            let idx = ((exact.len() - 1) as f64 * p).round() as usize;
+            let want = exact[idx];
+            let ratio = h.percentile_ms(p) / want;
+            assert!(
+                (0.70..=1.42).contains(&ratio),
+                "p{p}: hist {} vs exact {want}",
+                h.percentile_ms(p)
+            );
+        }
+    }
+
+    #[test]
+    fn merged_shard_histograms_are_lossless_and_order_invariant() {
+        // One shard is busy, one idle: the old stride-aligned merge
+        // thinned the idle shard; bucket addition keeps every sample
+        // from both, and shard order cannot matter.
         let log = ServeLog::new(2);
-        for i in 0..(MAX_LATENCY_SAMPLES + 10) {
-            log.shard(0).record_latency(i as f64);
+        let busy = 4096usize;
+        for i in 0..busy {
+            log.shard(0).record_latency(1.0 + (i % 7) as f64);
         }
         let idle = 64usize;
         for i in 0..idle {
-            log.shard(1).record_latency(1e9 + i as f64);
+            log.shard(1).record_latency(1e3 + i as f64);
         }
-        let (hot_stride, hot_samples) = log.shard(0).latency_samples();
-        assert_eq!(hot_stride, 2);
         let t = log.totals();
-        let idle_kept =
-            t.latencies_ms.iter().filter(|&&ms| ms >= 1e9).count();
-        assert_eq!(idle_kept, idle / hot_stride as usize, "idle shard thinned to max stride");
-        assert_eq!(t.latencies_ms.len(), hot_samples.len() + idle_kept);
+        assert_eq!(t.latency_hist.count(), (busy + idle) as u64);
+        let mut swapped = log.shard(1).latency_hist();
+        swapped.merge(&log.shard(0).latency_hist());
+        assert_eq!(t.latency_hist, swapped, "merge order is invisible");
+        // the idle shard's slow tail survives the busy shard's volume
+        assert!(t.latency_hist.max_ms() >= 1e3);
+        assert!(t.latency_hist.p999_ms() > 100.0);
     }
 
     #[test]
@@ -1407,8 +1491,10 @@ mod tests {
         assert_eq!(t.fused_batches, 1);
         assert_eq!(t.errors, 2);
         assert_eq!(t.verify_failures, 0);
-        let mut lat = t.latencies_ms.clone();
-        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert_eq!(lat, vec![10.0, 20.0, 30.0]);
+        assert_eq!(t.latency_hist.count(), 3);
+        assert_eq!(t.latency_hist.max_ms(), 30.0);
+        // p0/p100 bracket the recorded range within bucket resolution
+        assert!(t.latency_hist.percentile_ms(0.0) <= 10.0 * 1.42);
+        assert!(t.latency_hist.percentile_ms(1.0) <= 30.0);
     }
 }

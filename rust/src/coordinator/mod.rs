@@ -87,7 +87,10 @@ use crate::fleet::{
 use crate::metrics::{
     achieved_gops, LatencyStats, PartitionServingStats, ServingStats, SpecServingStats,
 };
-use crate::obs::{ParentCtx, Phase, SubmitTrace, TraceHandle};
+use crate::obs::{
+    ParentCtx, Phase, SloAlert, SloCollector, SloPolicy, SloProbe, SubmitTrace,
+    TraceHandle,
+};
 use crate::overlay::{ConfigSizeModel, OverlaySpec};
 use crate::runtime_ocl::{Device, Kernel, Platform};
 
@@ -171,6 +174,12 @@ pub struct CoordinatorConfig {
     /// into the handle's sink; `None` (the default) serves through the
     /// allocation-free no-op recorder.
     pub trace: Option<TraceHandle>,
+    /// SLO burn-rate alerting ([`crate::obs::slo`]): `Some(policy)`
+    /// tracks every admission outcome and completion against the
+    /// policy's objectives; the owner advances the deterministic
+    /// window clock with [`Coordinator::slo_tick`]. `None` (the
+    /// default) keeps the SLO plane entirely out of the hot path.
+    pub slo: Option<SloPolicy>,
 }
 
 impl CoordinatorConfig {
@@ -189,6 +198,7 @@ impl CoordinatorConfig {
             admission: None,
             faults: None,
             trace: None,
+            slo: None,
         }
     }
 
@@ -209,6 +219,7 @@ impl CoordinatorConfig {
             admission: None,
             faults: None,
             trace: None,
+            slo: None,
         }
     }
 
@@ -227,6 +238,7 @@ impl CoordinatorConfig {
             admission: None,
             faults: None,
             trace: None,
+            slo: None,
         }
     }
 }
@@ -283,6 +295,8 @@ pub struct Coordinator {
     /// Span recorder for the whole serving stack; the no-op handle
     /// when tracing is off.
     trace: TraceHandle,
+    /// SLO burn-rate engine; absent when the config set no policy.
+    slo: Option<Arc<SloCollector>>,
     start: Instant,
 }
 
@@ -315,8 +329,13 @@ impl Coordinator {
             admission,
             faults,
             trace,
+            slo,
         } = config;
         let trace = trace.unwrap_or_else(TraceHandle::disabled);
+        if let Some(policy) = &slo {
+            policy.validate().context("slo policy")?;
+        }
+        let slo = slo.map(SloCollector::new);
         if devices.is_empty() {
             bail!("coordinator needs at least one overlay partition");
         }
@@ -411,6 +430,7 @@ impl Coordinator {
             gate_count: AtomicU64::new(0),
             p99_bits: AtomicU64::new(0),
             trace,
+            slo,
             start,
         })
     }
@@ -683,6 +703,11 @@ impl Coordinator {
                     t.child(Phase::Admission, reject.kind(), t_admit, 0, 0);
                     t.pin(crate::obs::CLASS_REJECT, reject.kind());
                 }
+                // a refused submit is a bad event for availability
+                // objectives — the tenant asked and was turned away
+                if let Some(s) = &self.slo {
+                    s.rejected(tenant, req.interactive);
+                }
                 // rejections still feed the autoscaler's load signal:
                 // refused demand is demand the fleet failed to absorb,
                 // and re-replicating the hot kernel relieves it
@@ -931,7 +956,15 @@ impl Coordinator {
             last_fault: None,
             config_cost,
             trace: trace.map(|t| t.job_trace()),
+            slo: self.slo.as_ref().map(|c| SloProbe {
+                collector: c.clone(),
+                tenant: Arc::from(tenant),
+                interactive: matches!(priority, Priority::Interactive),
+            }),
         };
+        if let Some(s) = &self.slo {
+            s.admitted(tenant, matches!(priority, Priority::Interactive));
+        }
         if self.workers[decision.partition]
             .queue
             .push(Box::new(job), priority)
@@ -996,16 +1029,52 @@ impl Coordinator {
     }
 
     /// Serving p99 for the admission gate, refreshed every few gated
-    /// submits (a full log merge per submit would put an O(dispatches)
-    /// walk on the hot path).
+    /// submits (a full log merge per submit would put an O(shards)
+    /// histogram walk on the hot path).
     fn gate_p99_ms(&self) -> f64 {
         let g = self.gate_count.fetch_add(1, Ordering::Relaxed);
         if g % 32 == 0 {
-            let p99 =
-                LatencyStats::from_samples_ms(self.log.totals().latencies_ms).p99_ms;
+            let p99 = self.log.totals().latency_hist.p99_ms();
             self.p99_bits.store(p99.to_bits(), Ordering::Relaxed);
         }
         f64::from_bits(self.p99_bits.load(Ordering::Relaxed))
+    }
+
+    /// Close the current SLO window at caller time `now_ns`, evaluate
+    /// every objective's fast+slow burn rate, and feed the worst burn
+    /// back into the control surfaces: the admission gate's pressure
+    /// signal (burning budget sheds batch work sooner) and the
+    /// autoscaler's load boost (a burning fleet scales up). Returns
+    /// the alert transitions this tick produced; a no-op `vec![]`
+    /// when no SLO policy is configured.
+    ///
+    /// The clock is caller-advanced — `now_ns` on any monotone basis
+    /// the caller likes — which is what makes scripted SLO tests (and
+    /// replayed campaigns) fully deterministic.
+    pub fn slo_tick(&self, now_ns: u64) -> Vec<SloAlert> {
+        let Some(s) = &self.slo else {
+            return Vec::new();
+        };
+        let alerts = s.tick(now_ns);
+        let burn = s.burn();
+        if let Some(ctrl) = &self.admission {
+            ctrl.set_slo_burn(burn);
+        }
+        if let Some(a) = &self.autoscaler {
+            a.set_slo_burn(burn);
+        }
+        alerts
+    }
+
+    /// The SLO engine's retained alert transitions, oldest first
+    /// (empty when no SLO policy is configured).
+    pub fn slo_alerts(&self) -> Vec<SloAlert> {
+        self.slo.as_ref().map_or_else(Vec::new, |s| s.alerts())
+    }
+
+    /// "p99 over the last `n` ticks" for the named SLO objective.
+    pub fn slo_windowed_p99_ms(&self, objective: &str, n: usize) -> Option<f64> {
+        self.slo.as_ref().and_then(|s| s.windowed_p99_ms(objective, n))
     }
 
     /// Snapshot of the serving statistics. Locks are taken one at a
@@ -1084,11 +1153,9 @@ impl Coordinator {
             cache,
             reconfig_count,
             reconfig_seconds,
-            latency: LatencyStats::from_samples_ms(log.latencies_ms.clone()),
-            latency_raw: crate::metrics::LatencyRaw {
-                stride: log.latency_stride,
-                samples_ms: log.latencies_ms,
-            },
+            latency: LatencyStats::from_hist(&log.latency_hist),
+            latency_hist: log.latency_hist,
+            latency_raw: crate::metrics::LatencyRaw::default(),
             partitions,
             per_spec,
             total_dispatches: log.total_dispatches,
@@ -1107,6 +1174,7 @@ impl Coordinator {
             admission,
             faults: self.faults.as_ref().map(|f| f.tally()),
             poison: self.fleet.poison_stats(),
+            slo: self.slo.as_ref().map(|s| s.stats()),
         }
     }
 
@@ -1396,6 +1464,7 @@ mod tests {
             admission: None,
             faults: None,
             trace: None,
+            slo: None,
         };
         assert!(Coordinator::new(cfg).is_err());
     }

@@ -92,13 +92,21 @@
 //!   (cache hit rate, reconfigurations, utilization, p50/p99 latency)
 //!   and their Prometheus text exposition
 //!   (`metrics::ServingStats::prometheus`).
-//! * [`obs`] — end-to-end dispatch tracing: per-submit [`obs::TraceId`]s
-//!   with phase spans across every serving layer (admission, route,
-//!   cache/compile, slot pick, queue wait, pack, exec, scatter, verify,
-//!   retries, cluster hops), collected in lock-light per-worker span
-//!   rings (tracing off is a no-op recorder), a flight recorder pinning
-//!   exemplar traces per anomaly class, and a Chrome-trace-event JSON
-//!   exporter ([`obs::chrome_trace`]).
+//! * [`obs`] — continuous telemetry and end-to-end dispatch tracing:
+//!   per-submit [`obs::TraceId`]s with phase spans across every serving
+//!   layer (admission, route, cache/compile, slot pick, queue wait,
+//!   pack, exec, scatter, verify, retries, cluster hops), collected in
+//!   lock-light per-worker span rings (tracing off is a no-op recorder,
+//!   tracing on can head-sample 1/N submits via [`obs::Sampler`]), a
+//!   flight recorder pinning exemplar traces per anomaly class, and a
+//!   Chrome-trace-event JSON exporter ([`obs::chrome_trace`]); plus the
+//!   metrics substrate underneath: [`obs::LatencyHist`] log-bucketed
+//!   histograms (2 buckets/octave, fixed memory, lossless bucket-wise
+//!   merge — the canonical latency carrier in `ServingStats`),
+//!   [`obs::TimeSeries`] snapshot windows on a caller-advanced clock,
+//!   and [`obs::SloPolicy`] burn-rate alerting (multi-window Google-SRE
+//!   style, typed [`obs::SloAlert`]s, feeds admission pressure and the
+//!   autoscaler).
 //!
 //! Python (JAX + Pallas) appears only at build time: `make artifacts`
 //! AOT-lowers the overlay-datapath emulator to HLO text which the
@@ -154,7 +162,8 @@ pub mod prelude {
     };
     pub use crate::fleet::RouteReason;
     pub use crate::obs::{
-        chrome_trace, Exemplar, Phase, Span, TraceHandle, TraceId, TraceSink,
+        chrome_trace, AlertState, Exemplar, LatencyHist, Phase, Sampler, SloAlert,
+        SloPolicy, SloStats, Span, TimeSeries, TraceHandle, TraceId, TraceSink,
     };
     pub use crate::overlay::{FuType, OverlaySpec};
     pub use crate::replicate::ReplicationPlan;

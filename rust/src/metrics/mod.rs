@@ -12,6 +12,7 @@
 //!   3.5 GHz Xeon slowdown (0.88 s / 0.22 s = 4.0×).
 
 use crate::compiler::CompiledKernel;
+use crate::obs::{LatencyHist, SloStats};
 use crate::overlay::OverlaySpec;
 
 /// Slices of overlay fabric per tile (calibrated to Table III's 12617
@@ -167,19 +168,32 @@ impl LatencyStats {
             mean_ms: mean,
         }
     }
+
+    /// Summarize a log-bucketed histogram — the canonical path since
+    /// [`LatencyHist`] replaced the sampling reservoirs. Percentiles
+    /// are exact to within one bucket (~41% relative width); count,
+    /// max and mean are exact.
+    pub fn from_hist(h: &LatencyHist) -> LatencyStats {
+        LatencyStats {
+            count: h.count() as usize,
+            p50_ms: h.p50_ms(),
+            p99_ms: h.p99_ms(),
+            max_ms: h.max_ms(),
+            mean_ms: h.mean_ms(),
+        }
+    }
 }
 
-/// Stride-tagged raw latency samples backing a [`ServingStats`]
-/// snapshot — what [`ServingStats::merge`] needs to combine nodes
-/// without biasing percentiles.
+/// **Deprecated** stride-tagged raw latency samples.
 ///
-/// The coordinator's per-worker reservoirs decimate independently
-/// (each shard's stride doubles when its buffer fills), and the same
-/// happens across cluster nodes: a busy node keeping every 4th sample
-/// must not be outvoted by an idle node keeping every sample. Strides
-/// are powers of two, so merging thins every side to the common
-/// maximum stride first — exactly the discipline
-/// `ServeLog::totals` established for per-shard merges.
+/// This was the merge carrier of the sampling-reservoir era: each
+/// node's decimated samples tagged with their stride so
+/// [`ServingStats::merge`] could thin every side to the common
+/// maximum stride. [`LatencyHist`] replaced it — bucket-wise addition
+/// is lossless and order-invariant, so there is nothing left to
+/// thin — and the field it backs is now always empty. The type stays
+/// as a re-export until external asserts move over; new code should
+/// read [`ServingStats::latency_hist`].
 #[derive(Debug, Clone, Default)]
 pub struct LatencyRaw {
     /// Decimation stride the samples were retained at: one sample
@@ -311,11 +325,16 @@ pub struct ServingStats {
     pub reconfig_count: u64,
     /// Modeled seconds spent loading bitstreams.
     pub reconfig_seconds: f64,
-    /// End-to-end dispatch latency (enqueue → completion).
+    /// End-to-end dispatch latency (enqueue → completion), summarized
+    /// from `latency_hist`.
     pub latency: LatencyStats,
-    /// The raw samples `latency` was summarized from, tagged with
-    /// their decimation stride so snapshots from several nodes merge
-    /// without idle-node bias (see [`ServingStats::merge`]).
+    /// The log-bucketed histogram `latency` was summarized from — the
+    /// canonical latency carrier. Every completed dispatch lands here
+    /// (no sampling, no decimation), and [`ServingStats::merge`]
+    /// combines nodes by lossless bucket addition.
+    pub latency_hist: LatencyHist,
+    /// Deprecated reservoir-era carrier, now always empty (see
+    /// [`LatencyRaw`]); retained until external asserts move over.
     pub latency_raw: LatencyRaw,
     pub partitions: Vec<PartitionServingStats>,
     /// Per-spec shard breakdown (cache isolation, routing decisions,
@@ -360,6 +379,11 @@ pub struct ServingStats {
     /// Poisoned (kernel, spec) pairs: currently withheld, re-probes
     /// offered, recoveries (probe compiled clean).
     pub poison: crate::fleet::PoisonStats,
+    /// SLO burn-rate engine summary; `None` when no [`SloPolicy`] is
+    /// configured.
+    ///
+    /// [`SloPolicy`]: crate::obs::SloPolicy
+    pub slo: Option<SloStats>,
 }
 
 impl ServingStats {
@@ -367,36 +391,29 @@ impl ServingStats {
     ///
     /// Counters sum; partition rows concatenate with re-numbered
     /// indices; per-spec rows merge by spec fingerprint (histograms
-    /// included). Latency uses the stride-aligned reservoir
-    /// discipline (see [`LatencyRaw`]): every snapshot's samples are
-    /// thinned to the cluster-wide maximum stride before the merged
-    /// percentiles are taken, so one retained sample represents the
-    /// same number of dispatches on every node and idle nodes don't
-    /// drag the cluster p99 down.
+    /// included). Latency merges by **bucket-wise histogram
+    /// addition** ([`LatencyHist::merge`]): lossless, commutative and
+    /// associative, so the merged percentiles are computed over every
+    /// recorded completion regardless of merge order — no stride
+    /// thinning, no idle-node bias.
     ///
     /// Caveats, by construction: `admission.pressure` is the maximum
     /// across nodes (pressure is a level, not a count),
     /// `admission.tenants` is the per-node maximum (tenants served by
     /// several nodes cannot be de-duplicated from counters alone),
-    /// and `faults` stays `None` (injected-fault tallies are per-node
-    /// diagnostics; read them off the node's own stats).
+    /// `slo.burn` is the worst node's burn, and `faults` stays `None`
+    /// (injected-fault tallies are per-node diagnostics; read them
+    /// off the node's own stats).
     pub fn merge(nodes: &[ServingStats]) -> ServingStats {
         let mut out = ServingStats::default();
 
-        // stride-aligned latency merge: thin every snapshot to the
-        // cluster-wide maximum stride (strides are powers of two)
-        let max_stride = nodes
-            .iter()
-            .map(|n| n.latency_raw.stride.max(1))
-            .max()
-            .unwrap_or(1);
-        let mut samples: Vec<f64> = Vec::new();
+        // lossless latency merge: bucket-wise histogram addition
+        let mut hist = LatencyHist::new();
         for n in nodes {
-            let step = (max_stride / n.latency_raw.stride.max(1)).max(1) as usize;
-            samples.extend(n.latency_raw.samples_ms.iter().copied().step_by(step));
+            hist.merge(&n.latency_hist);
         }
-        out.latency = LatencyStats::from_samples_ms(samples.clone());
-        out.latency_raw = LatencyRaw { stride: max_stride, samples_ms: samples };
+        out.latency = LatencyStats::from_hist(&hist);
+        out.latency_hist = hist;
 
         let mut specs: std::collections::BTreeMap<u64, SpecServingStats> =
             std::collections::BTreeMap::new();
@@ -496,6 +513,15 @@ impl ServingStats {
                 m.shed += a.shed;
                 m.pressure = m.pressure.max(a.pressure);
                 m.tenants = m.tenants.max(a.tenants);
+            }
+            if let Some(s) = &n.slo {
+                let m = out.slo.get_or_insert_with(SloStats::default);
+                m.objectives += s.objectives;
+                m.firing += s.firing;
+                m.alerts_total += s.alerts_total;
+                m.alerts_dropped += s.alerts_dropped;
+                m.burn = m.burn.max(s.burn);
+                m.ticks = m.ticks.max(s.ticks);
             }
         }
         for (fp, s) in specs {
@@ -765,14 +791,63 @@ impl ServingStats {
                 f.total_recovered() as f64,
             );
         }
+        if let Some(slo) = &self.slo {
+            metric(
+                "overlay_jit_slo_burn",
+                "gauge",
+                "Worst fast-window SLO burn rate across objectives",
+                slo.burn,
+            );
+            metric(
+                "overlay_jit_slo_firing",
+                "gauge",
+                "SLO objectives currently firing",
+                slo.firing as f64,
+            );
+            metric(
+                "overlay_jit_slo_alerts_total",
+                "counter",
+                "SLO burn-rate alert transitions emitted",
+                slo.alerts_total as f64,
+            );
+        }
+        // Proper histogram series from the log-bucketed carrier:
+        // cumulative `_bucket{le="..."}` counts (only edges that hold
+        // samples — the cumulative sequence reconstructs the rest),
+        // the mandatory `+Inf` edge, `_sum` and `_count`.
+        out.push_str(
+            "# HELP overlay_jit_latency_ms End-to-end dispatch latency (enqueue to completion)\n\
+             # TYPE overlay_jit_latency_ms histogram\n",
+        );
+        for (le, cum) in self.latency_hist.cumulative_buckets_ms() {
+            out.push_str(&format!("overlay_jit_latency_ms_bucket{{le=\"{le}\"}} {cum}\n"));
+        }
+        out.push_str(&format!(
+            "overlay_jit_latency_ms_bucket{{le=\"+Inf\"}} {}\n",
+            self.latency_hist.count()
+        ));
+        out.push_str(&format!(
+            "overlay_jit_latency_ms_sum {}\n",
+            self.latency_hist.sum_ms()
+        ));
+        out.push_str(&format!(
+            "overlay_jit_latency_ms_count {}\n",
+            self.latency_hist.count()
+        ));
         out
     }
 }
 
 /// Parse a Prometheus text-exposition page back into `(name, value)`
 /// pairs — the re-parse half of the telemetry round-trip check in
-/// `e2e_serve -- trace`. Comment (`#`) and blank lines are skipped;
-/// malformed sample lines are reported, not ignored.
+/// `e2e_serve -- trace` / `-- slo`. Comment (`#`) lines — `# HELP`
+/// and `# TYPE` in any order, anywhere on the page — and blank lines
+/// are skipped; malformed sample lines are reported, not ignored.
+///
+/// Labeled samples (`name{le="0.25"} 12`, the histogram `_bucket`
+/// series) keep their label block in the returned name, so two
+/// buckets of the same family stay distinct. Labels must not contain
+/// whitespace — true of everything this crate emits.
 pub fn parse_prometheus(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
     let mut out = Vec::new();
     for line in text.lines() {
@@ -786,12 +861,28 @@ pub fn parse_prometheus(text: &str) -> anyhow::Result<Vec<(String, f64)>> {
         else {
             anyhow::bail!("malformed Prometheus sample line: {line:?}");
         };
+        if name.contains('{') && !name.ends_with('}') {
+            anyhow::bail!("malformed label block in Prometheus sample: {line:?}");
+        }
         let value: f64 = value
             .parse()
             .map_err(|e| anyhow::anyhow!("bad value in {line:?}: {e}"))?;
         out.push((name.to_string(), value));
     }
     Ok(out)
+}
+
+/// The metric *family* a parsed sample name belongs to: labels are
+/// stripped, and the histogram sample suffixes (`_bucket`, `_sum`,
+/// `_count`) fold back onto the family declared by `# TYPE`.
+pub fn prometheus_family(sample_name: &str) -> &str {
+    let base = sample_name.split('{').next().unwrap_or(sample_name);
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(family) = base.strip_suffix(suffix) {
+            return family;
+        }
+    }
+    base
 }
 
 /// Simple fixed-width table formatter used by the bench harnesses to
@@ -893,14 +984,23 @@ mod tests {
         assert_eq!(empty.p99_ms, 0.0);
     }
 
+    fn hist_of(samples: &[f64]) -> LatencyHist {
+        let mut h = LatencyHist::new();
+        for &ms in samples {
+            h.record_ms(ms);
+        }
+        h
+    }
+
     #[test]
     fn serving_stats_hit_rate_and_render() {
         let s = ServingStats {
             cache: CacheStats { hits: 3, misses: 1, evictions: 0, entries: 1, capacity: 32 },
             reconfig_count: 2,
             reconfig_seconds: 84.8e-6,
-            latency: LatencyStats::from_samples_ms(vec![1.0, 2.0, 3.0]),
-            latency_raw: LatencyRaw { stride: 1, samples_ms: vec![1.0, 2.0, 3.0] },
+            latency: LatencyStats::from_hist(&hist_of(&[1.0, 2.0, 3.0])),
+            latency_hist: hist_of(&[1.0, 2.0, 3.0]),
+            latency_raw: LatencyRaw::default(),
             partitions: vec![PartitionServingStats {
                 partition: 0,
                 overlay: "8x8-dsp2".into(),
@@ -957,6 +1057,7 @@ mod tests {
             }),
             faults: None,
             poison: crate::fleet::PoisonStats { active: 1, probes: 2, recoveries: 1 },
+            slo: Some(SloStats { objectives: 2, firing: 1, ..Default::default() }),
         };
         assert!((s.cache.hit_rate() - 0.75).abs() < 1e-12);
         assert_eq!(CacheStats::default().hit_rate(), 0.0);
@@ -976,13 +1077,13 @@ mod tests {
     }
 
     #[test]
-    fn serving_stats_merge_aligns_strides_and_sums_counters() {
-        // busy node: reservoir decimated twice (stride 4), slow samples
+    fn serving_stats_merge_adds_histogram_buckets_and_sums_counters() {
+        // busy node: 32 slow completions, every one in the histogram
         let busy = ServingStats {
             total_dispatches: 32,
             total_items: 3200,
             cache: CacheStats { hits: 30, misses: 2, evictions: 1, entries: 2, capacity: 32 },
-            latency_raw: LatencyRaw { stride: 4, samples_ms: vec![100.0; 8] },
+            latency_hist: hist_of(&[100.0; 32]),
             per_spec: vec![SpecServingStats {
                 spec: "8x8-dsp2".into(),
                 fingerprint: 0xABCD,
@@ -1015,12 +1116,12 @@ mod tests {
             }),
             ..Default::default()
         };
-        // idle node: undecimated reservoir (stride 1), fast samples
+        // idle node: 8 fast completions
         let idle = ServingStats {
             total_dispatches: 8,
             total_items: 800,
             cache: CacheStats { hits: 6, misses: 2, evictions: 0, entries: 2, capacity: 32 },
-            latency_raw: LatencyRaw { stride: 1, samples_ms: vec![1.0; 8] },
+            latency_hist: hist_of(&[1.0; 8]),
             per_spec: vec![SpecServingStats {
                 spec: "8x8-dsp2".into(),
                 fingerprint: 0xABCD,
@@ -1054,20 +1155,32 @@ mod tests {
             ..Default::default()
         };
 
-        let m = ServingStats::merge(&[busy, idle]);
+        let m = ServingStats::merge(&[busy.clone(), idle.clone()]);
         assert_eq!(m.total_dispatches, 40);
         assert_eq!(m.total_items, 4000);
         assert_eq!(m.cache.hits, 36);
         assert_eq!(m.cache.misses, 4);
 
-        // stride alignment: the idle node's 8 stride-1 samples thin to
-        // 2 at the cluster stride of 4, so the busy node's 8 retained
-        // samples (each standing for 4 dispatches) dominate the merged
-        // p50 — a naive 8-vs-8 concat would have dragged it to ~1ms.
-        assert_eq!(m.latency_raw.stride, 4);
-        assert_eq!(m.latency_raw.samples_ms.len(), 10);
-        assert_eq!(m.latency.count, 10);
-        assert_eq!(m.latency.p50_ms, 100.0);
+        // lossless bucket addition: every one of the 40 completions
+        // survives the merge (the old reservoir discipline thinned the
+        // idle node 4:1 here), and the busy node's 32 slow samples
+        // dominate the merged p50 to within one bucket of 100 ms.
+        assert_eq!(m.latency_hist.count(), 40);
+        assert_eq!(m.latency.count, 40);
+        assert!(
+            (70.0..=142.0).contains(&m.latency.p50_ms),
+            "p50 within one bucket of 100: {}",
+            m.latency.p50_ms
+        );
+        assert_eq!(m.latency.max_ms, 100.0);
+        // the deprecated reservoir carrier stays empty
+        assert!(m.latency_raw.samples_ms.is_empty());
+
+        // merge order cannot matter: bucket addition commutes
+        let swapped = ServingStats::merge(&[idle.clone(), busy.clone()]);
+        assert_eq!(m.latency_hist, swapped.latency_hist, "merge(a,b) == merge(b,a)");
+        assert_eq!(m.latency.p50_ms, swapped.latency.p50_ms);
+        assert_eq!(m.latency.p99_ms, swapped.latency.p99_ms);
 
         // partition rows re-number instead of colliding
         assert_eq!(m.partitions.len(), 2);
@@ -1176,10 +1289,14 @@ mod tests {
         assert_eq!(empty.p99_ms, 0.0);
         assert_eq!(empty.max_ms, 0.0);
         assert_eq!(empty.mean_ms, 0.0);
+        let empty_hist = LatencyHist::new();
+        assert_eq!(LatencyStats::from_hist(&empty_hist).count, 0);
         let merged = ServingStats::merge(&[]);
         assert_eq!(merged.total_dispatches, 0);
         assert_eq!(merged.latency.count, 0);
+        assert_eq!(merged.latency_hist.count(), 0);
         assert_eq!(merged.latency_raw.samples_ms.len(), 0);
+        assert!(merged.slo.is_none());
         assert!(merged.partitions.is_empty());
         assert!(merged.per_spec.is_empty());
         assert!(merged.admission.is_none());
@@ -1197,7 +1314,15 @@ mod tests {
             rejected_submits: 4,
             shed_submits: 1,
             quarantine_events: 1,
-            latency: LatencyStats::from_samples_ms(vec![1.0, 2.0, 4.0]),
+            latency: LatencyStats::from_hist(&hist_of(&[1.0, 2.0, 4.0])),
+            latency_hist: hist_of(&[1.0, 2.0, 4.0]),
+            slo: Some(crate::obs::SloStats {
+                objectives: 1,
+                firing: 1,
+                alerts_total: 3,
+                burn: 2.5,
+                ..Default::default()
+            }),
             faults: Some(crate::admission::FaultTally::default()),
             ..Default::default()
         };
@@ -1220,12 +1345,41 @@ mod tests {
         assert_eq!(get("overlay_jit_quarantine_events_total"), 1.0);
         assert_eq!(get("overlay_jit_latency_max_ms"), 4.0);
         assert_eq!(get("overlay_jit_faults_injected_total"), 0.0);
-        // every sample line names a declared metric (HELP + TYPE)
+        assert_eq!(get("overlay_jit_slo_burn"), 2.5);
+        assert_eq!(get("overlay_jit_slo_firing"), 1.0);
+        assert_eq!(get("overlay_jit_slo_alerts_total"), 3.0);
+
+        // histogram exposition: cumulative buckets, +Inf, _sum, _count
+        assert_eq!(get(r#"overlay_jit_latency_ms_bucket{le="+Inf"}"#), 3.0);
+        assert_eq!(get("overlay_jit_latency_ms_count"), 3.0);
+        assert!((get("overlay_jit_latency_ms_sum") - 7.0).abs() < 1e-9);
+        let buckets: Vec<f64> = parsed
+            .iter()
+            .filter(|(n, _)| n.starts_with("overlay_jit_latency_ms_bucket"))
+            .map(|&(_, v)| v)
+            .collect();
+        assert!(buckets.len() >= 2, "at least one finite bucket plus +Inf");
+        assert!(buckets.windows(2).all(|w| w[0] <= w[1]), "cumulative buckets ascend");
+        assert_eq!(*buckets.last().unwrap(), 3.0, "+Inf bucket equals count");
+
+        // every sample line names a declared family (HELP + TYPE) —
+        // labelled/suffixed series map back through prometheus_family
         for (name, _) in &parsed {
-            assert!(page.contains(&format!("# TYPE {name} ")), "undeclared {name}");
+            let family = prometheus_family(name);
+            assert!(page.contains(&format!("# TYPE {family} ")), "undeclared {name}");
         }
+        assert_eq!(prometheus_family(r#"overlay_jit_latency_ms_bucket{le="0.5"}"#), "overlay_jit_latency_ms");
+        assert_eq!(prometheus_family("overlay_jit_latency_ms_sum"), "overlay_jit_latency_ms");
+        assert_eq!(prometheus_family("overlay_jit_dispatches_total"), "overlay_jit_dispatches_total");
+
+        // parsing tolerates HELP/TYPE in any order, even after samples
+        let scrambled = "jit_x_total 3\n# TYPE jit_x_total counter\n# HELP jit_x_total scrambled\n";
+        let p2 = parse_prometheus(scrambled).expect("order-tolerant parse");
+        assert_eq!(p2, vec![("jit_x_total".to_string(), 3.0)]);
+
         // malformed pages are errors, not silent zeros
         assert!(parse_prometheus("metric_without_value\n").is_err());
         assert!(parse_prometheus("metric nan_oops extra\n").is_err());
+        assert!(parse_prometheus("broken{le=\"0.5\" 1\n").is_err());
     }
 }

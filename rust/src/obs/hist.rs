@@ -1,0 +1,323 @@
+//! Log-bucketed latency histograms — the canonical latency carrier.
+//!
+//! [`LatencyHist`] is an HDR-style histogram with two buckets per
+//! octave spanning 1 ns .. ~2 minutes: bucket `i` covers
+//! `[2^(i/2), 2^((i+1)/2))` nanoseconds, so every bucket's relative
+//! width is `sqrt(2) - 1` (~41%) and a percentile read is exact to
+//! within one bucket. Memory is a fixed 75-slot count array — no
+//! sampling, no decimation, no allocation after construction.
+//!
+//! The property the stride-aligned reservoirs it replaces never had:
+//! **merge is lossless bucket-wise addition**. Merging shard A into
+//! shard B, or node stats in any order, adds count arrays — it is
+//! commutative, associative, and drops nothing, so cluster-merged
+//! percentiles are computed over *every* recorded completion rather
+//! than a thinned sample. `ServeLog` shards, `ServingStats`, and
+//! `ServingStats::merge` all carry one of these.
+//!
+//! Bucket selection is pure integer math (floor log2 via
+//! `leading_zeros`, half-octave test via a `u128` square compare), so
+//! identical streams always land in identical buckets on every
+//! platform — the determinism the scripted SLO tests lean on.
+
+/// Sub-buckets per octave (factor-of-two range).
+const SUB: usize = 2;
+/// Octaves covered before overflow: 1 ns .. 2^37 ns (~137 s).
+const OCTAVES: usize = 37;
+/// Finite buckets; index `OVERFLOW` catches everything ≥ 2^37 ns.
+const FINITE: usize = SUB * OCTAVES;
+const OVERFLOW: usize = FINITE;
+/// Total bucket slots (finite + overflow).
+pub const HIST_BUCKETS: usize = FINITE + 1;
+
+/// Fixed-memory log-bucketed latency histogram (see module docs).
+///
+/// Records are nanosecond-resolution; the public API speaks
+/// milliseconds because every call site in the serving stack does.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencyHist {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_ms: f64,
+    max_ms: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist::new()
+    }
+}
+
+impl LatencyHist {
+    pub fn new() -> LatencyHist {
+        LatencyHist {
+            counts: [0; HIST_BUCKETS],
+            count: 0,
+            sum_ms: 0.0,
+            max_ms: 0.0,
+        }
+    }
+
+    /// Bucket index for a nanosecond value. Pure integer math: floor
+    /// log2 via `leading_zeros`, then a half-octave test comparing
+    /// `v^2` against `2^(2k+1)` in `u128` (exact — no float rounding
+    /// at bucket edges).
+    fn bucket_of_ns(ns: u64) -> usize {
+        if ns <= 1 {
+            return 0;
+        }
+        let k = (63 - ns.leading_zeros()) as usize;
+        let sub = usize::from((ns as u128) * (ns as u128) >= 1u128 << (2 * k + 1));
+        (SUB * k + sub).min(OVERFLOW)
+    }
+
+    /// Record one latency in milliseconds. Negative and NaN inputs
+    /// count as zero-latency (bucket 0) rather than poisoning sums.
+    pub fn record_ms(&mut self, ms: f64) {
+        let ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        let ns = ms * 1e6;
+        let bucket = if ns >= u64::MAX as f64 {
+            OVERFLOW
+        } else {
+            Self::bucket_of_ns(ns as u64)
+        };
+        self.counts[bucket] += 1;
+        self.count += 1;
+        self.sum_ms += ms;
+        if ms > self.max_ms {
+            self.max_ms = ms;
+        }
+    }
+
+    /// Record one latency in nanoseconds.
+    pub fn record_ns(&mut self, ns: u64) {
+        self.counts[Self::bucket_of_ns(ns)] += 1;
+        self.count += 1;
+        let ms = ns as f64 / 1e6;
+        self.sum_ms += ms;
+        if ms > self.max_ms {
+            self.max_ms = ms;
+        }
+    }
+
+    /// Lossless merge: bucket-wise addition. Commutative and
+    /// associative — merge order never changes any percentile.
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ms += other.sum_ms;
+        if other.max_ms > self.max_ms {
+            self.max_ms = other.max_ms;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ms
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_ms
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ms / self.count as f64
+        }
+    }
+
+    /// Upper edge of bucket `i` in milliseconds (`f64::INFINITY` for
+    /// the overflow bucket). These are the Prometheus `le` edges.
+    pub fn bucket_upper_ms(i: usize) -> f64 {
+        if i >= OVERFLOW {
+            f64::INFINITY
+        } else {
+            2f64.powf((i + 1) as f64 * 0.5) / 1e6
+        }
+    }
+
+    /// Representative (geometric-midpoint) value of bucket `i` in ms.
+    fn bucket_mid_ms(i: usize) -> f64 {
+        if i >= OVERFLOW {
+            // No upper edge; report the lower one.
+            2f64.powf(FINITE as f64 * 0.5) / 1e6
+        } else {
+            2f64.powf(i as f64 * 0.5 + 0.25) / 1e6
+        }
+    }
+
+    /// Percentile within bucket resolution. Rank semantics match the
+    /// sorted-sample `metrics::percentile`: the value at index
+    /// `round((count - 1) * p)`. Returns the bucket midpoint, clamped
+    /// to the observed max so p100 never exceeds a real sample.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let p = p.clamp(0.0, 1.0);
+        let rank = ((self.count - 1) as f64 * p).round() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return Self::bucket_mid_ms(i).min(self.max_ms);
+            }
+        }
+        self.max_ms
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.percentile_ms(0.50)
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.percentile_ms(0.99)
+    }
+
+    pub fn p999_ms(&self) -> f64 {
+        self.percentile_ms(0.999)
+    }
+
+    /// Cumulative `(le_ms, count)` pairs for every bucket that
+    /// actually holds samples, in ascending edge order — exactly the
+    /// non-trivial Prometheus `_bucket{le="..."}` series (the caller
+    /// adds the `+Inf` edge from [`LatencyHist::count`]).
+    pub fn cumulative_buckets_ms(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            cum += c;
+            out.push((Self::bucket_upper_ms(i), cum));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_hist_is_all_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.p50_ms(), 0.0);
+        assert_eq!(h.p99_ms(), 0.0);
+        assert_eq!(h.max_ms(), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+        assert!(h.cumulative_buckets_ms().is_empty());
+    }
+
+    #[test]
+    fn bucket_edges_are_exact_integer_math() {
+        // 2^k lands exactly on the lower edge of bucket 2k.
+        for k in 0..37usize {
+            assert_eq!(LatencyHist::bucket_of_ns(1u64 << k), SUB * k, "2^{k}");
+        }
+        // The half-octave edge: floor(2^(k+0.5)) is below the edge
+        // (its square < 2^(2k+1)), the next integer is at or above.
+        for k in 2..37usize {
+            let edge_sq = 1u128 << (2 * k + 1);
+            let below = (2f64.powf(k as f64 + 0.5)).floor() as u64;
+            let below = if (below as u128 * below as u128) >= edge_sq { below - 1 } else { below };
+            assert_eq!(LatencyHist::bucket_of_ns(below), SUB * k, "below edge k={k}");
+            assert_eq!(LatencyHist::bucket_of_ns(below + 1), SUB * k + 1, "above edge k={k}");
+        }
+        // Overflow: anything at or past 2^37 ns pools in the last slot.
+        assert_eq!(LatencyHist::bucket_of_ns(1u64 << 37), OVERFLOW);
+        assert_eq!(LatencyHist::bucket_of_ns(u64::MAX), OVERFLOW);
+        // Sub-nanosecond pools in slot 0.
+        assert_eq!(LatencyHist::bucket_of_ns(0), 0);
+        assert_eq!(LatencyHist::bucket_of_ns(1), 0);
+    }
+
+    #[test]
+    fn percentile_is_within_one_bucket_of_exact() {
+        let mut h = LatencyHist::new();
+        let mut exact: Vec<f64> = Vec::new();
+        // A deterministic long-tailed stream: 1..400 scaled unevenly.
+        for i in 1..=400u64 {
+            let ms = (i as f64) * 0.37 + ((i * i) % 97) as f64 * 0.11;
+            h.record_ms(ms);
+            exact.push(ms);
+        }
+        exact.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &p in &[0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let idx = ((exact.len() - 1) as f64 * p).round() as usize;
+            let want = exact[idx];
+            let got = h.percentile_ms(p);
+            // One bucket of resolution: a factor of sqrt(2) either way.
+            let ratio = got / want;
+            assert!(
+                (0.70..=1.42).contains(&ratio),
+                "p{p}: hist {got} vs exact {want} (ratio {ratio})"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_is_commutative_and_lossless() {
+        let mut a = LatencyHist::new();
+        let mut b = LatencyHist::new();
+        for i in 0..1000u64 {
+            a.record_ms(0.01 * (i + 1) as f64);
+        }
+        for i in 0..10u64 {
+            b.record_ms(100.0 * (i + 1) as f64);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge(a,b) == merge(b,a)");
+        assert_eq!(ab.count(), 1010, "no thinning: every sample survives");
+        assert_eq!(ab.max_ms(), 1000.0);
+        // The merged p999 reflects b's tail even though b is tiny —
+        // a thinned reservoir merge would have decimated it.
+        assert!(ab.p999_ms() > 50.0, "tail survives merge: {}", ab.p999_ms());
+    }
+
+    #[test]
+    fn degenerate_inputs_do_not_poison() {
+        let mut h = LatencyHist::new();
+        h.record_ms(f64::NAN);
+        h.record_ms(-5.0);
+        h.record_ms(0.0);
+        h.record_ms(f64::INFINITY);
+        assert_eq!(h.count(), 4);
+        assert!(h.sum_ms().is_finite());
+        assert!(h.p50_ms().is_finite());
+        assert!(h.max_ms().is_finite());
+    }
+
+    #[test]
+    fn cumulative_buckets_end_at_total_count() {
+        let mut h = LatencyHist::new();
+        for ms in [0.1, 0.1, 1.0, 10.0, 500.0] {
+            h.record_ms(ms);
+        }
+        let cum = h.cumulative_buckets_ms();
+        assert!(!cum.is_empty());
+        // Edges ascend, counts ascend, final count is the total.
+        for w in cum.windows(2) {
+            assert!(w[0].0 < w[1].0);
+            assert!(w[0].1 < w[1].1);
+        }
+        assert_eq!(cum.last().unwrap().1, h.count());
+    }
+}

@@ -30,14 +30,85 @@
 //! writes both (`TRACE_OUT` / `METRICS_OUT` env override the paths)
 //! and re-parses them as part of its acceptance check.
 //!
+//! High-QPS deployments arm **head-based sampling**: a
+//! [`Sampler`] on the sink admits a deterministic
+//! (hash-of-candidate-trace-id) subset of submits at trace-begin time.
+//! A sampled-out submit runs completely untraced — no spans, no span
+//! ids, no exemplar pins — but still lands in every latency histogram
+//! and counter, so sampling thins the *trace* stream, never the
+//! *metrics* stream. Flight-recorder exemplars are pinned only from
+//! sampled-in traces, so a pinned trace id can always be looked up in
+//! the rings.
+//!
+//! The continuous-telemetry layer lives in submodules: [`hist`]
+//! (log-bucketed mergeable latency histograms — the canonical latency
+//! carrier in `ServeLog` / `ServingStats`), [`timeseries`]
+//! (caller-advanced-clock snapshot rings for windowed rates), and
+//! [`slo`] (multi-window burn-rate alerting feeding admission and the
+//! autoscaler).
+//!
 //! [`RejectReason`]: crate::admission::RejectReason
 //! [`FaultKind`]: crate::admission::FaultKind
+
+pub mod hist;
+pub mod slo;
+pub mod timeseries;
+
+pub use hist::LatencyHist;
+pub use slo::{
+    AlertState, SloAlert, SloCollector, SloKind, SloObjective, SloPolicy, SloProbe, SloStats,
+};
+pub use timeseries::TimeSeries;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::util::JsonValue;
+
+/// SplitMix64 finalizer: a cheap, well-mixed 64-bit permutation used
+/// to decorrelate sequential trace ids before the sampling modulus.
+fn mix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+/// Head-based trace sampling decision. `ratio(N)` admits a
+/// deterministic ~1/N subset of traces by hashing the candidate trace
+/// id — the same id always gets the same verdict, on every node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sampler {
+    denom: u64,
+}
+
+impl Default for Sampler {
+    fn default() -> Sampler {
+        Sampler::always()
+    }
+}
+
+impl Sampler {
+    /// Trace every submit (the pre-sampling behavior).
+    pub fn always() -> Sampler {
+        Sampler { denom: 1 }
+    }
+
+    /// Trace ~1 in `denom` submits (clamped to ≥ 1).
+    pub fn ratio(denom: u64) -> Sampler {
+        Sampler { denom: denom.max(1) }
+    }
+
+    pub fn denom(&self) -> u64 {
+        self.denom
+    }
+
+    /// Deterministic verdict for a candidate trace id.
+    pub fn admits(&self, candidate: u64) -> bool {
+        self.denom <= 1 || mix64(candidate) % self.denom == 0
+    }
+}
 
 /// Stable identifier of one submit's end-to-end trace (1-based; 0
 /// means "not traced").
@@ -180,8 +251,11 @@ pub struct TraceSinkStats {
     pub recorded: u64,
     /// Spans overwritten by ring wrap-around (lost to readers).
     pub overwritten: u64,
-    /// Traces started.
+    /// Traces started (sampled-in only — a sampled-out submit opens
+    /// no trace).
     pub traces: u64,
+    /// Submits the [`Sampler`] declined to trace.
+    pub sampled_out: u64,
 }
 
 /// The lock-light span store: N independently locked pre-sized rings
@@ -190,7 +264,9 @@ pub struct TraceSinkStats {
 pub struct TraceSink {
     enabled: bool,
     epoch: Instant,
+    sampler: Sampler,
     next_trace: AtomicU64,
+    sampled_out: AtomicU64,
     next_span: AtomicU64,
     recorded: AtomicU64,
     overwritten: AtomicU64,
@@ -200,16 +276,25 @@ pub struct TraceSink {
 }
 
 impl TraceSink {
-    /// An enabled sink with `shards` rings of `capacity` spans each.
-    /// Ring memory is allocated up front so the record path never
-    /// grows a buffer.
+    /// An enabled sink with `shards` rings of `capacity` spans each,
+    /// tracing every submit. Ring memory is allocated up front so the
+    /// record path never grows a buffer.
     pub fn new(shards: usize, capacity: usize) -> Arc<TraceSink> {
+        Self::sampled(shards, capacity, Sampler::always())
+    }
+
+    /// An enabled sink that head-samples: only submits the `sampler`
+    /// admits open a trace; the rest run untraced (but still fully
+    /// counted in histograms and stats).
+    pub fn sampled(shards: usize, capacity: usize, sampler: Sampler) -> Arc<TraceSink> {
         let shards = shards.max(1);
         let capacity = capacity.max(1);
         Arc::new(TraceSink {
             enabled: true,
             epoch: Instant::now(),
+            sampler,
             next_trace: AtomicU64::new(0),
+            sampled_out: AtomicU64::new(0),
             next_span: AtomicU64::new(0),
             recorded: AtomicU64::new(0),
             overwritten: AtomicU64::new(0),
@@ -233,7 +318,9 @@ impl TraceSink {
         Arc::new(TraceSink {
             enabled: false,
             epoch: Instant::now(),
+            sampler: Sampler::always(),
             next_trace: AtomicU64::new(0),
+            sampled_out: AtomicU64::new(0),
             next_span: AtomicU64::new(0),
             recorded: AtomicU64::new(0),
             overwritten: AtomicU64::new(0),
@@ -241,6 +328,10 @@ impl TraceSink {
             shards: Vec::new(),
             flight: Mutex::new(FlightRecorder::new()),
         })
+    }
+
+    pub fn sampler(&self) -> Sampler {
+        self.sampler
     }
 
     pub fn enabled(&self) -> bool {
@@ -252,12 +343,19 @@ impl TraceSink {
         self.epoch.elapsed().as_micros() as u64
     }
 
-    /// Start a new trace; 0 when disabled.
+    /// Start a new trace; 0 when disabled or when the [`Sampler`]
+    /// declines this submit (the candidate id is consumed either way,
+    /// so the sampling decision is a stable function of submit order).
     pub fn begin_trace(&self) -> TraceId {
         if !self.enabled {
             return 0;
         }
-        self.next_trace.fetch_add(1, Ordering::Relaxed) + 1
+        let candidate = self.next_trace.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.sampler.admits(candidate) {
+            self.sampled_out.fetch_add(1, Ordering::Relaxed);
+            return 0;
+        }
+        candidate
     }
 
     /// Reserve a span id (so a root can be handed to children before
@@ -304,13 +402,15 @@ impl TraceSink {
     }
 
     pub fn stats(&self) -> TraceSinkStats {
+        let sampled_out = self.sampled_out.load(Ordering::Relaxed);
         TraceSinkStats {
             shards: self.shards.len(),
             capacity: self.capacity,
             allocated_spans: self.shards.len() * self.capacity,
             recorded: self.recorded.load(Ordering::Relaxed),
             overwritten: self.overwritten.load(Ordering::Relaxed),
-            traces: self.next_trace.load(Ordering::Relaxed),
+            traces: self.next_trace.load(Ordering::Relaxed) - sampled_out,
+            sampled_out,
         }
     }
 
@@ -474,6 +574,11 @@ impl SubmitTrace {
             Some(p) if p.trace_id != 0 => p.trace_id,
             _ => handle.sink.begin_trace(),
         };
+        if trace_id == 0 {
+            // Head-sampled out: this submit runs completely untraced
+            // (its latency still reaches every histogram and counter).
+            return None;
+        }
         Some(SubmitTrace {
             handle: handle.clone(),
             trace_id,
@@ -720,6 +825,42 @@ mod tests {
         assert_eq!(spans.len(), 4);
         // the oldest three were overwritten
         assert!(spans.iter().all(|s| s.span_id >= 4));
+    }
+
+    #[test]
+    fn sampler_is_deterministic_and_stats_count_sampled_in_only() {
+        // Verdicts are a pure function of the candidate id.
+        let s = Sampler::ratio(4);
+        for id in 1..=64u64 {
+            assert_eq!(s.admits(id), Sampler::ratio(4).admits(id));
+        }
+        assert!((1..=64u64).all(|id| Sampler::always().admits(id)));
+        assert_eq!(Sampler::ratio(0).denom(), 1, "ratio clamps to always");
+
+        let sink = TraceSink::sampled(2, 4096, Sampler::ratio(4));
+        let mut sampled_in = 0u64;
+        for _ in 0..256 {
+            let t = sink.begin_trace();
+            if t != 0 {
+                sampled_in += 1;
+                sink.record(span(t, sink.next_span_id(), 0, Phase::Submit));
+                sink.pin(CLASS_TAIL, "e2e", t, 1);
+            }
+        }
+        let st = sink.stats();
+        assert_eq!(st.traces, sampled_in, "traces counts sampled-in only");
+        assert_eq!(st.traces + st.sampled_out, 256);
+        assert!(sampled_in > 0, "a 1/4 sampler admits some of 256");
+        assert!(st.sampled_out > 0, "a 1/4 sampler declines some of 256");
+        // The span store agrees with the counter: one trace per
+        // sampled-in submit, all rooted, and the tail exemplar points
+        // at a sampled-in (recorded) trace.
+        let chk = check_traces(&sink.spans());
+        assert_eq!(chk.traces as u64, sampled_in);
+        assert_eq!(chk.rooted, chk.traces);
+        let tail = sink.exemplar(CLASS_TAIL, "e2e").expect("tail pinned");
+        assert!(tail.trace_id != 0);
+        assert_eq!(tail.count, sampled_in);
     }
 
     #[test]

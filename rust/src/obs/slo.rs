@@ -1,0 +1,619 @@
+//! Multi-window burn-rate SLO engine on a deterministic clock.
+//!
+//! Objectives are declared per traffic slice — `(tenant, priority)`
+//! selectors with wildcards — in the Google-SRE style: an error
+//! *budget* (the tolerated bad fraction: 1% of interactive requests
+//! may exceed the latency SLO, 10% of submits may be rejected under a
+//! 90% availability target) and a *burn rate*, the ratio of observed
+//! bad fraction to that budget. Burning at 1.0 spends exactly the
+//! budget; sustained burn above it exhausts the budget early.
+//!
+//! Alerting uses the classic two-window rule: an alert **fires** when
+//! both a fast window (reacts in one tick) and a slow window (filters
+//! blips) burn above their thresholds, and **clears** when the fast
+//! window drops back below — fast detection, hysteretic clearing, no
+//! flapping on a single bad window. Transitions are typed
+//! [`SloAlert`]s appended to a [`BoundedLog`], and the instantaneous
+//! worst-case burn is exported as a `[0, ∞)` gauge the admission
+//! pressure fold and the autoscaler consume
+//! ([`SloCollector::burn`]).
+//!
+//! Nothing here reads a wall clock. Windows close only when the owner
+//! calls [`SloCollector::tick`] with an explicit nanosecond stamp, so
+//! a scripted test can pin the *exact tick* an alert fires and
+//! clears — and does, below.
+
+use std::sync::{Arc, Mutex};
+
+use super::hist::LatencyHist;
+use super::timeseries::TimeSeries;
+use crate::util::BoundedLog;
+
+/// What an objective bounds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloKind {
+    /// "p99 latency ≤ `target` ms": a completion slower than `target`
+    /// spends error budget.
+    LatencyP99,
+    /// "availability ≥ `target`": a rejected / shed / errored submit
+    /// spends error budget.
+    Availability,
+}
+
+impl SloKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloKind::LatencyP99 => "latency_p99",
+            SloKind::Availability => "availability",
+        }
+    }
+}
+
+/// One declared objective over a traffic slice.
+#[derive(Debug, Clone)]
+pub struct SloObjective {
+    /// Stable alert label, e.g. `"interactive-p99"`.
+    pub name: String,
+    /// Tenant selector (`None` = every tenant).
+    pub tenant: Option<String>,
+    /// Priority-class selector (`None` = both classes).
+    pub interactive: Option<bool>,
+    pub kind: SloKind,
+    /// `LatencyP99`: the SLO in milliseconds. `Availability`: the
+    /// target fraction, e.g. `0.9`.
+    pub target: f64,
+    /// Tolerated bad fraction (the error budget). For availability
+    /// objectives this is `1 - target`.
+    pub budget: f64,
+}
+
+impl SloObjective {
+    /// "Interactive p99 ≤ `slo_ms`" with a 1% budget.
+    pub fn interactive_p99(slo_ms: f64) -> SloObjective {
+        SloObjective {
+            name: "interactive-p99".to_string(),
+            tenant: None,
+            interactive: Some(true),
+            kind: SloKind::LatencyP99,
+            target: slo_ms,
+            budget: 0.01,
+        }
+    }
+
+    /// "Availability ≥ `target`" over all traffic.
+    pub fn availability(target: f64) -> SloObjective {
+        SloObjective {
+            name: "availability".to_string(),
+            tenant: None,
+            interactive: None,
+            kind: SloKind::Availability,
+            target,
+            budget: (1.0 - target).max(1e-6),
+        }
+    }
+
+    fn matches(&self, tenant: &str, interactive: bool) -> bool {
+        if let Some(t) = &self.tenant {
+            if t != tenant {
+                return false;
+            }
+        }
+        if let Some(i) = self.interactive {
+            if i != interactive {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// The declared objectives plus the shared burn-rate alert rule.
+#[derive(Debug, Clone)]
+pub struct SloPolicy {
+    pub objectives: Vec<SloObjective>,
+    /// Fast-window width in ticks (reacts quickly).
+    pub fast_windows: usize,
+    /// Slow-window width in ticks (filters blips).
+    pub slow_windows: usize,
+    /// Fast-window burn threshold; firing requires both.
+    pub fast_burn: f64,
+    /// Slow-window burn threshold.
+    pub slow_burn: f64,
+    /// Windows retained per objective ring.
+    pub capacity: usize,
+    /// Alert-log bound.
+    pub max_alerts: usize,
+}
+
+impl Default for SloPolicy {
+    fn default() -> SloPolicy {
+        SloPolicy {
+            objectives: Vec::new(),
+            fast_windows: 1,
+            slow_windows: 6,
+            fast_burn: 2.0,
+            slow_burn: 1.0,
+            capacity: 64,
+            max_alerts: 256,
+        }
+    }
+}
+
+impl SloPolicy {
+    /// The common serving policy: interactive p99 plus a fleet
+    /// availability floor.
+    pub fn serving(slo_ms: f64, availability: f64) -> SloPolicy {
+        SloPolicy {
+            objectives: vec![
+                SloObjective::interactive_p99(slo_ms),
+                SloObjective::availability(availability),
+            ],
+            ..SloPolicy::default()
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.fast_windows == 0 || self.slow_windows < self.fast_windows {
+            anyhow::bail!(
+                "slo: need 1 <= fast_windows ({}) <= slow_windows ({})",
+                self.fast_windows,
+                self.slow_windows
+            );
+        }
+        if self.capacity < self.slow_windows {
+            anyhow::bail!(
+                "slo: ring capacity {} cannot cover slow window {}",
+                self.capacity,
+                self.slow_windows
+            );
+        }
+        for o in &self.objectives {
+            if !(o.budget > 0.0 && o.budget <= 1.0) {
+                anyhow::bail!("slo '{}': budget {} outside (0, 1]", o.name, o.budget);
+            }
+            if o.target <= 0.0 {
+                anyhow::bail!("slo '{}': target {} must be positive", o.name, o.target);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Alert transition direction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlertState {
+    Firing,
+    Cleared,
+}
+
+impl AlertState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlertState::Firing => "firing",
+            AlertState::Cleared => "cleared",
+        }
+    }
+}
+
+/// One burn-rate alert transition.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloAlert {
+    pub objective: String,
+    pub kind: SloKind,
+    pub state: AlertState,
+    /// 1-based tick index at which the transition happened.
+    pub tick: u64,
+    /// The caller clock at that tick.
+    pub now_ns: u64,
+    /// Fast-window burn at the transition.
+    pub fast_burn: f64,
+    /// Slow-window burn at the transition.
+    pub slow_burn: f64,
+}
+
+/// Counters accumulated inside one open window for one objective.
+#[derive(Debug, Clone, Default)]
+struct WindowCounts {
+    good: u64,
+    bad: u64,
+    submits: u64,
+    completions: u64,
+    hist: LatencyHist,
+}
+
+struct ObjectiveState {
+    objective: SloObjective,
+    cur: WindowCounts,
+    series: TimeSeries<WindowCounts>,
+    firing: bool,
+}
+
+/// Cheap copyable summary for `ServingStats` / `prometheus()`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SloStats {
+    pub objectives: usize,
+    /// Objectives currently in the firing state.
+    pub firing: usize,
+    /// Alert transitions emitted since creation.
+    pub alerts_total: u64,
+    pub alerts_dropped: u64,
+    /// Worst fast-window burn across objectives at the last tick.
+    pub burn: f64,
+    /// Windows closed so far.
+    pub ticks: u64,
+}
+
+struct SloEngine {
+    policy: SloPolicy,
+    states: Vec<ObjectiveState>,
+    alerts: BoundedLog<SloAlert>,
+    tick_no: u64,
+    burn: f64,
+    alerts_total: u64,
+}
+
+impl SloEngine {
+    fn new(policy: SloPolicy) -> SloEngine {
+        let states = policy
+            .objectives
+            .iter()
+            .map(|o| ObjectiveState {
+                objective: o.clone(),
+                cur: WindowCounts::default(),
+                series: TimeSeries::new(policy.capacity),
+                firing: false,
+            })
+            .collect();
+        let max_alerts = policy.max_alerts;
+        SloEngine {
+            policy,
+            states,
+            alerts: BoundedLog::new(max_alerts),
+            tick_no: 0,
+            burn: 0.0,
+            alerts_total: 0,
+        }
+    }
+
+    fn admitted(&mut self, tenant: &str, interactive: bool) {
+        for st in &mut self.states {
+            if !st.objective.matches(tenant, interactive) {
+                continue;
+            }
+            st.cur.submits += 1;
+            if st.objective.kind == SloKind::Availability {
+                st.cur.good += 1;
+            }
+        }
+    }
+
+    fn rejected(&mut self, tenant: &str, interactive: bool) {
+        for st in &mut self.states {
+            if !st.objective.matches(tenant, interactive) {
+                continue;
+            }
+            st.cur.submits += 1;
+            if st.objective.kind == SloKind::Availability {
+                st.cur.bad += 1;
+            }
+        }
+    }
+
+    fn completed(&mut self, tenant: &str, interactive: bool, latency_ms: f64, ok: bool) {
+        for st in &mut self.states {
+            if !st.objective.matches(tenant, interactive) {
+                continue;
+            }
+            st.cur.completions += 1;
+            st.cur.hist.record_ms(latency_ms);
+            match st.objective.kind {
+                SloKind::LatencyP99 => {
+                    if ok && latency_ms <= st.objective.target {
+                        st.cur.good += 1;
+                    } else {
+                        st.cur.bad += 1;
+                    }
+                }
+                SloKind::Availability => {
+                    if !ok {
+                        st.cur.bad += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    fn burn_over(st: &ObjectiveState, n: usize) -> f64 {
+        let bad = st.series.windowed_sum(n, |w| w.bad);
+        let total = bad + st.series.windowed_sum(n, |w| w.good);
+        if total == 0 {
+            return 0.0;
+        }
+        (bad as f64 / total as f64) / st.objective.budget
+    }
+
+    fn tick(&mut self, now_ns: u64) -> Vec<SloAlert> {
+        self.tick_no += 1;
+        let mut out = Vec::new();
+        let mut worst = 0.0f64;
+        for st in &mut self.states {
+            let closed = std::mem::take(&mut st.cur);
+            st.series.push(now_ns, closed);
+            let fast = Self::burn_over(st, self.policy.fast_windows);
+            let slow = Self::burn_over(st, self.policy.slow_windows);
+            worst = worst.max(fast);
+            let transition = if !st.firing
+                && fast >= self.policy.fast_burn
+                && slow >= self.policy.slow_burn
+            {
+                st.firing = true;
+                Some(AlertState::Firing)
+            } else if st.firing && fast < self.policy.fast_burn {
+                st.firing = false;
+                Some(AlertState::Cleared)
+            } else {
+                None
+            };
+            if let Some(state) = transition {
+                let alert = SloAlert {
+                    objective: st.objective.name.clone(),
+                    kind: st.objective.kind,
+                    state,
+                    tick: self.tick_no,
+                    now_ns,
+                    fast_burn: fast,
+                    slow_burn: slow,
+                };
+                self.alerts.push(alert.clone());
+                self.alerts_total += 1;
+                out.push(alert);
+            }
+        }
+        self.burn = worst;
+        out
+    }
+
+    fn stats(&self) -> SloStats {
+        SloStats {
+            objectives: self.states.len(),
+            firing: self.states.iter().filter(|s| s.firing).count(),
+            alerts_total: self.alerts_total,
+            alerts_dropped: self.alerts.dropped(),
+            burn: self.burn,
+            ticks: self.tick_no,
+        }
+    }
+
+    /// Merged per-window histogram over the last `n` closed windows of
+    /// the objective named `name` — "p99 over the last N windows".
+    fn windowed_hist(&self, name: &str, n: usize) -> Option<LatencyHist> {
+        let st = self.states.iter().find(|s| s.objective.name == name)?;
+        let mut h = LatencyHist::new();
+        for (_, w) in st.series.window(n) {
+            h.merge(&w.hist);
+        }
+        Some(h)
+    }
+}
+
+/// Thread-safe front of the engine, shared `Arc`-style by the submit
+/// path (admission outcomes), the worker path (completions, via
+/// [`SloProbe`]), and the owner driving the clock.
+pub struct SloCollector {
+    inner: Mutex<SloEngine>,
+}
+
+impl SloCollector {
+    pub fn new(policy: SloPolicy) -> Arc<SloCollector> {
+        Arc::new(SloCollector { inner: Mutex::new(SloEngine::new(policy)) })
+    }
+
+    pub fn admitted(&self, tenant: &str, interactive: bool) {
+        self.inner.lock().unwrap().admitted(tenant, interactive);
+    }
+
+    pub fn rejected(&self, tenant: &str, interactive: bool) {
+        self.inner.lock().unwrap().rejected(tenant, interactive);
+    }
+
+    pub fn completed(&self, tenant: &str, interactive: bool, latency_ms: f64, ok: bool) {
+        self.inner.lock().unwrap().completed(tenant, interactive, latency_ms, ok);
+    }
+
+    /// Close the current window at caller time `now_ns`, evaluate
+    /// every objective's fast+slow burn, and return the alert
+    /// transitions this tick produced.
+    pub fn tick(&self, now_ns: u64) -> Vec<SloAlert> {
+        self.inner.lock().unwrap().tick(now_ns)
+    }
+
+    /// Worst fast-window burn across objectives at the last tick.
+    pub fn burn(&self) -> f64 {
+        self.inner.lock().unwrap().burn
+    }
+
+    pub fn stats(&self) -> SloStats {
+        self.inner.lock().unwrap().stats()
+    }
+
+    /// Every retained alert transition, oldest first.
+    pub fn alerts(&self) -> Vec<SloAlert> {
+        self.inner.lock().unwrap().alerts.items().to_vec()
+    }
+
+    /// "p99 over the last `n` windows" for the named objective.
+    pub fn windowed_p99_ms(&self, objective: &str, n: usize) -> Option<f64> {
+        self.inner
+            .lock()
+            .unwrap()
+            .windowed_hist(objective, n)
+            .map(|h| h.p99_ms())
+    }
+}
+
+/// Per-job completion hook carried on a queued job (mirrors
+/// `JobTrace`): lets the worker loop report the completion into the
+/// SLO engine without knowing about tenants.
+#[derive(Clone)]
+pub struct SloProbe {
+    pub collector: Arc<SloCollector>,
+    pub tenant: Arc<str>,
+    pub interactive: bool,
+}
+
+impl SloProbe {
+    pub fn complete(&self, latency_ms: f64, ok: bool) {
+        self.collector
+            .completed(&self.tenant, self.interactive, latency_ms, ok);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scripted_policy() -> SloPolicy {
+        SloPolicy {
+            objectives: vec![SloObjective::availability(0.9)],
+            fast_windows: 1,
+            slow_windows: 3,
+            fast_burn: 2.0,
+            slow_burn: 1.0,
+            capacity: 16,
+            max_alerts: 16,
+        }
+    }
+
+    fn feed(slo: &SloCollector, good: u64, bad: u64) {
+        for _ in 0..good {
+            slo.admitted("t", false);
+        }
+        for _ in 0..bad {
+            slo.rejected("t", false);
+        }
+    }
+
+    /// The scripted-clock pin: with budget 0.1, fast=1 window @ burn
+    /// ≥ 2 and slow=3 windows @ burn ≥ 1, two healthy windows then a
+    /// 50%-bad flood window burns fast = (10/20)/0.1 = 5.0 ≥ 2 and
+    /// slow = (10/60)/0.1 ≈ 1.67 ≥ 1 — so the alert must fire at
+    /// exactly tick 3 and clear at exactly tick 5 (first healthy
+    /// window after the flood drops the fast burn to 0).
+    #[test]
+    fn burn_alert_fires_and_clears_at_the_exact_scripted_tick() {
+        let slo = SloCollector::new(scripted_policy());
+        // Ticks 1-2: healthy traffic. slow burn 0.
+        for t in 1..=2u64 {
+            feed(&slo, 20, 0);
+            assert!(slo.tick(t * 1_000).is_empty(), "healthy tick {t}");
+        }
+        // Tick 3: first flood window crosses both thresholds.
+        feed(&slo, 10, 10);
+        let a3 = slo.tick(3_000);
+        assert_eq!(a3.len(), 1, "fires on the first flood window");
+        assert_eq!(a3[0].state, AlertState::Firing);
+        assert_eq!(a3[0].tick, 3);
+        assert!(a3[0].fast_burn >= 2.0);
+        assert!(a3[0].slow_burn >= 1.0);
+        // Tick 4: flood continues; still firing, no new transition.
+        feed(&slo, 10, 10);
+        assert!(slo.tick(4_000).is_empty(), "no re-fire while firing");
+        assert_eq!(slo.stats().firing, 1);
+        assert!(slo.burn() >= 2.0);
+        // Tick 5: recovery window. fast burn 0 → clears exactly here.
+        feed(&slo, 20, 0);
+        let a5 = slo.tick(5_000);
+        assert_eq!(a5.len(), 1, "clears on the first healthy window");
+        assert_eq!(a5[0].state, AlertState::Cleared);
+        assert_eq!(a5[0].tick, 5);
+        assert_eq!(slo.stats().firing, 0);
+        let st = slo.stats();
+        assert_eq!(st.alerts_total, 2);
+        assert_eq!(st.ticks, 5);
+        let alerts = slo.alerts();
+        assert_eq!(alerts.len(), 2);
+        assert_eq!(alerts[0].state, AlertState::Firing);
+        assert_eq!(alerts[1].state, AlertState::Cleared);
+        assert_eq!(alerts[1].now_ns, 5_000);
+    }
+
+    /// A single bad blip must NOT fire: the fast window crosses its
+    /// threshold but the slow window filters it.
+    #[test]
+    fn slow_window_filters_a_single_blip() {
+        let mut p = scripted_policy();
+        p.slow_windows = 3;
+        p.slow_burn = 3.0; // demand sustained burn
+        let slo = SloCollector::new(p);
+        for t in 1..=2u64 {
+            feed(&slo, 20, 0);
+            slo.tick(t);
+        }
+        // One blip: fast = 5 ≥ 2, slow = (10/60)/0.1 = 1.67 < 3.
+        feed(&slo, 10, 10);
+        assert!(slo.tick(3).is_empty(), "blip filtered by the slow window");
+        assert_eq!(slo.stats().firing, 0);
+    }
+
+    #[test]
+    fn latency_objective_burns_on_slow_completions() {
+        let p = SloPolicy {
+            objectives: vec![SloObjective::interactive_p99(100.0)],
+            fast_windows: 1,
+            slow_windows: 1,
+            fast_burn: 1.0,
+            slow_burn: 1.0,
+            capacity: 8,
+            max_alerts: 8,
+        };
+        let slo = SloCollector::new(p);
+        // Batch traffic does not match the interactive selector.
+        slo.completed("t", false, 5_000.0, true);
+        // 9 fast + 1 slow interactive: bad frac 0.1 / budget 0.01 = 10.
+        for _ in 0..9 {
+            slo.completed("t", true, 10.0, true);
+        }
+        slo.completed("t", true, 250.0, true);
+        let alerts = slo.tick(1);
+        assert_eq!(alerts.len(), 1);
+        assert_eq!(alerts[0].kind, SloKind::LatencyP99);
+        assert_eq!(alerts[0].state, AlertState::Firing);
+        // Windowed p99 comes from the merged per-window histograms.
+        let p99 = slo.windowed_p99_ms("interactive-p99", 4).unwrap();
+        assert!(p99 > 100.0, "windowed p99 sees the tail: {p99}");
+    }
+
+    #[test]
+    fn empty_windows_and_empty_policy_are_inert() {
+        let slo = SloCollector::new(SloPolicy::default());
+        assert!(slo.tick(1).is_empty());
+        assert_eq!(slo.burn(), 0.0);
+        let st = slo.stats();
+        assert_eq!(st.objectives, 0);
+        assert_eq!(st.firing, 0);
+        assert_eq!(st.ticks, 1);
+        // An objective with zero traffic never divides by zero.
+        let slo = SloCollector::new(scripted_policy());
+        for t in 1..=5 {
+            assert!(slo.tick(t).is_empty());
+        }
+        assert_eq!(slo.burn(), 0.0);
+    }
+
+    #[test]
+    fn policy_validation_rejects_bad_windows_and_budgets() {
+        assert!(SloPolicy::serving(250.0, 0.99).validate().is_ok());
+        let mut p = SloPolicy::serving(250.0, 0.99);
+        p.fast_windows = 0;
+        assert!(p.validate().is_err());
+        let mut p = SloPolicy::serving(250.0, 0.99);
+        p.slow_windows = 0;
+        assert!(p.validate().is_err());
+        let mut p = SloPolicy::serving(250.0, 0.99);
+        p.capacity = 1;
+        assert!(p.validate().is_err());
+        let mut p = SloPolicy::serving(250.0, 0.99);
+        p.objectives[0].budget = 0.0;
+        assert!(p.validate().is_err());
+    }
+}

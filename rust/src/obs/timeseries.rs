@@ -1,0 +1,162 @@
+//! Fixed-capacity time-series rings on a caller-advanced clock.
+//!
+//! [`TimeSeries<T>`] holds the last N periodic snapshots of anything —
+//! counter deltas, per-window [`LatencyHist`]s, full stat structs —
+//! each stamped with the caller-supplied nanosecond clock at which the
+//! window closed. Nothing in here reads a wall clock: the serving
+//! stack advances time explicitly (`Coordinator::slo_tick`, the
+//! cluster heartbeat clock, scripted test clocks), which is what makes
+//! the SLO burn-rate tests fully deterministic.
+//!
+//! Windowed rates are derived on read: [`TimeSeries::rate_per_sec`]
+//! divides a counter delta by the covered wall span, and
+//! [`TimeSeries::ratio`] forms hit-rate / shed-rate style quotients
+//! over the last N windows. Per-node, per-tenant and per-priority
+//! series are just separate rings — the SLO engine in
+//! [`crate::obs::slo`] keeps one per objective.
+//!
+//! [`LatencyHist`]: crate::obs::hist::LatencyHist
+
+use std::collections::VecDeque;
+
+/// A bounded ring of `(closed_at_ns, snapshot)` pairs, oldest evicted
+/// first. Capacity is fixed at construction; pushing never grows the
+/// ring past it.
+#[derive(Debug, Clone)]
+pub struct TimeSeries<T> {
+    capacity: usize,
+    slots: VecDeque<(u64, T)>,
+}
+
+impl<T> TimeSeries<T> {
+    pub fn new(capacity: usize) -> TimeSeries<T> {
+        let capacity = capacity.max(1);
+        TimeSeries { capacity, slots: VecDeque::with_capacity(capacity) }
+    }
+
+    /// Close a window: append `sample` stamped `now_ns`, evicting the
+    /// oldest window once the ring is full.
+    pub fn push(&mut self, now_ns: u64, sample: T) {
+        if self.slots.len() == self.capacity {
+            self.slots.pop_front();
+        }
+        self.slots.push_back((now_ns, sample));
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn latest(&self) -> Option<&(u64, T)> {
+        self.slots.back()
+    }
+
+    pub fn oldest(&self) -> Option<&(u64, T)> {
+        self.slots.front()
+    }
+
+    /// All retained windows, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &(u64, T)> {
+        self.slots.iter()
+    }
+
+    /// The last `n` windows, oldest first (fewer if the ring holds
+    /// fewer).
+    pub fn window(&self, n: usize) -> impl Iterator<Item = &(u64, T)> {
+        let skip = self.slots.len().saturating_sub(n.max(1));
+        self.slots.iter().skip(skip)
+    }
+
+    /// Sum `f` over the last `n` windows.
+    pub fn windowed_sum(&self, n: usize, f: impl Fn(&T) -> u64) -> u64 {
+        self.window(n).map(|(_, t)| f(t)).sum()
+    }
+
+    /// `num / den` over the last `n` windows (0.0 when the denominator
+    /// is empty) — hit rate, shed rate, error rate.
+    pub fn ratio(&self, n: usize, num: impl Fn(&T) -> u64, den: impl Fn(&T) -> u64) -> f64 {
+        let d = self.windowed_sum(n, den);
+        if d == 0 {
+            return 0.0;
+        }
+        self.windowed_sum(n, num) as f64 / d as f64
+    }
+
+    /// Events per second over the last `n` windows: the summed counter
+    /// divided by the wall span from the window *before* the oldest
+    /// counted one (its close stamp is when the oldest counted window
+    /// opened) to the latest close. 0.0 until two windows exist.
+    pub fn rate_per_sec(&self, n: usize, f: impl Fn(&T) -> u64) -> f64 {
+        if self.slots.len() < 2 {
+            return 0.0;
+        }
+        // Count over the last n windows, but never more than len-1 so
+        // an opening stamp always exists.
+        let n = n.clamp(1, self.slots.len() - 1);
+        let opened = self.slots[self.slots.len() - 1 - n].0;
+        let closed = self.slots[self.slots.len() - 1].0;
+        let span_ns = closed.saturating_sub(opened);
+        if span_ns == 0 {
+            return 0.0;
+        }
+        let events: u64 = self.window(n).map(|(_, t)| f(t)).sum();
+        events as f64 / (span_ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_bounded_and_evicts_oldest() {
+        let mut ts = TimeSeries::new(3);
+        for i in 0..5u64 {
+            ts.push(i * 1_000, i);
+        }
+        assert_eq!(ts.len(), 3);
+        assert_eq!(ts.capacity(), 3);
+        assert_eq!(ts.oldest(), Some(&(2_000, 2)));
+        assert_eq!(ts.latest(), Some(&(4_000, 4)));
+        let kept: Vec<u64> = ts.iter().map(|&(_, v)| v).collect();
+        assert_eq!(kept, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn windowed_rates_use_the_caller_clock() {
+        let mut ts = TimeSeries::new(8);
+        // One window per second, 10 events each.
+        for i in 0..5u64 {
+            ts.push((i + 1) * 1_000_000_000, 10u64);
+        }
+        let qps = ts.rate_per_sec(2, |&c| c);
+        assert!((qps - 10.0).abs() < 1e-9, "2-window rate: {qps}");
+        let qps_all = ts.rate_per_sec(100, |&c| c);
+        assert!((qps_all - 10.0).abs() < 1e-9, "clamped rate: {qps_all}");
+    }
+
+    #[test]
+    fn ratio_and_degenerate_windows() {
+        let mut ts: TimeSeries<(u64, u64)> = TimeSeries::new(4);
+        assert_eq!(ts.rate_per_sec(4, |&(a, _)| a), 0.0, "empty ring");
+        assert_eq!(ts.ratio(4, |&(a, _)| a, |&(_, b)| b), 0.0, "empty den");
+        ts.push(1_000, (3, 10));
+        assert_eq!(ts.rate_per_sec(4, |&(a, _)| a), 0.0, "one window");
+        ts.push(2_000, (1, 10));
+        let r = ts.ratio(1, |&(a, _)| a, |&(_, b)| b);
+        assert!((r - 0.1).abs() < 1e-12);
+        let r2 = ts.ratio(2, |&(a, _)| a, |&(_, b)| b);
+        assert!((r2 - 0.2).abs() < 1e-12);
+        // Zero-capacity request clamps to 1.
+        let z = TimeSeries::<u64>::new(0);
+        assert_eq!(z.capacity(), 1);
+    }
+}

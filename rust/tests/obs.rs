@@ -9,7 +9,14 @@
 //!   trace with exactly one root and no orphaned parent references,
 //!   the serving phases appear under it, and cluster-front-door
 //!   traces keep a single root across the node boundary with the hop
-//!   attributed to the node that served the dispatch.
+//!   attributed to the node that served the dispatch;
+//! * **worker stamps are measured** — the pack/exec/scatter/verify
+//!   span boundaries come from clock reads at the stage transitions,
+//!   so each stage ends exactly where the next begins;
+//! * **sampling thins traces, never metrics** — a 1/N head sampler
+//!   admits a deterministic subset of submits (whole trees, no
+//!   partial traces) while the latency histograms still count every
+//!   completion.
 
 use std::time::{Duration, Instant};
 
@@ -19,7 +26,7 @@ use overlay_jit::coordinator::{
     Admission, Coordinator, CoordinatorConfig, DispatchHandle, Priority, SubmitArg,
 };
 use overlay_jit::obs::{
-    check_traces, chrome_trace, Phase, TraceHandle, TraceSink, CLASS_TAIL,
+    check_traces, chrome_trace, Phase, Sampler, TraceHandle, TraceSink, CLASS_TAIL,
     FRONTEND_NODE,
 };
 use overlay_jit::overlay::OverlaySpec;
@@ -169,6 +176,112 @@ fn enabled_traces_are_rooted_and_orphan_free() {
     let parsed = JsonValue::parse(&doc).unwrap();
     let events = parsed.get("traceEvents").and_then(|v| v.as_array()).unwrap();
     assert_eq!(events.len(), spans.len());
+}
+
+/// Worker-timeline spans carry **measured** sub-stage timestamps: the
+/// pack/exec/scatter/verify boundaries are clock reads taken at the
+/// stage transitions, so within every trace each stage ends exactly
+/// where the next begins and nothing runs backwards.
+#[test]
+fn worker_spans_are_measured_and_stage_boundaries_are_monotone() {
+    let sink = TraceSink::new(2, 4096);
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.trace = Some(TraceHandle::new(sink.clone(), 0));
+    let coord = Coordinator::new(cfg).unwrap();
+
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x0B8);
+    const SUBMITS: usize = 4;
+    for _ in 0..SUBMITS {
+        let b = &BENCHMARKS[0];
+        let args = random_args(&ctx, b.source, 4096, &mut rng);
+        let h = coord
+            .submit(b.source, &args, 4096, Priority::Interactive)
+            .unwrap();
+        resolve(h, b.name);
+    }
+    coord.drain_background();
+
+    let spans = sink.spans();
+    let chk = check_traces(&spans);
+    assert_eq!(chk.traces, SUBMITS);
+    for trace in spans.iter().filter(|s| s.parent == 0).map(|s| s.trace_id) {
+        let stage = |phase: Phase| {
+            spans
+                .iter()
+                .find(|s| s.trace_id == trace && s.phase == phase)
+                .unwrap_or_else(|| panic!("trace {trace} lacks a {} span", phase.name()))
+        };
+        let chain = [
+            stage(Phase::QueueWait),
+            stage(Phase::Pack),
+            stage(Phase::Exec),
+            stage(Phase::Scatter),
+            stage(Phase::Verify),
+        ];
+        for pair in chain.windows(2) {
+            assert_eq!(
+                pair[0].start_us + pair[0].dur_us,
+                pair[1].start_us,
+                "trace {trace}: {} must end exactly where {} starts",
+                pair[0].phase.name(),
+                pair[1].phase.name()
+            );
+        }
+        // the verify marker sits at the measured completion stamp
+        assert_eq!(chain[4].dur_us, 0);
+    }
+    // the stamps are real clock reads, not all-zero placeholders
+    assert!(
+        spans
+            .iter()
+            .any(|s| s.phase == Phase::QueueWait && s.start_us > 0),
+        "measured queue-wait stamps must come from the sink clock"
+    );
+}
+
+/// Head-based sampling: a 1/4 sampler consumes one candidate per
+/// submit (deterministically — candidates 6 and 9 of 1..=12 hash in),
+/// sampled-out submits run untraced, and the latency books still
+/// count every completion.
+#[test]
+fn sampled_sink_drops_spans_but_histograms_keep_every_completion() {
+    let sink = TraceSink::sampled(2, 4096, Sampler::ratio(4));
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.trace = Some(TraceHandle::new(sink.clone(), 0));
+    let coord = Coordinator::new(cfg).unwrap();
+
+    let ctx = host_ctx();
+    let mut rng = XorShiftRng::new(0x0B9);
+    const SUBMITS: usize = 12;
+    for _ in 0..SUBMITS {
+        let b = &BENCHMARKS[0];
+        let args = random_args(&ctx, b.source, 256, &mut rng);
+        let h = coord
+            .submit(b.source, &args, 256, Priority::Interactive)
+            .unwrap();
+        resolve(h, b.name);
+    }
+    coord.drain_background();
+
+    let st = sink.stats();
+    assert_eq!(st.traces + st.sampled_out, SUBMITS as u64, "one candidate per submit");
+    assert_eq!(st.traces, 2, "candidates 6 and 9 hash in at denom 4");
+    assert_eq!(st.sampled_out, 10);
+
+    // the surviving traces are complete trees, not partial records
+    let spans = sink.spans();
+    let chk = check_traces(&spans);
+    assert_eq!(chk.traces, 2);
+    assert_eq!(chk.rooted, 2);
+    assert_eq!(chk.orphans, 0);
+
+    // sampling never thins the metrics plane: every completion is in
+    // the histogram, and the percentile view covers all twelve
+    let stats = coord.stats();
+    assert_eq!(stats.latency_hist.count(), SUBMITS as u64);
+    assert_eq!(stats.latency.count, SUBMITS);
+    assert!(stats.latency.p99_ms >= stats.latency.p50_ms);
 }
 
 /// A cluster front-door trace stays one tree across the node
