@@ -43,6 +43,17 @@
 #                     pins survive sampling, and the exported
 #                     Prometheus page (metrics.prom) re-parses equal
 #                     to the in-process stats. Non-blocking CI job.
+#   make preempt    — graceful-degradation acceptance harness
+#                     (examples/e2e_serve -- preempt): a calibrated
+#                     batch backlog with interactive probes, served
+#                     run-to-completion and again with chunk-boundary
+#                     preemption + SLO-targeted autoscaling; exits
+#                     non-zero unless >= 1 batch run checkpoints at a
+#                     chunk boundary with its continuation completing
+#                     on a sibling, zero jobs are lost or duplicated,
+#                     an SLO-targeted scale-up fires, and the armed
+#                     fleet's interactive p99 clears a target the
+#                     baseline missed 2.5x over. Non-blocking CI job.
 #   make bench      — the paper-figure + serving bench harnesses
 #   make bench-json — the §E11 hot-path data-plane bench; writes
 #                     machine-readable BENCH_hotpath.json at the repo
@@ -54,7 +65,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: check fmt clippy build test soak overload cluster trace slo bench bench-build bench-json doc artifacts
+.PHONY: check fmt clippy build test soak overload cluster trace slo preempt bench bench-build bench-json doc artifacts
 
 check: fmt clippy test bench-build doc
 
@@ -101,6 +112,13 @@ trace:
 # and re-parses it against the in-process serving stats
 slo:
 	$(CARGO) run --release --example e2e_serve -- slo
+
+# the graceful-degradation acceptance harness: calibrated batch
+# contention served run-to-completion vs preemption + SLO-targeted
+# scaling; asserts checkpointed runs, sibling continuations, zero
+# lost/duplicated jobs and an interactive p99 the baseline missed
+preempt:
+	$(CARGO) run --release --example e2e_serve -- preempt
 
 bench:
 	$(CARGO) bench --bench serve_throughput

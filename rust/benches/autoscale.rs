@@ -4,16 +4,23 @@
 //! The workload alternates **bursts**: a wide phase (16384-item
 //! dispatches — chebyshev's full 16-copy demand on the 8×8) followed
 //! by a small phase (512-item dispatches — one copy suffices), over
-//! several cycles. Two identical 2× 8×8 fleets serve the identical
+//! several cycles. Three identical 2× 8×8 fleets serve the identical
 //! stream:
 //!
-//! * `frozen` — today's behavior: every kernel keeps the replication
-//!   factor of its first (resource-aware, overlay-filling) compile,
-//!   so small-phase dispatches drag the full 16-copy configuration;
-//! * `adaptive` — the feedback loop re-replicates at run time: the
-//!   small phase scales down to 1 copy (smaller bitstream, cheaper
-//!   reconfiguration, no idle copies), the wide phase scales back up
-//!   — a kernel-cache **hit** from the second cycle on.
+//! * `frozen` — every kernel keeps the replication factor of its
+//!   first (resource-aware, overlay-filling) compile, so small-phase
+//!   dispatches drag the full 16-copy configuration;
+//! * `demand-band` — the feedback loop re-replicates on the demand
+//!   signal: the small phase scales down to 1 copy, the wide phase
+//!   scales back up — a kernel-cache **hit** from the second cycle
+//!   on, but one 16↔1 flap per phase shift;
+//! * `slo-targeted` — the controller is driven by the interactive
+//!   windowed p99 against a latency target (2× the frozen fleet's
+//!   measured p99) instead of the demand band: scale-ups fire only
+//!   while the objective is missed, and the hysteresis hold blocks
+//!   scale-downs until p99 clears 0.8× target — capacity is held
+//!   while the objective is at risk, at the cost of reacting one
+//!   window late.
 //!
 //! Reported: wall time, Mitems/s, p50/p99 latency, reconfiguration
 //! loads and modeled µs, scale events and rescale cache hits.
@@ -73,17 +80,32 @@ fn main() {
         "rescale hits",
     ]);
 
-    for adaptive in [false, true] {
+    let mut frozen_p99 = 0.0f64;
+    for mode in ["frozen", "demand-band", "slo-targeted"] {
         let mut cfg = CoordinatorConfig::sim_fleet(spec.clone(), 2);
         cfg.verify = false; // throughput measurement, not a correctness run
-        if adaptive {
-            cfg.autoscale = Some(AutoscalePolicy::default());
+        match mode {
+            "demand-band" => cfg.autoscale = Some(AutoscalePolicy::default()),
+            "slo-targeted" => {
+                cfg.autoscale = Some(AutoscalePolicy::default());
+                // arm SLO-targeted mode: an achievable latency target
+                // (2x the frozen fleet's measured p99) drives the
+                // controller instead of the demand band
+                cfg.slo = Some(overlay_jit::obs::SloPolicy::serving(
+                    (frozen_p99 * 2.0).max(0.05),
+                    0.99,
+                ));
+            }
+            _ => {}
         }
+        let slo_armed = cfg.slo.is_some();
         let coord = Coordinator::new(cfg).expect("coordinator");
         let mut rng = XorShiftRng::new(0xB1_D0D);
 
         let t0 = Instant::now();
         let mut lat: Vec<f64> = Vec::new();
+        let mut tick = 0u64;
+        let mut nsub = 0u64;
         for _cycle in 0..CYCLES {
             for items in [WIDE_ITEMS, SMALL_ITEMS] {
                 for _ in 0..PER_PHASE {
@@ -94,6 +116,13 @@ fn main() {
                         .wait()
                         .expect("serve");
                     lat.push((r.queue_wait + r.event.wall).as_secs_f64() * 1e3);
+                    nsub += 1;
+                    // close an SLO window every 8 dispatches so the
+                    // windowed-p99 control signal tracks the phase
+                    if slo_armed && nsub % 8 == 0 {
+                        tick += 1;
+                        let _ = coord.slo_tick(tick * 1_000_000_000);
+                    }
                 }
                 coord.drain_background();
             }
@@ -101,13 +130,16 @@ fn main() {
         let wall = t0.elapsed().as_secs_f64();
 
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if mode == "frozen" {
+            frozen_p99 = percentile(&lat, 0.99);
+        }
         let stats = coord.stats();
         let (events, hits) = stats
             .autoscale
             .map(|a| (a.applied(), a.rescale_cache_hits))
             .unwrap_or((0, 0));
         table.row(vec![
-            if adaptive { "adaptive".to_string() } else { "frozen".to_string() },
+            mode.to_string(),
             format!("{wall:.2}"),
             format!("{:.2}", stats.total_items as f64 / wall / 1e6),
             format!("{:.3}", percentile(&lat, 0.50)),
@@ -121,9 +153,12 @@ fn main() {
 
     println!("{}", table.render());
     println!(
-        "adaptive scales chebyshev 16 -> 1 for each small burst (1-copy\n\
+        "demand-band scales chebyshev 16 -> 1 for each small burst (1-copy\n\
          bitstream: cheaper reconfigurations, no idle copies) and back to 16\n\
          for each wide burst; from the second cycle every rescale is a\n\
-         kernel-cache hit, so the adaptation itself costs no JIT."
+         kernel-cache hit, so the adaptation itself costs no JIT.\n\
+         slo-targeted moves only when the windowed p99 crosses its target\n\
+         and holds capacity until p99 clears the 0.8x hysteresis band —\n\
+         fewer flaps than demand-band, one window of reaction lag."
     );
 }

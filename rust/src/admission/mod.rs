@@ -344,6 +344,13 @@ impl AdmissionController {
         f64::from_bits(self.pressure_bits.load(Ordering::Relaxed))
     }
 
+    /// Whether the gate is at or past its batch-shedding threshold —
+    /// the same line that sheds batch submits also makes in-flight
+    /// batch runs preemption-eligible.
+    pub fn overloaded(&self) -> bool {
+        self.pressure() >= self.cfg.shed_pressure
+    }
+
     /// Snapshot the live counters.
     pub fn stats(&self) -> AdmissionStats {
         AdmissionStats {

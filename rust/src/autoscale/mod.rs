@@ -198,6 +198,15 @@ pub struct Autoscaler {
     /// its anti-flap floor machinery) fires even when raw queue
     /// depths look shallow.
     slo_burn_bits: AtomicU64,
+    /// Fleet-wide interactive windowed p99 (`f64` bits), pushed by
+    /// [`crate::coordinator::Coordinator::slo_tick`] from the SLO
+    /// engine. Injected into every evaluation snapshot so the policy
+    /// runs in SLO-targeted mode (see
+    /// [`AutoscalePolicy::slo_clear_ratio`]).
+    slo_p99_bits: AtomicU64,
+    /// The declared latency-SLO target (`f64` bits); zero disarms
+    /// SLO-targeted mode and the demand bands rule as before.
+    slo_target_bits: AtomicU64,
 }
 
 impl std::fmt::Debug for Autoscaler {
@@ -222,6 +231,8 @@ impl Autoscaler {
             state: Mutex::new(HashMap::new()),
             log,
             slo_burn_bits: AtomicU64::new(0.0f64.to_bits()),
+            slo_p99_bits: AtomicU64::new(0.0f64.to_bits()),
+            slo_target_bits: AtomicU64::new(0.0f64.to_bits()),
         }
     }
 
@@ -236,6 +247,28 @@ impl Autoscaler {
     /// The last SLO burn rate pushed via [`Autoscaler::set_slo_burn`].
     pub fn slo_burn(&self) -> f64 {
         f64::from_bits(self.slo_burn_bits.load(Ordering::Relaxed))
+    }
+
+    /// Update the latency control signal: the fleet-wide interactive
+    /// windowed p99 and the declared SLO target, both in milliseconds.
+    /// A non-finite or non-positive target disarms SLO-targeted mode
+    /// (the policy falls back to demand bands); a non-finite p99 is
+    /// treated as 0.0 (healthy) so a pathological histogram can never
+    /// wedge the fleet into permanent scale-up.
+    pub fn set_slo_latency(&self, p99_ms: f64, target_ms: f64) {
+        let p99 = if p99_ms.is_finite() { p99_ms.max(0.0) } else { 0.0 };
+        let target = if target_ms.is_finite() { target_ms.max(0.0) } else { 0.0 };
+        self.slo_p99_bits.store(p99.to_bits(), Ordering::Relaxed);
+        self.slo_target_bits.store(target.to_bits(), Ordering::Relaxed);
+    }
+
+    /// The last latency control signal pushed via
+    /// [`Autoscaler::set_slo_latency`]: `(p99_ms, target_ms)`.
+    pub fn slo_latency(&self) -> (f64, f64) {
+        (
+            f64::from_bits(self.slo_p99_bits.load(Ordering::Relaxed)),
+            f64::from_bits(self.slo_target_bits.load(Ordering::Relaxed)),
+        )
     }
 
     pub fn policy(&self) -> &AutoscalePolicy {
@@ -293,6 +326,12 @@ impl Autoscaler {
             return None;
         }
         let mut snapshot = st.signal.snapshot();
+        // arm SLO-targeted mode: the policy sees the fleet-wide
+        // windowed p99 vs target next to the per-kernel load windows
+        snapshot.slo_p99_ms =
+            f64::from_bits(self.slo_p99_bits.load(Ordering::Relaxed));
+        snapshot.slo_target_ms =
+            f64::from_bits(self.slo_target_bits.load(Ordering::Relaxed));
         let burn = f64::from_bits(self.slo_burn_bits.load(Ordering::Relaxed));
         if burn >= 1.0 && snapshot.mean_queue < self.policy.queue_hi {
             // burning error budget == latency objective failing: act

@@ -58,6 +58,25 @@
 //! below sweep the fixed-point inequalities. When the workload *does*
 //! shift phase, the regime tag no longer matches, floors clear, and
 //! the policy converges on the new phase by the same argument.
+//!
+//! # SLO-targeted mode
+//!
+//! When the snapshot carries a latency SLO (`slo_target_ms > 0` —
+//! injected by the autoscaler from the coordinator's SLO engine), the
+//! **demand band is no longer the scale-up trigger**: the policy
+//! scales up while the fleet-wide interactive windowed p99 is at or
+//! above the target (`slo_p99_ms ≥ slo_target_ms`), taking at least a
+//! doubling per event like queue-driven ups, and **holds** — refuses
+//! to scale down — until the p99 clears a hysteresis band *below* the
+//! target (`slo_p99_ms ≤ slo_clear_ratio × slo_target_ms`). The gap
+//! between the up trigger (at the target) and the down gate (at
+//! `slo_clear_ratio` of it) is what prevents oscillation: a factor
+//! that just cleared the SLO cannot immediately tempt a scale-down,
+//! because clearing the up trigger does not clear the hold band. The
+//! queue-up trigger stays armed in SLO mode (deep queues predict a
+//! p99 miss one window later; reacting early is strictly better), and
+//! the cooldown ≥ window rule means every SLO evaluation sees only
+//! post-event windows — the same proof structure as the demand bands.
 
 use anyhow::{bail, Result};
 
@@ -123,6 +142,11 @@ pub struct AutoscalePolicy {
     /// Fractional demand shift that counts as a regime change and
     /// clears queue floors (e.g. 0.5 = mean demand moved ±50%).
     pub regime_band: f64,
+    /// SLO-mode hysteresis: scale-downs are held until the windowed
+    /// p99 drops to this fraction of the SLO target (must lie in
+    /// (0, 1)). Only consulted when the snapshot carries an SLO
+    /// signal (`slo_target_ms > 0`).
+    pub slo_clear_ratio: f64,
     /// Scale events retained verbatim in the audit log; counters keep
     /// counting after the buffer fills (mirrors
     /// [`crate::fleet::RoutingPolicy::max_records`]).
@@ -138,6 +162,7 @@ impl Default for AutoscalePolicy {
             down_ratio: 0.45,
             queue_hi: 4.0,
             regime_band: 0.5,
+            slo_clear_ratio: 0.8,
             max_events: 1024,
         }
     }
@@ -175,6 +200,13 @@ impl AutoscalePolicy {
         if self.regime_band <= 0.0 {
             bail!("regime_band must be positive, got {}", self.regime_band);
         }
+        if !(self.slo_clear_ratio > 0.0 && self.slo_clear_ratio < 1.0) {
+            bail!(
+                "slo_clear_ratio must lie in (0, 1) so the SLO hold band \
+                 sits strictly below the up trigger, got {}",
+                self.slo_clear_ratio
+            );
+        }
         if self.max_events == 0 {
             bail!("max_events must be at least 1");
         }
@@ -204,25 +236,31 @@ impl AutoscalePolicy {
             }
         }
 
-        let demand_up = s.mean_demand >= factor as f64 * self.up_ratio;
+        // SLO mode: a declared latency target replaces the demand band
+        // as the scale-up trigger (module docs, "SLO-targeted mode")
+        let slo_mode = s.slo_target_ms > 0.0;
+        let slo_up = slo_mode && s.slo_p99_ms >= s.slo_target_ms;
+        let slo_hold = slo_mode && s.slo_p99_ms > self.slo_clear_ratio * s.slo_target_ms;
+        let demand_up = !slo_mode && s.mean_demand >= factor as f64 * self.up_ratio;
         let queue_up = s.mean_queue >= self.queue_hi;
-        if (demand_up || queue_up) && factor < ceiling {
+        if (demand_up || queue_up || slo_up) && factor < ceiling {
             let mut target = s.max_demand.max(1).min(ceiling);
-            if queue_up {
-                // queue-bound: take at least a doubling toward the
-                // ceiling even when per-dispatch demand looks small
+            if queue_up || slo_up {
+                // queue-bound or SLO-missing: take at least a doubling
+                // toward the ceiling even when per-dispatch demand
+                // looks small
                 target = target.max((factor * 2).min(ceiling));
             }
             if target > factor {
                 return Some(ScaleDecision {
                     target,
                     direction: ScaleDirection::Up,
-                    queue_triggered: queue_up && !demand_up,
+                    queue_triggered: (queue_up || slo_up) && !demand_up,
                 });
             }
         }
 
-        if s.mean_demand <= factor as f64 * self.down_ratio {
+        if !slo_hold && s.mean_demand <= factor as f64 * self.down_ratio {
             let mut target = s.max_demand.max(1);
             if let Some(f) = *floor {
                 target = target.max(f.min_factor);
@@ -256,6 +294,16 @@ mod tests {
             submits: 8,
             completions: 8,
             rejects: 0,
+            slo_p99_ms: 0.0,
+            slo_target_ms: 0.0,
+        }
+    }
+
+    fn slo_snap(p99_ms: f64, target_ms: f64, mean_queue: f64) -> SignalSnapshot {
+        SignalSnapshot {
+            slo_p99_ms: p99_ms,
+            slo_target_ms: target_ms,
+            ..snap(1.0, 1, mean_queue)
         }
     }
 
@@ -268,6 +316,65 @@ mod tests {
         assert!(inverted.validate().is_err());
         let short = AutoscalePolicy { cooldown: 2, window: 8, ..Default::default() };
         assert!(short.validate().is_err());
+        let hold_at_trigger =
+            AutoscalePolicy { slo_clear_ratio: 1.0, ..Default::default() };
+        assert!(hold_at_trigger.validate().is_err());
+        let hold_zero = AutoscalePolicy { slo_clear_ratio: 0.0, ..Default::default() };
+        assert!(hold_zero.validate().is_err());
+    }
+
+    #[test]
+    fn slo_miss_scales_up_at_least_doubling_and_demand_band_is_disarmed() {
+        let p = AutoscalePolicy::default();
+        let mut floor = None;
+        // p99 at the target: scale up even though demand is tiny
+        let d = p.evaluate(&slo_snap(600.0, 500.0, 0.0), 2, 16, &mut floor).unwrap();
+        assert_eq!(d.direction, ScaleDirection::Up);
+        assert_eq!(d.target, 4, "SLO-triggered up doubles");
+        assert!(d.queue_triggered, "SLO ups record a floor like queue ups");
+        // in SLO mode the demand band no longer triggers on its own:
+        // huge demand with a healthy p99 proposes nothing upward
+        let mut s = slo_snap(100.0, 500.0, 0.0);
+        s.mean_demand = 40.0;
+        s.max_demand = 40;
+        assert!(p.evaluate(&s, 2, 16, &mut floor).is_none());
+        // ...but deep queues still do (they predict the next p99 miss)
+        let q = p.evaluate(&slo_snap(100.0, 500.0, 6.0), 2, 16, &mut floor).unwrap();
+        assert_eq!(q.direction, ScaleDirection::Up);
+        assert_eq!(q.target, 4);
+    }
+
+    #[test]
+    fn slo_hold_band_blocks_scale_down_until_p99_clears_it() {
+        let p = AutoscalePolicy::default(); // slo_clear_ratio 0.8
+        let mut floor = None;
+        // p99 under the target but above 0.8×target: down is held even
+        // though the demand band says over-provisioned
+        assert!(
+            p.evaluate(&slo_snap(450.0, 500.0, 0.0), 8, 16, &mut floor).is_none(),
+            "inside the hold band nothing may scale down"
+        );
+        // p99 well inside the clear band: the demand-band down fires
+        let d = p.evaluate(&slo_snap(100.0, 500.0, 0.0), 8, 16, &mut floor).unwrap();
+        assert_eq!(d.direction, ScaleDirection::Down);
+        assert_eq!(d.target, 1);
+    }
+
+    #[test]
+    fn slo_up_trigger_and_hold_band_never_overlap() {
+        // the SLO analogue of the fixed-point sweep: once the p99
+        // clears the up trigger, a down is only possible after it also
+        // clears the hold band — so no single p99 value can fire both
+        let p = AutoscalePolicy::default();
+        for p99 in [0.0, 100.0, 399.0, 400.0, 450.0, 499.0, 500.0, 900.0] {
+            let mut floor = None;
+            let verdict = p.evaluate(&slo_snap(p99, 500.0, 0.0), 8, 16, &mut floor);
+            if let Some(d) = verdict {
+                let both = d.direction == ScaleDirection::Up && p99 < 500.0
+                    || d.direction == ScaleDirection::Down && p99 > 0.8 * 500.0;
+                assert!(!both, "p99 {p99} produced a band-violating {d:?}");
+            }
+        }
     }
 
     #[test]

@@ -55,6 +55,14 @@ pub struct SignalSnapshot {
     pub completions: u64,
     /// Lifetime admission rejections fed back into this signal.
     pub rejects: u64,
+    /// Fleet-wide interactive windowed p99 at evaluation time,
+    /// milliseconds (0.0 when no SLO engine feeds the autoscaler —
+    /// the signal plane itself never populates these; the
+    /// [`crate::autoscale::Autoscaler`] injects them at evaluation).
+    pub slo_p99_ms: f64,
+    /// The declared latency-SLO target, milliseconds. A zero target
+    /// means "no SLO signal": the policy falls back to demand bands.
+    pub slo_target_ms: f64,
 }
 
 impl LoadSignal {
@@ -122,6 +130,8 @@ impl LoadSignal {
             submits: self.submits,
             completions: self.completions,
             rejects: self.rejects,
+            slo_p99_ms: 0.0,
+            slo_target_ms: 0.0,
         }
     }
 }

@@ -200,8 +200,19 @@ impl KernelCache {
         let mut root = std::collections::BTreeMap::new();
         root.insert("version".to_string(), JsonValue::Number(2.0));
         root.insert("entries".to_string(), JsonValue::Array(entries));
-        std::fs::write(path, JsonValue::Object(root).render())
-            .with_context(|| format!("writing cache snapshot {}", path.display()))?;
+        // Atomic replace: write a sibling temp file, then rename over
+        // the target. A crash mid-write leaves the previous snapshot
+        // intact (plus a harmless `.tmp` sibling the next load cleans
+        // up) instead of destroying the warm-start artifact.
+        let tmp = snapshot_tmp_path(path);
+        std::fs::write(&tmp, JsonValue::Object(root).render())
+            .with_context(|| format!("writing cache snapshot temp {}", tmp.display()))?;
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e).with_context(|| {
+                format!("installing cache snapshot {}", path.display())
+            });
+        }
         Ok(written)
     }
 
@@ -229,6 +240,17 @@ impl KernelCache {
     /// are actually resident afterwards. Restored entries count
     /// neither hits nor misses.
     pub fn load_snapshot(&mut self, path: &Path, spec: u64, options: &CompileOptions) -> usize {
+        // a leftover temp sibling is the residue of a crashed
+        // save_snapshot: never loaded (it may be truncated), and
+        // removed so it cannot accumulate
+        let tmp = snapshot_tmp_path(path);
+        if tmp.exists() {
+            eprintln!(
+                "[kernel-cache] removing leftover snapshot temp {} (crashed write)",
+                tmp.display()
+            );
+            let _ = std::fs::remove_file(&tmp);
+        }
         let parsed = match parse_snapshot(path, spec, options) {
             Ok(entries) => entries,
             Err(e) => {
@@ -249,6 +271,16 @@ impl KernelCache {
         }
         loaded
     }
+}
+
+/// The sibling temp path [`KernelCache::save_snapshot`] stages its
+/// write through before the atomic rename: the target path with
+/// `.tmp` appended to its extension, in the same directory (rename
+/// across filesystems is not atomic).
+fn snapshot_tmp_path(path: &Path) -> std::path::PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    std::path::PathBuf::from(os)
 }
 
 /// Strict snapshot decode: read, parse, filter to `(spec, options)`
@@ -818,6 +850,41 @@ mod tests {
         let mut other = KernelCache::new(8);
         assert_eq!(other.load_snapshot(&path, 0xdead, &opts), 0);
         assert!(other.is_empty());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn snapshot_write_is_atomic_and_leftover_temp_is_cleaned_on_load() {
+        let spec = OverlaySpec::new(4, 4, FuType::Dsp2);
+        let opts = CompileOptions::default();
+        let k = CacheKey::new("src", &spec, &opts);
+        let mut cache = KernelCache::new(4);
+        cache.insert(k, compiled());
+        let path = std::env::temp_dir().join(format!(
+            "overlay-jit-snapshot-atomic-test-{}.json",
+            std::process::id()
+        ));
+        let tmp = snapshot_tmp_path(&path);
+
+        // a completed save leaves no temp sibling behind
+        cache.save_snapshot(&path).unwrap();
+        assert!(path.exists());
+        assert!(!tmp.exists(), "save must rename the temp into place");
+        let good = std::fs::read_to_string(&path).unwrap();
+
+        // simulate a crash mid-write: a truncated temp next to a good
+        // snapshot. The load must ignore the temp (use the good file),
+        // and clean the residue up.
+        std::fs::write(&tmp, &good[..good.len() / 2]).unwrap();
+        let mut restored = KernelCache::new(4);
+        assert_eq!(restored.load_snapshot(&path, spec.fingerprint(), &opts), 1);
+        assert!(!tmp.exists(), "leftover temp must be removed on load");
+
+        // overwriting an existing snapshot goes through the same
+        // temp+rename path and the result parses clean
+        cache.save_snapshot(&path).unwrap();
+        assert!(!tmp.exists());
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), good);
         let _ = std::fs::remove_file(&path);
     }
 

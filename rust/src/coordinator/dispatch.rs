@@ -23,6 +23,20 @@
 //! these). Outputs are scattered into each job's own buffers and
 //! verified per job.
 //!
+//! Batch-class runs on the cycle-sim backend are **preemptible at
+//! chunk boundaries**: the fused invocation executes one job's chunk
+//! at a time ([`crate::sim::execute_slice_into`]) and consults a
+//! per-partition preemption flag between chunks. When the coordinator
+//! raises it — an interactive job queued on the partition while the
+//! SLO error budget burns, or admission pressure reaches the shed
+//! threshold — the run checkpoints at the boundary: completed chunks
+//! scatter and verify normally, the un-run remainder requeues as a
+//! typed `Preempted` continuation on the same or least-loaded sibling
+//! partition, and the yielded slot goes to the interactive lane the
+//! worker drains first. Interactive runs are never preemptible, a
+//! per-job budget ([`MAX_PREEMPTIONS`]) caps livelock, and slicing is
+//! bit-exact vs an unpreempted run by construction.
+//!
 //! Serving counters are **sharded per worker** ([`LogShard`]: plain
 //! atomics plus a worker-private log-bucketed
 //! [`crate::obs::LatencyHist`]) and merged only when statistics are
@@ -39,7 +53,7 @@
 //! scatter/verify completion; the modeled timing is always per job.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -51,11 +65,12 @@ use crate::arena::{DispatchScratch, ScratchPool};
 use crate::autoscale::Autoscaler;
 use crate::fleet::Priority;
 use crate::obs::{
-    JobTrace, LatencyHist, Phase, SloProbe, CLASS_FAULT, CLASS_QUARANTINE, CLASS_TAIL,
-    NO_WORKER,
+    JobTrace, LatencyHist, Phase, SloProbe, CLASS_FAULT, CLASS_PREEMPT, CLASS_QUARANTINE,
+    CLASS_TAIL, NO_WORKER,
 };
 use crate::runtime_ocl::{ArgSnapshot, Backend, Buffer, Device, Event, Kernel};
 use crate::sim;
+use crate::util::BoundedLog;
 
 use super::cache::CacheKey;
 use super::scheduler::SlotScheduler;
@@ -79,6 +94,11 @@ pub enum FailReason {
     /// The kernel itself failed to execute (unset arguments, backend
     /// error) — retrying elsewhere would not help.
     ExecFailed,
+    /// The dispatch was preempted at a chunk boundary to yield the
+    /// partition to interactive work, and its continuation could not
+    /// be requeued (every queue was already closed). Only reachable
+    /// at shutdown; a live fleet always re-places continuations.
+    Preempted,
 }
 
 impl FailReason {
@@ -90,6 +110,7 @@ impl FailReason {
             FailReason::DeadlineRejected => "deadline_rejected",
             FailReason::VerifyCorrupted => "verify_corrupted",
             FailReason::ExecFailed => "exec_failed",
+            FailReason::Preempted => "preempted",
         }
     }
 }
@@ -283,6 +304,14 @@ pub(crate) struct Job {
     pub seq: u64,
     /// Times this job has been requeued by the recovery plane.
     pub attempts: u32,
+    /// Times this job has been preempted at a chunk boundary and
+    /// requeued as a continuation. Budgeted separately from
+    /// `attempts`: preemption is deliberate policy, not a fault — it
+    /// earns no quarantine strike and no backoff — but the budget is
+    /// capped the same way ([`MAX_PREEMPTIONS`]) so a batch job under
+    /// sustained interactive pressure cannot be bounced forever; once
+    /// exhausted it becomes non-preemptible and runs to completion.
+    pub preemptions: u32,
     /// The fault that last struck this job, if any — a completion
     /// after a strike counts as a recovery.
     pub last_fault: Option<FaultKind>,
@@ -300,11 +329,52 @@ pub(crate) struct Job {
     pub slo: Option<SloProbe>,
 }
 
+/// Maximum chunk-boundary preemptions per dispatch before it turns
+/// non-preemptible and runs to completion wherever it sits — the
+/// anti-livelock budget, attempt-capped like fault recovery
+/// ([`crate::coordinator::MAX_DISPATCH_RETRIES`]) but accounted
+/// separately: a preempted job is healthy, so its fault-retry budget
+/// stays untouched.
+pub const MAX_PREEMPTIONS: u32 = 3;
+
+/// Retained [`ContinuationRecord`]s before the audit log starts
+/// counting instead of storing.
+pub(crate) const MAX_CONTINUATION_RECORDS: usize = 1024;
+
+/// One typed `Preempted` continuation: a batch job checkpointed at a
+/// chunk boundary and re-placed so an interactive arrival could take
+/// the partition. The preemption counters in
+/// [`crate::metrics::ServingStats`] are defined to agree with these
+/// records (`preempted_continuations` counts every record ever
+/// created, stored or dropped past the log bound).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ContinuationRecord {
+    /// Coordinator-wide dispatch sequence number of the preempted job.
+    pub seq: u64,
+    /// Partition that yielded the job at the chunk boundary.
+    pub from: usize,
+    /// Partition the continuation was requeued onto (the same or the
+    /// least-loaded sibling of the same spec).
+    pub to: usize,
+    /// The job's preemption count after this bounce (1-based).
+    pub preemptions: u32,
+}
+
 /// The recovery half of the fault plane: shared by every worker, it
 /// re-places a struck job onto the least-loaded sibling partition of
 /// the same spec (bounded retries, short exponential backoff) and
 /// fails the handle with a typed [`DispatchError`] only when retries
 /// run out or no partition remains.
+///
+/// The same machinery carries **preemption continuations**: a batch
+/// job checkpointed at a chunk boundary is requeued through
+/// [`RecoveryPlane::requeue_preempted`] — same sibling pick, but no
+/// attempt bump, no quarantine strike and no backoff, because a
+/// preempted job is healthy work the coordinator *chose* to move.
+/// The per-partition preemption flags live here too: the coordinator
+/// raises a partition's flag when an interactive job lands on it
+/// under SLO burn or shed-level pressure, and that partition's worker
+/// consumes it at the next chunk boundary.
 pub(crate) struct RecoveryPlane {
     pub(crate) faults: Option<Arc<FaultPlan>>,
     pub(crate) max_retries: u32,
@@ -314,6 +384,17 @@ pub(crate) struct RecoveryPlane {
     queues: Mutex<Vec<Arc<LaneQueue<Box<Job>>>>>,
     /// Total recovery requeues performed.
     pub(crate) retried: AtomicU64,
+    /// Per-partition preemption flags (raise-side; each worker holds
+    /// its own `Arc` for the boundary checks). Registered with the
+    /// queues.
+    preempt_flags: Mutex<Vec<Arc<AtomicBool>>>,
+    /// Runs interrupted at a chunk boundary (≥ 1 job handed back).
+    preempted_runs: AtomicU64,
+    /// Continuations created (== every `ContinuationRecord`, stored
+    /// or dropped past the log bound).
+    preempted_requeues: AtomicU64,
+    /// Bounded keep-first audit log of the continuations.
+    continuations: Mutex<BoundedLog<ContinuationRecord>>,
 }
 
 impl RecoveryPlane {
@@ -328,6 +409,10 @@ impl RecoveryPlane {
             scheduler,
             queues: Mutex::new(Vec::new()),
             retried: AtomicU64::new(0),
+            preempt_flags: Mutex::new(Vec::new()),
+            preempted_runs: AtomicU64::new(0),
+            preempted_requeues: AtomicU64::new(0),
+            continuations: Mutex::new(BoundedLog::new(MAX_CONTINUATION_RECORDS)),
         }
     }
 
@@ -337,8 +422,43 @@ impl RecoveryPlane {
         *self.queues.lock().unwrap() = queues;
     }
 
+    /// Late-bind the per-partition preemption flags (created with the
+    /// queues; each worker also holds its own flag directly).
+    pub(crate) fn register_preempt_flags(&self, flags: Vec<Arc<AtomicBool>>) {
+        *self.preempt_flags.lock().unwrap() = flags;
+    }
+
+    /// Raise partition `partition`'s preemption flag: its worker
+    /// checkpoints the in-flight batch run at the next chunk boundary
+    /// and yields the slot to the interactive lane. Idempotent; a
+    /// no-op for unknown partitions or before the flags register.
+    pub(crate) fn raise_preempt(&self, partition: usize) {
+        if let Some(f) = self.preempt_flags.lock().unwrap().get(partition) {
+            f.store(true, Ordering::SeqCst);
+        }
+    }
+
     pub(crate) fn retried_count(&self) -> u64 {
         self.retried.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn preempted_run_count(&self) -> u64 {
+        self.preempted_runs.load(Ordering::Relaxed)
+    }
+
+    pub(crate) fn note_preempted_run(&self) {
+        self.preempted_runs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn preempted_requeue_count(&self) -> u64 {
+        self.preempted_requeues.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the retained continuation records plus the count
+    /// dropped past the bound.
+    pub(crate) fn continuation_records(&self) -> (Vec<ContinuationRecord>, u64) {
+        let log = self.continuations.lock().unwrap();
+        (log.items().to_vec(), log.dropped())
     }
 
     fn fail_reason_for(kind: FaultKind) -> FailReason {
@@ -424,6 +544,93 @@ impl RecoveryPlane {
                     decision.partition
                 ),
             )));
+        }
+    }
+
+    /// Requeue a batch job preempted at a chunk boundary as a typed
+    /// continuation on the same or least-loaded sibling partition.
+    ///
+    /// Deliberately **not** [`RecoveryPlane::requeue`]: the job is
+    /// healthy, so there is no attempt bump (its fault-retry budget
+    /// survives preemption), no quarantine strike against the yielding
+    /// partition, and no backoff sleep — the continuation should be
+    /// runnable the moment the interactive lane drains. The caller
+    /// guarantees `job.preemptions < MAX_PREEMPTIONS` (the worker
+    /// never preempts a budget-exhausted job) and has already released
+    /// the job's accounting on `from`.
+    pub(crate) fn requeue_preempted(&self, mut job: Box<Job>, from: usize) {
+        job.preemptions += 1;
+        if let Some(t) = &job.trace {
+            let now = t.now();
+            t.span(
+                Phase::Preempt,
+                "chunk_boundary",
+                NO_WORKER,
+                now,
+                0,
+                job.preemptions as u64,
+                from as u64,
+            );
+            t.pin(CLASS_PREEMPT, "chunk_boundary", job.preemptions as u64);
+        }
+        let decision = self.scheduler.lock().unwrap().requeue_sibling(
+            job.spec_fp,
+            job.key,
+            job.config_cost,
+            job.priority,
+            job.deadline_nanos,
+            from,
+        );
+        // requeue_sibling falls back to `from` itself on a
+        // single-partition spec, so None means the spec lost every
+        // partition — nowhere to resume.
+        let decision = match decision {
+            Some(d) => d,
+            None => {
+                job.handle.fulfill(Err(DispatchError::new(
+                    FailReason::Preempted,
+                    format!(
+                        "no partition left to resume the continuation preempted on partition {from}"
+                    ),
+                )));
+                return;
+            }
+        };
+        job.partition = decision.partition;
+        job.config_seconds = decision.config_seconds;
+        let record = ContinuationRecord {
+            seq: job.seq,
+            from,
+            to: decision.partition,
+            preemptions: job.preemptions,
+        };
+        let priority = job.priority;
+        let deadline = job.deadline_nanos;
+        let queue = {
+            let queues = self.queues.lock().unwrap();
+            queues.get(decision.partition).cloned()
+        };
+        let pushed = match queue {
+            Some(q) => q.push(job, priority),
+            None => Err(job), // queues not registered: treat as closed
+        };
+        match pushed {
+            Ok(()) => {
+                self.preempted_requeues.fetch_add(1, Ordering::Relaxed);
+                self.continuations.lock().unwrap().push(record);
+            }
+            Err(job) => {
+                // only reachable at shutdown (a closed lane): the
+                // continuation fails typed rather than hanging
+                self.scheduler.lock().unwrap().cancel(&decision, deadline);
+                job.handle.fulfill(Err(DispatchError::new(
+                    FailReason::Preempted,
+                    format!(
+                        "partition {} closed before the preempted continuation could resume",
+                        decision.partition
+                    ),
+                )));
+            }
         }
     }
 }
@@ -773,6 +980,7 @@ pub(crate) fn spawn_worker(
     fusion_window: Duration,
     autoscaler: Option<Arc<Autoscaler>>,
     recovery: Arc<RecoveryPlane>,
+    preempt_flag: Option<Arc<AtomicBool>>,
     start: Instant,
 ) -> Worker {
     let worker_queue = queue.clone();
@@ -792,6 +1000,7 @@ pub(crate) fn spawn_worker(
                 fusion_window,
                 autoscaler,
                 recovery,
+                preempt_flag,
             )
         })
         .expect("spawning coordinator worker thread");
@@ -810,6 +1019,7 @@ fn worker_loop(
     fusion_window: Duration,
     autoscaler: Option<Arc<Autoscaler>>,
     recovery: Arc<RecoveryPlane>,
+    preempt_flag: Option<Arc<AtomicBool>>,
 ) {
     while let Some(batch) = queue.drain() {
         let batch_size = batch.len();
@@ -910,15 +1120,48 @@ fn worker_loop(
                     continue;
                 }
             }
+            // interactive runs are never preemptible: the flag is only
+            // consulted while a batch-class run holds the partition
+            let boundary_flag = if run[0].priority == Priority::Batch {
+                preempt_flag.as_deref()
+            } else {
+                None
+            };
             let mut scratch = pool.checkout();
-            let results = serve_run(&device, &run, run_batch_size, verify, &mut scratch);
+            let outcomes =
+                serve_run(&device, &run, run_batch_size, verify, &mut scratch, boundary_flag);
             pool.checkin(scratch);
-            let live = results.iter().filter(|r| r.is_ok()).count();
+            let live = outcomes
+                .iter()
+                .filter(|o| matches!(o, RunOutcome::Done(Ok(_))))
+                .count();
             if live >= 2 {
                 log.fused_batches.fetch_add(1, Ordering::Relaxed);
             }
-            let any_ok = results.iter().any(|r| r.is_ok());
-            for (job, result) in run.into_iter().zip(results) {
+            let any_ok = live > 0;
+            if outcomes.iter().any(|o| matches!(o, RunOutcome::Preempted)) {
+                recovery.note_preempted_run();
+            }
+            for (job, outcome) in run.into_iter().zip(outcomes) {
+                let result = match outcome {
+                    RunOutcome::Done(result) => result,
+                    RunOutcome::Preempted => {
+                        // checkpointed at the chunk boundary: this
+                        // job's slice never ran here, so release the
+                        // partition's accounting and hand the job to
+                        // the recovery plane as a typed continuation.
+                        // The interactive arrival that raised the flag
+                        // rides this worker's interactive lane, which
+                        // the next drain serves first — the yield is
+                        // the requeue itself.
+                        scheduler
+                            .lock()
+                            .unwrap()
+                            .complete_with_deadline(partition, 0.0, job.deadline_nanos);
+                        recovery.requeue_preempted(job, partition);
+                        continue;
+                    }
+                };
                 let busy = match &result {
                     Ok(r) => r.event.modeled.seconds + r.event.config_seconds,
                     Err(_) => 0.0,
@@ -1083,6 +1326,18 @@ fn group_runs(batch: Vec<Box<Job>>) -> Vec<Vec<Box<Job>>> {
     runs
 }
 
+/// Per-job outcome of [`serve_run`], index-aligned with the run.
+pub(crate) enum RunOutcome {
+    /// The job's slice executed (or failed); the worker completes it
+    /// on this partition as before.
+    Done(Result<DispatchResult>),
+    /// The run was checkpointed at a chunk boundary before this job's
+    /// slice ran: nothing of it executed here, and the worker must
+    /// requeue it as a typed continuation
+    /// ([`RecoveryPlane::requeue_preempted`]).
+    Preempted,
+}
+
 /// Execute one fusion run (1..N same-kernel jobs) on this worker's
 /// device in a single backend invocation and assemble the per-job
 /// completion reports (index-aligned with `run`). Every job packs
@@ -1090,13 +1345,30 @@ fn group_runs(batch: Vec<Box<Job>>) -> Vec<Vec<Box<Job>>> {
 /// and reads its outputs back from the shared output arena at the
 /// same offset — the fused batch is concatenated and split without
 /// any intermediate stream copies.
+///
+/// With `preempt_flag` armed (batch-class runs on a preemption-enabled
+/// coordinator), the cycle-sim backend executes the run **chunk by
+/// chunk** — one [`sim::execute_slice_into`] per job's lane range —
+/// and consults the flag between chunks. When the coordinator raised
+/// it, the run checkpoints at that boundary: every chunk already
+/// executed scatters and verifies exactly as usual, and the un-run
+/// remainder comes back as [`RunOutcome::Preempted`]. Two exceptions
+/// keep the checkpoint safe and live: the first chunk always executes
+/// (a preempted run makes progress, so a requeue cycle terminates),
+/// and a job whose preemption budget is exhausted executes even after
+/// the flag fired (non-preemptible, the livelock cap). Slicing is
+/// bit-exact by construction — each lane's result depends only on its
+/// own input column — so a preempted-and-resumed dispatch returns the
+/// same bytes as an unpreempted one. The PJRT backend is a single
+/// opaque FFI invocation and is never preempted mid-run.
 fn serve_run(
     device: &Device,
     run: &[Box<Job>],
     batch_size: usize,
     verify: bool,
     scratch: &mut DispatchScratch,
-) -> Vec<Result<DispatchResult>> {
+    preempt_flag: Option<&AtomicBool>,
+) -> Vec<RunOutcome> {
     let queue_waits: Vec<Duration> = run.iter().map(|j| j.enqueued.elapsed()).collect();
     // stage-boundary stamps ride the trace-sink clock; any traced job
     // in the run supplies it (one sink per coordinator, so the clock
@@ -1120,6 +1392,9 @@ fn serve_run(
     // pack every live job into one flat arena and run one backend
     // invocation over the concatenation
     let mut pack_ns = 0u64;
+    // per-run-index: true when the run checkpointed before this job's
+    // chunk executed (set only on the cycle-sim slice path below)
+    let mut preempted = vec![false; run.len()];
     let exec: Result<bool> = if live.is_empty() {
         Err(anyhow!("no dispatch in this run packed successfully"))
     } else {
@@ -1142,15 +1417,41 @@ fn serve_run(
             pack_ns = tp.elapsed().as_nanos() as u64;
             exec_start_us = stamp();
             match &device.backend {
-                Backend::CycleSim => sim::execute_into(
-                    &k.schedule,
-                    &scratch.inputs,
-                    total,
-                    &mut scratch.sim,
-                    &mut scratch.outputs,
-                )?,
+                Backend::CycleSim => {
+                    scratch.outputs.reset(k.schedule.out_col.len(), total);
+                    let mut yielding = false;
+                    let mut off = 0usize;
+                    for (pos, &i) in live.iter().enumerate() {
+                        // chunk boundary: consume the partition's
+                        // preemption flag, but never before the first
+                        // chunk — the run always makes progress
+                        if pos > 0 && !yielding {
+                            if let Some(flag) = preempt_flag {
+                                yielding = flag.swap(false, Ordering::SeqCst);
+                            }
+                        }
+                        if yielding && run[i].preemptions < MAX_PREEMPTIONS {
+                            preempted[i] = true;
+                            off += chunks[i];
+                            continue;
+                        }
+                        // budget-exhausted jobs fall through and
+                        // execute: non-preemptible by budget
+                        sim::execute_slice_into(
+                            &k.schedule,
+                            &scratch.inputs,
+                            off,
+                            chunks[i],
+                            &mut scratch.sim,
+                            &mut scratch.outputs,
+                        )?;
+                        off += chunks[i];
+                    }
+                }
                 Backend::Pjrt(rt) => {
-                    // the PJRT FFI boundary still wants owned vectors
+                    // the PJRT FFI boundary still wants owned vectors;
+                    // the invocation is opaque, so PJRT runs are
+                    // non-preemptible (no chunk boundary to stop at)
                     let outs =
                         rt.execute_overlay(&k.schedule, &scratch.inputs.to_vecs(), total)?;
                     scratch.outputs.fill_from(&outs, total);
@@ -1180,23 +1481,30 @@ fn serve_run(
     };
 
     // split outputs per job by lane offset, scatter, verify, report
-    let mut results: Vec<Result<DispatchResult>> = Vec::with_capacity(run.len());
+    let mut results: Vec<RunOutcome> = Vec::with_capacity(run.len());
     match exec {
         Err(e) => {
             let msg = format!("{e:#}");
             for s in snaps {
-                results.push(match s {
+                results.push(RunOutcome::Done(match s {
                     Err(snap_err) => Err(snap_err),
                     Ok(_) => Err(anyhow!("{msg}")),
-                });
+                }));
             }
         }
         Ok(cross) => {
-            let fused_count = live.len();
+            let fused_count = live.len() - preempted.iter().filter(|&&p| p).count();
             let mut off = 0usize;
             for (i, s) in snaps.into_iter().enumerate() {
                 match s {
-                    Err(snap_err) => results.push(Err(snap_err)),
+                    Err(snap_err) => results.push(RunOutcome::Done(Err(snap_err))),
+                    Ok(_) if preempted[i] => {
+                        // the chunk was packed but never executed; its
+                        // lanes stay un-scattered and the job resumes
+                        // elsewhere from its own (untouched) buffers
+                        results.push(RunOutcome::Preempted);
+                        off += chunks[i];
+                    }
                     Ok(snap) => {
                         let job = &run[i];
                         let scatter_start_us = stamp();
@@ -1238,7 +1546,7 @@ fn serve_run(
                             k.ops_per_copy,
                             job.global_size as u64,
                         );
-                        results.push(Ok(DispatchResult {
+                        results.push(RunOutcome::Done(Ok(DispatchResult {
                             event: Event {
                                 wall: t0.elapsed(),
                                 pack_ns,
@@ -1261,7 +1569,7 @@ fn serve_run(
                                 scatter_start_us,
                                 done_us: stamp(),
                             },
-                        }));
+                        })));
                     }
                 }
             }
@@ -1404,6 +1712,45 @@ mod tests {
         assert_eq!(err.reason(), FailReason::DeadlineRejected);
         // the slot is a take(): a second poll sees nothing
         assert!(h.try_wait_typed().is_none());
+    }
+
+    #[test]
+    fn preempted_fail_reason_is_typed_and_named() {
+        let inner = HandleInner::new();
+        let h = DispatchHandle { inner: inner.clone() };
+        inner.fulfill(Err(DispatchError::new(
+            FailReason::Preempted,
+            "partition 1 closed before the preempted continuation could resume".into(),
+        )));
+        let err = h.wait_typed().unwrap_err();
+        assert_eq!(err.reason(), FailReason::Preempted);
+        assert_eq!(err.reason().name(), "preempted");
+    }
+
+    #[test]
+    fn recovery_plane_preempt_flags_raise_and_counters_track_records() {
+        let scheduler =
+            Arc::new(Mutex::new(super::super::scheduler::SlotScheduler::new(2)));
+        let plane = RecoveryPlane::new(None, 3, scheduler);
+        // raising before registration is a harmless no-op
+        plane.raise_preempt(0);
+        let flags: Vec<Arc<AtomicBool>> =
+            (0..2).map(|_| Arc::new(AtomicBool::new(false))).collect();
+        plane.register_preempt_flags(flags.clone());
+        plane.raise_preempt(1);
+        assert!(!flags[0].load(Ordering::SeqCst));
+        assert!(flags[1].load(Ordering::SeqCst));
+        // out-of-range partitions are ignored, not a panic
+        plane.raise_preempt(99);
+        // the worker consumes the flag with a swap at the boundary
+        assert!(flags[1].swap(false, Ordering::SeqCst));
+        assert!(!flags[1].load(Ordering::SeqCst));
+        // counters start consistent with the (empty) record log
+        let (records, dropped) = plane.continuation_records();
+        assert!(records.is_empty());
+        assert_eq!(dropped, 0);
+        assert_eq!(plane.preempted_requeue_count(), 0);
+        assert_eq!(plane.preempted_run_count(), 0);
     }
 
     #[test]

@@ -47,7 +47,10 @@ mod dispatch;
 mod scheduler;
 
 pub use cache::{CacheKey, CompileCache, KernelCache};
-pub use dispatch::{DispatchError, DispatchHandle, DispatchResult, FailReason, SubmitArg};
+pub use dispatch::{
+    ContinuationRecord, DispatchError, DispatchHandle, DispatchResult, FailReason,
+    SubmitArg, MAX_PREEMPTIONS,
+};
 pub use scheduler::{Decision, PartitionState, SlotScheduler};
 
 /// Re-exported from [`crate::fleet`]: the QoS class of a dispatch and
@@ -180,6 +183,15 @@ pub struct CoordinatorConfig {
     /// window clock with [`Coordinator::slo_tick`]. `None` (the
     /// default) keeps the SLO plane entirely out of the hot path.
     pub slo: Option<SloPolicy>,
+    /// Chunk-boundary batch preemption: when `true`, an interactive
+    /// submit landing on a partition while the fleet is under SLO burn
+    /// (burn ≥ 1) or admission pressure (≥ shed threshold) raises that
+    /// partition's preemption flag; the worker checkpoints its current
+    /// batch run at the next chunk boundary, requeues the un-run
+    /// remainder as a typed continuation, and serves the interactive
+    /// lane first. `false` (the default) never checks the flag —
+    /// exactly the run-to-completion behavior.
+    pub preempt: bool,
 }
 
 impl CoordinatorConfig {
@@ -199,6 +211,7 @@ impl CoordinatorConfig {
             faults: None,
             trace: None,
             slo: None,
+            preempt: false,
         }
     }
 
@@ -220,6 +233,7 @@ impl CoordinatorConfig {
             faults: None,
             trace: None,
             slo: None,
+            preempt: false,
         }
     }
 
@@ -239,6 +253,7 @@ impl CoordinatorConfig {
             faults: None,
             trace: None,
             slo: None,
+            preempt: false,
         }
     }
 }
@@ -297,6 +312,10 @@ pub struct Coordinator {
     trace: TraceHandle,
     /// SLO burn-rate engine; absent when the config set no policy.
     slo: Option<Arc<SloCollector>>,
+    /// Chunk-boundary batch preemption armed (config knob). Flags are
+    /// always registered on the recovery plane so tests can raise them
+    /// directly, but workers only check them when this is set.
+    preempt: bool,
     start: Instant,
 }
 
@@ -330,6 +349,7 @@ impl Coordinator {
             faults,
             trace,
             slo,
+            preempt,
         } = config;
         let trace = trace.unwrap_or_else(TraceHandle::disabled);
         if let Some(policy) = &slo {
@@ -391,6 +411,14 @@ impl Coordinator {
         let queues: Vec<Arc<LaneQueue<Box<Job>>>> =
             (0..devices.len()).map(|_| LaneQueue::new()).collect();
         recovery.register_queues(queues.clone());
+        // Per-partition preemption flags are always registered (so
+        // `raise_preempt` works for tests and operators), but workers
+        // only poll them when the config armed preemption — a disabled
+        // coordinator is the run-to-completion baseline.
+        let preempt_flags: Vec<Arc<std::sync::atomic::AtomicBool>> = (0..devices.len())
+            .map(|_| Arc::new(std::sync::atomic::AtomicBool::new(false)))
+            .collect();
+        recovery.register_preempt_flags(preempt_flags.clone());
         let workers: Vec<Worker> = devices
             .into_iter()
             .enumerate()
@@ -406,6 +434,7 @@ impl Coordinator {
                     fusion_window,
                     autoscaler.clone(),
                     recovery.clone(),
+                    preempt.then(|| preempt_flags[i].clone()),
                     start,
                 )
             })
@@ -431,6 +460,7 @@ impl Coordinator {
             p99_bits: AtomicU64::new(0),
             trace,
             slo,
+            preempt,
             start,
         })
     }
@@ -953,6 +983,7 @@ impl Coordinator {
             handle: handle.clone(),
             seq,
             attempts: 0,
+            preemptions: 0,
             last_fault: None,
             config_cost,
             trace: trace.map(|t| t.job_trace()),
@@ -974,6 +1005,25 @@ impl Coordinator {
             // (the route record is only committed below, on success)
             self.scheduler.lock().unwrap().cancel(&decision, deadline_nanos);
             bail!("partition {} worker is gone", decision.partition);
+        }
+        // Preemption eligibility: an interactive arrival under SLO
+        // burn (burn ≥ 1) or admission pressure (≥ shed threshold)
+        // raises the target partition's flag so a batch run in flight
+        // there checkpoints at its next chunk boundary and yields.
+        if self.preempt && matches!(priority, Priority::Interactive) {
+            let burning = self
+                .slo
+                .as_ref()
+                .map(|s| s.burn() >= 1.0)
+                .unwrap_or(false);
+            let pressured = self
+                .admission
+                .as_ref()
+                .map(|a| a.overloaded())
+                .unwrap_or(false);
+            if burning || pressured {
+                self.recovery.raise_preempt(decision.partition);
+            }
         }
 
         self.router.lock().unwrap().commit(
@@ -1062,8 +1112,32 @@ impl Coordinator {
         }
         if let Some(a) = &self.autoscaler {
             a.set_slo_burn(burn);
+            // SLO-targeted scaling: feed the windowed latency signal
+            // (p99 over the slow window vs the declared target) so
+            // scale-ups are driven by the SLO, not demand bands.
+            if let Some((p99_ms, target_ms)) = s.latency_control_signal() {
+                a.set_slo_latency(p99_ms, target_ms);
+            }
         }
         alerts
+    }
+
+    /// Raise the preemption flag on one partition: a batch run in
+    /// flight there checkpoints at its next chunk boundary and
+    /// requeues its un-run remainder as a typed continuation. Normally
+    /// raised by the submit path (interactive arrival under burn or
+    /// pressure); exposed so tests and operators can force one.
+    /// Ignored for out-of-range partitions; workers only honor it when
+    /// [`CoordinatorConfig::preempt`] is set.
+    pub fn raise_preempt(&self, partition: usize) {
+        self.recovery.raise_preempt(partition);
+    }
+
+    /// The typed continuation records of every preempted-and-requeued
+    /// batch remainder (oldest first, bounded), plus the count of
+    /// records dropped past the bound.
+    pub fn preemption_continuations(&self) -> (Vec<ContinuationRecord>, u64) {
+        self.recovery.continuation_records()
     }
 
     /// The SLO engine's retained alert transitions, oldest first
@@ -1155,7 +1229,6 @@ impl Coordinator {
             reconfig_seconds,
             latency: LatencyStats::from_hist(&log.latency_hist),
             latency_hist: log.latency_hist,
-            latency_raw: crate::metrics::LatencyRaw::default(),
             partitions,
             per_spec,
             total_dispatches: log.total_dispatches,
@@ -1169,6 +1242,8 @@ impl Coordinator {
             rejected_submits,
             shed_submits,
             retried_dispatches: self.recovery.retried_count(),
+            preempted_runs: self.recovery.preempted_run_count(),
+            preempted_continuations: self.recovery.preempted_requeue_count(),
             quarantine_events,
             quarantined_partitions: quarantined,
             admission,
@@ -1465,6 +1540,7 @@ mod tests {
             faults: None,
             trace: None,
             slo: None,
+            preempt: false,
         };
         assert!(Coordinator::new(cfg).is_err());
     }

@@ -63,7 +63,13 @@
 //!   paying the modeled 42 µs-class reconfiguration cost), and async
 //!   per-partition dispatch queues with two QoS lanes, same-kernel
 //!   batch fusion (plus a bounded cross-batch fusion window),
-//!   completion handles and serving statistics.
+//!   completion handles and serving statistics. Fused batch runs are
+//!   preemptible at chunk boundaries: when interactive work queues on
+//!   a burning partition the worker checkpoints mid-run and requeues
+//!   the remainder as a typed [`coordinator::ContinuationRecord`]ed
+//!   continuation on the least-loaded sibling (bounded by
+//!   [`coordinator::MAX_PREEMPTIONS`] bounces per job; interactive
+//!   runs are never preempted).
 //! * [`autoscale`] — adaptive runtime performance scaling: per-
 //!   (kernel, spec) sliding-window load signals fed from both ends of
 //!   the dispatch path, a hysteresis + cooldown scale policy that
@@ -71,13 +77,20 @@
 //!   re-replicates hot kernels (or shrinks over-provisioned ones)
 //!   while serving — variants are cache-keyed per factor, swaps are
 //!   atomic, and every decision lands in a bounded `ScaleEvent` audit
-//!   log.
+//!   log. With an [`obs::SloPolicy`] armed the scale-*up* trigger is
+//!   SLO-targeted instead of demand-band: the coordinator feeds the
+//!   windowed interactive p99 + target into the policy each
+//!   `slo_tick`, which scales up (at-least-doubling) while the
+//!   objective is missed and holds capacity until p99 clears the
+//!   0.8× hysteresis band.
 //! * [`admission`] — overload-safe admission control: per-tenant token
 //!   buckets on submit, a pressure-stall signal from queue depth + p99,
 //!   deadline-based early rejection with typed reject reasons, batch-
 //!   first load shedding, and a deterministic seeded fault-injection
 //!   plan (worker kills, reconfiguration failures, verify corruption,
-//!   transient compile failures) the dispatch plane must recover from.
+//!   transient compile failures) the dispatch plane must recover from;
+//!   its shedding signal ([`admission::AdmissionController::overloaded`])
+//!   doubles as one of the two batch-preemption arm conditions.
 //! * [`cluster`] — the cluster serving tier: N in-process coordinator
 //!   nodes behind one front door, a consistent-hash ring over stable
 //!   kernel fingerprints (virtual nodes; minimal remapping on
@@ -95,7 +108,8 @@
 //! * [`obs`] — continuous telemetry and end-to-end dispatch tracing:
 //!   per-submit [`obs::TraceId`]s with phase spans across every serving
 //!   layer (admission, route, cache/compile, slot pick, queue wait,
-//!   pack, exec, scatter, verify, retries, cluster hops), collected in
+//!   pack, exec, scatter, verify, retries, preemption checkpoints,
+//!   cluster hops), collected in
 //!   lock-light per-worker span rings (tracing off is a no-op recorder,
 //!   tracing on can head-sample 1/N submits via [`obs::Sampler`]), a
 //!   flight recorder pinning exemplar traces per anomaly class, and a
@@ -157,8 +171,9 @@ pub mod prelude {
         Replication,
     };
     pub use crate::coordinator::{
-        Admission, Coordinator, CoordinatorConfig, DispatchError, DispatchHandle,
-        DispatchResult, FailReason, Priority, RoutingPolicy, SubmitArg,
+        Admission, ContinuationRecord, Coordinator, CoordinatorConfig,
+        DispatchError, DispatchHandle, DispatchResult, FailReason, Priority,
+        RoutingPolicy, SubmitArg, MAX_PREEMPTIONS,
     };
     pub use crate::fleet::RouteReason;
     pub use crate::obs::{

@@ -184,25 +184,6 @@ impl LatencyStats {
     }
 }
 
-/// **Deprecated** stride-tagged raw latency samples.
-///
-/// This was the merge carrier of the sampling-reservoir era: each
-/// node's decimated samples tagged with their stride so
-/// [`ServingStats::merge`] could thin every side to the common
-/// maximum stride. [`LatencyHist`] replaced it — bucket-wise addition
-/// is lossless and order-invariant, so there is nothing left to
-/// thin — and the field it backs is now always empty. The type stays
-/// as a re-export until external asserts move over; new code should
-/// read [`ServingStats::latency_hist`].
-#[derive(Debug, Clone, Default)]
-pub struct LatencyRaw {
-    /// Decimation stride the samples were retained at: one sample
-    /// represents `stride` dispatches (0 is treated as 1).
-    pub stride: u64,
-    /// The retained end-to-end latencies, milliseconds.
-    pub samples_ms: Vec<f64>,
-}
-
 /// Kernel-cache counters (produced by
 /// [`crate::coordinator::KernelCache::stats`]).
 #[derive(Debug, Clone, Copy, Default)]
@@ -333,9 +314,6 @@ pub struct ServingStats {
     /// (no sampling, no decimation), and [`ServingStats::merge`]
     /// combines nodes by lossless bucket addition.
     pub latency_hist: LatencyHist,
-    /// Deprecated reservoir-era carrier, now always empty (see
-    /// [`LatencyRaw`]); retained until external asserts move over.
-    pub latency_raw: LatencyRaw,
     pub partitions: Vec<PartitionServingStats>,
     /// Per-spec shard breakdown (cache isolation, routing decisions,
     /// replication-factor histograms).
@@ -367,6 +345,12 @@ pub struct ServingStats {
     /// partition after a worker death, failed reconfiguration or
     /// corrupted verify.
     pub retried_dispatches: u64,
+    /// Batch runs checkpointed at a chunk boundary to yield to
+    /// interactive work (each may cover several fused jobs).
+    pub preempted_runs: u64,
+    /// Preempted jobs whose un-run remainder was requeued as a typed
+    /// continuation (and later completed elsewhere).
+    pub preempted_continuations: u64,
     /// Times any partition entered quarantine after repeated failures.
     pub quarantine_events: u64,
     /// Partitions currently sitting out in quarantine.
@@ -439,6 +423,8 @@ impl ServingStats {
             out.rejected_submits += n.rejected_submits;
             out.shed_submits += n.shed_submits;
             out.retried_dispatches += n.retried_dispatches;
+            out.preempted_runs += n.preempted_runs;
+            out.preempted_continuations += n.preempted_continuations;
             out.quarantine_events += n.quarantine_events;
             out.quarantined_partitions += n.quarantined_partitions;
             out.scratch_pool.created += n.scratch_pool.created;
@@ -586,6 +572,12 @@ impl ServingStats {
                 self.retried_dispatches,
                 self.quarantine_events,
                 self.quarantined_partitions,
+            ));
+        }
+        if self.preempted_runs > 0 || self.preempted_continuations > 0 {
+            out.push_str(&format!(
+                "preemption : {} batch runs checkpointed, {} continuations requeued\n",
+                self.preempted_runs, self.preempted_continuations,
             ));
         }
         if let Some(f) = &self.faults {
@@ -746,6 +738,18 @@ impl ServingStats {
             "counter",
             "Dispatches re-placed by the recovery plane",
             self.retried_dispatches as f64,
+        );
+        metric(
+            "overlay_jit_preempted_runs_total",
+            "counter",
+            "Batch runs checkpointed at a chunk boundary to yield to interactive work",
+            self.preempted_runs as f64,
+        );
+        metric(
+            "overlay_jit_preempted_continuations_total",
+            "counter",
+            "Preempted batch remainders requeued as typed continuations",
+            self.preempted_continuations as f64,
         );
         metric(
             "overlay_jit_quarantine_events_total",
@@ -1000,7 +1004,6 @@ mod tests {
             reconfig_seconds: 84.8e-6,
             latency: LatencyStats::from_hist(&hist_of(&[1.0, 2.0, 3.0])),
             latency_hist: hist_of(&[1.0, 2.0, 3.0]),
-            latency_raw: LatencyRaw::default(),
             partitions: vec![PartitionServingStats {
                 partition: 0,
                 overlay: "8x8-dsp2".into(),
@@ -1045,6 +1048,8 @@ mod tests {
             rejected_submits: 3,
             shed_submits: 2,
             retried_dispatches: 1,
+            preempted_runs: 2,
+            preempted_continuations: 3,
             quarantine_events: 1,
             quarantined_partitions: 0,
             admission: Some(crate::admission::AdmissionStats {
@@ -1072,6 +1077,10 @@ mod tests {
         assert!(r.contains("3 rejected (2 quota / 1 deadline)"), "{r}");
         assert!(r.contains("2 shed"), "{r}");
         assert!(r.contains("1 retried dispatches, 1 quarantine events"), "{r}");
+        assert!(
+            r.contains("2 batch runs checkpointed, 3 continuations requeued"),
+            "{r}"
+        );
         assert!(r.contains("1 active pairs, 2 re-probes, 1 recoveries"), "{r}");
         assert_eq!(s.autoscale.unwrap().applied(), 3);
     }
@@ -1114,12 +1123,16 @@ mod tests {
                 pressure: 0.9,
                 tenants: 3,
             }),
+            preempted_runs: 2,
+            preempted_continuations: 3,
             ..Default::default()
         };
         // idle node: 8 fast completions
         let idle = ServingStats {
             total_dispatches: 8,
             total_items: 800,
+            preempted_runs: 1,
+            preempted_continuations: 1,
             cache: CacheStats { hits: 6, misses: 2, evictions: 0, entries: 2, capacity: 32 },
             latency_hist: hist_of(&[1.0; 8]),
             per_spec: vec![SpecServingStats {
@@ -1173,8 +1186,9 @@ mod tests {
             m.latency.p50_ms
         );
         assert_eq!(m.latency.max_ms, 100.0);
-        // the deprecated reservoir carrier stays empty
-        assert!(m.latency_raw.samples_ms.is_empty());
+        // preemption counters sum like every other recovery counter
+        assert_eq!(m.preempted_runs, 3);
+        assert_eq!(m.preempted_continuations, 4);
 
         // merge order cannot matter: bucket addition commutes
         let swapped = ServingStats::merge(&[idle.clone(), busy.clone()]);
@@ -1295,7 +1309,7 @@ mod tests {
         assert_eq!(merged.total_dispatches, 0);
         assert_eq!(merged.latency.count, 0);
         assert_eq!(merged.latency_hist.count(), 0);
-        assert_eq!(merged.latency_raw.samples_ms.len(), 0);
+        assert_eq!(merged.preempted_runs, 0);
         assert!(merged.slo.is_none());
         assert!(merged.partitions.is_empty());
         assert!(merged.per_spec.is_empty());
@@ -1311,6 +1325,8 @@ mod tests {
             total_dispatches: 12,
             total_items: 1200,
             retried_dispatches: 2,
+            preempted_runs: 3,
+            preempted_continuations: 5,
             rejected_submits: 4,
             shed_submits: 1,
             quarantine_events: 1,
@@ -1340,6 +1356,8 @@ mod tests {
         assert_eq!(get("overlay_jit_dispatches_total"), 12.0);
         assert_eq!(get("overlay_jit_items_total"), 1200.0);
         assert_eq!(get("overlay_jit_retried_dispatches_total"), 2.0);
+        assert_eq!(get("overlay_jit_preempted_runs_total"), 3.0);
+        assert_eq!(get("overlay_jit_preempted_continuations_total"), 5.0);
         assert_eq!(get("overlay_jit_rejected_submits_total"), 4.0);
         assert_eq!(get("overlay_jit_shed_submits_total"), 1.0);
         assert_eq!(get("overlay_jit_quarantine_events_total"), 1.0);

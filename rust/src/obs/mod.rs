@@ -155,10 +155,13 @@ pub enum Phase {
     Retry,
     /// A cluster spill/failover hop to a sibling node.
     Hop,
+    /// A chunk-boundary preemption of a batch run: the un-run
+    /// remainder is requeued as a typed continuation.
+    Preempt,
 }
 
 /// Every phase, for exhaustive export/report loops.
-pub const ALL_PHASES: [Phase; 14] = [
+pub const ALL_PHASES: [Phase; 15] = [
     Phase::Frontend,
     Phase::Submit,
     Phase::Admission,
@@ -173,6 +176,7 @@ pub const ALL_PHASES: [Phase; 14] = [
     Phase::Verify,
     Phase::Retry,
     Phase::Hop,
+    Phase::Preempt,
 ];
 
 impl Phase {
@@ -192,6 +196,7 @@ impl Phase {
             Phase::Verify => "verify",
             Phase::Retry => "retry",
             Phase::Hop => "hop",
+            Phase::Preempt => "preempt",
         }
     }
 }
@@ -452,11 +457,13 @@ pub const CLASS_FAULT: &str = "fault";
 pub const CLASS_QUARANTINE: &str = "quarantine";
 /// Flight-recorder class for the slowest (p99-tail) completion.
 pub const CLASS_TAIL: &str = "tail";
+/// Flight-recorder class for chunk-boundary batch preemptions.
+pub const CLASS_PREEMPT: &str = "preempt";
 
 /// Hard bound on distinct pinned anomaly keys. The key space is tiny
 /// by construction (3 reject kinds + 4 fault kinds + quarantine +
-/// tail), so hitting the bound means a new anomaly class forgot to
-/// budget here.
+/// tail + preempt), so hitting the bound means a new anomaly class
+/// forgot to budget here.
 pub const MAX_EXEMPLARS: usize = 64;
 
 /// One pinned exemplar trace for an anomaly class.

@@ -394,6 +394,27 @@ impl SloEngine {
         }
         Some(h)
     }
+
+    /// The autoscaler's latency control signal: `(windowed_p99_ms,
+    /// target_ms)` for the first declared latency objective, with the
+    /// p99 merged over the policy's slow window — the same horizon
+    /// the burn alert filters on, so scale decisions and alerts agree
+    /// on what "sustained" means. `None` when the policy declares no
+    /// latency objective or no window has closed yet.
+    fn latency_control_signal(&self) -> Option<(f64, f64)> {
+        let obj = self
+            .states
+            .iter()
+            .map(|s| &s.objective)
+            .find(|o| o.kind == SloKind::LatencyP99)?;
+        let target = obj.target;
+        let name = obj.name.clone();
+        let h = self.windowed_hist(&name, self.policy.slow_windows)?;
+        if h.count() == 0 {
+            return None;
+        }
+        Some((h.p99_ms(), target))
+    }
 }
 
 /// Thread-safe front of the engine, shared `Arc`-style by the submit
@@ -439,6 +460,12 @@ impl SloCollector {
     /// Every retained alert transition, oldest first.
     pub fn alerts(&self) -> Vec<SloAlert> {
         self.inner.lock().unwrap().alerts.items().to_vec()
+    }
+
+    /// The latency control signal for SLO-targeted autoscaling: see
+    /// [`SloEngine::latency_control_signal`].
+    pub fn latency_control_signal(&self) -> Option<(f64, f64)> {
+        self.inner.lock().unwrap().latency_control_signal()
     }
 
     /// "p99 over the last `n` windows" for the named objective.

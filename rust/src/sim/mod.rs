@@ -20,7 +20,7 @@
 //!   II=1 overlay streams one work-item per cycle per kernel copy
 //!   after a fill latency of `pipeline_depth` cycles.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::arena::StreamArena;
 use crate::configgen::SlotSchedule;
@@ -172,25 +172,66 @@ pub fn execute_into(
     scratch: &mut SimScratch,
     out: &mut StreamArena,
 ) -> Result<()> {
-    let geom = schedule.geometry;
-    check_shape(schedule, inputs.streams())?;
     if inputs.items() != n_items {
         bail!("input arena holds {} items, dispatch wants {n_items}", inputs.items());
     }
-    scratch.ensure(geom.num_slots());
     out.reset(schedule.out_col.len(), n_items);
+    execute_slice_into(schedule, inputs, 0, n_items, scratch, out)
+}
+
+/// Execute only the lanes `[start, start + len)` of a dispatch whose
+/// inputs live in `inputs` and whose outputs land in the matching
+/// lane range of `out`. The caller shapes `out` (one stream per
+/// output port, `inputs.items()` lanes) and may call this repeatedly
+/// over disjoint ranges in any order: each lane's result depends only
+/// on its own input column (the executor is elementwise per lane, the
+/// immediate columns are lane-constant, and levelization never reads
+/// across lanes), so any slicing produces bit-identical outputs to
+/// one [`execute_into`] over the whole range. This is what makes
+/// chunk-boundary preemption safe: a preempted run's completed slices
+/// and its resumed remainder — even on another partition — compose to
+/// exactly the unpreempted result.
+pub fn execute_slice_into(
+    schedule: &SlotSchedule,
+    inputs: &StreamArena,
+    slice_start: usize,
+    len: usize,
+    scratch: &mut SimScratch,
+    out: &mut StreamArena,
+) -> Result<()> {
+    let geom = schedule.geometry;
+    check_shape(schedule, inputs.streams())?;
+    let end = slice_start
+        .checked_add(len)
+        .ok_or_else(|| anyhow!("slice range overflows"))?;
+    if end > inputs.items() {
+        bail!(
+            "slice [{slice_start}, {end}) exceeds the input arena's {} items",
+            inputs.items()
+        );
+    }
+    if out.streams() != schedule.out_col.len() || out.items() != inputs.items() {
+        bail!(
+            "output arena shaped {}x{}, kernel wants {}x{}",
+            out.streams(),
+            out.items(),
+            schedule.out_col.len(),
+            inputs.items()
+        );
+    }
+    scratch.ensure(geom.num_slots());
 
     const B: usize = SIM_BLOCK;
     // constant-pool columns hold the same value in every lane; filled
-    // once per dispatch (the tail block reads a prefix of them)
+    // once per slice (the tail block reads a prefix of them)
     for &(col, v) in &schedule.imm_pool {
         scratch.table[col * B..(col + 1) * B].fill(v);
     }
 
     let out_base = geom.out_base();
-    let mut start = 0usize;
-    while start < n_items {
-        let bl = B.min(n_items - start);
+    let mut start = slice_start;
+    while start < end {
+        let bl = B.min(end - start);
         for p in 0..schedule.num_inputs {
             scratch.table[p * B..p * B + bl]
                 .copy_from_slice(&inputs.stream(p)[start..start + bl]);
@@ -401,6 +442,66 @@ mod tests {
             let reference = execute_reference(&k.schedule, &streams, n).unwrap();
             assert_eq!(blocked, reference, "n={n}");
         }
+    }
+
+    #[test]
+    fn sliced_execution_is_bit_exact_for_any_partitioning() {
+        // the preemption checkpoint property: executing a dispatch as
+        // arbitrary disjoint slices — any sizes, any order, even with
+        // a fresh scratch mid-way (a resumed continuation on another
+        // partition) — must reproduce the monolithic run bit-exactly
+        let k = compile_cheb(4);
+        let n = 3 * SIM_BLOCK + 5;
+        let streams: Vec<Vec<i32>> = (0..k.schedule.num_inputs)
+            .map(|p| (0..n).map(|i| (i as i32 * 7 + p as i32) % 23 - 11).collect())
+            .collect();
+        let mut arena = StreamArena::new();
+        arena.fill_from(&streams, n);
+
+        let mut scratch = SimScratch::new();
+        let mut whole = StreamArena::new();
+        execute_into(&k.schedule, &arena, n, &mut scratch, &mut whole).unwrap();
+
+        for cuts in [
+            vec![n],
+            vec![1, n - 1],
+            vec![SIM_BLOCK, n - SIM_BLOCK],
+            vec![SIM_BLOCK - 1, SIM_BLOCK + 1, n - 2 * SIM_BLOCK],
+            vec![5, 5, n - 10],
+        ] {
+            assert_eq!(cuts.iter().sum::<usize>(), n);
+            let mut sliced = StreamArena::new();
+            sliced.reset(k.schedule.out_col.len(), n);
+            // slices run back-to-front with a fresh scratch each, the
+            // harshest order a preempt/requeue schedule could produce
+            let mut start = n;
+            for &len in cuts.iter().rev() {
+                start -= len;
+                let mut fresh = SimScratch::new();
+                execute_slice_into(&k.schedule, &arena, start, len, &mut fresh, &mut sliced)
+                    .unwrap();
+            }
+            assert_eq!(sliced.to_vecs(), whole.to_vecs(), "cuts {cuts:?}");
+        }
+    }
+
+    #[test]
+    fn slice_bounds_and_shape_are_checked() {
+        let k = compile_cheb(2);
+        let n = 16;
+        let streams: Vec<Vec<i32>> =
+            (0..k.schedule.num_inputs).map(|_| vec![1; n]).collect();
+        let mut arena = StreamArena::new();
+        arena.fill_from(&streams, n);
+        let mut scratch = SimScratch::new();
+        // out arena not shaped for the kernel
+        let mut bad = StreamArena::new();
+        assert!(execute_slice_into(&k.schedule, &arena, 0, n, &mut scratch, &mut bad).is_err());
+        // slice past the end of the inputs
+        let mut out = StreamArena::new();
+        out.reset(k.schedule.out_col.len(), n);
+        assert!(execute_slice_into(&k.schedule, &arena, 8, 9, &mut scratch, &mut out).is_err());
+        assert!(execute_slice_into(&k.schedule, &arena, 0, n, &mut scratch, &mut out).is_ok());
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Chunk-boundary batch-preemption invariants, observed through the
+//! public serving API:
+//!
+//! * **no lost or duplicated jobs** — every preempted handle resolves
+//!   exactly once, with the full dispatch count accounted for;
+//! * **bit-exact resume** — a preempted-and-resumed batch job scatters
+//!   byte-identical outputs to an unpreempted run of the same inputs;
+//! * **interactive immunity** — interactive runs are never preempted,
+//!   even with the flag raised continuously;
+//! * **budget caps livelock** — under continuous preemption pressure
+//!   every job still completes, and no job bounces more than
+//!   [`MAX_PREEMPTIONS`] times;
+//! * **counters agree with records** — `preempted_continuations`
+//!   equals the typed continuation records (retained + dropped), and
+//!   both round-trip through the Prometheus exposition.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use overlay_jit::bench_kernels::BENCHMARKS;
+use overlay_jit::coordinator::{
+    Coordinator, CoordinatorConfig, SubmitArg, MAX_PREEMPTIONS,
+};
+use overlay_jit::overlay::OverlaySpec;
+use overlay_jit::prelude::*;
+use overlay_jit::runtime_ocl::{Context, Device};
+use overlay_jit::util::XorShiftRng;
+
+const ITEMS: usize = 256;
+const SLACK: usize = 16;
+
+fn host_ctx() -> Context {
+    let dev = Device {
+        spec: OverlaySpec::zynq_default(),
+        backend: Backend::CycleSim,
+        name: "host".into(),
+    };
+    Context::new(&dev)
+}
+
+fn param_count(source: &str) -> usize {
+    overlay_jit::frontend::parse_kernel(source).unwrap().params.len()
+}
+
+/// Deterministic per-job input data (with stencil slack), so two
+/// coordinators can be fed byte-identical work.
+fn job_data(nparams: usize, jobs: usize, seed: u64) -> Vec<Vec<Vec<i32>>> {
+    let mut rng = XorShiftRng::new(seed);
+    (0..jobs)
+        .map(|_| {
+            (0..nparams)
+                .map(|_| {
+                    (0..ITEMS + SLACK)
+                        .map(|_| rng.gen_i64(-30, 30) as i32)
+                        .collect()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Materialize one job's buffers from its data rows.
+fn buffers_for(ctx: &Context, rows: &[Vec<i32>]) -> Vec<SubmitArg> {
+    rows.iter()
+        .map(|row| {
+            let buf = ctx.create_buffer(row.len());
+            buf.write(row);
+            SubmitArg::Buffer(buf)
+        })
+        .collect()
+}
+
+fn read_all(args: &[SubmitArg]) -> Vec<Vec<i32>> {
+    args.iter()
+        .map(|a| match a {
+            SubmitArg::Buffer(b) => b.read(),
+            other => panic!("test only submits buffers, got {other:?}"),
+        })
+        .collect()
+}
+
+/// Counters must agree with the typed continuation records, and both
+/// must survive the Prometheus exposition.
+fn assert_counters_agree(coord: &Coordinator) {
+    let stats = coord.stats();
+    let (records, dropped) = coord.preemption_continuations();
+    assert_eq!(
+        stats.preempted_continuations,
+        records.len() as u64 + dropped,
+        "continuation counter must equal retained + dropped records"
+    );
+    for r in &records {
+        assert!(
+            (1..=MAX_PREEMPTIONS).contains(&r.preemptions),
+            "record carries an out-of-budget bounce count: {r:?}"
+        );
+    }
+    let text = stats.prometheus();
+    assert!(
+        text.contains(&format!(
+            "overlay_jit_preempted_runs_total {}",
+            stats.preempted_runs
+        )),
+        "preempted_runs must round-trip through prometheus():\n{text}"
+    );
+    assert!(
+        text.contains(&format!(
+            "overlay_jit_preempted_continuations_total {}",
+            stats.preempted_continuations
+        )),
+        "preempted_continuations must round-trip through prometheus():\n{text}"
+    );
+}
+
+#[test]
+fn preempted_batch_run_resumes_bit_exact_with_no_loss_or_duplication() {
+    const JOBS: usize = 4;
+    let b = &BENCHMARKS[0];
+    let nparams = param_count(b.source);
+    let data = job_data(nparams, JOBS, 0x9EE9);
+    let ctx = host_ctx();
+
+    // ground truth: the same jobs through a run-to-completion fleet
+    let baseline = Coordinator::new(CoordinatorConfig::sim_fleet(
+        OverlaySpec::zynq_default(),
+        1,
+    ))
+    .unwrap();
+    let mut expected = Vec::new();
+    for rows in &data {
+        let args = buffers_for(&ctx, rows);
+        let r = baseline
+            .submit(b.source, &args, ITEMS, Priority::Batch)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(r.verified, Some(true));
+        expected.push(read_all(&args));
+    }
+
+    // preemption-armed single-partition fleet: the continuation
+    // requeues behind the interactive lane on the same partition
+    // (requeue_sibling's single-partition fallback)
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.preempt = true;
+    cfg.fusion_window = Duration::from_millis(250);
+    let coord = Coordinator::new(cfg).unwrap();
+
+    // the flag is sticky until a batch run consumes it at a chunk
+    // boundary, so raising before the submits is race-free; the
+    // retry loop only guards against the fusion window expiring on a
+    // pathologically slow machine (each round is bit-exact checked
+    // regardless of whether it preempted)
+    let mut rounds = 0;
+    loop {
+        rounds += 1;
+        coord.raise_preempt(0);
+        let all_args: Vec<Vec<SubmitArg>> =
+            data.iter().map(|rows| buffers_for(&ctx, rows)).collect();
+        let handles: Vec<_> = all_args
+            .iter()
+            .map(|args| coord.submit(b.source, args, ITEMS, Priority::Batch).unwrap())
+            .collect();
+        // no lost or hung jobs: every handle resolves, exactly once
+        for (i, h) in handles.into_iter().enumerate() {
+            let r = h.wait().unwrap();
+            assert_eq!(r.verified, Some(true), "job {i} must stay sim-verified");
+        }
+        // bit-exact resume: byte-identical buffers vs the baseline
+        for (i, args) in all_args.iter().enumerate() {
+            assert_eq!(
+                read_all(args),
+                expected[i],
+                "job {i} outputs must match the unpreempted run exactly"
+            );
+        }
+        let stats = coord.stats();
+        // no duplicated jobs: each completes as exactly one dispatch
+        assert_eq!(stats.total_dispatches, (rounds * JOBS) as u64);
+        assert_eq!(stats.dispatch_errors, 0);
+        assert_eq!(stats.verify_failures, 0);
+        if stats.preempted_runs >= 1 {
+            break;
+        }
+        assert!(rounds < 5, "no run preempted in {rounds} rounds");
+    }
+
+    let stats = coord.stats();
+    assert!(stats.preempted_runs >= 1);
+    assert!(stats.preempted_continuations >= 1);
+    let (records, _) = coord.preemption_continuations();
+    assert!(!records.is_empty());
+    for r in &records {
+        assert_eq!(r.from, 0, "single-partition fleet preempts on partition 0");
+        assert_eq!(r.to, 0, "continuation falls back to the only partition");
+    }
+    assert_counters_agree(&coord);
+}
+
+#[test]
+fn interactive_runs_are_never_preempted_even_under_continuous_pressure() {
+    let b = &BENCHMARKS[0];
+    let nparams = param_count(b.source);
+    let data = job_data(nparams, 6, 0x1A7E);
+    let ctx = host_ctx();
+
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.preempt = true;
+    let coord = Arc::new(Coordinator::new(cfg).unwrap());
+
+    // hammer the flag from a second thread for the whole test
+    let done = Arc::new(AtomicBool::new(false));
+    let raiser = {
+        let coord = coord.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            while !done.load(Ordering::Relaxed) {
+                coord.raise_preempt(0);
+                std::thread::yield_now();
+            }
+        })
+    };
+
+    let handles: Vec<_> = data
+        .iter()
+        .map(|rows| {
+            let args = buffers_for(&ctx, rows);
+            coord
+                .submit(b.source, &args, ITEMS, Priority::Interactive)
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.wait().unwrap().verified, Some(true));
+    }
+    done.store(true, Ordering::Relaxed);
+    raiser.join().unwrap();
+
+    let stats = coord.stats();
+    assert_eq!(stats.preempted_runs, 0, "interactive runs must never preempt");
+    assert_eq!(stats.preempted_continuations, 0);
+    let (records, dropped) = coord.preemption_continuations();
+    assert!(records.is_empty());
+    assert_eq!(dropped, 0);
+}
+
+#[test]
+fn preemption_budget_caps_livelock_under_continuous_pressure() {
+    const JOBS: usize = 6;
+    let b = &BENCHMARKS[0];
+    let nparams = param_count(b.source);
+    let data = job_data(nparams, JOBS, 0xB0D6);
+    let ctx = host_ctx();
+
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.preempt = true;
+    cfg.fusion_window = Duration::from_millis(100);
+    let coord = Arc::new(Coordinator::new(cfg).unwrap());
+
+    let done = Arc::new(AtomicBool::new(false));
+    let raiser = {
+        let coord = coord.clone();
+        let done = done.clone();
+        std::thread::spawn(move || {
+            while !done.load(Ordering::Relaxed) {
+                coord.raise_preempt(0);
+                std::thread::yield_now();
+            }
+        })
+    };
+
+    let handles: Vec<_> = data
+        .iter()
+        .map(|rows| {
+            let args = buffers_for(&ctx, rows);
+            coord.submit(b.source, &args, ITEMS, Priority::Batch).unwrap()
+        })
+        .collect();
+    // liveness: every job completes despite the flag being re-raised
+    // at every opportunity — the run head always executes, and a job
+    // past its budget turns non-preemptible
+    for (i, h) in handles.into_iter().enumerate() {
+        let r = h.wait().unwrap();
+        assert_eq!(r.verified, Some(true), "job {i} must complete verified");
+    }
+    done.store(true, Ordering::Relaxed);
+    raiser.join().unwrap();
+
+    let stats = coord.stats();
+    assert_eq!(stats.total_dispatches, JOBS as u64);
+    assert_eq!(stats.dispatch_errors, 0);
+    let (records, dropped) = coord.preemption_continuations();
+    // the budget: no dispatch sequence number bounces more than
+    // MAX_PREEMPTIONS times, and every record stays within budget
+    let mut per_seq = std::collections::HashMap::new();
+    for r in &records {
+        *per_seq.entry(r.seq).or_insert(0u32) += 1;
+        assert!(r.preemptions <= MAX_PREEMPTIONS, "{r:?}");
+    }
+    if dropped == 0 {
+        for (seq, bounces) in per_seq {
+            assert!(
+                bounces <= MAX_PREEMPTIONS,
+                "seq {seq} preempted {bounces} times (budget {MAX_PREEMPTIONS})"
+            );
+        }
+    }
+    assert_counters_agree(&coord);
+}
+
+#[test]
+fn disabled_preemption_ignores_a_raised_flag() {
+    const JOBS: usize = 3;
+    let b = &BENCHMARKS[0];
+    let nparams = param_count(b.source);
+    let data = job_data(nparams, JOBS, 0x0FF);
+    let ctx = host_ctx();
+
+    // default config: preempt is off — the run-to-completion baseline
+    let mut cfg = CoordinatorConfig::sim_fleet(OverlaySpec::zynq_default(), 1);
+    cfg.fusion_window = Duration::from_millis(100);
+    assert!(!cfg.preempt);
+    let coord = Coordinator::new(cfg).unwrap();
+    coord.raise_preempt(0); // registered but never polled
+
+    let handles: Vec<_> = data
+        .iter()
+        .map(|rows| {
+            let args = buffers_for(&ctx, rows);
+            coord.submit(b.source, &args, ITEMS, Priority::Batch).unwrap()
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.wait().unwrap().verified, Some(true));
+    }
+    let stats = coord.stats();
+    assert_eq!(stats.preempted_runs, 0);
+    assert_eq!(stats.preempted_continuations, 0);
+}
